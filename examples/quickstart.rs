@@ -1,0 +1,70 @@
+//! Quickstart: the whole stack in ~60 lines.
+//!
+//! 1. load the AOT artifacts (run `make artifacts` once first);
+//! 2. pick the ILMPQ-2 quantization config (65:30:5) from the manifest;
+//! 3. run one quantized inference through PJRT;
+//! 4. show Figure 1 (the intra-layer row assignment) for one layer;
+//! 5. simulate the same config on the XC7Z045 FPGA model.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use ilmpq::experiments::figure1;
+use ilmpq::fpga::{simulate, DeviceModel, Mode, NetConfig};
+use ilmpq::model::zoo;
+use ilmpq::runtime::{HostTensor, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    // ---- 1. runtime -------------------------------------------------------
+    let rt = Runtime::load_default()?;
+    let m = &rt.manifest;
+    println!(
+        "loaded {} ({} params, {} quantized layers) on {}",
+        m.model_name,
+        m.params.len(),
+        m.quantized_layers.len(),
+        rt.engine.platform()
+    );
+
+    // ---- 2. quantization config ------------------------------------------
+    let masks = m.default_masks.get("ilmpq2").expect("ilmpq2 masks").clone();
+    let params = m.load_init_params()?;
+
+    // ---- 3. one quantized inference ----------------------------------------
+    let (x_test, y_test) = m.data.load_test()?;
+    let img = m.data.image_elems();
+    let mut inputs = params.clone();
+    inputs.extend(m.mask_tensors(&masks));
+    inputs.push(HostTensor::f32(
+        vec![1, m.data.height, m.data.width, m.data.channels],
+        x_test[..img].to_vec(),
+    ));
+    let out = rt.run("infer_b1", &inputs)?;
+    let logits = out[0].as_f32();
+    let pred = logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(k, _)| k)
+        .unwrap();
+    println!(
+        "\ninfer_b1: predicted class {pred} (true {}), logits[..4] = {:?}",
+        y_test[0],
+        &logits[..4]
+    );
+
+    // ---- 4. Figure 1: the row map for the first conv stage ----------------
+    println!();
+    println!("{}", figure1::render_layer(masks.layer("s0/c1/w").unwrap()));
+    println!("{}", figure1::render_layer(masks.layer("s0/c2/w").unwrap()));
+
+    // ---- 5. FPGA simulation of this config --------------------------------
+    let net = zoo::tinyresnet(m.height, m.width, m.channels, &m.widths, m.classes);
+    let cfg = NetConfig::from_masks("ilmpq2", masks.layers.clone());
+    let device = DeviceModel::xc7z045();
+    let report = simulate(&net, &cfg, &device, Mode::IntraLayer);
+    println!("\nsimulated on {}:", device.name);
+    println!("{}", report.row());
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! The paper's offline ratio determination (§II-B): sweep the PoT share on
+//! each device and report the throughput-optimal PoT:Fixed4:Fixed8 split.
+//!
+//! Expected result (paper): ~60:35:5 on XC7Z020 and ~65:30:5 on XC7Z045 —
+//! the bigger part has proportionally more LUT bandwidth, so its optimum
+//! leans further PoT.
+//!
+//! ```sh
+//! cargo run --release --example ratio_search -- --net resnet18
+//! ```
+
+use ilmpq::coordinator::ratio_search;
+use ilmpq::fpga::DeviceModel;
+use ilmpq::model::zoo;
+use ilmpq::util::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env(
+        "ratio_search",
+        1,
+        &[
+            ("net", "workload: resnet18|vgg11|cnn-small|tinyresnet"),
+            ("fixed8", "Fixed-8 percentage (default 5)"),
+            ("step", "sweep granularity in % (default 1)"),
+        ],
+    );
+    let net_name = args.str_or("net", "resnet18");
+    let net = zoo::by_name(net_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown net {net_name}"))?;
+    let fixed8 = args.f64_or("fixed8", 5.0);
+    let step = args.f64_or("step", 1.0);
+
+    println!(
+        "ratio search on {} ({:.2} GOPs), Fixed-8 pinned at {fixed8}%\n",
+        net.name,
+        net.total_gops()
+    );
+    for device in DeviceModel::all() {
+        let r = ratio_search::search(&net, &device, fixed8, step, 95.0 - fixed8);
+        println!(
+            "{}: optimum {} -> {:.1} GOP/s ({:.1} ms)   [paper: {}]",
+            device.name,
+            r.best.ratio.label(),
+            r.best.throughput_gops,
+            r.best.latency_s * 1e3,
+            if device.name == "xc7z020" { "60:35:5" } else { "65:30:5" },
+        );
+        // Compact sweep curve (every 5th point).
+        print!("  sweep: ");
+        for p in r.sweep.iter().step_by(5) {
+            print!("{:.0}%→{:.0}  ", p.ratio.pot4, p.throughput_gops);
+        }
+        println!("\n");
+    }
+    Ok(())
+}

@@ -1,0 +1,94 @@
+//! Serving example: batched quantized inference behind the dynamic batcher,
+//! with the FPGA-sim timing overlay (the codesign view: numerics run on
+//! XLA-CPU, timing is what the Zynq accelerator would take).
+//!
+//! A Poisson open-loop client drives the server at `--rate` req/s; the
+//! report shows end-to-end latency percentiles, batch occupancy, and the
+//! simulated FPGA cost per batch. The Table-I context (what the same config
+//! does on the full ResNet-18 on both boards) is printed at the end.
+//!
+//! ```sh
+//! cargo run --release --example serve_resnet18 -- --rate 3000 --requests 2000
+//! ```
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use ilmpq::coordinator::{ServeConfig, Server};
+use ilmpq::experiments::table1;
+use ilmpq::model::resnet18;
+use ilmpq::runtime::Runtime;
+use ilmpq::util::{Args, Rng};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env(
+        "serve_resnet18",
+        1,
+        &[
+            ("rate", "arrival rate req/s (default 2000)"),
+            ("requests", "total requests (default 1024)"),
+            ("ratio", "quantization config (default ilmpq2)"),
+            ("device", "FPGA-sim device (default xc7z045)"),
+            ("workers", "worker threads (default 2)"),
+            ("max-wait-ms", "batcher deadline (default 5)"),
+            ("no-frozen!", "disable the pre-quantized-weights fast path"),
+        ],
+    );
+    let rt = Arc::new(Runtime::load_default()?);
+    let ratio = args.str_or("ratio", "ilmpq2").to_string();
+    let masks = rt
+        .manifest
+        .default_masks
+        .get(&ratio)
+        .ok_or_else(|| anyhow::anyhow!("unknown ratio {ratio}"))?
+        .clone();
+    let params = rt.manifest.load_init_params()?;
+    let cfg = ServeConfig {
+        workers: args.usize_or("workers", 2),
+        max_wait: Duration::from_millis(args.u64_or("max-wait-ms", 5)),
+        ratio_name: ratio.clone(),
+        device: args.str_or("device", "xc7z045").to_string(),
+        frozen: !args.flag("no-frozen"),
+    };
+    let device_name = cfg.device.clone();
+    let server = Server::start(rt.clone(), params, &masks, cfg)?;
+    println!("sim-FPGA model for this config: {}", server.sim.row());
+
+    let n = args.usize_or("requests", 1024);
+    let rate = args.f64_or("rate", 2000.0);
+    println!("open-loop Poisson client: {n} requests at {rate} req/s\n");
+    let img = rt.manifest.data.image_elems();
+    let (x_test, _) = rt.manifest.data.load_test()?;
+    let mut rng = Rng::new(42);
+    let mut pending = Vec::with_capacity(n);
+    for _ in 0..n {
+        let idx = rng.below(rt.manifest.data.n_test);
+        pending.push(server.submit(x_test[idx * img..(idx + 1) * img].to_vec()));
+        std::thread::sleep(Duration::from_secs_f64(rng.exp(rate)));
+    }
+    let mut preds = vec![0usize; rt.manifest.classes];
+    let mut done = 0usize;
+    for rx in pending {
+        if let Ok(resp) = rx.recv() {
+            preds[resp.pred] += 1;
+            done += 1;
+        }
+    }
+    let metrics = server.stop();
+    println!("completed {done}/{n}; prediction histogram {preds:?}\n");
+    println!("{}", metrics.report());
+
+    // Table-I context for the chosen device.
+    let net = resnet18();
+    if let Some(device) = ilmpq::fpga::DeviceModel::by_name(&device_name) {
+        let rows = table1::run_device(&device, &net);
+        println!("\nResNet-18 Table-I context on {}:", device.name);
+        for r in rows.iter().filter(|r| {
+            r.cfg.label.starts_with("(1)") || r.cfg.label.starts_with("ILMPQ")
+        }) {
+            println!("{}", r.sim.row());
+        }
+        println!("speedup: {:.2}x", table1::speedup(&rows));
+    }
+    Ok(())
+}

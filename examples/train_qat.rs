@@ -1,0 +1,81 @@
+//! End-to-end driver (DESIGN.md §4, exp T1-acc): quantization-aware training
+//! of the AOT model from Rust, proving all three layers compose — the Pallas
+//! fake-quant kernels (L1) inside the lowered train step (L2) driven by the
+//! coordinator (L3), with Python nowhere at runtime.
+//!
+//! Default: one ILMPQ-2 run with the loss curve logged. `--all-configs`
+//! reproduces every Table-I accuracy row (the ImageNet substitute; see
+//! EXPERIMENTS.md §T1-acc for the recorded run).
+//!
+//! ```sh
+//! cargo run --release --example train_qat -- --steps 400
+//! cargo run --release --example train_qat -- --all-configs --steps 300
+//! ```
+
+use ilmpq::coordinator::trainer::Trainer;
+use ilmpq::experiments::accuracy;
+use ilmpq::runtime::Runtime;
+use ilmpq::util::stats::Stopwatch;
+use ilmpq::util::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env(
+        "train_qat",
+        1,
+        &[
+            ("steps", "QAT steps (default 400)"),
+            ("ratio", "manifest ratio name (default ilmpq2)"),
+            ("all-configs!", "run every Table-I accuracy row"),
+            ("seed", "data order seed (default 2021)"),
+            ("seeds", "seed count for --all-configs averaging (default 3)"),
+        ],
+    );
+    let steps = args.usize_or("steps", 400);
+    let seed = args.u64_or("seed", 2021);
+    let rt = Runtime::load_default()?;
+    let mut watch = Stopwatch::new();
+
+    if args.flag("all-configs") {
+        let n_seeds = args.usize_or("seeds", 3);
+        let seeds: Vec<u64> = (0..n_seeds as u64).map(|i| seed + i).collect();
+        let rows = accuracy::run_all(&rt, steps, &seeds, |s| println!("{s}"))?;
+        println!("{}", accuracy::render(&rows));
+        println!("total {:.1}s", watch.total().as_secs_f64());
+        return Ok(());
+    }
+
+    let name = args.str_or("ratio", "ilmpq2");
+    let masks = rt
+        .manifest
+        .default_masks
+        .get(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown ratio {name}"))?
+        .clone();
+    println!(
+        "QAT {} with {} ({} steps, batch {})",
+        rt.manifest.model_name, name, steps, rt.manifest.train_batch
+    );
+    let mut tr = Trainer::new(&rt, &masks, seed)?;
+    tr.train(steps, 20, |s| {
+        println!(
+            "step {:>4}  loss {:.4}  train-acc {:.3}  lr {:.4}",
+            s.step, s.loss, s.acc, s.lr
+        );
+    })?;
+    let train_time = watch.lap();
+    let ev = tr.evaluate()?;
+    println!(
+        "\nfinal: test loss {:.4}  test acc {:.2}%  ({} steps in {:.1}s, {:.1} ms/step)",
+        ev.loss,
+        ev.acc * 100.0,
+        steps,
+        train_time.as_secs_f64(),
+        train_time.as_secs_f64() * 1e3 / steps as f64
+    );
+    let stats = rt.engine.stats();
+    println!(
+        "engine: {} executions, {:.1}s execute / {:.1}s stage / {:.1}s fetch",
+        stats.executions, stats.execute_seconds, stats.stage_seconds, stats.fetch_seconds
+    );
+    Ok(())
+}

@@ -1,0 +1,321 @@
+"""AOT compile path: lower the Layer-2 graphs to HLO text + data artifacts.
+
+Run once via ``make artifacts`` (no-op when inputs are unchanged); after it
+completes, the Rust binary is self-contained: Python never executes on the
+request path.
+
+Interchange format is **HLO text**, not serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example and
+DESIGN.md §6).
+
+Artifacts written to ``artifacts/``:
+
+* ``train_step.hlo.txt``  — QAT fwd+bwd+SGD (masks are runtime inputs).
+* ``infer_b{1,8,64}.hlo.txt`` — quantized forward at the serving batch sizes.
+* ``eval_batch.hlo.txt``  — loss + accuracy over an eval batch.
+* ``hessian_hvp.hlo.txt`` — Hessian-vector product for on-device sensitivity.
+* ``params_init.bin``     — He-init parameters (f32, manifest order).
+* ``x_train/y_train/x_test/y_test.bin`` — the synthetic dataset (§5).
+* ``manifest.json``       — shapes, orders, artifact input/output specs, and
+  the default ILMPQ masks (Hessian+variance assignment at init weights).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import assign, data, hessian
+from . import model as M
+
+TRAIN_BATCH = 64
+EVAL_BATCH = 256
+INFER_BATCHES = (1, 8, 64)
+HVP_BATCH = 128
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype="f32"):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32 if dtype == "f32" else jnp.int32)
+
+
+def _io_entry(name, arr_spec):
+    dt = "i32" if arr_spec.dtype == jnp.int32 else "f32"
+    return {"name": name, "shape": list(arr_spec.shape), "dtype": dt}
+
+
+class Flattener:
+    """Positional <-> named packing shared by every artifact.
+
+    Order: params (layer_defs order), then per quantized layer is8/is_pot,
+    then the extra inputs. Rust mirrors this from the manifest.
+    """
+
+    def __init__(self, cfg: M.ModelConfig):
+        self.cfg = cfg
+        self.pnames = M.param_names(cfg)
+        self.pshapes = dict(M.layer_defs(cfg))
+        self.qlayers = M.quantized_layers(cfg)
+
+    def param_specs(self):
+        return [(n, _spec(self.pshapes[n])) for n in self.pnames]
+
+    def mask_specs(self):
+        out = []
+        for name, rows in self.qlayers:
+            out.append((name + ":is8", _spec((rows,))))
+            out.append((name + ":is_pot", _spec((rows,))))
+        return out
+
+    def unpack_params(self, flat):
+        return dict(zip(self.pnames, flat))
+
+    def unpack_masks(self, flat):
+        return {n: a for (n, _), a in zip(self.mask_specs(), flat)}
+
+    def pack_params(self, params):
+        return [params[n] for n in self.pnames]
+
+
+def build_fns(cfg: M.ModelConfig):
+    """The four AOT entry points as positional-arg functions."""
+    fl = Flattener(cfg)
+    np_ = len(fl.pnames)
+    nm = len(fl.mask_specs())
+
+    def train_step(*args):
+        params = fl.unpack_params(args[:np_])
+        masks = fl.unpack_masks(args[np_ : np_ + nm])
+        x, y, lr = args[np_ + nm :]
+        new, loss, acc = M.train_step(params, x, y, masks, lr, cfg)
+        return tuple(fl.pack_params(new)) + (loss, acc)
+
+    def infer(*args):
+        params = fl.unpack_params(args[:np_])
+        masks = fl.unpack_masks(args[np_ : np_ + nm])
+        (x,) = args[np_ + nm :]
+        return (
+            M.apply(params, x, masks, cfg, quantize=True, inference_qgemm=True),
+        )
+
+    def infer_frozen(*args):
+        """Serving fast path: weights arrive PRE-quantized (the Rust
+        coordinator freezes them once per config with its bit-exact
+        quantizer mirror — the analogue of the FPGA's pre-quantized BRAM
+        image), so the graph carries no fake-quant ops at all."""
+        params = fl.unpack_params(args[:np_])
+        (x,) = args[np_:]
+        return (M.apply(params, x, {}, cfg, quantize=False),)
+
+    def eval_batch(*args):
+        params = fl.unpack_params(args[:np_])
+        masks = fl.unpack_masks(args[np_ : np_ + nm])
+        x, y = args[np_ + nm :]
+        loss, acc = M.loss_and_acc(params, x, y, masks, cfg)
+        return (loss, acc)
+
+    def hvp_fn(*args):
+        params = fl.unpack_params(args[:np_])
+        v = fl.unpack_params(args[np_ : 2 * np_])
+        x, y = args[2 * np_ :]
+        hv = hessian.hvp(params, v, x, y, cfg)
+        return tuple(fl.pack_params(hv))
+
+    return fl, train_step, infer, infer_frozen, eval_batch, hvp_fn
+
+
+def _input_hash() -> str:
+    """Hash of every compile-path source file — the Makefile staleness key."""
+    root = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for dirpath, _, files in sorted(os.walk(root)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(dirpath, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()[:16]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--seed", type=int, default=2021)
+    ap.add_argument("--hessian-iters", type=int, default=6)
+    args = ap.parse_args()
+    out = os.path.abspath(args.out)
+    os.makedirs(out, exist_ok=True)
+
+    cfg = M.ModelConfig()
+    spec = data.DataSpec(
+        height=cfg.height, width=cfg.width, channels=cfg.channels, classes=cfg.classes
+    )
+    fl, train_step, infer, infer_frozen, eval_batch, hvp_fn = build_fns(cfg)
+
+    # ---- dataset + init params -------------------------------------------
+    print("[aot] generating dataset ...")
+    data.save(out, spec)
+    params = M.init_params(jax.random.key(args.seed), cfg)
+    flat = np.concatenate(
+        [np.asarray(params[n]).reshape(-1) for n in fl.pnames]
+    ).astype("<f4")
+    flat.tofile(os.path.join(out, "params_init.bin"))
+
+    # ---- default masks: Hessian eigs at init + variance schemes ----------
+    print("[aot] per-filter Hessian power iteration ...")
+    ds = data.generate(spec)
+    xh = jnp.asarray(ds["x_train"][:HVP_BATCH])
+    yh = jnp.asarray(ds["y_train"][:HVP_BATCH])
+    eigs = hessian.filter_eigs(params, xh, yh, cfg, iters=args.hessian_iters)
+    default_masks = {}
+    for rname, ratio in assign.RATIOS.items():
+        masks = assign.make_masks(params, cfg, ratio, eigs)
+        default_masks[rname] = {
+            k: np.asarray(v).astype(int).tolist() for k, v in masks.items()
+        }
+
+    # ---- lower the entry points ------------------------------------------
+    pspecs = fl.param_specs()
+    mspecs = fl.mask_specs()
+    manifest_artifacts = {}
+
+    def lower(name, fn, extra_in, outs, n_params_groups=1):
+        ins = []
+        for g in range(n_params_groups):
+            suffix = "" if g == 0 else ":v"
+            ins += [(n + suffix, s) for n, s in pspecs]
+        # hessian_hvp is unquantized; infer_frozen takes pre-quantized
+        # weights — neither carries mask inputs.
+        if name != "hessian_hvp" and not name.startswith("infer_frozen"):
+            ins += mspecs
+        ins += extra_in
+        print(f"[aot] lowering {name} ({len(ins)} inputs) ...")
+        lowered = jax.jit(fn).lower(*[s for _, s in ins])
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out, fname), "w") as f:
+            f.write(text)
+        manifest_artifacts[name] = {
+            "file": fname,
+            "inputs": [_io_entry(n, s) for n, s in ins],
+            "outputs": outs,
+        }
+
+    hw = (cfg.height, cfg.width, cfg.channels)
+    lower(
+        "train_step",
+        train_step,
+        [
+            ("x", _spec((TRAIN_BATCH,) + hw)),
+            ("y", _spec((TRAIN_BATCH,), "i32")),
+            ("lr", _spec(())),
+        ],
+        [_io_entry(n, s) for n, s in pspecs]
+        + [_io_entry("loss", _spec(())), _io_entry("acc", _spec(()))],
+    )
+    for b in INFER_BATCHES:
+        lower(
+            f"infer_b{b}",
+            infer,
+            [("x", _spec((b,) + hw))],
+            [_io_entry("logits", _spec((b, cfg.classes)))],
+        )
+        lower(
+            f"infer_frozen_b{b}",
+            infer_frozen,
+            [("x", _spec((b,) + hw))],
+            [_io_entry("logits", _spec((b, cfg.classes)))],
+        )
+    lower(
+        "eval_batch",
+        eval_batch,
+        [
+            ("x", _spec((EVAL_BATCH,) + hw)),
+            ("y", _spec((EVAL_BATCH,), "i32")),
+        ],
+        [_io_entry("loss", _spec(())), _io_entry("acc", _spec(()))],
+    )
+    lower(
+        "hessian_hvp",
+        hvp_fn,
+        [
+            ("x", _spec((HVP_BATCH,) + hw)),
+            ("y", _spec((HVP_BATCH,), "i32")),
+        ],
+        [_io_entry(n, s) for n, s in pspecs],
+        n_params_groups=2,
+    )
+
+    # ---- manifest ---------------------------------------------------------
+    manifest = {
+        "version": 1,
+        "input_hash": _input_hash(),
+        "model": {
+            "name": cfg.name,
+            "height": cfg.height,
+            "width": cfg.width,
+            "channels": cfg.channels,
+            "classes": cfg.classes,
+            "widths": list(cfg.widths),
+        },
+        "params": [
+            {"name": n, "shape": list(s.shape)} for n, s in pspecs
+        ],
+        "quantized_layers": [
+            {
+                "name": n,
+                "rows": r,
+                "fan_in": int(np.prod(fl.pshapes[n][:-1]))
+                if len(fl.pshapes[n]) == 4
+                else int(fl.pshapes[n][1]),
+            }
+            for n, r in fl.qlayers
+        ],
+        "data": {
+            "height": spec.height,
+            "width": spec.width,
+            "channels": spec.channels,
+            "classes": spec.classes,
+            "n_train": spec.n_train,
+            "n_test": spec.n_test,
+            "noise": spec.noise,
+            "seed": spec.seed,
+            "files": {
+                "x_train": "x_train.bin",
+                "y_train": "y_train.bin",
+                "x_test": "x_test.bin",
+                "y_test": "y_test.bin",
+                "params_init": "params_init.bin",
+            },
+        },
+        "train_batch": TRAIN_BATCH,
+        "eval_batch": EVAL_BATCH,
+        "infer_batches": list(INFER_BATCHES),
+        "hvp_batch": HVP_BATCH,
+        "artifacts": manifest_artifacts,
+        "eigs": {n: np.asarray(e).tolist() for n, e in eigs.items()},
+        "default_masks": default_masks,
+    }
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

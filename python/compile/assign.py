@@ -1,0 +1,159 @@
+"""Precision & scheme assignment (paper §II-C, steps 1–2).
+
+Given per-filter Hessian eigenvalues and the weight tensors:
+
+1. **bits**: the top ``frac8`` (paper: 5%) filters by eigenvalue in every
+   layer are assigned Fixed-8; everything else is 4-bit. At least one row
+   per layer is promoted whenever ``frac8 > 0`` so tiny layers (e.g. a
+   16-filter stem) still get the paper's "8-bit rescue rows".
+2. **scheme**: among the 4-bit rows, those with the *smallest variance* are
+   assigned PoT (its levels are densest around zero), the rest Fixed-4.
+   The PoT share comes from the offline hardware ratio search
+   (``rust/src/coordinator/ratio_search.rs`` — 60:35:5 on XC7Z020,
+   65:30:5 on XC7Z045).
+
+Outputs are f32 0/1 masks keyed ``"<layer>:is8"`` / ``"<layer>:is_pot"`` —
+the runtime inputs of every AOT artifact. The Rust side re-implements the
+same policy (``rust/src/quant/assign.rs``) and the integration tests check
+the two agree on identical inputs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+
+
+@dataclasses.dataclass(frozen=True)
+class Ratio:
+    """PoT-4 : Fixed-4 : Fixed-8 percentage split (Table I first column)."""
+
+    pot4: float
+    fixed4: float
+    fixed8: float
+
+    def __post_init__(self):
+        total = self.pot4 + self.fixed4 + self.fixed8
+        if abs(total - 100.0) > 1e-6:
+            raise ValueError(f"ratio must sum to 100, got {total}")
+
+    @property
+    def frac8(self) -> float:
+        return self.fixed8 / 100.0
+
+    @property
+    def pot_share_of_4bit(self) -> float:
+        """Fraction of the 4-bit rows that are PoT."""
+        four = self.pot4 + self.fixed4
+        return 0.0 if four == 0 else self.pot4 / four
+
+    def label(self) -> str:
+        return f"{self.pot4:g}:{self.fixed4:g}:{self.fixed8:g}"
+
+
+# Table I rows, by name.
+RATIOS: dict[str, Ratio] = {
+    "fixed4": Ratio(0, 100, 0),
+    "pot4": Ratio(100, 0, 0),
+    "mixed_50_50": Ratio(50, 50, 0),
+    "mixed_60_40": Ratio(60, 40, 0),
+    "mixed_67_33": Ratio(67, 33, 0),
+    "ilmpq1": Ratio(60, 35, 5),
+    "ilmpq2": Ratio(65, 30, 5),
+}
+
+
+def assign_bits(eigs: np.ndarray, frac8: float) -> np.ndarray:
+    """Top-``frac8`` rows by eigenvalue -> 8-bit. Returns f32 0/1 ``is8``.
+
+    Ties break toward lower row index (stable argsort) so the assignment is
+    deterministic — required for the Rust/Python agreement tests.
+    """
+    rows = eigs.shape[0]
+    n8 = 0 if frac8 <= 0 else max(1, int(round(rows * frac8)))
+    is8 = np.zeros(rows, dtype=np.float32)
+    if n8 > 0:
+        order = np.argsort(-eigs, kind="stable")
+        is8[order[:n8]] = 1.0
+    return is8
+
+
+def assign_schemes(
+    w_rows: np.ndarray, is8: np.ndarray, pot_share: float
+) -> np.ndarray:
+    """Low-variance 4-bit rows -> PoT. Returns f32 0/1 ``is_pot``.
+
+    ``w_rows`` is the (rows, fan_in) GEMM view; variance is per row. 8-bit
+    rows never get PoT (they are the high-sensitivity fixed-point rows).
+    """
+    rows = w_rows.shape[0]
+    var = w_rows.var(axis=1)
+    four_bit = np.where(is8 < 0.5)[0]
+    n_pot = int(round(len(four_bit) * pot_share))
+    is_pot = np.zeros(rows, dtype=np.float32)
+    if n_pot > 0:
+        order = four_bit[np.argsort(var[four_bit], kind="stable")]
+        is_pot[order[:n_pot]] = 1.0
+    return is_pot
+
+
+def gemm_view_np(w: np.ndarray) -> np.ndarray:
+    if w.ndim == 4:
+        return np.transpose(w, (3, 0, 1, 2)).reshape(w.shape[3], -1)
+    return w.reshape(w.shape[0], -1)
+
+
+def make_masks(
+    params: dict[str, jax.Array],
+    cfg: M.ModelConfig,
+    ratio: Ratio,
+    eigs: dict[str, jax.Array] | None = None,
+    *,
+    first_last_8bit: bool = False,
+) -> dict[str, jax.Array]:
+    """Full mask dict for every quantized layer.
+
+    ``eigs=None`` falls back to row L2 norm as the sensitivity proxy (used
+    by tests that don't want an HVP); the real pipeline passes
+    ``hessian.filter_eigs`` output. ``first_last_8bit=True`` reproduces the
+    prior-work baseline rows of Table I ("First/Last Layer Quantization"
+    column *unchecked*): stem and fc forced entirely to Fixed-8.
+    """
+    masks: dict[str, jax.Array] = {}
+    qlayers = M.quantized_layers(cfg)
+    first, last = qlayers[0][0], qlayers[-1][0]
+    for name, rows in qlayers:
+        w = np.asarray(params[name])
+        w2 = gemm_view_np(w)
+        if first_last_8bit and name in (first, last):
+            is8 = np.ones(rows, dtype=np.float32)
+            ipot = np.zeros(rows, dtype=np.float32)
+        else:
+            e = (
+                np.asarray(eigs[name])
+                if eigs is not None
+                else np.linalg.norm(w2, axis=1)
+            )
+            is8 = assign_bits(e, ratio.frac8)
+            ipot = assign_schemes(w2, is8, ratio.pot_share_of_4bit)
+        masks[name + ":is8"] = jnp.asarray(is8)
+        masks[name + ":is_pot"] = jnp.asarray(ipot)
+    return masks
+
+
+def mask_stats(masks: dict[str, jax.Array]) -> dict[str, tuple[int, int, int]]:
+    """Per-layer (n_pot4, n_fixed4, n_fixed8) row counts, for reporting."""
+    out = {}
+    layers = sorted({k.rsplit(":", 1)[0] for k in masks})
+    for layer in layers:
+        is8 = np.asarray(masks[layer + ":is8"])
+        ipot = np.asarray(masks[layer + ":is_pot"])
+        n8 = int(is8.sum())
+        npot = int(ipot.sum())
+        out[layer] = (npot, len(is8) - n8 - npot, n8)
+    return out

@@ -1,0 +1,148 @@
+"""Per-filter Hessian sensitivity (paper §II-C, step 1).
+
+The paper assigns 8-bit precision to the filters whose Hessian diagonal
+block has the largest top eigenvalue ("more bits to the most sensitive
+weights", a HAWQ-style criterion). We estimate those eigenvalues with
+*blockwise power iteration* on Hessian-vector products:
+
+* one HVP per iteration covers *all* filters of a layer at once — filters
+  occupy disjoint parameter slices, so keeping an independent probe vector
+  per filter row and re-normalizing each row between iterations power-iterates
+  every diagonal block simultaneously;
+* the per-row Rayleigh quotient ``<v_r, (Hv)_r> / <v_r, v_r>`` after the last
+  iteration is the eigenvalue estimate.
+
+The same HVP computation is AOT-lowered (``hessian_hvp`` artifact) so the
+Rust coordinator can re-derive sensitivities on device without Python.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+
+
+def hvp(
+    params: dict[str, jax.Array],
+    v: dict[str, jax.Array],
+    x: jax.Array,
+    y: jax.Array,
+    cfg: M.ModelConfig,
+    *,
+    quantize: bool = False,
+) -> dict[str, jax.Array]:
+    """Hessian-vector product of the (unquantized by default) training loss.
+
+    Sensitivity is measured on the float model — the paper computes it
+    before QAT to decide the assignment, and the round/clip ops in the
+    fake-quantizers have zero second derivative almost everywhere anyway.
+    """
+
+    def loss(p):
+        return M.loss_and_acc(
+            p, x, y, {}, cfg, quantize=quantize, use_pallas=False
+        )[0]
+
+    return jax.jvp(jax.grad(loss), (params,), (v,))[1]
+
+
+def _row_view(a: jax.Array) -> jax.Array:
+    """Filter-major 2-D view: HWIO conv -> (out_rows, fan_in)."""
+    if a.ndim == 4:
+        return jnp.transpose(a, (3, 0, 1, 2)).reshape(a.shape[3], -1)
+    return a.reshape(a.shape[0], -1)
+
+
+def filter_eigs(
+    params: dict[str, jax.Array],
+    x: jax.Array,
+    y: jax.Array,
+    cfg: M.ModelConfig,
+    *,
+    iters: int = 8,
+    seed: int = 0,
+) -> dict[str, jax.Array]:
+    """Largest eigenvalue of each filter's Hessian block, for every layer.
+
+    Returns ``{layer_name: (rows,) eigenvalue estimates}`` for every
+    quantized layer. Deterministic given ``seed``.
+    """
+    key = jax.random.key(seed)
+    qnames = [n for n, _ in M.quantized_layers(cfg)]
+    v = {}
+    for n in params:
+        key, sub = jax.random.split(key)
+        v[n] = (
+            jax.random.normal(sub, params[n].shape, jnp.float32)
+            if n in qnames
+            else jnp.zeros_like(params[n])
+        )
+
+    def renorm(t: jax.Array) -> jax.Array:
+        t2 = _row_view(t)
+        norms = jnp.maximum(jnp.linalg.norm(t2, axis=1, keepdims=True), 1e-12)
+        flat = t2 / norms
+        if t.ndim == 4:
+            o = t.shape[3]
+            return jnp.transpose(
+                flat.reshape(o, t.shape[0], t.shape[1], t.shape[2]),
+                (1, 2, 3, 0),
+            )
+        return flat.reshape(t.shape)
+
+    v = {n: (renorm(t) if n in qnames else t) for n, t in v.items()}
+    hv = v
+    for _ in range(iters):
+        hv = hvp(params, v, x, y, cfg)
+        # Project: keep only the layer's own block (block-diagonal approx),
+        # renormalize per filter row.
+        v = {
+            n: (renorm(hv[n]) if n in qnames else jnp.zeros_like(hv[n]))
+            for n in hv
+        }
+    # Rayleigh quotient per row from the *last* (v, Hv) pair.
+    hv = hvp(params, v, x, y, cfg)
+    eigs = {}
+    for n in qnames:
+        vr = _row_view(v[n])
+        hr = _row_view(hv[n])
+        eigs[n] = jnp.sum(vr * hr, axis=1)
+    return eigs
+
+
+def hutchinson_trace(
+    params: dict[str, jax.Array],
+    x: jax.Array,
+    y: jax.Array,
+    cfg: M.ModelConfig,
+    *,
+    probes: int = 4,
+    seed: int = 0,
+) -> dict[str, jax.Array]:
+    """Per-filter Hessian trace via Hutchinson probes (fast proxy, ablation).
+
+    ``tr(H_r) = E[v^T H v]`` with Rademacher ``v`` — used by the ablation
+    bench to compare against the paper's top-eigenvalue criterion.
+    """
+    key = jax.random.key(seed)
+    qnames = [n for n, _ in M.quantized_layers(cfg)]
+    acc = {n: jnp.zeros((_row_view(params[n]).shape[0],)) for n in qnames}
+    for _ in range(probes):
+        v = {}
+        for n in params:
+            key, sub = jax.random.split(key)
+            v[n] = (
+                jnp.sign(jax.random.normal(sub, params[n].shape)).astype(
+                    jnp.float32
+                )
+                if n in qnames
+                else jnp.zeros_like(params[n])
+            )
+        hv = hvp(params, v, x, y, cfg)
+        for n in qnames:
+            acc[n] = acc[n] + jnp.sum(
+                _row_view(v[n]) * _row_view(hv[n]), axis=1
+            )
+    return {n: a / probes for n, a in acc.items()}

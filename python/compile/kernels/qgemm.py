@@ -1,0 +1,141 @@
+"""Layer-1 Pallas kernel: mixed-scheme quantized GEMM.
+
+Software model of the paper's FPGA compute core pair — ``GEMM_Fixed`` (DSP
+slices) and ``GEMM_PoT`` (LUT shift-add fabric) — fused into one tiled TPU
+kernel. Weight rows arrive as integer codes plus a per-row scale and per-row
+scheme masks; the kernel dequantizes a weight tile in VMEM and feeds a dense
+f32 contraction to the MXU.
+
+TPU mapping (DESIGN.md §3): the FPGA schedules the two arithmetic lanes in
+parallel *within every layer*; on TPU the same intra-layer homogeneity means
+every ``(BN, BK)`` weight tile dequantizes with the same vector recipe
+(mask-select between shift and multiply) and the MXU never stalls on a
+per-layer reconfiguration — the exact analogue of the paper's "uniform PE
+configuration for all layers".
+
+Grid is ``(M/BM, N/BN, K/BK)`` with K innermost; the output tile is revisited
+across the K steps and accumulated in place (standard Pallas reduction
+pattern). ``interpret=True`` for CPU-PJRT executability.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sizes: MXU-aligned 128 lanes on N, 8-row sublanes on M. On real TPU
+# BM=BN=128, BK=512 keeps x-tile + w-tile + out-tile < 1 MB VMEM; interpret
+# mode uses the same shapes so the lowered structure matches.
+DEFAULT_BM = 32
+DEFAULT_BN = 32
+DEFAULT_BK = 128
+
+
+def _dequant_tile(codes, scale, is8, ipot):
+    """Dequantize a (BN, BK) weight-code tile. Vector-only, no transcendentals.
+
+    fixed: w = c * s / Q          (Q = 7 or 127 by row)
+    pot:   w = sign(c) * 2^-(|c|-1) * s, 0 when c == 0
+    """
+    qmax = jnp.where(is8 > 0.5, 127.0, 7.0)
+    fixed = codes * (scale / qmax)
+    mag = jnp.abs(codes)
+    pot = jnp.sign(codes) * jnp.exp2(-(mag - 1.0)) * scale
+    pot = jnp.where(mag < 0.5, 0.0, pot)
+    return jnp.where(ipot > 0.5, pot, fixed)
+
+
+def _mixed_gemm_block(x_ref, c_ref, s_ref, is8_ref, ipot_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    scale = s_ref[...].reshape(-1, 1)
+    is8 = is8_ref[...].reshape(-1, 1)
+    ipot = ipot_ref[...].reshape(-1, 1)
+    w = _dequant_tile(c_ref[...], scale, is8, ipot)
+    # (BM, BK) x (BK, BN) on the MXU; accumulate in f32.
+    o_ref[...] += jax.lax.dot_general(
+        x_ref[...],
+        w,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _pad_to(a: jax.Array, mults: tuple[int, ...]) -> jax.Array:
+    pads = [( 0, (-d) % m) for d, m in zip(a.shape, mults)]
+    if any(p for _, p in pads):
+        return jnp.pad(a, pads)
+    return a
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def mixed_gemm(
+    x: jax.Array,
+    codes: jax.Array,
+    scale: jax.Array,
+    is8: jax.Array,
+    is_pot: jax.Array,
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+) -> jax.Array:
+    """``y = x @ dequant(codes).T`` with row-wise mixed schemes.
+
+    ``x``      — ``(M, K)`` activations.
+    ``codes``  — ``(N, K)`` integer weight codes as f32 (rows = output chans).
+    ``scale``  — ``(N,)`` per-row scales; ``is8``/``is_pot`` — ``(N,)`` masks.
+    Returns ``(M, N)`` f32. Oracle: ``ref.mixed_gemm_reference``.
+    """
+    m, k = x.shape
+    n, k2 = codes.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm_, bn_, bk_ = min(bm, m), min(bn, n), min(bk, k)
+    xp = _pad_to(x, (bm_, bk_))
+    cp = _pad_to(codes, (bn_, bk_))
+    sp = _pad_to(scale, (bn_,))
+    # Padded scale rows are 0 -> qmax division is safe (scale/qmax = 0).
+    i8p = _pad_to(is8, (bn_,))
+    ipp = _pad_to(is_pot, (bn_,))
+    grid = (xp.shape[0] // bm_, cp.shape[0] // bn_, xp.shape[1] // bk_)
+    out = pl.pallas_call(
+        _mixed_gemm_block,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn_, bk_), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bn_,), lambda i, j, kk: (j,)),
+            pl.BlockSpec((bn_,), lambda i, j, kk: (j,)),
+            pl.BlockSpec((bn_,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], cp.shape[0]), jnp.float32),
+        interpret=True,
+    )(xp, cp, sp, i8p, ipp)
+    return out[:m, :n]
+
+
+def vmem_bytes(bm: int, bn: int, bk: int) -> int:
+    """Static VMEM footprint of one grid step (f32): x, codes, 3 row vecs, out.
+
+    Used by the §Perf analysis and asserted < 16 MB by the tests for the
+    default and TPU-target tile shapes.
+    """
+    return 4 * (bm * bk + bn * bk + 3 * bn + bm * bn)
+
+
+def mxu_utilization(bm: int, bn: int, bk: int) -> float:
+    """Fraction of 128x128 MXU lanes a (bm, bn, bk) tile keeps busy."""
+    def eff(d: int, lanes: int) -> float:
+        full, rem = divmod(d, lanes)
+        tiles = full + (1 if rem else 0)
+        return d / (tiles * lanes)
+
+    return eff(bm, 128) * eff(bn, 128) * eff(bk, 128)

@@ -1,0 +1,149 @@
+"""Layer-1 Pallas kernel: row-wise mixed-scheme fake quantization.
+
+This is the QAT hot-spot: every training step fake-quantizes every weight
+matrix row-by-row with the row's assigned (scheme, bits). On FPGA the
+corresponding operation is free (weights are stored pre-quantized); on the
+training accelerator it is a bandwidth-bound elementwise pass, so the kernel
+is tiled over row blocks with the full row resident in VMEM — the per-row
+max-reduction (scale) then never leaves the tile.
+
+TPU mapping (see DESIGN.md §3): one grid step processes a ``(BR, cols)``
+tile; ``BR`` is picked so the tile plus its three quantized variants fit
+VMEM. ``interpret=True`` everywhere — the CPU PJRT client cannot execute
+Mosaic custom-calls; numerics are identical.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_EPS = 1e-12
+
+# Row-block size. 8 rows x up to a few thousand f32 columns x 4 scheme
+# variants stays well under a VMEM budget (~16 MB) while keeping the grid
+# short; the lane dimension (cols) stays contiguous for the VPU.
+DEFAULT_BLOCK_ROWS = 8
+
+
+def _fake_quant_block(w_ref, is8_ref, ipot_ref, o_ref):
+    """Kernel body: mixed fake-quant of one (BR, cols) row block."""
+    w = w_ref[...]
+    # Per-row scale: max |w| over the full row (whole row is in the tile).
+    s = jnp.maximum(jnp.max(jnp.abs(w), axis=1, keepdims=True), _EPS)
+    wn = w / s
+
+    # Fixed-point variants (4- and 8-bit symmetric uniform).
+    q4 = jnp.clip(jnp.round(wn * 7.0), -7.0, 7.0) * (1.0 / 7.0)
+    q8 = jnp.clip(jnp.round(wn * 127.0), -127.0, 127.0) * (1.0 / 127.0)
+
+    # PoT-4: exponents 0..6, zero deadzone below 2^-6.5.
+    mag = jnp.abs(wn)
+    e = jnp.clip(jnp.round(-jnp.log2(jnp.maximum(mag, _EPS))), 0.0, 6.0)
+    p4 = jnp.where(mag < 2.0 ** -6.5, 0.0, jnp.sign(wn) * jnp.exp2(-e))
+
+    is8 = is8_ref[...].reshape(-1, 1)
+    ipot = ipot_ref[...].reshape(-1, 1)
+    sel = is8 * q8 + (1.0 - is8) * (ipot * p4 + (1.0 - ipot) * q4)
+    o_ref[...] = sel * s
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def fake_quant_rows(
+    w: jax.Array,
+    is8: jax.Array,
+    is_pot: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+) -> jax.Array:
+    """Row-wise mixed-scheme fake-quant of a ``(rows, cols)`` matrix.
+
+    ``is8`` / ``is_pot`` are ``(rows,)`` f32 masks (see
+    ``quant.mixed_fake_quant_reference`` for the exact semantics — this kernel
+    is asserted allclose against it by ``python/tests/test_kernels.py``).
+    """
+    rows, cols = w.shape
+    br = min(block_rows, rows)
+    pad = (-rows) % br
+    if pad:
+        w = jnp.pad(w, ((0, pad), (0, 0)))
+        is8 = jnp.pad(is8, (0, pad))
+        is_pot = jnp.pad(is_pot, (0, pad))
+    grid = (w.shape[0] // br,)
+    out = pl.pallas_call(
+        _fake_quant_block,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, cols), lambda i: (i, 0)),
+            pl.BlockSpec((br,), lambda i: (i,)),
+            pl.BlockSpec((br,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(w.shape, w.dtype),
+        interpret=True,
+    )(w, is8, is_pot)
+    return out[:rows] if pad else out
+
+
+def _quant_codes_block(w_ref, is8_ref, ipot_ref, code_ref, scale_ref):
+    """Kernel body: emit integer codes + per-row scales for the Rust packer.
+
+    Code convention (matches ``rust/src/quant/packing.rs``):
+      * fixed rows  — signed integer code in [-Q, Q] (Q = 7 or 127);
+      * PoT rows    — ``sign * (e + 1)`` with 0 the zero code (e in [0, 6]).
+    """
+    w = w_ref[...]
+    s = jnp.maximum(jnp.max(jnp.abs(w), axis=1, keepdims=True), _EPS)
+    wn = w / s
+    c4 = jnp.clip(jnp.round(wn * 7.0), -7.0, 7.0)
+    c8 = jnp.clip(jnp.round(wn * 127.0), -127.0, 127.0)
+    mag = jnp.abs(wn)
+    e = jnp.clip(jnp.round(-jnp.log2(jnp.maximum(mag, _EPS))), 0.0, 6.0)
+    cp = jnp.where(mag < 2.0 ** -6.5, 0.0, jnp.sign(wn) * (e + 1.0))
+    is8 = is8_ref[...].reshape(-1, 1)
+    ipot = ipot_ref[...].reshape(-1, 1)
+    code_ref[...] = is8 * c8 + (1.0 - is8) * (ipot * cp + (1.0 - ipot) * c4)
+    scale_ref[...] = s[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def quant_codes_rows(
+    w: jax.Array,
+    is8: jax.Array,
+    is_pot: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+) -> tuple[jax.Array, jax.Array]:
+    """Integer codes (as f32) + per-row scales, for packing/inspection."""
+    rows, cols = w.shape
+    br = min(block_rows, rows)
+    pad = (-rows) % br
+    if pad:
+        w = jnp.pad(w, ((0, pad), (0, 0)))
+        is8 = jnp.pad(is8, (0, pad))
+        is_pot = jnp.pad(is_pot, (0, pad))
+    grid = (w.shape[0] // br,)
+    codes, scales = pl.pallas_call(
+        _quant_codes_block,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, cols), lambda i: (i, 0)),
+            pl.BlockSpec((br,), lambda i: (i,)),
+            pl.BlockSpec((br,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br, cols), lambda i: (i, 0)),
+            pl.BlockSpec((br,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(w.shape, w.dtype),
+            jax.ShapeDtypeStruct((w.shape[0],), w.dtype),
+        ],
+        interpret=True,
+    )(w, is8, is_pot)
+    if pad:
+        codes, scales = codes[:rows], scales[:rows]
+    return codes, scales

@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for the Layer-1 Pallas kernels.
+
+Every kernel in this package has an exact reference here; pytest +
+hypothesis assert allclose across random shapes, ratios and magnitudes.
+The quantizer semantics live in ``compile.quant`` (single source of truth);
+this module composes them into the kernel-shaped signatures.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import quant
+
+
+def fake_quant_rows_reference(
+    w: jax.Array, is8: jax.Array, is_pot: jax.Array
+) -> jax.Array:
+    """Oracle for ``quantize.fake_quant_rows``."""
+    return quant.mixed_fake_quant_reference(w, is8, is_pot)
+
+
+def quant_codes_rows_reference(
+    w: jax.Array, is8: jax.Array, is_pot: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Oracle for ``quantize.quant_codes_rows``."""
+    s = quant.row_scale(w)
+    c4 = quant.fixed_codes(w, 4, s)
+    c8 = quant.fixed_codes(w, 8, s)
+    cp = quant.pot_codes(w, 4, s)
+    is8c = is8.reshape(-1, 1)
+    ipc = is_pot.reshape(-1, 1)
+    codes = is8c * c8 + (1.0 - is8c) * (ipc * cp + (1.0 - ipc) * c4)
+    return codes, s[:, 0]
+
+
+def dequant_codes_reference(
+    codes: jax.Array, scale: jax.Array, is8: jax.Array, is_pot: jax.Array
+) -> jax.Array:
+    """Dequantize integer codes back to f32 weights (rows = output chans)."""
+    scale = scale.reshape(-1, 1)
+    qmax = jnp.where(is8.reshape(-1, 1) > 0.5, 127.0, 7.0)
+    fixed = codes * (scale / qmax)
+    mag = jnp.abs(codes)
+    pot = jnp.sign(codes) * jnp.exp2(-(mag - 1.0)) * scale
+    pot = jnp.where(mag < 0.5, 0.0, pot)
+    return jnp.where(is_pot.reshape(-1, 1) > 0.5, pot, fixed)
+
+
+def mixed_gemm_reference(
+    x: jax.Array,
+    codes: jax.Array,
+    scale: jax.Array,
+    is8: jax.Array,
+    is_pot: jax.Array,
+) -> jax.Array:
+    """Oracle for ``qgemm.mixed_gemm``: dequantize then dense matmul."""
+    w = dequant_codes_reference(codes, scale, is8, is_pot)
+    return x @ w.T
+
+
+def roundtrip_reference(
+    w: jax.Array, is8: jax.Array, is_pot: jax.Array
+) -> jax.Array:
+    """codes -> dequant must equal the fake-quant output (pack invariant)."""
+    codes, s = quant_codes_rows_reference(w, is8, is_pot)
+    return dequant_codes_reference(codes, s, is8, is_pot)

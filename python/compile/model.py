@@ -1,0 +1,240 @@
+"""Layer-2 JAX model: QAT-capable residual CNN with ILMPQ row-wise masks.
+
+Pure-JAX (no flax): params are a flat ``{name: array}`` dict so the AOT
+boundary (Rust feeds/receives positional literals in sorted-name order) stays
+trivial. Every conv/fc weight is fake-quantized through the Layer-1 Pallas
+kernel with per-row (= per-filter) scheme/precision masks — the paper's
+intra-layer multi-precision. Masks are *runtime inputs*, so one lowered
+artifact serves every PoT:Fixed4:Fixed8 ratio and every assignment policy.
+
+The architecture is a scaled-down ResNet (stem + 3 residual stages + GAP +
+fc), structurally the same family as the paper's ResNet-18; the full
+ImageNet ResNet-18 geometry lives in ``rust/src/model/resnet18.rs`` where it
+drives the FPGA performance model (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import quant
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    height: int = 16
+    width: int = 16
+    channels: int = 3
+    widths: tuple[int, ...] = (16, 32, 64)
+    classes: int = 10
+
+    @property
+    def name(self) -> str:
+        return "tinyresnet-" + "-".join(map(str, self.widths))
+
+
+# ---------------------------------------------------------------------------
+# Layer inventory. Each quantized layer is (name, out_rows, kind).
+# ---------------------------------------------------------------------------
+
+
+def layer_defs(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    """Ordered (name, weight-shape) for every parameter. HWIO conv layout."""
+    defs: list[tuple[str, tuple[int, ...]]] = []
+    w0 = cfg.widths[0]
+    defs.append(("stem/w", (3, 3, cfg.channels, w0)))
+    prev = w0
+    for si, wch in enumerate(cfg.widths):
+        defs.append((f"s{si}/c1/w", (3, 3, prev, wch)))
+        defs.append((f"s{si}/c2/w", (3, 3, wch, wch)))
+        if prev != wch:
+            defs.append((f"s{si}/proj/w", (1, 1, prev, wch)))
+        prev = wch
+    defs.append(("fc/w", (cfg.classes, prev)))
+    defs.append(("fc/b", (cfg.classes,)))
+    return defs
+
+
+def quantized_layers(cfg: ModelConfig) -> list[tuple[str, int]]:
+    """(name, rows) for every weight that carries ILMPQ masks.
+
+    Rows = output channels: a "row" of the GEMM view is one filter, exactly
+    the paper's Figure 1 granularity. The fc bias is never quantized.
+    """
+    out = []
+    for name, shape in layer_defs(cfg):
+        if name.endswith("/w"):
+            rows = shape[-1] if len(shape) == 4 else shape[0]
+            out.append((name, rows))
+    return out
+
+
+def param_names(cfg: ModelConfig) -> list[str]:
+    return [n for n, _ in layer_defs(cfg)]
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> dict[str, jax.Array]:
+    """He-normal init; fc weights scaled down 10x.
+
+    The network has no normalization layers (weights-only quantization keeps
+    the hardware story clean), so He-init logits come out ~10x too hot and
+    softmax saturates — the 0.1 factor on the head restores initial loss
+    ~ln(classes) and is what makes plain SGD converge here.
+    """
+    params = {}
+    for name, shape in layer_defs(cfg):
+        key, sub = jax.random.split(key)
+        if name == "fc/b":
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            fan_in = 1
+            for d in shape[:-1]:
+                fan_in *= d
+            std = (2.0 / fan_in) ** 0.5
+            if name == "fc/w":
+                std *= 0.1
+            params[name] = std * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward pass.
+# ---------------------------------------------------------------------------
+
+
+def _gemm_view(w: jax.Array) -> jax.Array:
+    """HWIO conv weight -> (out_rows, fan_in) GEMM view (rows = filters)."""
+    if w.ndim == 4:
+        return jnp.transpose(w, (3, 0, 1, 2)).reshape(w.shape[3], -1)
+    return w
+
+
+def _from_gemm_view(w2: jax.Array, like: jax.Array) -> jax.Array:
+    if like.ndim == 4:
+        h, ww, i, o = like.shape
+        return jnp.transpose(w2.reshape(o, h, ww, i), (1, 2, 3, 0))
+    return w2
+
+
+def quantize_weight(
+    w: jax.Array,
+    masks: dict[str, jax.Array],
+    name: str,
+    *,
+    use_pallas: bool = True,
+    enabled: bool = True,
+) -> jax.Array:
+    """Mixed fake-quant + STE of one weight tensor via its per-row masks."""
+    if not enabled:
+        return w
+    w2 = _gemm_view(w)
+    wq2 = quant.mixed_fake_quant_ste(
+        w2, masks[name + ":is8"], masks[name + ":is_pot"], use_pallas=use_pallas
+    )
+    return _from_gemm_view(wq2, w)
+
+
+def _conv(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def apply(
+    params: dict[str, jax.Array],
+    x: jax.Array,
+    masks: dict[str, jax.Array],
+    cfg: ModelConfig,
+    *,
+    quantize: bool = True,
+    use_pallas: bool = True,
+    inference_qgemm: bool = False,
+) -> jax.Array:
+    """Forward pass -> logits ``(batch, classes)``.
+
+    ``inference_qgemm=True`` routes the fc layer through the Layer-1
+    ``mixed_gemm`` kernel on integer codes (the FPGA-style integer GEMM) —
+    used by the inference artifact; training keeps the STE fake-quant path.
+    """
+    q: Callable[[str], jax.Array] = lambda n: quantize_weight(
+        params[n], masks, n, use_pallas=use_pallas, enabled=quantize
+    )
+    h = jax.nn.relu(_conv(x, q("stem/w")))
+    prev = cfg.widths[0]
+    for si, wch in enumerate(cfg.widths):
+        stride = 1 if prev == wch else 2
+        y = jax.nn.relu(_conv(h, q(f"s{si}/c1/w"), stride))
+        y = _conv(y, q(f"s{si}/c2/w"))
+        skip = h if prev == wch else _conv(h, q(f"s{si}/proj/w"), stride)
+        h = jax.nn.relu(y + skip)
+        prev = wch
+    h = jnp.mean(h, axis=(1, 2))  # global average pool
+    wfc = params["fc/w"]
+    if quantize and inference_qgemm:
+        from .kernels.quantize import quant_codes_rows
+        from .kernels.qgemm import mixed_gemm
+
+        codes, scales = quant_codes_rows(
+            wfc, masks["fc/w:is8"], masks["fc/w:is_pot"]
+        )
+        logits = mixed_gemm(
+            h, codes, scales, masks["fc/w:is8"], masks["fc/w:is_pot"]
+        )
+    else:
+        logits = h @ _gemm_view(q("fc/w")).T
+    return logits + params["fc/b"]
+
+
+# ---------------------------------------------------------------------------
+# Loss / steps.
+# ---------------------------------------------------------------------------
+
+
+def loss_and_acc(
+    params: dict[str, jax.Array],
+    x: jax.Array,
+    y: jax.Array,
+    masks: dict[str, jax.Array],
+    cfg: ModelConfig,
+    **kw,
+) -> tuple[jax.Array, jax.Array]:
+    logits = apply(params, x, masks, cfg, **kw)
+    logp = jax.nn.log_softmax(logits)
+    loss = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+    acc = jnp.mean((jnp.argmax(logits, axis=1) == y).astype(jnp.float32))
+    return loss, acc
+
+
+def train_step(
+    params: dict[str, jax.Array],
+    x: jax.Array,
+    y: jax.Array,
+    masks: dict[str, jax.Array],
+    lr: jax.Array,
+    cfg: ModelConfig,
+    *,
+    weight_decay: float = 1e-4,
+    use_pallas: bool = True,
+    quantize: bool = True,
+) -> tuple[dict[str, jax.Array], jax.Array, jax.Array]:
+    """One QAT SGD step (STE gradients through the fake-quantizers)."""
+
+    def lf(p):
+        return loss_and_acc(
+            p, x, y, masks, cfg, use_pallas=use_pallas, quantize=quantize
+        )
+
+    (loss, acc), grads = jax.value_and_grad(lf, has_aux=True)(params)
+    new = {
+        n: params[n] - lr * (grads[n] + weight_decay * params[n])
+        for n in params
+    }
+    return new, loss, acc

@@ -1,0 +1,161 @@
+"""Layer-2 quantizers for ILMPQ (fixed-point + power-of-two, row-wise mixed).
+
+Implements the paper's three weight representations:
+
+* ``Fixed-b``  — symmetric uniform fixed-point with ``b`` bits
+                 (sign + ``b-1`` magnitude bits), per-row scale.
+* ``PoT-b``    — power-of-two: levels ``{0, +/- 2^-e}`` for
+                 ``e in [0, 2^(b-1) - 2]``, per-row scale. Multiplication by a
+                 PoT weight is a shift on FPGA fabric (LUTs), which is why the
+                 low-variance rows are routed to this scheme.
+* the ILMPQ mix — every row of a weight matrix carries a (scheme, bits)
+                 tag; 5% of rows (most Hessian-sensitive filters) get
+                 Fixed-8, the rest split PoT-4 / Fixed-4 by row variance.
+
+All quantizers are *fake-quant* (quantize -> dequantize in f32) wrapped in a
+straight-through estimator (STE) for QAT, matching the paper's PyTorch
+training setup. The Pallas kernel in ``kernels/quantize.py`` computes the
+same function; ``kernels/ref.py`` re-exports these as the oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+# Deadzone guard: |w|/scale below 2^-(emax + 0.5) rounds to exactly 0 in the
+# PoT scheme (the all-zeros code). Also used to keep log2 well-defined.
+_EPS = 1e-12
+
+
+def row_scale(w: jax.Array) -> jax.Array:
+    """Per-row quantization scale: max |w| along every axis but the first.
+
+    ``w`` is the GEMM view of a weight tensor — shape ``(rows, cols)`` where a
+    row is one filter (conv) or one output neuron (fc). Returns ``(rows, 1)``.
+    """
+    w2 = w.reshape(w.shape[0], -1)
+    s = jnp.max(jnp.abs(w2), axis=1, keepdims=True)
+    return jnp.maximum(s, _EPS)
+
+
+def quantize_fixed(w: jax.Array, bits: int, scale: jax.Array) -> jax.Array:
+    """Symmetric uniform fixed-point fake-quant. ``scale`` broadcasts to ``w``.
+
+    Levels: ``q/Q * scale`` for integer ``q in [-Q, Q]``, ``Q = 2^(bits-1)-1``.
+    """
+    qmax = float(2 ** (bits - 1) - 1)
+    wn = w / scale
+    q = jnp.clip(jnp.round(wn * qmax), -qmax, qmax)
+    return q * (scale / qmax)
+
+
+def quantize_pot(w: jax.Array, bits: int, scale: jax.Array) -> jax.Array:
+    """Power-of-two fake-quant: levels ``{0} ∪ {± scale * 2^-e}``.
+
+    ``e`` ranges over ``[0, 2^(bits-1) - 2]`` — with 4 bits that is e in
+    [0, 6]: one code for zero, one sign bit, seven magnitudes. Exponent is
+    the nearest integer to ``-log2(|w|/scale)`` (round-to-nearest in log
+    domain), with a deadzone that flushes tiny weights to the zero code.
+    """
+    emax = float(2 ** (bits - 1) - 2)
+    wn = w / scale
+    mag = jnp.abs(wn)
+    e = jnp.clip(jnp.round(-jnp.log2(jnp.maximum(mag, _EPS))), 0.0, emax)
+    pot = jnp.sign(wn) * jnp.exp2(-e)
+    # Zero code: anything that would round below the smallest magnitude.
+    dead = mag < 2.0 ** (-(emax + 0.5))
+    return jnp.where(dead, 0.0, pot) * scale
+
+
+def fixed_codes(w: jax.Array, bits: int, scale: jax.Array) -> jax.Array:
+    """Integer codes (as f32) for the fixed-point scheme: ``q in [-Q, Q]``."""
+    qmax = float(2 ** (bits - 1) - 1)
+    return jnp.clip(jnp.round(w / scale * qmax), -qmax, qmax)
+
+
+def pot_codes(w: jax.Array, bits: int, scale: jax.Array) -> jax.Array:
+    """PoT codes as f32: ``sign * (e + 1)`` with 0 reserved for the zero code.
+
+    This is the representation the Rust packer stores in simulated BRAM:
+    sign bit + (bits-1)-bit exponent index.
+    """
+    emax = float(2 ** (bits - 1) - 2)
+    wn = w / scale
+    mag = jnp.abs(wn)
+    e = jnp.clip(jnp.round(-jnp.log2(jnp.maximum(mag, _EPS))), 0.0, emax)
+    dead = mag < 2.0 ** (-(emax + 0.5))
+    return jnp.where(dead, 0.0, jnp.sign(wn) * (e + 1.0))
+
+
+def mixed_fake_quant_reference(
+    w: jax.Array, is8: jax.Array, is_pot: jax.Array
+) -> jax.Array:
+    """Pure-jnp ILMPQ row-wise mixed fake-quant (the oracle semantics).
+
+    ``w``      — ``(rows, cols)`` GEMM-view weights.
+    ``is8``    — ``(rows,)`` f32 mask, 1.0 where the row is Fixed-8.
+    ``is_pot`` — ``(rows,)`` f32 mask, 1.0 where the row is PoT-4.
+    Rows with both masks 0 are Fixed-4. Masks are runtime inputs so a single
+    lowered artifact serves any PoT:Fixed4:Fixed8 ratio.
+    """
+    s = row_scale(w)
+    f4 = quantize_fixed(w, 4, s)
+    f8 = quantize_fixed(w, 8, s)
+    p4 = quantize_pot(w, 4, s)
+    is8c = is8.reshape(-1, 1)
+    ipc = is_pot.reshape(-1, 1)
+    return is8c * f8 + (1.0 - is8c) * (ipc * p4 + (1.0 - ipc) * f4)
+
+
+def ste(w: jax.Array, wq: jax.Array) -> jax.Array:
+    """Straight-through estimator: forward ``wq``, gradient of identity."""
+    return w + jax.lax.stop_gradient(wq - w)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _fq_ste(w, is8, is_pot, use_pallas):
+    """Mixed fake-quant with a custom STE VJP.
+
+    The Pallas kernel (interpret mode) defines no autodiff rules, and the STE
+    gradient is the identity anyway, so the whole quantizer is wrapped in a
+    ``custom_vjp``: forward runs the kernel, backward passes the cotangent
+    straight through to ``w`` (zeros to the masks).
+    """
+    if use_pallas:
+        from .kernels.quantize import fake_quant_rows
+
+        return fake_quant_rows(w, is8, is_pot)
+    return mixed_fake_quant_reference(w, is8, is_pot)
+
+
+def _fq_ste_fwd(w, is8, is_pot, use_pallas):
+    return _fq_ste(w, is8, is_pot, use_pallas), None
+
+
+def _fq_ste_bwd(use_pallas, _res, g):
+    return g, None, None
+
+
+_fq_ste.defvjp(_fq_ste_fwd, _fq_ste_bwd)
+
+
+def mixed_fake_quant_ste(
+    w: jax.Array, is8: jax.Array, is_pot: jax.Array, *, use_pallas: bool = True
+) -> jax.Array:
+    """QAT entry point: mixed fake-quant with STE.
+
+    ``use_pallas`` selects the Layer-1 Pallas kernel (interpret mode) or the
+    pure-jnp oracle; both compute the identical function and pytest asserts
+    allclose between them.
+    """
+    w2 = w.reshape(w.shape[0], -1)
+    wq = _fq_ste(w2, is8, is_pot, use_pallas)
+    return wq.reshape(w.shape)
+
+
+def quant_error(w: jax.Array, wq: jax.Array) -> jax.Array:
+    """Mean squared quantization error — used by tests and the assign sweep."""
+    return jnp.mean((w - wq) ** 2)

@@ -1,0 +1,110 @@
+"""Assignment policy (paper §II-C): bits by sensitivity, schemes by variance."""
+
+import hypothesis.strategies as st
+import jax
+import numpy as np
+from hypothesis import given
+
+from compile import assign
+from compile import model as M
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(4, 128))
+def test_assign_bits_count(seed, rows):
+    rng = np.random.default_rng(seed)
+    eigs = rng.random(rows)
+    is8 = assign.assign_bits(eigs, 0.05)
+    assert is8.sum() == max(1, round(rows * 0.05))
+    # Selected rows are exactly the top eigenvalues.
+    thresh = np.sort(eigs)[-int(is8.sum())]
+    assert np.all(eigs[is8 > 0.5] >= thresh)
+
+
+def test_assign_bits_zero_frac():
+    assert assign.assign_bits(np.ones(10), 0.0).sum() == 0
+
+
+def test_assign_bits_deterministic_ties():
+    eigs = np.array([1.0, 1.0, 1.0, 1.0])
+    np.testing.assert_array_equal(
+        assign.assign_bits(eigs, 0.5), np.array([1, 1, 0, 0], dtype=np.float32)
+    )
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_assign_schemes_low_variance_first(seed):
+    rng = np.random.default_rng(seed)
+    rows = 20
+    w = rng.normal(size=(rows, 16)).astype(np.float32)
+    w *= np.linspace(0.01, 2.0, rows)[:, None]  # increasing variance
+    is8 = np.zeros(rows, dtype=np.float32)
+    ipot = assign.assign_schemes(w, is8, 0.5)
+    n = int(ipot.sum())
+    var = w.var(axis=1)
+    chosen = var[ipot > 0.5]
+    rest = var[(ipot < 0.5)]
+    assert chosen.max() <= rest.min() + 1e-9
+    assert n == 10
+
+
+def test_schemes_exclude_8bit_rows():
+    rng = np.random.default_rng(1)
+    w = rng.normal(size=(10, 8)).astype(np.float32)
+    is8 = np.zeros(10, dtype=np.float32)
+    is8[[2, 5]] = 1.0
+    ipot = assign.assign_schemes(w, is8, 1.0)
+    assert ipot[2] == 0 and ipot[5] == 0
+    assert ipot.sum() == 8
+
+
+def test_ratio_validation():
+    with np.testing.assert_raises(Exception):
+        assign.Ratio(60, 35, 10)
+    r = assign.Ratio(60, 35, 5)
+    assert abs(r.pot_share_of_4bit - 60 / 95) < 1e-12
+    assert r.label() == "60:35:5"
+
+
+def test_make_masks_full_model():
+    cfg = M.ModelConfig()
+    params = M.init_params(jax.random.key(0), cfg)
+    masks = assign.make_masks(params, cfg, assign.RATIOS["ilmpq2"])
+    stats = assign.mask_stats(masks)
+    for (name, rows) in M.quantized_layers(cfg):
+        npot, nf4, n8 = stats[name]
+        assert npot + nf4 + n8 == rows, name
+        assert n8 >= 1, f"{name}: intra-layer 8-bit rescue rows missing"
+    # Aggregate mix should be near 65:30:5.
+    tot = np.array([v for v in stats.values()]).sum(axis=0)
+    frac = tot / tot.sum()
+    assert abs(frac[0] - 0.65) < 0.08
+    assert abs(frac[2] - 0.05) < 0.05
+
+
+def test_make_masks_first_last_8bit():
+    cfg = M.ModelConfig()
+    params = M.init_params(jax.random.key(0), cfg)
+    masks = assign.make_masks(
+        params, cfg, assign.RATIOS["fixed4"], first_last_8bit=True
+    )
+    q = M.quantized_layers(cfg)
+    first, last = q[0][0], q[-1][0]
+    assert np.all(np.asarray(masks[first + ":is8"]) == 1.0)
+    assert np.all(np.asarray(masks[last + ":is8"]) == 1.0)
+    # Middle layers stay 4-bit fixed.
+    mid = q[1][0]
+    assert np.asarray(masks[mid + ":is8"]).sum() == 0
+    assert np.asarray(masks[mid + ":is_pot"]).sum() == 0
+
+
+def test_masks_with_eigs_prefer_sensitive_filters():
+    cfg = M.ModelConfig()
+    params = M.init_params(jax.random.key(1), cfg)
+    # Fake eigs: filter 0 of each layer is the most sensitive.
+    eigs = {}
+    for name, rows in M.quantized_layers(cfg):
+        e = np.linspace(1.0, 0.0, rows)
+        eigs[name] = np.asarray(e)
+    masks = assign.make_masks(params, cfg, assign.RATIOS["ilmpq1"], eigs)
+    for name, rows in M.quantized_layers(cfg):
+        assert np.asarray(masks[name + ":is8"])[0] == 1.0, name

@@ -1,0 +1,156 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, scheme mixes, and magnitudes; every kernel output
+must match `ref.py` to float tolerance. This is the CORE correctness signal
+for the compute layer (the same kernels are embedded in every AOT artifact).
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile import quant
+from compile.kernels import qgemm, quantize, ref
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=30, derandomize=True
+)
+hypothesis.settings.load_profile("ci")
+
+
+def _masks(rng, rows, p8=0.2, ppot=0.5):
+    is8 = (rng.random(rows) < p8).astype(np.float32)
+    is_pot = ((rng.random(rows) < ppot) & (is8 < 0.5)).astype(np.float32)
+    return jnp.asarray(is8), jnp.asarray(is_pot)
+
+
+@st.composite
+def matrix_case(draw):
+    rows = draw(st.integers(1, 40))
+    cols = draw(st.integers(1, 70))
+    seed = draw(st.integers(0, 2**31 - 1))
+    scale = draw(st.floats(0.01, 100.0))
+    return rows, cols, seed, scale
+
+
+@given(matrix_case())
+def test_fake_quant_rows_matches_reference(case):
+    rows, cols, seed, scale = case
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(rows, cols)).astype(np.float32) * scale)
+    is8, is_pot = _masks(rng, rows)
+    got = quantize.fake_quant_rows(w, is8, is_pot)
+    want = ref.fake_quant_rows_reference(w, is8, is_pot)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5 * scale)
+
+
+@given(matrix_case())
+def test_quant_codes_match_reference(case):
+    rows, cols, seed, scale = case
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(rows, cols)).astype(np.float32) * scale)
+    is8, is_pot = _masks(rng, rows)
+    codes, scales = quantize.quant_codes_rows(w, is8, is_pot)
+    codes_ref, scales_ref = ref.quant_codes_rows_reference(w, is8, is_pot)
+    np.testing.assert_array_equal(np.asarray(codes), np.asarray(codes_ref))
+    np.testing.assert_allclose(scales, scales_ref, rtol=1e-6)
+
+
+@given(matrix_case())
+def test_codes_are_integers_in_range(case):
+    rows, cols, seed, scale = case
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(rows, cols)).astype(np.float32) * scale)
+    is8, is_pot = _masks(rng, rows)
+    codes = np.asarray(quantize.quant_codes_rows(w, is8, is_pot)[0])
+    assert np.all(codes == np.round(codes))
+    lim = np.where(np.asarray(is8)[:, None] > 0.5, 127.0, 7.0)
+    assert np.all(np.abs(codes) <= lim)
+
+
+@given(matrix_case(), st.integers(1, 24))
+def test_mixed_gemm_matches_reference(case, m):
+    rows, cols, seed, scale = case
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(rows, cols)).astype(np.float32) * scale)
+    x = jnp.asarray(rng.normal(size=(m, cols)).astype(np.float32))
+    is8, is_pot = _masks(rng, rows)
+    codes, scales = ref.quant_codes_rows_reference(w, is8, is_pot)
+    got = qgemm.mixed_gemm(x, codes, scales, is8, is_pot)
+    want = ref.mixed_gemm_reference(x, codes, scales, is8, is_pot)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4 * scale * cols)
+
+
+def test_mixed_gemm_tiling_independence():
+    """Result must not depend on the tile shape (pure scheduling knob)."""
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(33, 130)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(37, 130)).astype(np.float32))
+    is8, is_pot = _masks(rng, 37)
+    codes, scales = ref.quant_codes_rows_reference(w, is8, is_pot)
+    base = qgemm.mixed_gemm(x, codes, scales, is8, is_pot)
+    for bm, bn, bk in [(8, 8, 32), (16, 32, 64), (32, 16, 128)]:
+        out = qgemm.mixed_gemm(x, codes, scales, is8, is_pot, bm=bm, bn=bn, bk=bk)
+        np.testing.assert_allclose(out, base, rtol=1e-5, atol=1e-4)
+
+
+def test_dequant_roundtrip_equals_fake_quant():
+    rng = np.random.default_rng(3)
+    w = jnp.asarray(rng.normal(size=(20, 31)).astype(np.float32))
+    is8, is_pot = _masks(rng, 20)
+    rt = ref.roundtrip_reference(w, is8, is_pot)
+    fq = ref.fake_quant_rows_reference(w, is8, is_pot)
+    np.testing.assert_allclose(rt, fq, rtol=1e-6, atol=1e-6)
+
+
+def test_block_rows_padding_path():
+    """Rows not divisible by the block size exercise the padding path."""
+    rng = np.random.default_rng(11)
+    w = jnp.asarray(rng.normal(size=(13, 17)).astype(np.float32))
+    is8, is_pot = _masks(rng, 13)
+    a = quantize.fake_quant_rows(w, is8, is_pot, block_rows=8)
+    b = quantize.fake_quant_rows(w, is8, is_pot, block_rows=13)
+    np.testing.assert_allclose(a, b, rtol=1e-6)
+
+
+def test_vmem_budget_of_default_tiles():
+    """Perf guardrail: default + TPU-target tiles fit a 16 MB VMEM."""
+    assert qgemm.vmem_bytes(qgemm.DEFAULT_BM, qgemm.DEFAULT_BN, qgemm.DEFAULT_BK) < 16 * 2**20
+    assert qgemm.vmem_bytes(128, 128, 512) < 16 * 2**20
+
+
+def test_mxu_utilization_model():
+    assert qgemm.mxu_utilization(128, 128, 128) == 1.0
+    assert qgemm.mxu_utilization(64, 128, 128) == 0.5
+    assert 0.0 < qgemm.mxu_utilization(32, 32, 128) < 0.1
+
+
+def test_all_pot_masks():
+    """Degenerate mixes: 100% PoT and 100% Fixed-8 still agree with ref."""
+    rng = np.random.default_rng(5)
+    w = jnp.asarray(rng.normal(size=(9, 12)).astype(np.float32))
+    ones = jnp.ones(9)
+    zeros = jnp.zeros(9)
+    for is8, ipot in [(zeros, ones), (ones, zeros), (zeros, zeros)]:
+        got = quantize.fake_quant_rows(w, is8, ipot)
+        want = ref.fake_quant_rows_reference(w, is8, ipot)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_ste_gradient_is_identity_for_weights():
+    """The custom VJP must pass cotangents straight through to w."""
+    rng = np.random.default_rng(9)
+    w = jnp.asarray(rng.normal(size=(6, 10)).astype(np.float32))
+    is8, is_pot = _masks(rng, 6)
+
+    def f(w):
+        return jnp.sum(quant.mixed_fake_quant_ste(w, is8, is_pot) ** 2 / 2)
+
+    g = jax.grad(f)(w)
+    # STE: d/dw sum(q(w)^2/2) = q(w) * dq/dw = q(w) * 1.
+    q = quant.mixed_fake_quant_reference(w, is8, is_pot)
+    np.testing.assert_allclose(g, q, rtol=1e-5, atol=1e-6)

@@ -1,0 +1,146 @@
+"""L2 model: shapes, gradient flow, QAT step behaviour, pallas/ref parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import assign, data, hessian
+from compile import model as M
+
+CFG = M.ModelConfig()
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(jax.random.key(0), CFG)
+
+
+@pytest.fixture(scope="module")
+def masks(params):
+    return assign.make_masks(params, CFG, assign.RATIOS["ilmpq1"])
+
+
+@pytest.fixture(scope="module")
+def batch():
+    ds = data.generate(data.DataSpec(n_train=128, n_test=32))
+    return jnp.asarray(ds["x_train"][:16]), jnp.asarray(ds["y_train"][:16])
+
+
+def test_param_shapes_match_layer_defs(params):
+    for name, shape in M.layer_defs(CFG):
+        assert params[name].shape == shape, name
+
+
+def test_quantized_layers_rows(params):
+    for name, rows in M.quantized_layers(CFG):
+        w = params[name]
+        expected = w.shape[-1] if w.ndim == 4 else w.shape[0]
+        assert rows == expected, name
+
+
+def test_forward_shapes(params, masks, batch):
+    x, _ = batch
+    logits = M.apply(params, x, masks, CFG)
+    assert logits.shape == (16, CFG.classes)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_pallas_and_reference_paths_agree(params, masks, batch):
+    x, _ = batch
+    a = M.apply(params, x, masks, CFG, use_pallas=True)
+    b = M.apply(params, x, masks, CFG, use_pallas=False)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_inference_qgemm_path_agrees(params, masks, batch):
+    x, _ = batch
+    a = M.apply(params, x, masks, CFG, inference_qgemm=True)
+    b = M.apply(params, x, masks, CFG, inference_qgemm=False)
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)
+
+
+def test_unquantized_differs_from_quantized(params, masks, batch):
+    x, _ = batch
+    q = M.apply(params, x, masks, CFG, quantize=True)
+    f = M.apply(params, x, masks, CFG, quantize=False)
+    assert float(jnp.max(jnp.abs(q - f))) > 1e-4
+
+
+def test_gradients_flow_through_ste(params, masks, batch):
+    x, y = batch
+
+    def loss(p):
+        return M.loss_and_acc(p, x, y, masks, CFG)[0]
+
+    grads = jax.grad(loss)(params)
+    for name, g in grads.items():
+        norm = float(jnp.linalg.norm(g))
+        assert np.isfinite(norm), name
+        assert norm > 0, f"{name}: zero gradient (STE broken)"
+
+
+def test_train_step_reduces_loss(params, masks, batch):
+    x, y = batch
+    p = params
+    first = None
+    for _ in range(8):
+        p, loss, _ = M.train_step(p, x, y, masks, jnp.float32(0.05), CFG)
+        first = first if first is not None else float(loss)
+    assert float(loss) < first, f"loss {first} -> {float(loss)}"
+
+
+def test_train_step_keeps_shapes(params, masks, batch):
+    x, y = batch
+    new, loss, acc = M.train_step(params, x, y, masks, jnp.float32(0.01), CFG)
+    for name in params:
+        assert new[name].shape == params[name].shape
+    assert loss.shape == () and acc.shape == ()
+    assert 0.0 <= float(acc) <= 1.0
+
+
+def test_hvp_linearity(params, batch):
+    """H(a v + b w) == a Hv + b Hw — exact for any network (finite
+    differences are useless here: ReLU makes the loss piecewise linear, so
+    FD across kinks is garbage; linearity/symmetry are the right checks)."""
+    x, y = batch
+    k1, k2 = jax.random.split(jax.random.key(5))
+    v = {n: jax.random.normal(k1, p.shape, p.dtype) for n, p in params.items()}
+    w = {n: jax.random.normal(k2, p.shape, p.dtype) for n, p in params.items()}
+    a, b = 0.7, -1.3
+    lin = hessian.hvp(
+        params, {n: a * v[n] + b * w[n] for n in params}, x, y, CFG
+    )
+    hv = hessian.hvp(params, v, x, y, CFG)
+    hw = hessian.hvp(params, w, x, y, CFG)
+    for name in params:
+        want = a * np.asarray(hv[name]) + b * np.asarray(hw[name])
+        got = np.asarray(lin[name])
+        scale = np.abs(want).max() + 1e-5
+        assert np.abs(got - want).max() / scale < 1e-3, name
+
+
+def test_hvp_symmetry(params, batch):
+    """<u, Hv> == <v, Hu> (Hessian symmetry), a global exact identity."""
+    x, y = batch
+    k1, k2 = jax.random.split(jax.random.key(6))
+    u = {n: jax.random.normal(k1, p.shape, p.dtype) for n, p in params.items()}
+    v = {n: jax.random.normal(k2, p.shape, p.dtype) for n, p in params.items()}
+    hv = hessian.hvp(params, v, x, y, CFG)
+    hu = hessian.hvp(params, u, x, y, CFG)
+    dot = lambda a, b: sum(
+        float(jnp.vdot(a[n], b[n])) for n in a
+    )
+    uhv, vhu = dot(u, hv), dot(v, hu)
+    assert abs(uhv - vhu) / (abs(uhv) + 1e-6) < 1e-3, (uhv, vhu)
+
+
+def test_filter_eigs_shapes_and_nonnegative_mass(params, batch):
+    x, y = batch
+    eigs = hessian.filter_eigs(params, x, y, CFG, iters=3)
+    for name, rows in M.quantized_layers(CFG):
+        assert eigs[name].shape == (rows,), name
+    # Power iteration on a loss Hessian: the dominant per-row values should
+    # be mostly positive (the loss is locally convex in most filters).
+    all_vals = np.concatenate([np.asarray(v) for v in eigs.values()])
+    assert (all_vals > 0).mean() > 0.6

@@ -1,0 +1,101 @@
+"""L2 quantizer properties: fixed-point and PoT semantics (paper §II)."""
+
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given
+
+from compile import quant
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([4, 8]))
+def test_fixed_error_bound(seed, bits):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(5, 17)).astype(np.float32))
+    s = quant.row_scale(w)
+    wq = quant.quantize_fixed(w, bits, s)
+    step = np.asarray(s) / (2 ** (bits - 1) - 1)
+    assert np.all(np.abs(np.asarray(w - wq)) <= step / 2 + 1e-7)
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_fixed_idempotent(seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(4, 9)).astype(np.float32))
+    s = quant.row_scale(w)
+    once = quant.quantize_fixed(w, 4, s)
+    twice = quant.quantize_fixed(once, 4, s)
+    np.testing.assert_allclose(once, twice, atol=1e-7)
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_pot_levels_are_powers_of_two(seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(6, 11)).astype(np.float32))
+    s = quant.row_scale(w)
+    wq = np.asarray(quant.quantize_pot(w, 4, s)) / np.asarray(s)
+    nz = wq[np.abs(wq) > 0]
+    logs = np.log2(np.abs(nz))
+    np.testing.assert_allclose(logs, np.round(logs), atol=1e-5)
+    assert np.all(np.round(logs) <= 0) and np.all(np.round(logs) >= -6)
+
+
+def test_pot_deadzone_flushes_to_zero():
+    w = jnp.asarray([[1.0, 0.005, 0.012, -0.002]], dtype=jnp.float32)
+    s = quant.row_scale(w)
+    wq = np.asarray(quant.quantize_pot(w, 4, s))[0]
+    assert wq[1] == 0.0 and wq[3] == 0.0
+    assert wq[0] == 1.0
+    assert wq[2] != 0.0  # 0.012 > 2^-6.5 ~ 0.0110
+
+
+def test_pot_resolution_denser_near_zero_than_fixed():
+    """The paper's §II-C rationale: for small weights PoT has finer steps."""
+    small = jnp.asarray([[1.0, 0.031, 0.033, 0.06]], dtype=jnp.float32)
+    s = quant.row_scale(small)
+    pot_err = float(quant.quant_error(small, quant.quantize_pot(small, 4, s)))
+    fix_err = float(quant.quant_error(small, quant.quantize_fixed(small, 4, s)))
+    assert pot_err < fix_err
+
+
+def test_fixed_better_for_uniform_mass():
+    """Conversely, fixed-point wins on weights spread across the range."""
+    w = jnp.asarray([np.linspace(-1, 1, 64).astype(np.float32)])
+    s = quant.row_scale(w)
+    pot_err = float(quant.quant_error(w, quant.quantize_pot(w, 4, s)))
+    fix_err = float(quant.quant_error(w, quant.quantize_fixed(w, 4, s)))
+    assert fix_err < pot_err
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_mixed_reference_selects_by_mask(seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(8, 13)).astype(np.float32))
+    s = quant.row_scale(w)
+    is8 = jnp.asarray((rng.random(8) < 0.3).astype(np.float32))
+    ipot = jnp.asarray(
+        ((rng.random(8) < 0.5) & (np.asarray(is8) < 0.5)).astype(np.float32)
+    )
+    out = np.asarray(quant.mixed_fake_quant_reference(w, is8, ipot))
+    f4 = np.asarray(quant.quantize_fixed(w, 4, s))
+    f8 = np.asarray(quant.quantize_fixed(w, 8, s))
+    p4 = np.asarray(quant.quantize_pot(w, 4, s))
+    for r in range(8):
+        want = f8[r] if is8[r] > 0.5 else (p4[r] if ipot[r] > 0.5 else f4[r])
+        np.testing.assert_allclose(out[r], want, atol=1e-7)
+
+
+def test_error_ordering_8bit_beats_4bit():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(16, 64)).astype(np.float32))
+    s = quant.row_scale(w)
+    e8 = float(quant.quant_error(w, quant.quantize_fixed(w, 8, s)))
+    e4 = float(quant.quant_error(w, quant.quantize_fixed(w, 4, s)))
+    assert e8 < e4 / 10  # 16x finer steps -> ~256x lower MSE
+
+
+def test_row_scale_shape_and_floor():
+    w = jnp.zeros((3, 4))
+    s = np.asarray(quant.row_scale(w))
+    assert s.shape == (3, 1)
+    assert np.all(s > 0)

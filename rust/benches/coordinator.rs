@@ -1,0 +1,119 @@
+//! Bench: the L3 serving path — PJRT execute cost per batch size, dynamic
+//! batcher behaviour under load, and closed-loop serving throughput/latency
+//! percentiles. Requires artifacts (`make artifacts`).
+//!
+//! ```sh
+//! cargo bench --bench coordinator [-- --rates 500,2000,8000]
+//! ```
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use ilmpq::coordinator::{ServeConfig, Server};
+use ilmpq::runtime::{HostTensor, Runtime};
+use ilmpq::util::stats::{bench, Summary};
+use ilmpq::util::{Args, Rng};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env(
+        "bench coordinator",
+        1,
+        &[
+            ("rates", "comma-separated arrival rates (req/s)"),
+            ("requests", "requests per rate point (default 768)"),
+            ("workers", "worker threads (default 2)"),
+        ],
+    );
+    let rt = Arc::new(Runtime::load_default()?);
+    let m = &rt.manifest;
+    let img = m.data.image_elems();
+    let masks = m.default_masks.get("ilmpq2").expect("ilmpq2").clone();
+    let params = m.load_init_params()?;
+
+    // ---- raw engine cost per batch size (fake-quant vs frozen path) --------
+    println!("== PJRT execute cost per infer batch size ==");
+    let mask_tensors = m.mask_tensors(&masks);
+    let names: Vec<String> = m.params.iter().map(|(n, _)| n.clone()).collect();
+    let frozen_params = ilmpq::quant::freeze::freeze_params(&params, &names, &masks);
+    for &b in &m.infer_batches {
+        let x = HostTensor::zeros(vec![b, m.data.height, m.data.width, m.data.channels]);
+        let mut masked_in = params.clone();
+        masked_in.extend(mask_tensors.iter().cloned());
+        masked_in.push(x.clone());
+        let mut frozen_in = frozen_params.clone();
+        frozen_in.push(x);
+        let masked_name = format!("infer_b{b}");
+        let frozen_name = format!("infer_frozen_b{b}");
+        let sm = Summary::of(&bench(3, 30, || {
+            rt.run(&masked_name, &masked_in).expect("infer");
+        }));
+        let sf = Summary::of(&bench(3, 30, || {
+            rt.run(&frozen_name, &frozen_in).expect("infer frozen");
+        }));
+        println!(
+            "  b={b:<3} fake-quant {}\n        frozen     {}  ({:.2}x faster, {:.0} img/s)",
+            sm,
+            sf,
+            sm.p50 / sf.p50,
+            b as f64 / sf.p50
+        );
+    }
+
+    // ---- closed-loop serving under Poisson load -----------------------------
+    let rates: Vec<f64> = args
+        .str_or("rates", "500,2000,6000")
+        .split(',')
+        .map(|r| r.trim().parse().expect("rate"))
+        .collect();
+    let n = args.usize_or("requests", 768);
+    println!("\n== serving under open-loop Poisson load (ilmpq2 masks) ==");
+    for rate in rates {
+        let cfg = ServeConfig {
+            workers: args.usize_or("workers", 2),
+            max_wait: Duration::from_millis(5),
+            ratio_name: "ilmpq2".into(),
+            device: "xc7z045".into(),
+            frozen: true,
+        };
+        let server = Server::start(rt.clone(), params.clone(), &masks, cfg)?;
+        let mut rng = Rng::new(1234);
+        let t0 = std::time::Instant::now();
+        let mut pending = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut image = vec![0f32; img];
+            rng.fill_normal(&mut image, 1.0);
+            pending.push(server.submit(image));
+            std::thread::sleep(Duration::from_secs_f64(rng.exp(rate)));
+        }
+        let mut done = 0;
+        for rx in pending {
+            if rx.recv().is_ok() {
+                done += 1;
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let metrics = server.stop();
+        println!(
+            "rate {:>6.0} req/s: {done}/{n} ok, goodput {:>7.0} req/s, occupancy {:>5.1}%, e2e {}",
+            rate,
+            done as f64 / wall,
+            metrics.batch_occupancy() * 100.0,
+            metrics.e2e.summary()
+        );
+    }
+
+    // ---- batcher microbench -------------------------------------------------
+    println!("\n== batcher microbench (assemble 64 from 200 queued) ==");
+    use ilmpq::coordinator::{BatchPolicy, Batcher};
+    let samples = bench(10, 200, || {
+        let now = std::time::Instant::now();
+        let mut b: Batcher<u32> =
+            Batcher::new(BatchPolicy::new(vec![1, 8, 64], Duration::from_millis(5)));
+        for i in 0..200 {
+            b.push(i, now);
+        }
+        while b.try_assemble(now).is_some() {}
+    });
+    println!("  {}", Summary::of(&samples));
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! Bench: the paper's §III headline claim — ILMPQ end-to-end speedup over
+//! the fixed-point baseline (3.01x on XC7Z020, 3.65x on XC7Z045) — plus the
+//! per-layer lane-balance breakdown that explains *why* (the intra-layer
+//! point: both lanes busy in every layer; the inter-layer baseline idles
+//! its 8-bit pool through the middle of the network).
+//!
+//! ```sh
+//! cargo bench --bench speedup
+//! ```
+
+use ilmpq::experiments::table1;
+use ilmpq::fpga::sim::Bound;
+use ilmpq::fpga::{simulate, DeviceModel, Mode, NetConfig};
+use ilmpq::model::resnet18;
+use ilmpq::quant::Ratio;
+
+fn main() {
+    let net = resnet18();
+    println!("== §III headline speedups (simulated, ResNet-18) ==");
+    for (device, rows) in table1::run_all() {
+        let paper = if device.name == "xc7z020" { 3.01 } else { 3.65 };
+        let s = table1::speedup(&rows);
+        println!(
+            "{:<10} simulated {:.2}x   paper {:.2}x   rel-err {:>5.1}%",
+            device.name,
+            s,
+            paper,
+            (s - paper).abs() / paper * 100.0
+        );
+    }
+
+    // Why: per-layer breakdown for ILMPQ-2 on XC7Z045.
+    let device = DeviceModel::xc7z045();
+    let ratio = Ratio::parse("65:30:5").unwrap();
+    let cfg = NetConfig::from_ratio(&net, ratio, false, "ILMPQ-2");
+    let r = simulate(&net, &cfg, &device, Mode::IntraLayer);
+    println!("\n== per-layer lane balance: ILMPQ-2 on {} ==", device.name);
+    println!(
+        "{:<22} {:>9} {:>9} {:>9} {:>9} {:>9}  bound",
+        "layer", "fixed ms", "pot ms", "ddr ms", "buf ms", "total ms"
+    );
+    for t in &r.per_layer {
+        println!(
+            "{:<22} {:>9.3} {:>9.3} {:>9.3} {:>9.3} {:>9.3}  {:?}",
+            t.name,
+            t.fixed_s * 1e3,
+            t.pot_s * 1e3,
+            t.ddr_s * 1e3,
+            t.buffer_s * 1e3,
+            t.total_s * 1e3,
+            t.bound
+        );
+    }
+    let balanced = r
+        .per_layer
+        .iter()
+        .filter(|t| {
+            matches!(t.bound, Bound::FixedLane | Bound::PotLane)
+                && t.fixed_s > 0.0
+                && t.pot_s > 0.0
+                && (t.fixed_s / t.pot_s).max(t.pot_s / t.fixed_s) < 2.0
+        })
+        .count();
+    println!(
+        "\nlane-balanced layers (within 2x): {}/{} — the ratio search's goal",
+        balanced,
+        r.per_layer.len()
+    );
+
+    // Inter-layer waste: the same mix forced into the prior-work execution.
+    println!("\n== inter-layer idle waste (prior-work execution of fl8 configs) ==");
+    for device in DeviceModel::all() {
+        let fl8 = NetConfig::from_ratio(
+            &net,
+            Ratio::parse("0:100:0").unwrap(),
+            true,
+            "fixed fl8",
+        );
+        let inter = simulate(&net, &fl8, &device, Mode::InterLayer);
+        println!(
+            "{:<10} latency {:>7.1} ms, DSP idle {:>5.1}% (intra-layer ILMPQ: 0% by construction)",
+            device.name,
+            inter.latency_s * 1e3,
+            inter.dsp_idle_frac * 100.0
+        );
+    }
+}

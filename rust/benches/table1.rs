@@ -1,0 +1,71 @@
+//! Bench: regenerate Table I (both devices, all 8 rows each) and time the
+//! simulator itself. `harness = false` (no criterion offline) — the shared
+//! measurement loop lives in `ilmpq::util::stats::bench`.
+//!
+//! ```sh
+//! cargo bench --bench table1 [-- --device xc7z020]
+//! ```
+
+use ilmpq::experiments::table1;
+use ilmpq::fpga::DeviceModel;
+use ilmpq::model::resnet18;
+use ilmpq::util::stats::{bench, Summary};
+use ilmpq::util::Args;
+
+fn main() {
+    let args = Args::parse_env("bench table1", 1, &[("device", "xc7z020|xc7z045|all")]);
+    let which = args.str_or("device", "all");
+    let net = resnet18();
+    let devices = if which == "all" {
+        DeviceModel::all()
+    } else {
+        vec![DeviceModel::by_name(which).expect("unknown device")]
+    };
+
+    for device in devices {
+        let rows = table1::run_device(&device, &net);
+        println!("{}", table1::render(&device, &rows));
+        println!(
+            "headline speedup vs (1): {:.2}x   (paper: {})",
+            table1::speedup(&rows),
+            if device.name == "xc7z020" { "3.01x" } else { "3.65x" }
+        );
+        // Shape checks the bench asserts loudly (not a test, but the bench
+        // should scream if the reproduction regresses).
+        let max_tp = rows
+            .iter()
+            .map(|r| r.sim.throughput_gops)
+            .fold(0.0f64, f64::max);
+        let ilmpq_tp = rows
+            .iter()
+            .find(|r| r.cfg.label.starts_with("ILMPQ"))
+            .unwrap()
+            .sim
+            .throughput_gops;
+        assert!(
+            (ilmpq_tp - max_tp).abs() < 1e-9,
+            "REGRESSION: ILMPQ is no longer the fastest row on {}",
+            device.name
+        );
+
+        // Cell-level comparison table.
+        println!("\nper-row relative error vs paper (throughput):");
+        for r in &rows {
+            if let Some(err) = r.throughput_rel_err() {
+                println!("  {:<20} {:>6.1}%", r.cfg.label, err * 100.0);
+            }
+        }
+
+        // Time the simulator (the L3 hot path of the search loops).
+        let cfg = rows.last().unwrap().cfg.clone();
+        let nc = cfg.net_config(&net);
+        let samples = bench(3, 50, || {
+            let _ = ilmpq::fpga::simulate(&net, &nc, &device, cfg.mode);
+        });
+        println!(
+            "\nsimulate() on {}: {}\n",
+            device.name,
+            Summary::of(&samples)
+        );
+    }
+}

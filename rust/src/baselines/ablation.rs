@@ -1,0 +1,188 @@
+//! Ablation assignment policies (paper §II-C design-choice validation).
+//!
+//! The paper picks (a) 8-bit rows by Hessian top-eigenvalue and (b) PoT rows
+//! by low weight variance. The ablations replace each with a random pick so
+//! the benches can show both choices matter:
+//!
+//! * `random_bits` — random 5% of rows get 8-bit;
+//! * `random_schemes` — random PoT subset instead of variance-sorted;
+//! * `inverse_schemes` — *highest*-variance rows get PoT (the adversarial
+//!   assignment; should hurt the most, since PoT's resolution concentrates
+//!   near zero).
+
+use crate::quant::{assign, LayerMasks, Ratio};
+use crate::util::stats::variance_f32;
+use crate::util::Rng;
+
+/// Random 8-bit row pick (same count as the paper's policy).
+pub fn random_bits(rows: usize, frac8: f64, rng: &mut Rng) -> Vec<f32> {
+    let n8 = if frac8 <= 0.0 {
+        0
+    } else {
+        ((rows as f64 * frac8).round() as usize).max(1)
+    };
+    let mut idx: Vec<usize> = (0..rows).collect();
+    rng.shuffle(&mut idx);
+    let mut is8 = vec![0f32; rows];
+    for &i in idx.iter().take(n8) {
+        is8[i] = 1.0;
+    }
+    is8
+}
+
+/// Random PoT pick among 4-bit rows (same count as variance policy).
+pub fn random_schemes(
+    rows: usize,
+    is8: &[f32],
+    pot_share: f64,
+    rng: &mut Rng,
+) -> Vec<f32> {
+    let four_bit: Vec<usize> = (0..rows).filter(|&i| is8[i] < 0.5).collect();
+    let n_pot = (four_bit.len() as f64 * pot_share).round() as usize;
+    let mut idx = four_bit;
+    rng.shuffle(&mut idx);
+    let mut is_pot = vec![0f32; rows];
+    for &i in idx.iter().take(n_pot) {
+        is_pot[i] = 1.0;
+    }
+    is_pot
+}
+
+/// Adversarial: highest-variance rows get PoT.
+pub fn inverse_schemes(w_rows: &[Vec<f32>], is8: &[f32], pot_share: f64) -> Vec<f32> {
+    let rows = w_rows.len();
+    let four_bit: Vec<usize> = (0..rows).filter(|&i| is8[i] < 0.5).collect();
+    let n_pot = (four_bit.len() as f64 * pot_share).round() as usize;
+    let mut idx = four_bit;
+    idx.sort_by(|&a, &b| {
+        variance_f32(&w_rows[b])
+            .partial_cmp(&variance_f32(&w_rows[a]))
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+    let mut is_pot = vec![0f32; rows];
+    for &i in idx.iter().take(n_pot) {
+        is_pot[i] = 1.0;
+    }
+    is_pot
+}
+
+/// Assignment policy selector for the ablation benches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Paper: Hessian eigs for bits, low variance for PoT.
+    Paper,
+    /// Random bits, variance schemes.
+    RandomBits,
+    /// Paper bits, random schemes.
+    RandomSchemes,
+    /// Paper bits, inverse (high-variance) schemes.
+    InverseSchemes,
+}
+
+impl Policy {
+    pub fn all() -> [Policy; 4] {
+        [Policy::Paper, Policy::RandomBits, Policy::RandomSchemes, Policy::InverseSchemes]
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Policy::Paper => "paper (eig+variance)",
+            Policy::RandomBits => "random 8-bit rows",
+            Policy::RandomSchemes => "random PoT rows",
+            Policy::InverseSchemes => "inverse-variance PoT",
+        }
+    }
+
+    /// Build masks for one layer under this policy.
+    pub fn assign(
+        &self,
+        layer: &str,
+        w_rows: &[Vec<f32>],
+        eigs: &[f64],
+        ratio: Ratio,
+        rng: &mut Rng,
+    ) -> LayerMasks {
+        let rows = w_rows.len();
+        let is8 = match self {
+            Policy::RandomBits => random_bits(rows, ratio.frac8(), rng),
+            _ => assign::assign_bits(eigs, ratio.frac8()),
+        };
+        let is_pot = match self {
+            Policy::RandomSchemes => {
+                random_schemes(rows, &is8, ratio.pot_share_of_4bit(), rng)
+            }
+            Policy::InverseSchemes => {
+                inverse_schemes(w_rows, &is8, ratio.pot_share_of_4bit())
+            }
+            _ => assign::assign_schemes(w_rows, &is8, ratio.pot_share_of_4bit()),
+        };
+        LayerMasks { layer: layer.to_string(), is8, is_pot }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{ensure, forall};
+
+    #[test]
+    fn random_bits_count_matches_policy() {
+        let mut rng = Rng::new(1);
+        let is8 = random_bits(40, 0.05, &mut rng);
+        assert_eq!(is8.iter().filter(|&&v| v > 0.5).count(), 2);
+        assert_eq!(random_bits(40, 0.0, &mut rng).iter().sum::<f32>(), 0.0);
+    }
+
+    #[test]
+    fn inverse_picks_high_variance() {
+        let rows = vec![
+            vec![0.0, 0.01],  // low var
+            vec![-5.0, 5.0],  // high var
+            vec![0.0, 0.02],  // low var
+            vec![-4.0, 4.0],  // high var
+        ];
+        let is8 = vec![0.0; 4];
+        let ip = inverse_schemes(&rows, &is8, 0.5);
+        assert_eq!(ip, vec![0.0, 1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn prop_all_policies_same_counts() {
+        forall(
+            91,
+            48,
+            |r| {
+                let rows = r.range_usize(6, 48);
+                let data: Vec<Vec<f32>> = (0..rows)
+                    .map(|_| (0..8).map(|_| r.normal()).collect())
+                    .collect();
+                let eigs: Vec<f64> = (0..rows).map(|_| r.f64()).collect();
+                (data, eigs, r.next_u64())
+            },
+            |(data, eigs, seed)| {
+                let ratio = Ratio::new(60.0, 35.0, 5.0);
+                let counts: Vec<(usize, usize, usize)> = Policy::all()
+                    .iter()
+                    .map(|p| {
+                        let mut rng = Rng::new(*seed);
+                        p.assign("t", data, eigs, ratio, &mut rng).counts()
+                    })
+                    .collect();
+                for c in &counts[1..] {
+                    ensure(c == &counts[0], || format!("{counts:?}"))?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn policy_labels_unique() {
+        let labels: Vec<&str> = Policy::all().iter().map(|p| p.label()).collect();
+        let mut dedup = labels.clone();
+        dedup.dedup();
+        assert_eq!(labels.len(), 4);
+        assert_eq!(dedup.len(), 4);
+    }
+}

@@ -1,0 +1,8 @@
+//! Baseline quantization configurations — every non-ILMPQ row of Table I,
+//! plus the ablation policies (random bit assignment, random scheme
+//! assignment) used to validate the paper's §II-C design choices.
+
+pub mod ablation;
+pub mod table1;
+
+pub use table1::{accuracy_configs, hw_configs, AccuracyConfig, HwConfig};

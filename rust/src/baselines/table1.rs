@@ -1,0 +1,203 @@
+//! The Table-I configuration matrix: 8 prior-work rows + 2 ILMPQ rows.
+//!
+//! Two views of the same matrix:
+//! * `hw_configs(device)` — `NetConfig`s over the ImageNet ResNet-18
+//!   geometry for the performance simulator (Table I's right columns);
+//! * `accuracy_configs()` — mask-building recipes for the QAT accuracy runs
+//!   on the AOT TinyResNet (Table I's accuracy columns, ImageNet substitute).
+
+use crate::fpga::sim::NetConfig;
+use crate::fpga::Mode;
+use crate::model::Network;
+use crate::quant::{Ratio, Scheme};
+
+/// One hardware row of Table I.
+#[derive(Debug, Clone)]
+pub struct HwConfig {
+    /// Table row label, e.g. "(1) Fixed".
+    pub label: String,
+    pub ratio: Ratio,
+    pub first_last_8bit: bool,
+    /// Execution mode: prior-work rows with separate 8-bit first/last
+    /// engines run inter-layer; fully-uniform rows run intra-layer.
+    pub mode: Mode,
+    /// Paper-reported (throughput GOP/s, latency ms), if the paper filled
+    /// this cell for the device — used by EXPERIMENTS.md comparisons.
+    pub paper: Option<(f64, f64)>,
+    /// Paper-reported (lut%, dsp%) utilization for the device.
+    pub paper_util: Option<(f64, f64)>,
+}
+
+fn hw(
+    label: &str,
+    ratio: &str,
+    fl8: bool,
+    paper: Option<(f64, f64)>,
+    paper_util: Option<(f64, f64)>,
+) -> HwConfig {
+    HwConfig {
+        label: label.to_string(),
+        ratio: Ratio::parse(ratio).unwrap(),
+        first_last_8bit: fl8,
+        mode: if fl8 { Mode::InterLayer } else { Mode::IntraLayer },
+        paper,
+        paper_util,
+    }
+}
+
+/// Hardware rows for one device ("xc7z020" | "xc7z045"), paper cells filled
+/// from Table I.
+pub fn hw_configs(device: &str) -> Vec<HwConfig> {
+    match device {
+        "xc7z020" => vec![
+            hw("(1) Fixed fl8", "0:100:0", true, Some((29.6, 122.6)), Some((49.0, 100.0))),
+            hw("(2) Fixed", "0:100:0", false, Some((36.5, 99.3)), Some((45.0, 100.0))),
+            hw("(3) PoT fl8", "100:0:0", true, Some((62.4, 58.1)), Some((51.0, 100.0))),
+            hw("(4) PoT", "100:0:0", false, Some((72.2, 50.2)), Some((57.0, 12.0))),
+            hw("(5) PoT+Fixed fl8", "50:50:0", true, Some((50.3, 72.0)), Some((71.0, 100.0))),
+            hw("(6) PoT+Fixed", "50:50:0", false, Some((75.8, 47.8)), Some((66.0, 100.0))),
+            hw("(7) PoT+Fixed fl8", "60:40:0", true, Some((57.0, 63.6)), Some((80.0, 100.0))),
+            hw("ILMPQ-1", "60:35:5", false, Some((89.0, 40.7)), Some((82.0, 100.0))),
+        ],
+        "xc7z045" => vec![
+            hw("(1) Fixed fl8", "0:100:0", true, Some((115.6, 31.4)), Some((21.0, 100.0))),
+            hw("(2) Fixed", "0:100:0", false, Some((142.7, 25.4)), Some((24.0, 100.0))),
+            hw("(3) PoT fl8", "100:0:0", true, Some((290.5, 12.5)), Some((40.0, 100.0))),
+            hw("(4) PoT", "100:0:0", false, Some((352.6, 10.3)), Some((44.0, 3.0))),
+            hw("(5) PoT+Fixed fl8", "50:50:0", true, Some((196.8, 18.4)), Some((42.0, 100.0))),
+            hw("(6) PoT+Fixed", "50:50:0", false, Some((296.3, 12.2)), Some((38.0, 100.0))),
+            hw("(8) PoT+Fixed fl8", "67:33:0", true, Some((245.8, 14.8)), Some((61.0, 100.0))),
+            hw("ILMPQ-2", "65:30:5", false, Some((421.1, 8.6)), Some((65.0, 100.0))),
+        ],
+        other => panic!("unknown device {other}"),
+    }
+}
+
+impl HwConfig {
+    pub fn net_config(&self, net: &Network) -> NetConfig {
+        NetConfig::from_ratio(net, self.ratio, self.first_last_8bit, &self.label)
+    }
+}
+
+/// One accuracy row of Table I (device-independent).
+#[derive(Debug, Clone)]
+pub struct AccuracyConfig {
+    pub label: String,
+    /// Ratio name in the manifest `default_masks` (None = build in Rust
+    /// with `first_last_8bit`).
+    pub ratio: Ratio,
+    pub first_last_8bit: bool,
+    /// Uniform scheme shortcut for the fl8 baselines' middle layers.
+    pub uniform_middle: Option<Scheme>,
+    /// Paper-reported (top-1 %, top-5 %).
+    pub paper_top1: f64,
+    pub paper_top5: f64,
+}
+
+fn acc(
+    label: &str,
+    ratio: &str,
+    fl8: bool,
+    top1: f64,
+    top5: f64,
+) -> AccuracyConfig {
+    AccuracyConfig {
+        label: label.to_string(),
+        ratio: Ratio::parse(ratio).unwrap(),
+        first_last_8bit: fl8,
+        uniform_middle: None,
+        paper_top1: top1,
+        paper_top5: top5,
+    }
+}
+
+/// All ten accuracy rows.
+pub fn accuracy_configs() -> Vec<AccuracyConfig> {
+    vec![
+        acc("(1) Fixed fl8", "0:100:0", true, 69.72, 88.67),
+        acc("(2) Fixed", "0:100:0", false, 68.66, 87.54),
+        acc("(3) PoT fl8", "100:0:0", true, 68.20, 87.14),
+        acc("(4) PoT", "100:0:0", false, 67.11, 85.93),
+        acc("(5) PoT+Fixed fl8", "50:50:0", true, 68.94, 88.66),
+        acc("(6) PoT+Fixed", "50:50:0", false, 67.98, 86.75),
+        acc("(7) PoT+Fixed fl8", "60:40:0", true, 68.53, 88.47),
+        acc("(8) PoT+Fixed fl8", "67:33:0", true, 68.46, 88.22),
+        acc("ILMPQ-1", "60:35:5", false, 70.66, 89.53),
+        acc("ILMPQ-2", "65:30:5", false, 70.73, 89.62),
+    ]
+}
+
+/// Manifest ratio-name for a config (the aot.py default-mask key), when the
+/// config's masks are the plain intra-layer assignment.
+pub fn manifest_ratio_name(ratio: &Ratio) -> Option<&'static str> {
+    let label = ratio.label();
+    match label.as_str() {
+        "0:100:0" => Some("fixed4"),
+        "100:0:0" => Some("pot4"),
+        "50:50:0" => Some("mixed_50_50"),
+        "60:40:0" => Some("mixed_60_40"),
+        "67:33:0" => Some("mixed_67_33"),
+        "60:35:5" => Some("ilmpq1"),
+        "65:30:5" => Some("ilmpq2"),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::resnet18;
+
+    #[test]
+    fn both_devices_have_eight_rows() {
+        assert_eq!(hw_configs("xc7z020").len(), 8);
+        assert_eq!(hw_configs("xc7z045").len(), 8);
+    }
+
+    #[test]
+    fn ilmpq_rows_use_intra_layer_mode() {
+        for d in ["xc7z020", "xc7z045"] {
+            let rows = hw_configs(d);
+            let ilmpq = rows.last().unwrap();
+            assert!(ilmpq.label.starts_with("ILMPQ"));
+            assert_eq!(ilmpq.mode, Mode::IntraLayer);
+            assert!(!ilmpq.first_last_8bit);
+            assert_eq!(ilmpq.ratio.fixed8, 5.0);
+        }
+    }
+
+    #[test]
+    fn fl8_rows_use_inter_layer_mode() {
+        for row in hw_configs("xc7z020").iter().filter(|r| r.first_last_8bit) {
+            assert_eq!(row.mode, Mode::InterLayer, "{}", row.label);
+        }
+    }
+
+    #[test]
+    fn net_configs_build_on_resnet18() {
+        let net = resnet18();
+        for row in hw_configs("xc7z045") {
+            let cfg = row.net_config(&net);
+            assert_eq!(cfg.masks.len(), net.layers.len(), "{}", row.label);
+        }
+    }
+
+    #[test]
+    fn accuracy_rows_match_paper_ordering() {
+        let rows = accuracy_configs();
+        assert_eq!(rows.len(), 10);
+        // ILMPQ-2 has the best paper top-1.
+        let best = rows.iter().map(|r| r.paper_top1).fold(0.0, f64::max);
+        assert_eq!(best, 70.73);
+        // Fully-4-bit PoT is the worst.
+        let worst = rows.iter().map(|r| r.paper_top1).fold(100.0, f64::min);
+        assert_eq!(worst, 67.11);
+    }
+
+    #[test]
+    fn manifest_names_cover_all_plain_ratios() {
+        for row in accuracy_configs().iter().filter(|r| !r.first_last_8bit) {
+            assert!(manifest_ratio_name(&row.ratio).is_some(), "{}", row.label);
+        }
+    }
+}

@@ -1,0 +1,318 @@
+//! Dynamic batcher: groups inference requests to match the AOT batch sizes.
+//!
+//! PJRT executables have static shapes, so the serving path ships several
+//! `infer_b{N}` artifacts (N = 1, 8, 64 by default) and the batcher picks,
+//! for each dispatch, the smallest artifact that covers the queue — padding
+//! the tail slots when the deadline forces a partial batch. Policy:
+//!
+//! * dispatch immediately once `max_batch` requests are queued;
+//! * otherwise dispatch whatever is queued when the *oldest* request has
+//!   waited `max_wait` (the latency SLO knob);
+//! * always use the smallest covering artifact to minimize padded work.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// Batching policy parameters.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// Available artifact batch sizes, ascending (from the manifest).
+    pub sizes: Vec<usize>,
+    /// Max time the oldest request may wait before a partial dispatch.
+    pub max_wait: Duration,
+}
+
+impl BatchPolicy {
+    pub fn new(mut sizes: Vec<usize>, max_wait: Duration) -> BatchPolicy {
+        assert!(!sizes.is_empty(), "need at least one batch size");
+        sizes.sort_unstable();
+        BatchPolicy { sizes, max_wait }
+    }
+
+    pub fn max_batch(&self) -> usize {
+        *self.sizes.last().unwrap()
+    }
+
+    /// Smallest artifact size covering `n` requests (or the max size).
+    pub fn cover(&self, n: usize) -> usize {
+        for &s in &self.sizes {
+            if s >= n {
+                return s;
+            }
+        }
+        self.max_batch()
+    }
+
+    /// Largest artifact size not exceeding `n` (sizes always include the
+    /// smallest, so this is well-defined for n >= 1).
+    pub fn floor_cover(&self, n: usize) -> usize {
+        let mut best = self.sizes[0];
+        for &s in &self.sizes {
+            if s <= n {
+                best = s;
+            }
+        }
+        best
+    }
+
+    /// Decide whether to dispatch now. `queue_len` pending requests, the
+    /// oldest enqueued at `oldest`. Returns the number of requests to take
+    /// (0 = keep waiting).
+    ///
+    /// Deadline dispatches take the *floor* artifact size when the queue is
+    /// deep enough (padding a 64-slot batch to ship 9 requests wastes more
+    /// compute than shipping a full 8 and re-arming the deadline for the
+    /// remainder); shallow queues ship whole with padding.
+    pub fn decide(&self, queue_len: usize, oldest: Option<Instant>, now: Instant) -> usize {
+        if queue_len == 0 {
+            return 0;
+        }
+        if queue_len >= self.max_batch() {
+            return self.max_batch();
+        }
+        match oldest {
+            Some(t) if now.duration_since(t) >= self.max_wait => {
+                let floor = self.floor_cover(queue_len);
+                if floor > self.sizes[0] {
+                    floor
+                } else {
+                    queue_len
+                }
+            }
+            _ => 0,
+        }
+    }
+}
+
+/// A queued request, generic in payload (the server instantiates with the
+/// image + reply channel; tests use unit payloads).
+#[derive(Debug)]
+pub struct Pending<T> {
+    pub payload: T,
+    pub enqueued: Instant,
+}
+
+/// The batch assembled for one dispatch.
+#[derive(Debug)]
+pub struct Assembled<T> {
+    pub items: Vec<Pending<T>>,
+    /// Artifact batch size to run (>= items.len()); the difference is
+    /// padding.
+    pub exec_size: usize,
+}
+
+impl<T> Assembled<T> {
+    pub fn padded_slots(&self) -> usize {
+        self.exec_size - self.items.len()
+    }
+}
+
+/// FIFO queue + policy = the batcher.
+#[derive(Debug)]
+pub struct Batcher<T> {
+    pub policy: BatchPolicy,
+    queue: VecDeque<Pending<T>>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(policy: BatchPolicy) -> Batcher<T> {
+        Batcher { policy, queue: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, payload: T, now: Instant) {
+        self.queue.push_back(Pending { payload, enqueued: now });
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Time until the oldest request hits its deadline (None if empty).
+    pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
+        self.queue.front().map(|p| {
+            self.policy
+                .max_wait
+                .saturating_sub(now.duration_since(p.enqueued))
+        })
+    }
+
+    /// Try to assemble a batch under the policy.
+    pub fn try_assemble(&mut self, now: Instant) -> Option<Assembled<T>> {
+        let take = self
+            .policy
+            .decide(self.queue.len(), self.queue.front().map(|p| p.enqueued), now);
+        if take == 0 {
+            return None;
+        }
+        let items: Vec<Pending<T>> = self.queue.drain(..take).collect();
+        let exec_size = self.policy.cover(items.len());
+        Some(Assembled { items, exec_size })
+    }
+
+    /// Drain everything regardless of deadline (shutdown path).
+    pub fn flush(&mut self) -> Option<Assembled<T>> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let take = self.queue.len().min(self.policy.max_batch());
+        let items: Vec<Pending<T>> = self.queue.drain(..take).collect();
+        let exec_size = self.policy.cover(items.len());
+        Some(Assembled { items, exec_size })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{ensure, forall};
+    use crate::util::Rng;
+
+    fn policy(ms: u64) -> BatchPolicy {
+        BatchPolicy::new(vec![1, 8, 64], Duration::from_millis(ms))
+    }
+
+    #[test]
+    fn cover_picks_smallest() {
+        let p = policy(10);
+        assert_eq!(p.cover(1), 1);
+        assert_eq!(p.cover(2), 8);
+        assert_eq!(p.cover(8), 8);
+        assert_eq!(p.cover(9), 64);
+        assert_eq!(p.cover(200), 64);
+    }
+
+    #[test]
+    fn dispatch_on_full_batch() {
+        let now = Instant::now();
+        let mut b: Batcher<usize> = Batcher::new(policy(1_000));
+        for i in 0..64 {
+            b.push(i, now);
+        }
+        let a = b.try_assemble(now).expect("full batch dispatches immediately");
+        assert_eq!(a.items.len(), 64);
+        assert_eq!(a.exec_size, 64);
+        assert_eq!(a.padded_slots(), 0);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn waits_below_deadline() {
+        let now = Instant::now();
+        let mut b: Batcher<usize> = Batcher::new(policy(1_000));
+        b.push(1, now);
+        assert!(b.try_assemble(now).is_none());
+    }
+
+    #[test]
+    fn deadline_forces_partial_with_padding() {
+        let start = Instant::now();
+        let mut b: Batcher<usize> = Batcher::new(policy(5));
+        b.push(1, start);
+        b.push(2, start);
+        b.push(3, start);
+        let later = start + Duration::from_millis(6);
+        let a = b.try_assemble(later).expect("deadline dispatch");
+        assert_eq!(a.items.len(), 3);
+        assert_eq!(a.exec_size, 8);
+        assert_eq!(a.padded_slots(), 5);
+    }
+
+    #[test]
+    fn deadline_takes_floor_when_deep() {
+        // 9 queued at deadline: ship a full 8 (no padding), leave 1.
+        let start = Instant::now();
+        let mut b: Batcher<usize> = Batcher::new(policy(5));
+        for i in 0..9 {
+            b.push(i, start);
+        }
+        let later = start + Duration::from_millis(6);
+        let a = b.try_assemble(later).expect("deadline dispatch");
+        assert_eq!(a.items.len(), 8);
+        assert_eq!(a.exec_size, 8);
+        assert_eq!(a.padded_slots(), 0);
+        assert_eq!(b.len(), 1);
+        // The remainder ships immediately on the next poll (already late).
+        let a2 = b.try_assemble(later).expect("remainder");
+        assert_eq!(a2.items.len(), 1);
+        assert_eq!(a2.exec_size, 1);
+    }
+
+    #[test]
+    fn floor_cover_values() {
+        let p = policy(10);
+        assert_eq!(p.floor_cover(1), 1);
+        assert_eq!(p.floor_cover(7), 1);
+        assert_eq!(p.floor_cover(8), 8);
+        assert_eq!(p.floor_cover(63), 8);
+        assert_eq!(p.floor_cover(200), 64);
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let now = Instant::now();
+        let mut b: Batcher<usize> = Batcher::new(policy(0));
+        for i in 0..5 {
+            b.push(i, now);
+        }
+        let a = b.try_assemble(now + Duration::from_millis(1)).unwrap();
+        let got: Vec<usize> = a.items.iter().map(|p| p.payload).collect();
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn flush_drains_all() {
+        let now = Instant::now();
+        let mut b: Batcher<usize> = Batcher::new(policy(10_000));
+        for i in 0..10 {
+            b.push(i, now);
+        }
+        let a = b.flush().unwrap();
+        assert_eq!(a.items.len(), 10);
+        assert_eq!(a.exec_size, 64);
+        assert!(b.flush().is_none());
+    }
+
+    #[test]
+    fn prop_assembled_never_exceeds_max_and_covers() {
+        forall(
+            81,
+            128,
+            |r: &mut Rng| (r.range_usize(0, 200), r.bool(0.5)),
+            |&(n, expired)| {
+                let now = Instant::now();
+                let mut b: Batcher<usize> = Batcher::new(policy(1_000));
+                let enq = if expired {
+                    now.checked_sub(Duration::from_secs(2)).unwrap_or(now)
+                } else {
+                    now
+                };
+                for i in 0..n {
+                    b.push(i, enq);
+                }
+                if let Some(a) = b.try_assemble(now) {
+                    ensure(a.items.len() <= 64, || "overfull batch".into())?;
+                    ensure(a.exec_size >= a.items.len(), || "exec < items".into())?;
+                    ensure(
+                        a.exec_size == b.policy.cover(a.items.len()),
+                        || "not smallest cover".into(),
+                    )?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn time_to_deadline_counts_down() {
+        let start = Instant::now();
+        let mut b: Batcher<usize> = Batcher::new(policy(100));
+        assert!(b.time_to_deadline(start).is_none());
+        b.push(1, start);
+        let d = b.time_to_deadline(start + Duration::from_millis(40)).unwrap();
+        assert!(d <= Duration::from_millis(60));
+    }
+}

@@ -1,0 +1,145 @@
+//! Serving metrics: counters + latency recorder with percentile snapshots.
+//!
+//! Thread-safe (shared via `Arc`); the server threads record, the metrics
+//! endpoint/bench snapshots. Latencies are kept as raw samples (bounded
+//! ring) — with the request volumes here that is cheaper and more exact
+//! than HDR buckets.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::stats::Summary;
+
+const MAX_SAMPLES: usize = 65_536;
+
+/// One named latency track (e.g. queue wait, execute, end-to-end).
+#[derive(Default)]
+pub struct LatencyTrack {
+    samples: Mutex<Vec<f64>>,
+}
+
+impl LatencyTrack {
+    pub fn record(&self, seconds: f64) {
+        let mut s = self.samples.lock().unwrap();
+        if s.len() >= MAX_SAMPLES {
+            // Drop oldest half — keeps recent behaviour without unbounded RAM.
+            let keep = s.split_off(MAX_SAMPLES / 2);
+            *s = keep;
+        }
+        s.push(seconds);
+    }
+
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.samples.lock().unwrap())
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.lock().unwrap().len()
+    }
+}
+
+/// All serving-side metrics.
+#[derive(Default)]
+pub struct Metrics {
+    pub requests_in: AtomicU64,
+    pub requests_done: AtomicU64,
+    pub requests_rejected: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_requests: AtomicU64,
+    pub padded_slots: AtomicU64,
+    pub queue_wait: LatencyTrack,
+    pub execute: LatencyTrack,
+    pub e2e: LatencyTrack,
+    /// Simulated FPGA time attached to each batch (codesign view).
+    pub sim_fpga: LatencyTrack,
+}
+
+impl Metrics {
+    pub fn inc(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(counter: &AtomicU64, v: u64) {
+        counter.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn get(counter: &AtomicU64) -> u64 {
+        counter.load(Ordering::Relaxed)
+    }
+
+    /// Mean occupancy of executed batches (useful slots / total slots).
+    pub fn batch_occupancy(&self) -> f64 {
+        let reqs = Self::get(&self.batched_requests) as f64;
+        let padded = Self::get(&self.padded_slots) as f64;
+        if reqs + padded == 0.0 {
+            return 0.0;
+        }
+        reqs / (reqs + padded)
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests: in={} done={} rejected={}\n\
+             batches: {} (occupancy {:.1}%)\n\
+             queue_wait: {}\nexecute:    {}\ne2e:        {}\nsim_fpga:   {}",
+            Self::get(&self.requests_in),
+            Self::get(&self.requests_done),
+            Self::get(&self.requests_rejected),
+            Self::get(&self.batches),
+            self.batch_occupancy() * 100.0,
+            self.queue_wait.summary(),
+            self.execute.summary(),
+            self.e2e.summary(),
+            self.sim_fpga.summary(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_occupancy() {
+        let m = Metrics::default();
+        Metrics::inc(&m.requests_in);
+        Metrics::add(&m.batched_requests, 6);
+        Metrics::add(&m.padded_slots, 2);
+        assert_eq!(Metrics::get(&m.requests_in), 1);
+        assert!((m.batch_occupancy() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn occupancy_empty_is_zero() {
+        assert_eq!(Metrics::default().batch_occupancy(), 0.0);
+    }
+
+    #[test]
+    fn latency_track_summary() {
+        let t = LatencyTrack::default();
+        for i in 1..=100 {
+            t.record(i as f64 / 1000.0);
+        }
+        let s = t.summary();
+        assert_eq!(s.n, 100);
+        assert!((s.p50 - 0.0505).abs() < 1e-3);
+        assert_eq!(t.count(), 100);
+    }
+
+    #[test]
+    fn latency_track_bounds_memory() {
+        let t = LatencyTrack::default();
+        for i in 0..(MAX_SAMPLES + 10) {
+            t.record(i as f64);
+        }
+        assert!(t.count() <= MAX_SAMPLES / 2 + 11);
+    }
+
+    #[test]
+    fn report_renders() {
+        let m = Metrics::default();
+        m.e2e.record(0.001);
+        let r = m.report();
+        assert!(r.contains("requests:") && r.contains("e2e:"));
+    }
+}

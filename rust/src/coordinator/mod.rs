@@ -1,0 +1,20 @@
+//! Layer-3 coordinator: the paper's system contribution.
+//!
+//! * `ratio_search` — the offline PoT:Fixed mixing-ratio sweep (§II-B);
+//! * `sensitivity` — on-device per-filter Hessian power iteration (§II-C);
+//! * `trainer` — the QAT loop over the AOT `train_step` artifact;
+//! * `batcher`/`server` — inference serving with dynamic batching over the
+//!   fixed-shape `infer_b{N}` executables, with the FPGA-sim timing overlay;
+//! * `metrics` — counters + latency percentiles.
+
+pub mod batcher;
+pub mod metrics;
+pub mod ratio_search;
+pub mod sensitivity;
+pub mod server;
+pub mod trainer;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use metrics::Metrics;
+pub use server::{Request, Response, ServeConfig, Server};
+pub use trainer::Trainer;

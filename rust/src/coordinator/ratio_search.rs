@@ -1,0 +1,118 @@
+//! Offline mixing-ratio search (paper §II-B: "the actual mixing ratio ...
+//! can be determined offline by examining FPGA throughput").
+//!
+//! Sweeps the PoT share of the 4-bit rows (the Fixed-8 share is pinned at
+//! the paper's 5%) and simulates end-to-end throughput on the target device;
+//! the optimum is where the DSP lane and the LUT lane finish together in
+//! every layer. This is the procedure that produced 60:35:5 on XC7Z020 and
+//! 65:30:5 on XC7Z045 in the paper.
+
+use crate::fpga::{simulate, DeviceModel, Mode, NetConfig};
+use crate::model::Network;
+use crate::quant::Ratio;
+
+/// One sweep point.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub ratio: Ratio,
+    pub throughput_gops: f64,
+    pub latency_s: f64,
+}
+
+/// Search result: the optimum + the full sweep (for the bench output).
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    pub device: String,
+    pub best: SweepPoint,
+    pub sweep: Vec<SweepPoint>,
+}
+
+/// Sweep PoT percentage `0..=max_pot` (step `step`) with Fixed-8 fixed at
+/// `fixed8_pct`, simulating `net` on `device` in intra-layer mode.
+pub fn search(
+    net: &Network,
+    device: &DeviceModel,
+    fixed8_pct: f64,
+    step: f64,
+    max_pot: f64,
+) -> SearchResult {
+    assert!(step > 0.0);
+    let mut sweep = Vec::new();
+    let mut pot = 0.0;
+    while pot <= max_pot + 1e-9 {
+        let ratio = Ratio::new(pot, 100.0 - fixed8_pct - pot, fixed8_pct);
+        let cfg = NetConfig::from_ratio(net, ratio, false, &ratio.label());
+        let r = simulate(net, &cfg, device, Mode::IntraLayer);
+        sweep.push(SweepPoint {
+            ratio,
+            throughput_gops: r.throughput_gops,
+            latency_s: r.latency_s,
+        });
+        pot += step;
+    }
+    let best = sweep
+        .iter()
+        .cloned()
+        .max_by(|a, b| a.throughput_gops.partial_cmp(&b.throughput_gops).unwrap())
+        .expect("non-empty sweep");
+    SearchResult { device: device.name.to_string(), best, sweep }
+}
+
+/// The paper's search: 5% Fixed-8, PoT swept at 1% granularity.
+pub fn search_default(net: &Network, device: &DeviceModel) -> SearchResult {
+    search(net, device, 5.0, 1.0, 95.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::resnet18;
+
+    #[test]
+    fn optimum_is_interior_and_pot_heavy() {
+        // The LUT lane out-muscles the DSP lane on both devices, so the
+        // optimum must be PoT-heavy (paper: 60% and 65%) — but not 0 or 95.
+        for d in DeviceModel::all() {
+            let r = search(&resnet18(), &d, 5.0, 5.0, 95.0);
+            let pot = r.best.ratio.pot4;
+            assert!(
+                (40.0..90.0).contains(&pot),
+                "{}: optimum at {pot}%",
+                d.name
+            );
+        }
+    }
+
+    #[test]
+    fn z045_optimum_at_least_z020() {
+        // Z045 has more LUT bandwidth relative to its DSP count
+        // (paper: 65% vs 60%).
+        let z20 = search(&resnet18(), &DeviceModel::xc7z020(), 5.0, 1.0, 95.0);
+        let z45 = search(&resnet18(), &DeviceModel::xc7z045(), 5.0, 1.0, 95.0);
+        assert!(
+            z45.best.ratio.pot4 >= z20.best.ratio.pot4 - 2.0,
+            "z45 {} vs z20 {}",
+            z45.best.ratio.pot4,
+            z20.best.ratio.pot4
+        );
+    }
+
+    #[test]
+    fn sweep_is_unimodalish_around_best() {
+        // Throughput should fall off on both sides of the optimum (balance
+        // argument) — check the endpoints are strictly worse.
+        let r = search(&resnet18(), &DeviceModel::xc7z045(), 5.0, 5.0, 95.0);
+        let first = r.sweep.first().unwrap().throughput_gops;
+        let last = r.sweep.last().unwrap().throughput_gops;
+        assert!(r.best.throughput_gops > first * 1.05);
+        assert!(r.best.throughput_gops > last * 1.05);
+    }
+
+    #[test]
+    fn best_is_max_of_sweep() {
+        let r = search(&resnet18(), &DeviceModel::xc7z020(), 5.0, 10.0, 90.0);
+        for p in &r.sweep {
+            assert!(p.throughput_gops <= r.best.throughput_gops + 1e-9);
+        }
+    }
+}

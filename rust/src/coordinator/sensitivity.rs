@@ -1,0 +1,169 @@
+//! On-device per-filter Hessian sensitivity (paper §II-C step 1) from Rust.
+//!
+//! Blockwise power iteration on the AOT `hessian_hvp` artifact — the same
+//! algorithm as `python/compile/hessian.py` (one HVP per iteration covers
+//! every filter; per-row renormalization between iterations; per-row
+//! Rayleigh quotient at the end) so the coordinator can re-derive precision
+//! assignments without Python, e.g. after on-device fine-tuning.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::quant::gemmview::{from_gemm_rows, gemm_rows};
+use crate::runtime::{HostTensor, Runtime};
+use crate::util::Rng;
+
+/// Per-layer eigenvalue estimates keyed by layer name.
+pub type Eigs = BTreeMap<String, Vec<f64>>;
+
+fn renorm_rows(t: &HostTensor) -> HostTensor {
+    let mut rows = gemm_rows(t);
+    for row in rows.iter_mut() {
+        let norm = row.iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt();
+        let norm = norm.max(1e-12) as f32;
+        for v in row.iter_mut() {
+            *v /= norm;
+        }
+    }
+    from_gemm_rows(&rows, &t.shape)
+}
+
+fn rayleigh_rows(v: &HostTensor, hv: &HostTensor) -> Vec<f64> {
+    let vr = gemm_rows(v);
+    let hr = gemm_rows(hv);
+    vr.iter()
+        .zip(&hr)
+        .map(|(a, b)| a.iter().zip(b).map(|(x, y)| *x as f64 * *y as f64).sum())
+        .collect()
+}
+
+/// Estimate the top eigenvalue of each filter's Hessian block.
+///
+/// `params` must be in AOT order; `iters` power iterations (6-8 suffice —
+/// the assignment only needs the *ranking*). Data comes from the manifest's
+/// train split (first `hvp_batch` samples, matching aot.py's default-mask
+/// computation).
+pub fn filter_eigs(
+    rt: &Runtime,
+    params: &[HostTensor],
+    iters: usize,
+    seed: u64,
+) -> Result<Eigs> {
+    let m = &rt.manifest;
+    let qnames: Vec<&str> =
+        m.quantized_layers.iter().map(|(n, _, _)| n.as_str()).collect();
+    let (x_train, y_train) = m.data.load_train()?;
+    let b = m.hvp_batch;
+    let img = m.data.image_elems();
+    let x = HostTensor::f32(
+        vec![b, m.data.height, m.data.width, m.data.channels],
+        x_train[..b * img].to_vec(),
+    );
+    let y = HostTensor::i32(vec![b], y_train[..b].to_vec());
+
+    let mut rng = Rng::new(seed);
+    // Init: per-row-normalized gaussian on quantized layers, zeros elsewhere.
+    let mut v: Vec<HostTensor> = m
+        .params
+        .iter()
+        .zip(params)
+        .map(|((name, shape), _)| {
+            if qnames.contains(&name.as_str()) {
+                let n: usize = shape.iter().product();
+                let mut data = vec![0f32; n];
+                rng.fill_normal(&mut data, 1.0);
+                renorm_rows(&HostTensor::f32(shape.clone(), data))
+            } else {
+                HostTensor::zeros(shape.clone())
+            }
+        })
+        .collect();
+
+    let run_hvp = |v: &[HostTensor]| -> Result<Vec<HostTensor>> {
+        let mut inputs = Vec::with_capacity(2 * params.len() + 2);
+        inputs.extend(params.iter().cloned());
+        inputs.extend(v.iter().cloned());
+        inputs.push(x.clone());
+        inputs.push(y.clone());
+        rt.run("hessian_hvp", &inputs)
+    };
+
+    for _ in 0..iters {
+        let hv = run_hvp(&v)?;
+        v = m
+            .params
+            .iter()
+            .zip(hv)
+            .map(|((name, shape), h)| {
+                if qnames.contains(&name.as_str()) {
+                    renorm_rows(&h)
+                } else {
+                    HostTensor::zeros(shape.clone())
+                }
+            })
+            .collect();
+    }
+    let hv = run_hvp(&v)?;
+
+    let mut eigs = Eigs::new();
+    for (i, (name, _)) in m.params.iter().enumerate() {
+        if qnames.contains(&name.as_str()) {
+            eigs.insert(name.clone(), rayleigh_rows(&v[i], &hv[i]));
+        }
+    }
+    Ok(eigs)
+}
+
+/// Spearman-style rank agreement between two eigenvalue vectors — used by
+/// tests to compare the Rust power iteration against the Python one stored
+/// in the manifest (exact values differ by probe randomness; ranking of the
+/// top filters is what the assignment consumes).
+pub fn top_k_overlap(a: &[f64], b: &[f64], k: usize) -> f64 {
+    if a.len() != b.len() || a.is_empty() {
+        return 0.0;
+    }
+    let top = |v: &[f64]| -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..v.len()).collect();
+        idx.sort_by(|&p, &q| v[q].partial_cmp(&v[p]).unwrap().then(p.cmp(&q)));
+        idx.truncate(k);
+        idx
+    };
+    let (ta, tb) = (top(a), top(b));
+    let hits = ta.iter().filter(|i| tb.contains(i)).count();
+    hits as f64 / k as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renorm_makes_unit_rows() {
+        let t = HostTensor::f32(vec![2, 3], vec![3., 0., 4., 0., 5., 12.]);
+        let n = renorm_rows(&t);
+        let rows = gemm_rows(&n);
+        for row in rows {
+            let norm: f32 = row.iter().map(|v| v * v).sum::<f32>().sqrt();
+            assert!((norm - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn rayleigh_on_diagonal_matrix() {
+        // v = e1 per row, hv = 2*v  ->  eigenvalue 2 per row.
+        let v = HostTensor::f32(vec![2, 2], vec![1., 0., 0., 1.]);
+        let hv = HostTensor::f32(vec![2, 2], vec![2., 0., 0., 2.]);
+        assert_eq!(rayleigh_rows(&v, &hv), vec![2.0, 2.0]);
+    }
+
+    #[test]
+    fn top_k_overlap_metrics() {
+        let a = vec![5.0, 1.0, 4.0, 0.1];
+        let b = vec![4.9, 0.9, 4.2, 0.2];
+        assert_eq!(top_k_overlap(&a, &b, 2), 1.0);
+        let c = vec![0.0, 9.0, 0.0, 9.1];
+        assert_eq!(top_k_overlap(&a, &c, 2), 0.0);
+        assert_eq!(top_k_overlap(&a, &b[..2].to_vec(), 2), 0.0); // len mismatch
+    }
+}

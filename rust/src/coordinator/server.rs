@@ -1,0 +1,342 @@
+//! The serving loop: router + dynamic batcher + worker pool over PJRT.
+//!
+//! Architecture (threads + channels; the sandbox has no tokio, and the
+//! workload — CPU-bound PJRT executions — wants a small fixed pool anyway):
+//!
+//! ```text
+//!   clients ──submit──▶ router/batcher thread ──Batch──▶ worker 0..N-1
+//!                        (Batcher<Request>)               │  PJRT execute
+//!   clients ◀──reply channel per request──────────────────┘  + FPGA-sim
+//! ```
+//!
+//! Every executed batch also gets a *simulated FPGA latency* from the
+//! performance model (the codesign view: numerics from XLA-CPU, timing from
+//! the Zynq model) so the serving benches can report both.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::batcher::{Assembled, BatchPolicy, Batcher};
+use super::metrics::Metrics;
+use crate::fpga::{simulate, DeviceModel, Mode, NetConfig, SimReport};
+use crate::model::zoo;
+use crate::quant::MaskSet;
+use crate::runtime::{HostTensor, Runtime};
+
+/// One inference request: a flattened image.
+pub struct Request {
+    pub image: Vec<f32>,
+    pub reply: Sender<Response>,
+    pub submitted: Instant,
+}
+
+/// The reply: logits + argmax + timing breakdown.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub logits: Vec<f32>,
+    pub pred: usize,
+    pub queue_wait: Duration,
+    pub e2e: Duration,
+    /// What this request would have cost on the simulated FPGA.
+    pub sim_fpga: Duration,
+}
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub workers: usize,
+    pub max_wait: Duration,
+    /// Ratio name for the quantization masks (manifest `default_masks`).
+    pub ratio_name: String,
+    /// Device for the FPGA-sim timing overlay.
+    pub device: String,
+    /// Serve pre-quantized ("frozen") weights through the
+    /// `infer_frozen_b{N}` artifacts — the FPGA-faithful fast path (weights
+    /// live pre-quantized in BRAM; no fake-quant ops per request). ~3x
+    /// lower execute cost; numerically identical (quantizers idempotent).
+    pub frozen: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            workers: 2,
+            max_wait: Duration::from_millis(5),
+            ratio_name: "ilmpq2".into(),
+            device: "xc7z045".into(),
+            frozen: true,
+        }
+    }
+}
+
+enum WorkerMsg {
+    Batch(Assembled<Request>),
+    Shutdown,
+}
+
+/// Handle to a running server.
+pub struct Server {
+    submit_tx: Sender<Request>,
+    pub metrics: Arc<Metrics>,
+    shutdown: Arc<AtomicBool>,
+    router: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    /// The FPGA-sim report for the configured (model, ratio, device).
+    pub sim: SimReport,
+}
+
+impl Server {
+    /// Start router + workers. `params` are the (trained) model parameters
+    /// in AOT order; `masks` the quantization config.
+    pub fn start(
+        rt: Arc<Runtime>,
+        params: Vec<HostTensor>,
+        masks: &MaskSet,
+        cfg: ServeConfig,
+    ) -> Result<Server> {
+        let m = &rt.manifest;
+        let policy = BatchPolicy::new(m.infer_batches.clone(), cfg.max_wait);
+        let metrics = Arc::new(Metrics::default());
+        let shutdown = Arc::new(AtomicBool::new(false));
+        // Frozen path: quantize the weights once here (BRAM-image
+        // analogue), serve mask-free artifacts; otherwise pass masks along
+        // and let the graph fake-quant per request.
+        let frozen = cfg.frozen;
+        let (params, mask_tensors) = if frozen {
+            let names: Vec<String> =
+                m.params.iter().map(|(n, _)| n.clone()).collect();
+            (
+                Arc::new(crate::quant::freeze::freeze_params(&params, &names, masks)),
+                Arc::new(Vec::new()),
+            )
+        } else {
+            (Arc::new(params), Arc::new(m.mask_tensors(masks)))
+        };
+        let artifact_prefix = if frozen { "infer_frozen_b" } else { "infer_b" };
+
+        // Pre-compile every infer artifact (no compile stalls on the path).
+        for &b in &m.infer_batches {
+            rt.engine.load(m.artifact(&format!("{artifact_prefix}{b}"))?)?;
+        }
+
+        // FPGA-sim overlay: per-image latency of this config on the device.
+        let device = DeviceModel::by_name(&cfg.device)
+            .ok_or_else(|| anyhow::anyhow!("unknown device {}", cfg.device))?;
+        let net = zoo::tinyresnet(
+            m.height,
+            m.width,
+            m.channels,
+            &m.widths,
+            m.classes,
+        );
+        let mask_set = m
+            .default_masks
+            .get(&cfg.ratio_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown ratio {}", cfg.ratio_name))?;
+        let sim_cfg = NetConfig::from_masks(&cfg.ratio_name, mask_set.layers.clone());
+        let sim = simulate(&net, &sim_cfg, &device, Mode::IntraLayer);
+        let sim_per_image = sim.latency_s;
+
+        let (submit_tx, submit_rx) = channel::<Request>();
+        let (work_tx, work_rx) = channel::<WorkerMsg>();
+        let work_rx = Arc::new(std::sync::Mutex::new(work_rx));
+
+        // Worker pool.
+        let inflight = Arc::new(AtomicU64::new(0));
+        let mut workers = Vec::new();
+        for _ in 0..cfg.workers.max(1) {
+            let rt = rt.clone();
+            let metrics = metrics.clone();
+            let work_rx = work_rx.clone();
+            let params = params.clone();
+            let mask_tensors = mask_tensors.clone();
+            let inflight = inflight.clone();
+            let prefix = artifact_prefix.to_string();
+            workers.push(std::thread::spawn(move || loop {
+                let msg = {
+                    let rx = work_rx.lock().unwrap();
+                    rx.recv()
+                };
+                match msg {
+                    Ok(WorkerMsg::Batch(batch)) => {
+                        run_batch(
+                            &rt,
+                            &prefix,
+                            &params,
+                            &mask_tensors,
+                            &metrics,
+                            batch,
+                            sim_per_image,
+                        );
+                        inflight.fetch_sub(1, Ordering::Relaxed);
+                    }
+                    Ok(WorkerMsg::Shutdown) | Err(_) => return,
+                }
+            }));
+        }
+
+        // Router/batcher thread.
+        let router = {
+            let metrics = metrics.clone();
+            let shutdown = shutdown.clone();
+            let inflight = inflight.clone();
+            std::thread::spawn(move || {
+                let mut batcher: Batcher<Request> = Batcher::new(policy);
+                loop {
+                    // Pull whatever is immediately available.
+                    loop {
+                        match submit_rx.try_recv() {
+                            Ok(req) => {
+                                Metrics::inc(&metrics.requests_in);
+                                batcher.push(req, Instant::now());
+                            }
+                            Err(TryRecvError::Empty) => break,
+                            Err(TryRecvError::Disconnected) => {
+                                // Drain and stop.
+                                while let Some(b) = batcher.flush() {
+                                    inflight.fetch_add(1, Ordering::Relaxed);
+                                    let _ = work_tx.send(WorkerMsg::Batch(b));
+                                }
+                                for _ in 0..64 {
+                                    let _ = work_tx.send(WorkerMsg::Shutdown);
+                                }
+                                return;
+                            }
+                        }
+                    }
+                    if shutdown.load(Ordering::Relaxed) {
+                        while let Some(b) = batcher.flush() {
+                            inflight.fetch_add(1, Ordering::Relaxed);
+                            let _ = work_tx.send(WorkerMsg::Batch(b));
+                        }
+                        for _ in 0..64 {
+                            let _ = work_tx.send(WorkerMsg::Shutdown);
+                        }
+                        return;
+                    }
+                    let now = Instant::now();
+                    if let Some(batch) = batcher.try_assemble(now) {
+                        Metrics::inc(&metrics.batches);
+                        Metrics::add(&metrics.batched_requests, batch.items.len() as u64);
+                        Metrics::add(&metrics.padded_slots, batch.padded_slots() as u64);
+                        inflight.fetch_add(1, Ordering::Relaxed);
+                        let _ = work_tx.send(WorkerMsg::Batch(batch));
+                        continue;
+                    }
+                    // Sleep until the next deadline (or a short poll tick).
+                    let nap = batcher
+                        .time_to_deadline(now)
+                        .unwrap_or(Duration::from_micros(200))
+                        .min(Duration::from_micros(500));
+                    std::thread::sleep(nap.max(Duration::from_micros(50)));
+                }
+            })
+        };
+
+        Ok(Server {
+            submit_tx,
+            metrics,
+            shutdown,
+            router: Some(router),
+            workers,
+            sim,
+        })
+    }
+
+    /// Submit one image; returns the channel the response arrives on.
+    pub fn submit(&self, image: Vec<f32>) -> Receiver<Response> {
+        let (tx, rx) = channel();
+        let req = Request { image, reply: tx, submitted: Instant::now() };
+        // A send error means shutdown already started; the caller sees a
+        // closed reply channel.
+        let _ = self.submit_tx.send(req);
+        rx
+    }
+
+    /// Graceful stop: flush queues, join threads.
+    pub fn stop(mut self) -> Arc<Metrics> {
+        self.shutdown.store(true, Ordering::Relaxed);
+        if let Some(r) = self.router.take() {
+            let _ = r.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        self.metrics.clone()
+    }
+}
+
+fn run_batch(
+    rt: &Runtime,
+    artifact_prefix: &str,
+    params: &[HostTensor],
+    mask_tensors: &[HostTensor],
+    metrics: &Metrics,
+    batch: Assembled<Request>,
+    sim_per_image: f64,
+) {
+    let m = &rt.manifest;
+    let exec_size = batch.exec_size;
+    let img = m.data.image_elems();
+    let mut x = Vec::with_capacity(exec_size * img);
+    for p in &batch.items {
+        x.extend_from_slice(&p.payload.image);
+    }
+    x.resize(exec_size * img, 0.0); // padded slots
+    let mut inputs = Vec::with_capacity(params.len() + mask_tensors.len() + 1);
+    inputs.extend(params.iter().cloned());
+    inputs.extend(mask_tensors.iter().cloned());
+    inputs.push(HostTensor::f32(
+        vec![exec_size, m.data.height, m.data.width, m.data.channels],
+        x,
+    ));
+    let t_exec = Instant::now();
+    let result = rt.run(&format!("{artifact_prefix}{exec_size}"), &inputs);
+    let exec_elapsed = t_exec.elapsed();
+    metrics.execute.record(exec_elapsed.as_secs_f64());
+    // Simulated FPGA time: per-layer pipeline over the batch.
+    let sim_batch = Duration::from_secs_f64(sim_per_image * batch.items.len() as f64);
+    metrics.sim_fpga.record(sim_batch.as_secs_f64());
+
+    match result {
+        Ok(out) => {
+            let logits = out[0].as_f32();
+            let classes = m.classes;
+            let done = Instant::now();
+            for (i, p) in batch.items.iter().enumerate() {
+                let row = &logits[i * classes..(i + 1) * classes];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(k, _)| k)
+                    .unwrap_or(0);
+                let queue_wait = t_exec.duration_since(p.enqueued);
+                let e2e = done.duration_since(p.payload.submitted);
+                metrics.queue_wait.record(queue_wait.as_secs_f64());
+                metrics.e2e.record(e2e.as_secs_f64());
+                Metrics::inc(&metrics.requests_done);
+                let _ = p.payload.reply.send(Response {
+                    logits: row.to_vec(),
+                    pred,
+                    queue_wait,
+                    e2e,
+                    sim_fpga: sim_batch,
+                });
+            }
+        }
+        Err(err) => {
+            eprintln!("[server] batch failed: {err:#}");
+            for _p in &batch.items {
+                // Dropping the batch (and with it each reply Sender) closes
+                // the per-request channels — the client sees RecvError.
+                Metrics::inc(&metrics.requests_rejected);
+            }
+        }
+    }
+}

@@ -1,0 +1,215 @@
+//! QAT training driver — runs the AOT `train_step` artifact from Rust.
+//!
+//! This is the paper's 50-epoch PyTorch QAT loop, re-hosted: the coordinator
+//! owns the parameter state, streams data batches, applies the step-decay
+//! learning-rate schedule, and books the loss curve. All math happens inside
+//! the lowered XLA executable (which itself embeds the Pallas fake-quant
+//! kernels); Python is not involved.
+
+use anyhow::{bail, Result};
+
+use crate::quant::MaskSet;
+use crate::runtime::{HostTensor, Runtime};
+use crate::util::Rng;
+
+/// Step-decay LR schedule (the paper trains with "step learning rate").
+#[derive(Debug, Clone)]
+pub struct LrSchedule {
+    pub base: f32,
+    /// Multiply by `gamma` every `step_every` steps.
+    pub gamma: f32,
+    pub step_every: usize,
+}
+
+impl LrSchedule {
+    pub fn lr_at(&self, step: usize) -> f32 {
+        self.base * self.gamma.powi((step / self.step_every) as i32)
+    }
+}
+
+impl Default for LrSchedule {
+    fn default() -> Self {
+        LrSchedule { base: 0.05, gamma: 0.5, step_every: 150 }
+    }
+}
+
+/// One record of the training log.
+#[derive(Debug, Clone, Copy)]
+pub struct StepLog {
+    pub step: usize,
+    pub loss: f32,
+    pub acc: f32,
+    pub lr: f32,
+}
+
+/// Final evaluation numbers.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalResult {
+    pub loss: f32,
+    pub acc: f32,
+}
+
+/// The QAT driver: parameter state + data + schedule.
+pub struct Trainer<'rt> {
+    rt: &'rt Runtime,
+    pub params: Vec<HostTensor>,
+    mask_tensors: Vec<HostTensor>,
+    pub schedule: LrSchedule,
+    x_train: Vec<f32>,
+    y_train: Vec<i32>,
+    order: Vec<usize>,
+    cursor: usize,
+    rng: Rng,
+    pub log: Vec<StepLog>,
+}
+
+impl<'rt> Trainer<'rt> {
+    /// Start from the He-init parameters in the artifacts dir.
+    pub fn new(rt: &'rt Runtime, masks: &MaskSet, seed: u64) -> Result<Trainer<'rt>> {
+        let params = rt.manifest.load_init_params()?;
+        let (x_train, y_train) = rt.manifest.data.load_train()?;
+        let mut rng = Rng::new(seed);
+        let mut order: Vec<usize> = (0..rt.manifest.data.n_train).collect();
+        rng.shuffle(&mut order);
+        Ok(Trainer {
+            rt,
+            params,
+            mask_tensors: rt.manifest.mask_tensors(masks),
+            schedule: LrSchedule::default(),
+            x_train,
+            y_train,
+            order,
+            cursor: 0,
+            rng,
+            log: Vec::new(),
+        })
+    }
+
+    /// Swap the quantization config mid-training (mask hot-swap: the ILMPQ
+    /// artifact takes masks as inputs, so this costs nothing — the property
+    /// the paper's inter-layer competitors lack).
+    pub fn set_masks(&mut self, masks: &MaskSet) {
+        self.mask_tensors = self.rt.manifest.mask_tensors(masks);
+    }
+
+    fn next_batch(&mut self) -> (HostTensor, HostTensor) {
+        let m = &self.rt.manifest;
+        let b = m.train_batch;
+        let img = m.data.image_elems();
+        let mut x = Vec::with_capacity(b * img);
+        let mut y = Vec::with_capacity(b);
+        for _ in 0..b {
+            if self.cursor >= self.order.len() {
+                self.cursor = 0;
+                self.rng.shuffle(&mut self.order);
+            }
+            let idx = self.order[self.cursor];
+            self.cursor += 1;
+            x.extend_from_slice(&self.x_train[idx * img..(idx + 1) * img]);
+            y.push(self.y_train[idx]);
+        }
+        (
+            HostTensor::f32(
+                vec![b, m.data.height, m.data.width, m.data.channels],
+                x,
+            ),
+            HostTensor::i32(vec![b], y),
+        )
+    }
+
+    /// Run one SGD step; returns (loss, acc) on the training batch.
+    pub fn step(&mut self) -> Result<(f32, f32)> {
+        let step_no = self.log.len();
+        let lr = self.schedule.lr_at(step_no);
+        let (x, y) = self.next_batch();
+        let mut inputs = Vec::with_capacity(
+            self.params.len() + self.mask_tensors.len() + 3,
+        );
+        inputs.extend(self.params.iter().cloned());
+        inputs.extend(self.mask_tensors.iter().cloned());
+        inputs.push(x);
+        inputs.push(y);
+        inputs.push(HostTensor::scalar(lr));
+        let mut out = self.rt.run("train_step", &inputs)?;
+        if out.len() != self.params.len() + 2 {
+            bail!("train_step returned {} outputs", out.len());
+        }
+        let acc = out.pop().unwrap().item();
+        let loss = out.pop().unwrap().item();
+        self.params = out;
+        self.log.push(StepLog { step: step_no, loss, acc, lr });
+        Ok((loss, acc))
+    }
+
+    /// Train for `steps` steps, logging every `log_every` to `sink`.
+    pub fn train(
+        &mut self,
+        steps: usize,
+        log_every: usize,
+        mut sink: impl FnMut(&StepLog),
+    ) -> Result<()> {
+        for _ in 0..steps {
+            self.step()?;
+            let last = *self.log.last().unwrap();
+            if last.step % log_every == 0 {
+                sink(&last);
+            }
+        }
+        Ok(())
+    }
+
+    /// Evaluate on the held-out test split (all full eval batches).
+    pub fn evaluate(&self) -> Result<EvalResult> {
+        let m = &self.rt.manifest;
+        let (x_test, y_test) = m.data.load_test()?;
+        let b = m.eval_batch;
+        let img = m.data.image_elems();
+        let n_batches = m.data.n_test / b;
+        if n_batches == 0 {
+            bail!("test split smaller than eval batch");
+        }
+        let (mut loss_sum, mut acc_sum) = (0f64, 0f64);
+        for bi in 0..n_batches {
+            let xs = &x_test[bi * b * img..(bi + 1) * b * img];
+            let ys = &y_test[bi * b..(bi + 1) * b];
+            let mut inputs = Vec::new();
+            inputs.extend(self.params.iter().cloned());
+            inputs.extend(self.mask_tensors.iter().cloned());
+            inputs.push(HostTensor::f32(
+                vec![b, m.data.height, m.data.width, m.data.channels],
+                xs.to_vec(),
+            ));
+            inputs.push(HostTensor::i32(vec![b], ys.to_vec()));
+            let out = self.rt.run("eval_batch", &inputs)?;
+            loss_sum += out[0].item() as f64;
+            acc_sum += out[1].item() as f64;
+        }
+        Ok(EvalResult {
+            loss: (loss_sum / n_batches as f64) as f32,
+            acc: (acc_sum / n_batches as f64) as f32,
+        })
+    }
+
+    /// Smoothed final training loss (mean of the last k entries).
+    pub fn recent_loss(&self, k: usize) -> f32 {
+        let tail = &self.log[self.log.len().saturating_sub(k)..];
+        if tail.is_empty() {
+            return f32::NAN;
+        }
+        tail.iter().map(|l| l.loss).sum::<f32>() / tail.len() as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_decays_stepwise() {
+        let s = LrSchedule { base: 0.1, gamma: 0.5, step_every: 100 };
+        assert_eq!(s.lr_at(0), 0.1);
+        assert_eq!(s.lr_at(99), 0.1);
+        assert_eq!(s.lr_at(100), 0.05);
+        assert_eq!(s.lr_at(250), 0.025);
+    }
+}

@@ -1,0 +1,71 @@
+//! Figure 1 reproduction: the per-row scheme/precision map of a weight
+//! tensor, rendered as ASCII (the paper's figure is a diagram of exactly
+//! this assignment).
+
+use crate::quant::{LayerMasks, MaskSet, Scheme};
+
+fn glyph(s: Scheme) -> char {
+    match s {
+        Scheme::Pot4 => 'p',
+        Scheme::Fixed4 => '4',
+        Scheme::Fixed8 => '8',
+    }
+}
+
+/// One layer as a row-map line: e.g. `stem/w  [44p8pp44...]  (6xPoT 8xF4 2xF8)`.
+pub fn render_layer(m: &LayerMasks) -> String {
+    let map: String = (0..m.rows()).map(|r| glyph(m.scheme_of(r))).collect();
+    let (p, f4, f8) = m.counts();
+    format!("{:<12} [{map}]  ({p}xPoT-4 {f4}xFixed-4 {f8}xFixed-8)", m.layer)
+}
+
+/// The full figure: every layer's row map + the legend.
+pub fn render(masks: &MaskSet) -> String {
+    let mut s = format!(
+        "== Figure 1 — intra-layer row assignment ({}) ==\n\
+         legend: p = PoT-4 (LUT lane)  4 = Fixed-4 (DSP, packed)  8 = Fixed-8 (DSP)\n",
+        masks.name
+    );
+    for l in &masks.layers {
+        s.push_str(&render_layer(l));
+        s.push('\n');
+    }
+    let (p, f4, f8) = masks.total_fractions();
+    s.push_str(&format!(
+        "total row mix: {:.0}:{:.0}:{:.0} (PoT-4 : Fixed-4 : Fixed-8)\n",
+        p * 100.0,
+        f4 * 100.0,
+        f8 * 100.0
+    ));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn masks() -> MaskSet {
+        MaskSet {
+            name: "test".into(),
+            layers: vec![LayerMasks {
+                layer: "stem/w".into(),
+                is8: vec![1.0, 0.0, 0.0, 0.0],
+                is_pot: vec![0.0, 1.0, 1.0, 0.0],
+            }],
+        }
+    }
+
+    #[test]
+    fn layer_map_glyphs() {
+        let s = render_layer(&masks().layers[0]);
+        assert!(s.contains("[8pp4]"), "{s}");
+        assert!(s.contains("2xPoT-4 1xFixed-4 1xFixed-8"));
+    }
+
+    #[test]
+    fn figure_includes_totals_and_legend() {
+        let s = render(&masks());
+        assert!(s.contains("legend"));
+        assert!(s.contains("total row mix: 50:25:25"));
+    }
+}

@@ -1,0 +1,9 @@
+//! Experiment harness: one module per paper artifact (DESIGN.md §4 index).
+//!
+//! Shared by the `harness = false` benches, the CLI subcommands, and the
+//! integration tests, so a table is regenerated identically everywhere.
+
+pub mod accuracy;
+pub mod figure1;
+pub mod ptq;
+pub mod table1;

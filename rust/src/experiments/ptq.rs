@@ -1,0 +1,191 @@
+//! PTQ probe — the seed-noise-free accuracy experiment.
+//!
+//! The QAT runs on the small proxy task carry ±4-7% data-order variance,
+//! which swamps the 1-3% gaps Table I reports. This probe isolates the
+//! *representational* quality of each quantization config deterministically:
+//!
+//! 1. train ONE reference model with all-rows-Fixed-8 masks (≈ float —
+//!    8-bit error is negligible at this scale);
+//! 2. for every Table-I config, freeze (post-training-quantize) the trained
+//!    weights under that config's masks using the bit-exact Rust quantizers;
+//! 3. evaluate each frozen model on the full test split via the
+//!    `infer_frozen_b64` artifact.
+//!
+//! No randomness anywhere in steps 2-3, so config deltas are pure
+//! quantization effect — exactly the quantity ILMPQ's 8-bit rescue rows and
+//! variance-sorted PoT are supposed to protect.
+
+use anyhow::Result;
+
+use crate::baselines::table1::accuracy_configs;
+use crate::coordinator::trainer::Trainer;
+use crate::experiments::accuracy::masks_for;
+use crate::quant::{assign, freeze, LayerMasks, MaskSet, Scheme};
+use crate::runtime::{HostTensor, Runtime};
+
+/// One PTQ row.
+#[derive(Debug, Clone)]
+pub struct PtqRow {
+    pub label: String,
+    pub paper_top1: f64,
+    pub acc: f64,
+    /// Accuracy drop vs the unquantized reference weights.
+    pub drop_vs_float: f64,
+}
+
+/// All-Fixed-8 mask set (the near-float training config).
+pub fn fixed8_masks(rt: &Runtime) -> MaskSet {
+    MaskSet {
+        name: "fixed8-ref".into(),
+        layers: rt
+            .manifest
+            .quantized_layers
+            .iter()
+            .map(|(n, rows, _)| assign::assign_uniform_layer(n, *rows, Scheme::Fixed8))
+            .collect(),
+    }
+}
+
+/// Evaluate params (as given — caller freezes) on the full test split via
+/// the frozen artifacts. Returns accuracy in [0, 1].
+pub fn eval_frozen(rt: &Runtime, params: &[HostTensor]) -> Result<f64> {
+    let m = &rt.manifest;
+    let (x_test, y_test) = m.data.load_test()?;
+    let img = m.data.image_elems();
+    let b = 64usize;
+    let n_batches = m.data.n_test / b;
+    let mut correct = 0usize;
+    for bi in 0..n_batches {
+        let mut inputs = params.to_vec();
+        inputs.push(HostTensor::f32(
+            vec![b, m.data.height, m.data.width, m.data.channels],
+            x_test[bi * b * img..(bi + 1) * b * img].to_vec(),
+        ));
+        let out = rt.run("infer_frozen_b64", &inputs)?;
+        let logits = out[0].as_f32();
+        for i in 0..b {
+            let row = &logits[i * m.classes..(i + 1) * m.classes];
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, c| a.1.partial_cmp(c.1).unwrap())
+                .map(|(k, _)| k)
+                .unwrap();
+            if pred as i32 == y_test[bi * b + i] {
+                correct += 1;
+            }
+        }
+    }
+    Ok(correct as f64 / (n_batches * b) as f64)
+}
+
+/// Train the near-float reference model.
+pub fn train_reference(
+    rt: &Runtime,
+    steps: usize,
+    seed: u64,
+    mut log: impl FnMut(&str),
+) -> Result<Vec<HostTensor>> {
+    let masks = fixed8_masks(rt);
+    let mut tr = Trainer::new(rt, &masks, seed)?;
+    tr.train(steps, (steps / 4).max(1), |s| {
+        log(&format!("  ref step {:>4} loss {:.4} acc {:.3}", s.step, s.loss, s.acc));
+    })?;
+    Ok(tr.params)
+}
+
+/// The full PTQ table: float reference + all ten Table-I configs.
+pub fn run_all(
+    rt: &Runtime,
+    steps: usize,
+    seed: u64,
+    mut log: impl FnMut(&str),
+) -> Result<(f64, Vec<PtqRow>)> {
+    log("[ptq] training near-float (all-Fixed-8) reference ...");
+    let params = train_reference(rt, steps, seed, &mut log)?;
+    let float_acc = eval_frozen(rt, &params)? * 100.0;
+    log(&format!("[ptq] reference (unquantized weights) test acc {float_acc:.2}%"));
+    let names: Vec<String> = rt.manifest.params.iter().map(|(n, _)| n.clone()).collect();
+    let mut rows = Vec::new();
+    for cfg in accuracy_configs() {
+        let masks = masks_for(rt, &cfg)?;
+        let frozen = freeze::freeze_params(&params, &names, &masks);
+        let acc = eval_frozen(rt, &frozen)? * 100.0;
+        log(&format!("[ptq] {:<20} {:.2}%", cfg.label, acc));
+        rows.push(PtqRow {
+            label: cfg.label.clone(),
+            paper_top1: cfg.paper_top1,
+            acc,
+            drop_vs_float: float_acc - acc,
+        });
+    }
+    Ok((float_acc, rows))
+}
+
+/// PTQ over ablation policies at the ILMPQ-2 ratio (noise-free §II-C check).
+pub fn run_policies(
+    rt: &Runtime,
+    params: &[HostTensor],
+    mut log: impl FnMut(&str),
+) -> Result<Vec<(String, f64)>> {
+    use crate::baselines::ablation::Policy;
+    use crate::quant::{gemm_rows, Ratio};
+    use crate::util::Rng;
+
+    let m = &rt.manifest;
+    let names: Vec<String> = m.params.iter().map(|(n, _)| n.clone()).collect();
+    let ratio = Ratio::parse("65:30:5").unwrap();
+    let mut out = Vec::new();
+    for policy in Policy::all() {
+        let mut rng = Rng::new(7);
+        let layers: Vec<LayerMasks> = m
+            .quantized_layers
+            .iter()
+            .map(|(name, _rows, _)| {
+                let idx = m.params.iter().position(|(n, _)| n == name).unwrap();
+                let w_rows = gemm_rows(&params[idx]);
+                let eigs = m.eigs.get(name).unwrap();
+                policy.assign(name, &w_rows, eigs, ratio, &mut rng)
+            })
+            .collect();
+        let masks = MaskSet { name: policy.label().into(), layers };
+        let frozen = freeze::freeze_params(params, &names, &masks);
+        let acc = eval_frozen(rt, &frozen)? * 100.0;
+        log(&format!("[ptq-policy] {:<24} {:.2}%", policy.label(), acc));
+        out.push((policy.label().to_string(), acc));
+    }
+    Ok(out)
+}
+
+/// Render the PTQ table.
+pub fn render(float_acc: f64, rows: &[PtqRow]) -> String {
+    let mut s = format!(
+        "== PTQ probe (deterministic; reference float-weights acc {float_acc:.2}%) ==\n\
+         {:<20} {:>12} {:>10} {:>12}\n",
+        "config", "paper top-1", "PTQ acc", "drop vs f32"
+    );
+    for r in rows {
+        s.push_str(&format!(
+            "{:<20} {:>11.2}% {:>9.2}% {:>11.2}pp\n",
+            r.label, r.paper_top1, r.acc, r.drop_vs_float
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_formats() {
+        let rows = vec![PtqRow {
+            label: "ILMPQ-2".into(),
+            paper_top1: 70.73,
+            acc: 80.0,
+            drop_vs_float: 1.5,
+        }];
+        let s = render(81.5, &rows);
+        assert!(s.contains("ILMPQ-2") && s.contains("1.50pp"));
+    }
+}

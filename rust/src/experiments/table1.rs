@@ -1,0 +1,172 @@
+//! Table I reproduction: run every row's config through the FPGA simulator
+//! and print simulated vs paper cells. Shared by `benches/table1.rs`, the
+//! CLI (`ilmpq table1`), and the integration tests.
+
+use crate::baselines::{hw_configs, HwConfig};
+use crate::fpga::{simulate, DeviceModel, SimReport};
+use crate::model::{resnet18, Network};
+
+/// One reproduced row: config + simulation + paper cells.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub cfg: HwConfig,
+    pub sim: SimReport,
+}
+
+impl Row {
+    /// Relative error of simulated vs paper throughput (None if the paper
+    /// left the cell empty).
+    pub fn throughput_rel_err(&self) -> Option<f64> {
+        self.cfg
+            .paper
+            .map(|(gops, _)| (self.sim.throughput_gops - gops).abs() / gops)
+    }
+
+    pub fn latency_rel_err(&self) -> Option<f64> {
+        self.cfg
+            .paper
+            .map(|(_, ms)| (self.sim.latency_s * 1e3 - ms).abs() / ms)
+    }
+}
+
+/// Simulate all rows of Table I for one device.
+pub fn run_device(device: &DeviceModel, net: &Network) -> Vec<Row> {
+    hw_configs(device.name)
+        .into_iter()
+        .map(|cfg| {
+            let nc = cfg.net_config(net);
+            let sim = simulate(net, &nc, device, cfg.mode);
+            Row { cfg, sim }
+        })
+        .collect()
+}
+
+/// Full Table I (both devices) on ResNet-18.
+pub fn run_all() -> Vec<(DeviceModel, Vec<Row>)> {
+    let net = resnet18();
+    DeviceModel::all()
+        .into_iter()
+        .map(|d| {
+            let rows = run_device(&d, &net);
+            (d, rows)
+        })
+        .collect()
+}
+
+/// Render one device's table, paper numbers in parentheses.
+pub fn render(device: &DeviceModel, rows: &[Row]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "== Table I — {} (ResNet-18 / ImageNet geometry, simulated) ==\n",
+        device.name
+    ));
+    s.push_str(&format!(
+        "{:<20} {:>7} {:>12} {:>12} {:>20} {:>20}\n",
+        "config", "ratio", "LUT% (paper)", "DSP% (paper)", "GOP/s (paper)", "ms (paper)"
+    ));
+    for r in rows {
+        let (pl, pd) = r.cfg.paper_util.unwrap_or((f64::NAN, f64::NAN));
+        let (pg, pm) = r.cfg.paper.unwrap_or((f64::NAN, f64::NAN));
+        s.push_str(&format!(
+            "{:<20} {:>7} {:>6.0} ({:>4.0}) {:>6.0} ({:>4.0}) {:>12.1} ({:>6.1}) {:>12.1} ({:>6.1})\n",
+            r.cfg.label,
+            r.cfg.ratio.label(),
+            r.sim.lut_util * 100.0,
+            pl,
+            r.sim.dsp_util * 100.0,
+            pd,
+            r.sim.throughput_gops,
+            pg,
+            r.sim.latency_s * 1e3,
+            pm,
+        ));
+    }
+    s
+}
+
+/// The headline speedups (§III): ILMPQ row vs row (1).
+pub fn speedup(rows: &[Row]) -> f64 {
+    let base = rows
+        .iter()
+        .find(|r| r.cfg.label.starts_with("(1)"))
+        .expect("row (1)");
+    let ilmpq = rows
+        .iter()
+        .find(|r| r.cfg.label.starts_with("ILMPQ"))
+        .expect("ILMPQ row");
+    base.sim.latency_s / ilmpq.sim.latency_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_rows_simulate() {
+        for (d, rows) in run_all() {
+            assert_eq!(rows.len(), 8, "{}", d.name);
+            for r in &rows {
+                assert!(r.sim.latency_s > 0.0, "{}: {}", d.name, r.cfg.label);
+                assert!(r.sim.lut_util <= 1.0 && r.sim.dsp_util <= 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn ilmpq_wins_throughput_on_both_devices() {
+        for (d, rows) in run_all() {
+            let best = rows
+                .iter()
+                .max_by(|a, b| {
+                    a.sim.throughput_gops.partial_cmp(&b.sim.throughput_gops).unwrap()
+                })
+                .unwrap();
+            assert!(
+                best.cfg.label.starts_with("ILMPQ"),
+                "{}: best is {}",
+                d.name,
+                best.cfg.label
+            );
+        }
+    }
+
+    #[test]
+    fn headline_speedups_in_band() {
+        // Paper: 3.01x on XC7Z020, 3.65x on XC7Z045.
+        for (d, rows) in run_all() {
+            let s = speedup(&rows);
+            let (lo, hi) = (2.3, 4.8);
+            assert!((lo..hi).contains(&s), "{}: speedup {s}", d.name);
+        }
+    }
+
+    #[test]
+    fn ordering_matches_paper_shape() {
+        // Within each device: PoT rows beat Fixed rows; ILMPQ beats all;
+        // quantized-first/last beats the fl8 sibling.
+        for (_, rows) in run_all() {
+            let by = |label: &str| {
+                rows.iter()
+                    .find(|r| r.cfg.label.starts_with(label))
+                    .unwrap()
+                    .sim
+                    .throughput_gops
+            };
+            assert!(by("(4) PoT") > by("(2) Fixed"));
+            assert!(by("(2) Fixed") > by("(1) Fixed fl8"));
+            assert!(by("(4) PoT") > by("(3) PoT fl8"));
+            assert!(by("ILMPQ") > by("(6) PoT+Fixed"));
+        }
+    }
+
+    #[test]
+    fn render_contains_every_label() {
+        let net = resnet18();
+        let d = DeviceModel::xc7z045();
+        let rows = run_device(&d, &net);
+        let txt = render(&d, &rows);
+        for r in &rows {
+            assert!(txt.contains(&r.cfg.label));
+        }
+    }
+}

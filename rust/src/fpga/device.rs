@@ -1,0 +1,102 @@
+//! FPGA device models — the hardware the paper measured on, as data.
+//!
+//! Resource counts are the real Zynq-7000 datasheet numbers (XC7Z020:
+//! 53,200 LUTs / 220 DSP48E1 / 4.9 Mb BRAM; XC7Z045: 218,600 LUTs /
+//! 900 DSP48E1 / 19.2 Mb BRAM). Clock and DDR bandwidth are the design
+//! points typical of the paper's generation of Zynq accelerators (100 MHz
+//! fabric clock, PS-side DDR3 shared with the ARM cores); the calibration
+//! constants in `pe.rs` are documented in EXPERIMENTS.md §T1.
+
+/// Static description of one FPGA part + board design point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceModel {
+    pub name: &'static str,
+    /// Logic LUTs available to the design.
+    pub luts: u64,
+    /// DSP48 slices.
+    pub dsps: u64,
+    /// On-chip BRAM bytes.
+    pub bram_bytes: u64,
+    /// Fabric clock (Hz).
+    pub clock_hz: f64,
+    /// Sustained DDR bandwidth available to the accelerator (bytes/s).
+    pub ddr_bytes_per_sec: f64,
+    /// LUTs consumed by control, AXI/DMA, and buffering regardless of the
+    /// PE configuration (calibrated so the fixed-point-only rows of Table I
+    /// reproduce the paper's LUT% column).
+    pub lut_overhead: u64,
+}
+
+impl DeviceModel {
+    /// Xilinx Zynq XC7Z020 (Zedboard / PYNQ-Z1 class).
+    ///
+    /// The Artix-class fabric of the -1 speed grade Z020 typically closes
+    /// timing around 70 MHz for dense MAC arrays (vs 100 MHz on the
+    /// Kintex-class Z045) — the clock below is that design point and is the
+    /// main reason every Z020 column of Table I is ~3-4x the Z045 latency.
+    pub fn xc7z020() -> DeviceModel {
+        DeviceModel {
+            name: "xc7z020",
+            luts: 53_200,
+            dsps: 220,
+            bram_bytes: 4_900_000 / 8,
+            clock_hz: 71e6,
+            ddr_bytes_per_sec: 2.1e9,
+            lut_overhead: 20_000,
+        }
+    }
+
+    /// Xilinx Zynq XC7Z045 (ZC706 class).
+    pub fn xc7z045() -> DeviceModel {
+        DeviceModel {
+            name: "xc7z045",
+            luts: 218_600,
+            dsps: 900,
+            bram_bytes: 19_200_000 / 8,
+            clock_hz: 100e6,
+            ddr_bytes_per_sec: 4.2e9,
+            lut_overhead: 40_000,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<DeviceModel> {
+        match name {
+            "xc7z020" => Some(DeviceModel::xc7z020()),
+            "xc7z045" => Some(DeviceModel::xc7z045()),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> Vec<DeviceModel> {
+        vec![DeviceModel::xc7z020(), DeviceModel::xc7z045()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn datasheet_resource_counts() {
+        let z20 = DeviceModel::xc7z020();
+        assert_eq!((z20.luts, z20.dsps), (53_200, 220));
+        let z45 = DeviceModel::xc7z045();
+        assert_eq!((z45.luts, z45.dsps), (218_600, 900));
+        assert!(z45.bram_bytes > z20.bram_bytes);
+    }
+
+    #[test]
+    fn lookup() {
+        assert_eq!(DeviceModel::by_name("xc7z020").unwrap().name, "xc7z020");
+        assert_eq!(DeviceModel::by_name("xc7z045").unwrap().name, "xc7z045");
+        assert!(DeviceModel::by_name("xc7z100").is_none());
+        assert_eq!(DeviceModel::all().len(), 2);
+    }
+
+    #[test]
+    fn overhead_fits_in_device() {
+        for d in DeviceModel::all() {
+            assert!(d.lut_overhead < d.luts / 2);
+        }
+    }
+}

@@ -1,0 +1,143 @@
+//! Tiled-GEMM timing model: systolic-array tile quantization + pipeline
+//! fill. This is where the "efficiency < 100%" of real accelerators comes
+//! from — a 30x30 DSP array running a 64-row layer wastes (90-64)/90 of its
+//! row slots, and every tile pays a fill/drain latency.
+
+use crate::model::GemmDims;
+
+/// Geometry of one systolic GEMM engine: `rows x cols` MAC lattice.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ArrayShape {
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl ArrayShape {
+    /// Factor `n_macs` into a near-square array, capping rows at 64 (BRAM
+    /// port fan-out limits row parallelism on real designs).
+    pub fn near_square(n_macs: u64) -> ArrayShape {
+        if n_macs == 0 {
+            return ArrayShape { rows: 0, cols: 0 };
+        }
+        let mut rows = (n_macs as f64).sqrt().floor() as usize;
+        rows = rows.clamp(1, 64);
+        let cols = (n_macs as usize).div_ceil(rows);
+        ArrayShape { rows, cols }
+    }
+
+    pub fn macs(&self) -> usize {
+        self.rows * self.cols
+    }
+}
+
+/// Fraction of MAC slots doing useful work for a layer on this array:
+/// tile-quantization efficiency over the (M, N) dims.
+pub fn tile_efficiency(g: GemmDims, array: ArrayShape) -> f64 {
+    if array.rows == 0 || array.cols == 0 || g.m == 0 || g.n == 0 {
+        return 0.0;
+    }
+    let em = g.m as f64 / (g.m.div_ceil(array.rows) * array.rows) as f64;
+    let en = g.n as f64 / (g.n.div_ceil(array.cols) * array.cols) as f64;
+    em * en
+}
+
+/// Cycles to run `macs_assigned` MACs of a layer with GEMM dims `g` on an
+/// array sustaining `macs_per_cycle` (already including any DSP packing),
+/// accounting tile quantization and per-tile pipeline fill.
+pub fn layer_cycles(
+    g: GemmDims,
+    macs_assigned: u64,
+    macs_per_cycle: f64,
+    array: ArrayShape,
+) -> f64 {
+    if macs_assigned == 0 || macs_per_cycle <= 0.0 {
+        return 0.0;
+    }
+    let eff = tile_efficiency(g, array).max(1e-3);
+    let compute = macs_assigned as f64 / (macs_per_cycle * eff);
+    // Pipeline fill/drain: K cycles per (M, N) tile wave.
+    let tiles = (g.m.div_ceil(array.rows.max(1)) * g.n.div_ceil(array.cols.max(1))) as f64;
+    // Only the fraction of tiles this engine actually owns.
+    let total_macs = (g.m as u64 * g.k as u64 * g.n as u64).max(1);
+    let share = macs_assigned as f64 / total_macs as f64;
+    let fill = tiles * share * (array.rows as f64 + 32.0);
+    compute + fill
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{ensure, forall};
+
+    fn g(m: usize, k: usize, n: usize) -> GemmDims {
+        GemmDims { m, k, n }
+    }
+
+    #[test]
+    fn near_square_shapes() {
+        let a = ArrayShape::near_square(900);
+        assert_eq!((a.rows, a.cols), (30, 30));
+        let a = ArrayShape::near_square(220);
+        assert_eq!(a.rows, 14);
+        assert!(a.macs() >= 220);
+        assert_eq!(ArrayShape::near_square(0).macs(), 0);
+        // Cap at 64 rows.
+        assert_eq!(ArrayShape::near_square(100_000).rows, 64);
+    }
+
+    #[test]
+    fn tile_efficiency_exact_fit_is_one() {
+        let a = ArrayShape { rows: 32, cols: 32 };
+        assert_eq!(tile_efficiency(g(64, 100, 64), a), 1.0);
+        // 64 rows on a 30-row array: 64/90.
+        let a = ArrayShape { rows: 30, cols: 30 };
+        let e = tile_efficiency(g(64, 100, 60), a);
+        assert!((e - (64.0 / 90.0) * (60.0 / 60.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prop_efficiency_in_unit_interval() {
+        forall(
+            61,
+            128,
+            |r| {
+                (
+                    g(r.range_usize(1, 1024), r.range_usize(1, 4096), r.range_usize(1, 12544)),
+                    ArrayShape::near_square(r.range_usize(1, 4000) as u64),
+                )
+            },
+            |&(dims, arr)| {
+                let e = tile_efficiency(dims, arr);
+                ensure((0.0..=1.0).contains(&e), || format!("eff {e}"))
+            },
+        );
+    }
+
+    #[test]
+    fn cycles_scale_with_work() {
+        let dims = g(64, 576, 3136);
+        let arr = ArrayShape::near_square(900);
+        let full = layer_cycles(dims, dims.m as u64 * dims.k as u64 * dims.n as u64, 900.0, arr);
+        let half = layer_cycles(dims, (dims.m as u64 * dims.k as u64 * dims.n as u64) / 2, 900.0, arr);
+        assert!(full > half && half > 0.0);
+        assert!((full / half - 2.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn zero_work_zero_cycles() {
+        let dims = g(64, 576, 3136);
+        assert_eq!(layer_cycles(dims, 0, 900.0, ArrayShape::near_square(900)), 0.0);
+    }
+
+    #[test]
+    fn small_layer_wastes_array() {
+        // A 10-row fc layer on a 30-row array should show the quantization
+        // penalty: cycles > ideal by ~3x.
+        let dims = g(10, 512, 1);
+        let arr = ArrayShape { rows: 30, cols: 30 };
+        let macs = (10 * 512) as u64;
+        let cycles = layer_cycles(dims, macs, 900.0, arr);
+        let ideal = macs as f64 / 900.0;
+        assert!(cycles > 2.5 * ideal, "cycles {cycles} ideal {ideal}");
+    }
+}

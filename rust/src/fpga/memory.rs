@@ -1,0 +1,127 @@
+//! Memory traffic model: DDR transfers + on-chip buffer passes.
+//!
+//! Zynq accelerators stream weights and activations from the PS-side DDR
+//! (shared with the ARM cores) into BRAM double-buffers. Per layer we charge:
+//!
+//! * **DDR**: packed weight bytes (4-/8-bit + per-row scales) + input and
+//!   output activations (8-bit fixed activations, the paper's setting);
+//! * **buffer pass**: im2col/line-buffer reshaping at `BUFFER_ELEMS_PER_CYCLE`
+//!   elements/cycle, overlappable with compute via double-buffering.
+//!
+//! The simulator takes `max(compute, ddr, buffer)` per layer — the standard
+//! perfectly-overlapped pipeline bound (§EXPERIMENTS.md documents the
+//! calibration).
+
+use crate::model::LayerDesc;
+use crate::quant::LayerMasks;
+
+/// Activation bytes per element (8-bit fixed activations).
+pub const ACT_BYTES: f64 = 1.0;
+/// Elements the line-buffer/im2col stage moves per cycle.
+pub const BUFFER_ELEMS_PER_CYCLE: f64 = 16.0;
+
+/// Packed weight bytes for a layer under row masks (4-bit rows: nibble per
+/// weight; 8-bit rows: byte) + 5 bytes/row for scale+tag.
+pub fn weight_bytes(layer: &LayerDesc, masks: &LayerMasks) -> f64 {
+    let g = layer.gemm();
+    let (pot, f4, f8) = masks.op_fractions();
+    let rows = g.m as f64;
+    let per_row_4 = (g.k as f64 / 2.0).ceil();
+    let per_row_8 = g.k as f64;
+    rows * ((pot + f4) * per_row_4 + f8 * per_row_8) + rows * 5.0
+}
+
+/// Total DDR bytes for one inference of this layer (batch 1).
+pub fn ddr_bytes(layer: &LayerDesc, masks: &LayerMasks) -> f64 {
+    let (a_in, a_out) = layer.activations();
+    weight_bytes(layer, masks) + (a_in + a_out) as f64 * ACT_BYTES
+}
+
+/// Seconds of DDR time for one layer.
+pub fn ddr_seconds(layer: &LayerDesc, masks: &LayerMasks, ddr_bps: f64) -> f64 {
+    ddr_bytes(layer, masks) / ddr_bps
+}
+
+/// Seconds of buffer-pass time (im2col + write-back) for one layer.
+pub fn buffer_seconds(layer: &LayerDesc, clock_hz: f64) -> f64 {
+    let (a_in, a_out) = layer.activations();
+    // im2col reads each input element once per kernel overlap on average ~1
+    // with line buffers; charge in + out element streams.
+    (a_in + a_out) as f64 / (BUFFER_ELEMS_PER_CYCLE * clock_hz)
+}
+
+/// Does the working set (one layer's weights + IO tiles) fit BRAM? When it
+/// doesn't, weights re-stream per output tile and DDR time multiplies.
+pub fn bram_weight_refetch_factor(
+    layer: &LayerDesc,
+    masks: &LayerMasks,
+    bram_bytes: u64,
+) -> f64 {
+    let wb = weight_bytes(layer, masks);
+    let budget = bram_bytes as f64 * 0.5; // half for weights, half for act tiles
+    if wb <= budget {
+        1.0
+    } else {
+        (wb / budget).min(4.0) // tiling bounds the refetch blow-up
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::LayerDesc;
+    use crate::quant::assign::assign_uniform_layer;
+    use crate::quant::Scheme;
+
+    fn conv() -> LayerDesc {
+        LayerDesc::conv("c", 3, 1, 64, 64, 56, 56)
+    }
+
+    #[test]
+    fn eight_bit_weighs_double_minus_overhead() {
+        let l = conv();
+        let m4 = assign_uniform_layer("c", 64, Scheme::Fixed4);
+        let m8 = assign_uniform_layer("c", 64, Scheme::Fixed8);
+        let w4 = weight_bytes(&l, &m4);
+        let w8 = weight_bytes(&l, &m8);
+        // 4-bit ~ half the 8-bit weight stream (modulo the 5 B/row tags).
+        assert!(w8 / w4 > 1.9 && w8 / w4 < 2.1, "{w4} {w8}");
+    }
+
+    #[test]
+    fn pot_and_fixed4_same_footprint() {
+        let l = conv();
+        let mp = assign_uniform_layer("c", 64, Scheme::Pot4);
+        let m4 = assign_uniform_layer("c", 64, Scheme::Fixed4);
+        assert_eq!(weight_bytes(&l, &mp), weight_bytes(&l, &m4));
+    }
+
+    #[test]
+    fn ddr_time_inversely_proportional_to_bw() {
+        let l = conv();
+        let m = assign_uniform_layer("c", 64, Scheme::Fixed8);
+        let t1 = ddr_seconds(&l, &m, 2.1e9);
+        let t2 = ddr_seconds(&l, &m, 4.2e9);
+        assert!((t1 / t2 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn buffer_pass_counts_elements() {
+        let l = conv();
+        let t = buffer_seconds(&l, 100e6);
+        let (ai, ao) = l.activations();
+        assert!((t - (ai + ao) as f64 / (16.0 * 100e6)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn refetch_kicks_in_for_big_layers() {
+        // fc1 of VGG-11: 25M weights >> BRAM.
+        let fc = LayerDesc::fc("fc1", 512 * 7 * 7, 4096);
+        let m = assign_uniform_layer("fc1", 4096, Scheme::Fixed8);
+        let f = bram_weight_refetch_factor(&fc, &m, 4_900_000 / 8);
+        assert!(f > 1.0);
+        // Small layer: no refetch.
+        let m2 = assign_uniform_layer("c", 64, Scheme::Fixed4);
+        assert_eq!(bram_weight_refetch_factor(&conv(), &m2, 19_200_000 / 8), 1.0);
+    }
+}

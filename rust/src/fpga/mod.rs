@@ -1,0 +1,16 @@
+//! FPGA accelerator performance simulator (Zynq XC7Z020 / XC7Z045).
+//!
+//! Substitute for the paper's physical boards (DESIGN.md §5): a
+//! resource/arithmetic/memory model detailed enough that the Table-I
+//! quantities — lane balance, PE idle waste, ratio optima, relative
+//! speedups — emerge from the same mechanisms the paper argues from.
+
+pub mod device;
+pub mod gemm;
+pub mod memory;
+pub mod pe;
+pub mod sim;
+
+pub use device::DeviceModel;
+pub use pe::EngineAlloc;
+pub use sim::{simulate, Mode, NetConfig, SimReport};

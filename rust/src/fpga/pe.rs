@@ -1,0 +1,205 @@
+//! PE (processing element) cost & rate model — the heart of the codesign.
+//!
+//! The paper's FPGA design instantiates two GEMM engines per device:
+//!
+//! * **GEMM_Fixed** on DSP48 slices — one DSP does one 8x8 MAC/cycle, or
+//!   *two* 4x4 MACs/cycle (the classic INT4 DSP packing), so Fixed-4 rows
+//!   run at 2x the Fixed-8 rate on the same silicon;
+//! * **GEMM_PoT** on LUT fabric — a PoT multiply is a barrel shift, so a
+//!   MAC unit costs ~`LUTS_PER_POT_MAC` LUTs and no DSP.
+//!
+//! Because the intra-layer mix is the *same in every layer*, one static
+//! allocation (all DSPs + all spare LUTs) serves the whole network — the
+//! paper's central hardware argument. `EngineAlloc` captures an allocation
+//! and reports the Vivado-style utilization columns of Table I.
+
+use super::device::DeviceModel;
+
+/// LUTs per PoT shift-add MAC unit (shift + CSA + pipeline regs).
+pub const LUTS_PER_POT_MAC: u64 = 45;
+/// Glue LUTs per instantiated DSP PE (operand muxing, partial-sum regs).
+pub const LUTS_PER_DSP_PE: u64 = 25;
+/// One DSP48 is borrowed as accumulator per this many PoT units.
+pub const POT_UNITS_PER_ACC_DSP: u64 = 24;
+/// MACs per DSP per cycle at 4-bit (packed) and 8-bit. INT4 packing puts
+/// two multiplies in one DSP48 but needs correction cycles for the shared
+/// partial products, sustaining ~1.75 rather than the ideal 2.0 (this is
+/// the packing efficiency real INT4-on-DSP48 designs report).
+pub const FIXED4_MACS_PER_DSP: f64 = 1.75;
+pub const FIXED8_MACS_PER_DSP: f64 = 1.0;
+
+/// A static engine allocation on one device.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EngineAlloc {
+    pub device: DeviceModel,
+    /// DSPs driving GEMM_Fixed.
+    pub fixed_dsps: u64,
+    /// PoT shift-add MAC units in LUT fabric.
+    pub pot_units: u64,
+    /// DSPs borrowed as PoT accumulators.
+    pub pot_acc_dsps: u64,
+}
+
+impl EngineAlloc {
+    /// The ILMPQ allocation: every DSP works for GEMM_Fixed, and all LUTs
+    /// left after control overhead + DSP glue become PoT units (when the
+    /// configuration has any PoT rows at all).
+    pub fn ilmpq(device: &DeviceModel, wants_pot: bool) -> EngineAlloc {
+        let glue = device.dsps * LUTS_PER_DSP_PE;
+        let spare = device.luts.saturating_sub(device.lut_overhead + glue);
+        let (pot_units, pot_acc) = if wants_pot {
+            let mut units = spare / LUTS_PER_POT_MAC;
+            let mut acc = units.div_ceil(POT_UNITS_PER_ACC_DSP);
+            // Accumulator DSPs come out of the fixed pool; never exceed it.
+            acc = acc.min(device.dsps / 4);
+            units = units.min(acc * POT_UNITS_PER_ACC_DSP).max(if acc > 0 { 1 } else { 0 });
+            (units, acc)
+        } else {
+            (0, 0)
+        };
+        EngineAlloc {
+            device: device.clone(),
+            fixed_dsps: device.dsps - pot_acc,
+            pot_units,
+            pot_acc_dsps: pot_acc,
+        }
+    }
+
+    /// An allocation with an explicit PoT-unit budget (ratio-search sweeps).
+    pub fn with_pot_units(device: &DeviceModel, pot_units: u64) -> EngineAlloc {
+        let max = EngineAlloc::ilmpq(device, true).pot_units;
+        let units = pot_units.min(max);
+        let acc = units.div_ceil(POT_UNITS_PER_ACC_DSP.max(1)).min(device.dsps / 4);
+        EngineAlloc {
+            device: device.clone(),
+            fixed_dsps: device.dsps - acc,
+            pot_units: units,
+            pot_acc_dsps: acc,
+        }
+    }
+
+    // ---- rates (ops/sec; 1 MAC = 2 ops) -----------------------------------
+
+    pub fn fixed4_ops_per_sec(&self) -> f64 {
+        2.0 * FIXED4_MACS_PER_DSP * self.fixed_dsps as f64 * self.device.clock_hz
+    }
+
+    pub fn fixed8_ops_per_sec(&self) -> f64 {
+        2.0 * FIXED8_MACS_PER_DSP * self.fixed_dsps as f64 * self.device.clock_hz
+    }
+
+    pub fn pot_ops_per_sec(&self) -> f64 {
+        2.0 * self.pot_units as f64 * self.device.clock_hz
+    }
+
+    // ---- Vivado-style utilization columns ---------------------------------
+
+    pub fn lut_used(&self) -> u64 {
+        self.device.lut_overhead
+            + self.fixed_dsps * LUTS_PER_DSP_PE
+            + self.pot_units * LUTS_PER_POT_MAC
+    }
+
+    pub fn lut_util(&self) -> f64 {
+        self.lut_used() as f64 / self.device.luts as f64
+    }
+
+    /// DSP utilization. Matches the paper's convention where a design that
+    /// instantiates fixed PEs on every DSP reports 100%.
+    pub fn dsp_util(&self, uses_fixed: bool) -> f64 {
+        let used = if uses_fixed {
+            self.fixed_dsps + self.pot_acc_dsps
+        } else {
+            self.pot_acc_dsps
+        };
+        used as f64 / self.device.dsps as f64
+    }
+
+    /// Sanity: the allocation must fit the device.
+    pub fn fits(&self) -> bool {
+        self.lut_used() <= self.device.luts
+            && self.fixed_dsps + self.pot_acc_dsps <= self.device.dsps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{ensure, forall};
+
+    #[test]
+    fn ilmpq_alloc_fits_both_devices() {
+        for d in DeviceModel::all() {
+            for wants_pot in [false, true] {
+                let a = EngineAlloc::ilmpq(&d, wants_pot);
+                assert!(a.fits(), "{d:?} wants_pot={wants_pot}: {a:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn no_pot_means_no_units_and_low_lut() {
+        let a = EngineAlloc::ilmpq(&DeviceModel::xc7z020(), false);
+        assert_eq!(a.pot_units, 0);
+        assert_eq!(a.pot_acc_dsps, 0);
+        // Fixed-only design: LUT% ~ overhead + DSP glue ~ 48% on Z020
+        // (paper Table I row 1: 49%).
+        assert!((0.40..0.55).contains(&a.lut_util()), "{}", a.lut_util());
+    }
+
+    #[test]
+    fn z045_fixed_only_lut_util_near_paper() {
+        let a = EngineAlloc::ilmpq(&DeviceModel::xc7z045(), false);
+        // Paper row 1 on Z045: 21% LUT.
+        assert!((0.15..0.35).contains(&a.lut_util()), "{}", a.lut_util());
+    }
+
+    #[test]
+    fn fixed4_rate_is_packing_factor_times_fixed8() {
+        let a = EngineAlloc::ilmpq(&DeviceModel::xc7z045(), true);
+        let ratio = a.fixed4_ops_per_sec() / a.fixed8_ops_per_sec();
+        assert!((ratio - FIXED4_MACS_PER_DSP).abs() < 1e-9);
+        assert!(ratio > 1.5, "packing must still win: {ratio}");
+    }
+
+    #[test]
+    fn pot_rate_beats_fixed4_on_both_devices() {
+        // The LUT fabric provides more MAC bandwidth than the DSPs — the
+        // reason the optimal ratio leans PoT-heavy (60-65%).
+        for d in DeviceModel::all() {
+            let a = EngineAlloc::ilmpq(&d, true);
+            assert!(
+                a.pot_ops_per_sec() > a.fixed4_ops_per_sec(),
+                "{}: pot {} vs fixed4 {}",
+                d.name,
+                a.pot_ops_per_sec(),
+                a.fixed4_ops_per_sec()
+            );
+        }
+    }
+
+    #[test]
+    fn prop_with_pot_units_always_fits() {
+        forall(
+            51,
+            64,
+            |r| (r.below(2), r.below(10_000) as u64),
+            |&(di, units)| {
+                let d = if di == 0 { DeviceModel::xc7z020() } else { DeviceModel::xc7z045() };
+                let a = EngineAlloc::with_pot_units(&d, units);
+                ensure(a.fits(), || format!("{a:?}"))?;
+                ensure(a.pot_units <= units.max(1), || "grew past request".into())
+            },
+        );
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        for d in DeviceModel::all() {
+            let a = EngineAlloc::ilmpq(&d, true);
+            assert!(a.lut_util() <= 1.0);
+            assert!(a.dsp_util(true) <= 1.0);
+            assert!(a.dsp_util(false) < 0.3); // PoT-only: few accumulator DSPs
+        }
+    }
+}

@@ -1,0 +1,25 @@
+//! # ILMPQ — Intra-Layer Multi-Precision Quantization framework for FPGA
+//!
+//! Full-system reproduction of Chang et al., *"ILMPQ: An Intra-Layer
+//! Multi-Precision Deep Neural Network Quantization framework for FPGA"*
+//! (2021), as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1/2** (build-time Python, `python/compile/`): Pallas
+//!   mixed-scheme quantization kernels + the QAT model, AOT-lowered to HLO
+//!   text artifacts.
+//! * **Layer 3** (this crate): the coordinator — quantization assignment,
+//!   bit-packing, the Zynq FPGA performance simulator, the offline ratio
+//!   search, an inference server with dynamic batching, and the Table-I
+//!   experiment harness — driving the AOT artifacts through PJRT.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod baselines;
+pub mod coordinator;
+pub mod experiments;
+pub mod fpga;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod util;

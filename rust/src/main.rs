@@ -1,0 +1,305 @@
+//! `ilmpq` — the coordinator CLI (launcher for every experiment).
+//!
+//! ```text
+//! ilmpq table1   [--device xc7z020|xc7z045|all]     Table I hardware columns
+//! ilmpq speedup                                     §III headline speedups
+//! ilmpq ratio-search [--device D] [--fixed8 5]      offline ratio sweep (§II-B)
+//! ilmpq assign --show [--ratio ilmpq2]              Figure 1 row map
+//! ilmpq accuracy [--steps N] [--config LABEL]       Table I accuracy rows (QAT)
+//! ilmpq train   [--steps N] [--ratio ilmpq2]        single QAT run + loss curve
+//! ilmpq serve   [--requests N] [--rate R]           serving demo (batcher+PJRT)
+//! ilmpq info                                        artifacts + manifest summary
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use ilmpq::baselines::table1::accuracy_configs;
+use ilmpq::coordinator::{ratio_search, trainer::Trainer, ServeConfig, Server};
+use ilmpq::experiments::{accuracy, figure1, ptq, table1};
+use ilmpq::fpga::DeviceModel;
+use ilmpq::model::resnet18;
+use ilmpq::runtime::Runtime;
+use ilmpq::util::{Args, Rng};
+
+fn main() {
+    let mut argv = std::env::args().skip(1);
+    let cmd = argv.next().unwrap_or_else(|| "help".to_string());
+    let code = match run(&cmd) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn devices(arg: &str) -> Vec<DeviceModel> {
+    match arg {
+        "all" => DeviceModel::all(),
+        name => vec![DeviceModel::by_name(name)
+            .unwrap_or_else(|| panic!("unknown device {name:?} (xc7z020|xc7z045|all)"))],
+    }
+}
+
+fn run(cmd: &str) -> Result<()> {
+    match cmd {
+        "table1" => {
+            let a = Args::parse_env("ilmpq table1", 2, &[("device", "xc7z020|xc7z045|all")]);
+            let net = resnet18();
+            for d in devices(a.str_or("device", "all")) {
+                let rows = table1::run_device(&d, &net);
+                println!("{}", table1::render(&d, &rows));
+                println!(
+                    "speedup vs (1): {:.2}x (paper: {})\n",
+                    table1::speedup(&rows),
+                    if d.name == "xc7z020" { "3.01x" } else { "3.65x" }
+                );
+            }
+            Ok(())
+        }
+        "speedup" => {
+            for (d, rows) in table1::run_all() {
+                println!(
+                    "{}: ILMPQ vs 8-bit-first/last fixed baseline: {:.2}x",
+                    d.name,
+                    table1::speedup(&rows)
+                );
+            }
+            Ok(())
+        }
+        "ratio-search" => {
+            let a = Args::parse_env(
+                "ilmpq ratio-search",
+                2,
+                &[
+                    ("device", "xc7z020|xc7z045|all"),
+                    ("fixed8", "Fixed-8 percentage (default 5)"),
+                    ("step", "sweep step in % (default 1)"),
+                ],
+            );
+            let net = resnet18();
+            for d in devices(a.str_or("device", "all")) {
+                let r = ratio_search::search(
+                    &net,
+                    &d,
+                    a.f64_or("fixed8", 5.0),
+                    a.f64_or("step", 1.0),
+                    95.0 - a.f64_or("fixed8", 5.0),
+                );
+                println!(
+                    "{}: best ratio {} -> {:.1} GOP/s, {:.1} ms (paper optimum: {})",
+                    d.name,
+                    r.best.ratio.label(),
+                    r.best.throughput_gops,
+                    r.best.latency_s * 1e3,
+                    if d.name == "xc7z020" { "60:35:5" } else { "65:30:5" }
+                );
+                for p in r.sweep.iter().step_by(10) {
+                    println!(
+                        "  pot {:>4.0}%  {:>7.1} GOP/s  {:>7.1} ms",
+                        p.ratio.pot4,
+                        p.throughput_gops,
+                        p.latency_s * 1e3
+                    );
+                }
+            }
+            Ok(())
+        }
+        "assign" => {
+            let a = Args::parse_env(
+                "ilmpq assign",
+                2,
+                &[("show!", "render the row map"), ("ratio", "manifest ratio name")],
+            );
+            let rt = Runtime::load_default()?;
+            let name = a.str_or("ratio", "ilmpq2");
+            let masks = rt
+                .manifest
+                .default_masks
+                .get(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown ratio {name}"))?;
+            println!("{}", figure1::render(masks));
+            Ok(())
+        }
+        "accuracy" => {
+            let a = Args::parse_env(
+                "ilmpq accuracy",
+                2,
+                &[
+                    ("steps", "QAT steps per config (default 300)"),
+                    ("config", "run only rows whose label contains this"),
+                    ("seed", "data order seed"),
+                ],
+            );
+            let rt = Runtime::load_default()?;
+            let steps = a.usize_or("steps", 300);
+            let seed = a.u64_or("seed", 2021);
+            let filter = a.get("config").map(str::to_string);
+            let mut rows = Vec::new();
+            for cfg in accuracy_configs() {
+                if let Some(f) = &filter {
+                    if !cfg.label.contains(f.as_str()) {
+                        continue;
+                    }
+                }
+                println!("[accuracy] {} ({})", cfg.label, cfg.ratio.label());
+                rows.push(accuracy::run_one(&rt, &cfg, steps, seed, |s| println!("{s}"))?);
+            }
+            println!("{}", accuracy::render(&rows));
+            Ok(())
+        }
+        "ptq" => {
+            let a = Args::parse_env(
+                "ilmpq ptq",
+                2,
+                &[
+                    ("steps", "reference training steps (default 800)"),
+                    ("seed", "reference training seed"),
+                    ("policies!", "also run the §II-C policy ablation"),
+                ],
+            );
+            let rt = Runtime::load_default()?;
+            let steps = a.usize_or("steps", 800);
+            let (float_acc, rows) =
+                ptq::run_all(&rt, steps, a.u64_or("seed", 2021), |s| println!("{s}"))?;
+            println!("{}", ptq::render(float_acc, &rows));
+            if a.flag("policies") {
+                let params =
+                    ptq::train_reference(&rt, steps, a.u64_or("seed", 2021), |_| {})?;
+                for (label, acc) in ptq::run_policies(&rt, &params, |s| println!("{s}"))? {
+                    println!("{label:<24} {acc:.2}%");
+                }
+            }
+            Ok(())
+        }
+        "train" => {
+            let a = Args::parse_env(
+                "ilmpq train",
+                2,
+                &[
+                    ("steps", "QAT steps (default 400)"),
+                    ("ratio", "manifest ratio name (default ilmpq2)"),
+                    ("seed", "data order seed"),
+                ],
+            );
+            let rt = Runtime::load_default()?;
+            let name = a.str_or("ratio", "ilmpq2");
+            let masks = rt
+                .manifest
+                .default_masks
+                .get(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown ratio {name}"))?
+                .clone();
+            let mut tr = Trainer::new(&rt, &masks, a.u64_or("seed", 2021))?;
+            tr.train(a.usize_or("steps", 400), 20, |s| {
+                println!(
+                    "step {:>4}  loss {:.4}  acc {:.3}  lr {:.4}",
+                    s.step, s.loss, s.acc, s.lr
+                );
+            })?;
+            let ev = tr.evaluate()?;
+            println!("final: test loss {:.4}  test acc {:.2}%", ev.loss, ev.acc * 100.0);
+            Ok(())
+        }
+        "serve" => {
+            let a = Args::parse_env(
+                "ilmpq serve",
+                2,
+                &[
+                    ("requests", "total requests (default 512)"),
+                    ("rate", "arrival rate req/s (default 2000)"),
+                    ("ratio", "manifest ratio name"),
+                    ("device", "FPGA-sim overlay device"),
+                    ("workers", "worker threads"),
+                ],
+            );
+            let rt = Arc::new(Runtime::load_default()?);
+            let name = a.str_or("ratio", "ilmpq2").to_string();
+            let masks = rt
+                .manifest
+                .default_masks
+                .get(&name)
+                .ok_or_else(|| anyhow::anyhow!("unknown ratio {name}"))?
+                .clone();
+            let params = rt.manifest.load_init_params()?;
+            let cfg = ServeConfig {
+                workers: a.usize_or("workers", 2),
+                ratio_name: name,
+                device: a.str_or("device", "xc7z045").to_string(),
+                ..Default::default()
+            };
+            let server = Server::start(rt.clone(), params, &masks, cfg)?;
+            println!("serving: sim FPGA {}", server.sim.row());
+            let n = a.usize_or("requests", 512);
+            let rate = a.f64_or("rate", 2000.0);
+            let img = rt.manifest.data.image_elems();
+            let mut rng = Rng::new(7);
+            let mut pending = Vec::new();
+            for _ in 0..n {
+                let mut image = vec![0f32; img];
+                rng.fill_normal(&mut image, 1.0);
+                pending.push(server.submit(image));
+                std::thread::sleep(std::time::Duration::from_secs_f64(rng.exp(rate)));
+            }
+            let mut ok = 0;
+            for rx in pending {
+                if rx.recv().is_ok() {
+                    ok += 1;
+                }
+            }
+            let metrics = server.stop();
+            println!("completed {ok}/{n}\n{}", metrics.report());
+            Ok(())
+        }
+        "info" => {
+            let rt = Runtime::load_default()?;
+            let m = &rt.manifest;
+            println!(
+                "model {} ({}x{}x{}, {} classes), {} params, {} quantized layers",
+                m.model_name,
+                m.height,
+                m.width,
+                m.channels,
+                m.classes,
+                m.params.len(),
+                m.quantized_layers.len()
+            );
+            println!("platform: {}", rt.engine.platform());
+            for (name, a) in &m.artifacts {
+                println!(
+                    "  artifact {:<12} {} inputs, {} outputs ({})",
+                    name,
+                    a.inputs.len(),
+                    a.outputs.len(),
+                    a.file.file_name().unwrap().to_string_lossy()
+                );
+            }
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n{HELP}");
+            std::process::exit(2);
+        }
+    }
+}
+
+const HELP: &str = "\
+ilmpq — Intra-Layer Multi-Precision Quantization framework (paper reproduction)
+
+commands:
+  table1        Table I hardware columns (FPGA sim, both devices)
+  speedup       headline speedups vs the 8-bit fixed baseline
+  ratio-search  offline PoT:Fixed4:Fixed8 sweep (paper §II-B)
+  assign        Figure 1: per-row scheme/precision map (--show --ratio NAME)
+  accuracy      Table I accuracy rows via QAT on the AOT model
+  ptq           deterministic PTQ probe (train once, quantize each config)
+  train         one QAT run with the loss curve
+  serve         inference serving demo (dynamic batching over PJRT)
+  info          manifest / artifacts summary
+run `ilmpq <cmd> --help` for options.";

@@ -1,0 +1,193 @@
+//! Layer descriptors: the network-geometry substrate.
+//!
+//! Every hardware number in Table I is a function of layer geometry (GEMM
+//! dims, op counts, weight/activation footprints), so this module is the
+//! single source of truth for those. Conv layers are described in their
+//! im2col GEMM view: `M = out_channels` (rows, the ILMPQ granularity),
+//! `K = k*k*in_channels` (fan-in), `N = out_h*out_w` (pixels).
+
+/// One layer of a network, as the FPGA sees it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerDesc {
+    pub name: String,
+    pub kind: LayerKind,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum LayerKind {
+    Conv {
+        k: usize,
+        stride: usize,
+        in_ch: usize,
+        out_ch: usize,
+        in_h: usize,
+        in_w: usize,
+    },
+    Fc {
+        in_f: usize,
+        out_f: usize,
+    },
+}
+
+/// im2col GEMM dimensions of a layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmDims {
+    /// Rows = output channels (the ILMPQ row granularity).
+    pub m: usize,
+    /// Contraction = fan-in (k*k*in_ch).
+    pub k: usize,
+    /// Columns = output pixels (1 for fc).
+    pub n: usize,
+}
+
+impl LayerDesc {
+    pub fn conv(
+        name: &str,
+        k: usize,
+        stride: usize,
+        in_ch: usize,
+        out_ch: usize,
+        in_h: usize,
+        in_w: usize,
+    ) -> LayerDesc {
+        LayerDesc {
+            name: name.to_string(),
+            kind: LayerKind::Conv { k, stride, in_ch, out_ch, in_h, in_w },
+        }
+    }
+
+    pub fn fc(name: &str, in_f: usize, out_f: usize) -> LayerDesc {
+        LayerDesc { name: name.to_string(), kind: LayerKind::Fc { in_f, out_f } }
+    }
+
+    /// Output spatial dims (SAME padding, as both the paper's ResNet and the
+    /// L2 model use).
+    pub fn out_hw(&self) -> (usize, usize) {
+        match self.kind {
+            LayerKind::Conv { stride, in_h, in_w, .. } => {
+                (in_h.div_ceil(stride), in_w.div_ceil(stride))
+            }
+            LayerKind::Fc { .. } => (1, 1),
+        }
+    }
+
+    pub fn gemm(&self) -> GemmDims {
+        match self.kind {
+            LayerKind::Conv { k, in_ch, out_ch, .. } => {
+                let (oh, ow) = self.out_hw();
+                GemmDims { m: out_ch, k: k * k * in_ch, n: oh * ow }
+            }
+            LayerKind::Fc { in_f, out_f } => GemmDims { m: out_f, k: in_f, n: 1 },
+        }
+    }
+
+    /// Multiply-accumulates for one input image.
+    pub fn macs(&self) -> u64 {
+        let g = self.gemm();
+        (g.m as u64) * (g.k as u64) * (g.n as u64)
+    }
+
+    /// Ops (2 per MAC, the GOP/s convention the paper reports).
+    pub fn ops(&self) -> u64 {
+        2 * self.macs()
+    }
+
+    /// Weight element count.
+    pub fn weights(&self) -> u64 {
+        let g = self.gemm();
+        (g.m as u64) * (g.k as u64)
+    }
+
+    /// ILMPQ rows (= output channels).
+    pub fn rows(&self) -> usize {
+        self.gemm().m
+    }
+
+    /// Input/output activation element counts for one image.
+    pub fn activations(&self) -> (u64, u64) {
+        match self.kind {
+            LayerKind::Conv { in_ch, out_ch, in_h, in_w, .. } => {
+                let (oh, ow) = self.out_hw();
+                (
+                    (in_ch * in_h * in_w) as u64,
+                    (out_ch * oh * ow) as u64,
+                )
+            }
+            LayerKind::Fc { in_f, out_f } => (in_f as u64, out_f as u64),
+        }
+    }
+}
+
+/// A whole network: ordered layers + metadata.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub name: String,
+    pub layers: Vec<LayerDesc>,
+}
+
+impl Network {
+    pub fn total_ops(&self) -> u64 {
+        self.layers.iter().map(|l| l.ops()).sum()
+    }
+
+    pub fn total_gops(&self) -> f64 {
+        self.total_ops() as f64 / 1e9
+    }
+
+    pub fn total_weights(&self) -> u64 {
+        self.layers.iter().map(|l| l.weights()).sum()
+    }
+
+    pub fn total_rows(&self) -> usize {
+        self.layers.iter().map(|l| l.rows()).sum()
+    }
+
+    /// First/last layer indices (the layers prior work kept at 8 bits).
+    pub fn first_last(&self) -> (usize, usize) {
+        (0, self.layers.len() - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_gemm_dims() {
+        let l = LayerDesc::conv("c", 3, 1, 16, 32, 8, 8);
+        assert_eq!(l.gemm(), GemmDims { m: 32, k: 144, n: 64 });
+        assert_eq!(l.macs(), 32 * 144 * 64);
+        assert_eq!(l.ops(), 2 * 32 * 144 * 64);
+        assert_eq!(l.rows(), 32);
+    }
+
+    #[test]
+    fn strided_conv_same_padding() {
+        let l = LayerDesc::conv("c", 3, 2, 16, 32, 9, 9);
+        assert_eq!(l.out_hw(), (5, 5)); // ceil(9/2)
+        let l = LayerDesc::conv("c", 7, 2, 3, 64, 224, 224);
+        assert_eq!(l.out_hw(), (112, 112));
+    }
+
+    #[test]
+    fn fc_dims() {
+        let l = LayerDesc::fc("fc", 512, 1000);
+        assert_eq!(l.gemm(), GemmDims { m: 1000, k: 512, n: 1 });
+        assert_eq!(l.weights(), 512_000);
+        assert_eq!(l.activations(), (512, 1000));
+    }
+
+    #[test]
+    fn network_totals() {
+        let net = Network {
+            name: "t".into(),
+            layers: vec![
+                LayerDesc::conv("a", 3, 1, 3, 8, 4, 4),
+                LayerDesc::fc("b", 8, 10),
+            ],
+        };
+        assert_eq!(net.total_ops(), net.layers[0].ops() + net.layers[1].ops());
+        assert_eq!(net.first_last(), (0, 1));
+        assert_eq!(net.total_rows(), 18);
+    }
+}

@@ -1,0 +1,9 @@
+//! Network-geometry substrate: layer descriptors, the paper's ResNet-18
+//! table, and the model zoo used by examples and benches.
+
+pub mod layer;
+pub mod resnet18;
+pub mod zoo;
+
+pub use layer::{GemmDims, LayerDesc, LayerKind, Network};
+pub use resnet18::resnet18;

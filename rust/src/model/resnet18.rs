@@ -1,0 +1,126 @@
+//! The exact ImageNet ResNet-18 layer table (the paper's Table-I workload).
+//!
+//! All Table-I hardware numbers are simulated against this geometry; its
+//! total of ~3.63 GOPs is what makes the paper's latency = GOPs / GOP/s
+//! columns self-consistent (e.g. 115.6 GOP/s * 31.4 ms ~ 3.63 GOP), which the
+//! tests assert as a calibration anchor.
+
+use super::layer::{LayerDesc, Network};
+
+/// Build the ResNet-18 (ImageNet, 224x224 input) conv/fc inventory.
+///
+/// Downsample (projection) 1x1 convs of stages 2-4 are included; max-pool
+/// and batchnorm contribute no MACs and are folded into the buffer pass of
+/// the performance model.
+pub fn resnet18() -> Network {
+    let mut layers = vec![LayerDesc::conv("conv1", 7, 2, 3, 64, 224, 224)];
+    // After conv1 (112x112) + 3x3/2 maxpool -> 56x56.
+    let cfg: &[(usize, usize, usize, usize)] = &[
+        // (stage, in_ch, out_ch, in_hw at stage entry)
+        (1, 64, 64, 56),
+        (2, 64, 128, 56),
+        (3, 128, 256, 28),
+        (4, 256, 512, 14),
+    ];
+    for &(stage, in_ch, out_ch, in_hw) in cfg {
+        let stride = if stage == 1 { 1 } else { 2 };
+        let out_hw = in_hw / stride;
+        // Block 1 (possibly strided, with projection shortcut).
+        layers.push(LayerDesc::conv(
+            &format!("layer{stage}.0.conv1"),
+            3,
+            stride,
+            in_ch,
+            out_ch,
+            in_hw,
+            in_hw,
+        ));
+        layers.push(LayerDesc::conv(
+            &format!("layer{stage}.0.conv2"),
+            3,
+            1,
+            out_ch,
+            out_ch,
+            out_hw,
+            out_hw,
+        ));
+        if stride != 1 || in_ch != out_ch {
+            layers.push(LayerDesc::conv(
+                &format!("layer{stage}.0.downsample"),
+                1,
+                stride,
+                in_ch,
+                out_ch,
+                in_hw,
+                in_hw,
+            ));
+        }
+        // Block 2 (identity shortcut).
+        layers.push(LayerDesc::conv(
+            &format!("layer{stage}.1.conv1"),
+            3,
+            1,
+            out_ch,
+            out_ch,
+            out_hw,
+            out_hw,
+        ));
+        layers.push(LayerDesc::conv(
+            &format!("layer{stage}.1.conv2"),
+            3,
+            1,
+            out_ch,
+            out_ch,
+            out_hw,
+            out_hw,
+        ));
+    }
+    layers.push(LayerDesc::fc("fc", 512, 1000));
+    Network { name: "resnet18".into(), layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_count() {
+        // 1 stem + 4 stages * (4 convs + downsample for stages 2-4) + fc
+        // = 1 + (4 + 5*3) + 1 = 21 parametric layers.
+        assert_eq!(resnet18().layers.len(), 21);
+    }
+
+    #[test]
+    fn total_gops_matches_paper_anchor() {
+        // Paper's implied total: throughput * latency ~ 3.62-3.64 GOPs
+        // (e.g. XC7Z045 rows: 115.6 GOP/s * 31.4 ms = 3.63).
+        let g = resnet18().total_gops();
+        assert!((3.55..3.75).contains(&g), "GOPs {g}");
+    }
+
+    #[test]
+    fn conv1_geometry() {
+        let net = resnet18();
+        let c1 = &net.layers[0];
+        assert_eq!(c1.out_hw(), (112, 112));
+        // 64 * 3*49 * 112^2 MACs = 118M -> 0.236 GOPs.
+        assert!((c1.ops() as f64 / 1e9 - 0.236).abs() < 0.005);
+    }
+
+    #[test]
+    fn weights_match_conv_fc_total() {
+        // ResNet-18 conv+fc weights ~ 11.68M (excluding BN).
+        let w = resnet18().total_weights() as f64 / 1e6;
+        assert!((11.0..11.8).contains(&w), "weights {w}M");
+    }
+
+    #[test]
+    fn first_last_share_of_ops_is_small() {
+        // conv1 + fc ~ 6.6% of ops: the reason inter-layer schemes waste PEs.
+        let net = resnet18();
+        let (f, l) = net.first_last();
+        let share = (net.layers[f].ops() + net.layers[l].ops()) as f64
+            / net.total_ops() as f64;
+        assert!((0.05..0.09).contains(&share), "share {share}");
+    }
+}

@@ -1,0 +1,137 @@
+//! Model zoo: the L2 TinyResNet (mirroring `python/compile/model.py`) plus
+//! extra workloads (VGG-11, a 4-layer CNN) for the domain examples and the
+//! generality ablation — the paper's claim is that one PE configuration
+//! serves *any* network once the intra-layer mix is uniform.
+
+use super::layer::{LayerDesc, Network};
+
+/// The AOT-compiled TinyResNet geometry. Must mirror
+/// `python/compile/model.py::layer_defs` — the manifest agreement test
+/// cross-checks rows/fan-in per quantized layer.
+pub fn tinyresnet(height: usize, width: usize, channels: usize, widths: &[usize], classes: usize) -> Network {
+    let mut layers = Vec::new();
+    let w0 = widths[0];
+    layers.push(LayerDesc::conv("stem/w", 3, 1, channels, w0, height, width));
+    let mut prev = w0;
+    let (mut h, mut w) = (height, width);
+    for (si, &wch) in widths.iter().enumerate() {
+        let stride = if prev == wch { 1 } else { 2 };
+        layers.push(LayerDesc::conv(&format!("s{si}/c1/w"), 3, stride, prev, wch, h, w));
+        h = h.div_ceil(stride);
+        w = w.div_ceil(stride);
+        layers.push(LayerDesc::conv(&format!("s{si}/c2/w"), 3, 1, wch, wch, h, w));
+        if prev != wch {
+            layers.push(LayerDesc::conv(
+                &format!("s{si}/proj/w"),
+                1,
+                stride,
+                prev,
+                wch,
+                h * stride,
+                w * stride,
+            ));
+        }
+        prev = wch;
+    }
+    layers.push(LayerDesc::fc("fc/w", prev, classes));
+    Network { name: "tinyresnet".into(), layers }
+}
+
+/// Default TinyResNet (16x16x3, widths 16/32/64, 10 classes).
+pub fn tinyresnet_default() -> Network {
+    tinyresnet(16, 16, 3, &[16, 32, 64], 10)
+}
+
+/// VGG-11 on 224x224 ImageNet — a second real workload for the benches.
+pub fn vgg11() -> Network {
+    let cfg: &[(usize, usize, usize)] = &[
+        // (in_ch, out_ch, in_hw)
+        (3, 64, 224),
+        (64, 128, 112),
+        (128, 256, 56),
+        (256, 256, 56),
+        (256, 512, 28),
+        (512, 512, 28),
+        (512, 512, 14),
+        (512, 512, 14),
+    ];
+    let mut layers = Vec::new();
+    for (i, &(ic, oc, hw)) in cfg.iter().enumerate() {
+        layers.push(LayerDesc::conv(&format!("conv{}", i + 1), 3, 1, ic, oc, hw, hw));
+    }
+    layers.push(LayerDesc::fc("fc1", 512 * 7 * 7, 4096));
+    layers.push(LayerDesc::fc("fc2", 4096, 4096));
+    layers.push(LayerDesc::fc("fc3", 4096, 1000));
+    Network { name: "vgg11".into(), layers }
+}
+
+/// Small 4-conv CNN (edge-vision style) — third example workload.
+pub fn cnn_small() -> Network {
+    Network {
+        name: "cnn-small".into(),
+        layers: vec![
+            LayerDesc::conv("c1", 3, 1, 3, 32, 32, 32),
+            LayerDesc::conv("c2", 3, 2, 32, 64, 32, 32),
+            LayerDesc::conv("c3", 3, 2, 64, 128, 16, 16),
+            LayerDesc::conv("c4", 3, 2, 128, 128, 8, 8),
+            LayerDesc::fc("fc", 128 * 4 * 4, 10),
+        ],
+    }
+}
+
+/// Look up a zoo network by name (CLI surface).
+pub fn by_name(name: &str) -> Option<Network> {
+    match name {
+        "resnet18" => Some(super::resnet18::resnet18()),
+        "tinyresnet" => Some(tinyresnet_default()),
+        "vgg11" => Some(vgg11()),
+        "cnn-small" => Some(cnn_small()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tinyresnet_matches_python_layer_list() {
+        let net = tinyresnet_default();
+        let names: Vec<&str> = net.layers.iter().map(|l| l.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "stem/w", "s0/c1/w", "s0/c2/w", "s1/c1/w", "s1/c2/w", "s1/proj/w",
+                "s2/c1/w", "s2/c2/w", "s2/proj/w", "fc/w",
+            ]
+        );
+        // Row counts = out channels.
+        assert_eq!(net.layers[0].rows(), 16);
+        assert_eq!(net.layers[5].rows(), 32);
+        assert_eq!(net.layers[9].rows(), 10);
+    }
+
+    #[test]
+    fn tinyresnet_spatial_dims() {
+        let net = tinyresnet_default();
+        // s1/c1 strides 16->8, s2/c1 strides 8->4.
+        assert_eq!(net.layers[3].out_hw(), (8, 8));
+        assert_eq!(net.layers[6].out_hw(), (4, 4));
+    }
+
+    #[test]
+    fn vgg11_is_heavier_than_resnet18() {
+        assert!(vgg11().total_gops() > super::super::resnet18::resnet18().total_gops());
+        // VGG-11: ~15.2 GOPs.
+        let g = vgg11().total_gops();
+        assert!((14.0..16.5).contains(&g), "GOPs {g}");
+    }
+
+    #[test]
+    fn zoo_lookup() {
+        for n in ["resnet18", "tinyresnet", "vgg11", "cnn-small"] {
+            assert!(by_name(n).is_some(), "{n}");
+        }
+        assert!(by_name("nope").is_none());
+    }
+}

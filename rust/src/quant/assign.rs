@@ -1,0 +1,259 @@
+//! Assignment policy: which rows get 8 bits, which 4-bit rows get PoT.
+//!
+//! Mirror of `python/compile/assign.py` (paper §II-C): the top `frac8`
+//! rows by Hessian eigenvalue are Fixed-8 (at least one row when
+//! `frac8 > 0`), and among the remaining 4-bit rows the lowest-variance
+//! `pot_share` fraction are PoT-4. Sorting matches numpy's stable argsort so
+//! the Rust and Python masks are identical on identical inputs (checked by
+//! `rust/tests/manifest_agreement.rs`).
+
+use super::{Ratio, Scheme};
+use crate::util::stats::variance_f32;
+
+/// Per-layer row masks (the runtime inputs of every AOT artifact).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerMasks {
+    pub layer: String,
+    pub is8: Vec<f32>,
+    pub is_pot: Vec<f32>,
+}
+
+impl LayerMasks {
+    pub fn rows(&self) -> usize {
+        self.is8.len()
+    }
+
+    pub fn scheme_of(&self, row: usize) -> Scheme {
+        if self.is8[row] > 0.5 {
+            Scheme::Fixed8
+        } else if self.is_pot[row] > 0.5 {
+            Scheme::Pot4
+        } else {
+            Scheme::Fixed4
+        }
+    }
+
+    /// (n_pot4, n_fixed4, n_fixed8) row counts.
+    pub fn counts(&self) -> (usize, usize, usize) {
+        let n8 = self.is8.iter().filter(|&&v| v > 0.5).count();
+        let np = self.is_pot.iter().filter(|&&v| v > 0.5).count();
+        (np, self.rows() - n8 - np, n8)
+    }
+
+    /// Fraction of *ops* in each scheme — rows are equal-cost within a layer
+    /// (same fan-in), so op fractions equal row fractions.
+    pub fn op_fractions(&self) -> (f64, f64, f64) {
+        let (p, f4, f8) = self.counts();
+        let n = self.rows() as f64;
+        (p as f64 / n, f4 as f64 / n, f8 as f64 / n)
+    }
+}
+
+/// All layers' masks for one configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MaskSet {
+    pub name: String,
+    pub layers: Vec<LayerMasks>,
+}
+
+impl MaskSet {
+    pub fn layer(&self, name: &str) -> Option<&LayerMasks> {
+        self.layers.iter().find(|l| l.layer == name)
+    }
+
+    /// Aggregate scheme fractions over all rows (reporting).
+    pub fn total_fractions(&self) -> (f64, f64, f64) {
+        let (mut p, mut f4, mut f8, mut n) = (0usize, 0usize, 0usize, 0usize);
+        for l in &self.layers {
+            let (a, b, c) = l.counts();
+            p += a;
+            f4 += b;
+            f8 += c;
+            n += l.rows();
+        }
+        let n = n.max(1) as f64;
+        (p as f64 / n, f4 as f64 / n, f8 as f64 / n)
+    }
+}
+
+/// Stable argsort descending (numpy `argsort(-x, kind="stable")`).
+fn argsort_desc(xs: &[f64]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| {
+        xs[b].partial_cmp(&xs[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    idx
+}
+
+/// Stable argsort ascending.
+fn argsort_asc(xs: &[f64]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| {
+        xs[a].partial_cmp(&xs[b]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    idx
+}
+
+/// Top-`frac8` rows by eigenvalue -> 8-bit. At least one row when frac8 > 0.
+pub fn assign_bits(eigs: &[f64], frac8: f64) -> Vec<f32> {
+    let rows = eigs.len();
+    let n8 = if frac8 <= 0.0 {
+        0
+    } else {
+        ((rows as f64 * frac8).round() as usize).max(1)
+    };
+    let mut is8 = vec![0f32; rows];
+    for &i in argsort_desc(eigs).iter().take(n8) {
+        is8[i] = 1.0;
+    }
+    is8
+}
+
+/// Lowest-variance 4-bit rows -> PoT. `rows` is the (rows, fan_in) GEMM view.
+pub fn assign_schemes(rows: &[Vec<f32>], is8: &[f32], pot_share: f64) -> Vec<f32> {
+    let var: Vec<f64> = rows.iter().map(|r| variance_f32(r)).collect();
+    let four_bit: Vec<usize> = (0..rows.len()).filter(|&i| is8[i] < 0.5).collect();
+    let n_pot = (four_bit.len() as f64 * pot_share).round() as usize;
+    let mut is_pot = vec![0f32; rows.len()];
+    if n_pot > 0 {
+        let four_var: Vec<f64> = four_bit.iter().map(|&i| var[i]).collect();
+        for &k in argsort_asc(&four_var).iter().take(n_pot) {
+            is_pot[four_bit[k]] = 1.0;
+        }
+    }
+    is_pot
+}
+
+/// Full assignment for one layer from its GEMM-view rows + sensitivities.
+pub fn assign_layer(
+    layer: &str,
+    rows: &[Vec<f32>],
+    eigs: &[f64],
+    ratio: Ratio,
+) -> LayerMasks {
+    assert_eq!(rows.len(), eigs.len(), "{layer}: rows vs eigs mismatch");
+    let is8 = assign_bits(eigs, ratio.frac8());
+    let is_pot = assign_schemes(rows, &is8, ratio.pot_share_of_4bit());
+    LayerMasks { layer: layer.to_string(), is8, is_pot }
+}
+
+/// The prior-work baseline: whole layer forced to one scheme, with optional
+/// Fixed-8 first/last layers (Table I rows 1/3/5/7/8).
+pub fn assign_uniform_layer(
+    layer: &str,
+    rows: usize,
+    scheme: Scheme,
+) -> LayerMasks {
+    let (is8v, ipotv) = match scheme {
+        Scheme::Fixed8 => (1.0, 0.0),
+        Scheme::Pot4 => (0.0, 1.0),
+        Scheme::Fixed4 => (0.0, 0.0),
+    };
+    LayerMasks {
+        layer: layer.to_string(),
+        is8: vec![is8v; rows],
+        is_pot: vec![ipotv; rows],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{ensure, forall};
+    use crate::util::Rng;
+
+    #[test]
+    fn bits_pick_top_eigs() {
+        let eigs = vec![0.1, 5.0, 0.2, 4.0, 0.3];
+        let is8 = assign_bits(&eigs, 0.4); // 2 rows
+        assert_eq!(is8, vec![0.0, 1.0, 0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn bits_at_least_one_when_nonzero() {
+        let is8 = assign_bits(&[1.0; 16], 0.05); // 0.8 rounds to 1
+        assert_eq!(is8.iter().filter(|&&v| v > 0.5).count(), 1);
+        assert_eq!(assign_bits(&[1.0; 16], 0.0).iter().sum::<f32>(), 0.0);
+    }
+
+    #[test]
+    fn bits_tie_breaks_to_lower_index() {
+        let is8 = assign_bits(&[2.0, 2.0, 2.0, 2.0], 0.5);
+        assert_eq!(is8, vec![1.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn schemes_pick_low_variance() {
+        let rows = vec![
+            vec![0.0, 0.0, 0.1],   // tiny variance -> PoT
+            vec![-3.0, 3.0, 0.0],  // large variance -> Fixed
+            vec![0.0, 0.05, 0.0],  // tiny variance -> PoT
+            vec![-2.0, 2.0, 1.0],  // large variance -> Fixed
+        ];
+        let is8 = vec![0.0; 4];
+        let ipot = assign_schemes(&rows, &is8, 0.5);
+        assert_eq!(ipot, vec![1.0, 0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn eight_bit_rows_never_pot() {
+        let rows = vec![vec![0.0, 0.01]; 6];
+        let is8 = vec![1.0, 0.0, 1.0, 0.0, 0.0, 0.0];
+        let ipot = assign_schemes(&rows, &is8, 1.0);
+        for (i, &p) in ipot.iter().enumerate() {
+            assert!(!(is8[i] > 0.5 && p > 0.5), "row {i} both 8-bit and PoT");
+        }
+        assert_eq!(ipot.iter().sum::<f32>(), 4.0);
+    }
+
+    #[test]
+    fn prop_masks_disjoint_and_ratio_respected() {
+        forall(
+            31,
+            64,
+            |r: &mut Rng| {
+                let rows = r.range_usize(4, 64);
+                let fan = r.range_usize(3, 20);
+                let data: Vec<Vec<f32>> = (0..rows)
+                    .map(|_| (0..fan).map(|_| r.normal()).collect())
+                    .collect();
+                let eigs: Vec<f64> = (0..rows).map(|_| r.f64() * 10.0).collect();
+                (data, eigs)
+            },
+            |(data, eigs)| {
+                let ratio = Ratio::new(60.0, 35.0, 5.0);
+                let m = assign_layer("t", data, eigs, ratio);
+                let (np, nf4, n8) = m.counts();
+                ensure(np + nf4 + n8 == m.rows(), || "counts don't partition".into())?;
+                // n8 = max(1, round(5% rows))
+                let want8 = ((m.rows() as f64 * 0.05).round() as usize).max(1);
+                ensure(n8 == want8, || format!("n8 {n8} != {want8}"))?;
+                // PoT share of 4-bit rows ~ 60/95.
+                let want_pot =
+                    (((m.rows() - n8) as f64) * (60.0 / 95.0)).round() as usize;
+                ensure(np == want_pot, || format!("np {np} != {want_pot}"))
+            },
+        );
+    }
+
+    #[test]
+    fn uniform_layers() {
+        let m = assign_uniform_layer("l", 8, Scheme::Pot4);
+        assert_eq!(m.counts(), (8, 0, 0));
+        let m = assign_uniform_layer("l", 8, Scheme::Fixed8);
+        assert_eq!(m.counts(), (0, 0, 8));
+        assert_eq!(m.scheme_of(0), Scheme::Fixed8);
+    }
+
+    #[test]
+    fn op_fractions_sum_to_one() {
+        let m = LayerMasks {
+            layer: "t".into(),
+            is8: vec![1.0, 0.0, 0.0, 0.0],
+            is_pot: vec![0.0, 1.0, 1.0, 0.0],
+        };
+        let (p, f4, f8) = m.op_fractions();
+        assert!((p + f4 + f8 - 1.0).abs() < 1e-12);
+        assert_eq!(m.counts(), (2, 1, 1));
+    }
+}

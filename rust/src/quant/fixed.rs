@@ -1,0 +1,119 @@
+//! Symmetric uniform fixed-point quantizer (Fixed-4 / Fixed-8).
+//!
+//! Bit-exact mirror of `python/compile/quant.py::quantize_fixed` /
+//! `fixed_codes`: levels are `q/Q * scale` for integer `q in [-Q, Q]`,
+//! `Q = 2^(bits-1) - 1`, with round-half-away-from-zero (numpy/jnp
+//! `round` on `.5` boundaries after the multiply behaves like Rust's
+//! `f32::round` for the magnitudes involved; the agreement test replays the
+//! Python codes to confirm).
+
+/// Largest magnitude code for a bit width: 7 for 4-bit, 127 for 8-bit.
+pub fn qmax(bits: u32) -> f32 {
+    ((1i32 << (bits - 1)) - 1) as f32
+}
+
+/// Integer code for one weight: `clip(round(w/scale * Q), -Q, Q)`.
+pub fn code(w: f32, bits: u32, scale: f32) -> i32 {
+    let q = qmax(bits);
+    (w / scale * q).round().clamp(-q, q) as i32
+}
+
+/// Dequantize a code: `q * scale / Q`.
+pub fn dequant(code: i32, bits: u32, scale: f32) -> f32 {
+    code as f32 * (scale / qmax(bits))
+}
+
+/// Fake-quant one value (quantize -> dequantize).
+pub fn fake_quant(w: f32, bits: u32, scale: f32) -> f32 {
+    dequant(code(w, bits, scale), bits, scale)
+}
+
+/// Fake-quant a whole row with its own max-abs scale.
+pub fn fake_quant_row(row: &[f32], bits: u32) -> Vec<f32> {
+    let s = super::row_scale(row);
+    row.iter().map(|&w| fake_quant(w, bits, s)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{ensure, forall};
+
+    #[test]
+    fn qmax_values() {
+        assert_eq!(qmax(4), 7.0);
+        assert_eq!(qmax(8), 127.0);
+        assert_eq!(qmax(2), 1.0);
+    }
+
+    #[test]
+    fn known_codes() {
+        // scale 1, 4 bits: levels k/7.
+        assert_eq!(code(1.0, 4, 1.0), 7);
+        assert_eq!(code(-1.0, 4, 1.0), -7);
+        assert_eq!(code(0.0, 4, 1.0), 0);
+        assert_eq!(code(0.5, 4, 1.0), 4); // 3.5 rounds away from zero
+        assert_eq!(code(10.0, 4, 1.0), 7); // clipped
+    }
+
+    #[test]
+    fn prop_error_bounded_by_half_step() {
+        // |w - fq(w)| <= scale / (2 Q) for in-range w.
+        forall(
+            11,
+            256,
+            |r| {
+                let bits = if r.bool(0.5) { 4 } else { 8 };
+                let scale = r.range_f32(0.05, 10.0);
+                let w = r.range_f32(-1.0, 1.0) * scale;
+                (w, bits, scale)
+            },
+            |&(w, bits, scale)| {
+                let err = (w - fake_quant(w, bits, scale)).abs();
+                let half_step = scale / (2.0 * qmax(bits));
+                ensure(err <= half_step * 1.0001, || {
+                    format!("err {err} > half step {half_step}")
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn prop_idempotent() {
+        forall(
+            12,
+            256,
+            |r| {
+                let bits = if r.bool(0.5) { 4 } else { 8 };
+                (r.normal() * 2.0, bits, r.range_f32(0.5, 4.0))
+            },
+            |&(w, bits, scale)| {
+                let once = fake_quant(w, bits, scale);
+                let twice = fake_quant(once, bits, scale);
+                ensure((once - twice).abs() < 1e-7, || format!("{once} vs {twice}"))
+            },
+        );
+    }
+
+    #[test]
+    fn prop_odd_symmetry() {
+        forall(
+            13,
+            256,
+            |r| (r.normal() * 3.0, r.range_f32(0.5, 4.0)),
+            |&(w, scale)| {
+                let a = fake_quant(w, 4, scale);
+                let b = fake_quant(-w, 4, scale);
+                ensure((a + b).abs() < 1e-7, || format!("{a} vs {b}"))
+            },
+        );
+    }
+
+    #[test]
+    fn row_uses_maxabs_scale() {
+        let row = [0.1f32, -2.0, 0.5];
+        let fq = fake_quant_row(&row, 8);
+        // max element is exactly representable (code ±127).
+        assert!((fq[1] + 2.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,125 @@
+//! Weight freezing: apply the row-wise mixed fake-quant to parameter
+//! tensors *once*, in Rust — the software analogue of writing the
+//! pre-quantized BRAM image on the FPGA.
+//!
+//! The serving fast path feeds frozen weights to the `infer_frozen_b{N}`
+//! artifacts (no fake-quant ops in the graph). Because the Rust quantizers
+//! are bit-exact mirrors of the Pallas kernel and fake-quant is idempotent
+//! (both property-tested), `infer(params, masks) == infer_frozen(freeze(
+//! params, masks))` to float tolerance — asserted by `e2e_runtime.rs`.
+
+use super::{fixed, gemmview, pot, row_scale, LayerMasks, MaskSet, Scheme};
+use crate::runtime::HostTensor;
+
+/// Fake-quant one weight tensor under its layer masks.
+pub fn freeze_tensor(t: &HostTensor, masks: &LayerMasks) -> HostTensor {
+    let mut rows = gemmview::gemm_rows(t);
+    assert_eq!(rows.len(), masks.rows(), "{}: rows mismatch", masks.layer);
+    for (r, row) in rows.iter_mut().enumerate() {
+        let scale = row_scale(row);
+        match masks.scheme_of(r) {
+            Scheme::Fixed8 => {
+                for v in row.iter_mut() {
+                    *v = fixed::fake_quant(*v, 8, scale);
+                }
+            }
+            Scheme::Fixed4 => {
+                for v in row.iter_mut() {
+                    *v = fixed::fake_quant(*v, 4, scale);
+                }
+            }
+            Scheme::Pot4 => {
+                for v in row.iter_mut() {
+                    *v = pot::fake_quant(*v, 4, scale);
+                }
+            }
+        }
+    }
+    gemmview::from_gemm_rows(&rows, &t.shape)
+}
+
+/// Freeze a full parameter list (AOT order). `quantized` maps layer name ->
+/// param index; non-quantized params (biases) pass through untouched.
+pub fn freeze_params(
+    params: &[HostTensor],
+    param_names: &[String],
+    masks: &MaskSet,
+) -> Vec<HostTensor> {
+    params
+        .iter()
+        .zip(param_names)
+        .map(|(t, name)| match masks.layer(name) {
+            Some(lm) => freeze_tensor(t, lm),
+            None => t.clone(),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::assign::assign_uniform_layer;
+    use crate::util::prop::{assert_close, forall};
+    use crate::util::Rng;
+
+    fn random_tensor(r: &mut Rng, shape: Vec<usize>) -> HostTensor {
+        let n: usize = shape.iter().product();
+        let data = (0..n).map(|_| r.normal()).collect();
+        HostTensor::f32(shape, data)
+    }
+
+    #[test]
+    fn prop_freeze_is_idempotent() {
+        forall(
+            101,
+            32,
+            |r: &mut Rng| {
+                let rows = r.range_usize(2, 12);
+                let t = random_tensor(r, vec![2, 2, 3, rows]);
+                let masks = crate::fpga::sim::synth_masks(
+                    "t",
+                    rows,
+                    crate::quant::Ratio::new(60.0, 35.0, 5.0),
+                );
+                (t, masks)
+            },
+            |(t, masks)| {
+                let once = freeze_tensor(t, masks);
+                let twice = freeze_tensor(&once, masks);
+                assert_close(twice.as_f32(), once.as_f32(), 1e-6, "idempotence")
+            },
+        );
+    }
+
+    #[test]
+    fn freeze_fixed8_bounded_error() {
+        let mut r = Rng::new(3);
+        let t = random_tensor(&mut r, vec![4, 16]);
+        let masks = assign_uniform_layer("t", 4, Scheme::Fixed8);
+        let f = freeze_tensor(&t, &masks);
+        for (row_orig, row_q) in gemmview::gemm_rows(&t).iter().zip(gemmview::gemm_rows(&f)) {
+            let scale = row_scale(row_orig);
+            for (a, b) in row_orig.iter().zip(&row_q) {
+                assert!((a - b).abs() <= scale / 254.0 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn non_quantized_params_pass_through() {
+        let mut r = Rng::new(5);
+        let w = random_tensor(&mut r, vec![3, 4]);
+        let b = random_tensor(&mut r, vec![3]);
+        let masks = MaskSet {
+            name: "t".into(),
+            layers: vec![assign_uniform_layer("w", 3, Scheme::Pot4)],
+        };
+        let out = freeze_params(
+            &[w.clone(), b.clone()],
+            &["w".to_string(), "b".to_string()],
+            &masks,
+        );
+        assert_ne!(out[0], w); // quantized
+        assert_eq!(out[1], b); // untouched
+    }
+}

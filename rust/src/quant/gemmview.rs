@@ -1,0 +1,120 @@
+//! GEMM (row-major filter) views of weight tensors.
+//!
+//! The L2 model stores conv weights HWIO (`h, w, in, out`) — JAX's default —
+//! while ILMPQ reasons per *filter row* (`out, h*w*in`). This module extracts
+//! that view from flat HostTensor data, mirroring
+//! `python/compile/assign.py::gemm_view_np` exactly (transpose to OHWI then
+//! flatten), so row variances and packed codes agree bit-for-bit across the
+//! language boundary.
+
+use crate::runtime::HostTensor;
+
+/// Rows of the GEMM view: `(out_rows, fan_in)`.
+///
+/// * 4-D HWIO conv weight -> rows are output channels (last dim);
+/// * 2-D fc weight (out, in) -> rows are the first dim;
+/// * 1-D bias -> one row (never quantized, but the view is total).
+pub fn gemm_rows(t: &HostTensor) -> Vec<Vec<f32>> {
+    let d = t.as_f32();
+    match t.shape.len() {
+        4 => {
+            let (h, w, i, o) = (t.shape[0], t.shape[1], t.shape[2], t.shape[3]);
+            let fan = h * w * i;
+            let mut rows = vec![Vec::with_capacity(fan); o];
+            // flat index = ((hh*w + ww)*i + ii)*o + oo; iterate in (h,w,i)
+            // order so each row comes out in python's reshape order.
+            for hw_i in 0..fan {
+                let base = hw_i * o;
+                for (oo, row) in rows.iter_mut().enumerate() {
+                    row.push(d[base + oo]);
+                }
+            }
+            rows
+        }
+        2 => {
+            let (o, fan) = (t.shape[0], t.shape[1]);
+            (0..o).map(|r| d[r * fan..(r + 1) * fan].to_vec()).collect()
+        }
+        1 => vec![d.to_vec()],
+        _ => panic!("unsupported weight rank {:?}", t.shape),
+    }
+}
+
+/// Scatter GEMM rows back into a HostTensor of the original layout
+/// (inverse of `gemm_rows`; used by tests and the packer round-trip).
+pub fn from_gemm_rows(rows: &[Vec<f32>], shape: &[usize]) -> HostTensor {
+    match shape.len() {
+        4 => {
+            let (h, w, i, o) = (shape[0], shape[1], shape[2], shape[3]);
+            let fan = h * w * i;
+            let mut flat = vec![0f32; fan * o];
+            for (oo, row) in rows.iter().enumerate() {
+                assert_eq!(row.len(), fan);
+                for (hw_i, &v) in row.iter().enumerate() {
+                    flat[hw_i * o + oo] = v;
+                }
+            }
+            HostTensor::f32(shape.to_vec(), flat)
+        }
+        2 => {
+            let flat: Vec<f32> = rows.iter().flatten().copied().collect();
+            HostTensor::f32(shape.to_vec(), flat)
+        }
+        1 => HostTensor::f32(shape.to_vec(), rows[0].clone()),
+        _ => panic!("unsupported weight rank {shape:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{ensure, forall};
+    use crate::util::Rng;
+
+    #[test]
+    fn fc_rows_are_contiguous() {
+        let t = HostTensor::f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let rows = gemm_rows(&t);
+        assert_eq!(rows, vec![vec![1., 2., 3.], vec![4., 5., 6.]]);
+    }
+
+    #[test]
+    fn hwio_rows_are_filters() {
+        // shape (1,1,2,2): flat = [i0o0, i0o1, i1o0, i1o1]
+        let t = HostTensor::f32(vec![1, 1, 2, 2], vec![10., 20., 11., 21.]);
+        let rows = gemm_rows(&t);
+        assert_eq!(rows, vec![vec![10., 11.], vec![20., 21.]]);
+    }
+
+    #[test]
+    fn prop_roundtrip_4d() {
+        forall(
+            71,
+            48,
+            |r: &mut Rng| {
+                let shape = vec![
+                    r.range_usize(1, 4),
+                    r.range_usize(1, 4),
+                    r.range_usize(1, 6),
+                    r.range_usize(1, 8),
+                ];
+                let n: usize = shape.iter().product();
+                let data: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+                HostTensor::f32(shape, data)
+            },
+            |t| {
+                let rows = gemm_rows(t);
+                ensure(rows.len() == t.shape[3], || "row count".into())?;
+                let back = from_gemm_rows(&rows, &t.shape);
+                ensure(back == *t, || "roundtrip mismatch".into())
+            },
+        );
+    }
+
+    #[test]
+    fn row_count_matches_out_channels() {
+        let t = HostTensor::zeros(vec![3, 3, 16, 32]);
+        assert_eq!(gemm_rows(&t).len(), 32);
+        assert_eq!(gemm_rows(&t)[0].len(), 144);
+    }
+}

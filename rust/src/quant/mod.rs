@@ -1,0 +1,184 @@
+//! Quantization substrate: schemes, codes, assignment policy, bit-packing.
+//!
+//! Rust mirror of `python/compile/{quant,assign}.py` — bit-exact on the same
+//! inputs (the integration tests replay the manifest's default masks and
+//! diff). The coordinator uses this module to (a) re-derive assignments from
+//! on-device Hessian runs, (b) pack weights into the simulated FPGA BRAM
+//! image, and (c) account ops per scheme for the performance model.
+
+pub mod assign;
+pub mod fixed;
+pub mod freeze;
+pub mod gemmview;
+pub mod packing;
+pub mod pot;
+
+pub use assign::{assign_bits, assign_schemes, LayerMasks, MaskSet};
+pub use gemmview::{from_gemm_rows, gemm_rows};
+pub use packing::PackedMatrix;
+
+/// One weight row's quantization configuration (paper Figure 1: each filter
+/// row carries a scheme + precision tag).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scheme {
+    /// 4-bit symmetric uniform fixed-point (DSP lane, 2 MAC/DSP/cycle).
+    Fixed4,
+    /// 8-bit symmetric uniform fixed-point (DSP lane, 1 MAC/DSP/cycle).
+    Fixed8,
+    /// 4-bit power-of-two — multiplies become shifts (LUT lane).
+    Pot4,
+}
+
+impl Scheme {
+    pub fn bits(self) -> u32 {
+        match self {
+            Scheme::Fixed4 | Scheme::Pot4 => 4,
+            Scheme::Fixed8 => 8,
+        }
+    }
+
+    pub fn is_pot(self) -> bool {
+        self == Scheme::Pot4
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Scheme::Fixed4 => "Fixed-4",
+            Scheme::Fixed8 => "Fixed-8",
+            Scheme::Pot4 => "PoT-4",
+        }
+    }
+}
+
+/// PoT-4 : Fixed-4 : Fixed-8 percentage split (Table I, first column).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Ratio {
+    pub pot4: f64,
+    pub fixed4: f64,
+    pub fixed8: f64,
+}
+
+impl Ratio {
+    pub fn new(pot4: f64, fixed4: f64, fixed8: f64) -> Ratio {
+        let r = Ratio { pot4, fixed4, fixed8 };
+        assert!(
+            (r.pot4 + r.fixed4 + r.fixed8 - 100.0).abs() < 1e-6,
+            "ratio must sum to 100: {r:?}"
+        );
+        r
+    }
+
+    /// Parse "60:35:5".
+    pub fn parse(s: &str) -> Result<Ratio, String> {
+        let parts: Vec<f64> = s
+            .split(':')
+            .map(|p| p.trim().parse::<f64>().map_err(|e| format!("bad ratio {s:?}: {e}")))
+            .collect::<Result<_, _>>()?;
+        if parts.len() != 3 {
+            return Err(format!("ratio must be P:F4:F8, got {s:?}"));
+        }
+        if (parts.iter().sum::<f64>() - 100.0).abs() > 1e-6 {
+            return Err(format!("ratio must sum to 100, got {s:?}"));
+        }
+        Ok(Ratio::new(parts[0], parts[1], parts[2]))
+    }
+
+    pub fn frac8(&self) -> f64 {
+        self.fixed8 / 100.0
+    }
+
+    /// Fraction of the 4-bit rows assigned PoT.
+    pub fn pot_share_of_4bit(&self) -> f64 {
+        let four = self.pot4 + self.fixed4;
+        if four == 0.0 {
+            0.0
+        } else {
+            self.pot4 / four
+        }
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}:{}:{}", F(self.pot4), F(self.fixed4), F(self.fixed8))
+    }
+}
+
+// `%g`-style float formatting shim (integers print without a fraction).
+struct F(f64);
+impl std::fmt::Display for F {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.0.fract() == 0.0 {
+            write!(f, "{}", self.0 as i64)
+        } else {
+            write!(f, "{}", self.0)
+        }
+    }
+}
+
+/// The named Table-I configurations.
+pub fn named_ratios() -> Vec<(&'static str, Ratio)> {
+    vec![
+        ("fixed4", Ratio::new(0.0, 100.0, 0.0)),
+        ("pot4", Ratio::new(100.0, 0.0, 0.0)),
+        ("mixed_50_50", Ratio::new(50.0, 50.0, 0.0)),
+        ("mixed_60_40", Ratio::new(60.0, 40.0, 0.0)),
+        ("mixed_67_33", Ratio::new(67.0, 33.0, 0.0)),
+        ("ilmpq1", Ratio::new(60.0, 35.0, 5.0)),
+        ("ilmpq2", Ratio::new(65.0, 30.0, 5.0)),
+    ]
+}
+
+pub fn ratio_by_name(name: &str) -> Option<Ratio> {
+    named_ratios().into_iter().find(|(n, _)| *n == name).map(|(_, r)| r)
+}
+
+/// Per-row max-abs scale (the Python `quant.row_scale`).
+pub fn row_scale(row: &[f32]) -> f32 {
+    row.iter().fold(0f32, |m, &x| m.max(x.abs())).max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratio_parse_roundtrip() {
+        for s in ["60:35:5", "0:100:0", "100:0:0", "65:30:5"] {
+            let r = Ratio::parse(s).unwrap();
+            assert_eq!(r.label(), s);
+        }
+        assert!(Ratio::parse("60:35").is_err());
+        assert!(Ratio::parse("60:35:10").is_err());
+        assert!(Ratio::parse("a:b:c").is_err());
+    }
+
+    #[test]
+    fn pot_share() {
+        let r = Ratio::new(60.0, 35.0, 5.0);
+        assert!((r.pot_share_of_4bit() - 60.0 / 95.0).abs() < 1e-12);
+        assert!((r.frac8() - 0.05).abs() < 1e-12);
+        assert_eq!(Ratio::new(0.0, 0.0, 100.0).pot_share_of_4bit(), 0.0);
+    }
+
+    #[test]
+    fn scheme_bits() {
+        assert_eq!(Scheme::Fixed4.bits(), 4);
+        assert_eq!(Scheme::Fixed8.bits(), 8);
+        assert_eq!(Scheme::Pot4.bits(), 4);
+        assert!(Scheme::Pot4.is_pot());
+        assert!(!Scheme::Fixed8.is_pot());
+    }
+
+    #[test]
+    fn named_ratios_cover_table1() {
+        let names: Vec<_> = named_ratios().iter().map(|(n, _)| *n).collect();
+        assert!(names.contains(&"ilmpq1") && names.contains(&"ilmpq2"));
+        assert_eq!(ratio_by_name("ilmpq2").unwrap().label(), "65:30:5");
+        assert!(ratio_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn row_scale_is_maxabs() {
+        assert_eq!(row_scale(&[-3.0, 2.0, 1.0]), 3.0);
+        assert!(row_scale(&[0.0, 0.0]) > 0.0); // eps floor
+    }
+}

@@ -1,0 +1,243 @@
+//! Bit-packing of quantized weights into the simulated FPGA BRAM image.
+//!
+//! On the real board, weights live in BRAM pre-quantized: 4-bit rows pack
+//! two weights per byte, 8-bit rows one per byte, and each row carries one
+//! f32 scale. This module produces that image (and unpacks it back), so the
+//! memory model in `fpga/` can charge the *actual* quantized footprint and
+//! the round-trip tests can assert pack ∘ unpack == fake-quant.
+//!
+//! Code conventions match `python/compile/kernels/quantize.py`:
+//! fixed rows store the signed integer code, PoT rows store
+//! `sign * (e + 1)` (0 = zero code) — both fit in a two's-complement nibble
+//! for 4-bit schemes.
+
+use super::{fixed, pot, LayerMasks, Scheme};
+
+/// One packed weight matrix: per-row scheme tags, scales, and the bitstream.
+#[derive(Debug, Clone)]
+pub struct PackedMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub schemes: Vec<Scheme>,
+    pub scales: Vec<f32>,
+    /// Row-major packed codes: 4-bit rows use a nibble per weight (low
+    /// nibble first), 8-bit rows a byte per weight. Rows are byte-aligned.
+    pub data: Vec<u8>,
+    /// Byte offset of each row in `data`.
+    pub row_offsets: Vec<usize>,
+}
+
+fn nibble(code: i32) -> u8 {
+    debug_assert!((-8..=7).contains(&code), "nibble overflow: {code}");
+    (code as i8 as u8) & 0x0F
+}
+
+fn unnibble(n: u8) -> i32 {
+    // Sign-extend the low nibble.
+    ((n << 4) as i8 >> 4) as i32
+}
+
+impl PackedMatrix {
+    /// Quantize + pack a (rows, cols) GEMM-view matrix under `masks`.
+    pub fn pack(w: &[Vec<f32>], masks: &LayerMasks) -> PackedMatrix {
+        assert_eq!(w.len(), masks.rows(), "rows vs masks mismatch");
+        let rows = w.len();
+        let cols = if rows == 0 { 0 } else { w[0].len() };
+        let mut data = Vec::new();
+        let mut row_offsets = Vec::with_capacity(rows);
+        let mut schemes = Vec::with_capacity(rows);
+        let mut scales = Vec::with_capacity(rows);
+        for (r, row) in w.iter().enumerate() {
+            assert_eq!(row.len(), cols, "ragged row {r}");
+            let scheme = masks.scheme_of(r);
+            let scale = super::row_scale(row);
+            row_offsets.push(data.len());
+            match scheme {
+                Scheme::Fixed8 => {
+                    for &v in row {
+                        data.push(fixed::code(v, 8, scale) as i8 as u8);
+                    }
+                }
+                Scheme::Fixed4 => {
+                    for pair in row.chunks(2) {
+                        let lo = nibble(fixed::code(pair[0], 4, scale));
+                        let hi = if pair.len() > 1 {
+                            nibble(fixed::code(pair[1], 4, scale))
+                        } else {
+                            0
+                        };
+                        data.push(lo | (hi << 4));
+                    }
+                }
+                Scheme::Pot4 => {
+                    for pair in row.chunks(2) {
+                        let lo = nibble(pot::code(pair[0], 4, scale));
+                        let hi = if pair.len() > 1 {
+                            nibble(pot::code(pair[1], 4, scale))
+                        } else {
+                            0
+                        };
+                        data.push(lo | (hi << 4));
+                    }
+                }
+            }
+            schemes.push(scheme);
+            scales.push(scale);
+        }
+        PackedMatrix { rows, cols, schemes, scales, data, row_offsets }
+    }
+
+    /// Dequantize one row back to f32 (must equal the fake-quant output).
+    pub fn unpack_row(&self, r: usize) -> Vec<f32> {
+        let off = self.row_offsets[r];
+        let scale = self.scales[r];
+        let mut out = Vec::with_capacity(self.cols);
+        match self.schemes[r] {
+            Scheme::Fixed8 => {
+                for c in 0..self.cols {
+                    out.push(fixed::dequant(self.data[off + c] as i8 as i32, 8, scale));
+                }
+            }
+            Scheme::Fixed4 | Scheme::Pot4 => {
+                let is_pot = self.schemes[r] == Scheme::Pot4;
+                for c in 0..self.cols {
+                    let byte = self.data[off + c / 2];
+                    let nib = if c % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+                    let code = unnibble(nib);
+                    out.push(if is_pot {
+                        pot::dequant(code, scale)
+                    } else {
+                        fixed::dequant(code, 4, scale)
+                    });
+                }
+            }
+        }
+        out
+    }
+
+    pub fn unpack(&self) -> Vec<Vec<f32>> {
+        (0..self.rows).map(|r| self.unpack_row(r)).collect()
+    }
+
+    /// Packed weight bytes (the BRAM/DDR footprint the memory model charges).
+    pub fn weight_bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Total footprint including per-row scale + 1-byte scheme tag.
+    pub fn total_bytes(&self) -> usize {
+        self.data.len() + self.rows * (4 + 1)
+    }
+
+    /// Compression ratio vs f32 storage.
+    pub fn compression_vs_f32(&self) -> f64 {
+        (self.rows * self.cols * 4) as f64 / self.total_bytes().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::assign::assign_uniform_layer;
+    use crate::util::prop::{assert_close, ensure, forall};
+    use crate::util::Rng;
+
+    fn random_matrix(r: &mut Rng, rows: usize, cols: usize) -> Vec<Vec<f32>> {
+        (0..rows)
+            .map(|_| (0..cols).map(|_| r.normal() * r.range_f32(0.1, 3.0)).collect())
+            .collect()
+    }
+
+    fn random_masks(r: &mut Rng, rows: usize) -> LayerMasks {
+        let is8: Vec<f32> = (0..rows).map(|_| if r.bool(0.2) { 1.0 } else { 0.0 }).collect();
+        let is_pot: Vec<f32> = (0..rows)
+            .map(|i| if is8[i] < 0.5 && r.bool(0.5) { 1.0 } else { 0.0 })
+            .collect();
+        LayerMasks { layer: "t".into(), is8, is_pot }
+    }
+
+    #[test]
+    fn nibble_roundtrip() {
+        for c in -8..=7 {
+            assert_eq!(unnibble(nibble(c)), c, "code {c}");
+        }
+    }
+
+    #[test]
+    fn prop_pack_unpack_equals_fake_quant() {
+        forall(
+            41,
+            64,
+            |r| {
+                let rows = r.range_usize(1, 20);
+                let cols = r.range_usize(1, 33);
+                (random_matrix(r, rows, cols), random_masks(r, rows))
+            },
+            |(w, masks)| {
+                let packed = PackedMatrix::pack(w, masks);
+                for (ri, row) in w.iter().enumerate() {
+                    let got = packed.unpack_row(ri);
+                    let scale = crate::quant::row_scale(row);
+                    let want: Vec<f32> = match masks.scheme_of(ri) {
+                        Scheme::Fixed8 => {
+                            row.iter().map(|&v| fixed::fake_quant(v, 8, scale)).collect()
+                        }
+                        Scheme::Fixed4 => {
+                            row.iter().map(|&v| fixed::fake_quant(v, 4, scale)).collect()
+                        }
+                        Scheme::Pot4 => {
+                            row.iter().map(|&v| pot::fake_quant(v, 4, scale)).collect()
+                        }
+                    };
+                    assert_close(&got, &want, 1e-6, &format!("row {ri}"))?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn footprint_4bit_half_of_8bit() {
+        let mut r = Rng::new(5);
+        let w = random_matrix(&mut r, 8, 64);
+        let p4 = PackedMatrix::pack(&w, &assign_uniform_layer("l", 8, Scheme::Fixed4));
+        let p8 = PackedMatrix::pack(&w, &assign_uniform_layer("l", 8, Scheme::Fixed8));
+        assert_eq!(p4.weight_bytes() * 2, p8.weight_bytes());
+        assert!(p4.compression_vs_f32() > 6.0); // ~8x minus scale overhead
+    }
+
+    #[test]
+    fn odd_column_count_pads_per_row() {
+        let mut r = Rng::new(6);
+        let w = random_matrix(&mut r, 3, 7);
+        let p = PackedMatrix::pack(&w, &assign_uniform_layer("l", 3, Scheme::Pot4));
+        assert_eq!(p.weight_bytes(), 3 * 4); // ceil(7/2) = 4 bytes per row
+        let u = p.unpack();
+        assert_eq!(u[0].len(), 7);
+    }
+
+    #[test]
+    fn prop_compression_at_least_3x_for_ilmpq_mix() {
+        forall(
+            42,
+            32,
+            |r| {
+                let rows = r.range_usize(8, 40);
+                random_matrix(r, rows, 32)
+            },
+            |w| {
+                let eigs: Vec<f64> = (0..w.len()).map(|i| i as f64).collect();
+                let masks = crate::quant::assign::assign_layer(
+                    "t",
+                    w,
+                    &eigs,
+                    crate::quant::Ratio::new(60.0, 35.0, 5.0),
+                );
+                let p = PackedMatrix::pack(w, &masks);
+                ensure(p.compression_vs_f32() > 3.0, || {
+                    format!("compression {}", p.compression_vs_f32())
+                })
+            },
+        );
+    }
+}

@@ -1,0 +1,169 @@
+//! Power-of-Two (PoT) quantizer — multiplications become shifts.
+//!
+//! Bit-exact mirror of `python/compile/quant.py::quantize_pot` /
+//! `pot_codes`. With `b` bits the levels are `{0} ∪ {± scale * 2^-e}` for
+//! `e in [0, 2^(b-1) - 2]` (4-bit: e in [0, 6]); the exponent is the nearest
+//! integer to `-log2(|w|/scale)` and magnitudes below `2^-(emax + 0.5)` take
+//! the zero code. Code convention (shared with the Python kernels and the
+//! packer): `0` is zero, otherwise `sign * (e + 1)`.
+
+/// Largest exponent for a bit width (4-bit -> 6).
+pub fn emax(bits: u32) -> i32 {
+    (1i32 << (bits - 1)) - 2
+}
+
+/// PoT code for one weight: 0, or `sign * (e + 1)` with e in [0, emax].
+pub fn code(w: f32, bits: u32, scale: f32) -> i32 {
+    let em = emax(bits);
+    let wn = w / scale;
+    let mag = wn.abs();
+    if mag < (2f32).powf(-(em as f32 + 0.5)) {
+        return 0;
+    }
+    let e = (-(mag.max(1e-12).log2())).round().clamp(0.0, em as f32) as i32;
+    if wn < 0.0 {
+        -(e + 1)
+    } else {
+        e + 1
+    }
+}
+
+/// Dequantize a PoT code.
+pub fn dequant(code: i32, scale: f32) -> f32 {
+    if code == 0 {
+        return 0.0;
+    }
+    let e = code.abs() - 1;
+    let mag = (2f32).powi(-e) * scale;
+    if code < 0 {
+        -mag
+    } else {
+        mag
+    }
+}
+
+/// Fake-quant one value.
+pub fn fake_quant(w: f32, bits: u32, scale: f32) -> f32 {
+    dequant(code(w, bits, scale), scale)
+}
+
+/// Fake-quant a whole row with its own max-abs scale.
+pub fn fake_quant_row(row: &[f32], bits: u32) -> Vec<f32> {
+    let s = super::row_scale(row);
+    row.iter().map(|&w| fake_quant(w, bits, s)).collect()
+}
+
+/// Relative quantization step around a magnitude — PoT's pitch: resolution
+/// is *relative* (dense near zero), vs fixed-point's absolute step. Used by
+/// the ablation bench to show why low-variance rows prefer PoT.
+pub fn relative_step_at(mag_over_scale: f32) -> f32 {
+    // Between levels 2^-e and 2^-(e+1) the gap is 2^-(e+1), i.e. half the
+    // larger level: relative step ~ 0.5 at every scale.
+    if mag_over_scale <= 0.0 {
+        0.0
+    } else {
+        0.5 * mag_over_scale
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{ensure, forall};
+
+    #[test]
+    fn emax_for_4bit_is_6() {
+        assert_eq!(emax(4), 6);
+        assert_eq!(emax(3), 2);
+    }
+
+    #[test]
+    fn known_codes() {
+        // scale 1: 1.0 -> e=0 -> code 1; 0.5 -> e=1 -> code 2; -0.25 -> -3.
+        assert_eq!(code(1.0, 4, 1.0), 1);
+        assert_eq!(code(0.5, 4, 1.0), 2);
+        assert_eq!(code(-0.25, 4, 1.0), -3);
+        assert_eq!(code(0.0, 4, 1.0), 0);
+        // Below the deadzone threshold 2^-6.5 ~ 0.011.
+        assert_eq!(code(0.005, 4, 1.0), 0);
+    }
+
+    #[test]
+    fn dequant_levels_are_powers_of_two() {
+        for c in 1..=7 {
+            let v = dequant(c, 1.0);
+            assert_eq!(v, (2f32).powi(-(c - 1)));
+            assert_eq!(dequant(-c, 1.0), -v);
+        }
+        assert_eq!(dequant(0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn prop_output_is_exact_pot_level() {
+        forall(
+            21,
+            512,
+            |r| (r.normal() * 2.0, r.range_f32(0.3, 5.0)),
+            |&(w, scale)| {
+                let q = fake_quant(w, 4, scale);
+                if q == 0.0 {
+                    return Ok(());
+                }
+                let ratio = (q / scale).abs();
+                let log = ratio.log2();
+                ensure((log - log.round()).abs() < 1e-5, || {
+                    format!("level {ratio} is not a power of two")
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn prop_idempotent() {
+        forall(
+            22,
+            256,
+            |r| (r.normal() * 2.0, r.range_f32(0.3, 5.0)),
+            |&(w, scale)| {
+                let once = fake_quant(w, 4, scale);
+                let twice = fake_quant(once, 4, scale);
+                ensure((once - twice).abs() < 1e-7, || format!("{once} vs {twice}"))
+            },
+        );
+    }
+
+    #[test]
+    fn prop_log_domain_rounding_bound() {
+        // For w in the representable band, the log2 error is <= 0.5.
+        forall(
+            23,
+            256,
+            |r| {
+                let scale = r.range_f32(0.5, 2.0);
+                let e = r.range_f32(0.0, 6.0);
+                let sign = if r.bool(0.5) { 1.0 } else { -1.0 };
+                (sign * (2f32).powf(-e) * scale, scale)
+            },
+            |&(w, scale)| {
+                let q = fake_quant(w, 4, scale);
+                ensure(q != 0.0, || format!("in-band value {w} flushed to zero"))?;
+                let err = ((w / scale).abs().log2() - (q / scale).abs().log2()).abs();
+                ensure(err <= 0.5 + 1e-4, || format!("log-domain err {err}"))
+            },
+        );
+    }
+
+    #[test]
+    fn codes_fit_four_bits() {
+        // |code| <= 7 always: sign + 3 magnitude bits.
+        forall(
+            24,
+            256,
+            |r| (r.normal() * 10.0, r.range_f32(0.1, 3.0)),
+            |&(w, scale)| {
+                let c = code(w, 4, scale);
+                ensure(c.abs() <= 7, || format!("code {c} out of range"))
+            },
+        );
+    }
+}

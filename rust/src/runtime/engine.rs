@@ -1,0 +1,192 @@
+//! PJRT execution engine: load HLO text, compile once, execute many.
+//!
+//! Wraps the `xla` crate's CPU PJRT client (the /opt/xla-example pattern):
+//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `client.compile` -> `execute`. Executables are compiled lazily and
+//! cached per artifact name; the coordinator threads share the engine
+//! behind a `Mutex` (PJRT CPU executions are single-stream here — the
+//! batcher, not intra-op parallelism, is the concurrency story).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::manifest::{ArtifactSpec, Manifest};
+use super::tensor::HostTensor;
+
+/// Compile/execute statistics for the metrics endpoint + perf logs.
+#[derive(Debug, Clone, Default)]
+pub struct EngineStats {
+    pub compiles: u64,
+    pub executions: u64,
+    pub execute_seconds: f64,
+    pub stage_seconds: f64,
+    pub fetch_seconds: f64,
+}
+
+/// The PJRT engine: client + executable cache.
+pub struct Engine {
+    client: PjRtClient,
+    executables: Mutex<HashMap<String, PjRtLoadedExecutable>>,
+    stats: Mutex<EngineStats>,
+}
+
+// SAFETY: the PJRT C API is documented thread-safe for client compilation
+// and executable execution (the CPU plugin serializes internally where
+// needed); the raw pointers inside `PjRtClient`/`PjRtLoadedExecutable` are
+// only reached through `&self` methods here, and all mutable Rust-side
+// state (caches, stats) is Mutex-guarded. The `xla` crate just never added
+// the auto-impls because of the raw pointers.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Create a CPU engine.
+    pub fn cpu() -> Result<Engine> {
+        let client = PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            executables: Mutex::new(HashMap::new()),
+            stats: Mutex::new(EngineStats::default()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch the cached) executable for an artifact.
+    pub fn load(&self, spec: &ArtifactSpec) -> Result<()> {
+        let mut cache = self.executables.lock().unwrap();
+        if cache.contains_key(&spec.name) {
+            return Ok(());
+        }
+        let t = Instant::now();
+        let proto = HloModuleProto::from_text_file(&spec.file)
+            .with_context(|| format!("parse HLO text {:?}", spec.file))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile artifact {}", spec.name))?;
+        cache.insert(spec.name.clone(), exe);
+        let mut s = self.stats.lock().unwrap();
+        s.compiles += 1;
+        drop(s);
+        let _ = t;
+        Ok(())
+    }
+
+    /// Load every artifact in the manifest (eager warm-up for serving).
+    pub fn load_all(&self, manifest: &Manifest) -> Result<()> {
+        for spec in manifest.artifacts.values() {
+            self.load(spec)?;
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact on host tensors; returns the output tuple as
+    /// host tensors. Input count/shapes are validated against the spec so a
+    /// manifest drift fails with a clear message instead of a PJRT abort.
+    pub fn run(&self, spec: &ArtifactSpec, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.validate_inputs(spec, inputs)?;
+        self.load(spec)?;
+
+        let t_stage = Instant::now();
+        let literals: Vec<Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let stage_s = t_stage.elapsed().as_secs_f64();
+
+        let t_exec = Instant::now();
+        let cache = self.executables.lock().unwrap();
+        let exe = cache.get(&spec.name).expect("loaded above");
+        let out_buffers = exe
+            .execute::<Literal>(&literals)
+            .with_context(|| format!("execute {}", spec.name))?;
+        let exec_s = t_exec.elapsed().as_secs_f64();
+
+        let t_fetch = Instant::now();
+        let tuple = out_buffers[0][0]
+            .to_literal_sync()
+            .context("fetch result literal")?;
+        drop(cache);
+        let parts = tuple.to_tuple().context("decompose result tuple")?;
+        let outputs: Vec<HostTensor> = parts
+            .iter()
+            .map(HostTensor::from_literal)
+            .collect::<Result<_>>()?;
+        let fetch_s = t_fetch.elapsed().as_secs_f64();
+
+        if outputs.len() != spec.outputs.len() {
+            anyhow::bail!(
+                "{}: expected {} outputs, got {}",
+                spec.name,
+                spec.outputs.len(),
+                outputs.len()
+            );
+        }
+        let mut s = self.stats.lock().unwrap();
+        s.executions += 1;
+        s.execute_seconds += exec_s;
+        s.stage_seconds += stage_s;
+        s.fetch_seconds += fetch_s;
+        Ok(outputs)
+    }
+
+    fn validate_inputs(&self, spec: &ArtifactSpec, inputs: &[HostTensor]) -> Result<()> {
+        if inputs.len() != spec.inputs.len() {
+            anyhow::bail!(
+                "{}: expected {} inputs, got {}",
+                spec.name,
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, s)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            if t.shape != s.shape {
+                anyhow::bail!(
+                    "{}: input {i} ({}) shape {:?} != manifest {:?}",
+                    spec.name,
+                    s.name,
+                    t.shape,
+                    s.shape
+                );
+            }
+        }
+        Ok(())
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.stats.lock().unwrap().clone()
+    }
+}
+
+/// Convenience: manifest + engine bundled, with the paths resolved.
+pub struct Runtime {
+    pub manifest: Manifest,
+    pub engine: Engine,
+}
+
+impl Runtime {
+    /// Load from the default artifacts dir (or `$ILMPQ_ARTIFACTS`).
+    pub fn load_default() -> Result<Runtime> {
+        Runtime::load(&Manifest::default_dir())
+    }
+
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let engine = Engine::cpu()?;
+        Ok(Runtime { manifest, engine })
+    }
+
+    pub fn run(&self, artifact: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let spec = self.manifest.artifact(artifact)?;
+        self.engine.run(spec, inputs)
+    }
+}

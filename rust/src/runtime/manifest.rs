@@ -1,0 +1,258 @@
+//! Artifact manifest loader — the contract between `python/compile/aot.py`
+//! and the Rust runtime.
+//!
+//! The manifest pins down everything the coordinator needs to drive the AOT
+//! executables without Python: parameter order/shapes, per-layer row counts,
+//! artifact input/output signatures, dataset files, default ILMPQ masks and
+//! the per-filter Hessian eigenvalues computed at init.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::tensor::{read_f32_file, read_i32_file, HostTensor};
+use crate::quant::{LayerMasks, MaskSet};
+use crate::util::Json;
+
+/// One named array in an artifact signature.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+}
+
+/// One AOT-lowered executable.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// Dataset description + file paths.
+#[derive(Debug, Clone)]
+pub struct DataSpec {
+    pub height: usize,
+    pub width: usize,
+    pub channels: usize,
+    pub classes: usize,
+    pub n_train: usize,
+    pub n_test: usize,
+    pub dir: PathBuf,
+}
+
+impl DataSpec {
+    pub fn image_elems(&self) -> usize {
+        self.height * self.width * self.channels
+    }
+
+    pub fn load_train(&self) -> Result<(Vec<f32>, Vec<i32>)> {
+        let x = read_f32_file(&self.dir.join("x_train.bin"))?;
+        let y = read_i32_file(&self.dir.join("y_train.bin"))?;
+        if x.len() != self.n_train * self.image_elems() || y.len() != self.n_train {
+            bail!("train data size mismatch");
+        }
+        Ok((x, y))
+    }
+
+    pub fn load_test(&self) -> Result<(Vec<f32>, Vec<i32>)> {
+        let x = read_f32_file(&self.dir.join("x_test.bin"))?;
+        let y = read_i32_file(&self.dir.join("y_test.bin"))?;
+        if x.len() != self.n_test * self.image_elems() || y.len() != self.n_test {
+            bail!("test data size mismatch");
+        }
+        Ok((x, y))
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model_name: String,
+    pub widths: Vec<usize>,
+    pub classes: usize,
+    pub height: usize,
+    pub width: usize,
+    pub channels: usize,
+    /// (name, shape) in AOT positional order.
+    pub params: Vec<(String, Vec<usize>)>,
+    /// (name, rows, fan_in) for every quantized layer, in order.
+    pub quantized_layers: Vec<(String, usize, usize)>,
+    pub data: DataSpec,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub infer_batches: Vec<usize>,
+    pub hvp_batch: usize,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    /// Per-layer Hessian eigenvalues at init (paper §II-C step 1).
+    pub eigs: BTreeMap<String, Vec<f64>>,
+    /// Ratio-name -> per-layer default masks computed by `assign.py`.
+    pub default_masks: BTreeMap<String, MaskSet>,
+}
+
+fn io_specs(arr: &Json) -> Vec<IoSpec> {
+    arr.as_arr()
+        .expect("io spec array")
+        .iter()
+        .map(|e| IoSpec {
+            name: e.at("name").as_str().unwrap().to_string(),
+            shape: e.at("shape").usize_vec(),
+            dtype: e.at("dtype").as_str().unwrap().to_string(),
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+
+        let model = j.at("model");
+        let data = j.at("data");
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in j.at("artifacts").as_obj().unwrap() {
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: dir.join(a.at("file").as_str().unwrap()),
+                    inputs: io_specs(a.at("inputs")),
+                    outputs: io_specs(a.at("outputs")),
+                },
+            );
+        }
+
+        let mut eigs = BTreeMap::new();
+        for (name, e) in j.at("eigs").as_obj().unwrap() {
+            eigs.insert(name.clone(), e.num_vec());
+        }
+
+        let quantized_layers: Vec<(String, usize, usize)> = j
+            .at("quantized_layers")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|q| {
+                (
+                    q.at("name").as_str().unwrap().to_string(),
+                    q.at("rows").as_usize().unwrap(),
+                    q.at("fan_in").as_usize().unwrap(),
+                )
+            })
+            .collect();
+
+        let mut default_masks = BTreeMap::new();
+        for (rname, masks) in j.at("default_masks").as_obj().unwrap() {
+            let mut layers = Vec::new();
+            for (lname, _rows, _) in &quantized_layers {
+                let is8: Vec<f32> = masks
+                    .at(&format!("{lname}:is8"))
+                    .num_vec()
+                    .into_iter()
+                    .map(|v| v as f32)
+                    .collect();
+                let is_pot: Vec<f32> = masks
+                    .at(&format!("{lname}:is_pot"))
+                    .num_vec()
+                    .into_iter()
+                    .map(|v| v as f32)
+                    .collect();
+                layers.push(LayerMasks { layer: lname.clone(), is8, is_pot });
+            }
+            default_masks.insert(rname.clone(), MaskSet { name: rname.clone(), layers });
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            model_name: model.at("name").as_str().unwrap().to_string(),
+            widths: model.at("widths").usize_vec(),
+            classes: model.at("classes").as_usize().unwrap(),
+            height: model.at("height").as_usize().unwrap(),
+            width: model.at("width").as_usize().unwrap(),
+            channels: model.at("channels").as_usize().unwrap(),
+            params: j
+                .at("params")
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|p| {
+                    (
+                        p.at("name").as_str().unwrap().to_string(),
+                        p.at("shape").usize_vec(),
+                    )
+                })
+                .collect(),
+            quantized_layers,
+            data: DataSpec {
+                height: data.at("height").as_usize().unwrap(),
+                width: data.at("width").as_usize().unwrap(),
+                channels: data.at("channels").as_usize().unwrap(),
+                classes: data.at("classes").as_usize().unwrap(),
+                n_train: data.at("n_train").as_usize().unwrap(),
+                n_test: data.at("n_test").as_usize().unwrap(),
+                dir: dir.to_path_buf(),
+            },
+            train_batch: j.at("train_batch").as_usize().unwrap(),
+            eval_batch: j.at("eval_batch").as_usize().unwrap(),
+            infer_batches: j.at("infer_batches").usize_vec(),
+            hvp_batch: j.at("hvp_batch").as_usize().unwrap(),
+            artifacts,
+            eigs,
+            default_masks,
+        })
+    }
+
+    /// Standard artifacts dir: `$ILMPQ_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("ILMPQ_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not in manifest"))
+    }
+
+    /// Load the initial parameters (He init written by aot.py) as tensors in
+    /// AOT positional order.
+    pub fn load_init_params(&self) -> Result<Vec<HostTensor>> {
+        let flat = read_f32_file(&self.dir.join("params_init.bin"))?;
+        let mut out = Vec::with_capacity(self.params.len());
+        let mut off = 0usize;
+        for (name, shape) in &self.params {
+            let n: usize = shape.iter().product();
+            if off + n > flat.len() {
+                bail!("params_init.bin too short at {name}");
+            }
+            out.push(HostTensor::f32(shape.clone(), flat[off..off + n].to_vec()));
+            off += n;
+        }
+        if off != flat.len() {
+            bail!("params_init.bin has {} trailing floats", flat.len() - off);
+        }
+        Ok(out)
+    }
+
+    /// Masks for a named ratio as AOT-ordered tensors (is8, is_pot per layer).
+    pub fn mask_tensors(&self, masks: &MaskSet) -> Vec<HostTensor> {
+        let mut out = Vec::new();
+        for (lname, rows, _) in &self.quantized_layers {
+            let lm = masks
+                .layer(lname)
+                .unwrap_or_else(|| panic!("mask set missing layer {lname}"));
+            assert_eq!(lm.rows(), *rows, "{lname}: mask rows mismatch");
+            out.push(HostTensor::f32(vec![*rows], lm.is8.clone()));
+            out.push(HostTensor::f32(vec![*rows], lm.is_pot.clone()));
+        }
+        out
+    }
+}

@@ -1,0 +1,13 @@
+//! Runtime layer: PJRT engine + artifact manifest + host tensors.
+//!
+//! Loads the HLO-text artifacts produced by `python/compile/aot.py` and
+//! executes them on the PJRT CPU client. Python never runs here — the Rust
+//! binary is self-contained once `make artifacts` has been run.
+
+pub mod engine;
+pub mod manifest;
+pub mod tensor;
+
+pub use engine::{Engine, EngineStats, Runtime};
+pub use manifest::{ArtifactSpec, DataSpec, IoSpec, Manifest};
+pub use tensor::{HostTensor, TensorData};

@@ -1,0 +1,171 @@
+//! Host-side tensors and conversion to/from PJRT literals.
+//!
+//! `HostTensor` is the coordinator's in-memory array type: shape + flat f32
+//! (or i32) storage, little-endian on disk (the `aot.py` binary format).
+
+use anyhow::{bail, Context, Result};
+use xla::{ElementType, Literal};
+
+/// Dense host tensor (f32 or i32 payload).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        HostTensor { shape, data: TensorData::F32(data) }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        HostTensor { shape, data: TensorData::I32(data) }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> HostTensor {
+        let n = shape.iter().product();
+        HostTensor::f32(shape, vec![0.0; n])
+    }
+
+    pub fn scalar(v: f32) -> HostTensor {
+        HostTensor::f32(vec![], vec![v])
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.data {
+            TensorData::F32(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match &self.data {
+            TensorData::F32(v) => v,
+            TensorData::I32(_) => panic!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match &self.data {
+            TensorData::I32(v) => v,
+            TensorData::F32(_) => panic!("tensor is f32, expected i32"),
+        }
+    }
+
+    /// Scalar value (f32 tensors of any single-element shape).
+    pub fn item(&self) -> f32 {
+        assert_eq!(self.len(), 1, "item() on non-scalar");
+        self.as_f32()[0]
+    }
+
+    /// Convert to a PJRT literal (host copy).
+    pub fn to_literal(&self) -> Result<Literal> {
+        let (ty, bytes): (ElementType, &[u8]) = match &self.data {
+            TensorData::F32(v) => (ElementType::F32, bytemuck_f32(v)),
+            TensorData::I32(v) => (ElementType::S32, bytemuck_i32(v)),
+        };
+        Literal::create_from_shape_and_untyped_data(ty, &self.shape, bytes)
+            .with_context(|| format!("literal from shape {:?}", self.shape))
+    }
+
+    /// Read back from a PJRT literal.
+    pub fn from_literal(lit: &Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            ElementType::F32 => Ok(HostTensor::f32(dims, lit.to_vec::<f32>()?)),
+            ElementType::S32 => Ok(HostTensor::i32(dims, lit.to_vec::<i32>()?)),
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+}
+
+fn bytemuck_f32(v: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+fn bytemuck_i32(v: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+/// Read a little-endian f32 binary file (the aot.py dataset format).
+pub fn read_f32_file(path: &std::path::Path) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("read {path:?}"))?;
+    if bytes.len() % 4 != 0 {
+        bail!("{path:?}: length {} not a multiple of 4", bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Read a little-endian i32 binary file.
+pub fn read_i32_file(path: &std::path::Path) -> Result<Vec<i32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("read {path:?}"))?;
+    if bytes.len() % 4 != 0 {
+        bail!("{path:?}: length {} not a multiple of 4", bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = HostTensor::f32(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let t = HostTensor::i32(vec![4], vec![-1, 0, 7, 42]);
+        let back = HostTensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let t = HostTensor::scalar(0.05);
+        let back = HostTensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert!((back.item() - 0.05).abs() < 1e-9);
+        assert_eq!(back.shape, Vec::<usize>::new());
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn shape_mismatch_panics() {
+        HostTensor::f32(vec![2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn file_io_roundtrip() {
+        let dir = std::env::temp_dir().join("ilmpq_tensor_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.bin");
+        let vals = [1.5f32, -2.25, 3e6];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&p, bytes).unwrap();
+        assert_eq!(read_f32_file(&p).unwrap(), vals);
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,190 @@
+//! Tiny CLI argument parser (no `clap` offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! subcommands; typed getters with defaults; `--help` text assembled from
+//! registered options. Strict: unknown `--options` are an error so typos in
+//! bench invocations fail loudly instead of silently benchmarking the
+//! default config.
+//!
+//! Boolean flags are declared by suffixing the registered name with `!`
+//! (e.g. `("verbose!", "chatty")`) — they never consume the next token, so
+//! `--verbose positional` parses unambiguously.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    /// Binary / subcommand name chain, for help text.
+    pub command: String,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+    known: Vec<(String, String, bool)>, // (name, help, is_flag)
+}
+
+impl Args {
+    /// Parse from an explicit token list (tests) — `known` declares the
+    /// accepted option/flag names with help strings.
+    pub fn parse_from(
+        command: &str,
+        tokens: &[String],
+        known: &[(&str, &str)],
+    ) -> Result<Args, String> {
+        let mut a = Args {
+            command: command.to_string(),
+            opts: BTreeMap::new(),
+            flags: Vec::new(),
+            positional: Vec::new(),
+            known: known
+                .iter()
+                .map(|(n, h)| match n.strip_suffix('!') {
+                    Some(flag) => (flag.to_string(), h.to_string(), true),
+                    None => (n.to_string(), h.to_string(), false),
+                })
+                .collect(),
+        };
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(body) = t.strip_prefix("--") {
+                if body == "help" {
+                    return Err(a.help());
+                }
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let Some((_, _, is_flag)) =
+                    a.known.iter().find(|(n, _, _)| *n == key).cloned()
+                else {
+                    return Err(format!("unknown option --{key}\n{}", a.help()));
+                };
+                if let Some(v) = inline_val {
+                    a.opts.insert(key, v);
+                } else if !is_flag
+                    && i + 1 < tokens.len()
+                    && !tokens[i + 1].starts_with("--")
+                {
+                    a.opts.insert(key, tokens[i + 1].clone());
+                    i += 1;
+                } else {
+                    a.flags.push(key);
+                }
+            } else {
+                a.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        Ok(a)
+    }
+
+    /// Parse the process args (after the subcommand at `skip`).
+    ///
+    /// `cargo bench`/`cargo test` append a bare `--bench` to harness
+    /// binaries — dropped here so `harness = false` benches parse cleanly.
+    pub fn parse_env(command: &str, skip: usize, known: &[(&str, &str)]) -> Args {
+        let tokens: Vec<String> = std::env::args()
+            .skip(skip)
+            .filter(|t| t != "--bench")
+            .collect();
+        match Args::parse_from(command, &tokens, known) {
+            Ok(a) => a,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    pub fn help(&self) -> String {
+        let mut s = format!("usage: {} [options]\noptions:\n", self.command);
+        for (n, h, _) in &self.known {
+            s.push_str(&format!("  --{n:<18} {h}\n"));
+        }
+        s
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.opts.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name}: expected integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name}: expected number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name}: expected integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    const KNOWN: &[(&str, &str)] = &[
+        ("device", "fpga device"),
+        ("steps", "train steps"),
+        ("verbose!", "chatty"),
+    ];
+
+    #[test]
+    fn parses_key_value_both_styles() {
+        let a = Args::parse_from("t", &toks("--device xc7z020 --steps=10"), KNOWN).unwrap();
+        assert_eq!(a.get("device"), Some("xc7z020"));
+        assert_eq!(a.usize_or("steps", 0), 10);
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = Args::parse_from("t", &toks("pos1 --verbose pos2"), KNOWN).unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["pos1".to_string(), "pos2".to_string()]);
+    }
+
+    #[test]
+    fn rejects_unknown_option() {
+        assert!(Args::parse_from("t", &toks("--bogus 1"), KNOWN).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse_from("t", &[], KNOWN).unwrap();
+        assert_eq!(a.usize_or("steps", 7), 7);
+        assert_eq!(a.str_or("device", "xc7z045"), "xc7z045");
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn help_lists_options() {
+        let a = Args::parse_from("t", &[], KNOWN).unwrap();
+        assert!(a.help().contains("--device"));
+        let err = Args::parse_from("t", &toks("--help"), KNOWN).unwrap_err();
+        assert!(err.contains("usage:"));
+    }
+}

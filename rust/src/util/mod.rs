@@ -1,0 +1,15 @@
+//! Offline substrates: JSON, PRNG, property-testing, CLI, statistics.
+//!
+//! This sandbox has no network access to crates.io, so the usual
+//! `serde_json`/`rand`/`proptest`/`clap`/`criterion` stack is replaced by
+//! these small, fully tested implementations (see DESIGN.md §5).
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use cli::Args;
+pub use json::Json;
+pub use rng::Rng;

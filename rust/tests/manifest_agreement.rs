@@ -1,0 +1,115 @@
+//! Cross-language agreement: the Rust assignment/quantization substrate must
+//! reproduce, bit-for-bit, what `python/compile/assign.py` wrote into the
+//! manifest (default masks per ratio, from Hessian eigs + row variance at
+//! the init weights). Requires `make artifacts`.
+
+use ilmpq::quant::{assign, gemm_rows, named_ratios};
+use ilmpq::runtime::Manifest;
+
+fn manifest() -> Manifest {
+    Manifest::load(&Manifest::default_dir()).expect("run `make artifacts` first")
+}
+
+#[test]
+fn manifest_loads_and_is_consistent() {
+    let m = manifest();
+    assert_eq!(m.model_name, "tinyresnet-16-32-64");
+    assert_eq!(m.params.len(), 11);
+    assert_eq!(m.quantized_layers.len(), 10);
+    assert!(m.artifacts.contains_key("train_step"));
+    assert!(m.artifacts.contains_key("infer_b1"));
+    assert!(m.artifacts.contains_key("eval_batch"));
+    assert!(m.artifacts.contains_key("hessian_hvp"));
+    for (name, rows, fan_in) in &m.quantized_layers {
+        assert!(*rows > 0 && *fan_in > 0, "{name}");
+        assert_eq!(m.eigs.get(name).map(Vec::len), Some(*rows), "{name}");
+    }
+}
+
+#[test]
+fn init_params_match_manifest_shapes() {
+    let m = manifest();
+    let params = m.load_init_params().unwrap();
+    assert_eq!(params.len(), m.params.len());
+    for (t, (name, shape)) in params.iter().zip(&m.params) {
+        assert_eq!(&t.shape, shape, "{name}");
+        // He init: finite, non-degenerate.
+        let norm: f32 = t.as_f32().iter().map(|v| v * v).sum::<f32>().sqrt();
+        assert!(norm.is_finite(), "{name}");
+        if name != "fc/b" {
+            assert!(norm > 0.0, "{name}");
+        }
+    }
+}
+
+#[test]
+fn dataset_loads_with_expected_shapes() {
+    let m = manifest();
+    let (xtr, ytr) = m.data.load_train().unwrap();
+    let (xte, yte) = m.data.load_test().unwrap();
+    assert_eq!(xtr.len(), m.data.n_train * m.data.image_elems());
+    assert_eq!(ytr.len(), m.data.n_train);
+    assert_eq!(xte.len(), m.data.n_test * m.data.image_elems());
+    assert_eq!(yte.len(), m.data.n_test);
+    let classes = m.data.classes as i32;
+    assert!(ytr.iter().all(|&y| (0..classes).contains(&y)));
+    // Balanced-ish labels.
+    let mut counts = vec![0usize; classes as usize];
+    for &y in &ytr {
+        counts[y as usize] += 1;
+    }
+    let min = *counts.iter().min().unwrap();
+    assert!(min > m.data.n_train / classes as usize / 3, "{counts:?}");
+}
+
+#[test]
+fn rust_assignment_reproduces_python_default_masks() {
+    let m = manifest();
+    let params = m.load_init_params().unwrap();
+    for (rname, ratio) in named_ratios() {
+        let pyset = m
+            .default_masks
+            .get(rname)
+            .unwrap_or_else(|| panic!("manifest missing ratio {rname}"));
+        for (lname, _rows, _fan) in &m.quantized_layers {
+            let idx = m.params.iter().position(|(n, _)| n == lname).unwrap();
+            let w_rows = gemm_rows(&params[idx]);
+            let eigs = m.eigs.get(lname).unwrap();
+            let rust = assign::assign_layer(lname, &w_rows, eigs, ratio);
+            let py = pyset.layer(lname).unwrap();
+            assert_eq!(
+                rust.is8, py.is8,
+                "{rname}/{lname}: is8 masks disagree (Rust vs Python)"
+            );
+            assert_eq!(
+                rust.is_pot, py.is_pot,
+                "{rname}/{lname}: is_pot masks disagree (Rust vs Python)"
+            );
+        }
+    }
+}
+
+#[test]
+fn default_masks_respect_ratio_counts() {
+    let m = manifest();
+    let ilmpq2 = m.default_masks.get("ilmpq2").unwrap();
+    let (p, _f4, f8) = ilmpq2.total_fractions();
+    assert!((p - 0.65).abs() < 0.08, "pot fraction {p}");
+    assert!((f8 - 0.05).abs() < 0.05, "f8 fraction {f8}");
+    for l in &ilmpq2.layers {
+        let (_, _, n8) = l.counts();
+        assert!(n8 >= 1, "{}: no 8-bit rescue row", l.layer);
+    }
+}
+
+#[test]
+fn eigs_identify_consistent_sensitive_filters() {
+    // The is8 rows of ilmpq1 and ilmpq2 must be identical (same eigs, same
+    // 5% budget) even though their PoT shares differ.
+    let m = manifest();
+    let a = m.default_masks.get("ilmpq1").unwrap();
+    let b = m.default_masks.get("ilmpq2").unwrap();
+    for (la, lb) in a.layers.iter().zip(&b.layers) {
+        assert_eq!(la.is8, lb.is8, "{}", la.layer);
+    }
+}

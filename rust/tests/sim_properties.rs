@@ -1,0 +1,155 @@
+//! Property tests over the FPGA performance simulator: physical sanity that
+//! must hold for ANY configuration, not just the Table-I points. Pure
+//! simulation — no artifacts needed.
+
+use ilmpq::fpga::{simulate, DeviceModel, Mode, NetConfig};
+use ilmpq::model::{resnet18, zoo};
+use ilmpq::quant::Ratio;
+use ilmpq::util::prop::{ensure, forall};
+use ilmpq::util::Rng;
+
+fn random_ratio(r: &mut Rng) -> Ratio {
+    let f8 = (r.below(4) * 5) as f64; // 0, 5, 10, 15
+    let pot = (r.f64() * (100.0 - f8) * 10.0).round() / 10.0;
+    Ratio::new(pot, 100.0 - f8 - pot, f8)
+}
+
+#[test]
+fn prop_latency_positive_and_throughput_consistent() {
+    let net = resnet18();
+    forall(
+        201,
+        64,
+        |r| (random_ratio(r), r.bool(0.5), r.bool(0.5)),
+        |&(ratio, fl8, big)| {
+            let device = if big { DeviceModel::xc7z045() } else { DeviceModel::xc7z020() };
+            let cfg = NetConfig::from_ratio(&net, ratio, fl8, "prop");
+            let rep = simulate(&net, &cfg, &device, Mode::IntraLayer);
+            ensure(rep.latency_s > 0.0, || "non-positive latency".into())?;
+            ensure(rep.latency_s.is_finite(), || "infinite latency".into())?;
+            let tp = net.total_gops() / rep.latency_s;
+            ensure(
+                (tp - rep.throughput_gops).abs() < 1e-9,
+                || format!("throughput {} != gops/latency {tp}", rep.throughput_gops),
+            )?;
+            ensure(
+                rep.lut_util <= 1.0 && rep.dsp_util <= 1.0,
+                || format!("utilization out of range: {rep:?}"),
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_bigger_device_never_slower() {
+    let net = resnet18();
+    forall(
+        202,
+        32,
+        |r| (random_ratio(r), r.bool(0.5)),
+        |&(ratio, fl8)| {
+            let cfg = NetConfig::from_ratio(&net, ratio, fl8, "prop");
+            let small = simulate(&net, &cfg, &DeviceModel::xc7z020(), Mode::IntraLayer);
+            let big = simulate(&net, &cfg, &DeviceModel::xc7z045(), Mode::IntraLayer);
+            ensure(
+                big.latency_s <= small.latency_s * 1.001,
+                || format!("Z045 slower: {} vs {}", big.latency_s, small.latency_s),
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_per_layer_times_sum_to_latency() {
+    let net = zoo::vgg11();
+    forall(
+        203,
+        32,
+        |r| random_ratio(r),
+        |&ratio| {
+            let cfg = NetConfig::from_ratio(&net, ratio, false, "prop");
+            let rep = simulate(&net, &cfg, &DeviceModel::xc7z045(), Mode::IntraLayer);
+            let sum: f64 = rep.per_layer.iter().map(|t| t.total_s).sum();
+            ensure(
+                (sum - rep.latency_s).abs() < 1e-9,
+                || format!("sum {} != latency {}", sum, rep.latency_s),
+            )?;
+            ensure(rep.per_layer.len() == net.layers.len(), || "layer count".into())
+        },
+    );
+}
+
+#[test]
+fn prop_inter_layer_never_beats_intra_on_fl8_configs() {
+    // On layer-uniform (fl8) configs the idle-pool penalty must make the
+    // inter-layer execution at best equal, never better.
+    let net = resnet18();
+    forall(
+        204,
+        24,
+        |r| {
+            let pot = (r.below(3) * 50) as f64; // 0, 50, 100
+            Ratio::new(pot, 100.0 - pot, 0.0)
+        },
+        |&ratio| {
+            let cfg = NetConfig::from_ratio(&net, ratio, true, "prop");
+            let intra = simulate(&net, &cfg, &DeviceModel::xc7z045(), Mode::IntraLayer);
+            let inter = simulate(&net, &cfg, &DeviceModel::xc7z045(), Mode::InterLayer);
+            ensure(
+                intra.latency_s <= inter.latency_s * 1.001,
+                || format!("inter beat intra: {} vs {}", inter.latency_s, intra.latency_s),
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_more_pot_means_less_memory_traffic_never_more() {
+    // PoT-4 and Fixed-4 pack identically; only the Fixed-8 share moves the
+    // weight footprint. Traffic must be monotone in the Fixed-8 share.
+    use ilmpq::fpga::sim::synth_masks;
+    use ilmpq::model::LayerDesc;
+    let layer = LayerDesc::conv("c", 3, 1, 64, 64, 28, 28);
+    forall(
+        205,
+        64,
+        |r| {
+            let f8a = (r.below(10)) as f64 * 5.0;
+            let f8b = (r.below(10)) as f64 * 5.0;
+            (f8a.min(f8b), f8a.max(f8b))
+        },
+        |&(lo8, hi8)| {
+            let bytes = |f8: f64| {
+                let pot = (100.0 - f8) / 2.0;
+                let m = synth_masks("c", 64, Ratio::new(pot, 100.0 - f8 - pot, f8));
+                ilmpq::fpga::memory::ddr_bytes(&layer, &m)
+            };
+            ensure(
+                bytes(lo8) <= bytes(hi8) + 1e-9,
+                || format!("traffic not monotone in f8: {} vs {}", bytes(lo8), bytes(hi8)),
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_synth_masks_partition_rows() {
+    forall(
+        206,
+        128,
+        |r| (r.range_usize(1, 512), random_ratio(r)),
+        |&(rows, ratio)| {
+            let m = ilmpq::fpga::sim::synth_masks("l", rows, ratio);
+            let (p, f4, f8) = m.counts();
+            ensure(p + f4 + f8 == rows, || format!("{p}+{f4}+{f8} != {rows}"))?;
+            // No row is both 8-bit and PoT.
+            for i in 0..rows {
+                ensure(
+                    !(m.is8[i] > 0.5 && m.is_pot[i] > 0.5),
+                    || format!("row {i} double-assigned"),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
