@@ -1,0 +1,208 @@
+//! Bench: native packed-code GEMM (`quant::qgemm`) vs the dequantize-to-f32
+//! baseline, on ResNet-18 layer shapes (batch 1, im2col view).
+//!
+//! The baseline is what the frozen-model eval effectively paid before this
+//! subsystem existed: an f32 GEMM over pre-dequantized weight rows (the
+//! unpack itself is *excluded* — it happens once per model, not per call).
+//! The packed path is timed end to end per call: activation quantization +
+//! integer GEMM over the packed codes. Both sides use the same row-blocked
+//! thread pool, so the comparison isolates arithmetic + memory traffic
+//! (4-bit rows move an 8x smaller weight image than f32).
+//!
+//! Writes machine-readable results to `BENCH_qgemm.json` at the repo root.
+//!
+//! ```sh
+//! cargo bench --bench qgemm [-- --iters 5 --threads 8 --full --out PATH]
+//! ```
+
+use std::collections::BTreeMap;
+
+use ilmpq::model::resnet18;
+use ilmpq::quant::qgemm::{self, QuantizedActs};
+use ilmpq::quant::{assign, PackedMatrix, Ratio, Scheme};
+use ilmpq::util::stats::{bench, mean};
+use ilmpq::util::{Args, Json, Rng};
+
+const REPRESENTATIVE: &[&str] = &[
+    "conv1",
+    "layer1.0.conv1",
+    "layer2.1.conv2",
+    "layer3.0.conv1",
+    "layer4.1.conv2",
+    "fc",
+];
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(
+        entries
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect::<BTreeMap<_, _>>(),
+    )
+}
+
+fn masks_for(label: &str, w: &[Vec<f32>], rng: &mut Rng) -> ilmpq::quant::LayerMasks {
+    match label {
+        "fixed8" => assign::assign_uniform_layer("bench", w.len(), Scheme::Fixed8),
+        "fixed4" => assign::assign_uniform_layer("bench", w.len(), Scheme::Fixed4),
+        "pot4" => assign::assign_uniform_layer("bench", w.len(), Scheme::Pot4),
+        "ilmpq2" => {
+            let eigs: Vec<f64> = (0..w.len()).map(|_| rng.f64()).collect();
+            assign::assign_layer("bench", w, &eigs, Ratio::new(65.0, 30.0, 5.0))
+        }
+        other => panic!("unknown scheme label {other}"),
+    }
+}
+
+fn main() {
+    let a = Args::parse_env(
+        "bench qgemm",
+        1,
+        &[
+            ("iters", "timed iterations per case (default 5)"),
+            ("threads", "worker threads (default: all cores)"),
+            ("out", "output JSON path (default: repo-root BENCH_qgemm.json)"),
+            ("full!", "bench every ResNet-18 layer, not the representative set"),
+        ],
+    );
+    let iters = a.usize_or("iters", 5);
+    let threads = a.usize_or("threads", qgemm::default_threads());
+    let out_path = a
+        .str_or(
+            "out",
+            if std::path::Path::new("../ROADMAP.md").exists() {
+                "../BENCH_qgemm.json"
+            } else {
+                "BENCH_qgemm.json"
+            },
+        )
+        .to_string();
+
+    let net = resnet18();
+    let layers: Vec<_> = net
+        .layers
+        .iter()
+        .filter(|l| a.flag("full") || REPRESENTATIVE.contains(&l.name.as_str()))
+        .collect();
+
+    println!(
+        "== quant::qgemm vs dequant+f32 GEMM (ResNet-18 shapes, batch 1, {threads} threads, {iters} iters) =="
+    );
+    println!(
+        "{:<18} {:>16} {:>10} | {:>18} {:>18} {:>18} {:>18}",
+        "layer", "(M,K,N)", "f32 GOP/s", "fixed8", "fixed4", "pot4", "ilmpq2 65:30:5"
+    );
+
+    let mut rng = Rng::new(2021);
+    let mut cases = Vec::new();
+    let mut speedups_4bit: Vec<f64> = Vec::new();
+    for layer in layers {
+        let g = layer.gemm();
+        // Weight rows (N = out channels = g.m packed rows), im2col acts
+        // (g.n patch rows of fan-in g.k).
+        let w: Vec<Vec<f32>> = (0..g.m)
+            .map(|_| (0..g.k).map(|_| rng.normal() * 0.2).collect())
+            .collect();
+        let x: Vec<f32> = (0..g.n * g.k).map(|_| rng.normal()).collect();
+        let macs = (g.m * g.k * g.n) as f64;
+        let gops_of = |secs: f64| 2.0 * macs / secs / 1e9;
+
+        // Baseline: f32 GEMM over pre-dequantized rows (4-bit dequant so the
+        // value distribution matches; cost is scheme-independent).
+        let base_rows = PackedMatrix::pack(
+            &w,
+            &assign::assign_uniform_layer("bench", g.m, Scheme::Fixed4),
+        )
+        .unpack();
+        let base_s = mean(&bench(1, iters, || {
+            let _ = qgemm::f32_gemm_rows(&x, g.n, g.k, &base_rows, threads);
+        }));
+
+        let mut scheme_cells = Vec::new();
+        let mut line = format!(
+            "{:<18} {:>16} {:>10.2} |",
+            layer.name,
+            format!("({},{},{})", g.m, g.k, g.n),
+            gops_of(base_s)
+        );
+        for label in ["fixed8", "fixed4", "pot4", "ilmpq2"] {
+            let masks = masks_for(label, &w, &mut rng);
+            let packed = PackedMatrix::pack(&w, &masks);
+            let secs = mean(&bench(1, iters, || {
+                let acts = QuantizedActs::quantize(&x, g.n, g.k);
+                let _ = qgemm::qgemm(&acts, &packed, threads);
+            }));
+            let speedup = base_s / secs;
+            if label == "fixed4" || label == "pot4" {
+                speedups_4bit.push(speedup);
+            }
+            line.push_str(&format!(" {:>9.2} ({:>4.2}x)", gops_of(secs), speedup));
+            scheme_cells.push((
+                label,
+                obj(vec![
+                    ("seconds", Json::Num(secs)),
+                    ("gops", Json::Num(gops_of(secs))),
+                    ("speedup_vs_f32", Json::Num(speedup)),
+                ]),
+            ));
+        }
+        println!("{line}");
+        cases.push(obj(vec![
+            ("layer", Json::Str(layer.name.clone())),
+            ("m", Json::Num(g.m as f64)),
+            ("k", Json::Num(g.k as f64)),
+            ("n", Json::Num(g.n as f64)),
+            ("baseline_f32_seconds", Json::Num(base_s)),
+            ("baseline_f32_gops", Json::Num(gops_of(base_s))),
+            ("schemes", obj(scheme_cells)),
+        ]));
+    }
+
+    // Cheap correctness spot check (fc shape): packed path == dequant GEMM
+    // over the quantized activations, within f32 accumulation noise.
+    {
+        let w: Vec<Vec<f32>> = (0..64).map(|_| (0..512).map(|_| rng.normal()).collect()).collect();
+        let masks = masks_for("ilmpq2", &w, &mut rng);
+        let packed = PackedMatrix::pack(&w, &masks);
+        let x: Vec<f32> = (0..4 * 512).map(|_| rng.normal()).collect();
+        let acts = QuantizedActs::quantize(&x, 4, 512);
+        let got = qgemm::qgemm(&acts, &packed, threads);
+        let want = qgemm::f32_gemm_rows(&acts.dequant(), 4, 512, &packed.unpack(), 1);
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-3 + 1e-4 * b.abs(),
+                "parity check failed at {i}: {a} vs {b}"
+            );
+        }
+    }
+
+    let min_4bit = speedups_4bit.iter().copied().fold(f64::INFINITY, f64::min);
+    let geomean_4bit = (speedups_4bit.iter().map(|s| s.ln()).sum::<f64>()
+        / speedups_4bit.len().max(1) as f64)
+        .exp();
+    println!(
+        "\n4-bit (fixed4/pot4) speedup vs f32 baseline: min {min_4bit:.2}x, geomean {geomean_4bit:.2}x"
+    );
+    if min_4bit < 2.0 {
+        println!("WARNING: below the 2x acceptance target on this machine");
+    }
+
+    let doc = obj(vec![
+        ("bench", Json::Str("qgemm".into())),
+        ("status", Json::Str("measured".into())),
+        ("workload", Json::Str("resnet18 layer shapes, batch 1, im2col view".into())),
+        ("threads", Json::Num(threads as f64)),
+        ("iters", Json::Num(iters as f64)),
+        ("cases", Json::Arr(cases)),
+        (
+            "summary",
+            obj(vec![
+                ("min_speedup_4bit", Json::Num(min_4bit)),
+                ("geomean_speedup_4bit", Json::Num(geomean_4bit)),
+            ]),
+        ),
+    ]);
+    std::fs::write(&out_path, doc.to_string_compact())
+        .unwrap_or_else(|e| panic!("write {out_path}: {e}"));
+    println!("wrote {out_path}");
+}

@@ -8,7 +8,8 @@ use anyhow::Result;
 
 use crate::baselines::table1::{accuracy_configs, manifest_ratio_name, AccuracyConfig};
 use crate::coordinator::trainer::Trainer;
-use crate::quant::{assign, gemm_rows, LayerMasks, MaskSet, Scheme};
+use crate::experiments::ptq;
+use crate::quant::{assign, freeze, gemm_rows, LayerMasks, MaskSet, Scheme};
 use crate::runtime::Runtime;
 
 /// One finished accuracy run.
@@ -18,6 +19,10 @@ pub struct AccuracyRow {
     pub paper_top1: f64,
     pub test_acc: f64,
     pub final_loss: f64,
+    /// Test accuracy of the same trained weights re-evaluated through the
+    /// native packed-GEMM path (`--qgemm-check`): the cross-check that the
+    /// integer execution model matches the PJRT fake-quant semantics.
+    pub qgemm_acc: Option<f64>,
 }
 
 /// Build the masks for one accuracy config.
@@ -64,12 +69,15 @@ pub fn masks_for(rt: &Runtime, cfg: &AccuracyConfig) -> Result<MaskSet> {
     Ok(MaskSet { name: cfg.label.clone(), layers })
 }
 
-/// Train + evaluate one config.
+/// Train + evaluate one config. With `qgemm_check`, the trained weights are
+/// additionally frozen and re-evaluated through the native packed-GEMM path
+/// (integer codes end to end) so the two execution models can be diffed.
 pub fn run_one(
     rt: &Runtime,
     cfg: &AccuracyConfig,
     steps: usize,
     seed: u64,
+    qgemm_check: bool,
     mut log: impl FnMut(&str),
 ) -> Result<AccuracyRow> {
     let masks = masks_for(rt, cfg)?;
@@ -81,11 +89,26 @@ pub fn run_one(
         ));
     })?;
     let eval = tr.evaluate()?;
+    let qgemm_acc = if qgemm_check {
+        let names: Vec<String> =
+            rt.manifest.params.iter().map(|(n, _)| n.clone()).collect();
+        let frozen = freeze::freeze_params(&tr.params, &names, &masks);
+        let acc = ptq::eval_frozen_qgemm(rt, &frozen, Some(&masks))? * 100.0;
+        log(&format!(
+            "  qgemm cross-check: {:.2}% (PJRT eval {:.2}%)",
+            acc,
+            eval.acc as f64 * 100.0
+        ));
+        Some(acc)
+    } else {
+        None
+    };
     Ok(AccuracyRow {
         label: cfg.label.clone(),
         paper_top1: cfg.paper_top1,
         test_acc: eval.acc as f64 * 100.0,
         final_loss: eval.loss as f64,
+        qgemm_acc,
     })
 }
 
@@ -104,7 +127,7 @@ pub fn run_all(
         let mut accs = Vec::new();
         let mut losses = Vec::new();
         for &seed in seeds {
-            let row = run_one(rt, &cfg, steps, seed, &mut log)?;
+            let row = run_one(rt, &cfg, steps, seed, false, &mut log)?;
             log(&format!("  seed {seed}: test acc {:.2}%", row.test_acc));
             accs.push(row.test_acc);
             losses.push(row.final_loss);
@@ -114,6 +137,7 @@ pub fn run_all(
             paper_top1: cfg.paper_top1,
             test_acc: accs.iter().sum::<f64>() / accs.len() as f64,
             final_loss: losses.iter().sum::<f64>() / losses.len() as f64,
+            qgemm_acc: None,
         });
     }
     Ok(out)
@@ -130,9 +154,13 @@ pub fn render(rows: &[AccuracyRow]) -> String {
     ));
     for r in rows {
         s.push_str(&format!(
-            "{:<20} {:>11.2}% {:>13.2}% {:>12.4}\n",
+            "{:<20} {:>11.2}% {:>13.2}% {:>12.4}",
             r.label, r.paper_top1, r.test_acc, r.final_loss
         ));
+        if let Some(q) = r.qgemm_acc {
+            s.push_str(&format!("  [qgemm {q:.2}%]"));
+        }
+        s.push('\n');
     }
     s
 }
@@ -148,8 +176,23 @@ mod tests {
             paper_top1: 70.73,
             test_acc: 91.2,
             final_loss: 0.31,
+            qgemm_acc: None,
         }];
         let s = render(&rows);
         assert!(s.contains("ILMPQ-2") && s.contains("70.73"));
+        assert!(!s.contains("qgemm"));
+    }
+
+    #[test]
+    fn render_includes_qgemm_column_when_checked() {
+        let rows = vec![AccuracyRow {
+            label: "ILMPQ-1".into(),
+            paper_top1: 70.66,
+            test_acc: 90.0,
+            final_loss: 0.4,
+            qgemm_acc: Some(89.61),
+        }];
+        let s = render(&rows);
+        assert!(s.contains("[qgemm 89.61%]"));
     }
 }

@@ -21,7 +21,7 @@ use crate::baselines::table1::accuracy_configs;
 use crate::coordinator::trainer::Trainer;
 use crate::experiments::accuracy::masks_for;
 use crate::quant::{assign, freeze, LayerMasks, MaskSet, Scheme};
-use crate::runtime::{HostTensor, Runtime};
+use crate::runtime::{HostTensor, PackedModel, Runtime};
 
 /// One PTQ row.
 #[derive(Debug, Clone)]
@@ -31,6 +31,16 @@ pub struct PtqRow {
     pub acc: f64,
     /// Accuracy drop vs the unquantized reference weights.
     pub drop_vs_float: f64,
+}
+
+/// Which executor evaluates the frozen model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvalBackend {
+    /// The `infer_frozen_b64` XLA artifact (f32 GEMMs on frozen weights).
+    Pjrt,
+    /// The native packed-code GEMM path (`quant::qgemm` over the BRAM
+    /// image) — integer arithmetic end to end.
+    Qgemm,
 }
 
 /// All-Fixed-8 mask set (the near-float training config).
@@ -46,15 +56,35 @@ pub fn fixed8_masks(rt: &Runtime) -> MaskSet {
     }
 }
 
-/// Evaluate params (as given — caller freezes) on the full test split via
-/// the frozen artifacts. Returns accuracy in [0, 1].
-pub fn eval_frozen(rt: &Runtime, params: &[HostTensor]) -> Result<f64> {
+fn argmax(row: &[f32]) -> usize {
+    row.iter()
+        .enumerate()
+        .max_by(|a, c| a.1.partial_cmp(c.1).unwrap())
+        .map(|(k, _)| k)
+        .unwrap()
+}
+
+/// Fraction of predictions matching labels (over the predicted prefix).
+fn score(preds: &[usize], labels: &[i32]) -> f64 {
+    if preds.is_empty() {
+        return 0.0;
+    }
+    let correct = preds.iter().zip(labels).filter(|(p, y)| **p as i32 == **y).count();
+    correct as f64 / preds.len() as f64
+}
+
+/// Predictions over an already-loaded test split (one disk read serves
+/// both the prediction and the scoring pass).
+fn predict_frozen_on(
+    rt: &Runtime,
+    params: &[HostTensor],
+    x_test: &[f32],
+) -> Result<Vec<usize>> {
     let m = &rt.manifest;
-    let (x_test, y_test) = m.data.load_test()?;
     let img = m.data.image_elems();
     let b = 64usize;
     let n_batches = m.data.n_test / b;
-    let mut correct = 0usize;
+    let mut preds = Vec::with_capacity(n_batches * b);
     for bi in 0..n_batches {
         let mut inputs = params.to_vec();
         inputs.push(HostTensor::f32(
@@ -64,19 +94,70 @@ pub fn eval_frozen(rt: &Runtime, params: &[HostTensor]) -> Result<f64> {
         let out = rt.run("infer_frozen_b64", &inputs)?;
         let logits = out[0].as_f32();
         for i in 0..b {
-            let row = &logits[i * m.classes..(i + 1) * m.classes];
-            let pred = row
-                .iter()
-                .enumerate()
-                .max_by(|a, c| a.1.partial_cmp(c.1).unwrap())
-                .map(|(k, _)| k)
-                .unwrap();
-            if pred as i32 == y_test[bi * b + i] {
-                correct += 1;
-            }
+            preds.push(argmax(&logits[i * m.classes..(i + 1) * m.classes]));
         }
     }
-    Ok(correct as f64 / (n_batches * b) as f64)
+    Ok(preds)
+}
+
+fn predict_frozen_qgemm_on(
+    rt: &Runtime,
+    params: &[HostTensor],
+    masks: Option<&MaskSet>,
+    x_test: &[f32],
+) -> Result<Vec<usize>> {
+    let m = &rt.manifest;
+    let model = PackedModel::build(m, params, masks)?;
+    let img = m.data.image_elems();
+    let b = 64usize;
+    let n_batches = m.data.n_test / b;
+    let mut preds = Vec::with_capacity(n_batches * b);
+    for bi in 0..n_batches {
+        let logits = model.forward(&x_test[bi * b * img..(bi + 1) * b * img], b);
+        for i in 0..b {
+            preds.push(argmax(&logits[i * m.classes..(i + 1) * m.classes]));
+        }
+    }
+    Ok(preds)
+}
+
+/// Argmax predictions for the full test split via the `infer_frozen_b64`
+/// artifact (params as given — caller freezes).
+pub fn predict_frozen(rt: &Runtime, params: &[HostTensor]) -> Result<Vec<usize>> {
+    let (x_test, _) = rt.manifest.data.load_test()?;
+    predict_frozen_on(rt, params, &x_test)
+}
+
+/// Argmax predictions for the full test split via the native packed-GEMM
+/// path. `masks = Some` packs the weights (pass the freeze-time mask set —
+/// the codes are identical whether params are frozen or raw, since
+/// fake-quant is idempotent); `None` runs the f32 reference backend.
+pub fn predict_frozen_qgemm(
+    rt: &Runtime,
+    params: &[HostTensor],
+    masks: Option<&MaskSet>,
+) -> Result<Vec<usize>> {
+    let (x_test, _) = rt.manifest.data.load_test()?;
+    predict_frozen_qgemm_on(rt, params, masks, &x_test)
+}
+
+/// Evaluate params (as given — caller freezes) on the full test split via
+/// the frozen artifacts. Returns accuracy in [0, 1].
+pub fn eval_frozen(rt: &Runtime, params: &[HostTensor]) -> Result<f64> {
+    let (x_test, y_test) = rt.manifest.data.load_test()?;
+    let preds = predict_frozen_on(rt, params, &x_test)?;
+    Ok(score(&preds, &y_test))
+}
+
+/// Same split, native packed-GEMM execution. Returns accuracy in [0, 1].
+pub fn eval_frozen_qgemm(
+    rt: &Runtime,
+    params: &[HostTensor],
+    masks: Option<&MaskSet>,
+) -> Result<f64> {
+    let (x_test, y_test) = rt.manifest.data.load_test()?;
+    let preds = predict_frozen_qgemm_on(rt, params, masks, &x_test)?;
+    Ok(score(&preds, &y_test))
 }
 
 /// Train the near-float reference model.
@@ -99,18 +180,40 @@ pub fn run_all(
     rt: &Runtime,
     steps: usize,
     seed: u64,
+    log: impl FnMut(&str),
+) -> Result<(f64, Vec<PtqRow>)> {
+    run_all_with(rt, steps, seed, EvalBackend::Pjrt, log)
+}
+
+/// The full PTQ table on a chosen evaluation backend. Training always runs
+/// through PJRT (QAT needs the lowered train_step artifact); only the
+/// frozen-model evaluations switch.
+pub fn run_all_with(
+    rt: &Runtime,
+    steps: usize,
+    seed: u64,
+    backend: EvalBackend,
     mut log: impl FnMut(&str),
 ) -> Result<(f64, Vec<PtqRow>)> {
     log("[ptq] training near-float (all-Fixed-8) reference ...");
     let params = train_reference(rt, steps, seed, &mut log)?;
-    let float_acc = eval_frozen(rt, &params)? * 100.0;
-    log(&format!("[ptq] reference (unquantized weights) test acc {float_acc:.2}%"));
+    let float_acc = match backend {
+        EvalBackend::Pjrt => eval_frozen(rt, &params)?,
+        // No masks: the float Rust backend (f32 GEMM over gemm-view rows).
+        EvalBackend::Qgemm => eval_frozen_qgemm(rt, &params, None)?,
+    } * 100.0;
+    log(&format!(
+        "[ptq] reference (unquantized weights, {backend:?}) test acc {float_acc:.2}%"
+    ));
     let names: Vec<String> = rt.manifest.params.iter().map(|(n, _)| n.clone()).collect();
     let mut rows = Vec::new();
     for cfg in accuracy_configs() {
         let masks = masks_for(rt, &cfg)?;
         let frozen = freeze::freeze_params(&params, &names, &masks);
-        let acc = eval_frozen(rt, &frozen)? * 100.0;
+        let acc = match backend {
+            EvalBackend::Pjrt => eval_frozen(rt, &frozen)?,
+            EvalBackend::Qgemm => eval_frozen_qgemm(rt, &frozen, Some(&masks))?,
+        } * 100.0;
         log(&format!("[ptq] {:<20} {:.2}%", cfg.label, acc));
         rows.push(PtqRow {
             label: cfg.label.clone(),
@@ -187,5 +290,17 @@ mod tests {
         }];
         let s = render(81.5, &rows);
         assert!(s.contains("ILMPQ-2") && s.contains("1.50pp"));
+    }
+
+    #[test]
+    fn score_and_argmax_semantics() {
+        assert_eq!(score(&[1, 2, 3], &[1, 0, 3]), 2.0 / 3.0);
+        assert_eq!(score(&[], &[]), 0.0);
+        // Labels may be longer than the predicted prefix (truncated batches).
+        assert_eq!(score(&[0, 1], &[0, 1, 2, 3]), 1.0);
+        // Ties resolve to the last maximal index (the PJRT path's historic
+        // behavior via `max_by`), shared by both backends.
+        assert_eq!(argmax(&[0.1, 0.9, 0.9]), 2);
+        assert_eq!(argmax(&[3.0, 1.0]), 0);
     }
 }

@@ -131,11 +131,13 @@ fn run(cmd: &str) -> Result<()> {
                     ("steps", "QAT steps per config (default 300)"),
                     ("config", "run only rows whose label contains this"),
                     ("seed", "data order seed"),
+                    ("qgemm-check!", "re-evaluate trained weights via the native packed GEMM"),
                 ],
             );
             let rt = Runtime::load_default()?;
             let steps = a.usize_or("steps", 300);
             let seed = a.u64_or("seed", 2021);
+            let qgemm_check = a.flag("qgemm-check");
             let filter = a.get("config").map(str::to_string);
             let mut rows = Vec::new();
             for cfg in accuracy_configs() {
@@ -145,7 +147,9 @@ fn run(cmd: &str) -> Result<()> {
                     }
                 }
                 println!("[accuracy] {} ({})", cfg.label, cfg.ratio.label());
-                rows.push(accuracy::run_one(&rt, &cfg, steps, seed, |s| println!("{s}"))?);
+                rows.push(accuracy::run_one(&rt, &cfg, steps, seed, qgemm_check, |s| {
+                    println!("{s}")
+                })?);
             }
             println!("{}", accuracy::render(&rows));
             Ok(())
@@ -158,12 +162,23 @@ fn run(cmd: &str) -> Result<()> {
                     ("steps", "reference training steps (default 800)"),
                     ("seed", "reference training seed"),
                     ("policies!", "also run the §II-C policy ablation"),
+                    ("backend", "frozen-model eval backend: pjrt|qgemm (default pjrt)"),
                 ],
             );
             let rt = Runtime::load_default()?;
             let steps = a.usize_or("steps", 800);
-            let (float_acc, rows) =
-                ptq::run_all(&rt, steps, a.u64_or("seed", 2021), |s| println!("{s}"))?;
+            let backend = match a.str_or("backend", "pjrt") {
+                "pjrt" => ptq::EvalBackend::Pjrt,
+                "qgemm" => ptq::EvalBackend::Qgemm,
+                other => anyhow::bail!("unknown --backend {other:?} (pjrt|qgemm)"),
+            };
+            let (float_acc, rows) = ptq::run_all_with(
+                &rt,
+                steps,
+                a.u64_or("seed", 2021),
+                backend,
+                |s| println!("{s}"),
+            )?;
             println!("{}", ptq::render(float_acc, &rows));
             if a.flag("policies") {
                 let params =

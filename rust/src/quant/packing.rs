@@ -37,13 +37,25 @@ fn unnibble(n: u8) -> i32 {
     ((n << 4) as i8 >> 4) as i32
 }
 
+/// Packed bytes one row occupies: a byte per code at 8 bits, a nibble per
+/// code (byte-aligned row) at 4 bits.
+pub fn row_byte_len(cols: usize, scheme: Scheme) -> usize {
+    match scheme {
+        Scheme::Fixed8 => cols,
+        Scheme::Fixed4 | Scheme::Pot4 => cols.div_ceil(2),
+    }
+}
+
 impl PackedMatrix {
     /// Quantize + pack a (rows, cols) GEMM-view matrix under `masks`.
     pub fn pack(w: &[Vec<f32>], masks: &LayerMasks) -> PackedMatrix {
         assert_eq!(w.len(), masks.rows(), "rows vs masks mismatch");
         let rows = w.len();
         let cols = if rows == 0 { 0 } else { w[0].len() };
-        let mut data = Vec::new();
+        // Exact image size from the masks, so `data` never reallocates.
+        let total: usize =
+            (0..rows).map(|r| row_byte_len(cols, masks.scheme_of(r))).sum();
+        let mut data = Vec::with_capacity(total);
         let mut row_offsets = Vec::with_capacity(rows);
         let mut schemes = Vec::with_capacity(rows);
         let mut scales = Vec::with_capacity(rows);
@@ -84,35 +96,51 @@ impl PackedMatrix {
             schemes.push(scheme);
             scales.push(scale);
         }
+        debug_assert_eq!(data.len(), total, "packed size prediction drifted");
         PackedMatrix { rows, cols, schemes, scales, data, row_offsets }
+    }
+
+    /// Scheme of one row.
+    pub fn scheme(&self, r: usize) -> Scheme {
+        self.schemes[r]
+    }
+
+    /// Per-row dequantization scale (max-abs of the source row).
+    pub fn scale(&self, r: usize) -> f32 {
+        self.scales[r]
+    }
+
+    /// The contiguous packed bytes of one row — what a compute kernel
+    /// streams (`quant::qgemm` consumes these directly).
+    pub fn row_bytes(&self, r: usize) -> &[u8] {
+        let off = self.row_offsets[r];
+        &self.data[off..off + row_byte_len(self.cols, self.schemes[r])]
+    }
+
+    /// Iterator over one row's integer codes (sign-extended; `cols` items).
+    pub fn row_codes(&self, r: usize) -> RowCodes<'_> {
+        RowCodes {
+            bytes: self.row_bytes(r),
+            cols: self.cols,
+            i: 0,
+            eight_bit: self.schemes[r] == Scheme::Fixed8,
+        }
     }
 
     /// Dequantize one row back to f32 (must equal the fake-quant output).
     pub fn unpack_row(&self, r: usize) -> Vec<f32> {
-        let off = self.row_offsets[r];
         let scale = self.scales[r];
-        let mut out = Vec::with_capacity(self.cols);
         match self.schemes[r] {
             Scheme::Fixed8 => {
-                for c in 0..self.cols {
-                    out.push(fixed::dequant(self.data[off + c] as i8 as i32, 8, scale));
-                }
+                self.row_codes(r).map(|c| fixed::dequant(c, 8, scale)).collect()
             }
-            Scheme::Fixed4 | Scheme::Pot4 => {
-                let is_pot = self.schemes[r] == Scheme::Pot4;
-                for c in 0..self.cols {
-                    let byte = self.data[off + c / 2];
-                    let nib = if c % 2 == 0 { byte & 0x0F } else { byte >> 4 };
-                    let code = unnibble(nib);
-                    out.push(if is_pot {
-                        pot::dequant(code, scale)
-                    } else {
-                        fixed::dequant(code, 4, scale)
-                    });
-                }
+            Scheme::Fixed4 => {
+                self.row_codes(r).map(|c| fixed::dequant(c, 4, scale)).collect()
+            }
+            Scheme::Pot4 => {
+                self.row_codes(r).map(|c| pot::dequant(c, scale)).collect()
             }
         }
-        out
     }
 
     pub fn unpack(&self) -> Vec<Vec<f32>> {
@@ -134,6 +162,40 @@ impl PackedMatrix {
         (self.rows * self.cols * 4) as f64 / self.total_bytes().max(1) as f64
     }
 }
+
+/// Streaming decoder of one packed row's integer codes.
+#[derive(Debug, Clone)]
+pub struct RowCodes<'a> {
+    bytes: &'a [u8],
+    cols: usize,
+    i: usize,
+    eight_bit: bool,
+}
+
+impl Iterator for RowCodes<'_> {
+    type Item = i32;
+
+    fn next(&mut self) -> Option<i32> {
+        if self.i >= self.cols {
+            return None;
+        }
+        let c = if self.eight_bit {
+            self.bytes[self.i] as i8 as i32
+        } else {
+            let byte = self.bytes[self.i / 2];
+            unnibble(if self.i % 2 == 0 { byte & 0x0F } else { byte >> 4 })
+        };
+        self.i += 1;
+        Some(c)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let left = self.cols - self.i;
+        (left, Some(left))
+    }
+}
+
+impl ExactSizeIterator for RowCodes<'_> {}
 
 #[cfg(test)]
 mod tests {
@@ -214,6 +276,33 @@ mod tests {
         assert_eq!(p.weight_bytes(), 3 * 4); // ceil(7/2) = 4 bytes per row
         let u = p.unpack();
         assert_eq!(u[0].len(), 7);
+    }
+
+    #[test]
+    fn row_bytes_and_codes_agree_with_unpack() {
+        let mut r = Rng::new(9);
+        let w = random_matrix(&mut r, 12, 9); // odd cols
+        let masks = random_masks(&mut r, 12);
+        let p = PackedMatrix::pack(&w, &masks);
+        let mut total = 0usize;
+        for ri in 0..p.rows {
+            assert_eq!(p.row_bytes(ri).len(), row_byte_len(p.cols, p.scheme(ri)));
+            total += p.row_bytes(ri).len();
+            assert_eq!(p.row_codes(ri).len(), p.cols);
+            // Codes re-dequantize to exactly the unpacked row.
+            let scale = p.scale(ri);
+            let via_codes: Vec<f32> = p
+                .row_codes(ri)
+                .map(|c| match p.scheme(ri) {
+                    Scheme::Fixed8 => fixed::dequant(c, 8, scale),
+                    Scheme::Fixed4 => fixed::dequant(c, 4, scale),
+                    Scheme::Pot4 => pot::dequant(c, scale),
+                })
+                .collect();
+            assert_eq!(via_codes, p.unpack_row(ri), "row {ri}");
+        }
+        // Rows tile `data` exactly: the preallocation in `pack` is exact.
+        assert_eq!(total, p.data.len());
     }
 
     #[test]

@@ -1,0 +1,526 @@
+//! Native packed-code quantized GEMM — the CPU twin of the paper's two
+//! FPGA compute lanes (§II–III).
+//!
+//! The ILMPQ board never touches f32 weights: BRAM holds packed integer
+//! codes and the two arithmetic lanes consume them directly. This module is
+//! that execution model in software, computing `y = x · Wᵀ` straight from a
+//! [`PackedMatrix`] bitstream with one inner loop per scheme:
+//!
+//! * **Fixed-8 → DSP lane (1 MAC/DSP/cycle).** One signed byte per weight;
+//!   the inner loop is an `i8 × i8 → i32` multiply-accumulate — exactly the
+//!   18×27 DSP48 multiplier the paper assigns 8-bit rows to.
+//! * **Fixed-4 → DSP lane (2 MAC/DSP/cycle).** Two codes per byte; the loop
+//!   nibble-decodes a byte and issues both MACs per iteration, the software
+//!   analogue of the paper's double-pumped DSP packing.
+//! * **PoT-4 → LUT lane (shift-add fabric).** Codes are `sign·(e+1)`; the
+//!   loop is branch-free shift/sign arithmetic — `±(x << (emax − e))` with a
+//!   single `2^-emax` fold into the row epilogue — i.e. the multiplierless
+//!   shift-add PE the paper builds from LUTs.
+//!
+//! Activations are quantized **once per call** to signed 8-bit codes with a
+//! per-row max-abs scale (the FPGA's 8-bit activation datapath), so every
+//! inner loop is pure integer arithmetic; each output element gets a single
+//! f32 epilogue multiply `acc · (act_scale · row_scale/Q)`. Integer
+//! accumulation makes results bit-identical regardless of thread count —
+//! the kernel row-blocks the weight matrix across a scoped `std::thread`
+//! pool sized from `available_parallelism`, and every (weight row,
+//! activation row) dot product is computed identically in any partition.
+//!
+//! `im2col` (fan-in order `(kh, kw, in_ch)`, matching
+//! [`gemm_rows`](super::gemm_rows) and `jax.lax` SAME padding) turns conv
+//! layers into this GEMM; [`crate::model::GemmDims`] describes the result.
+
+use crate::model::GemmDims;
+
+use super::packing::PackedMatrix;
+use super::Scheme;
+
+/// Activation quantization granularity: signed 8-bit, per-row max-abs scale.
+pub const ACT_QMAX: f32 = 127.0;
+
+/// Largest contraction depth K with overflow-free `i32` accumulation:
+/// the worst per-element product magnitude is `127 · 127` (Fixed-8 row ×
+/// 8-bit activation), so `K ≤ i32::MAX / 127²` (~133k; ResNet-18's largest
+/// fan-in is 4608).
+pub const MAX_K: usize = (i32::MAX / (127 * 127)) as usize;
+
+/// Activations quantized to signed 8-bit codes, one scale per row.
+///
+/// Rows are zero-padded to an even number of codes so the 4-bit kernels can
+/// consume activation pairs with `chunks_exact(2)` — pad codes multiply the
+/// packed zero hi-nibble of an odd-column row, so they never contribute.
+#[derive(Debug, Clone)]
+pub struct QuantizedActs {
+    pub m: usize,
+    pub k: usize,
+    stride: usize,
+    codes: Vec<i8>,
+    /// Per-row dequantization factor `max|x| / 127`.
+    pub scales: Vec<f32>,
+}
+
+impl QuantizedActs {
+    /// Quantize a row-major `(m, k)` f32 matrix (per-row max-abs scale).
+    pub fn quantize(x: &[f32], m: usize, k: usize) -> QuantizedActs {
+        assert_eq!(x.len(), m * k, "activation shape mismatch");
+        let stride = k + (k & 1);
+        let mut codes = vec![0i8; m * stride];
+        let mut scales = Vec::with_capacity(m);
+        for i in 0..m {
+            let row = &x[i * k..(i + 1) * k];
+            let s = super::row_scale(row);
+            let inv = ACT_QMAX / s;
+            let dst = &mut codes[i * stride..i * stride + k];
+            for (d, &v) in dst.iter_mut().zip(row) {
+                *d = (v * inv).round().clamp(-ACT_QMAX, ACT_QMAX) as i8;
+            }
+            scales.push(s / ACT_QMAX);
+        }
+        QuantizedActs { m, k, stride, codes, scales }
+    }
+
+    /// One padded code row (length `k` rounded up to even).
+    fn row(&self, i: usize) -> &[i8] {
+        &self.codes[i * self.stride..(i + 1) * self.stride]
+    }
+
+    /// The f32 values the integer kernel actually sees (row-major `(m, k)`)
+    /// — the reference operand for parity tests.
+    pub fn dequant(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.m * self.k);
+        for i in 0..self.m {
+            let s = self.scales[i];
+            out.extend(self.row(i)[..self.k].iter().map(|&c| c as f32 * s));
+        }
+        out
+    }
+}
+
+/// Worker-pool size: one thread per available core.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(std::num::NonZeroUsize::get).unwrap_or(1)
+}
+
+/// Packed-code GEMM: `y[i][r] = Σ_c x[i][c] · dequant(w[r][c])`, computed in
+/// integer arithmetic per scheme. Returns row-major `(m, rows)`.
+///
+/// Weight rows are split into contiguous blocks across `threads` scoped
+/// workers; output is bit-identical for every thread count (integer
+/// accumulation + a fixed-shape f32 epilogue per element).
+pub fn qgemm(acts: &QuantizedActs, w: &PackedMatrix, threads: usize) -> Vec<f32> {
+    assert_eq!(acts.k, w.cols, "contraction mismatch: acts k={} vs w cols={}", acts.k, w.cols);
+    assert!(w.cols <= MAX_K, "K={} overflows i32 accumulation (max {MAX_K})", w.cols);
+    row_blocked(w.rows, acts.m, threads, |r, orow| row_block(acts, w, r, orow))
+}
+
+/// Shared dispatch for both GEMM paths: fill an `(n, m)` buffer one weight
+/// row at a time via `kernel(r, out_row)`, contiguous row blocks across
+/// `threads` scoped workers, then hand back `(m, n)` row-major.
+fn row_blocked(
+    n: usize,
+    m: usize,
+    threads: usize,
+    kernel: impl Fn(usize, &mut [f32]) + Sync,
+) -> Vec<f32> {
+    if m == 0 || n == 0 {
+        return vec![0.0; m * n];
+    }
+    let mut out_nm = vec![0f32; n * m];
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        for (r, orow) in out_nm.chunks_mut(m).enumerate() {
+            kernel(r, orow);
+        }
+    } else {
+        let block = n.div_ceil(threads);
+        std::thread::scope(|s| {
+            for (t, chunk) in out_nm.chunks_mut(block * m).enumerate() {
+                let kernel = &kernel;
+                s.spawn(move || {
+                    for (j, orow) in chunk.chunks_mut(m).enumerate() {
+                        kernel(t * block + j, orow);
+                    }
+                });
+            }
+        });
+    }
+    transpose(&out_nm, n, m)
+}
+
+/// One weight row against every activation row (the per-thread work item).
+fn row_block(acts: &QuantizedActs, w: &PackedMatrix, r: usize, out: &mut [f32]) {
+    let bytes = w.row_bytes(r);
+    match w.scheme(r) {
+        Scheme::Fixed8 => {
+            let post = w.scale(r) / 127.0;
+            for (i, o) in out.iter_mut().enumerate() {
+                let mut acc = 0i32;
+                for (&wb, &xb) in bytes.iter().zip(acts.row(i)) {
+                    acc += (wb as i8 as i32) * (xb as i32);
+                }
+                *o = acc as f32 * (acts.scales[i] * post);
+            }
+        }
+        Scheme::Fixed4 => {
+            let post = w.scale(r) / 7.0;
+            for (i, o) in out.iter_mut().enumerate() {
+                let mut acc = 0i32;
+                for (&wb, x) in bytes.iter().zip(acts.row(i).chunks_exact(2)) {
+                    let lo = ((wb << 4) as i8 >> 4) as i32;
+                    let hi = (wb as i8 >> 4) as i32;
+                    acc += lo * (x[0] as i32) + hi * (x[1] as i32);
+                }
+                *o = acc as f32 * (acts.scales[i] * post);
+            }
+        }
+        Scheme::Pot4 => {
+            // Codes are sign·(e+1); each term is ±(x << (6 − e)) and the
+            // 2^-6 radix correction folds into the epilogue — no multiplies
+            // in the loop, mirroring the LUT shift-add lane. A zero code has
+            // signum 0, so the (defined, in-range) dummy shift contributes
+            // nothing: the loop is branch-free.
+            let post = w.scale(r) / 64.0;
+            for (i, o) in out.iter_mut().enumerate() {
+                let mut acc = 0i32;
+                for (&wb, x) in bytes.iter().zip(acts.row(i).chunks_exact(2)) {
+                    let lo = ((wb << 4) as i8 >> 4) as i32;
+                    let hi = (wb as i8 >> 4) as i32;
+                    acc += lo.signum() * ((x[0] as i32) << (7 - lo.abs()));
+                    acc += hi.signum() * ((x[1] as i32) << (7 - hi.abs()));
+                }
+                *o = acc as f32 * (acts.scales[i] * post);
+            }
+        }
+    }
+}
+
+/// `(rows, cols)` row-major → `(cols, rows)` row-major.
+fn transpose(src: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut out = vec![0f32; src.len()];
+    for r in 0..rows {
+        for (c, &v) in src[r * cols..(r + 1) * cols].iter().enumerate() {
+            out[c * rows + r] = v;
+        }
+    }
+    out
+}
+
+/// The pre-qgemm baseline: plain f32 GEMM over dequantized weight rows,
+/// with the same row-blocked threading (so benches compare arithmetic, not
+/// scheduling). `x` is row-major `(m, k)`; returns `(m, rows)`.
+pub fn f32_gemm_rows(
+    x: &[f32],
+    m: usize,
+    k: usize,
+    w_rows: &[Vec<f32>],
+    threads: usize,
+) -> Vec<f32> {
+    assert_eq!(x.len(), m * k, "activation shape mismatch");
+    row_blocked(w_rows.len(), m, threads, |r, orow| {
+        let wr = &w_rows[r];
+        assert_eq!(wr.len(), k, "w row {r} length");
+        for (i, o) in orow.iter_mut().enumerate() {
+            let mut acc = 0f32;
+            for (&wv, &xv) in wr.iter().zip(&x[i * k..(i + 1) * k]) {
+                acc += wv * xv;
+            }
+            *o = acc;
+        }
+    })
+}
+
+/// An im2col'd activation tensor: `(m, k)` patch matrix + output geometry.
+#[derive(Debug, Clone)]
+pub struct Im2col {
+    /// Row-major `(m, k)`: one row per output pixel, fan-in order
+    /// `(kh, kw, in_ch)` — the same order as [`super::gemm_rows`].
+    pub data: Vec<f32>,
+    pub m: usize,
+    pub k: usize,
+    pub oh: usize,
+    pub ow: usize,
+}
+
+impl Im2col {
+    /// The GEMM this patch matrix induces against an `out_ch`-row filter.
+    pub fn gemm_dims(&self, out_ch: usize) -> GemmDims {
+        GemmDims { m: out_ch, k: self.k, n: self.m }
+    }
+}
+
+/// Lower a SAME-padded convolution input to a patch matrix.
+///
+/// `x` is NHWC `(b, ih, iw, ic)`; output pixels are `ceil(ih/stride) ×
+/// ceil(iw/stride)` with TF/JAX SAME padding (`pad_total = (out−1)·stride +
+/// k − in`, floor-half before, rest after). Patch rows come out in
+/// `(batch, oy, ox)` order, so `qgemm` output is directly NHWC.
+pub fn im2col(
+    x: &[f32],
+    b: usize,
+    ih: usize,
+    iw: usize,
+    ic: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+) -> Im2col {
+    assert_eq!(x.len(), b * ih * iw * ic, "input shape mismatch");
+    assert!(stride > 0, "stride must be positive");
+    let oh = ih.div_ceil(stride);
+    let ow = iw.div_ceil(stride);
+    let pt = ((oh - 1) * stride + kh).saturating_sub(ih) / 2;
+    let pl = ((ow - 1) * stride + kw).saturating_sub(iw) / 2;
+    let k = kh * kw * ic;
+    let m = b * oh * ow;
+    let mut data = vec![0f32; m * k];
+    let mut row = 0usize;
+    for bi in 0..b {
+        let img = &x[bi * ih * iw * ic..(bi + 1) * ih * iw * ic];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let dst = &mut data[row * k..(row + 1) * k];
+                let mut d = 0usize;
+                for ky in 0..kh {
+                    let iy = (oy * stride + ky) as isize - pt as isize;
+                    if iy < 0 || iy >= ih as isize {
+                        d += kw * ic;
+                        continue;
+                    }
+                    for kx in 0..kw {
+                        let ix = (ox * stride + kx) as isize - pl as isize;
+                        if ix < 0 || ix >= iw as isize {
+                            d += ic;
+                            continue;
+                        }
+                        let src = (iy as usize * iw + ix as usize) * ic;
+                        dst[d..d + ic].copy_from_slice(&img[src..src + ic]);
+                        d += ic;
+                    }
+                }
+                row += 1;
+            }
+        }
+    }
+    Im2col { data, m, k, oh, ow }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::assign::assign_uniform_layer;
+    use crate::quant::LayerMasks;
+    use crate::util::prop::{assert_close, forall};
+    use crate::util::Rng;
+
+    fn random_matrix(r: &mut Rng, rows: usize, cols: usize) -> Vec<Vec<f32>> {
+        (0..rows)
+            .map(|_| (0..cols).map(|_| r.normal() * r.range_f32(0.1, 3.0)).collect())
+            .collect()
+    }
+
+    fn random_masks(r: &mut Rng, rows: usize) -> LayerMasks {
+        let is8: Vec<f32> = (0..rows).map(|_| if r.bool(0.3) { 1.0 } else { 0.0 }).collect();
+        let is_pot: Vec<f32> = (0..rows)
+            .map(|i| if is8[i] < 0.5 && r.bool(0.5) { 1.0 } else { 0.0 })
+            .collect();
+        LayerMasks { layer: "t".into(), is8, is_pot }
+    }
+
+    /// Reference: f32 GEMM of the kernel's dequantized operands.
+    fn reference(acts: &QuantizedActs, w: &PackedMatrix) -> Vec<f32> {
+        f32_gemm_rows(&acts.dequant(), acts.m, acts.k, &w.unpack(), 1)
+    }
+
+    #[test]
+    fn prop_qgemm_matches_dequant_f32_gemm() {
+        forall(
+            81,
+            48,
+            |r| {
+                let m = r.range_usize(1, 7);
+                let rows = r.range_usize(1, 16);
+                let cols = r.range_usize(1, 34); // odd counts included
+                let w = random_matrix(r, rows, cols);
+                let masks = random_masks(r, rows);
+                let x: Vec<f32> = (0..m * cols).map(|_| r.normal() * 2.0).collect();
+                let threads = r.range_usize(1, 5);
+                (w, masks, x, m, cols, threads)
+            },
+            |(w, masks, x, m, cols, threads)| {
+                let packed = PackedMatrix::pack(w, masks);
+                let acts = QuantizedActs::quantize(x, *m, *cols);
+                let got = qgemm(&acts, &packed, *threads);
+                let want = reference(&acts, &packed);
+                assert_close(&got, &want, 1e-4, "qgemm vs dequant GEMM")
+            },
+        );
+    }
+
+    #[test]
+    fn prop_uniform_scheme_parity() {
+        // Each scheme exercised alone (the mixed prop can under-sample one).
+        forall(
+            82,
+            36,
+            |r| {
+                let scheme = match r.below(3) {
+                    0 => Scheme::Fixed8,
+                    1 => Scheme::Fixed4,
+                    _ => Scheme::Pot4,
+                };
+                let m = r.range_usize(1, 5);
+                let rows = r.range_usize(1, 10);
+                let cols = r.range_usize(1, 41);
+                let w = random_matrix(r, rows, cols);
+                let x: Vec<f32> = (0..m * cols).map(|_| r.normal()).collect();
+                (w, scheme, x, m, cols)
+            },
+            |(w, scheme, x, m, cols)| {
+                let masks = assign_uniform_layer("t", w.len(), *scheme);
+                let packed = PackedMatrix::pack(w, &masks);
+                let acts = QuantizedActs::quantize(x, *m, *cols);
+                let got = qgemm(&acts, &packed, 2);
+                let want = reference(&acts, &packed);
+                assert_close(&got, &want, 1e-4, &format!("{scheme:?}"))
+            },
+        );
+    }
+
+    #[test]
+    fn fixed8_bit_exact_across_thread_counts() {
+        let mut r = Rng::new(17);
+        let w = random_matrix(&mut r, 37, 129);
+        let masks = assign_uniform_layer("t", 37, Scheme::Fixed8);
+        let packed = PackedMatrix::pack(&w, &masks);
+        let x: Vec<f32> = (0..8 * 129).map(|_| r.normal()).collect();
+        let acts = QuantizedActs::quantize(&x, 8, 129);
+        let y1 = qgemm(&acts, &packed, 1);
+        for threads in [2, 3, 5, 8, 64] {
+            let yt = qgemm(&acts, &packed, threads);
+            assert_eq!(y1.len(), yt.len());
+            for (a, b) in y1.iter().zip(&yt) {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_masks_bit_exact_across_thread_counts() {
+        let mut r = Rng::new(18);
+        let w = random_matrix(&mut r, 23, 31);
+        let masks = random_masks(&mut r, 23);
+        let packed = PackedMatrix::pack(&w, &masks);
+        let x: Vec<f32> = (0..6 * 31).map(|_| r.normal()).collect();
+        let acts = QuantizedActs::quantize(&x, 6, 31);
+        let y1 = qgemm(&acts, &packed, 1);
+        let y7 = qgemm(&acts, &packed, 7);
+        assert!(y1.iter().zip(&y7).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn act_quantization_error_is_bounded() {
+        let mut r = Rng::new(19);
+        let x: Vec<f32> = (0..256).map(|_| r.normal() * 1.5).collect();
+        let acts = QuantizedActs::quantize(&x, 4, 64);
+        let dq = acts.dequant();
+        for (i, (&a, &b)) in x.iter().zip(&dq).enumerate() {
+            let s = acts.scales[i / 64] * ACT_QMAX;
+            assert!((a - b).abs() <= s / 254.0 + 1e-6, "elem {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn empty_and_degenerate_shapes() {
+        let w = random_matrix(&mut Rng::new(20), 3, 4);
+        let packed =
+            PackedMatrix::pack(&w, &assign_uniform_layer("t", 3, Scheme::Fixed4));
+        let acts = QuantizedActs::quantize(&[], 0, 4);
+        assert!(qgemm(&acts, &packed, 4).is_empty());
+    }
+
+    #[test]
+    fn im2col_matches_direct_conv() {
+        // 1x1 and 3x3, stride 1 and 2, vs a naive padded convolution.
+        let mut r = Rng::new(21);
+        for (ih, iw, ic, kk, stride, oc) in
+            [(6, 6, 3, 3, 1, 4), (7, 5, 2, 3, 2, 3), (8, 8, 4, 1, 2, 5), (5, 5, 1, 3, 1, 2)]
+        {
+            let b = 2usize;
+            let x: Vec<f32> = (0..b * ih * iw * ic).map(|_| r.normal()).collect();
+            let w = random_matrix(&mut r, oc, kk * kk * ic);
+            let col = im2col(&x, b, ih, iw, ic, kk, kk, stride);
+            assert_eq!(col.m, b * col.oh * col.ow);
+            let got = f32_gemm_rows(&col.data, col.m, col.k, &w, 1);
+            let want = naive_conv(&x, b, ih, iw, ic, &w, kk, stride, col.oh, col.ow);
+            assert_close(&got, &want, 1e-5, &format!("conv {ih}x{iw} k{kk} s{stride}"))
+                .unwrap();
+        }
+    }
+
+    /// Direct SAME-padded conv, NHWC in, `(b·oh·ow, oc)` out.
+    #[allow(clippy::too_many_arguments)]
+    fn naive_conv(
+        x: &[f32],
+        b: usize,
+        ih: usize,
+        iw: usize,
+        ic: usize,
+        w_rows: &[Vec<f32>],
+        kk: usize,
+        stride: usize,
+        oh: usize,
+        ow: usize,
+    ) -> Vec<f32> {
+        let pt = ((oh - 1) * stride + kk).saturating_sub(ih) / 2;
+        let pl = ((ow - 1) * stride + kk).saturating_sub(iw) / 2;
+        let oc = w_rows.len();
+        let mut out = vec![0f32; b * oh * ow * oc];
+        for bi in 0..b {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    for (co, wr) in w_rows.iter().enumerate() {
+                        let mut acc = 0f32;
+                        for ky in 0..kk {
+                            for kx in 0..kk {
+                                let iy = (oy * stride + ky) as isize - pt as isize;
+                                let ix = (ox * stride + kx) as isize - pl as isize;
+                                if iy < 0
+                                    || ix < 0
+                                    || iy >= ih as isize
+                                    || ix >= iw as isize
+                                {
+                                    continue;
+                                }
+                                for ci in 0..ic {
+                                    let xi = ((bi * ih + iy as usize) * iw
+                                        + ix as usize)
+                                        * ic
+                                        + ci;
+                                    acc += x[xi] * wr[(ky * kk + kx) * ic + ci];
+                                }
+                            }
+                        }
+                        out[((bi * oh + oy) * ow + ox) * oc + co] = acc;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn im2col_gemm_dims_match_layer_desc() {
+        use crate::model::LayerDesc;
+        let l = LayerDesc::conv("c", 3, 2, 5, 8, 9, 9);
+        let x = vec![0f32; 9 * 9 * 5];
+        let col = im2col(&x, 1, 9, 9, 5, 3, 3, 2);
+        assert_eq!(col.gemm_dims(8), l.gemm());
+    }
+
+    #[test]
+    fn max_k_is_sane() {
+        assert!(MAX_K > 100_000);
+        // ResNet-18's deepest fan-in fits with a wide margin.
+        assert!(MAX_K > 512 * 3 * 3 * 20);
+    }
+}

@@ -22,6 +22,8 @@ use super::tensor::HostTensor;
 #[derive(Debug, Clone, Default)]
 pub struct EngineStats {
     pub compiles: u64,
+    /// Wall-clock spent in `client.compile` (parse + XLA compilation).
+    pub compile_seconds: f64,
     pub executions: u64,
     pub execute_seconds: f64,
     pub stage_seconds: f64,
@@ -60,9 +62,14 @@ impl Engine {
     }
 
     /// Compile (or fetch the cached) executable for an artifact.
+    ///
+    /// Compilation happens *outside* the cache lock: PJRT compiles can take
+    /// seconds, and holding the mutex across them would serialize every
+    /// coordinator thread behind the first cold load. Two threads racing on
+    /// the same cold artifact may both compile; the first insert wins and
+    /// only it is counted in the stats.
     pub fn load(&self, spec: &ArtifactSpec) -> Result<()> {
-        let mut cache = self.executables.lock().unwrap();
-        if cache.contains_key(&spec.name) {
+        if self.executables.lock().unwrap().contains_key(&spec.name) {
             return Ok(());
         }
         let t = Instant::now();
@@ -73,11 +80,16 @@ impl Engine {
             .client
             .compile(&comp)
             .with_context(|| format!("compile artifact {}", spec.name))?;
+        let compile_s = t.elapsed().as_secs_f64();
+        let mut cache = self.executables.lock().unwrap();
+        if cache.contains_key(&spec.name) {
+            return Ok(()); // lost the race; keep the winner's executable
+        }
         cache.insert(spec.name.clone(), exe);
+        drop(cache);
         let mut s = self.stats.lock().unwrap();
         s.compiles += 1;
-        drop(s);
-        let _ = t;
+        s.compile_seconds += compile_s;
         Ok(())
     }
 
@@ -103,9 +115,17 @@ impl Engine {
             .collect::<Result<_>>()?;
         let stage_s = t_stage.elapsed().as_secs_f64();
 
+        // Clone the handle out of the cache (a cheap refcounted pointer) so
+        // `execute` runs outside the lock — concurrent coordinator threads
+        // must not serialize their PJRT executions on the map mutex.
+        let exe = self
+            .executables
+            .lock()
+            .unwrap()
+            .get(&spec.name)
+            .expect("loaded above")
+            .clone();
         let t_exec = Instant::now();
-        let cache = self.executables.lock().unwrap();
-        let exe = cache.get(&spec.name).expect("loaded above");
         let out_buffers = exe
             .execute::<Literal>(&literals)
             .with_context(|| format!("execute {}", spec.name))?;
@@ -115,7 +135,6 @@ impl Engine {
         let tuple = out_buffers[0][0]
             .to_literal_sync()
             .context("fetch result literal")?;
-        drop(cache);
         let parts = tuple.to_tuple().context("decompose result tuple")?;
         let outputs: Vec<HostTensor> = parts
             .iter()

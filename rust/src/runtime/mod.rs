@@ -6,8 +6,10 @@
 
 pub mod engine;
 pub mod manifest;
+pub mod qforward;
 pub mod tensor;
 
 pub use engine::{Engine, EngineStats, Runtime};
 pub use manifest::{ArtifactSpec, DataSpec, IoSpec, Manifest};
+pub use qforward::PackedModel;
 pub use tensor::{HostTensor, TensorData};

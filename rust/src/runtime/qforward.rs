@@ -1,0 +1,394 @@
+//! Packed-weight CPU forward pass of the AOT TinyResNet — the execution
+//! path that never dequantizes.
+//!
+//! The PJRT frozen path (`infer_frozen_b{N}`) evaluates fake-quantized f32
+//! weights through XLA; this module instead packs every quantized layer into
+//! its [`PackedMatrix`] BRAM image once and drives the whole network through
+//! `quant::qgemm` — conv layers via `im2col`, fc directly — so inference
+//! arithmetic happens on the integer codes, exactly as on the board. A
+//! float mode (no masks) keeps f32 GEMM-view rows instead, giving a
+//! pure-Rust reference with the PJRT path's numerics for cross-checks.
+//!
+//! Topology is reconstructed from the manifest (the same recipe as
+//! `python/compile/model.py::apply`): stem conv → per-stage
+//! `relu(c1) → c2 (+ proj skip) → relu` residual blocks → global average
+//! pool → fc + bias. All convs are SAME-padded NHWC.
+
+use anyhow::{bail, Context, Result};
+
+use crate::quant::qgemm::{self, QuantizedActs};
+use crate::quant::{gemm_rows, MaskSet, PackedMatrix};
+
+use super::manifest::Manifest;
+use super::tensor::HostTensor;
+
+/// One layer's weights: packed integer codes or the f32 reference rows.
+enum LayerWeights {
+    Packed(PackedMatrix),
+    Float(Vec<Vec<f32>>),
+}
+
+struct ConvLayer {
+    w: LayerWeights,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    in_ch: usize,
+    out_ch: usize,
+}
+
+struct Stage {
+    c1: ConvLayer,
+    c2: ConvLayer,
+    proj: Option<ConvLayer>,
+}
+
+/// The packed network, ready to run on host CPU.
+pub struct PackedModel {
+    height: usize,
+    width: usize,
+    channels: usize,
+    classes: usize,
+    stem: ConvLayer,
+    stages: Vec<Stage>,
+    fc: LayerWeights,
+    fc_bias: Vec<f32>,
+    threads: usize,
+}
+
+fn param<'p>(m: &Manifest, params: &'p [HostTensor], name: &str) -> Result<&'p HostTensor> {
+    let idx = m
+        .params
+        .iter()
+        .position(|(n, _)| n == name)
+        .with_context(|| format!("param {name:?} not in manifest"))?;
+    params
+        .get(idx)
+        .with_context(|| format!("param list too short for {name:?}"))
+}
+
+fn layer_weights(
+    m: &Manifest,
+    params: &[HostTensor],
+    masks: Option<&MaskSet>,
+    name: &str,
+) -> Result<(LayerWeights, Vec<usize>)> {
+    let t = param(m, params, name)?;
+    let rows = gemm_rows(t);
+    let w = match masks {
+        Some(ms) => {
+            let lm = ms
+                .layer(name)
+                .with_context(|| format!("mask set {:?} missing layer {name:?}", ms.name))?;
+            LayerWeights::Packed(PackedMatrix::pack(&rows, lm))
+        }
+        None => LayerWeights::Float(rows),
+    };
+    Ok((w, t.shape.clone()))
+}
+
+impl PackedModel {
+    /// Pack `params` under `masks` (the freeze-time mask set — packing
+    /// frozen weights under the same masks reproduces the identical codes,
+    /// since fake-quant is idempotent and scale-preserving). `masks = None`
+    /// keeps f32 rows: the float reference backend.
+    pub fn build(
+        m: &Manifest,
+        params: &[HostTensor],
+        masks: Option<&MaskSet>,
+    ) -> Result<PackedModel> {
+        if m.widths.is_empty() {
+            bail!("manifest has no stage widths");
+        }
+        let conv = |name: &str, stride: usize| -> Result<ConvLayer> {
+            let (w, shape) = layer_weights(m, params, masks, name)?;
+            if shape.len() != 4 {
+                bail!("{name}: expected 4-D HWIO conv weight, got {shape:?}");
+            }
+            Ok(ConvLayer {
+                w,
+                kh: shape[0],
+                kw: shape[1],
+                stride,
+                in_ch: shape[2],
+                out_ch: shape[3],
+            })
+        };
+        let stem = conv("stem/w", 1)?;
+        let mut stages = Vec::with_capacity(m.widths.len());
+        let mut prev = m.widths[0];
+        for (si, &wch) in m.widths.iter().enumerate() {
+            let stride = if prev == wch { 1 } else { 2 };
+            let c1 = conv(&format!("s{si}/c1/w"), stride)?;
+            let c2 = conv(&format!("s{si}/c2/w"), 1)?;
+            let proj = if prev == wch {
+                None
+            } else {
+                Some(conv(&format!("s{si}/proj/w"), stride)?)
+            };
+            stages.push(Stage { c1, c2, proj });
+            prev = wch;
+        }
+        let (fc, fc_shape) = layer_weights(m, params, masks, "fc/w")?;
+        if fc_shape.len() != 2 {
+            bail!("fc/w: expected 2-D weight, got {fc_shape:?}");
+        }
+        let fc_bias = param(m, params, "fc/b")?.as_f32().to_vec();
+        if fc_bias.len() != m.classes {
+            bail!("fc/b: {} entries for {} classes", fc_bias.len(), m.classes);
+        }
+        Ok(PackedModel {
+            height: m.height,
+            width: m.width,
+            channels: m.channels,
+            classes: m.classes,
+            stem,
+            stages,
+            fc,
+            fc_bias,
+            threads: qgemm::default_threads(),
+        })
+    }
+
+    /// Override the worker-pool size (default: `available_parallelism`).
+    pub fn with_threads(mut self, threads: usize) -> PackedModel {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Logits `(batch, classes)` for an NHWC f32 input batch.
+    pub fn forward(&self, x: &[f32], batch: usize) -> Vec<f32> {
+        assert_eq!(
+            x.len(),
+            batch * self.height * self.width * self.channels,
+            "input shape mismatch"
+        );
+        let (mut h, mut hw) = self.conv(x, batch, (self.height, self.width), &self.stem);
+        relu(&mut h);
+        for stage in &self.stages {
+            let (mut y, yhw) = self.conv(&h, batch, hw, &stage.c1);
+            relu(&mut y);
+            let (mut y2, y2hw) = self.conv(&y, batch, yhw, &stage.c2);
+            let skip = match &stage.proj {
+                Some(p) => self.conv(&h, batch, hw, p).0,
+                None => h,
+            };
+            debug_assert_eq!(y2.len(), skip.len(), "residual shape mismatch");
+            for (a, b) in y2.iter_mut().zip(&skip) {
+                *a += b;
+            }
+            relu(&mut y2);
+            h = y2;
+            hw = y2hw;
+        }
+        // Global average pool -> (batch, ch).
+        let ch = self.stages.last().map_or(self.stem.out_ch, |s| s.c2.out_ch);
+        let px = hw.0 * hw.1;
+        let mut gap = vec![0f32; batch * ch];
+        for bi in 0..batch {
+            let img = &h[bi * px * ch..(bi + 1) * px * ch];
+            let g = &mut gap[bi * ch..(bi + 1) * ch];
+            for pix in img.chunks_exact(ch) {
+                for (gv, &v) in g.iter_mut().zip(pix) {
+                    *gv += v;
+                }
+            }
+            for gv in g.iter_mut() {
+                *gv /= px as f32;
+            }
+        }
+        let mut logits = self.matmul(&gap, batch, ch, &self.fc);
+        for (i, l) in logits.iter_mut().enumerate() {
+            *l += self.fc_bias[i % self.classes];
+        }
+        logits
+    }
+
+    fn conv(
+        &self,
+        x: &[f32],
+        b: usize,
+        (ih, iw): (usize, usize),
+        l: &ConvLayer,
+    ) -> (Vec<f32>, (usize, usize)) {
+        let col = qgemm::im2col(x, b, ih, iw, l.in_ch, l.kh, l.kw, l.stride);
+        let y = self.matmul(&col.data, col.m, col.k, &l.w);
+        debug_assert_eq!(y.len(), col.m * l.out_ch);
+        (y, (col.oh, col.ow))
+    }
+
+    fn matmul(&self, x: &[f32], m: usize, k: usize, w: &LayerWeights) -> Vec<f32> {
+        match w {
+            LayerWeights::Packed(p) => {
+                let acts = QuantizedActs::quantize(x, m, k);
+                qgemm::qgemm(&acts, p, self.threads)
+            }
+            LayerWeights::Float(rows) => qgemm::f32_gemm_rows(x, m, k, rows, self.threads),
+        }
+    }
+}
+
+fn relu(xs: &mut [f32]) {
+    for v in xs.iter_mut() {
+        *v = v.max(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::BTreeMap;
+    use std::path::PathBuf;
+
+    use super::*;
+    use crate::quant::{assign, Ratio, Scheme};
+    use crate::runtime::manifest::DataSpec;
+    use crate::util::Rng;
+
+    /// A hand-built manifest for a 8x8x3 TinyResNet with widths (4, 8).
+    fn tiny_manifest() -> Manifest {
+        let widths = vec![4usize, 8];
+        let mut params: Vec<(String, Vec<usize>)> = vec![
+            ("stem/w".into(), vec![3, 3, 3, 4]),
+            ("s0/c1/w".into(), vec![3, 3, 4, 4]),
+            ("s0/c2/w".into(), vec![3, 3, 4, 4]),
+            ("s1/c1/w".into(), vec![3, 3, 4, 8]),
+            ("s1/c2/w".into(), vec![3, 3, 8, 8]),
+            ("s1/proj/w".into(), vec![1, 1, 4, 8]),
+            ("fc/w".into(), vec![5, 8]),
+            ("fc/b".into(), vec![5]),
+        ];
+        // AOT positional order is sorted-name order.
+        params.sort_by(|a, b| a.0.cmp(&b.0));
+        let quantized_layers: Vec<(String, usize, usize)> = params
+            .iter()
+            .filter(|(n, _)| n.ends_with("/w"))
+            .map(|(n, s)| {
+                let rows = *s.last().unwrap();
+                let rows = if s.len() == 2 { s[0] } else { rows };
+                let fan: usize =
+                    if s.len() == 2 { s[1] } else { s[..3].iter().product() };
+                (n.clone(), rows, fan)
+            })
+            .collect();
+        Manifest {
+            dir: PathBuf::from("/nonexistent"),
+            model_name: "tiny-test".into(),
+            widths,
+            classes: 5,
+            height: 8,
+            width: 8,
+            channels: 3,
+            params,
+            quantized_layers,
+            data: DataSpec {
+                height: 8,
+                width: 8,
+                channels: 3,
+                classes: 5,
+                n_train: 0,
+                n_test: 0,
+                dir: PathBuf::from("/nonexistent"),
+            },
+            train_batch: 1,
+            eval_batch: 1,
+            infer_batches: vec![1],
+            hvp_batch: 1,
+            artifacts: BTreeMap::new(),
+            eigs: BTreeMap::new(),
+            default_masks: BTreeMap::new(),
+        }
+    }
+
+    fn random_params(m: &Manifest, rng: &mut Rng) -> Vec<HostTensor> {
+        m.params
+            .iter()
+            .map(|(_, shape)| {
+                let n: usize = shape.iter().product();
+                HostTensor::f32(shape.clone(), (0..n).map(|_| rng.normal() * 0.3).collect())
+            })
+            .collect()
+    }
+
+    fn mixed_masks(m: &Manifest, rng: &mut Rng) -> MaskSet {
+        let layers = m
+            .quantized_layers
+            .iter()
+            .map(|(name, rows, _)| {
+                let eigs: Vec<f64> = (0..*rows).map(|_| rng.f64()).collect();
+                let w: Vec<Vec<f32>> = (0..*rows)
+                    .map(|_| (0..8).map(|_| rng.normal()).collect())
+                    .collect();
+                assign::assign_layer(name, &w, &eigs, Ratio::new(60.0, 35.0, 5.0))
+            })
+            .collect();
+        MaskSet { name: "test".into(), layers }
+    }
+
+    #[test]
+    fn forward_shapes_and_finiteness() {
+        let m = tiny_manifest();
+        let mut rng = Rng::new(3);
+        let params = random_params(&m, &mut rng);
+        let masks = mixed_masks(&m, &mut rng);
+        let model = PackedModel::build(&m, &params, Some(&masks)).unwrap();
+        let b = 3usize;
+        let x: Vec<f32> = (0..b * 8 * 8 * 3).map(|_| rng.normal()).collect();
+        let logits = model.forward(&x, b);
+        assert_eq!(logits.len(), b * 5);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn fixed8_packed_tracks_float_backend() {
+        // With every row at 8 bits the packed path only adds ~1/254 relative
+        // weight + activation noise per layer: logits must stay close to the
+        // float backend and argmax must agree on well-separated inputs.
+        let m = tiny_manifest();
+        let mut rng = Rng::new(5);
+        let params = random_params(&m, &mut rng);
+        let masks = MaskSet {
+            name: "f8".into(),
+            layers: m
+                .quantized_layers
+                .iter()
+                .map(|(n, rows, _)| assign::assign_uniform_layer(n, *rows, Scheme::Fixed8))
+                .collect(),
+        };
+        let packed = PackedModel::build(&m, &params, Some(&masks)).unwrap();
+        let float = PackedModel::build(&m, &params, None).unwrap();
+        let b = 4usize;
+        let x: Vec<f32> = (0..b * 8 * 8 * 3).map(|_| rng.normal()).collect();
+        let lq = packed.forward(&x, b);
+        let lf = float.forward(&x, b);
+        let scale = lf.iter().fold(0f32, |a, &v| a.max(v.abs())).max(1e-3);
+        for (a, c) in lq.iter().zip(&lf) {
+            assert!(
+                (a - c).abs() < 0.05 * scale + 0.05,
+                "packed {a} vs float {c} (scale {scale})"
+            );
+        }
+    }
+
+    #[test]
+    fn forward_deterministic_across_threads() {
+        let m = tiny_manifest();
+        let mut rng = Rng::new(7);
+        let params = random_params(&m, &mut rng);
+        let masks = mixed_masks(&m, &mut rng);
+        let x: Vec<f32> = (0..2 * 8 * 8 * 3).map(|_| rng.normal()).collect();
+        let m1 = PackedModel::build(&m, &params, Some(&masks)).unwrap().with_threads(1);
+        let m4 = PackedModel::build(&m, &params, Some(&masks)).unwrap().with_threads(4);
+        let a = m1.forward(&x, 2);
+        let b = m4.forward(&x, 2);
+        assert!(a.iter().zip(&b).all(|(x1, x2)| x1.to_bits() == x2.to_bits()));
+    }
+
+    #[test]
+    fn build_rejects_missing_mask_layer() {
+        let m = tiny_manifest();
+        let mut rng = Rng::new(9);
+        let params = random_params(&m, &mut rng);
+        let masks = MaskSet { name: "empty".into(), layers: vec![] };
+        assert!(PackedModel::build(&m, &params, Some(&masks)).is_err());
+    }
+}

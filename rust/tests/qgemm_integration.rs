@@ -1,0 +1,79 @@
+//! Integration: the native packed-GEMM eval path agrees with the PJRT
+//! frozen path on the real AOT model + test split.
+//!
+//! Requires `make artifacts` (like `e2e_runtime.rs`); when the artifacts dir
+//! is missing these tests skip with a note instead of failing, so the
+//! pure-CPU suite stays runnable everywhere.
+
+use ilmpq::experiments::ptq;
+use ilmpq::quant::freeze;
+use ilmpq::runtime::Runtime;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    match Runtime::load_default() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP qgemm integration (no artifacts): {e:#}");
+            None
+        }
+    }
+}
+
+/// Fraction of positions where the two prediction vectors agree.
+fn agreement(a: &[usize], b: &[usize]) -> f64 {
+    assert_eq!(a.len(), b.len(), "prediction count mismatch");
+    assert!(!a.is_empty());
+    a.iter().zip(b).filter(|(x, y)| x == y).count() as f64 / a.len() as f64
+}
+
+#[test]
+fn qgemm_eval_matches_pjrt_on_trained_reference() {
+    let Some(rt) = runtime_or_skip() else { return };
+    // A short reference train gives well-separated logits; untrained
+    // near-chance logits would make argmax comparisons meaningless.
+    let params = ptq::train_reference(&rt, 150, 2021, |_| {}).unwrap();
+    let m = &rt.manifest;
+    let names: Vec<String> = m.params.iter().map(|(n, _)| n.clone()).collect();
+    let masks = m.default_masks.get("ilmpq2").unwrap();
+    let frozen = freeze::freeze_params(&params, &names, masks);
+
+    // Float Rust backend vs PJRT: identical math modulo f32 association —
+    // argmax must agree essentially everywhere.
+    let pjrt = ptq::predict_frozen(&rt, &frozen).unwrap();
+    let float_rs = ptq::predict_frozen_qgemm(&rt, &frozen, None).unwrap();
+    let float_agree = agreement(&pjrt, &float_rs);
+    assert!(
+        float_agree >= 0.995,
+        "float Rust backend diverged from PJRT: agreement {float_agree:.4}"
+    );
+
+    // Packed integer backend: adds only 8-bit activation noise on top of
+    // the same frozen weights — argmax must agree on (nearly) every sample
+    // and the accuracies must match closely.
+    let packed = ptq::predict_frozen_qgemm(&rt, &frozen, Some(masks)).unwrap();
+    let packed_agree = agreement(&pjrt, &packed);
+    assert!(
+        packed_agree >= 0.98,
+        "packed qgemm backend diverged from PJRT: agreement {packed_agree:.4}"
+    );
+
+    let acc_pjrt = ptq::eval_frozen(&rt, &frozen).unwrap();
+    let acc_qgemm = ptq::eval_frozen_qgemm(&rt, &frozen, Some(masks)).unwrap();
+    assert!(
+        (acc_pjrt - acc_qgemm).abs() < 0.01,
+        "accuracy drifted: pjrt {acc_pjrt:.4} vs qgemm {acc_qgemm:.4}"
+    );
+}
+
+#[test]
+fn qgemm_eval_is_deterministic() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let params = rt.manifest.load_init_params().unwrap();
+    let masks = rt.manifest.default_masks.get("ilmpq1").unwrap();
+    let names: Vec<String> =
+        rt.manifest.params.iter().map(|(n, _)| n.clone()).collect();
+    let frozen = freeze::freeze_params(&params, &names, masks);
+    let a = ptq::predict_frozen_qgemm(&rt, &frozen, Some(masks)).unwrap();
+    let b = ptq::predict_frozen_qgemm(&rt, &frozen, Some(masks)).unwrap();
+    assert_eq!(a, b, "packed eval must be deterministic");
+}
