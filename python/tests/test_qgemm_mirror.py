@@ -1,0 +1,207 @@
+"""Numpy/JAX mirror of the Rust `quant::qgemm` subsystem.
+
+This is the validation artifact for the native packed-code GEMM: it mirrors,
+in numpy integer arithmetic, exactly what `rust/src/quant/qgemm.rs` computes
+per scheme — Fixed-8 i8 MACs, Fixed-4 nibble pairs, PoT-4 branch-free
+shift-adds with the 2^-emax epilogue fold — on codes produced by the same
+packing rules as `rust/src/quant/packing.rs` (row max-abs scale, fixed
+`clip(round(w/s·Q))`, PoT `sign·(e+1)`), and checks that
+
+  1. each integer kernel equals the dequantize-then-f32-GEMM reference on
+     the operands the kernel actually sees (per-scheme parity),
+  2. the Fixed-8 path is exactly integer-deterministic across row
+     partitions (the thread-split invariant),
+  3. the Rust `im2col` recipe (fan-in order (kh, kw, in_ch), TF/JAX SAME
+     padding, ceil(in/stride) output) matches `jax.lax.conv_general_dilated`.
+
+Unlike the other files in this directory it needs only numpy + jax (no
+hypothesis), and can be run standalone: `python3 tests/test_qgemm_mirror.py`.
+"""
+
+import numpy as np
+
+ACT_QMAX = 127.0
+POT_EMAX = 6  # 4-bit PoT: e in [0, 6], code = sign * (e + 1)
+
+
+# ---------------------------------------------------------------- packing --
+
+def row_scale(row):
+    return np.float32(max(np.abs(row.astype(np.float32)).max(), 1e-12))
+
+def fixed_codes(row, bits, scale):
+    q = float(2 ** (bits - 1) - 1)
+    c = np.round(row.astype(np.float32) / scale * np.float32(q))
+    return np.clip(c, -q, q).astype(np.int32)
+
+def pot_codes(row, scale):
+    wn = row.astype(np.float32) / scale
+    mag = np.abs(wn)
+    e = np.round(-np.log2(np.maximum(mag, 1e-12))).clip(0, POT_EMAX)
+    code = np.where(wn < 0, -(e + 1), e + 1).astype(np.int32)
+    return np.where(mag < 2.0 ** -(POT_EMAX + 0.5), 0, code)
+
+def dequant_codes(codes, scheme, scale):
+    if scheme == "pot4":
+        e = np.abs(codes) - 1
+        mag = np.where(codes == 0, 0.0, 2.0 ** (-e.astype(np.float64)))
+        return (np.sign(codes) * mag * scale).astype(np.float32)
+    q = 127.0 if scheme == "fixed8" else 7.0
+    return (codes.astype(np.float32) * np.float32(scale / q))
+
+def pack(w, schemes):
+    """Per-row codes + scales under a per-row scheme assignment."""
+    scales = np.array([row_scale(r) for r in w], dtype=np.float32)
+    codes = []
+    for r, scheme in zip(w, schemes):
+        if scheme == "fixed8":
+            codes.append(fixed_codes(r, 8, scales[len(codes)]))
+        elif scheme == "fixed4":
+            codes.append(fixed_codes(r, 4, scales[len(codes)]))
+        else:
+            codes.append(pot_codes(r, scales[len(codes)]))
+    return codes, scales
+
+
+# ------------------------------------------------------------ activations --
+
+def quantize_acts(x):
+    """Per-row signed 8-bit with max-abs scale; mirrors QuantizedActs."""
+    scales = np.maximum(np.abs(x).max(axis=1), 1e-12).astype(np.float32)
+    inv = np.float32(ACT_QMAX) / scales[:, None]
+    codes = np.clip(np.round(x * inv), -ACT_QMAX, ACT_QMAX).astype(np.int32)
+    return codes, (scales / np.float32(ACT_QMAX)).astype(np.float32)
+
+
+# -------------------------------------------------------- integer kernels --
+
+def qgemm_mirror(act_codes, act_scales, w_codes, w_schemes, w_scales):
+    """Integer GEMM over codes, one f32 epilogue multiply per element —
+    the exact arithmetic of `row_block` in qgemm.rs."""
+    m = act_codes.shape[0]
+    out = np.zeros((m, len(w_codes)), dtype=np.float32)
+    for r, (codes, scheme) in enumerate(zip(w_codes, w_schemes)):
+        if scheme == "pot4":
+            # acc += sign(c) * (x << (7 - |c|)); scale/64 epilogue fold.
+            shift = (7 - np.abs(codes)).clip(0, 7)
+            term = np.sign(codes) * (act_codes * (1 << shift).astype(np.int64))
+            acc = term.sum(axis=1)
+            post = np.float32(w_scales[r] / 64.0)
+        else:
+            q = 127.0 if scheme == "fixed8" else 7.0
+            acc = (act_codes.astype(np.int64) * codes.astype(np.int64)).sum(axis=1)
+            post = np.float32(w_scales[r] / q)
+        out[:, r] = (acc.astype(np.float32) * (act_scales * post)).astype(np.float32)
+    return out
+
+
+def reference(act_codes, act_scales, w_codes, w_schemes, w_scales):
+    """Dequantize both operands, f32 GEMM — what the Rust prop test uses."""
+    acts = act_codes.astype(np.float32) * act_scales[:, None]
+    w = np.stack([
+        dequant_codes(c, s, sc)
+        for c, s, sc in zip(w_codes, w_schemes, w_scales)
+    ])
+    return acts @ w.T
+
+
+def random_case(rng, rows, cols, m, schemes=None):
+    w = (rng.standard_normal((rows, cols)) * rng.uniform(0.1, 3.0)).astype(np.float32)
+    x = (rng.standard_normal((m, cols)) * 2.0).astype(np.float32)
+    if schemes is None:
+        schemes = rng.choice(["fixed8", "fixed4", "pot4"], size=rows)
+    w_codes, w_scales = pack(w, schemes)
+    a_codes, a_scales = quantize_acts(x)
+    return a_codes, a_scales, w_codes, schemes, w_scales
+
+
+def test_kernel_parity_all_schemes():
+    rng = np.random.default_rng(81)
+    worst = 0.0
+    for scheme in ["fixed8", "fixed4", "pot4", None]:  # None = mixed rows
+        for _ in range(8):
+            rows, cols, m = rng.integers(1, 16), rng.integers(1, 40), rng.integers(1, 7)
+            sch = None if scheme is None else np.array([scheme] * rows)
+            case = random_case(rng, int(rows), int(cols), int(m), sch)
+            got = qgemm_mirror(*case)
+            want = reference(*case)
+            denom = max(1.0, np.abs(want).max())
+            worst = max(worst, float(np.abs(got - want).max() / denom))
+    print(f"kernel parity worst rel err: {worst:.3g}")
+    assert worst < 1e-4
+
+
+def test_fixed8_integer_determinism_across_partitions():
+    """Same accumulations regardless of how rows are partitioned — the
+    bit-exactness-across-thread-counts invariant, replayed in int64."""
+    rng = np.random.default_rng(17)
+    case = random_case(rng, 48, 384, 32, np.array(["fixed8"] * 48))
+    whole = qgemm_mirror(*case)
+    a_codes, a_scales, w_codes, schemes, w_scales = case
+    for split in [2, 3, 5]:
+        parts = []
+        for idx in np.array_split(np.arange(48), split):
+            parts.append(qgemm_mirror(
+                a_codes, a_scales,
+                [w_codes[i] for i in idx], schemes[idx], w_scales[idx]))
+        stitched = np.concatenate(parts, axis=1)
+        assert np.array_equal(whole.view(np.uint32), stitched.view(np.uint32))
+
+
+# ----------------------------------------------------------------- im2col --
+
+def im2col_mirror(x, kh, kw, stride):
+    """The Rust recipe: SAME padding, ceil(in/stride) out, (kh, kw, ic) order."""
+    b, ih, iw, ic = x.shape
+    oh, ow = -(-ih // stride), -(-iw // stride)
+    pt = max((oh - 1) * stride + kh - ih, 0) // 2
+    pl = max((ow - 1) * stride + kw - iw, 0) // 2
+    out = np.zeros((b * oh * ow, kh * kw * ic), dtype=np.float32)
+    row = 0
+    for bi in range(b):
+        for oy in range(oh):
+            for ox in range(ow):
+                patch = np.zeros((kh, kw, ic), dtype=np.float32)
+                for ky in range(kh):
+                    iy = oy * stride + ky - pt
+                    if not 0 <= iy < ih:
+                        continue
+                    for kx in range(kw):
+                        ix = ox * stride + kx - pl
+                        if 0 <= ix < iw:
+                            patch[ky, kx] = x[bi, iy, ix]
+                out[row] = patch.reshape(-1)
+                row += 1
+    return out, oh, ow
+
+
+def test_im2col_matches_jax_same_conv():
+    import jax
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(21)
+    worst = 0.0
+    for (ih, iw, ic, kk, stride, oc) in [
+        (6, 6, 3, 3, 1, 4), (7, 5, 2, 3, 2, 3), (8, 8, 4, 1, 2, 5), (5, 5, 1, 3, 1, 2),
+    ]:
+        b = 2
+        x = rng.standard_normal((b, ih, iw, ic)).astype(np.float32)
+        w_hwio = rng.standard_normal((kk, kk, ic, oc)).astype(np.float32)
+        col, oh, ow = im2col_mirror(x, kk, kk, stride)
+        # GEMM weight rows are (out_ch, kh*kw*ic) in the same fan-in order.
+        w_rows = np.moveaxis(w_hwio, -1, 0).reshape(oc, -1)
+        got = (col @ w_rows.T).reshape(b, oh, ow, oc)
+        want = jax.lax.conv_general_dilated(
+            jnp.asarray(x), jnp.asarray(w_hwio),
+            window_strides=(stride, stride), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        worst = max(worst, float(np.abs(got - np.asarray(want)).max()))
+    print(f"im2col vs jax SAME conv worst abs err: {worst:.3g}")
+    assert worst < 1e-4
+
+
+if __name__ == "__main__":
+    test_kernel_parity_all_schemes()
+    test_fixed8_integer_determinism_across_partitions()
+    test_im2col_matches_jax_same_conv()
+    print("qgemm mirror: all checks passed")

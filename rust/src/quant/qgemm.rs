@@ -25,6 +25,9 @@
 //! the kernel row-blocks the weight matrix across a scoped `std::thread`
 //! pool sized from `available_parallelism`, and every (weight row,
 //! activation row) dot product is computed identically in any partition.
+//! Workers are spawned per call, so small GEMMs (early ResNet layers at low
+//! batch) are clamped to fewer threads by [`MIN_MACS_PER_THREAD`] — below
+//! that, spawn overhead would eat the parallel win.
 //!
 //! `im2col` (fan-in order `(kh, kw, in_ch)`, matching
 //! [`gemm_rows`](super::gemm_rows) and `jax.lax` SAME padding) turns conv
@@ -101,6 +104,20 @@ pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(std::num::NonZeroUsize::get).unwrap_or(1)
 }
 
+/// Minimum MACs per worker before another scoped thread pays for itself:
+/// a spawn costs ~10–20µs, while 128k integer MACs keep a core busy for
+/// roughly an order of magnitude longer. The packed eval path issues one
+/// GEMM per layer per batch, so the small early-layer GEMMs would
+/// otherwise pay thousands of spawns per test-split eval for no win.
+/// Clamping never changes results — the kernel is bit-identical at every
+/// thread count.
+pub const MIN_MACS_PER_THREAD: usize = 1 << 17;
+
+/// Threads actually worth using for an `n`-row GEMM of `work` total MACs.
+fn effective_threads(requested: usize, n: usize, work: usize) -> usize {
+    requested.min(1 + work / MIN_MACS_PER_THREAD).clamp(1, n.max(1))
+}
+
 /// Packed-code GEMM: `y[i][r] = Σ_c x[i][c] · dequant(w[r][c])`, computed in
 /// integer arithmetic per scheme. Returns row-major `(m, rows)`.
 ///
@@ -110,23 +127,26 @@ pub fn default_threads() -> usize {
 pub fn qgemm(acts: &QuantizedActs, w: &PackedMatrix, threads: usize) -> Vec<f32> {
     assert_eq!(acts.k, w.cols, "contraction mismatch: acts k={} vs w cols={}", acts.k, w.cols);
     assert!(w.cols <= MAX_K, "K={} overflows i32 accumulation (max {MAX_K})", w.cols);
-    row_blocked(w.rows, acts.m, threads, |r, orow| row_block(acts, w, r, orow))
+    let work = w.rows * acts.m * w.cols;
+    row_blocked(w.rows, acts.m, threads, work, |r, orow| row_block(acts, w, r, orow))
 }
 
 /// Shared dispatch for both GEMM paths: fill an `(n, m)` buffer one weight
 /// row at a time via `kernel(r, out_row)`, contiguous row blocks across
-/// `threads` scoped workers, then hand back `(m, n)` row-major.
+/// scoped workers (at most `threads`, fewer when `work` — total MACs — is
+/// too small to amortize the spawns), then hand back `(m, n)` row-major.
 fn row_blocked(
     n: usize,
     m: usize,
     threads: usize,
+    work: usize,
     kernel: impl Fn(usize, &mut [f32]) + Sync,
 ) -> Vec<f32> {
     if m == 0 || n == 0 {
         return vec![0.0; m * n];
     }
     let mut out_nm = vec![0f32; n * m];
-    let threads = threads.clamp(1, n);
+    let threads = effective_threads(threads, n, work);
     if threads == 1 {
         for (r, orow) in out_nm.chunks_mut(m).enumerate() {
             kernel(r, orow);
@@ -216,7 +236,7 @@ pub fn f32_gemm_rows(
     threads: usize,
 ) -> Vec<f32> {
     assert_eq!(x.len(), m * k, "activation shape mismatch");
-    row_blocked(w_rows.len(), m, threads, |r, orow| {
+    row_blocked(w_rows.len(), m, threads, w_rows.len() * m * k, |r, orow| {
         let wr = &w_rows[r];
         assert_eq!(wr.len(), k, "w row {r} length");
         for (i, o) in orow.iter_mut().enumerate() {
@@ -388,12 +408,15 @@ mod tests {
 
     #[test]
     fn fixed8_bit_exact_across_thread_counts() {
+        // Sized past MIN_MACS_PER_THREAD so multiple workers really spawn
+        // (48·384·32 MACs supports 5): the guarantee under test is the
+        // multi-threaded partition, not the single-thread fallback.
         let mut r = Rng::new(17);
-        let w = random_matrix(&mut r, 37, 129);
-        let masks = assign_uniform_layer("t", 37, Scheme::Fixed8);
+        let w = random_matrix(&mut r, 48, 384);
+        let masks = assign_uniform_layer("t", 48, Scheme::Fixed8);
         let packed = PackedMatrix::pack(&w, &masks);
-        let x: Vec<f32> = (0..8 * 129).map(|_| r.normal()).collect();
-        let acts = QuantizedActs::quantize(&x, 8, 129);
+        let x: Vec<f32> = (0..32 * 384).map(|_| r.normal()).collect();
+        let acts = QuantizedActs::quantize(&x, 32, 384);
         let y1 = qgemm(&acts, &packed, 1);
         for threads in [2, 3, 5, 8, 64] {
             let yt = qgemm(&acts, &packed, threads);
@@ -407,14 +430,25 @@ mod tests {
     #[test]
     fn mixed_masks_bit_exact_across_thread_counts() {
         let mut r = Rng::new(18);
-        let w = random_matrix(&mut r, 23, 31);
-        let masks = random_masks(&mut r, 23);
+        let w = random_matrix(&mut r, 48, 256);
+        let masks = random_masks(&mut r, 48);
         let packed = PackedMatrix::pack(&w, &masks);
-        let x: Vec<f32> = (0..6 * 31).map(|_| r.normal()).collect();
-        let acts = QuantizedActs::quantize(&x, 6, 31);
+        let x: Vec<f32> = (0..24 * 256).map(|_| r.normal()).collect();
+        let acts = QuantizedActs::quantize(&x, 24, 256);
         let y1 = qgemm(&acts, &packed, 1);
         let y7 = qgemm(&acts, &packed, 7);
         assert!(y1.iter().zip(&y7).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn thread_clamp_scales_with_work() {
+        // Tiny GEMMs stay single-threaded; big ones use what's requested;
+        // the row count still bounds the partition.
+        assert_eq!(effective_threads(8, 64, 1000), 1);
+        assert_eq!(effective_threads(8, 64, MIN_MACS_PER_THREAD), 2);
+        assert_eq!(effective_threads(8, 64, 100 * MIN_MACS_PER_THREAD), 8);
+        assert_eq!(effective_threads(16, 3, 100 * MIN_MACS_PER_THREAD), 3);
+        assert_eq!(effective_threads(0, 64, 100 * MIN_MACS_PER_THREAD), 1);
     }
 
     #[test]

@@ -6,13 +6,25 @@
 //! cached per artifact name; the coordinator threads share the engine
 //! behind a `Mutex` (PJRT CPU executions are single-stream here — the
 //! batcher, not intra-op parallelism, is the concurrency story).
+//!
+//! The whole XLA/PJRT backend sits behind the `pjrt` cargo feature (on by
+//! default): building the feature requires the prebuilt `xla_extension`
+//! C++ library (`XLA_EXTENSION_DIR`). Without the feature, [`Engine`] is an
+//! uninhabited stub so the rest of the crate — the pure-CPU quant/qgemm
+//! paths, the FPGA simulator, the CLI — still compiles and tests.
 
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 use std::path::Path;
-use std::sync::Mutex;
+#[cfg(feature = "pjrt")]
+use std::sync::{Arc, Mutex};
+#[cfg(feature = "pjrt")]
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
+use anyhow::Result;
+#[cfg(feature = "pjrt")]
 use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
 use super::manifest::{ArtifactSpec, Manifest};
@@ -31,9 +43,16 @@ pub struct EngineStats {
 }
 
 /// The PJRT engine: client + executable cache.
+///
+/// Executables are cached behind `Arc` so `run` can clone a handle out of
+/// the map and execute outside the lock — the `xla` crate's
+/// `PjRtLoadedExecutable` is a raw-pointer wrapper with a `Drop` impl and
+/// no `Clone`, so the refcount is the only safe way to share one compiled
+/// executable across concurrent coordinator threads.
+#[cfg(feature = "pjrt")]
 pub struct Engine {
     client: PjRtClient,
-    executables: Mutex<HashMap<String, PjRtLoadedExecutable>>,
+    executables: Mutex<HashMap<String, Arc<PjRtLoadedExecutable>>>,
     stats: Mutex<EngineStats>,
 }
 
@@ -43,9 +62,12 @@ pub struct Engine {
 // only reached through `&self` methods here, and all mutable Rust-side
 // state (caches, stats) is Mutex-guarded. The `xla` crate just never added
 // the auto-impls because of the raw pointers.
+#[cfg(feature = "pjrt")]
 unsafe impl Send for Engine {}
+#[cfg(feature = "pjrt")]
 unsafe impl Sync for Engine {}
 
+#[cfg(feature = "pjrt")]
 impl Engine {
     /// Create a CPU engine.
     pub fn cpu() -> Result<Engine> {
@@ -85,7 +107,7 @@ impl Engine {
         if cache.contains_key(&spec.name) {
             return Ok(()); // lost the race; keep the winner's executable
         }
-        cache.insert(spec.name.clone(), exe);
+        cache.insert(spec.name.clone(), Arc::new(exe));
         drop(cache);
         let mut s = self.stats.lock().unwrap();
         s.compiles += 1;
@@ -115,9 +137,9 @@ impl Engine {
             .collect::<Result<_>>()?;
         let stage_s = t_stage.elapsed().as_secs_f64();
 
-        // Clone the handle out of the cache (a cheap refcounted pointer) so
-        // `execute` runs outside the lock — concurrent coordinator threads
-        // must not serialize their PJRT executions on the map mutex.
+        // Clone the `Arc` out of the cache so `execute` runs outside the
+        // lock — concurrent coordinator threads must not serialize their
+        // PJRT executions on the map mutex.
         let exe = self
             .executables
             .lock()
@@ -183,6 +205,44 @@ impl Engine {
 
     pub fn stats(&self) -> EngineStats {
         self.stats.lock().unwrap().clone()
+    }
+}
+
+/// Built without the `pjrt` feature: the engine type exists so the rest of
+/// the crate (coordinator, experiments, CLI, benches) type-checks, but it
+/// cannot be constructed — `Engine::cpu()` reports the missing backend and
+/// every other method is statically unreachable (the enum is uninhabited).
+#[cfg(not(feature = "pjrt"))]
+pub enum Engine {}
+
+#[cfg(not(feature = "pjrt"))]
+impl Engine {
+    /// Always fails: this build has no XLA/PJRT backend.
+    pub fn cpu() -> Result<Engine> {
+        anyhow::bail!(
+            "ilmpq was built without the `pjrt` feature; the XLA/PJRT engine is \
+             unavailable (rebuild with default features and XLA_EXTENSION_DIR set)"
+        )
+    }
+
+    pub fn platform(&self) -> String {
+        match *self {}
+    }
+
+    pub fn load(&self, _spec: &ArtifactSpec) -> Result<()> {
+        match *self {}
+    }
+
+    pub fn load_all(&self, _manifest: &Manifest) -> Result<()> {
+        match *self {}
+    }
+
+    pub fn run(&self, _spec: &ArtifactSpec, _inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        match *self {}
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        match *self {}
     }
 }
 

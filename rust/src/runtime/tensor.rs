@@ -2,8 +2,11 @@
 //!
 //! `HostTensor` is the coordinator's in-memory array type: shape + flat f32
 //! (or i32) storage, little-endian on disk (the `aot.py` binary format).
+//! The PJRT literal conversions are only compiled with the `pjrt` feature;
+//! everything else is plain std and builds everywhere.
 
 use anyhow::{bail, Context, Result};
+#[cfg(feature = "pjrt")]
 use xla::{ElementType, Literal};
 
 /// Dense host tensor (f32 or i32 payload).
@@ -71,6 +74,7 @@ impl HostTensor {
     }
 
     /// Convert to a PJRT literal (host copy).
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<Literal> {
         let (ty, bytes): (ElementType, &[u8]) = match &self.data {
             TensorData::F32(v) => (ElementType::F32, bytemuck_f32(v)),
@@ -81,6 +85,7 @@ impl HostTensor {
     }
 
     /// Read back from a PJRT literal.
+    #[cfg(feature = "pjrt")]
     pub fn from_literal(lit: &Literal) -> Result<HostTensor> {
         let shape = lit.array_shape()?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
@@ -92,10 +97,12 @@ impl HostTensor {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn bytemuck_f32(v: &[f32]) -> &[u8] {
     unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
 }
 
+#[cfg(feature = "pjrt")]
 fn bytemuck_i32(v: &[i32]) -> &[u8] {
     unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
 }
@@ -128,6 +135,7 @@ pub fn read_i32_file(path: &std::path::Path) -> Result<Vec<i32>> {
 mod tests {
     use super::*;
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn literal_roundtrip_f32() {
         let t = HostTensor::f32(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
@@ -136,6 +144,7 @@ mod tests {
         assert_eq!(back, t);
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn literal_roundtrip_i32() {
         let t = HostTensor::i32(vec![4], vec![-1, 0, 7, 42]);
@@ -143,6 +152,7 @@ mod tests {
         assert_eq!(back, t);
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn scalar_roundtrip() {
         let t = HostTensor::scalar(0.05);

@@ -1,16 +1,20 @@
 //! Failure injection: the runtime must fail loudly and precisely — a wrong
 //! shape, a truncated binary, or a corrupt manifest must produce a clear
-//! error, never a PJRT abort or silent garbage. Requires `make artifacts`.
+//! error, never a PJRT abort or silent garbage. The runtime-backed tests
+//! require `make artifacts` + the `pjrt` feature and skip with a note when
+//! either is missing; the pure manifest/binary-format tests always run.
 
 use ilmpq::runtime::{HostTensor, Manifest, Runtime};
 
-fn runtime() -> Runtime {
-    Runtime::load_default().expect("run `make artifacts` first")
+mod common;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    common::runtime_or_skip("failure injection")
 }
 
 #[test]
 fn wrong_input_count_is_an_error() {
-    let rt = runtime();
+    let Some(rt) = runtime_or_skip() else { return };
     let err = rt.run("infer_b1", &[]).unwrap_err();
     let msg = format!("{err:#}");
     assert!(msg.contains("expected") && msg.contains("inputs"), "{msg}");
@@ -18,7 +22,7 @@ fn wrong_input_count_is_an_error() {
 
 #[test]
 fn wrong_input_shape_is_an_error_naming_the_input() {
-    let rt = runtime();
+    let Some(rt) = runtime_or_skip() else { return };
     let m = &rt.manifest;
     let spec = m.artifact("infer_b1").unwrap();
     // Correct count, but the image tensor has the wrong spatial dims.
@@ -36,7 +40,7 @@ fn wrong_input_shape_is_an_error_naming_the_input() {
 
 #[test]
 fn unknown_artifact_is_an_error() {
-    let rt = runtime();
+    let Some(rt) = runtime_or_skip() else { return };
     let err = rt.run("infer_b4096", &[]).unwrap_err();
     assert!(format!("{err:#}").contains("not in manifest"));
 }
@@ -62,6 +66,10 @@ fn corrupt_manifest_json_is_a_parse_error() {
 fn truncated_params_file_is_detected() {
     // Copy the real artifacts dir contents we need, truncate params_init.
     let src = Manifest::default_dir();
+    if !src.join("manifest.json").exists() {
+        eprintln!("SKIP truncated_params_file_is_detected (no artifacts)");
+        return;
+    }
     let dir = std::env::temp_dir().join("ilmpq_truncated_params");
     std::fs::create_dir_all(&dir).unwrap();
     std::fs::copy(src.join("manifest.json"), dir.join("manifest.json")).unwrap();
@@ -86,7 +94,7 @@ fn misaligned_binary_is_detected() {
 
 #[test]
 fn mask_tensor_row_mismatch_panics_with_layer_name() {
-    let rt = runtime();
+    let Some(rt) = runtime_or_skip() else { return };
     let mut masks = rt.manifest.default_masks.get("ilmpq2").unwrap().clone();
     masks.layers[0].is8.push(1.0); // corrupt: one extra row
     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
@@ -99,7 +107,8 @@ fn mask_tensor_row_mismatch_panics_with_layer_name() {
 fn server_rejects_unknown_ratio() {
     use ilmpq::coordinator::{ServeConfig, Server};
     use std::sync::Arc;
-    let rt = Arc::new(runtime());
+    let Some(rt) = runtime_or_skip() else { return };
+    let rt = Arc::new(rt);
     let params = rt.manifest.load_init_params().unwrap();
     let masks = rt.manifest.default_masks.get("ilmpq2").unwrap().clone();
     let cfg = ServeConfig { ratio_name: "bogus".into(), ..Default::default() };
@@ -111,7 +120,8 @@ fn server_rejects_unknown_ratio() {
 fn server_rejects_unknown_device() {
     use ilmpq::coordinator::{ServeConfig, Server};
     use std::sync::Arc;
-    let rt = Arc::new(runtime());
+    let Some(rt) = runtime_or_skip() else { return };
+    let rt = Arc::new(rt);
     let params = rt.manifest.load_init_params().unwrap();
     let masks = rt.manifest.default_masks.get("ilmpq2").unwrap().clone();
     let cfg = ServeConfig { device: "xc7z999".into(), ..Default::default() };

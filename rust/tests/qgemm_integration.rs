@@ -9,14 +9,10 @@ use ilmpq::experiments::ptq;
 use ilmpq::quant::freeze;
 use ilmpq::runtime::Runtime;
 
+mod common;
+
 fn runtime_or_skip() -> Option<Runtime> {
-    match Runtime::load_default() {
-        Ok(rt) => Some(rt),
-        Err(e) => {
-            eprintln!("SKIP qgemm integration (no artifacts): {e:#}");
-            None
-        }
-    }
+    common::runtime_or_skip("qgemm integration")
 }
 
 /// Fraction of positions where the two prediction vectors agree.
