@@ -1,23 +1,28 @@
 //! Serving example: batched quantized inference behind the dynamic batcher,
-//! with the FPGA-sim timing overlay (the codesign view: numerics run on
-//! XLA-CPU, timing is what the Zynq accelerator would take).
+//! with the FPGA-sim timing overlay (the codesign view: numerics run on the
+//! chosen execution backend, timing is what the Zynq accelerator would
+//! take).
 //!
 //! A Poisson open-loop client drives the server at `--rate` req/s; the
 //! report shows end-to-end latency percentiles, batch occupancy, and the
-//! simulated FPGA cost per batch. The Table-I context (what the same config
-//! does on the full ResNet-18 on both boards) is printed at the end.
+//! simulated FPGA cost per batch. The backend is picked by name through
+//! `backend::registry()` — `--backend qgemm` serves the native packed-code
+//! integer path and works on `--no-default-features` builds (no PJRT /
+//! xla_extension needed). The Table-I context (what the same config does on
+//! the full ResNet-18 on both boards) is printed at the end.
 //!
 //! ```sh
 //! cargo run --release --example serve_resnet18 -- --rate 3000 --requests 2000
+//! cargo run --no-default-features --example serve_resnet18 -- --backend qgemm
 //! ```
 
-use std::sync::Arc;
 use std::time::Duration;
 
+use ilmpq::backend::{self, InferenceBackend};
 use ilmpq::coordinator::{ServeConfig, Server};
 use ilmpq::experiments::table1;
 use ilmpq::model::resnet18;
-use ilmpq::runtime::Runtime;
+use ilmpq::runtime::Manifest;
 use ilmpq::util::{Args, Rng};
 
 fn main() -> anyhow::Result<()> {
@@ -31,42 +36,47 @@ fn main() -> anyhow::Result<()> {
             ("device", "FPGA-sim device (default xc7z045)"),
             ("workers", "worker threads (default 2)"),
             ("max-wait-ms", "batcher deadline (default 5)"),
+            ("backend", "execution backend: pjrt|qgemm|float (default pjrt)"),
             ("no-frozen!", "disable the pre-quantized-weights fast path"),
         ],
     );
-    let rt = Arc::new(Runtime::load_default()?);
+    let backend_name = args.str_or("backend", "pjrt").to_string();
+    backend::spec(&backend_name)?;
+    let manifest = Manifest::load(&Manifest::default_dir())?;
     let ratio = args.str_or("ratio", "ilmpq2").to_string();
-    let masks = rt
-        .manifest
+    let masks = manifest
         .default_masks
         .get(&ratio)
         .ok_or_else(|| anyhow::anyhow!("unknown ratio {ratio}"))?
         .clone();
-    let params = rt.manifest.load_init_params()?;
+    let params = manifest.load_init_params()?;
+    let frozen = !args.flag("no-frozen");
+    let be = backend::create_serving(&backend_name, &manifest, params, masks, frozen)?;
     let cfg = ServeConfig {
         workers: args.usize_or("workers", 2),
         max_wait: Duration::from_millis(args.u64_or("max-wait-ms", 5)),
         ratio_name: ratio.clone(),
         device: args.str_or("device", "xc7z045").to_string(),
-        frozen: !args.flag("no-frozen"),
+        frozen,
     };
     let device_name = cfg.device.clone();
-    let server = Server::start(rt.clone(), params, &masks, cfg)?;
+    println!("backend: {}", be.name());
+    let server = Server::start(&manifest, be, cfg)?;
     println!("sim-FPGA model for this config: {}", server.sim.row());
 
     let n = args.usize_or("requests", 1024);
     let rate = args.f64_or("rate", 2000.0);
     println!("open-loop Poisson client: {n} requests at {rate} req/s\n");
-    let img = rt.manifest.data.image_elems();
-    let (x_test, _) = rt.manifest.data.load_test()?;
+    let img = manifest.data.image_elems();
+    let (x_test, _) = manifest.data.load_test()?;
     let mut rng = Rng::new(42);
     let mut pending = Vec::with_capacity(n);
     for _ in 0..n {
-        let idx = rng.below(rt.manifest.data.n_test);
+        let idx = rng.below(manifest.data.n_test);
         pending.push(server.submit(x_test[idx * img..(idx + 1) * img].to_vec()));
         std::thread::sleep(Duration::from_secs_f64(rng.exp(rate)));
     }
-    let mut preds = vec![0usize; rt.manifest.classes];
+    let mut preds = vec![0usize; manifest.classes];
     let mut done = 0usize;
     for rx in pending {
         if let Ok(resp) = rx.recv() {

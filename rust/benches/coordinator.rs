@@ -75,7 +75,7 @@ fn main() -> anyhow::Result<()> {
             device: "xc7z045".into(),
             frozen: true,
         };
-        let server = Server::start(rt.clone(), params.clone(), &masks, cfg)?;
+        let server = Server::start_pjrt(rt.clone(), params.clone(), &masks, cfg)?;
         let mut rng = Rng::new(1234);
         let t0 = std::time::Instant::now();
         let mut pending = Vec::with_capacity(n);

@@ -17,6 +17,7 @@
 
 use std::collections::BTreeMap;
 
+use ilmpq::backend::{synth, FloatRefBackend, InferenceBackend, QgemmBackend};
 use ilmpq::model::resnet18;
 use ilmpq::quant::qgemm::{self, QuantizedActs};
 use ilmpq::quant::{assign, PackedMatrix, Ratio, Scheme};
@@ -176,6 +177,47 @@ fn main() {
         }
     }
 
+    // ---- whole-model forward through the unified backend API ---------------
+    // The same `InferenceBackend::run_batch` call every consumer (server,
+    // PTQ, integration tests) makes: packed integer (qgemm) vs the float
+    // reference on the synthetic default-geometry TinyResNet, batch 8. The
+    // pack happens once in `prepare()` and is excluded from the timing.
+    let model_forward = {
+        let m = synth::tiny_manifest(16, 16, 3, &[16, 32, 64], 10);
+        let params = synth::random_params(&m, &mut rng);
+        let masks = synth::random_masks(&m, Ratio::new(65.0, 30.0, 5.0), &mut rng);
+        let batch = 8usize;
+        let x: Vec<f32> = (0..batch * 16 * 16 * 3).map(|_| rng.normal()).collect();
+        println!(
+            "\n== whole-model forward via InferenceBackend (TinyResNet 16x16x3, batch {batch}) =="
+        );
+        let qb =
+            QgemmBackend::new(m.clone(), params.clone(), masks).with_threads(threads);
+        let fb = FloatRefBackend::new(m, params).with_threads(threads);
+        let mut cells = Vec::new();
+        for (label, be) in
+            [("qgemm", &qb as &dyn InferenceBackend), ("float", &fb as &dyn InferenceBackend)]
+        {
+            be.prepare().expect("prepare");
+            let secs = mean(&bench(1, iters, || {
+                be.run_batch(&x, batch).expect("run_batch");
+            }));
+            println!(
+                "  {label:<6} {:>9.1} img/s  ({:.3} ms/batch)",
+                batch as f64 / secs,
+                secs * 1e3
+            );
+            cells.push((
+                label,
+                obj(vec![
+                    ("seconds_per_batch", Json::Num(secs)),
+                    ("images_per_s", Json::Num(batch as f64 / secs)),
+                ]),
+            ));
+        }
+        obj(cells)
+    };
+
     let min_4bit = speedups_4bit.iter().copied().fold(f64::INFINITY, f64::min);
     let geomean_4bit = (speedups_4bit.iter().map(|s| s.ln()).sum::<f64>()
         / speedups_4bit.len().max(1) as f64)
@@ -194,6 +236,7 @@ fn main() {
         ("threads", Json::Num(threads as f64)),
         ("iters", Json::Num(iters as f64)),
         ("cases", Json::Arr(cases)),
+        ("model_forward", model_forward),
         (
             "summary",
             obj(vec![

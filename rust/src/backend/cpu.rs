@@ -1,0 +1,215 @@
+//! The pure-CPU backends: packed-code integer execution and the f32
+//! reference — both thin [`InferenceBackend`] shells over
+//! [`runtime::qforward::PackedModel`](crate::runtime::PackedModel).
+//!
+//! The packing cost lives here, not on the request path: construction
+//! records (manifest, params, masks) and the BRAM-image pack happens once —
+//! in `prepare()` or lazily on the first `run_batch` — then is reused for
+//! the whole eval/serve lifetime. (The pre-trait `eval_frozen_qgemm` helper
+//! re-packed every layer on each evaluation call.)
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::quant::MaskSet;
+use crate::runtime::{HostTensor, Manifest, PackedModel};
+
+use super::{batch_output, BatchOutput, InferenceBackend};
+
+/// Shared state of the two CPU backends: the pack inputs + the cached model.
+struct PackedState {
+    manifest: Manifest,
+    params: Vec<HostTensor>,
+    /// `Some` packs integer codes (the qgemm path); `None` keeps f32 rows.
+    masks: Option<MaskSet>,
+    threads: Option<usize>,
+    model: OnceLock<PackedModel>,
+}
+
+impl PackedState {
+    fn new(
+        manifest: Manifest,
+        params: Vec<HostTensor>,
+        masks: Option<MaskSet>,
+    ) -> PackedState {
+        PackedState { manifest, params, masks, threads: None, model: OnceLock::new() }
+    }
+
+    /// The packed network, building it on first use. Two threads racing the
+    /// cold build both pack (identical, deterministic models); the first
+    /// `set` wins and the loser's copy is dropped.
+    fn model(&self) -> Result<&PackedModel> {
+        if self.model.get().is_none() {
+            let mut m =
+                PackedModel::build(&self.manifest, &self.params, self.masks.as_ref())?;
+            if let Some(t) = self.threads {
+                m = m.with_threads(t);
+            }
+            let _ = self.model.set(m);
+        }
+        Ok(self.model.get().expect("set above"))
+    }
+
+    fn run(&self, images: &[f32], batch: usize) -> Result<BatchOutput> {
+        // Same geometry source as the PJRT backend and the server's batch
+        // padding; `PackedModel::forward` still asserts the model dims.
+        super::check_batch_len(images, batch, self.manifest.data.image_elems())?;
+        let model = self.model()?;
+        let t = Instant::now();
+        let logits = model.forward(images, batch);
+        batch_output(logits, batch, self.manifest.classes, t.elapsed())
+    }
+}
+
+/// The native packed-code GEMM backend: weights packed into their
+/// [`crate::quant::PackedMatrix`] BRAM image once, every batch driven
+/// through `quant::qgemm` — integer arithmetic end to end, exactly as on
+/// the board. Builds and runs under `--no-default-features`.
+pub struct QgemmBackend {
+    state: PackedState,
+}
+
+impl QgemmBackend {
+    /// Pack `params` under `masks`. Raw and frozen params produce identical
+    /// codes (fake-quant is idempotent and scale-preserving), so callers
+    /// need not freeze first.
+    pub fn new(manifest: Manifest, params: Vec<HostTensor>, masks: MaskSet) -> QgemmBackend {
+        QgemmBackend { state: PackedState::new(manifest, params, Some(masks)) }
+    }
+
+    /// Override the worker-pool size (default: all cores). Only effective
+    /// before the model is packed.
+    pub fn with_threads(mut self, threads: usize) -> QgemmBackend {
+        self.state.threads = Some(threads.max(1));
+        self
+    }
+}
+
+impl InferenceBackend for QgemmBackend {
+    fn name(&self) -> &str {
+        "qgemm"
+    }
+
+    fn supports_frozen(&self) -> bool {
+        true
+    }
+
+    fn prepare(&self) -> Result<()> {
+        self.state.model().map(|_| ())
+    }
+
+    fn run_batch(&self, images: &[f32], batch: usize) -> Result<BatchOutput> {
+        self.state.run(images, batch)
+    }
+}
+
+/// The f32 GEMM-view reference backend: the same topology and row layout as
+/// the packed path, but float arithmetic throughout — the PJRT path's
+/// numerics without PJRT. Used for cross-checks and the PTQ float-reference
+/// row; runs whatever params it is given (freeze first for a
+/// frozen-faithful reference).
+pub struct FloatRefBackend {
+    state: PackedState,
+}
+
+impl FloatRefBackend {
+    pub fn new(manifest: Manifest, params: Vec<HostTensor>) -> FloatRefBackend {
+        FloatRefBackend { state: PackedState::new(manifest, params, None) }
+    }
+
+    /// Override the worker-pool size (default: all cores). Only effective
+    /// before the model is built.
+    pub fn with_threads(mut self, threads: usize) -> FloatRefBackend {
+        self.state.threads = Some(threads.max(1));
+        self
+    }
+}
+
+impl InferenceBackend for FloatRefBackend {
+    fn name(&self) -> &str {
+        "float"
+    }
+
+    fn supports_frozen(&self) -> bool {
+        false
+    }
+
+    fn prepare(&self) -> Result<()> {
+        self.state.model().map(|_| ())
+    }
+
+    fn run_batch(&self, images: &[f32], batch: usize) -> Result<BatchOutput> {
+        self.state.run(images, batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::synth;
+    use super::*;
+    use crate::quant::Ratio;
+    use crate::util::Rng;
+
+    fn fixture() -> (Manifest, Vec<HostTensor>, MaskSet) {
+        let mut rng = Rng::new(31);
+        let m = synth::tiny_manifest(8, 8, 3, &[4, 8], 5);
+        let params = synth::random_params(&m, &mut rng);
+        let masks = synth::random_masks(&m, Ratio::new(65.0, 30.0, 5.0), &mut rng);
+        (m, params, masks)
+    }
+
+    #[test]
+    fn qgemm_run_batch_shapes_and_preds() {
+        let (m, params, masks) = fixture();
+        let be = QgemmBackend::new(m, params, masks).with_threads(2);
+        be.prepare().unwrap();
+        let mut rng = Rng::new(7);
+        let x: Vec<f32> = (0..3 * 8 * 8 * 3).map(|_| rng.normal()).collect();
+        let out = be.run_batch(&x, 3).unwrap();
+        assert_eq!(out.logits.len(), 3 * 5);
+        assert_eq!(out.preds.len(), 3);
+        assert_eq!(out.classes, 5);
+        assert!(out.logits.iter().all(|v| v.is_finite()));
+        for (i, &p) in out.preds.iter().enumerate() {
+            assert_eq!(p, super::super::argmax(&out.logits[i * 5..(i + 1) * 5]));
+        }
+    }
+
+    #[test]
+    fn run_batch_works_without_prepare_and_is_cached() {
+        let (m, params, masks) = fixture();
+        let be = QgemmBackend::new(m, params, masks).with_threads(1);
+        let mut rng = Rng::new(9);
+        let x: Vec<f32> = (0..2 * 8 * 8 * 3).map(|_| rng.normal()).collect();
+        // Lazy pack on first use, then bit-identical reuse of the cache.
+        let a = be.run_batch(&x, 2).unwrap();
+        be.prepare().unwrap(); // idempotent after the lazy build
+        let b = be.run_batch(&x, 2).unwrap();
+        assert!(a
+            .logits
+            .iter()
+            .zip(&b.logits)
+            .all(|(x1, x2)| x1.to_bits() == x2.to_bits()));
+    }
+
+    #[test]
+    fn wrong_image_length_is_an_error() {
+        let (m, params, masks) = fixture();
+        let be = QgemmBackend::new(m, params, masks);
+        let err = be.run_batch(&[0.0; 10], 2).unwrap_err();
+        assert!(format!("{err:#}").contains("expected"));
+    }
+
+    #[test]
+    fn names_and_frozen_flags() {
+        let (m, params, masks) = fixture();
+        let q = QgemmBackend::new(m.clone(), params.clone(), masks);
+        let f = FloatRefBackend::new(m, params);
+        assert_eq!(q.name(), "qgemm");
+        assert_eq!(f.name(), "float");
+        assert!(q.supports_frozen());
+        assert!(!f.supports_frozen());
+    }
+}

@@ -1,0 +1,157 @@
+//! Execution backends: one batch-first API over every inference path.
+//!
+//! The paper's core claim is that intra-layer multi-precision *uniforms the
+//! hardware configuration* so a single compute path serves every layer. This
+//! module applies the same idea one level up, to the software stack: the
+//! repository grew three divergent ways to run the quantized TinyResNet —
+//! the PJRT/XLA engine over AOT artifacts, the native packed-code
+//! `quant::qgemm` path, and the f32 GEMM-view reference — each with its own
+//! call signature, and a serving stack hardwired to PJRT. Everything now
+//! goes through one trait:
+//!
+//! * [`InferenceBackend`] — `run_batch(images, batch) -> BatchOutput`
+//!   (logits + argmax + per-batch timing), plus `name()`,
+//!   `supports_frozen()`, and a `prepare()` warm-up hook;
+//! * [`PjrtBackend`] — the XLA/PJRT engine over the `infer[_frozen]_b{N}`
+//!   artifacts. Constructible only when the `pjrt` cargo feature is compiled
+//!   in (it needs a live [`crate::runtime::Engine`]); the type itself builds
+//!   everywhere so consumers stay feature-free;
+//! * [`QgemmBackend`] — the packed-code integer path: weights packed into
+//!   the BRAM image once (in `prepare()`), every batch driven through
+//!   `quant::qgemm`. Pure CPU; builds and runs under
+//!   `--no-default-features`;
+//! * [`FloatRefBackend`] — the f32 GEMM-view reference with the PJRT path's
+//!   numerics, for cross-checks and the PTQ float-reference row.
+//!
+//! Backends are resolved by name through [`registry()`] — the single source
+//! of truth for `--backend` parsing (`create(name, &init)` errors list the
+//! available names). Consumers — `coordinator::server`, `experiments::ptq`,
+//! `experiments::accuracy`, the benches and integration tests — only ever
+//! see `dyn InferenceBackend`, so adding a backend (sharded, cached,
+//! remote-board…) is a one-file registry addition.
+//!
+//! Feature story: the trait, registry, and both CPU backends build with
+//! `--no-default-features`; selecting `"pjrt"` there fails at `create()`
+//! time with a clear message instead of at compile time.
+
+pub mod cpu;
+pub mod pjrt;
+pub mod registry;
+pub mod synth;
+
+pub use cpu::{FloatRefBackend, QgemmBackend};
+pub use pjrt::PjrtBackend;
+pub use registry::{
+    available_names, create, create_serving, registry, spec, BackendInit, BackendSpec,
+};
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+/// Logits + argmax + timing for one executed batch.
+#[derive(Debug, Clone)]
+pub struct BatchOutput {
+    /// Row-major `(batch, classes)` logits.
+    pub logits: Vec<f32>,
+    /// Per-sample argmax (ties resolve to the *last* maximal index — the
+    /// PJRT path's historic `max_by` behaviour, shared by every backend).
+    pub preds: Vec<usize>,
+    pub classes: usize,
+    /// Wall-clock spent executing this batch (staging + compute + fetch;
+    /// excludes any request queueing done by the caller).
+    pub elapsed: Duration,
+}
+
+/// The unified batch-first inference API.
+///
+/// A backend owns its weights (packed codes, frozen tensors, or raw params +
+/// masks — construction policy, not call-site policy) and executes flattened
+/// NHWC image batches. Implementations must be `Send + Sync`: the serving
+/// worker pool shares one backend across threads behind an `Arc`.
+pub trait InferenceBackend: Send + Sync {
+    /// Registry name of this backend (`"pjrt"`, `"qgemm"`, `"float"`, …).
+    fn name(&self) -> &str;
+
+    /// True when the backend executes a pre-quantized ("frozen") weight
+    /// image natively — integer codes or frozen artifacts, no per-request
+    /// fake-quant. The float reference runs whatever params it was built
+    /// with and has no dedicated frozen path.
+    fn supports_frozen(&self) -> bool;
+
+    /// Warm-up hook: compile/pack everything so `run_batch` never pays
+    /// one-time costs on the request path. Idempotent; `run_batch` must
+    /// also work without it (paying the cost lazily on first use).
+    fn prepare(&self) -> Result<()> {
+        Ok(())
+    }
+
+    /// Execute `batch` images (`batch * image_elems` floats, flattened
+    /// NHWC). Padded tail slots are the caller's concern — the batcher pads
+    /// with zeros and drops the extra outputs.
+    fn run_batch(&self, images: &[f32], batch: usize) -> Result<BatchOutput>;
+}
+
+/// Argmax with the shared tie rule (last maximal index).
+pub fn argmax(row: &[f32]) -> usize {
+    row.iter()
+        .enumerate()
+        .max_by(|a, c| a.1.partial_cmp(c.1).unwrap())
+        .map(|(k, _)| k)
+        .unwrap()
+}
+
+/// Shared `run_batch` input guard: `images` must hold exactly
+/// `batch * image_elems` floats.
+pub(crate) fn check_batch_len(images: &[f32], batch: usize, image_elems: usize) -> Result<()> {
+    anyhow::ensure!(
+        images.len() == batch * image_elems,
+        "expected {} floats for batch {batch} ({image_elems} per image), got {}",
+        batch * image_elems,
+        images.len()
+    );
+    Ok(())
+}
+
+/// Assemble a [`BatchOutput`] from raw logits, validating the shape and
+/// deriving the per-sample argmax.
+pub(crate) fn batch_output(
+    logits: Vec<f32>,
+    batch: usize,
+    classes: usize,
+    elapsed: Duration,
+) -> Result<BatchOutput> {
+    anyhow::ensure!(
+        logits.len() == batch * classes,
+        "backend returned {} logits for batch {batch} x {classes} classes",
+        logits.len()
+    );
+    let preds = (0..batch)
+        .map(|i| argmax(&logits[i * classes..(i + 1) * classes]))
+        .collect();
+    Ok(BatchOutput { logits, preds, classes, elapsed })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_tie_rule_is_last_maximal() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.9]), 2);
+        assert_eq!(argmax(&[3.0, 1.0]), 0);
+    }
+
+    #[test]
+    fn batch_output_derives_preds() {
+        let out =
+            batch_output(vec![0.0, 1.0, 5.0, -1.0], 2, 2, Duration::ZERO).unwrap();
+        assert_eq!(out.preds, vec![1, 0]);
+        assert_eq!(out.classes, 2);
+    }
+
+    #[test]
+    fn batch_output_rejects_bad_shape() {
+        assert!(batch_output(vec![0.0; 3], 2, 2, Duration::ZERO).is_err());
+    }
+}

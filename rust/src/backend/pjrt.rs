@@ -1,0 +1,106 @@
+//! The PJRT/XLA backend: the AOT `infer[_frozen]_b{N}` artifacts behind the
+//! unified [`InferenceBackend`] API.
+//!
+//! The type compiles with or without the `pjrt` cargo feature (it only
+//! needs the [`Runtime`] *type*, which exists in both modes); actually
+//! constructing one requires a loaded runtime, which `Engine::cpu()` refuses
+//! to create without the feature — so feature policy lives in one place
+//! (`registry::create`) instead of `#[cfg]` forks at every call site.
+//!
+//! Weight policy is decided at construction, mirroring what the server and
+//! PTQ paths did by hand before this module existed:
+//!
+//! * **frozen** — quantize the weights once up front (the BRAM-image
+//!   analogue) and serve the mask-free `infer_frozen_b{N}` artifacts: no
+//!   fake-quant ops per request, ~3x lower execute cost, numerically
+//!   identical (the quantizers are idempotent);
+//! * **fake-quant** — raw params + per-layer mask tensors through
+//!   `infer_b{N}`, quantizing inside the graph on every request.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::quant::{freeze, MaskSet};
+use crate::runtime::{HostTensor, Runtime};
+
+use super::{batch_output, BatchOutput, InferenceBackend};
+
+/// PJRT execution of the AOT artifacts (see module docs).
+pub struct PjrtBackend {
+    rt: Arc<Runtime>,
+    /// Frozen or raw params, AOT positional order.
+    params: Vec<HostTensor>,
+    /// Per-layer (is8, is_pot) tensors — empty on the frozen path.
+    mask_tensors: Vec<HostTensor>,
+    /// `"infer_frozen_b"` or `"infer_b"`; `run_batch` appends the size.
+    prefix: &'static str,
+}
+
+impl PjrtBackend {
+    /// Build from raw (trained/init) params and a mask set; `frozen` picks
+    /// the weight policy described in the module docs.
+    pub fn new(
+        rt: Arc<Runtime>,
+        params: Vec<HostTensor>,
+        masks: &MaskSet,
+        frozen: bool,
+    ) -> PjrtBackend {
+        let (params, mask_tensors, prefix) = if frozen {
+            (
+                freeze::freeze_for_manifest(&rt.manifest, &params, masks),
+                Vec::new(),
+                "infer_frozen_b",
+            )
+        } else {
+            let mask_tensors = rt.manifest.mask_tensors(masks);
+            (params, mask_tensors, "infer_b")
+        };
+        PjrtBackend { rt, params, mask_tensors, prefix }
+    }
+
+    /// Serve already-prepared params through the frozen artifacts as-is —
+    /// the PTQ/eval path, where the caller freezes (or deliberately does
+    /// not, for the unquantized reference row).
+    pub fn frozen_as_given(rt: Arc<Runtime>, params: Vec<HostTensor>) -> PjrtBackend {
+        PjrtBackend { rt, params, mask_tensors: Vec::new(), prefix: "infer_frozen_b" }
+    }
+}
+
+impl InferenceBackend for PjrtBackend {
+    fn name(&self) -> &str {
+        "pjrt"
+    }
+
+    fn supports_frozen(&self) -> bool {
+        true
+    }
+
+    /// Pre-compile every infer artifact this backend can serve, so no
+    /// request ever stalls behind a cold XLA compile.
+    fn prepare(&self) -> Result<()> {
+        let m = &self.rt.manifest;
+        for &b in &m.infer_batches {
+            self.rt.engine.load(m.artifact(&format!("{}{b}", self.prefix))?)?;
+        }
+        Ok(())
+    }
+
+    fn run_batch(&self, images: &[f32], batch: usize) -> Result<BatchOutput> {
+        let m = &self.rt.manifest;
+        super::check_batch_len(images, batch, m.data.image_elems())?;
+        let mut inputs =
+            Vec::with_capacity(self.params.len() + self.mask_tensors.len() + 1);
+        inputs.extend(self.params.iter().cloned());
+        inputs.extend(self.mask_tensors.iter().cloned());
+        inputs.push(HostTensor::f32(
+            vec![batch, m.data.height, m.data.width, m.data.channels],
+            images.to_vec(),
+        ));
+        let t = Instant::now();
+        let out = self.rt.run(&format!("{}{batch}", self.prefix), &inputs)?;
+        let elapsed = t.elapsed();
+        batch_output(out[0].as_f32().to_vec(), batch, m.classes, elapsed)
+    }
+}

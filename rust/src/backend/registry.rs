@@ -1,0 +1,290 @@
+//! String-keyed backend registry — the single source of truth for
+//! `--backend` parsing and construction.
+//!
+//! Every consumer that lets a user pick an execution path goes through
+//! [`create`] (or validates early with [`spec`]): unknown names error with
+//! the full list of registered backends, and names whose cargo feature is
+//! compiled out error with what to rebuild with — nothing silently
+//! defaults. Adding a backend is one [`BackendSpec`] entry here plus its
+//! implementation file.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::quant::MaskSet;
+use crate::runtime::{HostTensor, Manifest, Runtime};
+
+use super::{FloatRefBackend, InferenceBackend, PjrtBackend, QgemmBackend};
+
+/// Everything a backend constructor may need. Callers fill what they have;
+/// each builder validates what it actually requires.
+pub struct BackendInit {
+    pub manifest: Manifest,
+    /// Trained/init params in AOT positional order, **raw** — freezing is
+    /// backend policy, applied inside the builders where it belongs.
+    pub params: Vec<HostTensor>,
+    /// Quantization config. Required by `qgemm` and by fake-quant `pjrt`;
+    /// `None` runs unquantized weights where the backend allows it.
+    pub masks: Option<MaskSet>,
+    /// Serve the pre-quantized weight image where the backend has one.
+    pub frozen: bool,
+    /// Engine-bearing runtime; required by the PJRT-class backends only.
+    pub runtime: Option<Arc<Runtime>>,
+    /// Worker threads for the CPU backends (`None` = all cores).
+    pub threads: Option<usize>,
+}
+
+impl BackendInit {
+    /// Minimal init: manifest + params, frozen, no masks/runtime.
+    pub fn new(manifest: Manifest, params: Vec<HostTensor>) -> BackendInit {
+        BackendInit {
+            manifest,
+            params,
+            masks: None,
+            frozen: true,
+            runtime: None,
+            threads: None,
+        }
+    }
+}
+
+type Build = fn(&BackendInit) -> Result<Box<dyn InferenceBackend>>;
+
+/// One registered backend: metadata for listings/help + the constructor.
+pub struct BackendSpec {
+    pub name: &'static str,
+    pub description: &'static str,
+    /// False when the backend's cargo feature is compiled out of this build.
+    pub available: bool,
+    /// True when the builder needs `BackendInit::runtime` (an artifact dir
+    /// plus a live PJRT engine); callers use this to skip loading the
+    /// engine for pure-CPU backends.
+    pub needs_runtime: bool,
+    /// True when the backend cannot run without a mask set (no unquantized
+    /// mode) — consumers that evaluate an unquantized reference substitute
+    /// the `float` backend for these.
+    pub masks_required: bool,
+    build: Build,
+}
+
+impl BackendSpec {
+    pub fn build(&self, init: &BackendInit) -> Result<Box<dyn InferenceBackend>> {
+        (self.build)(init)
+    }
+}
+
+fn build_pjrt(init: &BackendInit) -> Result<Box<dyn InferenceBackend>> {
+    if !cfg!(feature = "pjrt") {
+        bail!(
+            "backend \"pjrt\" is compiled out of this build (rebuild with the \
+             `pjrt` cargo feature and XLA_EXTENSION_DIR set)"
+        );
+    }
+    let rt = init.runtime.clone().ok_or_else(|| {
+        anyhow!("backend \"pjrt\" needs a loaded Runtime (artifacts + PJRT engine)")
+    })?;
+    let be = match (&init.masks, init.frozen) {
+        (Some(masks), frozen) => PjrtBackend::new(rt, init.params.clone(), masks, frozen),
+        // No masks + frozen: run the params as given through the frozen
+        // artifacts (the PTQ unquantized-reference row).
+        (None, true) => PjrtBackend::frozen_as_given(rt, init.params.clone()),
+        (None, false) => {
+            bail!("backend \"pjrt\" fake-quant serving needs a mask set")
+        }
+    };
+    Ok(Box::new(be))
+}
+
+fn build_qgemm(init: &BackendInit) -> Result<Box<dyn InferenceBackend>> {
+    if !init.frozen {
+        // No silent fallback: qgemm executes the packed integer image only.
+        bail!(
+            "backend \"qgemm\" only executes the pre-quantized packed image \
+             (no fake-quant path); drop --no-frozen or use the pjrt backend"
+        );
+    }
+    let masks = init.masks.clone().ok_or_else(|| {
+        anyhow!("backend \"qgemm\" needs a mask set (quantization config)")
+    })?;
+    let mut be = QgemmBackend::new(init.manifest.clone(), init.params.clone(), masks);
+    if let Some(t) = init.threads {
+        be = be.with_threads(t);
+    }
+    Ok(Box::new(be))
+}
+
+fn build_float(init: &BackendInit) -> Result<Box<dyn InferenceBackend>> {
+    // With masks + frozen, freeze up front so the reference sees the same
+    // weight image as the deployment backends; otherwise run params as-is.
+    let params = match (&init.masks, init.frozen) {
+        (Some(masks), true) => {
+            crate::quant::freeze::freeze_for_manifest(&init.manifest, &init.params, masks)
+        }
+        _ => init.params.clone(),
+    };
+    let mut be = FloatRefBackend::new(init.manifest.clone(), params);
+    if let Some(t) = init.threads {
+        be = be.with_threads(t);
+    }
+    Ok(Box::new(be))
+}
+
+/// All registered backends, in listing order.
+pub fn registry() -> &'static [BackendSpec] {
+    static SPECS: [BackendSpec; 3] = [
+        BackendSpec {
+            name: "pjrt",
+            description: "XLA/PJRT engine over the AOT infer[_frozen]_b{N} artifacts",
+            available: cfg!(feature = "pjrt"),
+            needs_runtime: true,
+            masks_required: false,
+            build: build_pjrt,
+        },
+        BackendSpec {
+            name: "qgemm",
+            description: "native packed-code integer GEMM (BRAM-image execution, pure CPU)",
+            available: true,
+            needs_runtime: false,
+            masks_required: true,
+            build: build_qgemm,
+        },
+        BackendSpec {
+            name: "float",
+            description: "f32 GEMM-view reference (PJRT numerics without PJRT)",
+            available: true,
+            needs_runtime: false,
+            masks_required: false,
+            build: build_float,
+        },
+    ];
+    &SPECS
+}
+
+/// Comma-separated names of every registered backend (for error messages).
+fn names_line() -> String {
+    registry()
+        .iter()
+        .map(|s| s.name)
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+/// Names of the backends usable in this build.
+pub fn available_names() -> Vec<&'static str> {
+    registry().iter().filter(|s| s.available).map(|s| s.name).collect()
+}
+
+/// Look up a backend by name; unknown names error with the full list.
+pub fn spec(name: &str) -> Result<&'static BackendSpec> {
+    registry().iter().find(|s| s.name == name).ok_or_else(|| {
+        anyhow!("unknown backend {name:?}; registered backends: {}", names_line())
+    })
+}
+
+/// Resolve + construct a backend by name.
+pub fn create(name: &str, init: &BackendInit) -> Result<Box<dyn InferenceBackend>> {
+    spec(name)?
+        .build(init)
+        .with_context(|| format!("initialize backend {name:?}"))
+}
+
+/// Serving convenience shared by the CLI and the examples: resolve `name`,
+/// attach a PJRT runtime only when the backend needs one (and this build
+/// has it — compiled-out backends fall through to `create`'s curated
+/// error), and construct from an already-loaded manifest.
+pub fn create_serving(
+    name: &str,
+    manifest: &Manifest,
+    params: Vec<HostTensor>,
+    masks: MaskSet,
+    frozen: bool,
+) -> Result<Arc<dyn InferenceBackend>> {
+    let s = spec(name)?;
+    let runtime = if s.needs_runtime && s.available {
+        Some(Arc::new(Runtime::from_manifest(manifest.clone())?))
+    } else {
+        None
+    };
+    let init = BackendInit {
+        masks: Some(masks),
+        frozen,
+        runtime,
+        ..BackendInit::new(manifest.clone(), params)
+    };
+    Ok(Arc::from(create(name, &init)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::synth;
+    use super::*;
+    use crate::quant::Ratio;
+    use crate::util::Rng;
+
+    fn init() -> BackendInit {
+        let mut rng = Rng::new(5);
+        let m = synth::tiny_manifest(8, 8, 3, &[4, 8], 5);
+        let params = synth::random_params(&m, &mut rng);
+        let masks = synth::random_masks(&m, Ratio::new(65.0, 30.0, 5.0), &mut rng);
+        BackendInit { masks: Some(masks), ..BackendInit::new(m, params) }
+    }
+
+    #[test]
+    fn unknown_backend_error_lists_registry_names() {
+        let err = create("tpu", &init()).unwrap_err();
+        let msg = format!("{err:#}");
+        for name in ["pjrt", "qgemm", "float"] {
+            assert!(msg.contains(name), "{msg}");
+        }
+    }
+
+    #[test]
+    fn qgemm_without_masks_is_a_clear_error() {
+        let mut i = init();
+        i.masks = None;
+        let err = create("qgemm", &i).unwrap_err();
+        assert!(format!("{err:#}").contains("mask set"), "{err:#}");
+    }
+
+    #[test]
+    fn qgemm_rejects_fake_quant_serving() {
+        let mut i = init();
+        i.frozen = false;
+        let err = create("qgemm", &i).unwrap_err();
+        assert!(format!("{err:#}").contains("pre-quantized"), "{err:#}");
+    }
+
+    #[test]
+    fn pjrt_without_runtime_or_feature_errors() {
+        // With the feature: fails for the missing runtime. Without it:
+        // fails as compiled-out. Either way the message names the backend.
+        let err = create("pjrt", &init()).unwrap_err();
+        assert!(format!("{err:#}").contains("pjrt"), "{err:#}");
+    }
+
+    #[test]
+    fn cpu_backends_are_always_available() {
+        let names = available_names();
+        assert!(names.contains(&"qgemm") && names.contains(&"float"));
+        assert!(!spec("qgemm").unwrap().needs_runtime);
+        assert!(spec("pjrt").unwrap().needs_runtime);
+        assert_eq!(spec("pjrt").unwrap().available, cfg!(feature = "pjrt"));
+        assert!(spec("qgemm").unwrap().masks_required);
+        assert!(!spec("float").unwrap().masks_required);
+        assert!(!spec("pjrt").unwrap().masks_required);
+    }
+
+    #[test]
+    fn create_builds_working_cpu_backends() {
+        let i = init();
+        for name in ["qgemm", "float"] {
+            let be = create(name, &i).unwrap();
+            assert_eq!(be.name(), name);
+            be.prepare().unwrap();
+            let x = vec![0.25f32; 2 * 8 * 8 * 3];
+            let out = be.run_batch(&x, 2).unwrap();
+            assert_eq!(out.preds.len(), 2);
+        }
+    }
+}

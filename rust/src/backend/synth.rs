@@ -1,0 +1,169 @@
+//! Synthetic TinyResNet fixtures: a hand-built manifest plus random params
+//! and masks, for artifact-free backend tests, the server smoke test, and
+//! the model-level bench — no `make artifacts`, no PJRT, no disk.
+//!
+//! The geometry mirrors `python/compile/model.py::layer_defs` /
+//! [`crate::model::zoo::tinyresnet`] exactly: params in layer-defs order
+//! (stem, per-stage c1/c2[/proj], fc/w, fc/b) and `quantized_layers` in the
+//! same network order — so a mask set built here zips correctly against the
+//! zoo network inside the FPGA-sim overlay, just like the real manifest.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use crate::quant::{assign, LayerMasks, MaskSet, Ratio, Scheme};
+use crate::runtime::{DataSpec, HostTensor, Manifest};
+use crate::util::Rng;
+
+/// Hand-build a manifest for an `height x width x channels` TinyResNet with
+/// the given stage widths and class count. Artifact/data tables are empty:
+/// everything execution-related that reads them (PJRT artifacts, the test
+/// split) is out of scope for synthetic fixtures.
+pub fn tiny_manifest(
+    height: usize,
+    width: usize,
+    channels: usize,
+    widths: &[usize],
+    classes: usize,
+) -> Manifest {
+    assert!(!widths.is_empty(), "need at least one stage width");
+    // layer_defs order (python/compile/model.py): stem, s{i}/c1, s{i}/c2,
+    // [s{i}/proj], ..., fc/w, fc/b.
+    let mut params: Vec<(String, Vec<usize>)> = Vec::new();
+    let w0 = widths[0];
+    params.push(("stem/w".into(), vec![3, 3, channels, w0]));
+    let mut prev = w0;
+    for (si, &wch) in widths.iter().enumerate() {
+        params.push((format!("s{si}/c1/w"), vec![3, 3, prev, wch]));
+        params.push((format!("s{si}/c2/w"), vec![3, 3, wch, wch]));
+        if prev != wch {
+            params.push((format!("s{si}/proj/w"), vec![1, 1, prev, wch]));
+        }
+        prev = wch;
+    }
+    params.push(("fc/w".into(), vec![classes, prev]));
+    params.push(("fc/b".into(), vec![classes]));
+
+    let quantized_layers: Vec<(String, usize, usize)> = params
+        .iter()
+        .filter(|(n, _)| n.ends_with("/w"))
+        .map(|(n, s)| {
+            let (rows, fan) = if s.len() == 2 {
+                (s[0], s[1])
+            } else {
+                (*s.last().unwrap(), s[..3].iter().product())
+            };
+            (n.clone(), rows, fan)
+        })
+        .collect();
+
+    Manifest {
+        dir: PathBuf::from("/nonexistent"),
+        model_name: "tiny-synth".into(),
+        widths: widths.to_vec(),
+        classes,
+        height,
+        width,
+        channels,
+        params,
+        quantized_layers,
+        data: DataSpec {
+            height,
+            width,
+            channels,
+            classes,
+            n_train: 0,
+            n_test: 0,
+            dir: PathBuf::from("/nonexistent"),
+        },
+        train_batch: 1,
+        eval_batch: 1,
+        infer_batches: vec![1, 4],
+        hvp_batch: 1,
+        artifacts: BTreeMap::new(),
+        eigs: BTreeMap::new(),
+        default_masks: BTreeMap::new(),
+    }
+}
+
+/// Random normal(0, 0.3) params for every manifest tensor, in order.
+pub fn random_params(m: &Manifest, rng: &mut Rng) -> Vec<HostTensor> {
+    m.params
+        .iter()
+        .map(|(_, shape)| {
+            let n: usize = shape.iter().product();
+            HostTensor::f32(shape.clone(), (0..n).map(|_| rng.normal() * 0.3).collect())
+        })
+        .collect()
+}
+
+/// A mixed mask set at `ratio` over every quantized layer. Row
+/// sensitivities and the variance proxy are random (assignment *policy* is
+/// under test elsewhere; here only the per-row scheme mix matters).
+pub fn random_masks(m: &Manifest, ratio: Ratio, rng: &mut Rng) -> MaskSet {
+    let layers = m
+        .quantized_layers
+        .iter()
+        .map(|(name, rows, _)| {
+            let eigs: Vec<f64> = (0..*rows).map(|_| rng.f64()).collect();
+            let w: Vec<Vec<f32>> = (0..*rows)
+                .map(|_| (0..8).map(|_| rng.normal()).collect())
+                .collect();
+            assign::assign_layer(name, &w, &eigs, ratio)
+        })
+        .collect();
+    MaskSet { name: format!("synth-{}", ratio.label()), layers }
+}
+
+/// A uniform single-scheme mask set (e.g. all-Fixed-8 for parity checks).
+pub fn uniform_masks(m: &Manifest, scheme: Scheme) -> MaskSet {
+    let layers: Vec<LayerMasks> = m
+        .quantized_layers
+        .iter()
+        .map(|(n, rows, _)| assign::assign_uniform_layer(n, *rows, scheme))
+        .collect();
+    MaskSet { name: format!("uniform-{}", scheme.label()), layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn quantized_layers_match_zoo_network_order() {
+        let m = tiny_manifest(16, 16, 3, &[16, 32, 64], 10);
+        let net = zoo::tinyresnet(16, 16, 3, &[16, 32, 64], 10);
+        let manifest_names: Vec<&str> =
+            m.quantized_layers.iter().map(|(n, _, _)| n.as_str()).collect();
+        let net_names: Vec<&str> = net.layers.iter().map(|l| l.name.as_str()).collect();
+        assert_eq!(manifest_names, net_names);
+        for ((_, rows, _), l) in m.quantized_layers.iter().zip(&net.layers) {
+            assert_eq!(*rows, l.rows(), "{}", l.name);
+        }
+    }
+
+    #[test]
+    fn masks_cover_every_quantized_layer() {
+        let mut rng = Rng::new(1);
+        let m = tiny_manifest(8, 8, 3, &[4, 8], 5);
+        let ms = random_masks(&m, Ratio::new(65.0, 30.0, 5.0), &mut rng);
+        for (name, rows, _) in &m.quantized_layers {
+            let lm = ms.layer(name).unwrap();
+            assert_eq!(lm.rows(), *rows, "{name}");
+        }
+        let u = uniform_masks(&m, Scheme::Fixed8);
+        assert_eq!(u.layers.len(), m.quantized_layers.len());
+    }
+
+    #[test]
+    fn params_match_declared_shapes() {
+        let mut rng = Rng::new(2);
+        let m = tiny_manifest(8, 8, 3, &[4, 8], 5);
+        let ps = random_params(&m, &mut rng);
+        assert_eq!(ps.len(), m.params.len());
+        for (t, (_, shape)) in ps.iter().zip(&m.params) {
+            assert_eq!(&t.shape, shape);
+        }
+    }
+}

@@ -3,8 +3,9 @@
 //! * `ratio_search` — the offline PoT:Fixed mixing-ratio sweep (§II-B);
 //! * `sensitivity` — on-device per-filter Hessian power iteration (§II-C);
 //! * `trainer` — the QAT loop over the AOT `train_step` artifact;
-//! * `batcher`/`server` — inference serving with dynamic batching over the
-//!   fixed-shape `infer_b{N}` executables, with the FPGA-sim timing overlay;
+//! * `batcher`/`server` — inference serving with dynamic batching over any
+//!   [`crate::backend::InferenceBackend`] (PJRT artifacts, native qgemm, or
+//!   the f32 reference), with the FPGA-sim timing overlay;
 //! * `metrics` — counters + latency percentiles.
 
 pub mod batcher;

@@ -1,17 +1,24 @@
-//! The serving loop: router + dynamic batcher + worker pool over PJRT.
+//! The serving loop: router + dynamic batcher + a backend-generic worker
+//! pool.
 //!
 //! Architecture (threads + channels; the sandbox has no tokio, and the
-//! workload — CPU-bound PJRT executions — wants a small fixed pool anyway):
+//! workload — CPU-bound batch executions — wants a small fixed pool anyway):
 //!
 //! ```text
 //!   clients ──submit──▶ router/batcher thread ──Batch──▶ worker 0..N-1
-//!                        (Batcher<Request>)               │  PJRT execute
+//!                        (Batcher<Request>)               │  InferenceBackend
 //!   clients ◀──reply channel per request──────────────────┘  + FPGA-sim
 //! ```
 //!
+//! Workers execute through the unified [`InferenceBackend`] trait, so the
+//! same dynamic-batching loop serves the PJRT engine, the native
+//! packed-code `qgemm` path (which runs on toolchain-only machines under
+//! `--no-default-features`), or the f32 reference — pick with
+//! `backend::create` and hand the result to [`Server::start`].
+//!
 //! Every executed batch also gets a *simulated FPGA latency* from the
-//! performance model (the codesign view: numerics from XLA-CPU, timing from
-//! the Zynq model) so the serving benches can report both.
+//! performance model (the codesign view: numerics from the backend, timing
+//! from the Zynq model) so the serving benches can report both.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
@@ -23,10 +30,11 @@ use anyhow::Result;
 
 use super::batcher::{Assembled, BatchPolicy, Batcher};
 use super::metrics::Metrics;
+use crate::backend::{self, BackendInit, InferenceBackend};
 use crate::fpga::{simulate, DeviceModel, Mode, NetConfig, SimReport};
 use crate::model::zoo;
 use crate::quant::MaskSet;
-use crate::runtime::{HostTensor, Runtime};
+use crate::runtime::{HostTensor, Manifest, Runtime};
 
 /// One inference request: a flattened image.
 pub struct Request {
@@ -51,14 +59,17 @@ pub struct Response {
 pub struct ServeConfig {
     pub workers: usize,
     pub max_wait: Duration,
-    /// Ratio name for the quantization masks (manifest `default_masks`).
+    /// Ratio name for the quantization masks (manifest `default_masks`),
+    /// used by the FPGA-sim timing overlay.
     pub ratio_name: String,
     /// Device for the FPGA-sim timing overlay.
     pub device: String,
-    /// Serve pre-quantized ("frozen") weights through the
-    /// `infer_frozen_b{N}` artifacts — the FPGA-faithful fast path (weights
-    /// live pre-quantized in BRAM; no fake-quant ops per request). ~3x
-    /// lower execute cost; numerically identical (quantizers idempotent).
+    /// Serve pre-quantized ("frozen") weights where the backend has a
+    /// native frozen path (see `InferenceBackend::supports_frozen`).
+    /// Construction-time only: consumed by [`Server::start_pjrt`] and the
+    /// CLI/example when they build the backend — the generic
+    /// [`Server::start`] never reads it (the backend already owns its
+    /// weight policy).
     pub frozen: bool,
 }
 
@@ -91,50 +102,29 @@ pub struct Server {
 }
 
 impl Server {
-    /// Start router + workers. `params` are the (trained) model parameters
-    /// in AOT order; `masks` the quantization config.
+    /// Start router + workers over any execution backend. The backend owns
+    /// the weights; `manifest` supplies the batching geometry
+    /// (`infer_batches`, image dims) and the FPGA-sim overlay inputs.
     pub fn start(
-        rt: Arc<Runtime>,
-        params: Vec<HostTensor>,
-        masks: &MaskSet,
+        manifest: &Manifest,
+        backend: Arc<dyn InferenceBackend>,
         cfg: ServeConfig,
     ) -> Result<Server> {
-        let m = &rt.manifest;
-        let policy = BatchPolicy::new(m.infer_batches.clone(), cfg.max_wait);
+        let policy = BatchPolicy::new(manifest.infer_batches.clone(), cfg.max_wait);
         let metrics = Arc::new(Metrics::default());
         let shutdown = Arc::new(AtomicBool::new(false));
-        // Frozen path: quantize the weights once here (BRAM-image
-        // analogue), serve mask-free artifacts; otherwise pass masks along
-        // and let the graph fake-quant per request.
-        let frozen = cfg.frozen;
-        let (params, mask_tensors) = if frozen {
-            let names: Vec<String> =
-                m.params.iter().map(|(n, _)| n.clone()).collect();
-            (
-                Arc::new(crate::quant::freeze::freeze_params(&params, &names, masks)),
-                Arc::new(Vec::new()),
-            )
-        } else {
-            (Arc::new(params), Arc::new(m.mask_tensors(masks)))
-        };
-        let artifact_prefix = if frozen { "infer_frozen_b" } else { "infer_b" };
-
-        // Pre-compile every infer artifact (no compile stalls on the path).
-        for &b in &m.infer_batches {
-            rt.engine.load(m.artifact(&format!("{artifact_prefix}{b}"))?)?;
-        }
 
         // FPGA-sim overlay: per-image latency of this config on the device.
         let device = DeviceModel::by_name(&cfg.device)
             .ok_or_else(|| anyhow::anyhow!("unknown device {}", cfg.device))?;
         let net = zoo::tinyresnet(
-            m.height,
-            m.width,
-            m.channels,
-            &m.widths,
-            m.classes,
+            manifest.height,
+            manifest.width,
+            manifest.channels,
+            &manifest.widths,
+            manifest.classes,
         );
-        let mask_set = m
+        let mask_set = manifest
             .default_masks
             .get(&cfg.ratio_name)
             .ok_or_else(|| anyhow::anyhow!("unknown ratio {}", cfg.ratio_name))?;
@@ -142,6 +132,11 @@ impl Server {
         let sim = simulate(&net, &sim_cfg, &device, Mode::IntraLayer);
         let sim_per_image = sim.latency_s;
 
+        // Warm up before accepting traffic: compile/pack everything so no
+        // request pays a one-time cost.
+        backend.prepare()?;
+
+        let img_elems = manifest.data.image_elems();
         let (submit_tx, submit_rx) = channel::<Request>();
         let (work_tx, work_rx) = channel::<WorkerMsg>();
         let work_rx = Arc::new(std::sync::Mutex::new(work_rx));
@@ -150,13 +145,10 @@ impl Server {
         let inflight = Arc::new(AtomicU64::new(0));
         let mut workers = Vec::new();
         for _ in 0..cfg.workers.max(1) {
-            let rt = rt.clone();
+            let backend = backend.clone();
             let metrics = metrics.clone();
             let work_rx = work_rx.clone();
-            let params = params.clone();
-            let mask_tensors = mask_tensors.clone();
             let inflight = inflight.clone();
-            let prefix = artifact_prefix.to_string();
             workers.push(std::thread::spawn(move || loop {
                 let msg = {
                     let rx = work_rx.lock().unwrap();
@@ -165,10 +157,8 @@ impl Server {
                 match msg {
                     Ok(WorkerMsg::Batch(batch)) => {
                         run_batch(
-                            &rt,
-                            &prefix,
-                            &params,
-                            &mask_tensors,
+                            backend.as_ref(),
+                            img_elems,
                             &metrics,
                             batch,
                             sim_per_image,
@@ -248,6 +238,27 @@ impl Server {
         })
     }
 
+    /// Historic PJRT entry point: build the `"pjrt"` registry backend from
+    /// a loaded runtime (honoring `cfg.frozen`) and serve it. `params` are
+    /// the (trained) model parameters in AOT order; `masks` the
+    /// quantization config.
+    pub fn start_pjrt(
+        rt: Arc<Runtime>,
+        params: Vec<HostTensor>,
+        masks: &MaskSet,
+        cfg: ServeConfig,
+    ) -> Result<Server> {
+        let init = BackendInit {
+            masks: Some(masks.clone()),
+            frozen: cfg.frozen,
+            runtime: Some(rt.clone()),
+            ..BackendInit::new(rt.manifest.clone(), params)
+        };
+        let backend: Arc<dyn InferenceBackend> =
+            Arc::from(backend::create("pjrt", &init)?);
+        Server::start(&rt.manifest, backend, cfg)
+    }
+
     /// Submit one image; returns the channel the response arrives on.
     pub fn submit(&self, image: Vec<f32>) -> Receiver<Response> {
         let (tx, rx) = channel();
@@ -272,50 +283,33 @@ impl Server {
 }
 
 fn run_batch(
-    rt: &Runtime,
-    artifact_prefix: &str,
-    params: &[HostTensor],
-    mask_tensors: &[HostTensor],
+    backend: &dyn InferenceBackend,
+    img_elems: usize,
     metrics: &Metrics,
     batch: Assembled<Request>,
     sim_per_image: f64,
 ) {
-    let m = &rt.manifest;
     let exec_size = batch.exec_size;
-    let img = m.data.image_elems();
-    let mut x = Vec::with_capacity(exec_size * img);
+    let mut x = Vec::with_capacity(exec_size * img_elems);
     for p in &batch.items {
         x.extend_from_slice(&p.payload.image);
     }
-    x.resize(exec_size * img, 0.0); // padded slots
-    let mut inputs = Vec::with_capacity(params.len() + mask_tensors.len() + 1);
-    inputs.extend(params.iter().cloned());
-    inputs.extend(mask_tensors.iter().cloned());
-    inputs.push(HostTensor::f32(
-        vec![exec_size, m.data.height, m.data.width, m.data.channels],
-        x,
-    ));
+    x.resize(exec_size * img_elems, 0.0); // padded slots
     let t_exec = Instant::now();
-    let result = rt.run(&format!("{artifact_prefix}{exec_size}"), &inputs);
-    let exec_elapsed = t_exec.elapsed();
-    metrics.execute.record(exec_elapsed.as_secs_f64());
+    let result = backend.run_batch(&x, exec_size);
     // Simulated FPGA time: per-layer pipeline over the batch.
     let sim_batch = Duration::from_secs_f64(sim_per_image * batch.items.len() as f64);
     metrics.sim_fpga.record(sim_batch.as_secs_f64());
 
     match result {
         Ok(out) => {
-            let logits = out[0].as_f32();
-            let classes = m.classes;
+            // The backend's own measurement excludes the input-copy work
+            // above, so `execute` tracks pure backend cost.
+            metrics.execute.record(out.elapsed.as_secs_f64());
+            let classes = out.classes;
             let done = Instant::now();
             for (i, p) in batch.items.iter().enumerate() {
-                let row = &logits[i * classes..(i + 1) * classes];
-                let pred = row
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .map(|(k, _)| k)
-                    .unwrap_or(0);
+                let row = &out.logits[i * classes..(i + 1) * classes];
                 let queue_wait = t_exec.duration_since(p.enqueued);
                 let e2e = done.duration_since(p.payload.submitted);
                 metrics.queue_wait.record(queue_wait.as_secs_f64());
@@ -323,7 +317,7 @@ fn run_batch(
                 Metrics::inc(&metrics.requests_done);
                 let _ = p.payload.reply.send(Response {
                     logits: row.to_vec(),
-                    pred,
+                    pred: out.preds[i],
                     queue_wait,
                     e2e,
                     sim_fpga: sim_batch,
@@ -331,6 +325,7 @@ fn run_batch(
             }
         }
         Err(err) => {
+            metrics.execute.record(t_exec.elapsed().as_secs_f64());
             eprintln!("[server] batch failed: {err:#}");
             for _p in &batch.items {
                 // Dropping the batch (and with it each reply Sender) closes

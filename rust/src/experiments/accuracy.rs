@@ -6,10 +6,11 @@
 
 use anyhow::Result;
 
+use crate::backend::{InferenceBackend, QgemmBackend};
 use crate::baselines::table1::{accuracy_configs, manifest_ratio_name, AccuracyConfig};
 use crate::coordinator::trainer::Trainer;
 use crate::experiments::ptq;
-use crate::quant::{assign, freeze, gemm_rows, LayerMasks, MaskSet, Scheme};
+use crate::quant::{assign, gemm_rows, LayerMasks, MaskSet, Scheme};
 use crate::runtime::Runtime;
 
 /// One finished accuracy run.
@@ -70,8 +71,9 @@ pub fn masks_for(rt: &Runtime, cfg: &AccuracyConfig) -> Result<MaskSet> {
 }
 
 /// Train + evaluate one config. With `qgemm_check`, the trained weights are
-/// additionally frozen and re-evaluated through the native packed-GEMM path
-/// (integer codes end to end) so the two execution models can be diffed.
+/// additionally re-evaluated through the [`QgemmBackend`] (integer codes
+/// end to end — packing raw weights under the training masks reproduces the
+/// frozen codes exactly) so the two execution models can be diffed.
 pub fn run_one(
     rt: &Runtime,
     cfg: &AccuracyConfig,
@@ -90,10 +92,10 @@ pub fn run_one(
     })?;
     let eval = tr.evaluate()?;
     let qgemm_acc = if qgemm_check {
-        let names: Vec<String> =
-            rt.manifest.params.iter().map(|(n, _)| n.clone()).collect();
-        let frozen = freeze::freeze_params(&tr.params, &names, &masks);
-        let acc = ptq::eval_frozen_qgemm(rt, &frozen, Some(&masks))? * 100.0;
+        let be =
+            QgemmBackend::new(rt.manifest.clone(), tr.params.clone(), masks.clone());
+        be.prepare()?; // pack once; reused for the whole evaluation
+        let acc = ptq::eval_with(&be, &rt.manifest)? * 100.0;
         log(&format!(
             "  qgemm cross-check: {:.2}% (PJRT eval {:.2}%)",
             acc,

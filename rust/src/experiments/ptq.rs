@@ -8,20 +8,31 @@
 //!    8-bit error is negligible at this scale);
 //! 2. for every Table-I config, freeze (post-training-quantize) the trained
 //!    weights under that config's masks using the bit-exact Rust quantizers;
-//! 3. evaluate each frozen model on the full test split via the
-//!    `infer_frozen_b64` artifact.
+//! 3. evaluate each frozen model on the full test split.
 //!
 //! No randomness anywhere in steps 2-3, so config deltas are pure
 //! quantization effect — exactly the quantity ILMPQ's 8-bit rescue rows and
 //! variance-sorted PoT are supposed to protect.
+//!
+//! Evaluation goes through the unified [`crate::backend`] API: any
+//! registered backend (`pjrt`, `qgemm`, `float`) evaluates the frozen
+//! models; training always runs through PJRT (QAT needs the lowered
+//! `train_step` artifact).
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::backend::{self, BackendInit, InferenceBackend, PjrtBackend};
 use crate::baselines::table1::accuracy_configs;
 use crate::coordinator::trainer::Trainer;
 use crate::experiments::accuracy::masks_for;
 use crate::quant::{assign, freeze, LayerMasks, MaskSet, Scheme};
-use crate::runtime::{HostTensor, PackedModel, Runtime};
+use crate::runtime::{HostTensor, Manifest, Runtime};
+
+/// Test-split evaluation batch size. Every PJRT-class backend must ship an
+/// `infer_frozen_b{EVAL_BATCH}` artifact; CPU backends take any size.
+pub const EVAL_BATCH: usize = 64;
 
 /// One PTQ row.
 #[derive(Debug, Clone)]
@@ -31,16 +42,6 @@ pub struct PtqRow {
     pub acc: f64,
     /// Accuracy drop vs the unquantized reference weights.
     pub drop_vs_float: f64,
-}
-
-/// Which executor evaluates the frozen model.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum EvalBackend {
-    /// The `infer_frozen_b64` XLA artifact (f32 GEMMs on frozen weights).
-    Pjrt,
-    /// The native packed-code GEMM path (`quant::qgemm` over the BRAM
-    /// image) — integer arithmetic end to end.
-    Qgemm,
 }
 
 /// All-Fixed-8 mask set (the near-float training config).
@@ -56,14 +57,6 @@ pub fn fixed8_masks(rt: &Runtime) -> MaskSet {
     }
 }
 
-fn argmax(row: &[f32]) -> usize {
-    row.iter()
-        .enumerate()
-        .max_by(|a, c| a.1.partial_cmp(c.1).unwrap())
-        .map(|(k, _)| k)
-        .unwrap()
-}
-
 /// Fraction of predictions matching labels (over the predicted prefix).
 fn score(preds: &[usize], labels: &[i32]) -> f64 {
     if preds.is_empty() {
@@ -73,90 +66,34 @@ fn score(preds: &[usize], labels: &[i32]) -> f64 {
     correct as f64 / preds.len() as f64
 }
 
-/// Predictions over an already-loaded test split (one disk read serves
+/// Predictions over an already-loaded test split (one disk read can serve
 /// both the prediction and the scoring pass).
-fn predict_frozen_on(
-    rt: &Runtime,
-    params: &[HostTensor],
+fn predict_on(
+    be: &dyn InferenceBackend,
+    m: &Manifest,
     x_test: &[f32],
 ) -> Result<Vec<usize>> {
-    let m = &rt.manifest;
     let img = m.data.image_elems();
-    let b = 64usize;
-    let n_batches = m.data.n_test / b;
-    let mut preds = Vec::with_capacity(n_batches * b);
+    let n_batches = m.data.n_test / EVAL_BATCH;
+    let mut preds = Vec::with_capacity(n_batches * EVAL_BATCH);
     for bi in 0..n_batches {
-        let mut inputs = params.to_vec();
-        inputs.push(HostTensor::f32(
-            vec![b, m.data.height, m.data.width, m.data.channels],
-            x_test[bi * b * img..(bi + 1) * b * img].to_vec(),
-        ));
-        let out = rt.run("infer_frozen_b64", &inputs)?;
-        let logits = out[0].as_f32();
-        for i in 0..b {
-            preds.push(argmax(&logits[i * m.classes..(i + 1) * m.classes]));
-        }
+        let chunk = &x_test[bi * EVAL_BATCH * img..(bi + 1) * EVAL_BATCH * img];
+        preds.extend(be.run_batch(chunk, EVAL_BATCH)?.preds);
     }
     Ok(preds)
 }
 
-fn predict_frozen_qgemm_on(
-    rt: &Runtime,
-    params: &[HostTensor],
-    masks: Option<&MaskSet>,
-    x_test: &[f32],
-) -> Result<Vec<usize>> {
-    let m = &rt.manifest;
-    let model = PackedModel::build(m, params, masks)?;
-    let img = m.data.image_elems();
-    let b = 64usize;
-    let n_batches = m.data.n_test / b;
-    let mut preds = Vec::with_capacity(n_batches * b);
-    for bi in 0..n_batches {
-        let logits = model.forward(&x_test[bi * b * img..(bi + 1) * b * img], b);
-        for i in 0..b {
-            preds.push(argmax(&logits[i * m.classes..(i + 1) * m.classes]));
-        }
-    }
-    Ok(preds)
+/// Argmax predictions for the full test split through any backend. The
+/// backend owns the weights (frozen, packed, or raw — construction policy).
+pub fn predict_with(be: &dyn InferenceBackend, m: &Manifest) -> Result<Vec<usize>> {
+    let (x_test, _) = m.data.load_test()?;
+    predict_on(be, m, &x_test)
 }
 
-/// Argmax predictions for the full test split via the `infer_frozen_b64`
-/// artifact (params as given — caller freezes).
-pub fn predict_frozen(rt: &Runtime, params: &[HostTensor]) -> Result<Vec<usize>> {
-    let (x_test, _) = rt.manifest.data.load_test()?;
-    predict_frozen_on(rt, params, &x_test)
-}
-
-/// Argmax predictions for the full test split via the native packed-GEMM
-/// path. `masks = Some` packs the weights (pass the freeze-time mask set —
-/// the codes are identical whether params are frozen or raw, since
-/// fake-quant is idempotent); `None` runs the f32 reference backend.
-pub fn predict_frozen_qgemm(
-    rt: &Runtime,
-    params: &[HostTensor],
-    masks: Option<&MaskSet>,
-) -> Result<Vec<usize>> {
-    let (x_test, _) = rt.manifest.data.load_test()?;
-    predict_frozen_qgemm_on(rt, params, masks, &x_test)
-}
-
-/// Evaluate params (as given — caller freezes) on the full test split via
-/// the frozen artifacts. Returns accuracy in [0, 1].
-pub fn eval_frozen(rt: &Runtime, params: &[HostTensor]) -> Result<f64> {
-    let (x_test, y_test) = rt.manifest.data.load_test()?;
-    let preds = predict_frozen_on(rt, params, &x_test)?;
-    Ok(score(&preds, &y_test))
-}
-
-/// Same split, native packed-GEMM execution. Returns accuracy in [0, 1].
-pub fn eval_frozen_qgemm(
-    rt: &Runtime,
-    params: &[HostTensor],
-    masks: Option<&MaskSet>,
-) -> Result<f64> {
-    let (x_test, y_test) = rt.manifest.data.load_test()?;
-    let preds = predict_frozen_qgemm_on(rt, params, masks, &x_test)?;
+/// Accuracy in [0, 1] over the full test split through any backend.
+pub fn eval_with(be: &dyn InferenceBackend, m: &Manifest) -> Result<f64> {
+    let (x_test, y_test) = m.data.load_test()?;
+    let preds = predict_on(be, m, &x_test)?;
     Ok(score(&preds, &y_test))
 }
 
@@ -175,45 +112,60 @@ pub fn train_reference(
     Ok(tr.params)
 }
 
-/// The full PTQ table: float reference + all ten Table-I configs.
+/// The full PTQ table on the default (PJRT) evaluation backend.
 pub fn run_all(
-    rt: &Runtime,
+    rt: &Arc<Runtime>,
     steps: usize,
     seed: u64,
     log: impl FnMut(&str),
 ) -> Result<(f64, Vec<PtqRow>)> {
-    run_all_with(rt, steps, seed, EvalBackend::Pjrt, log)
+    run_all_with(rt, steps, seed, "pjrt", log)
 }
 
-/// The full PTQ table on a chosen evaluation backend. Training always runs
-/// through PJRT (QAT needs the lowered train_step artifact); only the
+/// The full PTQ table on a named evaluation backend (resolved through
+/// `backend::registry()`). Training always runs through PJRT; only the
 /// frozen-model evaluations switch.
 pub fn run_all_with(
-    rt: &Runtime,
+    rt: &Arc<Runtime>,
     steps: usize,
     seed: u64,
-    backend: EvalBackend,
+    backend_name: &str,
     mut log: impl FnMut(&str),
 ) -> Result<(f64, Vec<PtqRow>)> {
+    // Resolve before training so a typo'd name errors with the registry
+    // listing instead of after the expensive reference train.
+    let bspec = backend::spec(backend_name)?;
     log("[ptq] training near-float (all-Fixed-8) reference ...");
-    let params = train_reference(rt, steps, seed, &mut log)?;
-    let float_acc = match backend {
-        EvalBackend::Pjrt => eval_frozen(rt, &params)?,
-        // No masks: the float Rust backend (f32 GEMM over gemm-view rows).
-        EvalBackend::Qgemm => eval_frozen_qgemm(rt, &params, None)?,
-    } * 100.0;
+    let params = train_reference(rt.as_ref(), steps, seed, &mut log)?;
+    // The reference row runs *unquantized* weights; backends that cannot
+    // (mask-requiring ones, per the registry) substitute the f32 reference.
+    let ref_name = if bspec.masks_required { "float" } else { backend_name };
+    let ref_be = backend::create(
+        ref_name,
+        &BackendInit {
+            masks: None,
+            runtime: Some(rt.clone()),
+            ..BackendInit::new(rt.manifest.clone(), params.clone())
+        },
+    )?;
+    let float_acc = eval_with(ref_be.as_ref(), &rt.manifest)? * 100.0;
     log(&format!(
-        "[ptq] reference (unquantized weights, {backend:?}) test acc {float_acc:.2}%"
+        "[ptq] reference (unquantized weights, {ref_name}) test acc {float_acc:.2}%"
     ));
-    let names: Vec<String> = rt.manifest.params.iter().map(|(n, _)| n.clone()).collect();
     let mut rows = Vec::new();
     for cfg in accuracy_configs() {
-        let masks = masks_for(rt, &cfg)?;
-        let frozen = freeze::freeze_params(&params, &names, &masks);
-        let acc = match backend {
-            EvalBackend::Pjrt => eval_frozen(rt, &frozen)?,
-            EvalBackend::Qgemm => eval_frozen_qgemm(rt, &frozen, Some(&masks))?,
-        } * 100.0;
+        let masks = masks_for(rt.as_ref(), &cfg)?;
+        // One backend per config, packed/frozen once and reused for the
+        // whole evaluation (raw params: freezing is backend policy).
+        let be = backend::create(
+            backend_name,
+            &BackendInit {
+                masks: Some(masks),
+                runtime: Some(rt.clone()),
+                ..BackendInit::new(rt.manifest.clone(), params.clone())
+            },
+        )?;
+        let acc = eval_with(be.as_ref(), &rt.manifest)? * 100.0;
         log(&format!("[ptq] {:<20} {:.2}%", cfg.label, acc));
         rows.push(PtqRow {
             label: cfg.label.clone(),
@@ -227,7 +179,7 @@ pub fn run_all_with(
 
 /// PTQ over ablation policies at the ILMPQ-2 ratio (noise-free §II-C check).
 pub fn run_policies(
-    rt: &Runtime,
+    rt: &Arc<Runtime>,
     params: &[HostTensor],
     mut log: impl FnMut(&str),
 ) -> Result<Vec<(String, f64)>> {
@@ -236,7 +188,6 @@ pub fn run_policies(
     use crate::util::Rng;
 
     let m = &rt.manifest;
-    let names: Vec<String> = m.params.iter().map(|(n, _)| n.clone()).collect();
     let ratio = Ratio::parse("65:30:5").unwrap();
     let mut out = Vec::new();
     for policy in Policy::all() {
@@ -252,8 +203,9 @@ pub fn run_policies(
             })
             .collect();
         let masks = MaskSet { name: policy.label().into(), layers };
-        let frozen = freeze::freeze_params(params, &names, &masks);
-        let acc = eval_frozen(rt, &frozen)? * 100.0;
+        let frozen = freeze::freeze_for_manifest(m, params, &masks);
+        let be = PjrtBackend::frozen_as_given(rt.clone(), frozen);
+        let acc = eval_with(&be, &rt.manifest)? * 100.0;
         log(&format!("[ptq-policy] {:<24} {:.2}%", policy.label(), acc));
         out.push((policy.label().to_string(), acc));
     }
@@ -279,6 +231,7 @@ pub fn render(float_acc: f64, rows: &[PtqRow]) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::argmax;
 
     #[test]
     fn render_formats() {
@@ -299,7 +252,8 @@ mod tests {
         // Labels may be longer than the predicted prefix (truncated batches).
         assert_eq!(score(&[0, 1], &[0, 1, 2, 3]), 1.0);
         // Ties resolve to the last maximal index (the PJRT path's historic
-        // behavior via `max_by`), shared by both backends.
+        // behavior via `max_by`), shared by every backend through
+        // `backend::argmax`.
         assert_eq!(argmax(&[0.1, 0.9, 0.9]), 2);
         assert_eq!(argmax(&[3.0, 1.0]), 0);
     }

@@ -10,11 +10,14 @@
 //! * **Layer 3** (this crate): the coordinator — quantization assignment,
 //!   bit-packing, the Zynq FPGA performance simulator, the offline ratio
 //!   search, an inference server with dynamic batching, and the Table-I
-//!   experiment harness — driving the AOT artifacts through PJRT.
+//!   experiment harness — driving inference through the unified
+//!   [`backend::InferenceBackend`] API (PJRT artifacts, the native
+//!   packed-code qgemm path, or the f32 reference).
 //!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
 //! paper-vs-measured record.
 
+pub mod backend;
 pub mod baselines;
 pub mod coordinator;
 pub mod experiments;

@@ -7,19 +7,21 @@
 //! ilmpq assign --show [--ratio ilmpq2]              Figure 1 row map
 //! ilmpq accuracy [--steps N] [--config LABEL]       Table I accuracy rows (QAT)
 //! ilmpq train   [--steps N] [--ratio ilmpq2]        single QAT run + loss curve
-//! ilmpq serve   [--requests N] [--rate R]           serving demo (batcher+PJRT)
+//! ilmpq serve   [--requests N] [--backend B]        serving demo (batcher + backend)
+//! ilmpq backends                                    list execution backends
 //! ilmpq info                                        artifacts + manifest summary
 //! ```
 
 use std::sync::Arc;
 
 use anyhow::Result;
+use ilmpq::backend::{self, InferenceBackend};
 use ilmpq::baselines::table1::accuracy_configs;
 use ilmpq::coordinator::{ratio_search, trainer::Trainer, ServeConfig, Server};
 use ilmpq::experiments::{accuracy, figure1, ptq, table1};
 use ilmpq::fpga::DeviceModel;
 use ilmpq::model::resnet18;
-use ilmpq::runtime::Runtime;
+use ilmpq::runtime::{Manifest, Runtime};
 use ilmpq::util::{Args, Rng};
 
 fn main() {
@@ -162,21 +164,20 @@ fn run(cmd: &str) -> Result<()> {
                     ("steps", "reference training steps (default 800)"),
                     ("seed", "reference training seed"),
                     ("policies!", "also run the §II-C policy ablation"),
-                    ("backend", "frozen-model eval backend: pjrt|qgemm (default pjrt)"),
+                    ("backend", "frozen-model eval backend (see `ilmpq backends`)"),
                 ],
             );
-            let rt = Runtime::load_default()?;
+            // Resolve through the registry *before* loading the runtime so
+            // a typo'd --backend errors with the list of names.
+            let backend_name = a.str_or("backend", "pjrt").to_string();
+            backend::spec(&backend_name)?;
+            let rt = Arc::new(Runtime::load_default()?);
             let steps = a.usize_or("steps", 800);
-            let backend = match a.str_or("backend", "pjrt") {
-                "pjrt" => ptq::EvalBackend::Pjrt,
-                "qgemm" => ptq::EvalBackend::Qgemm,
-                other => anyhow::bail!("unknown --backend {other:?} (pjrt|qgemm)"),
-            };
             let (float_acc, rows) = ptq::run_all_with(
                 &rt,
                 steps,
                 a.u64_or("seed", 2021),
-                backend,
+                &backend_name,
                 |s| println!("{s}"),
             )?;
             println!("{}", ptq::render(float_acc, &rows));
@@ -228,28 +229,39 @@ fn run(cmd: &str) -> Result<()> {
                     ("ratio", "manifest ratio name"),
                     ("device", "FPGA-sim overlay device"),
                     ("workers", "worker threads"),
+                    ("backend", "execution backend (see `ilmpq backends`)"),
+                    ("no-frozen!", "serve raw weights + per-request fake-quant"),
                 ],
             );
-            let rt = Arc::new(Runtime::load_default()?);
+            let backend_name = a.str_or("backend", "pjrt").to_string();
+            backend::spec(&backend_name)?;
+            // The manifest (batching geometry, masks, params) loads without
+            // the PJRT engine — only runtime-needing backends start one, so
+            // `--backend qgemm` serves on `--no-default-features` builds.
+            let manifest = Manifest::load(&Manifest::default_dir())?;
             let name = a.str_or("ratio", "ilmpq2").to_string();
-            let masks = rt
-                .manifest
+            let masks = manifest
                 .default_masks
                 .get(&name)
                 .ok_or_else(|| anyhow::anyhow!("unknown ratio {name}"))?
                 .clone();
-            let params = rt.manifest.load_init_params()?;
+            let params = manifest.load_init_params()?;
+            let frozen = !a.flag("no-frozen");
+            let be =
+                backend::create_serving(&backend_name, &manifest, params, masks, frozen)?;
             let cfg = ServeConfig {
                 workers: a.usize_or("workers", 2),
                 ratio_name: name,
                 device: a.str_or("device", "xc7z045").to_string(),
+                frozen,
                 ..Default::default()
             };
-            let server = Server::start(rt.clone(), params, &masks, cfg)?;
+            println!("backend: {}", be.name());
+            let server = Server::start(&manifest, be, cfg)?;
             println!("serving: sim FPGA {}", server.sim.row());
             let n = a.usize_or("requests", 512);
             let rate = a.f64_or("rate", 2000.0);
-            let img = rt.manifest.data.image_elems();
+            let img = manifest.data.image_elems();
             let mut rng = Rng::new(7);
             let mut pending = Vec::new();
             for _ in 0..n {
@@ -266,6 +278,18 @@ fn run(cmd: &str) -> Result<()> {
             }
             let metrics = server.stop();
             println!("completed {ok}/{n}\n{}", metrics.report());
+            Ok(())
+        }
+        "backends" => {
+            println!("registered execution backends (--backend NAME):");
+            for s in backend::registry() {
+                println!(
+                    "  {:<8} {:<14} {}",
+                    s.name,
+                    if s.available { "[available]" } else { "[compiled out]" },
+                    s.description
+                );
+            }
             Ok(())
         }
         "info" => {
@@ -315,6 +339,7 @@ commands:
   accuracy      Table I accuracy rows via QAT on the AOT model
   ptq           deterministic PTQ probe (train once, quantize each config)
   train         one QAT run with the loss curve
-  serve         inference serving demo (dynamic batching over PJRT)
+  serve         inference serving demo (dynamic batching, --backend NAME)
+  backends      list the registered execution backends
   info          manifest / artifacts summary
 run `ilmpq <cmd> --help` for options.";

@@ -9,7 +9,7 @@
 //! params, masks))` to float tolerance — asserted by `e2e_runtime.rs`.
 
 use super::{fixed, gemmview, pot, row_scale, LayerMasks, MaskSet, Scheme};
-use crate::runtime::HostTensor;
+use crate::runtime::{HostTensor, Manifest};
 
 /// Fake-quant one weight tensor under its layer masks.
 pub fn freeze_tensor(t: &HostTensor, masks: &LayerMasks) -> HostTensor {
@@ -53,6 +53,18 @@ pub fn freeze_params(
             None => t.clone(),
         })
         .collect()
+}
+
+/// Freeze a full parameter list using the manifest's AOT name order — the
+/// one recipe every frozen-serving path (PJRT backend, float reference,
+/// PTQ policies) shares.
+pub fn freeze_for_manifest(
+    m: &Manifest,
+    params: &[HostTensor],
+    masks: &MaskSet,
+) -> Vec<HostTensor> {
+    let names: Vec<String> = m.params.iter().map(|(n, _)| n.clone()).collect();
+    freeze_params(params, &names, masks)
 }
 
 #[cfg(test)]

@@ -259,7 +259,13 @@ impl Runtime {
     }
 
     pub fn load(dir: &Path) -> Result<Runtime> {
-        let manifest = Manifest::load(dir)?;
+        Runtime::from_manifest(Manifest::load(dir)?)
+    }
+
+    /// Attach a PJRT engine to an already-loaded manifest (callers that
+    /// parse the manifest first — e.g. to decide whether an engine is
+    /// needed at all — reuse it instead of re-reading manifest.json).
+    pub fn from_manifest(manifest: Manifest) -> Result<Runtime> {
         let engine = Engine::cpu()?;
         Ok(Runtime { manifest, engine })
     }

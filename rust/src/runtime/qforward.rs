@@ -236,92 +236,23 @@ fn relu(xs: &mut [f32]) {
 
 #[cfg(test)]
 mod tests {
-    use std::collections::BTreeMap;
-    use std::path::PathBuf;
-
     use super::*;
-    use crate::quant::{assign, Ratio, Scheme};
-    use crate::runtime::manifest::DataSpec;
+    use crate::backend::synth;
+    use crate::quant::{Ratio, Scheme};
     use crate::util::Rng;
 
-    /// A hand-built manifest for a 8x8x3 TinyResNet with widths (4, 8).
+    /// The shared synthetic 8x8x3 TinyResNet manifest (widths 4, 8) —
+    /// `backend::synth` mirrors the python layer_defs recipe.
     fn tiny_manifest() -> Manifest {
-        let widths = vec![4usize, 8];
-        let mut params: Vec<(String, Vec<usize>)> = vec![
-            ("stem/w".into(), vec![3, 3, 3, 4]),
-            ("s0/c1/w".into(), vec![3, 3, 4, 4]),
-            ("s0/c2/w".into(), vec![3, 3, 4, 4]),
-            ("s1/c1/w".into(), vec![3, 3, 4, 8]),
-            ("s1/c2/w".into(), vec![3, 3, 8, 8]),
-            ("s1/proj/w".into(), vec![1, 1, 4, 8]),
-            ("fc/w".into(), vec![5, 8]),
-            ("fc/b".into(), vec![5]),
-        ];
-        // AOT positional order is sorted-name order.
-        params.sort_by(|a, b| a.0.cmp(&b.0));
-        let quantized_layers: Vec<(String, usize, usize)> = params
-            .iter()
-            .filter(|(n, _)| n.ends_with("/w"))
-            .map(|(n, s)| {
-                let rows = *s.last().unwrap();
-                let rows = if s.len() == 2 { s[0] } else { rows };
-                let fan: usize =
-                    if s.len() == 2 { s[1] } else { s[..3].iter().product() };
-                (n.clone(), rows, fan)
-            })
-            .collect();
-        Manifest {
-            dir: PathBuf::from("/nonexistent"),
-            model_name: "tiny-test".into(),
-            widths,
-            classes: 5,
-            height: 8,
-            width: 8,
-            channels: 3,
-            params,
-            quantized_layers,
-            data: DataSpec {
-                height: 8,
-                width: 8,
-                channels: 3,
-                classes: 5,
-                n_train: 0,
-                n_test: 0,
-                dir: PathBuf::from("/nonexistent"),
-            },
-            train_batch: 1,
-            eval_batch: 1,
-            infer_batches: vec![1],
-            hvp_batch: 1,
-            artifacts: BTreeMap::new(),
-            eigs: BTreeMap::new(),
-            default_masks: BTreeMap::new(),
-        }
+        synth::tiny_manifest(8, 8, 3, &[4, 8], 5)
     }
 
     fn random_params(m: &Manifest, rng: &mut Rng) -> Vec<HostTensor> {
-        m.params
-            .iter()
-            .map(|(_, shape)| {
-                let n: usize = shape.iter().product();
-                HostTensor::f32(shape.clone(), (0..n).map(|_| rng.normal() * 0.3).collect())
-            })
-            .collect()
+        synth::random_params(m, rng)
     }
 
     fn mixed_masks(m: &Manifest, rng: &mut Rng) -> MaskSet {
-        let layers = m
-            .quantized_layers
-            .iter()
-            .map(|(name, rows, _)| {
-                let eigs: Vec<f64> = (0..*rows).map(|_| rng.f64()).collect();
-                let w: Vec<Vec<f32>> = (0..*rows)
-                    .map(|_| (0..8).map(|_| rng.normal()).collect())
-                    .collect();
-                assign::assign_layer(name, &w, &eigs, Ratio::new(60.0, 35.0, 5.0))
-            })
-            .collect();
-        MaskSet { name: "test".into(), layers }
+        synth::random_masks(m, Ratio::new(60.0, 35.0, 5.0), rng)
     }
 
     #[test]
@@ -346,14 +277,7 @@ mod tests {
         let m = tiny_manifest();
         let mut rng = Rng::new(5);
         let params = random_params(&m, &mut rng);
-        let masks = MaskSet {
-            name: "f8".into(),
-            layers: m
-                .quantized_layers
-                .iter()
-                .map(|(n, rows, _)| assign::assign_uniform_layer(n, *rows, Scheme::Fixed8))
-                .collect(),
-        };
+        let masks = synth::uniform_masks(&m, Scheme::Fixed8);
         let packed = PackedModel::build(&m, &params, Some(&masks)).unwrap();
         let float = PackedModel::build(&m, &params, None).unwrap();
         let b = 4usize;

@@ -1,0 +1,136 @@
+//! Backend parity through the unified API — artifact-free, feature-free.
+//!
+//! Builds synthetic TinyResNet fixtures (`backend::synth`) and checks that
+//! the `QgemmBackend` and `FloatRefBackend` resolved through
+//! `backend::registry()` agree: close logits under all-Fixed-8 masks,
+//! argmax agreement on confidently-separated samples, and bit-exact
+//! determinism across the cached pack. Runs under `--no-default-features`
+//! (no PJRT, no `make artifacts`).
+
+use ilmpq::backend::{self, synth, BackendInit, InferenceBackend};
+use ilmpq::quant::{Ratio, Scheme};
+use ilmpq::util::Rng;
+
+const H: usize = 8;
+const W: usize = 8;
+const C: usize = 3;
+const CLASSES: usize = 5;
+
+fn fixture(seed: u64) -> (BackendInit, Rng) {
+    let mut rng = Rng::new(seed);
+    let m = synth::tiny_manifest(H, W, C, &[4, 8], CLASSES);
+    let params = synth::random_params(&m, &mut rng);
+    let init = BackendInit::new(m, params);
+    (init, rng)
+}
+
+#[test]
+fn fixed8_qgemm_tracks_float_through_registry() {
+    // With every row at 8 bits the packed path only adds ~1/254 relative
+    // weight + activation noise per layer: logits must stay close to the
+    // float backend, and argmax must agree wherever the float margin is
+    // clear.
+    let (mut init, mut rng) = fixture(5);
+    init.masks = Some(synth::uniform_masks(&init.manifest, Scheme::Fixed8));
+    let qgemm = backend::create("qgemm", &init).unwrap();
+    // Float reference on the same raw params (frozen=false: the Fixed-8
+    // freeze would *itself* be the quantization noise under test).
+    init.frozen = false;
+    let float = backend::create("float", &init).unwrap();
+
+    let b = 16usize;
+    let x: Vec<f32> = (0..b * H * W * C).map(|_| rng.normal()).collect();
+    let lq = qgemm.run_batch(&x, b).unwrap();
+    let lf = float.run_batch(&x, b).unwrap();
+    assert_eq!(lq.logits.len(), b * CLASSES);
+    assert_eq!(lf.logits.len(), b * CLASSES);
+
+    let scale = lf.logits.iter().fold(0f32, |a, &v| a.max(v.abs())).max(1e-3);
+    for (a, c) in lq.logits.iter().zip(&lf.logits) {
+        assert!(
+            (a - c).abs() < 0.05 * scale + 0.05,
+            "packed {a} vs float {c} (scale {scale})"
+        );
+    }
+    // Argmax agreement wherever the float top-1 margin exceeds twice the
+    // per-logit noise bound asserted above — at that margin a flip is
+    // arithmetically impossible, so this check can never be flaky.
+    for i in 0..b {
+        let row = &lf.logits[i * CLASSES..(i + 1) * CLASSES];
+        let mut sorted: Vec<f32> = row.to_vec();
+        sorted.sort_by(|a, c| c.partial_cmp(a).unwrap());
+        let margin = sorted[0] - sorted[1];
+        if margin > 2.0 * (0.05 * scale + 0.05) {
+            assert_eq!(
+                lq.preds[i], lf.preds[i],
+                "sample {i}: argmax diverged with clear margin {margin}"
+            );
+        }
+    }
+}
+
+#[test]
+fn qgemm_prepare_caches_and_stays_bit_exact() {
+    let (mut init, mut rng) = fixture(9);
+    init.masks =
+        Some(synth::random_masks(&init.manifest, Ratio::new(65.0, 30.0, 5.0), &mut rng));
+    init.threads = Some(3);
+    let be = backend::create("qgemm", &init).unwrap();
+    be.prepare().unwrap();
+    let x: Vec<f32> = (0..2 * H * W * C).map(|_| rng.normal()).collect();
+    let a = be.run_batch(&x, 2).unwrap();
+    let b = be.run_batch(&x, 2).unwrap();
+    assert!(a
+        .logits
+        .iter()
+        .zip(&b.logits)
+        .all(|(x1, x2)| x1.to_bits() == x2.to_bits()));
+    assert_eq!(a.preds, b.preds);
+    // A second instance over the same inputs packs to the same codes.
+    let be2 = backend::create("qgemm", &init).unwrap();
+    let c = be2.run_batch(&x, 2).unwrap();
+    assert!(a
+        .logits
+        .iter()
+        .zip(&c.logits)
+        .all(|(x1, x2)| x1.to_bits() == x2.to_bits()));
+}
+
+#[test]
+fn per_batch_timing_is_reported() {
+    let (mut init, mut rng) = fixture(13);
+    init.masks =
+        Some(synth::random_masks(&init.manifest, Ratio::new(65.0, 30.0, 5.0), &mut rng));
+    let be = backend::create("qgemm", &init).unwrap();
+    let x: Vec<f32> = (0..4 * H * W * C).map(|_| rng.normal()).collect();
+    let out = be.run_batch(&x, 4).unwrap();
+    assert!(out.elapsed > std::time::Duration::ZERO);
+    assert_eq!(out.classes, CLASSES);
+}
+
+#[test]
+fn registry_is_the_single_source_of_backend_names() {
+    // Unknown names list the registry; CPU backends are always available.
+    let (init, _) = fixture(1);
+    let err = backend::create("does-not-exist", &init).unwrap_err();
+    let msg = format!("{err:#}");
+    for name in ["pjrt", "qgemm", "float"] {
+        assert!(msg.contains(name), "error must list {name}: {msg}");
+    }
+    let names = backend::available_names();
+    assert!(names.contains(&"qgemm") && names.contains(&"float"));
+    // `spec` rejects unknown names the same way (main.rs validates early).
+    assert!(backend::spec("hls").is_err());
+    assert!(backend::spec("qgemm").is_ok());
+}
+
+#[test]
+fn pjrt_selection_fails_cleanly_without_engine() {
+    // Whatever the build mode, asking for pjrt with no loaded runtime must
+    // be a clear registry-level error, not a panic or a silent default.
+    let (mut init, mut rng) = fixture(3);
+    init.masks =
+        Some(synth::random_masks(&init.manifest, Ratio::new(65.0, 30.0, 5.0), &mut rng));
+    let err = backend::create("pjrt", &init).unwrap_err();
+    assert!(format!("{err:#}").contains("pjrt"), "{err:#}");
+}

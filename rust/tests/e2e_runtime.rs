@@ -215,7 +215,7 @@ fn serving_end_to_end() {
     let m = &rt.manifest;
     let params = m.load_init_params().unwrap();
     let masks = m.default_masks.get("ilmpq2").unwrap().clone();
-    let server = Server::start(
+    let server = Server::start_pjrt(
         rt.clone(),
         params,
         &masks,

@@ -112,7 +112,7 @@ fn server_rejects_unknown_ratio() {
     let params = rt.manifest.load_init_params().unwrap();
     let masks = rt.manifest.default_masks.get("ilmpq2").unwrap().clone();
     let cfg = ServeConfig { ratio_name: "bogus".into(), ..Default::default() };
-    let err = Server::start(rt, params, &masks, cfg).err().expect("must fail");
+    let err = Server::start_pjrt(rt, params, &masks, cfg).err().expect("must fail");
     assert!(format!("{err:#}").contains("unknown ratio"));
 }
 
@@ -125,6 +125,6 @@ fn server_rejects_unknown_device() {
     let params = rt.manifest.load_init_params().unwrap();
     let masks = rt.manifest.default_masks.get("ilmpq2").unwrap().clone();
     let cfg = ServeConfig { device: "xc7z999".into(), ..Default::default() };
-    let err = Server::start(rt, params, &masks, cfg).err().expect("must fail");
+    let err = Server::start_pjrt(rt, params, &masks, cfg).err().expect("must fail");
     assert!(format!("{err:#}").contains("unknown device"));
 }

@@ -1,10 +1,14 @@
-//! Integration: the native packed-GEMM eval path agrees with the PJRT
-//! frozen path on the real AOT model + test split.
+//! Integration: the native packed-GEMM backend agrees with the PJRT frozen
+//! path on the real AOT model + test split — all three execution paths
+//! driven through the unified `backend::InferenceBackend` API.
 //!
 //! Requires `make artifacts` (like `e2e_runtime.rs`); when the artifacts dir
 //! is missing these tests skip with a note instead of failing, so the
 //! pure-CPU suite stays runnable everywhere.
 
+use std::sync::Arc;
+
+use ilmpq::backend::{FloatRefBackend, InferenceBackend, PjrtBackend, QgemmBackend};
 use ilmpq::experiments::ptq;
 use ilmpq::quant::freeze;
 use ilmpq::runtime::Runtime;
@@ -23,20 +27,23 @@ fn agreement(a: &[usize], b: &[usize]) -> f64 {
 }
 
 #[test]
-fn qgemm_eval_matches_pjrt_on_trained_reference() {
+fn backends_agree_on_trained_reference() {
     let Some(rt) = runtime_or_skip() else { return };
+    let rt = Arc::new(rt);
     // A short reference train gives well-separated logits; untrained
     // near-chance logits would make argmax comparisons meaningless.
     let params = ptq::train_reference(&rt, 150, 2021, |_| {}).unwrap();
-    let m = &rt.manifest;
+    let m = rt.manifest.clone();
     let names: Vec<String> = m.params.iter().map(|(n, _)| n.clone()).collect();
-    let masks = m.default_masks.get("ilmpq2").unwrap();
-    let frozen = freeze::freeze_params(&params, &names, masks);
+    let masks = m.default_masks.get("ilmpq2").unwrap().clone();
+    let frozen = freeze::freeze_params(&params, &names, &masks);
 
     // Float Rust backend vs PJRT: identical math modulo f32 association —
     // argmax must agree essentially everywhere.
-    let pjrt = ptq::predict_frozen(&rt, &frozen).unwrap();
-    let float_rs = ptq::predict_frozen_qgemm(&rt, &frozen, None).unwrap();
+    let pjrt_be = PjrtBackend::frozen_as_given(rt.clone(), frozen.clone());
+    let pjrt = ptq::predict_with(&pjrt_be, &m).unwrap();
+    let float_be = FloatRefBackend::new(m.clone(), frozen.clone());
+    let float_rs = ptq::predict_with(&float_be, &m).unwrap();
     let float_agree = agreement(&pjrt, &float_rs);
     assert!(
         float_agree >= 0.995,
@@ -45,16 +52,19 @@ fn qgemm_eval_matches_pjrt_on_trained_reference() {
 
     // Packed integer backend: adds only 8-bit activation noise on top of
     // the same frozen weights — argmax must agree on (nearly) every sample
-    // and the accuracies must match closely.
-    let packed = ptq::predict_frozen_qgemm(&rt, &frozen, Some(masks)).unwrap();
+    // and the accuracies must match closely. One backend instance packs
+    // once and serves both the prediction and the accuracy pass.
+    let packed_be = QgemmBackend::new(m.clone(), frozen.clone(), masks.clone());
+    packed_be.prepare().unwrap();
+    let packed = ptq::predict_with(&packed_be, &m).unwrap();
     let packed_agree = agreement(&pjrt, &packed);
     assert!(
         packed_agree >= 0.98,
         "packed qgemm backend diverged from PJRT: agreement {packed_agree:.4}"
     );
 
-    let acc_pjrt = ptq::eval_frozen(&rt, &frozen).unwrap();
-    let acc_qgemm = ptq::eval_frozen_qgemm(&rt, &frozen, Some(masks)).unwrap();
+    let acc_pjrt = ptq::eval_with(&pjrt_be, &m).unwrap();
+    let acc_qgemm = ptq::eval_with(&packed_be, &m).unwrap();
     assert!(
         (acc_pjrt - acc_qgemm).abs() < 0.01,
         "accuracy drifted: pjrt {acc_pjrt:.4} vs qgemm {acc_qgemm:.4}"
@@ -64,12 +74,18 @@ fn qgemm_eval_matches_pjrt_on_trained_reference() {
 #[test]
 fn qgemm_eval_is_deterministic() {
     let Some(rt) = runtime_or_skip() else { return };
-    let params = rt.manifest.load_init_params().unwrap();
-    let masks = rt.manifest.default_masks.get("ilmpq1").unwrap();
-    let names: Vec<String> =
-        rt.manifest.params.iter().map(|(n, _)| n.clone()).collect();
-    let frozen = freeze::freeze_params(&params, &names, masks);
-    let a = ptq::predict_frozen_qgemm(&rt, &frozen, Some(masks)).unwrap();
-    let b = ptq::predict_frozen_qgemm(&rt, &frozen, Some(masks)).unwrap();
-    assert_eq!(a, b, "packed eval must be deterministic");
+    let m = rt.manifest.clone();
+    let params = m.load_init_params().unwrap();
+    let masks = m.default_masks.get("ilmpq1").unwrap().clone();
+    let names: Vec<String> = m.params.iter().map(|(n, _)| n.clone()).collect();
+    let frozen = freeze::freeze_params(&params, &names, &masks);
+    // Same backend instance twice (cached pack), and a fresh instance: all
+    // three prediction vectors must be identical.
+    let be = QgemmBackend::new(m.clone(), frozen.clone(), masks.clone());
+    let a = ptq::predict_with(&be, &m).unwrap();
+    let b = ptq::predict_with(&be, &m).unwrap();
+    assert_eq!(a, b, "packed eval must be deterministic across the cached pack");
+    let be2 = QgemmBackend::new(m.clone(), frozen, masks);
+    let c = ptq::predict_with(&be2, &m).unwrap();
+    assert_eq!(a, c, "packed eval must be deterministic across instances");
 }

@@ -1,0 +1,103 @@
+//! Server smoke test on the `qgemm` backend — artifact-free and
+//! PJRT-free, so the full serving loop (router, dynamic batcher, worker
+//! pool, FPGA-sim latency overlay) is exercised by the
+//! `--no-default-features` CI leg on every push.
+//!
+//! This is the acceptance check for the backend-generic server: the same
+//! `coordinator::server` that fronted PJRT now runs end-to-end over the
+//! packed-code integer path, on a machine with nothing but a Rust
+//! toolchain.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use ilmpq::backend::{self, synth, BackendInit, InferenceBackend};
+use ilmpq::coordinator::{Metrics, ServeConfig, Server};
+use ilmpq::quant::Ratio;
+use ilmpq::util::Rng;
+
+const H: usize = 8;
+const W: usize = 8;
+const C: usize = 3;
+const CLASSES: usize = 5;
+
+/// Synthetic manifest + a qgemm backend over it, with the mask set also
+/// registered under `default_masks` so the FPGA-sim overlay resolves.
+fn fixture(ratio_name: &str) -> (ilmpq::runtime::Manifest, Arc<dyn InferenceBackend>, Rng) {
+    let mut rng = Rng::new(11);
+    let mut m = synth::tiny_manifest(H, W, C, &[4, 8], CLASSES);
+    let params = synth::random_params(&m, &mut rng);
+    let masks = synth::random_masks(&m, Ratio::new(65.0, 30.0, 5.0), &mut rng);
+    m.default_masks.insert(ratio_name.to_string(), masks.clone());
+    let init = BackendInit {
+        masks: Some(masks),
+        threads: Some(2),
+        ..BackendInit::new(m.clone(), params)
+    };
+    let be: Arc<dyn InferenceBackend> =
+        Arc::from(backend::create("qgemm", &init).unwrap());
+    (m, be, rng)
+}
+
+#[test]
+fn serving_end_to_end_on_qgemm_without_artifacts() {
+    let (m, be, mut rng) = fixture("smoke");
+    let cfg = ServeConfig {
+        workers: 2,
+        max_wait: Duration::from_millis(2),
+        ratio_name: "smoke".into(),
+        device: "xc7z045".into(),
+        frozen: true,
+    };
+    let server = Server::start(&m, be, cfg).unwrap();
+    assert!(server.sim.latency_s > 0.0, "FPGA-sim overlay must resolve");
+
+    let img = m.data.image_elems();
+    let n = 24;
+    let rxs: Vec<_> = (0..n)
+        .map(|_| {
+            let mut image = vec![0f32; img];
+            rng.fill_normal(&mut image, 1.0);
+            server.submit(image)
+        })
+        .collect();
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).expect("response");
+        assert_eq!(resp.logits.len(), CLASSES);
+        assert!(resp.pred < CLASSES);
+        assert!(resp.logits.iter().all(|v| v.is_finite()));
+        assert!(resp.sim_fpga > Duration::ZERO, "sim overlay attached per batch");
+        assert!(resp.e2e >= resp.queue_wait);
+    }
+    let metrics = server.stop();
+    assert_eq!(Metrics::get(&metrics.requests_done), n as u64);
+    assert_eq!(Metrics::get(&metrics.requests_rejected), 0);
+    assert!(metrics.batch_occupancy() > 0.0);
+    assert!(metrics.execute.count() > 0 && metrics.sim_fpga.count() > 0);
+}
+
+#[test]
+fn server_validates_ratio_and_device_for_any_backend() {
+    let (m, be, _) = fixture("smoke");
+    let err = Server::start(
+        &m,
+        be.clone(),
+        ServeConfig { ratio_name: "bogus".into(), ..Default::default() },
+    )
+    .err()
+    .expect("unknown ratio must fail");
+    assert!(format!("{err:#}").contains("unknown ratio"));
+
+    let err = Server::start(
+        &m,
+        be,
+        ServeConfig {
+            ratio_name: "smoke".into(),
+            device: "xc7z999".into(),
+            ..Default::default()
+        },
+    )
+    .err()
+    .expect("unknown device must fail");
+    assert!(format!("{err:#}").contains("unknown device"));
+}
