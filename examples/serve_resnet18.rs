@@ -36,6 +36,7 @@ fn main() -> anyhow::Result<()> {
             ("device", "FPGA-sim device (default xc7z045)"),
             ("workers", "worker threads (default 2)"),
             ("max-wait-ms", "batcher deadline (default 5)"),
+            ("queue-depth", "admission queue bound (default 1024)"),
             ("backend", "execution backend: pjrt|qgemm|float (default pjrt)"),
             ("no-frozen!", "disable the pre-quantized-weights fast path"),
         ],
@@ -44,17 +45,12 @@ fn main() -> anyhow::Result<()> {
     backend::spec(&backend_name)?;
     let manifest = Manifest::load(&Manifest::default_dir())?;
     let ratio = args.str_or("ratio", "ilmpq2").to_string();
-    let masks = manifest
-        .default_masks
-        .get(&ratio)
-        .ok_or_else(|| anyhow::anyhow!("unknown ratio {ratio}"))?
-        .clone();
-    let params = manifest.load_init_params()?;
     let frozen = !args.flag("no-frozen");
-    let be = backend::create_serving(&backend_name, &manifest, params, masks, frozen)?;
+    let be = backend::create_serving(&backend_name, &manifest, &ratio, frozen, None)?;
     let cfg = ServeConfig {
         workers: args.usize_or("workers", 2),
         max_wait: Duration::from_millis(args.u64_or("max-wait-ms", 5)),
+        queue_depth: args.usize_or("queue-depth", 1024),
         ratio_name: ratio.clone(),
         device: args.str_or("device", "xc7z045").to_string(),
         frozen,
@@ -78,14 +74,26 @@ fn main() -> anyhow::Result<()> {
     }
     let mut preds = vec![0usize; manifest.classes];
     let mut done = 0usize;
+    let mut errors = 0usize;
+    let mut lost = 0usize;
     for rx in pending {
-        if let Ok(resp) = rx.recv() {
-            preds[resp.pred] += 1;
-            done += 1;
+        match rx.recv() {
+            Ok(Ok(resp)) => {
+                preds[resp.pred] += 1;
+                done += 1;
+            }
+            // Typed serving errors (shed under overload, failed batch…) —
+            // every request is answered; a closed channel (`lost`) would be
+            // a dropped-reply regression.
+            Ok(Err(_)) => errors += 1,
+            Err(_) => lost += 1,
         }
     }
     let metrics = server.stop();
-    println!("completed {done}/{n}; prediction histogram {preds:?}\n");
+    println!(
+        "completed {done}/{n} ({errors} typed errors, {lost} lost channels); \
+         prediction histogram {preds:?}\n"
+    );
     println!("{}", metrics.report());
 
     // Table-I context for the chosen device.

@@ -9,10 +9,10 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use ilmpq::coordinator::{ServeConfig, Server};
+use ilmpq::coordinator::{loadgen, ServeConfig, Server};
 use ilmpq::runtime::{HostTensor, Runtime};
 use ilmpq::util::stats::{bench, Summary};
-use ilmpq::util::{Args, Rng};
+use ilmpq::util::Args;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse_env(
@@ -26,7 +26,6 @@ fn main() -> anyhow::Result<()> {
     );
     let rt = Arc::new(Runtime::load_default()?);
     let m = &rt.manifest;
-    let img = m.data.image_elems();
     let masks = m.default_masks.get("ilmpq2").expect("ilmpq2").clone();
     let params = m.load_init_params()?;
 
@@ -60,11 +59,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     // ---- closed-loop serving under Poisson load -----------------------------
-    let rates: Vec<f64> = args
-        .str_or("rates", "500,2000,6000")
-        .split(',')
-        .map(|r| r.trim().parse().expect("rate"))
-        .collect();
+    let rates = args.f64_list_or("rates", "500,2000,6000");
     let n = args.usize_or("requests", 768);
     println!("\n== serving under open-loop Poisson load (ilmpq2 masks) ==");
     for rate in rates {
@@ -73,32 +68,26 @@ fn main() -> anyhow::Result<()> {
             max_wait: Duration::from_millis(5),
             ratio_name: "ilmpq2".into(),
             device: "xc7z045".into(),
-            frozen: true,
+            ..Default::default()
         };
         let server = Server::start_pjrt(rt.clone(), params.clone(), &masks, cfg)?;
-        let mut rng = Rng::new(1234);
-        let t0 = std::time::Instant::now();
-        let mut pending = Vec::with_capacity(n);
-        for _ in 0..n {
-            let mut image = vec![0f32; img];
-            rng.fill_normal(&mut image, 1.0);
-            pending.push(server.submit(image));
-            std::thread::sleep(Duration::from_secs_f64(rng.exp(rate)));
-        }
-        let mut done = 0;
-        for rx in pending {
-            if rx.recv().is_ok() {
-                done += 1;
-            }
-        }
-        let wall = t0.elapsed().as_secs_f64();
-        let metrics = server.stop();
-        println!(
-            "rate {:>6.0} req/s: {done}/{n} ok, goodput {:>7.0} req/s, occupancy {:>5.1}%, e2e {}",
+        // The shared open-loop driver — same pacing and reply
+        // classification as `ilmpq loadgen` and benches/serving.rs.
+        let spec = loadgen::LoadSpec {
+            requests: n,
             rate,
-            done as f64 / wall,
-            metrics.batch_occupancy() * 100.0,
-            metrics.e2e.summary()
+            malformed_frac: 0.0,
+            seed: 1234,
+        };
+        let (report, _metrics) = loadgen::run(server, &rt.manifest, &spec);
+        println!(
+            "rate {:>6.0} req/s: {}/{} ok, goodput {:>7.0} req/s, occupancy {:>5.1}%, e2e {}",
+            rate,
+            report.done,
+            report.requests,
+            report.goodput_rps,
+            report.occupancy * 100.0,
+            report.e2e
         );
     }
 

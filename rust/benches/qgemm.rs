@@ -15,8 +15,6 @@
 //! cargo bench --bench qgemm [-- --iters 5 --threads 8 --full --out PATH]
 //! ```
 
-use std::collections::BTreeMap;
-
 use ilmpq::backend::{synth, FloatRefBackend, InferenceBackend, QgemmBackend};
 use ilmpq::model::resnet18;
 use ilmpq::quant::qgemm::{self, QuantizedActs};
@@ -32,15 +30,6 @@ const REPRESENTATIVE: &[&str] = &[
     "layer4.1.conv2",
     "fc",
 ];
-
-fn obj(entries: Vec<(&str, Json)>) -> Json {
-    Json::Obj(
-        entries
-            .into_iter()
-            .map(|(k, v)| (k.to_string(), v))
-            .collect::<BTreeMap<_, _>>(),
-    )
-}
 
 fn masks_for(label: &str, w: &[Vec<f32>], rng: &mut Rng) -> ilmpq::quant::LayerMasks {
     match label {
@@ -140,7 +129,7 @@ fn main() {
             line.push_str(&format!(" {:>9.2} ({:>4.2}x)", gops_of(secs), speedup));
             scheme_cells.push((
                 label,
-                obj(vec![
+                Json::obj(vec![
                     ("seconds", Json::Num(secs)),
                     ("gops", Json::Num(gops_of(secs))),
                     ("speedup_vs_f32", Json::Num(speedup)),
@@ -148,14 +137,14 @@ fn main() {
             ));
         }
         println!("{line}");
-        cases.push(obj(vec![
+        cases.push(Json::obj(vec![
             ("layer", Json::Str(layer.name.clone())),
             ("m", Json::Num(g.m as f64)),
             ("k", Json::Num(g.k as f64)),
             ("n", Json::Num(g.n as f64)),
             ("baseline_f32_seconds", Json::Num(base_s)),
             ("baseline_f32_gops", Json::Num(gops_of(base_s))),
-            ("schemes", obj(scheme_cells)),
+            ("schemes", Json::obj(scheme_cells)),
         ]));
     }
 
@@ -209,13 +198,13 @@ fn main() {
             );
             cells.push((
                 label,
-                obj(vec![
+                Json::obj(vec![
                     ("seconds_per_batch", Json::Num(secs)),
                     ("images_per_s", Json::Num(batch as f64 / secs)),
                 ]),
             ));
         }
-        obj(cells)
+        Json::obj(cells)
     };
 
     let min_4bit = speedups_4bit.iter().copied().fold(f64::INFINITY, f64::min);
@@ -229,7 +218,7 @@ fn main() {
         println!("WARNING: below the 2x acceptance target on this machine");
     }
 
-    let doc = obj(vec![
+    let doc = Json::obj(vec![
         ("bench", Json::Str("qgemm".into())),
         ("status", Json::Str("measured".into())),
         ("workload", Json::Str("resnet18 layer shapes, batch 1, im2col view".into())),
@@ -239,7 +228,7 @@ fn main() {
         ("model_forward", model_forward),
         (
             "summary",
-            obj(vec![
+            Json::obj(vec![
                 ("min_speedup_4bit", Json::Num(min_4bit)),
                 ("geomean_speedup_4bit", Json::Num(geomean_4bit)),
             ]),

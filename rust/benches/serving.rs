@@ -1,0 +1,127 @@
+//! Bench: the serving admission pipeline end to end — open-loop Poisson
+//! offered-load sweep over the dynamic batcher + worker pool, on the
+//! artifact-free synthetic TinyResNet driven through the `qgemm` backend.
+//!
+//! Reports, per offered rate: p50/p99 end-to-end latency, batch occupancy,
+//! shed rate (the queue bound's overload response), and goodput. The high
+//! rate points are *meant* to saturate the backend — the shed rate curve is
+//! the admission pipeline working, not a failure. Needs no PJRT and no
+//! `make artifacts`: `--no-default-features` builds and runs it, so the CI
+//! `serving-bench` job measures it on every push.
+//!
+//! Writes machine-readable results to `BENCH_serving.json` at the repo root.
+//!
+//! ```sh
+//! cargo bench --no-default-features --bench serving \
+//!     [-- --rates 500,2000,8000 --requests 512 --queue-depth 256]
+//! ```
+
+use std::time::Duration;
+
+use ilmpq::coordinator::{loadgen, ServeConfig, Server};
+use ilmpq::util::{Args, Json};
+
+fn main() -> anyhow::Result<()> {
+    let a = Args::parse_env(
+        "bench serving",
+        1,
+        &[
+            ("rates", "comma-separated offered loads req/s (default 500,2000,8000)"),
+            ("requests", "requests per rate point (default 512)"),
+            ("workers", "worker threads (default 2)"),
+            ("queue-depth", "admission queue bound (default 256)"),
+            ("threads", "backend CPU threads (default 2; 0 = all cores)"),
+            ("backend", "execution backend (default qgemm)"),
+            ("seed", "workload seed (default 42)"),
+            ("out", "output JSON path (default: repo-root BENCH_serving.json)"),
+        ],
+    );
+    let rates = a.f64_list_or("rates", "500,2000,8000");
+    let requests = a.usize_or("requests", 512);
+    let workers = a.usize_or("workers", 2);
+    let queue_depth = a.usize_or("queue-depth", 256);
+    // Same convention as `ilmpq loadgen`: 0 = all cores. Default 2 keeps
+    // hosted-runner numbers stable.
+    let threads = match a.usize_or("threads", 2) {
+        0 => None,
+        t => Some(t),
+    };
+    let backend_name = a.str_or("backend", "qgemm").to_string();
+    let seed = a.u64_or("seed", 42);
+    // cwd-independent default: the repo root is one level above the crate.
+    let out_path = a
+        .str_or("out", concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serving.json"))
+        .to_string();
+
+    println!(
+        "== serving admission pipeline under open-loop Poisson load \
+         ({backend_name} backend, synthetic TinyResNet, {workers} workers, \
+         queue depth {queue_depth}) =="
+    );
+    let mut points = Vec::new();
+    for &rate in &rates {
+        // Fresh server (and metrics) per point; the pack is cheap at this
+        // model size and isolation keeps the percentiles per-rate.
+        let (m, be) =
+            loadgen::synth_fixture(&backend_name, "bench", threads, seed)?;
+        let cfg = ServeConfig {
+            workers,
+            max_wait: Duration::from_millis(2),
+            queue_depth,
+            ratio_name: "bench".into(),
+            device: "xc7z045".into(),
+            ..Default::default()
+        };
+        let server = Server::start(&m, be, cfg)?;
+        let spec = loadgen::LoadSpec {
+            requests,
+            rate,
+            malformed_frac: 0.0,
+            seed,
+        };
+        let (report, _metrics) = loadgen::run(server, &m, &spec);
+        assert_eq!(
+            report.lost, 0,
+            "typed-error pipeline must answer every request"
+        );
+        println!(
+            "rate {:>7.0} req/s (achieved {:>6.0}): done {:>4}/{} shed {:>4} ({:>5.1}%), \
+             occupancy {:>5.1}%, e2e p50 {:>8.3} ms p99 {:>8.3} ms, \
+             goodput {:>6.0} req/s",
+            rate,
+            report.achieved_rate,
+            report.done,
+            report.requests,
+            report.shed,
+            report.shed_rate * 100.0,
+            report.occupancy * 100.0,
+            report.e2e.p50 * 1e3,
+            report.e2e.p99 * 1e3,
+            report.goodput_rps,
+        );
+        points.push(report.to_json());
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("serving".into())),
+        ("status", Json::Str("measured".into())),
+        (
+            "workload",
+            Json::Str(
+                "synthetic TinyResNet 16x16x3 widths [8,16], open-loop Poisson sweep"
+                    .into(),
+            ),
+        ),
+        ("backend", Json::Str(backend_name)),
+        ("requests_per_point", Json::Num(requests as f64)),
+        ("workers", Json::Num(workers as f64)),
+        ("queue_depth", Json::Num(queue_depth as f64)),
+        // 0 = all cores (unbounded pool), mirroring the CLI convention.
+        ("threads", Json::Num(threads.unwrap_or(0) as f64)),
+        ("points", Json::Arr(points)),
+    ]);
+    std::fs::write(&out_path, doc.to_string_compact())
+        .unwrap_or_else(|e| panic!("write {out_path}: {e}"));
+    println!("wrote {out_path}");
+    Ok(())
+}

@@ -101,6 +101,40 @@ pub fn argmax(row: &[f32]) -> usize {
         .unwrap()
 }
 
+/// O(1) half of admission validation: the image must hold exactly
+/// `image_elems` floats. This is the corruption-dangerous class — batch
+/// buffers are built by concatenation, so a wrong-length image admitted
+/// into a batch would shift every subsequent image's offset.
+pub fn validate_image_len(
+    image: &[f32],
+    image_elems: usize,
+) -> std::result::Result<(), String> {
+    if image.len() != image_elems {
+        return Err(format!(
+            "image has {} elements, model expects {image_elems}",
+            image.len()
+        ));
+    }
+    Ok(())
+}
+
+/// O(n) half of admission validation: every value must be finite. The
+/// serving front door runs this *after* its cheap admission checks so
+/// requests shed under overload never pay the full scan.
+pub fn validate_image_finite(image: &[f32]) -> std::result::Result<(), String> {
+    if let Some(i) = image.iter().position(|v| !v.is_finite()) {
+        return Err(format!("image[{i}] is not finite ({})", image[i]));
+    }
+    Ok(())
+}
+
+/// Full admission-time request validation (length + finiteness), for
+/// ingresses without an overload fast path.
+pub fn validate_image(image: &[f32], image_elems: usize) -> std::result::Result<(), String> {
+    validate_image_len(image, image_elems)?;
+    validate_image_finite(image)
+}
+
 /// Shared `run_batch` input guard: `images` must hold exactly
 /// `batch * image_elems` floats.
 pub(crate) fn check_batch_len(images: &[f32], batch: usize, image_elems: usize) -> Result<()> {
@@ -153,5 +187,16 @@ mod tests {
     #[test]
     fn batch_output_rejects_bad_shape() {
         assert!(batch_output(vec![0.0; 3], 2, 2, Duration::ZERO).is_err());
+    }
+
+    #[test]
+    fn validate_image_checks_length_and_finiteness() {
+        assert!(validate_image(&[0.0; 4], 4).is_ok());
+        let err = validate_image(&[0.0; 3], 4).unwrap_err();
+        assert!(err.contains("3") && err.contains("4"), "{err}");
+        let err = validate_image(&[0.0, f32::NAN, 0.0, 0.0], 4).unwrap_err();
+        assert!(err.contains("not finite"), "{err}");
+        let err = validate_image(&[0.0, 0.0, f32::INFINITY, 0.0], 4).unwrap_err();
+        assert!(err.contains("index") || err.contains("[2]"), "{err}");
     }
 }

@@ -189,18 +189,26 @@ pub fn create(name: &str, init: &BackendInit) -> Result<Box<dyn InferenceBackend
         .with_context(|| format!("initialize backend {name:?}"))
 }
 
-/// Serving convenience shared by the CLI and the examples: resolve `name`,
-/// attach a PJRT runtime only when the backend needs one (and this build
-/// has it — compiled-out backends fall through to `create`'s curated
-/// error), and construct from an already-loaded manifest.
+/// Serving convenience shared by the CLI and the examples — the whole
+/// recipe from an already-loaded manifest: look up the `ratio` mask set and
+/// the init params, attach a PJRT runtime only when the backend needs one
+/// (and this build has it — compiled-out backends fall through to
+/// `create`'s curated error), and construct. `threads` caps the CPU
+/// backends' worker pool (`None` = all cores; PJRT ignores it).
 pub fn create_serving(
     name: &str,
     manifest: &Manifest,
-    params: Vec<HostTensor>,
-    masks: MaskSet,
+    ratio: &str,
     frozen: bool,
+    threads: Option<usize>,
 ) -> Result<Arc<dyn InferenceBackend>> {
     let s = spec(name)?;
+    let masks = manifest
+        .default_masks
+        .get(ratio)
+        .ok_or_else(|| anyhow!("unknown ratio {ratio}"))?
+        .clone();
+    let params = manifest.load_init_params()?;
     let runtime = if s.needs_runtime && s.available {
         Some(Arc::new(Runtime::from_manifest(manifest.clone())?))
     } else {
@@ -210,6 +218,7 @@ pub fn create_serving(
         masks: Some(masks),
         frozen,
         runtime,
+        threads,
         ..BackendInit::new(manifest.clone(), params)
     };
     Ok(Arc::from(create(name, &init)?))

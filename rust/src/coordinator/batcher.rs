@@ -9,6 +9,11 @@
 //! * otherwise dispatch whatever is queued when the *oldest* request has
 //!   waited `max_wait` (the latency SLO knob);
 //! * always use the smallest covering artifact to minimize padded work.
+//!
+//! The batcher trusts its inputs: requests reach it only through the
+//! server's admission pipeline (`Server::submit`), which has already
+//! validated every image's geometry and bounded the in-system count — so
+//! batch assembly here is pure concatenation with no per-item error paths.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};

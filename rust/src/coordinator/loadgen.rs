@@ -1,0 +1,318 @@
+//! Open-loop load generator for the serving admission pipeline.
+//!
+//! Drives a running [`Server`] with Poisson arrivals at a configured
+//! offered load, collects every typed reply, and folds the server metrics
+//! into one [`LoadReport`] (p50/p99 end-to-end latency, batch occupancy,
+//! shed rate, goodput). Shared by the `ilmpq loadgen` subcommand and
+//! `benches/serving.rs` so both report identical numbers for identical
+//! workloads.
+//!
+//! The generator is *open-loop*: arrivals do not wait for replies, so an
+//! offered load beyond the backend's capacity exercises the queue bound —
+//! the shed rate is the interesting output, not an error. A configurable
+//! fraction of deliberately malformed requests exercises the admission
+//! validator the same way.
+//!
+//! [`synth_fixture`] builds an artifact-free serving stack (synthetic
+//! TinyResNet manifest + registry backend), so the whole pipeline runs
+//! end-to-end on a toolchain-only machine: no `make artifacts`, no PJRT,
+//! `--no-default-features` is enough.
+
+use std::sync::mpsc::RecvTimeoutError;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::metrics::Metrics;
+use super::server::{ServeError, Server};
+use crate::backend::{self, synth, BackendInit, InferenceBackend};
+use crate::quant::Ratio;
+use crate::runtime::Manifest;
+use crate::util::stats::Summary;
+use crate::util::{Json, Rng};
+
+/// Workload knobs for one load-generation run.
+#[derive(Debug, Clone)]
+pub struct LoadSpec {
+    /// Total requests to offer.
+    pub requests: usize,
+    /// Offered load in requests/second (Poisson inter-arrivals). Zero or
+    /// non-finite disables pacing (submit as fast as possible).
+    pub rate: f64,
+    /// Fraction of requests submitted with a deliberately malformed length,
+    /// to exercise admission rejection (0.0 for a clean run).
+    pub malformed_frac: f64,
+    /// RNG seed for arrivals + images.
+    pub seed: u64,
+}
+
+impl Default for LoadSpec {
+    fn default() -> Self {
+        LoadSpec { requests: 512, rate: 2000.0, malformed_frac: 0.0, seed: 42 }
+    }
+}
+
+/// Outcome of one run: client-observed reply counts + server-side
+/// latency/occupancy summaries.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    /// The nominal rate the spec asked for.
+    pub offered_rate: f64,
+    /// The rate actually achieved during the submission phase (requests /
+    /// submission elapsed). Sleep overshoot and per-request generation cost
+    /// make this fall short of nominal at high rates — plot against this
+    /// axis, not the nominal one.
+    pub achieved_rate: f64,
+    pub requests: usize,
+    /// Replies answered with logits.
+    pub done: usize,
+    /// `InvalidInput` rejections (admission validation).
+    pub invalid: usize,
+    /// `QueueFull` sheds (admission bound).
+    pub shed: usize,
+    /// `BackendFailed` replies.
+    pub failed: usize,
+    /// `ShuttingDown` replies.
+    pub shutdown: usize,
+    /// Replies not collected within the run-wide 60s drain deadline (they
+    /// may still arrive later): a saturated or very slow backend, not a
+    /// protocol regression.
+    pub slow: usize,
+    /// Reply channels closed without an answer — always 0 with the
+    /// typed-error pipeline; counted so a dropped-reply regression is
+    /// visible.
+    pub lost: usize,
+    pub wall_s: f64,
+    /// Completed requests per wall-clock second.
+    pub goodput_rps: f64,
+    pub e2e: Summary,
+    pub queue_wait: Summary,
+    pub occupancy: f64,
+    pub shed_rate: f64,
+}
+
+/// Drive `server` with `spec` and stop it when the run drains. `manifest`
+/// supplies the image geometry for the generated workload. Returns the
+/// client-side report plus the server's metrics handle (for consumers that
+/// also want the full `Metrics::report()`).
+pub fn run(
+    server: Server,
+    manifest: &Manifest,
+    spec: &LoadSpec,
+) -> (LoadReport, Arc<Metrics>) {
+    let img = manifest.data.image_elems();
+    let mut rng = Rng::new(spec.seed);
+    let pace = spec.rate.is_finite() && spec.rate > 0.0;
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(spec.requests);
+    for _ in 0..spec.requests {
+        let malformed = spec.malformed_frac > 0.0 && rng.bool(spec.malformed_frac);
+        // A wrong-length image must bounce off admission, never a batch;
+        // `img + 1` is malformed for every geometry (a halved length would
+        // collide with `img` itself when image_elems <= 2).
+        let len = if malformed { img + 1 } else { img };
+        let mut image = vec![0f32; len];
+        rng.fill_normal(&mut image, 1.0);
+        pending.push(server.submit(image));
+        if pace {
+            std::thread::sleep(Duration::from_secs_f64(rng.exp(spec.rate)));
+        }
+    }
+    let submit_s = t0.elapsed().as_secs_f64();
+    let (mut done, mut invalid, mut shed, mut failed, mut shutdown) =
+        (0usize, 0usize, 0usize, 0usize, 0usize);
+    let (mut slow, mut lost) = (0usize, 0usize);
+    // One run-wide drain deadline (not per-request): a wedged server costs
+    // ~60s total instead of 60s x requests, and the slow/lost counts still
+    // get reported rather than an opaque external kill.
+    let deadline = Instant::now() + Duration::from_secs(60);
+    for rx in pending {
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        match rx.recv_timeout(remaining) {
+            Ok(Ok(_)) => done += 1,
+            Ok(Err(ServeError::InvalidInput(_))) => invalid += 1,
+            Ok(Err(ServeError::QueueFull { .. })) => shed += 1,
+            Ok(Err(ServeError::BackendFailed(_))) => failed += 1,
+            Ok(Err(ServeError::ShuttingDown)) => shutdown += 1,
+            // Slow is a capacity symptom; only a *closed* channel is the
+            // dropped-reply regression the pipeline promises never happens.
+            Err(RecvTimeoutError::Timeout) => slow += 1,
+            Err(RecvTimeoutError::Disconnected) => lost += 1,
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let metrics = server.stop();
+    let report = LoadReport {
+        offered_rate: spec.rate,
+        achieved_rate: spec.requests as f64 / submit_s.max(1e-9),
+        requests: spec.requests,
+        done,
+        invalid,
+        shed,
+        failed,
+        shutdown,
+        slow,
+        lost,
+        wall_s,
+        goodput_rps: done as f64 / wall_s.max(1e-9),
+        e2e: metrics.e2e.summary(),
+        queue_wait: metrics.queue_wait.summary(),
+        occupancy: metrics.batch_occupancy(),
+        shed_rate: metrics.shed_rate(),
+    };
+    (report, metrics)
+}
+
+fn summary_json(s: &Summary) -> Json {
+    Json::obj(vec![
+        ("n", Json::Num(s.n as f64)),
+        ("mean_s", Json::Num(s.mean)),
+        ("p50_s", Json::Num(s.p50)),
+        ("p95_s", Json::Num(s.p95)),
+        ("p99_s", Json::Num(s.p99)),
+    ])
+}
+
+impl LoadReport {
+    /// Human-readable multi-line report for the CLI.
+    pub fn render(&self) -> String {
+        format!(
+            "offered {:.0} req/s (achieved {:.0}), {} requests in {:.2}s\n\
+             outcomes: done={} invalid={} shed={} failed={} shutdown={} slow={} lost={}\n\
+             goodput {:.0} req/s, occupancy {:.1}%, shed rate {:.1}%\n\
+             e2e:        {}\nqueue_wait: {}",
+            self.offered_rate,
+            self.achieved_rate,
+            self.requests,
+            self.wall_s,
+            self.done,
+            self.invalid,
+            self.shed,
+            self.failed,
+            self.shutdown,
+            self.slow,
+            self.lost,
+            self.goodput_rps,
+            self.occupancy * 100.0,
+            self.shed_rate * 100.0,
+            self.e2e,
+            self.queue_wait,
+        )
+    }
+
+    /// Machine-readable form, one point of `BENCH_serving.json`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("offered_rate_rps", Json::Num(self.offered_rate)),
+            ("achieved_rate_rps", Json::Num(self.achieved_rate)),
+            ("requests", Json::Num(self.requests as f64)),
+            ("done", Json::Num(self.done as f64)),
+            ("invalid", Json::Num(self.invalid as f64)),
+            ("shed", Json::Num(self.shed as f64)),
+            ("failed", Json::Num(self.failed as f64)),
+            ("shutdown", Json::Num(self.shutdown as f64)),
+            ("slow", Json::Num(self.slow as f64)),
+            ("lost", Json::Num(self.lost as f64)),
+            ("wall_s", Json::Num(self.wall_s)),
+            ("goodput_rps", Json::Num(self.goodput_rps)),
+            ("occupancy", Json::Num(self.occupancy)),
+            ("shed_rate", Json::Num(self.shed_rate)),
+            ("e2e", summary_json(&self.e2e)),
+            ("queue_wait", summary_json(&self.queue_wait)),
+        ])
+    }
+}
+
+/// Artifact-free serving fixture: the synthetic TinyResNet manifest with a
+/// mixed mask set registered under `ratio_name`, plus a registry-built
+/// backend over it. This is what lets `ilmpq loadgen` and the serving bench
+/// run on a machine with nothing but a Rust toolchain.
+pub fn synth_fixture(
+    backend_name: &str,
+    ratio_name: &str,
+    threads: Option<usize>,
+    seed: u64,
+) -> Result<(Manifest, Arc<dyn InferenceBackend>)> {
+    let mut rng = Rng::new(seed);
+    let mut m = synth::tiny_manifest(16, 16, 3, &[8, 16], 10);
+    let params = synth::random_params(&m, &mut rng);
+    let masks = synth::random_masks(&m, Ratio::new(65.0, 30.0, 5.0), &mut rng);
+    m.default_masks.insert(ratio_name.to_string(), masks.clone());
+    let init = BackendInit {
+        masks: Some(masks),
+        threads,
+        ..BackendInit::new(m.clone(), params)
+    };
+    let be: Arc<dyn InferenceBackend> = Arc::from(backend::create(backend_name, &init)?);
+    Ok((m, be))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ServeConfig;
+
+    #[test]
+    fn synth_fixture_registers_ratio_and_builds_backend() {
+        let (m, be) = synth_fixture("qgemm", "lg", Some(1), 3).unwrap();
+        assert!(m.default_masks.contains_key("lg"));
+        assert_eq!(be.name(), "qgemm");
+    }
+
+    #[test]
+    fn loadgen_drains_and_classifies_every_reply() {
+        let (m, be) = synth_fixture("qgemm", "lg", Some(2), 7).unwrap();
+        let cfg = ServeConfig {
+            workers: 1,
+            max_wait: Duration::from_millis(1),
+            ratio_name: "lg".into(),
+            ..Default::default()
+        };
+        let server = Server::start(&m, be, cfg).unwrap();
+        let spec = LoadSpec {
+            requests: 24,
+            rate: 0.0, // unpaced
+            malformed_frac: 0.5,
+            seed: 11,
+        };
+        let (r, metrics) = run(server, &m, &spec);
+        assert_eq!(r.lost, 0, "typed pipeline must answer every request");
+        assert_eq!(r.slow, 0, "tiny run must drain inside the deadline");
+        assert_eq!(
+            r.done + r.invalid + r.shed + r.failed + r.shutdown,
+            r.requests
+        );
+        assert_eq!(Metrics::get(&metrics.requests_done), r.done as u64);
+        assert!(r.done > 0);
+        assert!(r.invalid > 0, "malformed_frac must produce rejections");
+        assert!(r.goodput_rps > 0.0);
+    }
+
+    #[test]
+    fn report_renders_and_serializes() {
+        let r = LoadReport {
+            offered_rate: 100.0,
+            achieved_rate: 92.0,
+            requests: 10,
+            done: 8,
+            invalid: 1,
+            shed: 1,
+            failed: 0,
+            shutdown: 0,
+            slow: 0,
+            lost: 0,
+            wall_s: 0.5,
+            goodput_rps: 16.0,
+            e2e: Summary::of(&[0.001, 0.002]),
+            queue_wait: Summary::of(&[0.0005]),
+            occupancy: 0.75,
+            shed_rate: 0.1,
+        };
+        let text = r.render();
+        assert!(text.contains("done=8") && text.contains("shed rate"));
+        let j = r.to_json();
+        assert!(j.get("e2e").is_some() && j.get("shed_rate").is_some());
+        assert_eq!(j.get("done").and_then(|v| v.as_f64()), Some(8.0));
+    }
+}

@@ -4,6 +4,11 @@
 //! endpoint/bench snapshots. Latencies are kept as raw samples (bounded
 //! ring) — with the request volumes here that is cheaper and more exact
 //! than HDR buckets.
+//!
+//! Counters mirror the admission pipeline's outcomes one-to-one: every
+//! submission lands in exactly one of `done`, `invalid`, `shed`, `failed`,
+//! or `shutdown` (the typed [`crate::coordinator::ServeError`] variants),
+//! so `in == done + invalid + shed + failed + shutdown` once a run drains.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -41,14 +46,29 @@ impl LatencyTrack {
 /// All serving-side metrics.
 #[derive(Default)]
 pub struct Metrics {
+    /// Submission attempts (admitted or not).
     pub requests_in: AtomicU64,
+    /// Requests answered with logits.
     pub requests_done: AtomicU64,
-    pub requests_rejected: AtomicU64,
+    /// Rejected at admission: malformed image (wrong length / non-finite).
+    pub requests_invalid: AtomicU64,
+    /// Shed at admission: the queue bound was hit (reject-newest).
+    pub requests_shed: AtomicU64,
+    /// Answered with `BackendFailed`: their batch errored on the backend.
+    pub requests_failed: AtomicU64,
+    /// Answered with `ShuttingDown` at/after the stop cutoff.
+    pub requests_shutdown: AtomicU64,
     pub batches: AtomicU64,
+    /// Batches whose backend execution errored (every member answered).
+    pub batches_failed: AtomicU64,
     pub batched_requests: AtomicU64,
     pub padded_slots: AtomicU64,
     pub queue_wait: LatencyTrack,
+    /// Backend-measured execution time of *successful* batches only.
     pub execute: LatencyTrack,
+    /// Host-observed time lost to failed batch executions — kept out of
+    /// `execute` so its percentiles describe successes only.
+    pub failed: LatencyTrack,
     pub e2e: LatencyTrack,
     /// Simulated FPGA time attached to each batch (codesign view).
     pub sim_fpga: LatencyTrack,
@@ -77,18 +97,34 @@ impl Metrics {
         reqs / (reqs + padded)
     }
 
+    /// Fraction of submissions shed by the queue bound.
+    pub fn shed_rate(&self) -> f64 {
+        let total = Self::get(&self.requests_in) as f64;
+        if total == 0.0 {
+            return 0.0;
+        }
+        Self::get(&self.requests_shed) as f64 / total
+    }
+
     pub fn report(&self) -> String {
         format!(
-            "requests: in={} done={} rejected={}\n\
-             batches: {} (occupancy {:.1}%)\n\
-             queue_wait: {}\nexecute:    {}\ne2e:        {}\nsim_fpga:   {}",
+            "requests: in={} done={} invalid={} shed={} failed={} shutdown={}\n\
+             batches: {} ({} failed, occupancy {:.1}%, shed rate {:.1}%)\n\
+             queue_wait: {}\nexecute:    {}\nfailed:     {}\n\
+             e2e:        {}\nsim_fpga:   {}",
             Self::get(&self.requests_in),
             Self::get(&self.requests_done),
-            Self::get(&self.requests_rejected),
+            Self::get(&self.requests_invalid),
+            Self::get(&self.requests_shed),
+            Self::get(&self.requests_failed),
+            Self::get(&self.requests_shutdown),
             Self::get(&self.batches),
+            Self::get(&self.batches_failed),
             self.batch_occupancy() * 100.0,
+            self.shed_rate() * 100.0,
             self.queue_wait.summary(),
             self.execute.summary(),
+            self.failed.summary(),
             self.e2e.summary(),
             self.sim_fpga.summary(),
         )
@@ -112,6 +148,15 @@ mod tests {
     #[test]
     fn occupancy_empty_is_zero() {
         assert_eq!(Metrics::default().batch_occupancy(), 0.0);
+    }
+
+    #[test]
+    fn shed_rate_tracks_shed_over_in() {
+        let m = Metrics::default();
+        assert_eq!(m.shed_rate(), 0.0);
+        Metrics::add(&m.requests_in, 8);
+        Metrics::add(&m.requests_shed, 2);
+        assert!((m.shed_rate() - 0.25).abs() < 1e-12);
     }
 
     #[test]
@@ -141,5 +186,7 @@ mod tests {
         m.e2e.record(0.001);
         let r = m.report();
         assert!(r.contains("requests:") && r.contains("e2e:"));
+        assert!(r.contains("invalid=") && r.contains("shed rate"));
+        assert!(r.contains("failed:"), "failed track must be visible: {r}");
     }
 }

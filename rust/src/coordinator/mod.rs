@@ -5,10 +5,14 @@
 //! * `trainer` — the QAT loop over the AOT `train_step` artifact;
 //! * `batcher`/`server` — inference serving with dynamic batching over any
 //!   [`crate::backend::InferenceBackend`] (PJRT artifacts, native qgemm, or
-//!   the f32 reference), with the FPGA-sim timing overlay;
+//!   the f32 reference), behind a validating, bounded, typed-error
+//!   admission pipeline, with the FPGA-sim timing overlay;
+//! * `loadgen` — the open-loop Poisson load driver behind `ilmpq loadgen`
+//!   and `benches/serving.rs`;
 //! * `metrics` — counters + latency percentiles.
 
 pub mod batcher;
+pub mod loadgen;
 pub mod metrics;
 pub mod ratio_search;
 pub mod sensitivity;
@@ -17,5 +21,5 @@ pub mod trainer;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use metrics::Metrics;
-pub use server::{Request, Response, ServeConfig, Server};
+pub use server::{Request, Response, ServeConfig, ServeError, ServeResult, Server};
 pub use trainer::Trainer;

@@ -1,14 +1,35 @@
-//! The serving loop: router + dynamic batcher + a backend-generic worker
-//! pool.
+//! The serving loop: a validating admission pipeline + dynamic batcher + a
+//! backend-generic worker pool.
 //!
 //! Architecture (threads + channels; the sandbox has no tokio, and the
 //! workload — CPU-bound batch executions — wants a small fixed pool anyway):
 //!
 //! ```text
-//!   clients ──submit──▶ router/batcher thread ──Batch──▶ worker 0..N-1
-//!                        (Batcher<Request>)               │  InferenceBackend
-//!   clients ◀──reply channel per request──────────────────┘  + FPGA-sim
+//!   clients ──submit──▶ [admission] ──▶ router/batcher ──Batch──▶ worker 0..N-1
+//!             validate + bounded queue   (Batcher<Request>)        │  InferenceBackend
+//!   clients ◀──reply channel per request: Result<Response, ServeError>──┘
 //! ```
+//!
+//! **Admission pipeline.** `submit` is the front door and enforces the batch
+//! contract *before* a request can touch batch assembly:
+//!
+//! * geometry + finiteness validation ([`crate::backend::validate_image`]) —
+//!   a malformed request is rejected alone with
+//!   [`ServeError::InvalidInput`]. This is load-bearing: batch assembly
+//!   concatenates images back to back into one statically-shaped backend
+//!   buffer, so a short/long image admitted into a batch would shift every
+//!   subsequent image's offset and hand neighbors each other's logits
+//!   (the FINN-R dataflow contract: fixed per-image geometry feeding
+//!   statically-shaped accelerator batches);
+//! * a bounded in-system count ([`ServeConfig::queue_depth`]) — once that
+//!   many requests are admitted but unanswered, new submissions are shed
+//!   newest-first with [`ServeError::QueueFull`] instead of growing the
+//!   router's memory without bound;
+//! * every admitted request is *always* answered: success is
+//!   `Ok(Response)`, a failed batch answers each member with
+//!   [`ServeError::BackendFailed`] (one corrupt dispatch degrades
+//!   per-request, never per-batch-silently), and stop answers stragglers
+//!   with [`ServeError::ShuttingDown`] — no dropped reply channels.
 //!
 //! Workers execute through the unified [`InferenceBackend`] trait, so the
 //! same dynamic-batching loop serves the PJRT engine, the native
@@ -20,6 +41,7 @@
 //! performance model (the codesign view: numerics from the backend, timing
 //! from the Zynq model) so the serving benches can report both.
 
+use std::fmt;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
@@ -36,10 +58,10 @@ use crate::model::zoo;
 use crate::quant::MaskSet;
 use crate::runtime::{HostTensor, Manifest, Runtime};
 
-/// One inference request: a flattened image.
+/// One inference request: a flattened image (already admission-validated).
 pub struct Request {
     pub image: Vec<f32>,
-    pub reply: Sender<Response>,
+    pub reply: Sender<ServeResult>,
     pub submitted: Instant,
 }
 
@@ -50,15 +72,67 @@ pub struct Response {
     pub pred: usize,
     pub queue_wait: Duration,
     pub e2e: Duration,
-    /// What this request would have cost on the simulated FPGA.
+    /// What *this request alone* would have cost on the simulated FPGA (one
+    /// image through the per-layer pipeline). The accelerator model runs
+    /// images sequentially — cross-image pipeline amortization is not
+    /// modeled — so the batch-level figure in `Metrics::sim_fpga` is this
+    /// value times the batch's occupied slots.
     pub sim_fpga: Duration,
 }
+
+/// Typed serving error: why a request was not answered with logits. Every
+/// submitted request receives exactly one `Result<Response, ServeError>` on
+/// its reply channel — the error variants replace the historic behaviour of
+/// silently dropping the channel.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// Rejected at admission (wrong image length or non-finite values);
+    /// the request never entered batch assembly, so its batch-mates are
+    /// unaffected.
+    InvalidInput(String),
+    /// The admission queue is at its configured depth; this request was
+    /// shed (reject-newest) without being enqueued.
+    QueueFull { depth: usize },
+    /// The backend failed executing the batch this request was assembled
+    /// into; every member of that batch receives this error.
+    BackendFailed(String),
+    /// The server stopped before this request could be dispatched.
+    ShuttingDown,
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::InvalidInput(reason) => write!(f, "invalid input: {reason}"),
+            ServeError::QueueFull { depth } => {
+                write!(f, "admission queue full (depth {depth}); request shed")
+            }
+            ServeError::BackendFailed(reason) => {
+                write!(f, "backend failed executing this request's batch: {reason}")
+            }
+            ServeError::ShuttingDown => {
+                write!(f, "server shutting down before the request was dispatched")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// What every reply channel carries.
+pub type ServeResult = std::result::Result<Response, ServeError>;
 
 /// Server configuration.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
     pub workers: usize,
     pub max_wait: Duration,
+    /// Bound on requests admitted but not yet answered (submit channel +
+    /// batcher queue + in-flight batches combined). Submissions beyond this
+    /// are shed newest-first with [`ServeError::QueueFull`], so an overload
+    /// can't grow the router's memory without bound. Values below 1 are
+    /// clamped to 1. Default: 1024.
+    pub queue_depth: usize,
     /// Ratio name for the quantization masks (manifest `default_masks`),
     /// used by the FPGA-sim timing overlay.
     pub ratio_name: String,
@@ -78,6 +152,7 @@ impl Default for ServeConfig {
         ServeConfig {
             workers: 2,
             max_wait: Duration::from_millis(5),
+            queue_depth: 1024,
             ratio_name: "ilmpq2".into(),
             device: "xc7z045".into(),
             frozen: true,
@@ -95,6 +170,10 @@ pub struct Server {
     submit_tx: Sender<Request>,
     pub metrics: Arc<Metrics>,
     shutdown: Arc<AtomicBool>,
+    /// Requests admitted but not yet answered; the admission bound.
+    in_system: Arc<AtomicU64>,
+    img_elems: usize,
+    queue_depth: usize,
     router: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
     /// The FPGA-sim report for the configured (model, ratio, device).
@@ -113,6 +192,8 @@ impl Server {
         let policy = BatchPolicy::new(manifest.infer_batches.clone(), cfg.max_wait);
         let metrics = Arc::new(Metrics::default());
         let shutdown = Arc::new(AtomicBool::new(false));
+        let in_system = Arc::new(AtomicU64::new(0));
+        let queue_depth = cfg.queue_depth.max(1);
 
         // FPGA-sim overlay: per-image latency of this config on the device.
         let device = DeviceModel::by_name(&cfg.device)
@@ -137,18 +218,19 @@ impl Server {
         backend.prepare()?;
 
         let img_elems = manifest.data.image_elems();
+        let classes = manifest.classes;
         let (submit_tx, submit_rx) = channel::<Request>();
         let (work_tx, work_rx) = channel::<WorkerMsg>();
         let work_rx = Arc::new(std::sync::Mutex::new(work_rx));
 
         // Worker pool.
-        let inflight = Arc::new(AtomicU64::new(0));
+        let n_workers = cfg.workers.max(1);
         let mut workers = Vec::new();
-        for _ in 0..cfg.workers.max(1) {
+        for _ in 0..n_workers {
             let backend = backend.clone();
             let metrics = metrics.clone();
             let work_rx = work_rx.clone();
-            let inflight = inflight.clone();
+            let in_system = in_system.clone();
             workers.push(std::thread::spawn(move || loop {
                 let msg = {
                     let rx = work_rx.lock().unwrap();
@@ -159,11 +241,12 @@ impl Server {
                         run_batch(
                             backend.as_ref(),
                             img_elems,
+                            classes,
                             &metrics,
+                            &in_system,
                             batch,
                             sim_per_image,
                         );
-                        inflight.fetch_sub(1, Ordering::Relaxed);
                     }
                     Ok(WorkerMsg::Shutdown) | Err(_) => return,
                 }
@@ -174,48 +257,62 @@ impl Server {
         let router = {
             let metrics = metrics.clone();
             let shutdown = shutdown.clone();
-            let inflight = inflight.clone();
+            let in_system = in_system.clone();
             std::thread::spawn(move || {
                 let mut batcher: Batcher<Request> = Batcher::new(policy);
                 loop {
                     // Pull whatever is immediately available.
                     loop {
                         match submit_rx.try_recv() {
-                            Ok(req) => {
-                                Metrics::inc(&metrics.requests_in);
-                                batcher.push(req, Instant::now());
-                            }
+                            Ok(req) => batcher.push(req, Instant::now()),
                             Err(TryRecvError::Empty) => break,
                             Err(TryRecvError::Disconnected) => {
-                                // Drain and stop.
+                                // Server dropped without stop(): a
+                                // disconnected channel is already empty, so
+                                // flush what's batched and exit.
                                 while let Some(b) = batcher.flush() {
-                                    inflight.fetch_add(1, Ordering::Relaxed);
-                                    let _ = work_tx.send(WorkerMsg::Batch(b));
+                                    dispatch(&metrics, &work_tx, b);
                                 }
-                                for _ in 0..64 {
+                                for _ in 0..n_workers {
                                     let _ = work_tx.send(WorkerMsg::Shutdown);
                                 }
                                 return;
                             }
                         }
                     }
-                    if shutdown.load(Ordering::Relaxed) {
-                        while let Some(b) = batcher.flush() {
-                            inflight.fetch_add(1, Ordering::Relaxed);
-                            let _ = work_tx.send(WorkerMsg::Batch(b));
+                    if shutdown.load(Ordering::SeqCst) {
+                        // Stop cutoff. Everything already admitted to the
+                        // batcher ships and gets real answers from the
+                        // workers; anything that raced into the submit
+                        // channel between the drain above and the flag read
+                        // gets a typed ShuttingDown reply instead of a
+                        // dropped channel.
+                        let answer_shutdown = |req: Request| {
+                            Metrics::inc(&metrics.requests_shutdown);
+                            in_system.fetch_sub(1, Ordering::SeqCst);
+                            let _ = req.reply.send(Err(ServeError::ShuttingDown));
+                        };
+                        while let Ok(req) = submit_rx.try_recv() {
+                            answer_shutdown(req);
                         }
-                        for _ in 0..64 {
+                        while let Some(b) = batcher.flush() {
+                            dispatch(&metrics, &work_tx, b);
+                        }
+                        // Defense-in-depth re-drain before the channel
+                        // drops: today no submit can overlap stop() (it
+                        // consumes the Server), but a future `&self` stop
+                        // must never silently drop a buffered request.
+                        while let Ok(req) = submit_rx.try_recv() {
+                            answer_shutdown(req);
+                        }
+                        for _ in 0..n_workers {
                             let _ = work_tx.send(WorkerMsg::Shutdown);
                         }
                         return;
                     }
                     let now = Instant::now();
                     if let Some(batch) = batcher.try_assemble(now) {
-                        Metrics::inc(&metrics.batches);
-                        Metrics::add(&metrics.batched_requests, batch.items.len() as u64);
-                        Metrics::add(&metrics.padded_slots, batch.padded_slots() as u64);
-                        inflight.fetch_add(1, Ordering::Relaxed);
-                        let _ = work_tx.send(WorkerMsg::Batch(batch));
+                        dispatch(&metrics, &work_tx, batch);
                         continue;
                     }
                     // Sleep until the next deadline (or a short poll tick).
@@ -232,6 +329,9 @@ impl Server {
             submit_tx,
             metrics,
             shutdown,
+            in_system,
+            img_elems,
+            queue_depth,
             router: Some(router),
             workers,
             sim,
@@ -259,19 +359,63 @@ impl Server {
         Server::start(&rt.manifest, backend, cfg)
     }
 
-    /// Submit one image; returns the channel the response arrives on.
-    pub fn submit(&self, image: Vec<f32>) -> Receiver<Response> {
+    /// Submit one image; returns the channel the reply arrives on. Never
+    /// blocks: admission decides immediately. A request that fails
+    /// validation or hits the queue bound receives its typed error on the
+    /// returned channel without ever entering batch assembly; every
+    /// admitted request is answered exactly once.
+    pub fn submit(&self, image: Vec<f32>) -> Receiver<ServeResult> {
         let (tx, rx) = channel();
-        let req = Request { image, reply: tx, submitted: Instant::now() };
-        // A send error means shutdown already started; the caller sees a
-        // closed reply channel.
-        let _ = self.submit_tx.send(req);
+        let submitted = Instant::now();
+        Metrics::inc(&self.metrics.requests_in);
+
+        // Cheap geometry check first: a wrong-length image is the
+        // corruption-dangerous class and is rejected alone regardless of
+        // load, before it can touch batch assembly.
+        if let Err(reason) = backend::validate_image_len(&image, self.img_elems) {
+            Metrics::inc(&self.metrics.requests_invalid);
+            let _ = tx.send(Err(ServeError::InvalidInput(reason)));
+            return rx;
+        }
+        if self.shutdown.load(Ordering::SeqCst) {
+            Metrics::inc(&self.metrics.requests_shutdown);
+            let _ = tx.send(Err(ServeError::ShuttingDown));
+            return rx;
+        }
+        // Bounded admission: shed newest-first once `queue_depth` requests
+        // are in the system (queued or executing, not yet answered). This
+        // runs before the O(image_elems) finiteness scan so an overloaded
+        // ingress sheds in O(1).
+        let prev = self.in_system.fetch_add(1, Ordering::SeqCst);
+        if prev >= self.queue_depth as u64 {
+            self.in_system.fetch_sub(1, Ordering::SeqCst);
+            Metrics::inc(&self.metrics.requests_shed);
+            let _ = tx.send(Err(ServeError::QueueFull { depth: self.queue_depth }));
+            return rx;
+        }
+        // Full value scan only for requests that are actually admitted
+        // (roll the slot back on rejection).
+        if let Err(reason) = backend::validate_image_finite(&image) {
+            self.in_system.fetch_sub(1, Ordering::SeqCst);
+            Metrics::inc(&self.metrics.requests_invalid);
+            let _ = tx.send(Err(ServeError::InvalidInput(reason)));
+            return rx;
+        }
+        let req = Request { image, reply: tx, submitted };
+        if let Err(std::sync::mpsc::SendError(req)) = self.submit_tx.send(req) {
+            // Router already exited (stop raced ahead): answer, don't drop.
+            self.in_system.fetch_sub(1, Ordering::SeqCst);
+            Metrics::inc(&self.metrics.requests_shutdown);
+            let _ = req.reply.send(Err(ServeError::ShuttingDown));
+        }
         rx
     }
 
-    /// Graceful stop: flush queues, join threads.
+    /// Graceful stop: flush queues, join threads. In-flight requests are
+    /// answered (executed where already batched, `ShuttingDown` otherwise);
+    /// no reply channel is left to dangle.
     pub fn stop(mut self) -> Arc<Metrics> {
-        self.shutdown.store(true, Ordering::Relaxed);
+        self.shutdown.store(true, Ordering::SeqCst);
         if let Some(r) = self.router.take() {
             let _ = r.join();
         }
@@ -282,30 +426,79 @@ impl Server {
     }
 }
 
+/// Hand one assembled batch to the worker pool, recording assembly metrics
+/// (shared by the deadline path and the shutdown/disconnect flush).
+fn dispatch(metrics: &Metrics, work_tx: &Sender<WorkerMsg>, batch: Assembled<Request>) {
+    Metrics::inc(&metrics.batches);
+    Metrics::add(&metrics.batched_requests, batch.items.len() as u64);
+    Metrics::add(&metrics.padded_slots, batch.padded_slots() as u64);
+    let _ = work_tx.send(WorkerMsg::Batch(batch));
+}
+
 fn run_batch(
     backend: &dyn InferenceBackend,
     img_elems: usize,
+    classes: usize,
     metrics: &Metrics,
+    in_system: &AtomicU64,
     batch: Assembled<Request>,
     sim_per_image: f64,
 ) {
     let exec_size = batch.exec_size;
     let mut x = Vec::with_capacity(exec_size * img_elems);
     for p in &batch.items {
+        // Admission validated every image's geometry, so this concatenation
+        // cannot shift a neighbour's offset.
+        debug_assert_eq!(p.payload.image.len(), img_elems);
         x.extend_from_slice(&p.payload.image);
     }
     x.resize(exec_size * img_elems, 0.0); // padded slots
     let t_exec = Instant::now();
-    let result = backend.run_batch(&x, exec_size);
-    // Simulated FPGA time: per-layer pipeline over the batch.
-    let sim_batch = Duration::from_secs_f64(sim_per_image * batch.items.len() as f64);
-    metrics.sim_fpga.record(sim_batch.as_secs_f64());
+    // Contain backend panics and malformed outputs: under the admission
+    // bound, a batch that died without answering would leak its
+    // `queue_depth` slots forever (and drop reply channels) — so both
+    // become the ordinary failed-batch path below, which answers and
+    // decrements for every member.
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        backend.run_batch(&x, exec_size)
+    }))
+    .unwrap_or_else(|payload| {
+        let msg = payload
+            .downcast_ref::<&str>()
+            .map(|s| s.to_string())
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_else(|| "non-string panic payload".into());
+        Err(anyhow::anyhow!("backend panicked executing the batch: {msg}"))
+    })
+    .and_then(|out| {
+        // Validate against the *manifest's* class count, not the backend's
+        // self-reported one — a degenerate output (e.g. classes == 0 with
+        // empty logits) must fail here, not reach clients as Ok.
+        anyhow::ensure!(
+            out.classes == classes
+                && out.preds.len() == exec_size
+                && out.logits.len() == exec_size * classes
+                && out.preds.iter().all(|&p| p < classes),
+            "backend returned malformed output: {} logits / {} preds / {} classes \
+             for batch {exec_size} x {classes} classes",
+            out.logits.len(),
+            out.preds.len(),
+            out.classes
+        );
+        Ok(out)
+    });
 
     match result {
         Ok(out) => {
             // The backend's own measurement excludes the input-copy work
             // above, so `execute` tracks pure backend cost.
             metrics.execute.record(out.elapsed.as_secs_f64());
+            // Simulated FPGA time: the sequential per-image model, summed
+            // over the batch's occupied slots for the batch-level metric.
+            let sim_batch =
+                Duration::from_secs_f64(sim_per_image * batch.items.len() as f64);
+            metrics.sim_fpga.record(sim_batch.as_secs_f64());
+            let sim_request = Duration::from_secs_f64(sim_per_image);
             let classes = out.classes;
             let done = Instant::now();
             for (i, p) in batch.items.iter().enumerate() {
@@ -315,22 +508,32 @@ fn run_batch(
                 metrics.queue_wait.record(queue_wait.as_secs_f64());
                 metrics.e2e.record(e2e.as_secs_f64());
                 Metrics::inc(&metrics.requests_done);
-                let _ = p.payload.reply.send(Response {
+                in_system.fetch_sub(1, Ordering::SeqCst);
+                let _ = p.payload.reply.send(Ok(Response {
                     logits: row.to_vec(),
                     pred: out.preds[i],
                     queue_wait,
                     e2e,
-                    sim_fpga: sim_batch,
-                });
+                    sim_fpga: sim_request,
+                }));
             }
         }
         Err(err) => {
-            metrics.execute.record(t_exec.elapsed().as_secs_f64());
-            eprintln!("[server] batch failed: {err:#}");
-            for _p in &batch.items {
-                // Dropping the batch (and with it each reply Sender) closes
-                // the per-request channels — the client sees RecvError.
-                Metrics::inc(&metrics.requests_rejected);
+            // Host-observed elapsed goes to the dedicated failure track so
+            // the `execute` percentiles only ever describe successful runs.
+            metrics.failed.record(t_exec.elapsed().as_secs_f64());
+            Metrics::inc(&metrics.batches_failed);
+            let reason = format!("{err:#}");
+            eprintln!("[server] batch failed: {reason}");
+            for p in &batch.items {
+                // Degrade per-request, not per-batch-silently: every member
+                // of the failed batch gets the typed error on its channel.
+                Metrics::inc(&metrics.requests_failed);
+                in_system.fetch_sub(1, Ordering::SeqCst);
+                let _ = p
+                    .payload
+                    .reply
+                    .send(Err(ServeError::BackendFailed(reason.clone())));
             }
         }
     }

@@ -155,6 +155,18 @@ impl SimReport {
     }
 }
 
+/// Split a layer's `macs` across the three schemes from the mask's op
+/// fractions. PoT and Fixed-4 round once and clamp to what remains;
+/// Fixed-8 takes the exact remainder — so the three parts always sum to
+/// `macs`, under any adversarial rounding of the fractions (independent
+/// rounding of all three could previously over- or under-count by a few
+/// MACs per layer).
+pub fn partition_macs(macs: u64, frac_pot: f64, frac_f4: f64) -> (u64, u64, u64) {
+    let pot = ((macs as f64 * frac_pot).round() as u64).min(macs);
+    let f4 = ((macs as f64 * frac_f4).round() as u64).min(macs - pot);
+    (pot, f4, macs - pot - f4)
+}
+
 fn lane_times(
     layer_idx: usize,
     net: &Network,
@@ -166,11 +178,8 @@ fn lane_times(
     let l = &net.layers[layer_idx];
     let g = l.gemm();
     let macs = l.macs();
-    let (fp, f4, f8) = masks.op_fractions();
-    let pot_macs = (macs as f64 * fp).round() as u64;
-    let f4_macs = (macs as f64 * f4).round() as u64;
-    let f8_macs = macs - pot_macs - f4_macs.min(macs - pot_macs);
-    let f8_macs = (macs as f64 * f8).round().min(f8_macs as f64) as u64;
+    let (fp, f4, _f8) = masks.op_fractions();
+    let (pot_macs, f4_macs, f8_macs) = partition_macs(macs, fp, f4);
 
     let fixed_array = ArrayShape::near_square(
         (fixed_dsps as f64 * FIXED4_MACS_PER_DSP) as u64,
@@ -300,14 +309,14 @@ fn simulate_inter(net: &Network, cfg: &NetConfig, device: &DeviceModel) -> SimRe
         let mut busy_dsp_s = 0.0;
         for i in 0..net.layers.len() {
             let masks = &cfg.masks[i];
-            let (fp, f4, f8) = masks.op_fractions();
+            let (fp, f4, _f8) = masks.op_fractions();
             // 8-bit rows only run on the 8-bit pool, 4-bit rows on the
             // 4-bit pool; a pool of zero size stalls the config (inf).
             let macs = net.layers[i].macs();
             let g = net.layers[i].gemm();
-            let f8_macs = (macs as f64 * f8).round() as u64;
-            let f4_macs = (macs as f64 * f4).round() as u64;
-            let pot_macs = (macs as f64 * fp).round() as u64;
+            // Same exact partition as the intra-layer lanes: per-pool MACs
+            // must sum to the layer total.
+            let (pot_macs, f4_macs, f8_macs) = partition_macs(macs, fp, f4);
             let c8 = layer_cycles(
                 g,
                 f8_macs,
@@ -372,6 +381,34 @@ mod tests {
         assert_eq!(f8, 3); // round(64*0.05)
         assert_eq!(p, 39); // round(61 * 60/95)
         assert_eq!(f4, 64 - 3 - 39);
+    }
+
+    #[test]
+    fn mac_partition_is_exact_under_adversarial_rounding() {
+        // Cases where rounding all three fractions independently over- or
+        // under-counts (the pre-fix behaviour could drop MACs: e.g.
+        // macs=10, fractions 0.33/0.33/0.34 summed to 9).
+        for &(macs, fp, f4) in &[
+            (10u64, 0.33, 0.33),
+            (5, 0.5, 0.5),
+            (3, 1.0 / 3.0, 1.0 / 3.0),
+            (1, 0.999, 0.0009),
+            (7, 0.0, 0.0),
+            (7, 1.0, 0.0),
+            (1_000_003, 0.65, 0.30),
+        ] {
+            let (p, a, b) = partition_macs(macs, fp, f4);
+            assert_eq!(p + a + b, macs, "macs {macs} fp {fp} f4 {f4}");
+        }
+        // And from real mask op_fractions over ragged row counts.
+        for rows in [1usize, 3, 5, 7, 13, 64] {
+            let m = synth_masks("l", rows, ratio("60:35:5"));
+            let (fp, f4, _) = m.op_fractions();
+            for macs in [1u64, 97, 12_345] {
+                let (p, a, b) = partition_macs(macs, fp, f4);
+                assert_eq!(p + a + b, macs, "rows {rows} macs {macs}");
+            }
+        }
     }
 
     #[test]

@@ -8,21 +8,23 @@
 //! ilmpq accuracy [--steps N] [--config LABEL]       Table I accuracy rows (QAT)
 //! ilmpq train   [--steps N] [--ratio ilmpq2]        single QAT run + loss curve
 //! ilmpq serve   [--requests N] [--backend B]        serving demo (batcher + backend)
+//! ilmpq loadgen [--rate R] [--backend B]            offered-load driver (admission pipeline)
 //! ilmpq backends                                    list execution backends
 //! ilmpq info                                        artifacts + manifest summary
 //! ```
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::Result;
 use ilmpq::backend::{self, InferenceBackend};
 use ilmpq::baselines::table1::accuracy_configs;
-use ilmpq::coordinator::{ratio_search, trainer::Trainer, ServeConfig, Server};
+use ilmpq::coordinator::{loadgen, ratio_search, trainer::Trainer, ServeConfig, Server};
 use ilmpq::experiments::{accuracy, figure1, ptq, table1};
 use ilmpq::fpga::DeviceModel;
 use ilmpq::model::resnet18;
 use ilmpq::runtime::{Manifest, Runtime};
-use ilmpq::util::{Args, Rng};
+use ilmpq::util::Args;
 
 fn main() {
     let mut argv = std::env::args().skip(1);
@@ -229,6 +231,7 @@ fn run(cmd: &str) -> Result<()> {
                     ("ratio", "manifest ratio name"),
                     ("device", "FPGA-sim overlay device"),
                     ("workers", "worker threads"),
+                    ("queue-depth", "admission queue bound (default 1024)"),
                     ("backend", "execution backend (see `ilmpq backends`)"),
                     ("no-frozen!", "serve raw weights + per-request fake-quant"),
                 ],
@@ -240,17 +243,11 @@ fn run(cmd: &str) -> Result<()> {
             // `--backend qgemm` serves on `--no-default-features` builds.
             let manifest = Manifest::load(&Manifest::default_dir())?;
             let name = a.str_or("ratio", "ilmpq2").to_string();
-            let masks = manifest
-                .default_masks
-                .get(&name)
-                .ok_or_else(|| anyhow::anyhow!("unknown ratio {name}"))?
-                .clone();
-            let params = manifest.load_init_params()?;
             let frozen = !a.flag("no-frozen");
-            let be =
-                backend::create_serving(&backend_name, &manifest, params, masks, frozen)?;
+            let be = backend::create_serving(&backend_name, &manifest, &name, frozen, None)?;
             let cfg = ServeConfig {
                 workers: a.usize_or("workers", 2),
+                queue_depth: a.usize_or("queue-depth", 1024),
                 ratio_name: name,
                 device: a.str_or("device", "xc7z045").to_string(),
                 frozen,
@@ -259,25 +256,94 @@ fn run(cmd: &str) -> Result<()> {
             println!("backend: {}", be.name());
             let server = Server::start(&manifest, be, cfg)?;
             println!("serving: sim FPGA {}", server.sim.row());
-            let n = a.usize_or("requests", 512);
-            let rate = a.f64_or("rate", 2000.0);
-            let img = manifest.data.image_elems();
-            let mut rng = Rng::new(7);
-            let mut pending = Vec::new();
-            for _ in 0..n {
-                let mut image = vec![0f32; img];
-                rng.fill_normal(&mut image, 1.0);
-                pending.push(server.submit(image));
-                std::thread::sleep(std::time::Duration::from_secs_f64(rng.exp(rate)));
-            }
-            let mut ok = 0;
-            for rx in pending {
-                if rx.recv().is_ok() {
-                    ok += 1;
+            // The demo drive loop is the shared open-loop driver: same
+            // pacing, reply classification, and report as `ilmpq loadgen`.
+            let spec = loadgen::LoadSpec {
+                requests: a.usize_or("requests", 512),
+                rate: a.f64_or("rate", 2000.0),
+                malformed_frac: 0.0,
+                seed: 7,
+            };
+            let (report, metrics) = loadgen::run(server, &manifest, &spec);
+            println!("{}\n{}", report.render(), metrics.report());
+            Ok(())
+        }
+        "loadgen" => {
+            let a = Args::parse_env(
+                "ilmpq loadgen",
+                2,
+                &[
+                    ("requests", "total requests (default 512)"),
+                    ("rate", "offered load req/s (default 2000; 0 = unpaced)"),
+                    ("workers", "worker threads (default 2)"),
+                    ("queue-depth", "admission queue bound (default 1024)"),
+                    ("max-wait-ms", "batcher deadline (default 5)"),
+                    ("backend", "execution backend (default qgemm; see `ilmpq backends`)"),
+                    ("ratio", "manifest ratio name (default ilmpq2)"),
+                    ("device", "FPGA-sim overlay device (default xc7z045)"),
+                    ("threads", "backend CPU threads (0 or absent: all cores)"),
+                    ("seed", "workload seed (default 42)"),
+                    ("malformed", "fraction of malformed-length requests (default 0)"),
+                    ("synthetic!", "force the artifact-free synthetic TinyResNet"),
+                    ("out", "also write the report as JSON to this path"),
+                ],
+            );
+            let backend_name = a.str_or("backend", "qgemm").to_string();
+            backend::spec(&backend_name)?;
+            let ratio = a.str_or("ratio", "ilmpq2").to_string();
+            let seed = a.u64_or("seed", 42);
+            let threads = match a.usize_or("threads", 0) {
+                0 => None, // all cores — the documented default
+                t => Some(t),
+            };
+            // Real artifacts when present, else the synthetic fixture — so
+            // the pipeline runs end-to-end on a toolchain-only machine.
+            let (manifest, be) = if a.flag("synthetic") {
+                loadgen::synth_fixture(&backend_name, &ratio, threads, seed)?
+            } else {
+                match Manifest::load(&Manifest::default_dir()) {
+                    Ok(manifest) => {
+                        let be = backend::create_serving(
+                            &backend_name,
+                            &manifest,
+                            &ratio,
+                            true,
+                            threads,
+                        )?;
+                        (manifest, be)
+                    }
+                    Err(e) => {
+                        eprintln!(
+                            "[loadgen] no artifact manifest ({e:#}); \
+                             using the synthetic TinyResNet fixture"
+                        );
+                        loadgen::synth_fixture(&backend_name, &ratio, threads, seed)?
+                    }
                 }
+            };
+            let cfg = ServeConfig {
+                workers: a.usize_or("workers", 2),
+                max_wait: Duration::from_millis(a.u64_or("max-wait-ms", 5)),
+                queue_depth: a.usize_or("queue-depth", 1024),
+                ratio_name: ratio,
+                device: a.str_or("device", "xc7z045").to_string(),
+                ..Default::default()
+            };
+            let spec = loadgen::LoadSpec {
+                requests: a.usize_or("requests", 512),
+                rate: a.f64_or("rate", 2000.0),
+                malformed_frac: a.f64_or("malformed", 0.0),
+                seed,
+            };
+            println!("backend: {} (model {})", be.name(), manifest.model_name);
+            let server = Server::start(&manifest, be, cfg)?;
+            println!("sim-FPGA: {}", server.sim.row());
+            let (report, metrics) = loadgen::run(server, &manifest, &spec);
+            println!("{}\n{}", report.render(), metrics.report());
+            if let Some(path) = a.get("out") {
+                std::fs::write(path, report.to_json().to_string_compact())?;
+                println!("wrote {path}");
             }
-            let metrics = server.stop();
-            println!("completed {ok}/{n}\n{}", metrics.report());
             Ok(())
         }
         "backends" => {
@@ -340,6 +406,8 @@ commands:
   ptq           deterministic PTQ probe (train once, quantize each config)
   train         one QAT run with the loss curve
   serve         inference serving demo (dynamic batching, --backend NAME)
+  loadgen       open-loop offered-load driver for the admission pipeline
+                (--rate, --queue-depth, --malformed; runs artifact-free)
   backends      list the registered execution backends
   info          manifest / artifacts summary
 run `ilmpq <cmd> --help` for options.";

@@ -134,6 +134,25 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// Comma-separated number list (e.g. `--rates 500,2000,8000`); `default`
+    /// is the spec string used when the option is absent. An effectively
+    /// empty list (e.g. `--rates ,`) is an error, not a silent no-op sweep.
+    pub fn f64_list_or(&self, name: &str, default: &str) -> Vec<f64> {
+        let list: Vec<f64> = self
+            .str_or(name, default)
+            .split(',')
+            .map(str::trim)
+            .filter(|t| !t.is_empty())
+            .map(|t| {
+                t.parse().unwrap_or_else(|_| {
+                    panic!("--{name}: expected comma-separated numbers, got {t:?}")
+                })
+            })
+            .collect();
+        assert!(!list.is_empty(), "--{name}: expected at least one number");
+        list
+    }
+
     pub fn positional(&self) -> &[String] {
         &self.positional
     }
@@ -178,6 +197,23 @@ mod tests {
         assert_eq!(a.usize_or("steps", 7), 7);
         assert_eq!(a.str_or("device", "xc7z045"), "xc7z045");
         assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn f64_list_parses_with_default() {
+        let known = &[("rates", "req/s list")];
+        let a = Args::parse_from("t", &toks("--rates 500,2e3,8000,"), known).unwrap();
+        assert_eq!(a.f64_list_or("rates", "1"), vec![500.0, 2000.0, 8000.0]);
+        let a = Args::parse_from("t", &[], known).unwrap();
+        assert_eq!(a.f64_list_or("rates", "1,2"), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one number")]
+    fn f64_list_rejects_effectively_empty() {
+        let known = &[("rates", "req/s list")];
+        let a = Args::parse_from("t", &toks("--rates ,"), known).unwrap();
+        let _ = a.f64_list_or("rates", "1");
     }
 
     #[test]

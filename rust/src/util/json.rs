@@ -65,6 +65,12 @@ impl Json {
             .unwrap_or_else(|| panic!("manifest: missing key {key:?} in {self:.60?}"))
     }
 
+    /// Build an object from `(key, value)` pairs — the convenience
+    /// constructor shared by the bench/report emitters.
+    pub fn obj(entries: Vec<(&str, Json)>) -> Json {
+        Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -529,6 +535,13 @@ mod tests {
             }
             _ => a == b,
         }
+    }
+
+    #[test]
+    fn obj_builds_from_pairs() {
+        let j = Json::obj(vec![("b", Json::Num(1.0)), ("a", Json::Bool(true))]);
+        assert_eq!(j.get("a"), Some(&Json::Bool(true)));
+        assert_eq!(j.get("b").and_then(|v| v.as_f64()), Some(1.0));
     }
 
     #[test]

@@ -224,7 +224,7 @@ fn serving_end_to_end() {
             max_wait: Duration::from_millis(2),
             ratio_name: "ilmpq2".into(),
             device: "xc7z045".into(),
-            frozen: true,
+            ..Default::default()
         },
     )
     .unwrap();
@@ -236,7 +236,10 @@ fn serving_end_to_end() {
         .collect();
     let mut ok = 0;
     for rx in rxs {
-        let resp = rx.recv_timeout(Duration::from_secs(30)).expect("response");
+        let resp = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("response")
+            .expect("typed-ok reply");
         assert_eq!(resp.logits.len(), m.classes);
         assert!(resp.pred < m.classes);
         assert!(resp.sim_fpga > Duration::ZERO);

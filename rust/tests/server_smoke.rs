@@ -1,18 +1,28 @@
-//! Server smoke test on the `qgemm` backend — artifact-free and
-//! PJRT-free, so the full serving loop (router, dynamic batcher, worker
-//! pool, FPGA-sim latency overlay) is exercised by the
+//! Server smoke + admission-pipeline tests on the `qgemm` backend —
+//! artifact-free and PJRT-free, so the full serving loop (admission
+//! validation, bounded queue, router, dynamic batcher, worker pool,
+//! FPGA-sim latency overlay, typed-error replies) is exercised by the
 //! `--no-default-features` CI leg on every push.
 //!
-//! This is the acceptance check for the backend-generic server: the same
-//! `coordinator::server` that fronted PJRT now runs end-to-end over the
-//! packed-code integer path, on a machine with nothing but a Rust
-//! toolchain.
+//! The acceptance checks for the admission pipeline live here:
+//!
+//! * a malformed request (wrong length / non-finite) is rejected alone
+//!   with `ServeError::InvalidInput` while its would-be batch-mates still
+//!   receive **bit-correct** logits — the pre-pipeline behaviour let a
+//!   short image shift every later image's offset in the batch buffer;
+//! * an unpaced burst beyond `queue_depth` sheds with `QueueFull` while
+//!   accepted requests complete;
+//! * `stop()` answers every in-flight request (executed or
+//!   `ShuttingDown`) instead of dropping reply channels;
+//! * a failing backend answers every member of the failed batch with
+//!   `BackendFailed`, and the failure never pollutes the `execute`
+//!   latency percentiles.
 
 use std::sync::Arc;
 use std::time::Duration;
 
-use ilmpq::backend::{self, synth, BackendInit, InferenceBackend};
-use ilmpq::coordinator::{Metrics, ServeConfig, Server};
+use ilmpq::backend::{self, synth, BackendInit, BatchOutput, InferenceBackend};
+use ilmpq::coordinator::{Metrics, ServeConfig, ServeError, Server};
 use ilmpq::quant::Ratio;
 use ilmpq::util::Rng;
 
@@ -39,6 +49,12 @@ fn fixture(ratio_name: &str) -> (ilmpq::runtime::Manifest, Arc<dyn InferenceBack
     (m, be, rng)
 }
 
+fn normal_image(img: usize, rng: &mut Rng) -> Vec<f32> {
+    let mut image = vec![0f32; img];
+    rng.fill_normal(&mut image, 1.0);
+    image
+}
+
 #[test]
 fn serving_end_to_end_on_qgemm_without_artifacts() {
     let (m, be, mut rng) = fixture("smoke");
@@ -47,33 +63,321 @@ fn serving_end_to_end_on_qgemm_without_artifacts() {
         max_wait: Duration::from_millis(2),
         ratio_name: "smoke".into(),
         device: "xc7z045".into(),
-        frozen: true,
+        ..Default::default()
     };
     let server = Server::start(&m, be, cfg).unwrap();
     assert!(server.sim.latency_s > 0.0, "FPGA-sim overlay must resolve");
 
     let img = m.data.image_elems();
     let n = 24;
-    let rxs: Vec<_> = (0..n)
-        .map(|_| {
-            let mut image = vec![0f32; img];
-            rng.fill_normal(&mut image, 1.0);
-            server.submit(image)
-        })
-        .collect();
+    let rxs: Vec<_> = (0..n).map(|_| server.submit(normal_image(img, &mut rng))).collect();
     for rx in rxs {
-        let resp = rx.recv_timeout(Duration::from_secs(30)).expect("response");
+        let resp = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("response")
+            .expect("well-formed request must succeed");
         assert_eq!(resp.logits.len(), CLASSES);
         assert!(resp.pred < CLASSES);
         assert!(resp.logits.iter().all(|v| v.is_finite()));
-        assert!(resp.sim_fpga > Duration::ZERO, "sim overlay attached per batch");
+        assert!(resp.sim_fpga > Duration::ZERO, "sim overlay attached per request");
         assert!(resp.e2e >= resp.queue_wait);
     }
     let metrics = server.stop();
     assert_eq!(Metrics::get(&metrics.requests_done), n as u64);
-    assert_eq!(Metrics::get(&metrics.requests_rejected), 0);
+    assert_eq!(Metrics::get(&metrics.requests_invalid), 0);
+    assert_eq!(Metrics::get(&metrics.requests_shed), 0);
+    assert_eq!(Metrics::get(&metrics.requests_failed), 0);
     assert!(metrics.batch_occupancy() > 0.0);
     assert!(metrics.execute.count() > 0 && metrics.sim_fpga.count() > 0);
+    assert_eq!(metrics.failed.count(), 0);
+}
+
+#[test]
+fn malformed_request_rejected_alone_neighbors_bit_correct() {
+    let (m, be, mut rng) = fixture("adm");
+    let cfg = ServeConfig {
+        workers: 2,
+        max_wait: Duration::from_millis(2),
+        ratio_name: "adm".into(),
+        ..Default::default()
+    };
+    let server = Server::start(&m, be.clone(), cfg).unwrap();
+    let sim_per_image = server.sim.latency_s;
+    let img = m.data.image_elems();
+    let n = 16;
+    let images: Vec<Vec<f32>> = (0..n).map(|_| normal_image(img, &mut rng)).collect();
+    // Reference logits for every image through the same backend, batch 1.
+    // The packed forward is per-row deterministic, so a request's logits
+    // must be bit-identical no matter which batch the server put it in —
+    // unless a malformed neighbour shifted its offset.
+    let reference: Vec<BatchOutput> =
+        images.iter().map(|x| be.run_batch(x, 1).unwrap()).collect();
+
+    let mut rxs = Vec::new();
+    let mut bad = Vec::new();
+    for (i, image) in images.iter().enumerate() {
+        rxs.push(server.submit(image.clone()));
+        if i == n / 3 {
+            // Mid-stream malformed requests: short, long, and non-finite.
+            bad.push(server.submit(vec![0.0; img / 2]));
+            bad.push(server.submit(vec![0.0; img + 3]));
+            let mut nan = image.clone();
+            nan[5] = f32::NAN;
+            bad.push(server.submit(nan));
+        }
+    }
+    for rx in bad {
+        let resp = rx.recv_timeout(Duration::from_secs(5)).expect("typed reply");
+        assert!(
+            matches!(resp, Err(ServeError::InvalidInput(_))),
+            "malformed request must be rejected alone: {resp:?}"
+        );
+    }
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("reply")
+            .expect("well-formed neighbours must succeed");
+        assert_eq!(resp.pred, reference[i].preds[0], "request {i}: argmax corrupted");
+        assert!(
+            resp.logits
+                .iter()
+                .zip(&reference[i].logits)
+                .all(|(a, b)| a.to_bits() == b.to_bits()),
+            "request {i}: neighbour logits not bit-correct"
+        );
+        // Per-request FPGA-sim attribution: one image's latency, not the
+        // whole batch's (Duration round-trips through ns resolution).
+        assert!(
+            (resp.sim_fpga.as_secs_f64() - sim_per_image).abs() < 2e-9,
+            "sim_fpga {} vs per-image {}",
+            resp.sim_fpga.as_secs_f64(),
+            sim_per_image
+        );
+    }
+    let metrics = server.stop();
+    assert_eq!(Metrics::get(&metrics.requests_done), n as u64);
+    assert_eq!(Metrics::get(&metrics.requests_invalid), 3);
+    assert_eq!(Metrics::get(&metrics.batches_failed), 0);
+}
+
+#[test]
+fn overload_sheds_with_queue_full_while_accepted_complete() {
+    let (m, be, mut rng) = fixture("ovl");
+    let depth = 4usize;
+    let cfg = ServeConfig {
+        workers: 1,
+        max_wait: Duration::from_millis(1),
+        queue_depth: depth,
+        ratio_name: "ovl".into(),
+        ..Default::default()
+    };
+    let server = Server::start(&m, be, cfg).unwrap();
+    let img = m.data.image_elems();
+    let n = 256;
+    // Unpaced burst: submission is orders of magnitude faster than the
+    // backend, so the in-system bound must trip.
+    let rxs: Vec<_> = (0..n).map(|_| server.submit(normal_image(img, &mut rng))).collect();
+    let (mut done, mut shed) = (0u64, 0u64);
+    for rx in rxs {
+        match rx.recv_timeout(Duration::from_secs(30)).expect("typed reply") {
+            Ok(resp) => {
+                assert_eq!(resp.logits.len(), CLASSES);
+                done += 1;
+            }
+            Err(ServeError::QueueFull { depth: d }) => {
+                assert_eq!(d, depth);
+                shed += 1;
+            }
+            Err(e) => panic!("unexpected error: {e}"),
+        }
+    }
+    assert_eq!(done + shed, n as u64);
+    assert!(done >= depth as u64, "the first depth-worth must complete, got {done}");
+    assert!(shed > 0, "an unpaced burst of {n} must shed at depth {depth}");
+    let metrics = server.stop();
+    assert_eq!(Metrics::get(&metrics.requests_done), done);
+    assert_eq!(Metrics::get(&metrics.requests_shed), shed);
+    assert!(metrics.shed_rate() > 0.0);
+}
+
+#[test]
+fn stop_answers_every_in_flight_request() {
+    let (m, be, mut rng) = fixture("stp");
+    let cfg = ServeConfig {
+        workers: 2,
+        // Long deadline: stop() hits while requests still sit in the
+        // batcher, exercising the flush + ShuttingDown drain.
+        max_wait: Duration::from_millis(50),
+        ratio_name: "stp".into(),
+        ..Default::default()
+    };
+    let server = Server::start(&m, be, cfg).unwrap();
+    let img = m.data.image_elems();
+    let n = 32;
+    let rxs: Vec<_> = (0..n).map(|_| server.submit(normal_image(img, &mut rng))).collect();
+    let metrics = server.stop();
+    let (mut ok, mut shutdown) = (0u64, 0u64);
+    for rx in rxs {
+        match rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("every in-flight request must be answered, not dropped")
+        {
+            Ok(_) => ok += 1,
+            Err(ServeError::ShuttingDown) => shutdown += 1,
+            Err(e) => panic!("unexpected error: {e}"),
+        }
+    }
+    assert_eq!(ok + shutdown, n as u64);
+    assert_eq!(
+        Metrics::get(&metrics.requests_done) + Metrics::get(&metrics.requests_shutdown),
+        n as u64
+    );
+}
+
+/// A backend whose every batch errors — exercises the failed-batch path.
+struct FailingBackend;
+
+impl InferenceBackend for FailingBackend {
+    fn name(&self) -> &str {
+        "failing"
+    }
+
+    fn supports_frozen(&self) -> bool {
+        true
+    }
+
+    fn run_batch(&self, _images: &[f32], _batch: usize) -> anyhow::Result<BatchOutput> {
+        anyhow::bail!("injected backend failure")
+    }
+}
+
+/// A backend that panics — the worker must contain it, answer every caller,
+/// and not leak admission slots.
+struct PanickingBackend;
+
+impl InferenceBackend for PanickingBackend {
+    fn name(&self) -> &str {
+        "panicking"
+    }
+
+    fn supports_frozen(&self) -> bool {
+        true
+    }
+
+    fn run_batch(&self, _images: &[f32], _batch: usize) -> anyhow::Result<BatchOutput> {
+        panic!("injected backend panic")
+    }
+}
+
+/// A backend returning a degenerate self-consistent output (0 classes,
+/// empty logits) — must be caught by the manifest-side shape validation.
+struct DegenerateBackend;
+
+impl InferenceBackend for DegenerateBackend {
+    fn name(&self) -> &str {
+        "degenerate"
+    }
+
+    fn supports_frozen(&self) -> bool {
+        true
+    }
+
+    fn run_batch(&self, _images: &[f32], batch: usize) -> anyhow::Result<BatchOutput> {
+        Ok(BatchOutput {
+            logits: Vec::new(),
+            preds: vec![0; batch],
+            classes: 0,
+            elapsed: Duration::ZERO,
+        })
+    }
+}
+
+#[test]
+fn failed_batches_answer_every_caller_with_typed_error() {
+    let (m, _be, mut rng) = fixture("fail");
+    let be: Arc<dyn InferenceBackend> = Arc::new(FailingBackend);
+    let cfg = ServeConfig {
+        workers: 2,
+        max_wait: Duration::from_millis(1),
+        ratio_name: "fail".into(),
+        ..Default::default()
+    };
+    let server = Server::start(&m, be, cfg).unwrap();
+    let img = m.data.image_elems();
+    let n = 12;
+    let rxs: Vec<_> = (0..n).map(|_| server.submit(normal_image(img, &mut rng))).collect();
+    for rx in rxs {
+        match rx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("failed batch must answer, not drop channels")
+        {
+            Err(ServeError::BackendFailed(msg)) => {
+                assert!(msg.contains("injected"), "{msg}");
+            }
+            other => panic!("expected BackendFailed, got {other:?}"),
+        }
+    }
+    let metrics = server.stop();
+    assert_eq!(Metrics::get(&metrics.requests_failed), n as u64);
+    assert!(Metrics::get(&metrics.batches_failed) >= 1);
+    // Failures must not pollute the execute percentiles: they land in the
+    // dedicated `failed` track.
+    assert_eq!(metrics.execute.count(), 0);
+    assert!(metrics.failed.count() >= 1);
+    assert_eq!(Metrics::get(&metrics.requests_done), 0);
+}
+
+/// Shared harness for the containment backends: every caller must get a
+/// typed `BackendFailed` whose reason contains `expect_msg`, with no leaked
+/// admission slots (a fresh round after the failures still gets answers).
+fn assert_contained(be: Arc<dyn InferenceBackend>, ratio: &str, expect_msg: &str) {
+    let (m, _unused, mut rng) = fixture(ratio);
+    let cfg = ServeConfig {
+        workers: 2,
+        max_wait: Duration::from_millis(1),
+        // Tight bound: a single leaked batch of slots would wedge round 2
+        // into permanent QueueFull.
+        queue_depth: 4,
+        ratio_name: ratio.into(),
+        ..Default::default()
+    };
+    let server = Server::start(&m, be, cfg).unwrap();
+    let img = m.data.image_elems();
+    for round in 0..2 {
+        let rxs: Vec<_> =
+            (0..4).map(|_| server.submit(normal_image(img, &mut rng))).collect();
+        let mut failed = 0;
+        for rx in rxs {
+            match rx
+                .recv_timeout(Duration::from_secs(10))
+                .expect("contained failure must answer, not drop or wedge")
+            {
+                Err(ServeError::BackendFailed(msg)) => {
+                    assert!(msg.contains(expect_msg), "round {round}: {msg}");
+                    failed += 1;
+                }
+                Err(ServeError::QueueFull { .. }) => {
+                    panic!("round {round}: admission slots leaked into QueueFull")
+                }
+                other => panic!("round {round}: expected BackendFailed, got {other:?}"),
+            }
+        }
+        assert!(failed > 0, "round {round} produced no typed failures");
+    }
+    let metrics = server.stop();
+    assert_eq!(Metrics::get(&metrics.requests_done), 0);
+    assert!(Metrics::get(&metrics.batches_failed) >= 2);
+}
+
+#[test]
+fn backend_panic_is_contained_without_leaking_admission_slots() {
+    assert_contained(Arc::new(PanickingBackend), "pnc", "injected backend panic");
+}
+
+#[test]
+fn degenerate_backend_output_is_rejected_not_served() {
+    assert_contained(Arc::new(DegenerateBackend), "dgn", "malformed output");
 }
 
 #[test]
