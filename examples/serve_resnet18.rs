@@ -11,15 +11,22 @@
 //! xla_extension needed). The Table-I context (what the same config does on
 //! the full ResNet-18 on both boards) is printed at the end.
 //!
+//! With `--listen ADDR` the same pipeline is exposed over the dependency-
+//! free HTTP/1.1 front end instead of the in-process client: `POST
+//! /v1/infer` takes `{"image": [f32, ...]}` and the typed admission errors
+//! map to 400/429/500/503 (drive it with `ilmpq loadgen --url`).
+//!
 //! ```sh
 //! cargo run --release --example serve_resnet18 -- --rate 3000 --requests 2000
 //! cargo run --no-default-features --example serve_resnet18 -- --backend qgemm
+//! cargo run --no-default-features --example serve_resnet18 -- \
+//!     --backend qgemm --listen 127.0.0.1:8080
 //! ```
 
 use std::time::Duration;
 
 use ilmpq::backend::{self, InferenceBackend};
-use ilmpq::coordinator::{ServeConfig, Server};
+use ilmpq::coordinator::{HttpConfig, HttpServer, ServeConfig, Server};
 use ilmpq::experiments::table1;
 use ilmpq::model::resnet18;
 use ilmpq::runtime::Manifest;
@@ -39,6 +46,7 @@ fn main() -> anyhow::Result<()> {
             ("queue-depth", "admission queue bound (default 1024)"),
             ("backend", "execution backend: pjrt|qgemm|float (default pjrt)"),
             ("no-frozen!", "disable the pre-quantized-weights fast path"),
+            ("listen", "expose the pipeline over HTTP on this address instead"),
         ],
     );
     let backend_name = args.str_or("backend", "pjrt").to_string();
@@ -59,6 +67,21 @@ fn main() -> anyhow::Result<()> {
     println!("backend: {}", be.name());
     let server = Server::start(&manifest, be, cfg)?;
     println!("sim-FPGA model for this config: {}", server.sim.row());
+
+    if let Some(addr) = args.get("listen") {
+        let mut front = HttpServer::start(
+            server,
+            &manifest,
+            HttpConfig { addr: addr.to_string(), ..Default::default() },
+        )?;
+        println!(
+            "listening on http://{} — POST /v1/infer, GET /v1/healthz, \
+             GET /v1/metrics (drive with `ilmpq loadgen --url`)",
+            front.local_addr()
+        );
+        front.wait();
+        return Ok(());
+    }
 
     let n = args.usize_or("requests", 1024);
     let rate = args.f64_or("rate", 2000.0);

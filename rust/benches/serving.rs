@@ -9,16 +9,22 @@
 //! `make artifacts`: `--no-default-features` builds and runs it, so the CI
 //! `serving-bench` job measures it on every push.
 //!
+//! A second sweep re-runs the same workload **over the wire**: the HTTP/1.1
+//! front end (`coordinator::http`) on a loopback socket, driven by the
+//! remote load generator (`loadgen::run_remote`) — so the JSON records both
+//! the in-process pipeline cost and the full network-path cost (parse +
+//! socket round-trip) side by side.
+//!
 //! Writes machine-readable results to `BENCH_serving.json` at the repo root.
 //!
 //! ```sh
 //! cargo bench --no-default-features --bench serving \
-//!     [-- --rates 500,2000,8000 --requests 512 --queue-depth 256]
+//!     [-- --rates 500,2000,8000 --requests 512 --queue-depth 256 --skip-wire]
 //! ```
 
 use std::time::Duration;
 
-use ilmpq::coordinator::{loadgen, ServeConfig, Server};
+use ilmpq::coordinator::{loadgen, HttpConfig, HttpServer, ServeConfig, Server};
 use ilmpq::util::{Args, Json};
 
 fn main() -> anyhow::Result<()> {
@@ -34,6 +40,13 @@ fn main() -> anyhow::Result<()> {
             ("backend", "execution backend (default qgemm)"),
             ("seed", "workload seed (default 42)"),
             ("out", "output JSON path (default: repo-root BENCH_serving.json)"),
+            ("conns", "client connections for the over-the-wire sweep (default 8)"),
+            (
+                "http-workers",
+                "HTTP handler threads for the over-the-wire sweep (default 16; \
+                 must be >= conns or starved connections distort tail latency)",
+            ),
+            ("skip-wire!", "skip the over-the-wire (HTTP loopback) sweep"),
         ],
     );
     let rates = a.f64_list_or("rates", "500,2000,8000");
@@ -102,6 +115,63 @@ fn main() -> anyhow::Result<()> {
         points.push(report.to_json());
     }
 
+    // Over-the-wire sweep: identical workload, but spoken as HTTP/1.1 over
+    // a loopback socket through the network front end. Handlers must cover
+    // every concurrent keep-alive connection (each handler owns one until
+    // it closes), or the surplus connections starve and pollute the p99.
+    let conns = a.usize_or("conns", 8);
+    let http_workers = a.usize_or("http-workers", 16);
+    let mut wire_points = Vec::new();
+    if !a.flag("skip-wire") {
+        println!(
+            "\n== same workload over the HTTP/1.1 front end (loopback, \
+             {conns} client connections, {http_workers} handler threads) =="
+        );
+        for &rate in &rates {
+            let (m, be) =
+                loadgen::synth_fixture(&backend_name, "bench", threads, seed)?;
+            let cfg = ServeConfig {
+                workers,
+                max_wait: Duration::from_millis(2),
+                queue_depth,
+                ratio_name: "bench".into(),
+                device: "xc7z045".into(),
+                ..Default::default()
+            };
+            let server = Server::start(&m, be, cfg)?;
+            let front = HttpServer::start(
+                server,
+                &m,
+                HttpConfig {
+                    addr: "127.0.0.1:0".into(),
+                    workers: http_workers,
+                    ..Default::default()
+                },
+            )?;
+            let url = format!("http://{}", front.local_addr());
+            let spec = loadgen::LoadSpec { requests, rate, malformed_frac: 0.0, seed };
+            let (report, _server_metrics) = loadgen::run_remote(&url, &spec, conns)?;
+            front.stop();
+            println!(
+                "wire rate {:>7.0} req/s (achieved {:>6.0}): done {:>4}/{} \
+                 shed {:>4}, slow {:>3}, lost {:>3}, server e2e p50 {:>8.3} ms \
+                 p99 {:>8.3} ms, client rtt p99 {:>8.3} ms, goodput {:>6.0} req/s",
+                rate,
+                report.achieved_rate,
+                report.done,
+                report.requests,
+                report.shed,
+                report.slow,
+                report.lost,
+                report.e2e.p50 * 1e3,
+                report.e2e.p99 * 1e3,
+                report.client_rtt.p99 * 1e3,
+                report.goodput_rps,
+            );
+            wire_points.push(report.to_json());
+        }
+    }
+
     let doc = Json::obj(vec![
         ("bench", Json::Str("serving".into())),
         ("status", Json::Str("measured".into())),
@@ -119,6 +189,28 @@ fn main() -> anyhow::Result<()> {
         // 0 = all cores (unbounded pool), mirroring the CLI convention.
         ("threads", Json::Num(threads.unwrap_or(0) as f64)),
         ("points", Json::Arr(points)),
+        (
+            "wire",
+            Json::obj(vec![
+                ("transport", Json::Str("http/1.1 loopback".into())),
+                ("conns", Json::Num(conns as f64)),
+                ("http_workers", Json::Num(http_workers as f64)),
+                (
+                    "note",
+                    Json::Str(
+                        "e2e/queue_wait are server-reported per-request timings \
+                         (same definition as the in-process points); client_rtt \
+                         adds client-side connection queueing. Delivery is \
+                         bounded by `conns` synchronous connections, so rates \
+                         beyond conns/round-trip arrive late (visible in \
+                         client_rtt) instead of shedding like the in-process \
+                         sweep."
+                            .into(),
+                    ),
+                ),
+                ("points", Json::Arr(wire_points)),
+            ]),
+        ),
     ]);
     std::fs::write(&out_path, doc.to_string_compact())
         .unwrap_or_else(|e| panic!("write {out_path}: {e}"));

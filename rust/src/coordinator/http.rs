@@ -1,0 +1,1048 @@
+//! The network front door: a minimal, dependency-free HTTP/1.1 JSON server
+//! (plus the matching client) over the serving admission pipeline.
+//!
+//! The sandbox has no tokio/hyper, so this mirrors the thread architecture
+//! of [`super::server`]: one accept thread feeds a small pool of connection
+//! handler threads over a channel; each handler drives one keep-alive
+//! connection at a time with blocking reads under a short poll timeout (so
+//! a stalled or malicious client can never wedge a handler — it times out,
+//! is answered, and the handler moves on).
+//!
+//! ```text
+//!   TCP clients ──▶ accept thread ──TcpStream──▶ handler 0..N-1
+//!                                                 │ parse HTTP/1.1
+//!                                                 │ Server::submit
+//!                                                 ▼
+//!                                       admission pipeline (server.rs)
+//! ```
+//!
+//! Routes:
+//!
+//! * `POST /v1/infer` with body `{"image": [f32, ...]}` → `200` with
+//!   `{"pred", "logits", "queue_wait_s", "e2e_s", "sim_fpga_s"}`. The typed
+//!   [`ServeError`] maps onto HTTP semantics:
+//!   `InvalidInput → 400`, `QueueFull → 429`, `BackendFailed → 500`,
+//!   `ShuttingDown → 503` (plus `504` when the reply outruns
+//!   [`HttpConfig::reply_timeout`]). Admission still owns all request
+//!   validation — the HTTP layer only decodes JSON and lets `submit`
+//!   reject bad geometry, so the two ingresses (in-process and network)
+//!   can never drift.
+//! * `GET /v1/healthz` → `200` with the model geometry
+//!   (`image_elems`/`classes`), which is how the remote load generator
+//!   learns what to send.
+//! * `GET /v1/metrics` → `200` with [`Metrics::to_json`] (counters,
+//!   occupancy, shed rate, latency summaries).
+//!
+//! Protocol scope (documented, not accidental): HTTP/1.1 with
+//! `Content-Length` bodies and keep-alive, `Expect: 100-continue`
+//! honored; chunked transfer encoding is answered `501`. That is exactly
+//! what the bundled client, curl, and every mainstream HTTP client emit
+//! for JSON POSTs.
+//!
+//! [`HttpClient`]/[`HttpTarget`] are the client half used by
+//! `loadgen --url`, the over-the-wire section of `benches/serving.rs`, and
+//! the `http_smoke` integration tests.
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::metrics::Metrics;
+use super::server::{ServeError, Server};
+use crate::runtime::Manifest;
+use crate::util::Json;
+
+/// Read-poll granularity: handlers block at most this long per `read()`
+/// before re-checking shutdown / idle budgets. This is the bound on how
+/// long a garbage or stalled request can hold a handler, and on how stale
+/// the shutdown flag can look to an idle keep-alive connection.
+const READ_POLL: Duration = Duration::from_millis(250);
+
+/// Cap on the request-line + header block; beyond this the request is
+/// answered `431` and the connection closed.
+const MAX_HEAD: usize = 16 * 1024;
+
+/// HTTP front-end configuration.
+#[derive(Debug, Clone)]
+pub struct HttpConfig {
+    /// Bind address, e.g. `127.0.0.1:8080` (`:0` picks an ephemeral port —
+    /// read it back from [`HttpServer::local_addr`]).
+    pub addr: String,
+    /// Connection handler threads. Each drives one connection at a time
+    /// until it closes or idles out, so size this **at or above the number
+    /// of concurrent keep-alive client connections** — excess connections
+    /// queue unread until a handler frees, which shows up as tail latency,
+    /// not errors. (Admission's `queue_depth` still bounds the pipeline
+    /// behind the handlers.) Parked handlers are cheap OS threads.
+    pub workers: usize,
+    /// How long a handler waits for the admission pipeline's reply before
+    /// answering `504`. The reply still arrives on the channel later and is
+    /// dropped — the request itself was already admitted and counted.
+    pub reply_timeout: Duration,
+    /// How long a keep-alive connection may sit idle between requests
+    /// before the handler closes it.
+    pub idle_timeout: Duration,
+    /// Total time allowed to receive one request (first byte → full body).
+    /// This is the anti-wedging bound: a stalled or drip-feeding client is
+    /// answered `408` and disconnected when it expires, while transient
+    /// stalls longer than one read poll (routine on real links) are
+    /// tolerated within it.
+    pub request_timeout: Duration,
+    /// Largest accepted request body; beyond it the request is answered
+    /// `413` and the connection closed.
+    pub max_body: usize,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig {
+            addr: "127.0.0.1:8080".into(),
+            workers: 8,
+            reply_timeout: Duration::from_secs(60),
+            idle_timeout: Duration::from_secs(15),
+            request_timeout: Duration::from_secs(10),
+            max_body: 4 * 1024 * 1024,
+        }
+    }
+}
+
+/// Model geometry advertised on `/v1/healthz` (and used to size the
+/// expected request) — captured from the manifest at start.
+struct ModelInfo {
+    model: String,
+    image_elems: usize,
+    classes: usize,
+}
+
+/// Handle to a running HTTP front end. Owns the [`Server`] behind it:
+/// [`HttpServer::stop`] tears down the network side first (no new
+/// submissions), then gracefully stops the admission pipeline.
+pub struct HttpServer {
+    server: Option<Arc<Server>>,
+    local_addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    handlers: Vec<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `cfg.addr` and start the accept + handler threads over a
+    /// running `server`. `manifest` supplies the geometry advertised on
+    /// `/v1/healthz`.
+    pub fn start(server: Server, manifest: &Manifest, cfg: HttpConfig) -> Result<HttpServer> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .map_err(|e| anyhow::anyhow!("bind {}: {e}", cfg.addr))?;
+        let local_addr = listener.local_addr()?;
+        let server = Arc::new(server);
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let info = Arc::new(ModelInfo {
+            model: manifest.model_name.clone(),
+            image_elems: manifest.data.image_elems(),
+            classes: manifest.classes,
+        });
+        let cfg = Arc::new(cfg);
+
+        let (conn_tx, conn_rx) = channel::<TcpStream>();
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let mut handlers = Vec::new();
+        for _ in 0..cfg.workers.max(1) {
+            let server = server.clone();
+            let shutdown = shutdown.clone();
+            let conn_rx = conn_rx.clone();
+            let cfg = cfg.clone();
+            let info = info.clone();
+            handlers.push(std::thread::spawn(move || loop {
+                // Shared-receiver pool, same shape as the batch workers in
+                // server.rs: holding the mutex across recv is the handoff.
+                let stream = {
+                    let rx = conn_rx.lock().unwrap();
+                    rx.recv()
+                };
+                match stream {
+                    Ok(s) => handle_connection(&server, &info, &cfg, &shutdown, s),
+                    Err(_) => return, // accept thread gone: no more work
+                }
+            }));
+        }
+
+        let accept = {
+            let shutdown = shutdown.clone();
+            std::thread::spawn(move || loop {
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        if shutdown.load(Ordering::SeqCst) {
+                            // stop()'s wake connection (or a straggler
+                            // racing it): drop it and exit, taking conn_tx
+                            // down so the handlers drain out.
+                            return;
+                        }
+                        if conn_tx.send(stream).is_err() {
+                            return;
+                        }
+                    }
+                    Err(_) => {
+                        if shutdown.load(Ordering::SeqCst) {
+                            return;
+                        }
+                        // Transient accept failure (EMFILE, aborted
+                        // handshake): don't spin on it.
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                }
+            })
+        };
+
+        Ok(HttpServer {
+            server: Some(server),
+            local_addr,
+            shutdown,
+            accept: Some(accept),
+            handlers,
+        })
+    }
+
+    /// The bound address (resolves `:0` to the actual ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// The admission pipeline behind this front end (e.g. to
+    /// [`Server::begin_shutdown`] it and watch 503s flow while the HTTP
+    /// side stays up).
+    pub fn server(&self) -> &Server {
+        self.server.as_ref().expect("server present until stop()")
+    }
+
+    /// Block until the front end exits — the `ilmpq serve --listen`
+    /// foreground mode (the accept loop only exits on [`HttpServer::stop`]
+    /// from another thread or a dead listener).
+    pub fn wait(&mut self) {
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+    }
+
+    /// Tear down: stop accepting, drain the handler pool, then gracefully
+    /// stop the admission pipeline (which answers everything in flight).
+    /// Bounded by roughly [`READ_POLL`] + the longest in-flight request.
+    pub fn stop(mut self) -> Arc<Metrics> {
+        self.teardown().expect("first teardown returns the metrics")
+    }
+
+    /// The shared teardown behind [`HttpServer::stop`] and `Drop`.
+    /// Idempotent: returns `None` when already torn down.
+    fn teardown(&mut self) -> Option<Arc<Metrics>> {
+        let server = self.server.take()?;
+        self.shutdown.store(true, Ordering::SeqCst);
+        // The accept thread is parked in accept(): unblock it with a
+        // throwaway connection to ourselves (it sees the flag and exits;
+        // if the listener is already dead the error path exits too). A
+        // wildcard bind (0.0.0.0 / ::) is not a connectable address — wake
+        // through loopback on the same port instead.
+        let mut wake = self.local_addr;
+        if wake.ip().is_unspecified() {
+            wake.set_ip(match wake.ip() {
+                std::net::IpAddr::V4(_) => {
+                    std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST)
+                }
+                std::net::IpAddr::V6(_) => {
+                    std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST)
+                }
+            });
+        }
+        let _ = TcpStream::connect(wake);
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        // conn_tx died with the accept thread: handlers finish their
+        // current connection (the flag caps that at one more response) and
+        // drain out on the dead channel.
+        for h in self.handlers.drain(..) {
+            let _ = h.join();
+        }
+        Some(match Arc::try_unwrap(server) {
+            Ok(server) => server.stop(),
+            // Unreachable — every clone lived in the threads joined above —
+            // but a teardown path must never panic: degrade to a drain.
+            Err(server) => {
+                server.begin_shutdown();
+                server.metrics.clone()
+            }
+        })
+    }
+}
+
+impl Drop for HttpServer {
+    /// An `HttpServer` dropped without [`HttpServer::stop`] (an error-path
+    /// `?`, a panic unwind) must not leak the accept thread, the handler
+    /// pool, the bound port, or a still-running admission pipeline.
+    fn drop(&mut self) {
+        let _ = self.teardown();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Connection handling (server side)
+// ---------------------------------------------------------------------------
+
+/// One parsed request.
+struct HttpRequest {
+    method: String,
+    path: String,
+    keep_alive: bool,
+    body: Vec<u8>,
+}
+
+/// What one attempt to read a request produced.
+enum ReadOutcome {
+    Request(HttpRequest),
+    /// Peer closed (or the socket errored) with no request in progress.
+    Closed,
+    /// Read poll expired with no request in progress (idle keep-alive).
+    Idle,
+    /// Protocol violation: answer `(status, message)` and close.
+    Bad(u16, String),
+}
+
+enum ReadMore {
+    Data,
+    Eof,
+    Timeout,
+    Gone,
+}
+
+/// A connection with its accumulation buffer (bytes read past the end of
+/// one request belong to the next — keep-alive pipelining).
+struct Conn {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl Conn {
+    fn read_more(&mut self) -> ReadMore {
+        let mut chunk = [0u8; 4096];
+        match self.stream.read(&mut chunk) {
+            Ok(0) => ReadMore::Eof,
+            Ok(n) => {
+                self.buf.extend_from_slice(&chunk[..n]);
+                ReadMore::Data
+            }
+            Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {
+                ReadMore::Timeout
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => ReadMore::Data,
+            Err(_) => ReadMore::Gone,
+        }
+    }
+
+    /// Read and parse one request off the connection. Blocking reads poll
+    /// at `READ_POLL` granularity (so the caller's shutdown/idle checks
+    /// stay fresh); `request_timeout` is the *cumulative* budget for
+    /// receiving the whole request once its first byte is buffered — a
+    /// single slow poll is tolerated (real links stall for >250ms
+    /// routinely), while a stalled or drip-feeding request is answered
+    /// `408` when the budget expires, so it can never wedge a handler.
+    fn read_request(&mut self, max_body: usize, request_timeout: Duration) -> ReadOutcome {
+        let mut deadline: Option<Instant> = None;
+        // Accumulate the header block.
+        let head_end = loop {
+            if let Some(pos) = find_subsequence(&self.buf, b"\r\n\r\n") {
+                break pos;
+            }
+            if self.buf.len() > MAX_HEAD {
+                return ReadOutcome::Bad(431, "header block too large".into());
+            }
+            if deadline.is_none() && !self.buf.is_empty() {
+                deadline = Some(Instant::now() + request_timeout);
+            }
+            if deadline.is_some_and(|d| Instant::now() >= d) {
+                return ReadOutcome::Bad(
+                    408,
+                    "request not completed within the request timeout".into(),
+                );
+            }
+            match self.read_more() {
+                ReadMore::Data => {}
+                ReadMore::Eof => {
+                    return if self.buf.is_empty() {
+                        ReadOutcome::Closed
+                    } else {
+                        ReadOutcome::Bad(400, "connection closed mid-request".into())
+                    };
+                }
+                ReadMore::Timeout => {
+                    if self.buf.is_empty() {
+                        return ReadOutcome::Idle;
+                    }
+                    // In-request stall: keep polling, the deadline governs.
+                }
+                ReadMore::Gone => return ReadOutcome::Closed,
+            }
+        };
+        let head = match std::str::from_utf8(&self.buf[..head_end]) {
+            Ok(h) => h.to_string(),
+            Err(_) => return ReadOutcome::Bad(400, "non-UTF-8 header block".into()),
+        };
+        let mut lines = head.split("\r\n");
+        let request_line = lines.next().unwrap_or("");
+        let mut parts = request_line.split(' ');
+        let (method, path) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+            (Some(m), Some(p), Some(v), None)
+                if !m.is_empty() && p.starts_with('/') && v.starts_with("HTTP/1.") =>
+            {
+                (m.to_string(), p.to_string())
+            }
+            _ => {
+                return ReadOutcome::Bad(
+                    400,
+                    format!("malformed request line {request_line:?}"),
+                )
+            }
+        };
+        let http_11 = request_line.ends_with("HTTP/1.1");
+        let mut content_length = 0usize;
+        let mut keep_alive = http_11;
+        let mut expect_continue = false;
+        for line in lines {
+            let Some((name, value)) = line.split_once(':') else {
+                return ReadOutcome::Bad(400, format!("malformed header line {line:?}"));
+            };
+            let value = value.trim();
+            match name.trim().to_ascii_lowercase().as_str() {
+                "content-length" => match value.parse::<usize>() {
+                    Ok(n) => content_length = n,
+                    Err(_) => {
+                        return ReadOutcome::Bad(
+                            400,
+                            format!("bad content-length {value:?}"),
+                        )
+                    }
+                },
+                "connection" => {
+                    let v = value.to_ascii_lowercase();
+                    if v.split(',').any(|t| t.trim() == "close") {
+                        keep_alive = false;
+                    } else if v.split(',').any(|t| t.trim() == "keep-alive") {
+                        keep_alive = true;
+                    }
+                }
+                "expect" => {
+                    if value.eq_ignore_ascii_case("100-continue") {
+                        expect_continue = true;
+                    }
+                }
+                "transfer-encoding" => {
+                    return ReadOutcome::Bad(
+                        501,
+                        "chunked transfer encoding unsupported; send content-length".into(),
+                    );
+                }
+                _ => {}
+            }
+        }
+        if content_length > max_body {
+            return ReadOutcome::Bad(
+                413,
+                format!("body of {content_length} bytes exceeds the {max_body}-byte limit"),
+            );
+        }
+        let body_start = head_end + 4;
+        if expect_continue
+            && self.buf.len() < body_start + content_length
+            && self.stream.write_all(b"HTTP/1.1 100 Continue\r\n\r\n").is_err()
+        {
+            return ReadOutcome::Closed;
+        }
+        // The header bytes armed the deadline already unless the whole
+        // request arrived in one read — arm it for the body remainder.
+        let deadline = deadline.unwrap_or_else(|| Instant::now() + request_timeout);
+        while self.buf.len() < body_start + content_length {
+            if Instant::now() >= deadline {
+                return ReadOutcome::Bad(
+                    408,
+                    "body not completed within the request timeout".into(),
+                );
+            }
+            match self.read_more() {
+                ReadMore::Data => {}
+                ReadMore::Eof => {
+                    return ReadOutcome::Bad(400, "connection closed mid-body".into())
+                }
+                ReadMore::Timeout => {} // in-request stall: deadline governs
+                ReadMore::Gone => return ReadOutcome::Closed,
+            }
+        }
+        let body = self.buf[body_start..body_start + content_length].to_vec();
+        self.buf.drain(..body_start + content_length);
+        ReadOutcome::Request(HttpRequest { method, path, keep_alive, body })
+    }
+}
+
+fn find_subsequence(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+fn handle_connection(
+    server: &Server,
+    info: &ModelInfo,
+    cfg: &HttpConfig,
+    shutdown: &AtomicBool,
+    stream: TcpStream,
+) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(READ_POLL));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
+    let mut conn = Conn { stream, buf: Vec::new() };
+    let mut idle_deadline = Instant::now() + cfg.idle_timeout;
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        match conn.read_request(cfg.max_body, cfg.request_timeout) {
+            ReadOutcome::Request(req) => {
+                let keep = req.keep_alive && !shutdown.load(Ordering::SeqCst);
+                let (status, body) = route(server, info, cfg, &req);
+                if write_response(&mut conn.stream, status, &body, keep).is_err() || !keep {
+                    return;
+                }
+                idle_deadline = Instant::now() + cfg.idle_timeout;
+            }
+            ReadOutcome::Closed => return,
+            ReadOutcome::Idle => {
+                if Instant::now() >= idle_deadline {
+                    return;
+                }
+            }
+            ReadOutcome::Bad(status, msg) => {
+                // Best-effort answer; the connection closes either way, so
+                // a half-broken peer can't wedge the handler.
+                let body = err_body(&msg, protocol_kind(status));
+                let _ = write_response(&mut conn.stream, status, &body, false);
+                // Closing with unread bytes in the receive buffer can RST
+                // the connection and destroy the response before the peer
+                // reads it (classic for a 413 racing a large in-flight
+                // body). Half-close the write side and briefly drain what
+                // is still arriving so the rejection stays observable.
+                let _ = conn.stream.shutdown(std::net::Shutdown::Write);
+                let drain_deadline = Instant::now() + Duration::from_millis(500);
+                let mut sink = [0u8; 4096];
+                while Instant::now() < drain_deadline {
+                    match conn.stream.read(&mut sink) {
+                        Ok(0) | Err(_) => break,
+                        Ok(_) => {}
+                    }
+                }
+                return;
+            }
+        }
+    }
+}
+
+/// Machine-readable `kind` for protocol-level rejections, so consumers
+/// switching on the field (as the smoke tests do for the pipeline kinds)
+/// can tell a timeout from a size limit from a malformed request.
+fn protocol_kind(status: u16) -> &'static str {
+    match status {
+        408 => "request_timeout",
+        413 => "payload_too_large",
+        431 => "header_too_large",
+        501 => "not_implemented",
+        _ => "bad_request",
+    }
+}
+
+fn err_body(msg: &str, kind: &str) -> String {
+    Json::obj(vec![
+        ("error", Json::Str(msg.to_string())),
+        ("kind", Json::Str(kind.to_string())),
+    ])
+    .to_string_compact()
+}
+
+fn route(server: &Server, info: &ModelInfo, cfg: &HttpConfig, req: &HttpRequest) -> (u16, String) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/v1/healthz") => (
+            200,
+            Json::obj(vec![
+                ("status", Json::Str("ok".into())),
+                ("model", Json::Str(info.model.clone())),
+                ("image_elems", Json::Num(info.image_elems as f64)),
+                ("classes", Json::Num(info.classes as f64)),
+            ])
+            .to_string_compact(),
+        ),
+        ("GET", "/v1/metrics") => (200, server.metrics.to_json().to_string_compact()),
+        ("POST", "/v1/infer") => infer(server, cfg, &req.body),
+        (_, "/v1/healthz" | "/v1/metrics" | "/v1/infer") => (
+            405,
+            err_body(
+                &format!("method {} not allowed on {}", req.method, req.path),
+                "method_not_allowed",
+            ),
+        ),
+        _ => (404, err_body(&format!("unknown path {}", req.path), "not_found")),
+    }
+}
+
+fn infer(server: &Server, cfg: &HttpConfig, body: &[u8]) -> (u16, String) {
+    let text = match std::str::from_utf8(body) {
+        Ok(t) => t,
+        Err(_) => return (400, err_body("body is not UTF-8", "bad_request")),
+    };
+    let json = match Json::parse(text) {
+        Ok(j) => j,
+        Err(e) => return (400, err_body(&format!("body is not JSON: {e}"), "bad_request")),
+    };
+    let Some(arr) = json.get("image").and_then(Json::as_arr) else {
+        return (
+            400,
+            err_body(
+                "body must be a JSON object with an \"image\" array of numbers",
+                "bad_request",
+            ),
+        );
+    };
+    let mut image = Vec::with_capacity(arr.len());
+    for (i, v) in arr.iter().enumerate() {
+        match v.as_f64() {
+            // f64 -> f32 may overflow to ±inf for huge JSON numbers; the
+            // admission finiteness scan rejects those as InvalidInput.
+            Some(x) => image.push(x as f32),
+            None => {
+                return (400, err_body(&format!("image[{i}] is not a number"), "bad_request"))
+            }
+        }
+    }
+    let rx = server.submit(image);
+    match rx.recv_timeout(cfg.reply_timeout) {
+        Ok(Ok(resp)) => (
+            200,
+            Json::obj(vec![
+                ("pred", Json::Num(resp.pred as f64)),
+                (
+                    "logits",
+                    Json::Arr(resp.logits.iter().map(|&v| Json::Num(v as f64)).collect()),
+                ),
+                ("queue_wait_s", Json::Num(resp.queue_wait.as_secs_f64())),
+                ("e2e_s", Json::Num(resp.e2e.as_secs_f64())),
+                ("sim_fpga_s", Json::Num(resp.sim_fpga.as_secs_f64())),
+            ])
+            .to_string_compact(),
+        ),
+        Ok(Err(e)) => serve_error_response(&e),
+        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => (
+            504,
+            err_body("timed out waiting for the batch pipeline's reply", "reply_timeout"),
+        ),
+        // The pipeline promises this never happens (every admitted request
+        // is answered); surface it as a 500 rather than hanging.
+        Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => (
+            500,
+            err_body("reply channel closed without an answer", "reply_lost"),
+        ),
+    }
+}
+
+/// The pinned [`ServeError`] → HTTP status mapping.
+fn serve_error_response(e: &ServeError) -> (u16, String) {
+    let (status, kind) = match e {
+        ServeError::InvalidInput(_) => (400, "invalid_input"),
+        ServeError::QueueFull { .. } => (429, "queue_full"),
+        ServeError::BackendFailed(_) => (500, "backend_failed"),
+        ServeError::ShuttingDown => (503, "shutting_down"),
+    };
+    (status, err_body(&e.to_string(), kind))
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "",
+    }
+}
+
+fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    body: &str,
+    keep_alive: bool,
+) -> io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\ncontent-type: application/json\r\n\
+         content-length: {}\r\nconnection: {}\r\n\r\n",
+        reason(status),
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" }
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+// ---------------------------------------------------------------------------
+// Client (used by loadgen --url, the serving bench, and the smoke tests)
+// ---------------------------------------------------------------------------
+
+/// A parsed `http://host:port[/prefix]` base URL.
+#[derive(Debug, Clone)]
+pub struct HttpTarget {
+    /// `host:port` — both the connect target and the `Host` header.
+    pub authority: String,
+    /// Path prefix prepended to every route (usually empty).
+    pub base_path: String,
+}
+
+impl HttpTarget {
+    pub fn parse(url: &str) -> Result<HttpTarget> {
+        anyhow::ensure!(
+            !url.starts_with("https://"),
+            "https is not supported by the dependency-free client; use http://"
+        );
+        let rest = url.strip_prefix("http://").unwrap_or(url);
+        let (authority, path) = match rest.split_once('/') {
+            Some((a, p)) => (a, format!("/{p}")),
+            None => (rest, String::new()),
+        };
+        anyhow::ensure!(!authority.is_empty(), "no host in URL {url:?}");
+        let authority = if authority.contains(':') {
+            authority.to_string()
+        } else {
+            format!("{authority}:80")
+        };
+        Ok(HttpTarget {
+            authority,
+            base_path: path.trim_end_matches('/').to_string(),
+        })
+    }
+}
+
+struct ClientConn {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+/// Minimal keep-alive HTTP/1.1 client: one connection, sequential
+/// requests, one transparent reconnect when a reused connection turns out
+/// to have been closed by the server.
+pub struct HttpClient {
+    target: HttpTarget,
+    timeout: Duration,
+    conn: Option<ClientConn>,
+}
+
+impl HttpClient {
+    /// Lazy: no I/O until the first request.
+    pub fn connect(target: &HttpTarget, timeout: Duration) -> HttpClient {
+        HttpClient { target: target.clone(), timeout, conn: None }
+    }
+
+    /// Issue one request; returns `(status, body)`.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> io::Result<(u16, String)> {
+        let reused = self.conn.is_some();
+        match self.request_once(method, path, body) {
+            Ok(r) => Ok(r),
+            Err((e, response_started)) => {
+                // Retry exactly the stale-keep-alive race: a *reused*
+                // connection the server closed under us, with *zero*
+                // response bytes received. The server answers every request
+                // it reads (including errors), so no response bytes means
+                // the request was never processed — the retry cannot
+                // double-submit an inference. Anything past that (timeout,
+                // mid-response EOF) is surfaced to the caller instead.
+                let stale = reused
+                    && !response_started
+                    && matches!(
+                        e.kind(),
+                        io::ErrorKind::UnexpectedEof
+                            | io::ErrorKind::ConnectionReset
+                            | io::ErrorKind::ConnectionAborted
+                            | io::ErrorKind::BrokenPipe
+                            | io::ErrorKind::WriteZero
+                    );
+                if stale {
+                    self.request_once(method, path, body).map_err(|(e, _)| e)
+                } else {
+                    Err(e)
+                }
+            }
+        }
+    }
+
+    fn ensure_conn(&mut self) -> io::Result<&mut ClientConn> {
+        if self.conn.is_none() {
+            let addr = self
+                .target
+                .authority
+                .to_socket_addrs()?
+                .next()
+                .ok_or_else(|| {
+                    io::Error::new(
+                        io::ErrorKind::AddrNotAvailable,
+                        format!("{} resolves to no address", self.target.authority),
+                    )
+                })?;
+            let stream = TcpStream::connect_timeout(&addr, self.timeout.min(Duration::from_secs(5)))?;
+            stream.set_nodelay(true)?;
+            stream.set_read_timeout(Some(self.timeout))?;
+            stream.set_write_timeout(Some(self.timeout))?;
+            self.conn = Some(ClientConn { stream, buf: Vec::new() });
+        }
+        Ok(self.conn.as_mut().expect("just ensured"))
+    }
+
+    /// One attempt on the current (or a fresh) connection. The error side
+    /// carries whether any response bytes had arrived before the failure —
+    /// the signal `request` uses to decide whether a retry is safe.
+    fn request_once(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> Result<(u16, String), (io::Error, bool)> {
+        let full_path = format!("{}{}", self.target.base_path, path);
+        let authority = self.target.authority.clone();
+        let timeout = self.timeout;
+        let conn = match self.ensure_conn() {
+            Ok(c) => c,
+            Err(e) => return Err((e, false)),
+        };
+        let payload = body.unwrap_or("");
+        let head = format!(
+            "{method} {full_path} HTTP/1.1\r\nhost: {authority}\r\n\
+             content-type: application/json\r\ncontent-length: {}\r\n\
+             connection: keep-alive\r\n\r\n",
+            payload.len()
+        );
+        let result = send_and_read(conn, &head, payload, timeout);
+        match result {
+            Ok((status, body, close)) => {
+                if close {
+                    self.conn = None;
+                }
+                Ok((status, body))
+            }
+            Err(e) => {
+                // The buffer only ever holds bytes of the in-flight
+                // response (each success drains exactly its own bytes), so
+                // non-empty here means the server had started answering.
+                let response_started =
+                    self.conn.as_ref().is_some_and(|c| !c.buf.is_empty());
+                self.conn = None;
+                Err((e, response_started))
+            }
+        }
+    }
+}
+
+/// Cap on a response body the client will buffer — a lying
+/// `content-length` must not be able to grow the buffer without bound.
+const MAX_CLIENT_BODY: usize = 16 * 1024 * 1024;
+
+fn send_and_read(
+    conn: &mut ClientConn,
+    head: &str,
+    payload: &str,
+    timeout: Duration,
+) -> io::Result<(u16, String, bool)> {
+    let wrote = conn
+        .stream
+        .write_all(head.as_bytes())
+        .and_then(|()| conn.stream.write_all(payload.as_bytes()))
+        .and_then(|()| conn.stream.flush());
+    match wrote {
+        Ok(()) => read_client_response(conn, Instant::now() + timeout),
+        Err(e) => {
+            // A mid-write failure often means the server rejected early
+            // (413 on an oversized body) and closed its read side — the
+            // response may already be buffered locally. Prefer it over the
+            // raw transport error so the pinned status mapping stays
+            // observable through this client.
+            read_client_response(conn, Instant::now() + Duration::from_millis(500))
+                .map_err(|_| e)
+        }
+    }
+}
+
+/// Read one response; returns `(status, body, server_wants_close)`.
+/// `deadline` is the *cumulative* budget for the whole response — the
+/// per-read socket timeout alone would let a drip-feeding server (one
+/// byte per poll) hold the caller forever.
+fn read_client_response(
+    conn: &mut ClientConn,
+    deadline: Instant,
+) -> io::Result<(u16, String, bool)> {
+    let overdue = || {
+        io::Error::new(
+            io::ErrorKind::TimedOut,
+            "response not completed within the client timeout",
+        )
+    };
+    let head_end = loop {
+        if let Some(pos) = find_subsequence(&conn.buf, b"\r\n\r\n") {
+            break pos;
+        }
+        if conn.buf.len() > MAX_HEAD {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                "response header block too large",
+            ));
+        }
+        if Instant::now() >= deadline {
+            return Err(overdue());
+        }
+        let mut chunk = [0u8; 4096];
+        match conn.stream.read(&mut chunk)? {
+            0 => {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "connection closed before a full response",
+                ))
+            }
+            n => conn.buf.extend_from_slice(&chunk[..n]),
+        }
+    };
+    let head = String::from_utf8_lossy(&conn.buf[..head_end]).to_string();
+    let mut lines = head.split("\r\n");
+    let status_line = lines.next().unwrap_or("");
+    let status = status_line
+        .split(' ')
+        .nth(1)
+        .and_then(|c| c.parse::<u16>().ok())
+        .ok_or_else(|| {
+            io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("malformed status line {status_line:?}"),
+            )
+        })?;
+    let mut content_length: Option<usize> = None;
+    let mut close = false;
+    for line in lines {
+        if let Some((name, value)) = line.split_once(':') {
+            let value = value.trim();
+            match name.trim().to_ascii_lowercase().as_str() {
+                "content-length" => content_length = value.parse().ok(),
+                "connection" => close = value.eq_ignore_ascii_case("close"),
+                _ => {}
+            }
+        }
+    }
+    let body_start = head_end + 4;
+    let body = match content_length {
+        Some(len) => {
+            if len > MAX_CLIENT_BODY {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("response declares a {len}-byte body; refusing to buffer it"),
+                ));
+            }
+            while conn.buf.len() < body_start + len {
+                if Instant::now() >= deadline {
+                    return Err(overdue());
+                }
+                let mut chunk = [0u8; 4096];
+                match conn.stream.read(&mut chunk)? {
+                    0 => {
+                        return Err(io::Error::new(
+                            io::ErrorKind::UnexpectedEof,
+                            "connection closed mid-body",
+                        ))
+                    }
+                    n => conn.buf.extend_from_slice(&chunk[..n]),
+                }
+            }
+            let b = String::from_utf8_lossy(&conn.buf[body_start..body_start + len]).to_string();
+            conn.buf.drain(..body_start + len);
+            b
+        }
+        None => {
+            // No content-length: legal only on a connection the server is
+            // closing — read to EOF, bounded in size and time like the
+            // length-delimited path.
+            loop {
+                if conn.buf.len() > body_start + MAX_CLIENT_BODY {
+                    return Err(io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        "unbounded close-delimited response body",
+                    ));
+                }
+                if Instant::now() >= deadline {
+                    return Err(overdue());
+                }
+                let mut chunk = [0u8; 4096];
+                match conn.stream.read(&mut chunk)? {
+                    0 => break,
+                    n => conn.buf.extend_from_slice(&chunk[..n]),
+                }
+            }
+            let b = String::from_utf8_lossy(&conn.buf[body_start..]).to_string();
+            conn.buf.clear();
+            close = true;
+            b
+        }
+    };
+    Ok((status, body, close))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn target_parses_bare_and_prefixed_urls() {
+        let t = HttpTarget::parse("http://127.0.0.1:8731").unwrap();
+        assert_eq!(t.authority, "127.0.0.1:8731");
+        assert_eq!(t.base_path, "");
+        let t = HttpTarget::parse("http://box:9000/api/").unwrap();
+        assert_eq!(t.authority, "box:9000");
+        assert_eq!(t.base_path, "/api");
+        let t = HttpTarget::parse("localhost:80").unwrap();
+        assert_eq!(t.authority, "localhost:80");
+        let t = HttpTarget::parse("http://example.org").unwrap();
+        assert_eq!(t.authority, "example.org:80");
+    }
+
+    #[test]
+    fn target_rejects_https_and_empty() {
+        assert!(HttpTarget::parse("https://x:1").is_err());
+        assert!(HttpTarget::parse("http:///path").is_err());
+    }
+
+    #[test]
+    fn serve_errors_map_to_pinned_statuses() {
+        assert_eq!(serve_error_response(&ServeError::InvalidInput("x".into())).0, 400);
+        assert_eq!(serve_error_response(&ServeError::QueueFull { depth: 4 }).0, 429);
+        assert_eq!(serve_error_response(&ServeError::BackendFailed("x".into())).0, 500);
+        assert_eq!(serve_error_response(&ServeError::ShuttingDown).0, 503);
+        let (_, body) = serve_error_response(&ServeError::QueueFull { depth: 4 });
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.get("kind").and_then(|v| v.as_str()), Some("queue_full"));
+    }
+
+    #[test]
+    fn find_subsequence_locates_terminator() {
+        assert_eq!(find_subsequence(b"ab\r\n\r\ncd", b"\r\n\r\n"), Some(2));
+        assert_eq!(find_subsequence(b"abcd", b"\r\n\r\n"), None);
+    }
+}

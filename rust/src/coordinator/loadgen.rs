@@ -17,13 +17,30 @@
 //! TinyResNet manifest + registry backend), so the whole pipeline runs
 //! end-to-end on a toolchain-only machine: no `make artifacts`, no PJRT,
 //! `--no-default-features` is enough.
+//!
+//! [`run_remote`] is the same workload spoken over real sockets against an
+//! `ilmpq serve --listen` front end (`ilmpq loadgen --url`): the HTTP
+//! statuses fold back into the same [`LoadReport`] outcome classes
+//! (200→done, 400→invalid, 429→shed, 500→failed, 503→shutdown,
+//! 504/timeout→slow, transport failure→lost), and `e2e`/`queue_wait` carry
+//! the *server-reported* per-request timings from each reply body, so
+//! those columns stay directly comparable with in-process runs. Caveat:
+//! arrivals are open-loop (Poisson-paced into a bounded client-side
+//! queue) but *delivery* is bounded by the `conns` synchronous
+//! connections — once the offered rate exceeds `conns / round-trip`, the
+//! server sees at most `conns` in-flight requests (so it sheds less than
+//! the in-process run at the same nominal rate), the backlog shows up in
+//! `client_rtt` (the client-observed round-trip including connection
+//! queueing), and arrivals overflowing the bounded queue are counted as
+//! `slow` instead of buffering request bodies without bound.
 
-use std::sync::mpsc::RecvTimeoutError;
-use std::sync::Arc;
+use std::sync::mpsc::{sync_channel, RecvTimeoutError, TrySendError};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use super::http::{HttpClient, HttpTarget};
 use super::metrics::Metrics;
 use super::server::{ServeError, Server};
 use crate::backend::{self, synth, BackendInit, InferenceBackend};
@@ -86,10 +103,35 @@ pub struct LoadReport {
     pub wall_s: f64,
     /// Completed requests per wall-clock second.
     pub goodput_rps: f64,
+    /// Server-side end-to-end latency (submit → reply inside the server).
+    /// Identical definition for in-process and remote runs — for remote
+    /// runs it is collected from the `e2e_s` field of each reply body —
+    /// so this column is directly comparable across transports.
     pub e2e: Summary,
     pub queue_wait: Summary,
+    /// Remote runs only (empty in-process): client-observed round-trip
+    /// from job dispatch to parsed response, *including* time queued for
+    /// one of the `conns` client connections. When this diverges from
+    /// `e2e`, the client's connection pool — not the server — is the
+    /// bottleneck (the remote driver is open-loop in its arrivals but
+    /// delivery is concurrency-bounded by `conns`).
+    pub client_rtt: Summary,
     pub occupancy: f64,
     pub shed_rate: f64,
+}
+
+/// One workload image for the next request — the *single* generator shared
+/// by [`run`] and [`run_remote`], so the in-process and over-the-wire
+/// workloads are identical (image values, malformed positions, RNG stream)
+/// for the same spec/seed. A wrong-length image must bounce off admission,
+/// never a batch; `img + 1` is malformed for every geometry (a halved
+/// length would collide with `img` itself when image_elems <= 2).
+fn gen_image(rng: &mut Rng, spec: &LoadSpec, img: usize) -> Vec<f32> {
+    let malformed = spec.malformed_frac > 0.0 && rng.bool(spec.malformed_frac);
+    let len = if malformed { img + 1 } else { img };
+    let mut image = vec![0f32; len];
+    rng.fill_normal(&mut image, 1.0);
+    image
 }
 
 /// Drive `server` with `spec` and stop it when the run drains. `manifest`
@@ -107,14 +149,7 @@ pub fn run(
     let t0 = Instant::now();
     let mut pending = Vec::with_capacity(spec.requests);
     for _ in 0..spec.requests {
-        let malformed = spec.malformed_frac > 0.0 && rng.bool(spec.malformed_frac);
-        // A wrong-length image must bounce off admission, never a batch;
-        // `img + 1` is malformed for every geometry (a halved length would
-        // collide with `img` itself when image_elems <= 2).
-        let len = if malformed { img + 1 } else { img };
-        let mut image = vec![0f32; len];
-        rng.fill_normal(&mut image, 1.0);
-        pending.push(server.submit(image));
+        pending.push(server.submit(gen_image(&mut rng, spec, img)));
         if pace {
             std::thread::sleep(Duration::from_secs_f64(rng.exp(spec.rate)));
         }
@@ -158,30 +193,26 @@ pub fn run(
         goodput_rps: done as f64 / wall_s.max(1e-9),
         e2e: metrics.e2e.summary(),
         queue_wait: metrics.queue_wait.summary(),
+        client_rtt: Summary::of(&[]),
         occupancy: metrics.batch_occupancy(),
         shed_rate: metrics.shed_rate(),
     };
     (report, metrics)
 }
 
-fn summary_json(s: &Summary) -> Json {
-    Json::obj(vec![
-        ("n", Json::Num(s.n as f64)),
-        ("mean_s", Json::Num(s.mean)),
-        ("p50_s", Json::Num(s.p50)),
-        ("p95_s", Json::Num(s.p95)),
-        ("p99_s", Json::Num(s.p99)),
-    ])
-}
-
 impl LoadReport {
     /// Human-readable multi-line report for the CLI.
     pub fn render(&self) -> String {
+        let rtt = if self.client_rtt.n > 0 {
+            format!("\nclient_rtt: {} (incl. client-side connection queueing)", self.client_rtt)
+        } else {
+            String::new()
+        };
         format!(
             "offered {:.0} req/s (achieved {:.0}), {} requests in {:.2}s\n\
              outcomes: done={} invalid={} shed={} failed={} shutdown={} slow={} lost={}\n\
              goodput {:.0} req/s, occupancy {:.1}%, shed rate {:.1}%\n\
-             e2e:        {}\nqueue_wait: {}",
+             e2e:        {}\nqueue_wait: {}{}",
             self.offered_rate,
             self.achieved_rate,
             self.requests,
@@ -198,6 +229,7 @@ impl LoadReport {
             self.shed_rate * 100.0,
             self.e2e,
             self.queue_wait,
+            rtt,
         )
     }
 
@@ -218,10 +250,278 @@ impl LoadReport {
             ("goodput_rps", Json::Num(self.goodput_rps)),
             ("occupancy", Json::Num(self.occupancy)),
             ("shed_rate", Json::Num(self.shed_rate)),
-            ("e2e", summary_json(&self.e2e)),
-            ("queue_wait", summary_json(&self.queue_wait)),
+            ("e2e", self.e2e.to_json()),
+            ("queue_wait", self.queue_wait.to_json()),
+            ("client_rtt", self.client_rtt.to_json()),
         ])
     }
+}
+
+/// One generated request on its way to a client-connection worker.
+struct WireJob {
+    body: String,
+    queued: Instant,
+}
+
+/// Per-connection tallies, merged into the final [`LoadReport`].
+#[derive(Default)]
+struct WireTally {
+    done: usize,
+    invalid: usize,
+    shed: usize,
+    failed: usize,
+    shutdown: usize,
+    slow: usize,
+    lost: usize,
+    /// Server-reported `e2e_s` per reply (comparable with in-process runs).
+    e2e: Vec<f64>,
+    /// Server-reported `queue_wait_s` per reply.
+    queue_wait: Vec<f64>,
+    /// Client-observed dispatch→response round-trip (includes client-side
+    /// connection queueing).
+    rtt: Vec<f64>,
+}
+
+fn classify_wire(tally: &mut WireTally, job: &WireJob, result: std::io::Result<(u16, String)>) {
+    match result {
+        Ok((200, body)) => {
+            tally.done += 1;
+            tally.rtt.push(job.queued.elapsed().as_secs_f64());
+            // The server reports its own per-request timings in the reply
+            // body — the same quantities the in-process report measures, so
+            // e2e/queue_wait stay comparable across transports.
+            if let Ok(j) = Json::parse(&body) {
+                if let Some(qw) = j.get("queue_wait_s").and_then(Json::as_f64) {
+                    tally.queue_wait.push(qw);
+                }
+                if let Some(e) = j.get("e2e_s").and_then(Json::as_f64) {
+                    tally.e2e.push(e);
+                }
+            }
+        }
+        Ok((400, _)) => tally.invalid += 1,
+        Ok((429, _)) => tally.shed += 1,
+        Ok((503, _)) => tally.shutdown += 1,
+        // 504 is the front end's reply-timeout: the wire twin of `slow`.
+        Ok((504, _)) => tally.slow += 1,
+        // 500 (BackendFailed / reply_lost) and anything unexpected.
+        Ok((_, _)) => tally.failed += 1,
+        Err(e)
+            if matches!(
+                e.kind(),
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+            ) =>
+        {
+            tally.slow += 1
+        }
+        Err(_) => tally.lost += 1,
+    }
+}
+
+/// Drive a remote `ilmpq serve --listen` front end at `url` with the same
+/// open-loop Poisson workload as [`run`], over `conns` keep-alive client
+/// connections. Returns the client-side report plus the server's final
+/// `/v1/metrics` snapshot (`Json::Null` when unavailable) — occupancy and
+/// shed rate in the report come from that snapshot, so they are cumulative
+/// over the *server's* lifetime, not just this run.
+pub fn run_remote(url: &str, spec: &LoadSpec, conns: usize) -> Result<(LoadReport, Json)> {
+    let target = HttpTarget::parse(url)?;
+    // Probe the front end: liveness + the model geometry to generate for.
+    // Scoped so the probe's keep-alive connection closes before the run —
+    // an idle connection pins one of the server's handler threads.
+    let (code, body) = {
+        let mut probe = HttpClient::connect(&target, Duration::from_secs(10));
+        probe
+            .request("GET", "/v1/healthz", None)
+            .map_err(|e| anyhow::anyhow!("healthz probe of {url} failed: {e}"))?
+    };
+    anyhow::ensure!(code == 200, "healthz at {url} returned {code}: {body}");
+    let health = Json::parse(&body)
+        .map_err(|e| anyhow::anyhow!("healthz at {url} returned non-JSON: {e}"))?;
+    let img = health
+        .get("image_elems")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow::anyhow!("healthz response lacks image_elems: {body}"))?;
+
+    // Run-wide give-up deadline, the wire twin of `run`'s 60s drain: the
+    // paced submission phase plus 60 seconds of collection.
+    let submit_budget = if spec.rate.is_finite() && spec.rate > 0.0 {
+        Duration::from_secs_f64(spec.requests as f64 / spec.rate)
+    } else {
+        Duration::ZERO
+    };
+    let t0 = Instant::now();
+    let deadline = t0 + submit_budget + Duration::from_secs(60);
+
+    // Bounded dispatch queue: at full-size images a serialized body is
+    // megabytes, so an unbounded backlog under a saturating rate would
+    // buffer itself in client memory. The bound is denominated in *bytes*
+    // (a job-count bound alone still admits gigabytes at real ResNet
+    // geometry), with the channel capacity as a secondary count cap.
+    // Overflowing jobs are counted like uncollected replies (`slow`) —
+    // the server-side analogue is `queue_depth` shedding.
+    const MAX_BACKLOG_BYTES: usize = 64 * 1024 * 1024;
+    let (tx, rx) = sync_channel::<WireJob>(conns.max(1) * 64);
+    let rx = Arc::new(Mutex::new(rx));
+    let backlog_bytes = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+    let mut overflow = 0usize;
+    let workers: Vec<_> = (0..conns.max(1))
+        .map(|_| {
+            let rx = rx.clone();
+            let target = target.clone();
+            let backlog_bytes = backlog_bytes.clone();
+            std::thread::spawn(move || {
+                let mut client = HttpClient::connect(&target, Duration::from_secs(30));
+                let mut tally = WireTally::default();
+                loop {
+                    let job = {
+                        let rx = rx.lock().unwrap();
+                        rx.recv()
+                    };
+                    let Ok(job) = job else { break };
+                    backlog_bytes
+                        .fetch_sub(job.body.len(), std::sync::atomic::Ordering::Relaxed);
+                    if Instant::now() >= deadline {
+                        // Wedged or saturated server: stop burning sockets,
+                        // count the backlog the same way `run` counts
+                        // uncollected replies.
+                        tally.slow += 1;
+                        continue;
+                    }
+                    let result = client.request("POST", "/v1/infer", Some(&job.body));
+                    classify_wire(&mut tally, &job, result);
+                }
+                tally
+            })
+        })
+        .collect();
+
+    // Open-loop submission: Poisson arrivals, images from the same
+    // generator (and RNG stream) as the in-process `run`.
+    let mut rng = Rng::new(spec.seed);
+    let pace = spec.rate.is_finite() && spec.rate > 0.0;
+    for _ in 0..spec.requests {
+        let image = gen_image(&mut rng, spec, img);
+        let body = Json::obj(vec![(
+            "image",
+            Json::Arr(image.iter().map(|&v| Json::Num(v as f64)).collect()),
+        )])
+        .to_string_compact();
+        // Non-blocking so the arrival process stays open-loop: a full
+        // queue (by bytes or count) means delivery (bounded by `conns`)
+        // fell this far behind the offered rate; drop the job client-side
+        // rather than stall the Poisson clock or buffer without bound.
+        let len = body.len();
+        if backlog_bytes.load(std::sync::atomic::Ordering::Relaxed) + len
+            > MAX_BACKLOG_BYTES
+        {
+            overflow += 1;
+        } else {
+            backlog_bytes.fetch_add(len, std::sync::atomic::Ordering::Relaxed);
+            match tx.try_send(WireJob { body, queued: Instant::now() }) {
+                Ok(()) => {}
+                Err(TrySendError::Full(_) | TrySendError::Disconnected(_)) => {
+                    backlog_bytes.fetch_sub(len, std::sync::atomic::Ordering::Relaxed);
+                    overflow += 1;
+                }
+            }
+        }
+        if pace {
+            std::thread::sleep(Duration::from_secs_f64(rng.exp(spec.rate)));
+        }
+    }
+    let submit_s = t0.elapsed().as_secs_f64();
+    drop(tx); // workers drain the queue and exit
+    // Client-side overflow folds into `slow` (requests offered but never
+    // delivered inside the run's budget).
+    let mut t = WireTally { slow: overflow, ..Default::default() };
+    for w in workers {
+        if let Ok(wt) = w.join() {
+            t.done += wt.done;
+            t.invalid += wt.invalid;
+            t.shed += wt.shed;
+            t.failed += wt.failed;
+            t.shutdown += wt.shutdown;
+            t.slow += wt.slow;
+            t.lost += wt.lost;
+            t.e2e.extend(wt.e2e);
+            t.queue_wait.extend(wt.queue_wait);
+            t.rtt.extend(wt.rtt);
+        }
+    }
+    // Airtight accounting: anything offered but not classified — a
+    // panicked worker's whole tally, jobs stranded in a dead channel —
+    // surfaces as `lost` (the regression class) instead of silently
+    // shrinking the totals under the sum-to-requests invariant the tests
+    // and CI assert on.
+    let accounted =
+        t.done + t.invalid + t.shed + t.failed + t.shutdown + t.slow + t.lost;
+    t.lost += spec.requests.saturating_sub(accounted);
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    // Final server-side snapshot for the occupancy / shed-rate columns
+    // (fresh connection: the probe's was dropped before the run).
+    let mut probe = HttpClient::connect(&target, Duration::from_secs(10));
+    let metrics_json = match probe.request("GET", "/v1/metrics", None) {
+        Ok((200, body)) => Json::parse(&body).unwrap_or(Json::Null),
+        _ => Json::Null,
+    };
+    let m_f64 = |key: &str| metrics_json.get(key).and_then(Json::as_f64).unwrap_or(0.0);
+    let report = LoadReport {
+        offered_rate: spec.rate,
+        achieved_rate: spec.requests as f64 / submit_s.max(1e-9),
+        requests: spec.requests,
+        done: t.done,
+        invalid: t.invalid,
+        shed: t.shed,
+        failed: t.failed,
+        shutdown: t.shutdown,
+        slow: t.slow,
+        lost: t.lost,
+        wall_s,
+        goodput_rps: t.done as f64 / wall_s.max(1e-9),
+        e2e: Summary::of(&t.e2e),
+        queue_wait: Summary::of(&t.queue_wait),
+        client_rtt: Summary::of(&t.rtt),
+        occupancy: m_f64("occupancy"),
+        shed_rate: m_f64("shed_rate"),
+    };
+    Ok((report, metrics_json))
+}
+
+/// The shared serving-stack construction recipe behind `ilmpq serve` and
+/// `ilmpq loadgen`: the real artifact manifest + `create_serving` backend
+/// when artifacts exist, else (or when `force_synth`) the synthetic
+/// TinyResNet fixture, with the fallback logged under `log_prefix`.
+///
+/// The fallback triggers only when the manifest file is *absent* (no
+/// `make artifacts` on this machine — the toolchain-only case). A manifest
+/// that exists but fails to load is a broken deployment and propagates as
+/// an error: silently serving the 16x16 toy model from behind a healthy
+/// `/v1/healthz` would be far worse than refusing to start.
+pub fn fixture_or_artifacts(
+    backend_name: &str,
+    ratio: &str,
+    frozen: bool,
+    threads: Option<usize>,
+    seed: u64,
+    force_synth: bool,
+    log_prefix: &str,
+) -> Result<(Manifest, Arc<dyn InferenceBackend>)> {
+    if force_synth {
+        return synth_fixture_frozen(backend_name, ratio, threads, seed, frozen);
+    }
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!(
+            "[{log_prefix}] no artifact manifest in {dir:?}; \
+             using the synthetic TinyResNet fixture"
+        );
+        return synth_fixture_frozen(backend_name, ratio, threads, seed, frozen);
+    }
+    let manifest = Manifest::load(&dir)?;
+    let be = backend::create_serving(backend_name, &manifest, ratio, frozen, threads)?;
+    Ok((manifest, be))
 }
 
 /// Artifact-free serving fixture: the synthetic TinyResNet manifest with a
@@ -234,6 +534,21 @@ pub fn synth_fixture(
     threads: Option<usize>,
     seed: u64,
 ) -> Result<(Manifest, Arc<dyn InferenceBackend>)> {
+    synth_fixture_frozen(backend_name, ratio_name, threads, seed, true)
+}
+
+/// As [`synth_fixture`], with an explicit frozen-weights policy. The flag
+/// reaches the registry builder unchanged, so incoherent combinations
+/// (e.g. `qgemm` with `frozen = false`) fail here exactly as they do on
+/// the artifacts path — `--synthetic` must not make `--no-frozen` silently
+/// mean something else.
+pub fn synth_fixture_frozen(
+    backend_name: &str,
+    ratio_name: &str,
+    threads: Option<usize>,
+    seed: u64,
+    frozen: bool,
+) -> Result<(Manifest, Arc<dyn InferenceBackend>)> {
     let mut rng = Rng::new(seed);
     let mut m = synth::tiny_manifest(16, 16, 3, &[8, 16], 10);
     let params = synth::random_params(&m, &mut rng);
@@ -242,6 +557,7 @@ pub fn synth_fixture(
     let init = BackendInit {
         masks: Some(masks),
         threads,
+        frozen,
         ..BackendInit::new(m.clone(), params)
     };
     let be: Arc<dyn InferenceBackend> = Arc::from(backend::create(backend_name, &init)?);
@@ -306,13 +622,18 @@ mod tests {
             goodput_rps: 16.0,
             e2e: Summary::of(&[0.001, 0.002]),
             queue_wait: Summary::of(&[0.0005]),
+            client_rtt: Summary::of(&[]),
             occupancy: 0.75,
             shed_rate: 0.1,
         };
         let text = r.render();
         assert!(text.contains("done=8") && text.contains("shed rate"));
+        // Empty client_rtt (in-process run) stays out of the render...
+        assert!(!text.contains("client_rtt"));
         let j = r.to_json();
         assert!(j.get("e2e").is_some() && j.get("shed_rate").is_some());
+        // ...but is always present (as zeros) in the JSON schema.
+        assert!(j.get("client_rtt").is_some());
         assert_eq!(j.get("done").and_then(|v| v.as_f64()), Some(8.0));
     }
 }

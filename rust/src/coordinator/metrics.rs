@@ -14,6 +14,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::util::stats::Summary;
+use crate::util::Json;
 
 const MAX_SAMPLES: usize = 65_536;
 
@@ -35,7 +36,10 @@ impl LatencyTrack {
     }
 
     pub fn summary(&self) -> Summary {
-        Summary::of(&self.samples.lock().unwrap())
+        // Snapshot under the lock (one memcpy), summarize outside it: the
+        // sort in `Summary::of` must not block the request-path `record`.
+        let snap = self.samples.lock().unwrap().clone();
+        Summary::of(&snap)
     }
 
     pub fn count(&self) -> usize {
@@ -63,6 +67,11 @@ pub struct Metrics {
     pub batches_failed: AtomicU64,
     pub batched_requests: AtomicU64,
     pub padded_slots: AtomicU64,
+    /// Router loop iterations — the idle-wakeup regression signal. A parked
+    /// router (blocking on the submit channel, bounded by the batch
+    /// deadline) registers ~0 while idle; the historic busy-poll loop
+    /// registered thousands per second on an empty queue.
+    pub router_wakeups: AtomicU64,
     pub queue_wait: LatencyTrack,
     /// Backend-measured execution time of *successful* batches only.
     pub execute: LatencyTrack,
@@ -109,7 +118,8 @@ impl Metrics {
     pub fn report(&self) -> String {
         format!(
             "requests: in={} done={} invalid={} shed={} failed={} shutdown={}\n\
-             batches: {} ({} failed, occupancy {:.1}%, shed rate {:.1}%)\n\
+             batches: {} ({} failed, occupancy {:.1}%, shed rate {:.1}%, \
+             {} router wakeups)\n\
              queue_wait: {}\nexecute:    {}\nfailed:     {}\n\
              e2e:        {}\nsim_fpga:   {}",
             Self::get(&self.requests_in),
@@ -122,12 +132,41 @@ impl Metrics {
             Self::get(&self.batches_failed),
             self.batch_occupancy() * 100.0,
             self.shed_rate() * 100.0,
+            Self::get(&self.router_wakeups),
             self.queue_wait.summary(),
             self.execute.summary(),
             self.failed.summary(),
             self.e2e.summary(),
             self.sim_fpga.summary(),
         )
+    }
+
+    /// Machine-readable snapshot: every counter, the derived rates, and the
+    /// latency summaries. This is the body of the HTTP `GET /v1/metrics`
+    /// endpoint, so the remote load generator folds the same numbers into
+    /// its report as the in-process one.
+    pub fn to_json(&self) -> Json {
+        let num = |c: &AtomicU64| Json::Num(Self::get(c) as f64);
+        Json::obj(vec![
+            ("requests_in", num(&self.requests_in)),
+            ("requests_done", num(&self.requests_done)),
+            ("requests_invalid", num(&self.requests_invalid)),
+            ("requests_shed", num(&self.requests_shed)),
+            ("requests_failed", num(&self.requests_failed)),
+            ("requests_shutdown", num(&self.requests_shutdown)),
+            ("batches", num(&self.batches)),
+            ("batches_failed", num(&self.batches_failed)),
+            ("batched_requests", num(&self.batched_requests)),
+            ("padded_slots", num(&self.padded_slots)),
+            ("router_wakeups", num(&self.router_wakeups)),
+            ("occupancy", Json::Num(self.batch_occupancy())),
+            ("shed_rate", Json::Num(self.shed_rate())),
+            ("queue_wait", self.queue_wait.summary().to_json()),
+            ("execute", self.execute.summary().to_json()),
+            ("failed", self.failed.summary().to_json()),
+            ("e2e", self.e2e.summary().to_json()),
+            ("sim_fpga", self.sim_fpga.summary().to_json()),
+        ])
     }
 }
 
@@ -188,5 +227,30 @@ mod tests {
         assert!(r.contains("requests:") && r.contains("e2e:"));
         assert!(r.contains("invalid=") && r.contains("shed rate"));
         assert!(r.contains("failed:"), "failed track must be visible: {r}");
+        assert!(r.contains("router wakeups"), "wakeup signal must be visible: {r}");
+    }
+
+    #[test]
+    fn to_json_snapshots_counters_rates_and_tracks() {
+        let m = Metrics::default();
+        Metrics::add(&m.requests_in, 4);
+        Metrics::inc(&m.requests_done);
+        Metrics::inc(&m.requests_shed);
+        Metrics::add(&m.batched_requests, 3);
+        Metrics::add(&m.padded_slots, 1);
+        m.e2e.record(0.002);
+        let j = m.to_json();
+        assert_eq!(j.get("requests_in").and_then(|v| v.as_f64()), Some(4.0));
+        assert_eq!(j.get("requests_shed").and_then(|v| v.as_f64()), Some(1.0));
+        assert!((j.get("occupancy").and_then(|v| v.as_f64()).unwrap() - 0.75).abs() < 1e-12);
+        assert!((j.get("shed_rate").and_then(|v| v.as_f64()).unwrap() - 0.25).abs() < 1e-12);
+        assert_eq!(
+            j.get("e2e").and_then(|e| e.get("n")).and_then(|v| v.as_f64()),
+            Some(1.0)
+        );
+        // Empty tracks must serialize to parseable JSON (no inf tokens).
+        let text = j.to_string_compact();
+        assert!(!text.contains("inf"), "non-JSON token in {text}");
+        Json::parse(&text).expect("metrics snapshot must be valid JSON");
     }
 }

@@ -7,11 +7,14 @@
 //!   [`crate::backend::InferenceBackend`] (PJRT artifacts, native qgemm, or
 //!   the f32 reference), behind a validating, bounded, typed-error
 //!   admission pipeline, with the FPGA-sim timing overlay;
+//! * `http` — the pure-std HTTP/1.1 front end over that pipeline
+//!   (`ilmpq serve --listen`), plus the matching client;
 //! * `loadgen` — the open-loop Poisson load driver behind `ilmpq loadgen`
-//!   and `benches/serving.rs`;
+//!   and `benches/serving.rs`, in-process or over the wire (`--url`);
 //! * `metrics` — counters + latency percentiles.
 
 pub mod batcher;
+pub mod http;
 pub mod loadgen;
 pub mod metrics;
 pub mod ratio_search;
@@ -20,6 +23,7 @@ pub mod server;
 pub mod trainer;
 
 pub use batcher::{BatchPolicy, Batcher};
+pub use http::{HttpClient, HttpConfig, HttpServer, HttpTarget};
 pub use metrics::Metrics;
 pub use server::{Request, Response, ServeConfig, ServeError, ServeResult, Server};
 pub use trainer::Trainer;

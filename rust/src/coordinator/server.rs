@@ -43,7 +43,7 @@
 
 use std::fmt;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -165,9 +165,52 @@ enum WorkerMsg {
     Shutdown,
 }
 
+/// What the submit channel carries. `Wake` exists because the router
+/// *blocks* on this channel when it has nothing to do (no busy-polling an
+/// empty queue): `begin_shutdown` sends one so a parked router notices the
+/// shutdown flag immediately instead of on the next request.
+enum RouterMsg {
+    Req(QueuedRequest),
+    Wake,
+}
+
+/// An admitted request in flight to the router, armed to answer on drop.
+///
+/// This closes the submit/shutdown race airtight: `begin_shutdown` can be
+/// called from any thread (it takes `&self`), so a request that passed
+/// submit's shutdown-flag check can land in the channel *after* the
+/// router's final drain. Such a request is never popped — it is dropped
+/// when the channel's receiver drops — and the `Drop` impl below turns
+/// exactly that into a typed `ShuttingDown` answer (plus the counter
+/// bookkeeping), so "every admitted request is answered exactly once"
+/// holds with no drain-ordering subtleties. The router *disarms* the guard
+/// with [`QueuedRequest::take`] when it pops a request for real.
+struct QueuedRequest {
+    req: Option<Request>,
+    in_system: Arc<AtomicU64>,
+    metrics: Arc<Metrics>,
+}
+
+impl QueuedRequest {
+    /// Disarm and hand out the request (the popped-by-router path).
+    fn take(mut self) -> Request {
+        self.req.take().expect("take called once")
+    }
+}
+
+impl Drop for QueuedRequest {
+    fn drop(&mut self) {
+        if let Some(req) = self.req.take() {
+            Metrics::inc(&self.metrics.requests_shutdown);
+            self.in_system.fetch_sub(1, Ordering::SeqCst);
+            let _ = req.reply.send(Err(ServeError::ShuttingDown));
+        }
+    }
+}
+
 /// Handle to a running server.
 pub struct Server {
-    submit_tx: Sender<Request>,
+    submit_tx: Sender<RouterMsg>,
     pub metrics: Arc<Metrics>,
     shutdown: Arc<AtomicBool>,
     /// Requests admitted but not yet answered; the admission bound.
@@ -219,7 +262,7 @@ impl Server {
 
         let img_elems = manifest.data.image_elems();
         let classes = manifest.classes;
-        let (submit_tx, submit_rx) = channel::<Request>();
+        let (submit_tx, submit_rx) = channel::<RouterMsg>();
         let (work_tx, work_rx) = channel::<WorkerMsg>();
         let work_rx = Arc::new(std::sync::Mutex::new(work_rx));
 
@@ -253,74 +296,74 @@ impl Server {
             }));
         }
 
-        // Router/batcher thread.
+        // Router/batcher thread. The loop *blocks* on the submit channel
+        // when there is nothing to do — bounded by the batch deadline when
+        // requests are pending, unbounded when the batcher is empty — so an
+        // idle server parks instead of waking every few hundred µs (the
+        // historic `try_recv` + capped-sleep loop woke ~2–5k times/s on an
+        // empty queue). `metrics.router_wakeups` counts loop iterations as
+        // the regression signal; `begin_shutdown` sends `RouterMsg::Wake`
+        // so a parked router still notices stop immediately.
         let router = {
             let metrics = metrics.clone();
             let shutdown = shutdown.clone();
-            let in_system = in_system.clone();
             std::thread::spawn(move || {
                 let mut batcher: Batcher<Request> = Batcher::new(policy);
                 loop {
+                    Metrics::inc(&metrics.router_wakeups);
                     // Pull whatever is immediately available.
+                    let mut disc = false;
                     loop {
                         match submit_rx.try_recv() {
-                            Ok(req) => batcher.push(req, Instant::now()),
+                            Ok(RouterMsg::Req(q)) => batcher.push(q.take(), Instant::now()),
+                            Ok(RouterMsg::Wake) => {}
                             Err(TryRecvError::Empty) => break,
                             Err(TryRecvError::Disconnected) => {
-                                // Server dropped without stop(): a
-                                // disconnected channel is already empty, so
-                                // flush what's batched and exit.
-                                while let Some(b) = batcher.flush() {
-                                    dispatch(&metrics, &work_tx, b);
-                                }
-                                for _ in 0..n_workers {
-                                    let _ = work_tx.send(WorkerMsg::Shutdown);
-                                }
-                                return;
+                                disc = true;
+                                break;
                             }
                         }
                     }
-                    if shutdown.load(Ordering::SeqCst) {
-                        // Stop cutoff. Everything already admitted to the
-                        // batcher ships and gets real answers from the
-                        // workers; anything that raced into the submit
-                        // channel between the drain above and the flag read
-                        // gets a typed ShuttingDown reply instead of a
-                        // dropped channel.
-                        let answer_shutdown = |req: Request| {
-                            Metrics::inc(&metrics.requests_shutdown);
-                            in_system.fetch_sub(1, Ordering::SeqCst);
-                            let _ = req.reply.send(Err(ServeError::ShuttingDown));
-                        };
-                        while let Ok(req) = submit_rx.try_recv() {
-                            answer_shutdown(req);
-                        }
-                        while let Some(b) = batcher.flush() {
-                            dispatch(&metrics, &work_tx, b);
-                        }
-                        // Defense-in-depth re-drain before the channel
-                        // drops: today no submit can overlap stop() (it
-                        // consumes the Server), but a future `&self` stop
-                        // must never silently drop a buffered request.
-                        while let Ok(req) = submit_rx.try_recv() {
-                            answer_shutdown(req);
-                        }
-                        for _ in 0..n_workers {
-                            let _ = work_tx.send(WorkerMsg::Shutdown);
-                        }
-                        return;
+                    if disc || shutdown.load(Ordering::SeqCst) {
+                        break;
                     }
                     let now = Instant::now();
                     if let Some(batch) = batcher.try_assemble(now) {
                         dispatch(&metrics, &work_tx, batch);
                         continue;
                     }
-                    // Sleep until the next deadline (or a short poll tick).
-                    let nap = batcher
-                        .time_to_deadline(now)
-                        .unwrap_or(Duration::from_micros(200))
-                        .min(Duration::from_micros(500));
-                    std::thread::sleep(nap.max(Duration::from_micros(50)));
+                    // Park. With requests pending the wait is capped by the
+                    // oldest request's deadline (so the partial-batch
+                    // dispatch still fires on time); with an empty batcher
+                    // the recv blocks until the next submission or Wake —
+                    // zero idle wakeups. A `Some(0)` deadline is impossible
+                    // here: an expired oldest request makes `try_assemble`
+                    // dispatch above.
+                    let msg = match batcher.time_to_deadline(Instant::now()) {
+                        Some(d) => submit_rx.recv_timeout(d),
+                        None => submit_rx
+                            .recv()
+                            .map_err(|_| RecvTimeoutError::Disconnected),
+                    };
+                    match msg {
+                        Ok(RouterMsg::Req(q)) => batcher.push(q.take(), Instant::now()),
+                        Ok(RouterMsg::Wake) | Err(RecvTimeoutError::Timeout) => {}
+                        Err(RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+                // Stop cutoff (or dropped Server). Everything already
+                // admitted to the batcher ships and gets real answers from
+                // the workers. Requests still buffered in the submit
+                // channel — including any that race in *after* this point,
+                // which `begin_shutdown(&self)` makes possible — are
+                // answered `ShuttingDown` by `QueuedRequest`'s drop guard
+                // the moment `submit_rx` drops with this thread; no drain
+                // loop can miss them.
+                while let Some(b) = batcher.flush() {
+                    dispatch(&metrics, &work_tx, b);
+                }
+                for _ in 0..n_workers {
+                    let _ = work_tx.send(WorkerMsg::Shutdown);
                 }
             })
         };
@@ -401,21 +444,38 @@ impl Server {
             let _ = tx.send(Err(ServeError::InvalidInput(reason)));
             return rx;
         }
-        let req = Request { image, reply: tx, submitted };
-        if let Err(std::sync::mpsc::SendError(req)) = self.submit_tx.send(req) {
-            // Router already exited (stop raced ahead): answer, don't drop.
-            self.in_system.fetch_sub(1, Ordering::SeqCst);
-            Metrics::inc(&self.metrics.requests_shutdown);
-            let _ = req.reply.send(Err(ServeError::ShuttingDown));
-        }
+        let queued = QueuedRequest {
+            req: Some(Request { image, reply: tx, submitted }),
+            in_system: self.in_system.clone(),
+            metrics: self.metrics.clone(),
+        };
+        // Three ways this send can end, all answered exactly once: the
+        // router pops it (pipeline answers), the send fails because the
+        // router exited (the SendError drops the guard → ShuttingDown), or
+        // it sits buffered past the router's exit (dropped with the
+        // receiver → ShuttingDown via the same guard).
+        let _ = self.submit_tx.send(RouterMsg::Req(queued));
         rx
+    }
+
+    /// Front half of graceful stop: raise the shutdown flag and wake the
+    /// router. From this point every *new* submission is answered
+    /// `ShuttingDown` at the front door while already-admitted requests
+    /// drain through the workers — this is what lets a network front end
+    /// keep answering (with 503s) while the pipeline behind it drains.
+    /// Idempotent; [`Server::stop`] calls it and then joins the threads.
+    pub fn begin_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // A parked router (blocking recv on an empty batcher) only sees the
+        // flag when a message arrives: nudge it.
+        let _ = self.submit_tx.send(RouterMsg::Wake);
     }
 
     /// Graceful stop: flush queues, join threads. In-flight requests are
     /// answered (executed where already batched, `ShuttingDown` otherwise);
     /// no reply channel is left to dangle.
     pub fn stop(mut self) -> Arc<Metrics> {
-        self.shutdown.store(true, Ordering::SeqCst);
+        self.begin_shutdown();
         if let Some(r) = self.router.take() {
             let _ = r.join();
         }
@@ -503,7 +563,13 @@ fn run_batch(
             let done = Instant::now();
             for (i, p) in batch.items.iter().enumerate() {
                 let row = &out.logits[i * classes..(i + 1) * classes];
-                let queue_wait = t_exec.duration_since(p.enqueued);
+                // Measured from *submit* time, not router-push time: the
+                // historic `p.enqueued` anchor silently excluded time spent
+                // in the submit channel, so a congested ingress reported
+                // rosy queue waits (and queue_wait ≤ e2e only held by
+                // luck). Both anchors now share `submitted`, so the
+                // invariant holds by construction.
+                let queue_wait = t_exec.duration_since(p.payload.submitted);
                 let e2e = done.duration_since(p.payload.submitted);
                 metrics.queue_wait.record(queue_wait.as_secs_f64());
                 metrics.e2e.record(e2e.as_secs_f64());

@@ -7,8 +7,8 @@
 //! ilmpq assign --show [--ratio ilmpq2]              Figure 1 row map
 //! ilmpq accuracy [--steps N] [--config LABEL]       Table I accuracy rows (QAT)
 //! ilmpq train   [--steps N] [--ratio ilmpq2]        single QAT run + loss curve
-//! ilmpq serve   [--requests N] [--backend B]        serving demo (batcher + backend)
-//! ilmpq loadgen [--rate R] [--backend B]            offered-load driver (admission pipeline)
+//! ilmpq serve   [--listen ADDR] [--backend B]       serving (HTTP front end or demo loop)
+//! ilmpq loadgen [--rate R] [--url U] [--backend B]  offered-load driver (in-process or remote)
 //! ilmpq backends                                    list execution backends
 //! ilmpq info                                        artifacts + manifest summary
 //! ```
@@ -19,11 +19,13 @@ use std::time::Duration;
 use anyhow::Result;
 use ilmpq::backend::{self, InferenceBackend};
 use ilmpq::baselines::table1::accuracy_configs;
-use ilmpq::coordinator::{loadgen, ratio_search, trainer::Trainer, ServeConfig, Server};
+use ilmpq::coordinator::{
+    loadgen, ratio_search, trainer::Trainer, HttpConfig, HttpServer, ServeConfig, Server,
+};
 use ilmpq::experiments::{accuracy, figure1, ptq, table1};
 use ilmpq::fpga::DeviceModel;
 use ilmpq::model::resnet18;
-use ilmpq::runtime::{Manifest, Runtime};
+use ilmpq::runtime::Runtime;
 use ilmpq::util::Args;
 
 fn main() {
@@ -226,25 +228,46 @@ fn run(cmd: &str) -> Result<()> {
                 "ilmpq serve",
                 2,
                 &[
-                    ("requests", "total requests (default 512)"),
-                    ("rate", "arrival rate req/s (default 2000)"),
+                    ("requests", "total requests (default 512; demo loop only)"),
+                    ("rate", "arrival rate req/s (default 2000; demo loop only)"),
                     ("ratio", "manifest ratio name"),
                     ("device", "FPGA-sim overlay device"),
                     ("workers", "worker threads"),
                     ("queue-depth", "admission queue bound (default 1024)"),
                     ("backend", "execution backend (see `ilmpq backends`)"),
                     ("no-frozen!", "serve raw weights + per-request fake-quant"),
+                    (
+                        "listen",
+                        "serve over HTTP/1.1 on this address until killed \
+                         (e.g. 127.0.0.1:8080) instead of the demo loop",
+                    ),
+                    (
+                        "http-workers",
+                        "HTTP connection handler threads (default 16); size at or \
+                         above the expected concurrent keep-alive connections",
+                    ),
+                    ("synthetic!", "force the artifact-free synthetic TinyResNet"),
                 ],
             );
             let backend_name = a.str_or("backend", "pjrt").to_string();
             backend::spec(&backend_name)?;
+            let name = a.str_or("ratio", "ilmpq2").to_string();
+            let frozen = !a.flag("no-frozen");
             // The manifest (batching geometry, masks, params) loads without
             // the PJRT engine — only runtime-needing backends start one, so
             // `--backend qgemm` serves on `--no-default-features` builds.
-            let manifest = Manifest::load(&Manifest::default_dir())?;
-            let name = a.str_or("ratio", "ilmpq2").to_string();
-            let frozen = !a.flag("no-frozen");
-            let be = backend::create_serving(&backend_name, &manifest, &name, frozen, None)?;
+            // Falls back to the synthetic TinyResNet fixture when no
+            // artifacts exist, so a toolchain-only machine can still stand
+            // up the whole serving stack.
+            let (manifest, be) = loadgen::fixture_or_artifacts(
+                &backend_name,
+                &name,
+                frozen,
+                None,
+                7,
+                a.flag("synthetic"),
+                "serve",
+            )?;
             let cfg = ServeConfig {
                 workers: a.usize_or("workers", 2),
                 queue_depth: a.usize_or("queue-depth", 1024),
@@ -256,6 +279,26 @@ fn run(cmd: &str) -> Result<()> {
             println!("backend: {}", be.name());
             let server = Server::start(&manifest, be, cfg)?;
             println!("serving: sim FPGA {}", server.sim.row());
+            if let Some(addr) = a.get("listen") {
+                // Network mode: put the HTTP front door on the pipeline and
+                // block until the process is killed.
+                // Each handler owns one keep-alive connection at a time, so
+                // the pool must cover the expected concurrent connections
+                // (loadgen --conns defaults to 8; threads are cheap parked).
+                let http_cfg = HttpConfig {
+                    addr: addr.to_string(),
+                    workers: a.usize_or("http-workers", 16),
+                    ..Default::default()
+                };
+                let mut front = HttpServer::start(server, &manifest, http_cfg)?;
+                println!(
+                    "listening on http://{} — POST /v1/infer, GET /v1/healthz, \
+                     GET /v1/metrics",
+                    front.local_addr()
+                );
+                front.wait();
+                return Ok(());
+            }
             // The demo drive loop is the shared open-loop driver: same
             // pacing, reply classification, and report as `ilmpq loadgen`.
             let spec = loadgen::LoadSpec {
@@ -286,8 +329,40 @@ fn run(cmd: &str) -> Result<()> {
                     ("malformed", "fraction of malformed-length requests (default 0)"),
                     ("synthetic!", "force the artifact-free synthetic TinyResNet"),
                     ("out", "also write the report as JSON to this path"),
+                    (
+                        "url",
+                        "drive a remote `ilmpq serve --listen` at this base URL \
+                         (e.g. http://127.0.0.1:8080) over real sockets; the \
+                         server-side options (backend/workers/...) are ignored",
+                    ),
+                    ("conns", "client connections for --url (default 8)"),
                 ],
             );
+            if let Some(url) = a.get("url") {
+                // Remote mode: the same open-loop Poisson workload over
+                // HTTP, statuses folded into the same outcome classes.
+                let spec = loadgen::LoadSpec {
+                    requests: a.usize_or("requests", 512),
+                    rate: a.f64_or("rate", 2000.0),
+                    malformed_frac: a.f64_or("malformed", 0.0),
+                    seed: a.u64_or("seed", 42),
+                };
+                let (report, server_metrics) =
+                    loadgen::run_remote(url, &spec, a.usize_or("conns", 8))?;
+                println!("target: {url}");
+                println!("{}", report.render());
+                if server_metrics != ilmpq::util::Json::Null {
+                    println!(
+                        "server /v1/metrics: {}",
+                        server_metrics.to_string_compact()
+                    );
+                }
+                if let Some(path) = a.get("out") {
+                    std::fs::write(path, report.to_json().to_string_compact())?;
+                    println!("wrote {path}");
+                }
+                return Ok(());
+            }
             let backend_name = a.str_or("backend", "qgemm").to_string();
             backend::spec(&backend_name)?;
             let ratio = a.str_or("ratio", "ilmpq2").to_string();
@@ -298,29 +373,15 @@ fn run(cmd: &str) -> Result<()> {
             };
             // Real artifacts when present, else the synthetic fixture — so
             // the pipeline runs end-to-end on a toolchain-only machine.
-            let (manifest, be) = if a.flag("synthetic") {
-                loadgen::synth_fixture(&backend_name, &ratio, threads, seed)?
-            } else {
-                match Manifest::load(&Manifest::default_dir()) {
-                    Ok(manifest) => {
-                        let be = backend::create_serving(
-                            &backend_name,
-                            &manifest,
-                            &ratio,
-                            true,
-                            threads,
-                        )?;
-                        (manifest, be)
-                    }
-                    Err(e) => {
-                        eprintln!(
-                            "[loadgen] no artifact manifest ({e:#}); \
-                             using the synthetic TinyResNet fixture"
-                        );
-                        loadgen::synth_fixture(&backend_name, &ratio, threads, seed)?
-                    }
-                }
-            };
+            let (manifest, be) = loadgen::fixture_or_artifacts(
+                &backend_name,
+                &ratio,
+                true,
+                threads,
+                seed,
+                a.flag("synthetic"),
+                "loadgen",
+            )?;
             let cfg = ServeConfig {
                 workers: a.usize_or("workers", 2),
                 max_wait: Duration::from_millis(a.u64_or("max-wait-ms", 5)),
@@ -405,9 +466,14 @@ commands:
   accuracy      Table I accuracy rows via QAT on the AOT model
   ptq           deterministic PTQ probe (train once, quantize each config)
   train         one QAT run with the loss curve
-  serve         inference serving demo (dynamic batching, --backend NAME)
+  serve         inference serving: `--listen ADDR` puts the HTTP/1.1 front
+                end on the admission pipeline (POST /v1/infer, GET
+                /v1/healthz, GET /v1/metrics); without it, the in-process
+                demo loop runs (dynamic batching, --backend NAME)
   loadgen       open-loop offered-load driver for the admission pipeline
-                (--rate, --queue-depth, --malformed; runs artifact-free)
+                (--rate, --queue-depth, --malformed; runs artifact-free);
+                `--url http://host:port` drives a remote `serve --listen`
+                over real sockets with the same outcome classes
   backends      list the registered execution backends
   info          manifest / artifacts summary
 run `ilmpq <cmd> --help` for options.";

@@ -129,7 +129,14 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // JSON has no Infinity/NaN tokens: Rust's `{}` formatting
+                    // would emit `inf`/`NaN` and poison every downstream
+                    // parse of the document. Refuse, degrading the one value
+                    // to `null` (what Python's json.dumps calls
+                    // allow_nan=False semantics, minus the exception).
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     out.push_str(&format!("{}", *n as i64));
                 } else {
                     out.push_str(&format!("{n}"));
@@ -451,6 +458,24 @@ mod tests {
     fn integers_serialize_without_fraction() {
         assert_eq!(Json::Num(5.0).to_string_compact(), "5");
         assert_eq!(Json::Num(5.25).to_string_compact(), "5.25");
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null_and_roundtrip() {
+        // Regression: `format!("{}", f64::INFINITY)` is `inf`, which is not
+        // a JSON token — a single +inf summary field (empty latency track)
+        // made the whole BENCH_serving.json unparseable.
+        assert_eq!(Json::Num(f64::INFINITY).to_string_compact(), "null");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).to_string_compact(), "null");
+        assert_eq!(Json::Num(f64::NAN).to_string_compact(), "null");
+        let doc = Json::obj(vec![
+            ("ok", Json::Num(1.5)),
+            ("poisoned", Json::Num(f64::INFINITY)),
+        ]);
+        let text = doc.to_string_compact();
+        let back = Json::parse(&text).expect("document with a non-finite member must stay parseable");
+        assert_eq!(back.get("poisoned"), Some(&Json::Null));
+        assert_eq!(back.get("ok").and_then(|v| v.as_f64()), Some(1.5));
     }
 
     // ---- property tests: parse ∘ write = id over random documents --------

@@ -32,12 +32,26 @@ pub fn variance_f32(xs: &[f32]) -> f64 {
 }
 
 /// Linear-interpolated percentile (q in [0, 100]) of an unsorted slice.
+///
+/// NaN-tolerant: samples are ordered with `f64::total_cmp`, so one poisoned
+/// latency record degrades that record's rank (NaN sorts above +inf) instead
+/// of panicking inside a metrics snapshot the way `partial_cmp().unwrap()`
+/// did. Callers needing several percentiles of the same data should sort
+/// once and use [`percentile_sorted`] (what [`Summary::of`] does).
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
+    percentile_sorted(&v, q)
+}
+
+/// [`percentile`] over a slice already sorted with `f64::total_cmp`.
+pub fn percentile_sorted(v: &[f64], q: f64) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
     let pos = (q / 100.0) * (v.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -63,16 +77,55 @@ pub struct Summary {
 
 impl Summary {
     pub fn of(xs: &[f64]) -> Summary {
-        Summary {
-            n: xs.len(),
-            mean: mean(xs),
-            std: stddev(xs),
-            p50: percentile(xs, 50.0),
-            p95: percentile(xs, 95.0),
-            p99: percentile(xs, 99.0),
-            min: xs.iter().copied().fold(f64::INFINITY, f64::min),
-            max: xs.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+        if xs.is_empty() {
+            // An empty track has no extrema; the unguarded folds returned
+            // min=+inf / max=-inf, which leaked as non-JSON `inf` tokens
+            // into every serialized report. All-zero is the sentinel.
+            return Summary {
+                n: 0,
+                mean: 0.0,
+                std: 0.0,
+                p50: 0.0,
+                p95: 0.0,
+                p99: 0.0,
+                min: 0.0,
+                max: 0.0,
+            };
         }
+        // One sort serves all three percentiles — a metrics scrape builds
+        // five summaries over up-to-64k-sample tracks, so the historic
+        // three-clones-three-sorts-per-summary was real CPU on the
+        // `/v1/metrics` path. min/max keep the NaN-ignoring folds (a NaN
+        // sample sorts to the end under total_cmp and would masquerade as
+        // the max).
+        let mut v: Vec<f64> = xs.to_vec();
+        v.sort_by(f64::total_cmp);
+        Summary {
+            n: v.len(),
+            mean: mean(&v),
+            std: stddev(&v),
+            p50: percentile_sorted(&v, 50.0),
+            p95: percentile_sorted(&v, 95.0),
+            p99: percentile_sorted(&v, 99.0),
+            min: v.iter().copied().fold(f64::INFINITY, f64::min),
+            max: v.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+        }
+    }
+
+    /// Machine-readable form shared by every report emitter (`loadgen
+    /// --out`, `BENCH_serving.json`, the `/v1/metrics` HTTP endpoint).
+    /// Durations are in seconds, matching the recorded samples.
+    pub fn to_json(&self) -> crate::util::Json {
+        use crate::util::Json;
+        Json::obj(vec![
+            ("n", Json::Num(self.n as f64)),
+            ("mean_s", Json::Num(self.mean)),
+            ("p50_s", Json::Num(self.p50)),
+            ("p95_s", Json::Num(self.p95)),
+            ("p99_s", Json::Num(self.p99)),
+            ("min_s", Json::Num(self.min)),
+            ("max_s", Json::Num(self.max)),
+        ])
     }
 }
 
@@ -170,6 +223,38 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 4.0);
         assert!((s.p50 - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_summary_is_all_finite_zeros() {
+        // Regression: min/max used to come back +inf/-inf and leak non-JSON
+        // `inf` tokens into BENCH_serving.json / `loadgen --out`.
+        let s = Summary::of(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!((s.min, s.max), (0.0, 0.0));
+        assert!(
+            [s.mean, s.std, s.p50, s.p95, s.p99, s.min, s.max]
+                .iter()
+                .all(|v| v.is_finite())
+        );
+        // The serialized form must round-trip through the strict parser.
+        let text = s.to_json().to_string_compact();
+        assert!(!text.contains("inf"), "non-JSON token in {text}");
+        let back = crate::util::Json::parse(&text).expect("empty summary must serialize as valid JSON");
+        assert_eq!(back.get("min_s").and_then(|v| v.as_f64()), Some(0.0));
+    }
+
+    #[test]
+    fn percentile_survives_nan_samples() {
+        // Regression: `partial_cmp().unwrap()` panicked on the first NaN
+        // sample, killing the whole metrics snapshot. With total_cmp the
+        // NaN sorts above +inf and only pollutes the top ranks.
+        let xs = [2.0, f64::NAN, 1.0, 3.0];
+        let p50 = percentile(&xs, 50.0);
+        assert!(p50.is_finite(), "median of mostly-finite samples: {p50}");
+        assert!((p50 - 2.5).abs() < 1e-9, "NaN must rank last: {p50}");
+        // All-NaN degrades to NaN without panicking.
+        assert!(percentile(&[f64::NAN], 50.0).is_nan());
     }
 
     #[test]

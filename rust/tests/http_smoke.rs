@@ -1,0 +1,541 @@
+//! End-to-end smoke tests for the HTTP/1.1 front end (`coordinator::http`)
+//! over real loopback sockets, on the artifact-free synthetic qgemm
+//! fixture — so the whole network path (accept pool, request parsing,
+//! admission pipeline, typed-error → status mapping, reply serialization)
+//! runs in the `--no-default-features` CI leg.
+//!
+//! Pinned here (the acceptance contract for `ilmpq serve --listen`):
+//!
+//! * concurrent clients get correct logits over the wire;
+//! * the four typed-error mappings: malformed body / wrong-length image →
+//!   `400`, queue-full at depth → `429`, failing backend → `500`,
+//!   draining server → `503`;
+//! * a malformed or stalled HTTP request is answered (or timed out) and
+//!   **never wedges a handler** — the next request on a fresh connection
+//!   still succeeds;
+//! * the remote load generator (`loadgen::run_remote`, `ilmpq loadgen
+//!   --url`) reproduces the in-process outcome classes over the wire.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use ilmpq::backend::{BatchOutput, InferenceBackend};
+use ilmpq::coordinator::{
+    loadgen, HttpClient, HttpConfig, HttpServer, HttpTarget, ServeConfig, Server,
+};
+use ilmpq::runtime::Manifest;
+use ilmpq::util::{Json, Rng};
+
+/// Synthetic manifest + qgemm backend + running server + HTTP front end on
+/// an ephemeral loopback port.
+fn start_front(
+    ratio: &str,
+    serve_cfg: ServeConfig,
+    http_workers: usize,
+) -> (HttpServer, Manifest) {
+    let (m, be) = loadgen::synth_fixture("qgemm", ratio, Some(2), 11).unwrap();
+    start_front_with(&m, be, serve_cfg, http_workers)
+}
+
+fn start_front_with(
+    m: &Manifest,
+    be: Arc<dyn InferenceBackend>,
+    serve_cfg: ServeConfig,
+    http_workers: usize,
+) -> (HttpServer, Manifest) {
+    let server = Server::start(m, be, serve_cfg).unwrap();
+    let front = HttpServer::start(
+        server,
+        m,
+        HttpConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: http_workers,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    (front, m.clone())
+}
+
+fn client_for(front: &HttpServer) -> HttpClient {
+    let target = HttpTarget::parse(&format!("http://{}", front.local_addr())).unwrap();
+    HttpClient::connect(&target, Duration::from_secs(30))
+}
+
+fn infer_body(image: &[f32]) -> String {
+    Json::obj(vec![(
+        "image",
+        Json::Arr(image.iter().map(|&v| Json::Num(v as f64)).collect()),
+    )])
+    .to_string_compact()
+}
+
+fn normal_image(img: usize, rng: &mut Rng) -> Vec<f32> {
+    let mut image = vec![0f32; img];
+    rng.fill_normal(&mut image, 1.0);
+    image
+}
+
+#[test]
+fn concurrent_clients_get_logits_over_the_wire() {
+    let (front, m) = start_front(
+        "web",
+        ServeConfig {
+            workers: 2,
+            max_wait: Duration::from_millis(2),
+            ratio_name: "web".into(),
+            ..Default::default()
+        },
+        8,
+    );
+    let img = m.data.image_elems();
+    let classes = m.classes;
+
+    // healthz advertises the model geometry (what loadgen --url probes).
+    let mut probe = client_for(&front);
+    let (code, body) = probe.request("GET", "/v1/healthz", None).unwrap();
+    assert_eq!(code, 200, "{body}");
+    let health = Json::parse(&body).unwrap();
+    assert_eq!(health.get("image_elems").and_then(Json::as_usize), Some(img));
+    assert_eq!(health.get("classes").and_then(Json::as_usize), Some(classes));
+
+    // 4 concurrent keep-alive clients x 8 sequential requests each.
+    let addr = front.local_addr();
+    let handles: Vec<_> = (0..4u64)
+        .map(|t| {
+            std::thread::spawn(move || {
+                let target = HttpTarget::parse(&format!("http://{addr}")).unwrap();
+                let mut client = HttpClient::connect(&target, Duration::from_secs(30));
+                let mut rng = Rng::new(100 + t);
+                let mut ok = 0usize;
+                for _ in 0..8 {
+                    let image = {
+                        let mut v = vec![0f32; img];
+                        rng.fill_normal(&mut v, 1.0);
+                        v
+                    };
+                    let (code, body) =
+                        client.request("POST", "/v1/infer", Some(&infer_body(&image))).unwrap();
+                    assert_eq!(code, 200, "{body}");
+                    let j = Json::parse(&body).unwrap();
+                    let logits = j.get("logits").and_then(Json::as_arr).unwrap();
+                    assert_eq!(logits.len(), classes);
+                    let pred = j.get("pred").and_then(Json::as_usize).unwrap();
+                    assert!(pred < classes);
+                    let qw = j.get("queue_wait_s").and_then(Json::as_f64).unwrap();
+                    let e2e = j.get("e2e_s").and_then(Json::as_f64).unwrap();
+                    assert!(qw <= e2e, "queue_wait {qw} must bound below e2e {e2e}");
+                    ok += 1;
+                }
+                ok
+            })
+        })
+        .collect();
+    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(total, 32);
+
+    // /v1/metrics reflects the served traffic and parses strictly.
+    let (code, body) = probe.request("GET", "/v1/metrics", None).unwrap();
+    assert_eq!(code, 200);
+    let metrics = Json::parse(&body).expect("metrics endpoint must emit valid JSON");
+    assert_eq!(
+        metrics.get("requests_done").and_then(Json::as_usize),
+        Some(32),
+        "{body}"
+    );
+    assert!(!body.contains("inf"), "non-JSON token leaked into {body}");
+
+    let final_metrics = front.stop();
+    assert_eq!(
+        ilmpq::coordinator::Metrics::get(&final_metrics.requests_done),
+        32
+    );
+}
+
+#[test]
+fn wire_logits_match_direct_backend_execution() {
+    let (m, be) = loadgen::synth_fixture("qgemm", "par", Some(2), 17).unwrap();
+    let (front, m) = start_front_with(
+        &m,
+        be.clone(),
+        ServeConfig {
+            workers: 1,
+            max_wait: Duration::from_millis(1),
+            ratio_name: "par".into(),
+            ..Default::default()
+        },
+        2,
+    );
+    let img = m.data.image_elems();
+    let mut rng = Rng::new(5);
+    let image = normal_image(img, &mut rng);
+    let reference = be.run_batch(&image, 1).unwrap();
+
+    let mut client = client_for(&front);
+    let (code, body) = client.request("POST", "/v1/infer", Some(&infer_body(&image))).unwrap();
+    assert_eq!(code, 200, "{body}");
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.get("pred").and_then(Json::as_usize), Some(reference.preds[0]));
+    let logits: Vec<f32> = j
+        .get("logits")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as f32)
+        .collect();
+    // f32 -> f64 -> shortest-roundtrip text -> f64 -> f32 is lossless, so
+    // the wire must not perturb the numerics at all (== rather than
+    // to_bits: the writer's integer fast path folds -0.0 into 0).
+    assert_eq!(logits.len(), reference.logits.len());
+    assert_eq!(
+        logits, reference.logits,
+        "wire logits diverged from direct execution"
+    );
+    front.stop();
+}
+
+#[test]
+fn malformed_bodies_and_wrong_geometry_map_to_400() {
+    let (front, m) = start_front(
+        "bad",
+        ServeConfig {
+            workers: 1,
+            max_wait: Duration::from_millis(1),
+            ratio_name: "bad".into(),
+            ..Default::default()
+        },
+        2,
+    );
+    let img = m.data.image_elems();
+    let mut client = client_for(&front);
+
+    for (body, what) in [
+        ("this is not json".to_string(), "non-JSON body"),
+        ("{\"no_image\": 1}".to_string(), "missing image key"),
+        ("{\"image\": \"zebra\"}".to_string(), "non-array image"),
+        ("{\"image\": [1, \"x\"]}".to_string(), "non-numeric element"),
+    ] {
+        let (code, reply) = client.request("POST", "/v1/infer", Some(&body)).unwrap();
+        assert_eq!(code, 400, "{what}: {reply}");
+        let j = Json::parse(&reply).unwrap();
+        assert_eq!(j.get("kind").and_then(Json::as_str), Some("bad_request"), "{what}");
+    }
+
+    // Wrong-length image: decodes fine, then bounces off *admission* (the
+    // batch-corruption class) — kind pins that it came from the pipeline.
+    let short = vec![0.25f32; img / 2];
+    let (code, reply) = client.request("POST", "/v1/infer", Some(&infer_body(&short))).unwrap();
+    assert_eq!(code, 400, "{reply}");
+    let j = Json::parse(&reply).unwrap();
+    assert_eq!(j.get("kind").and_then(Json::as_str), Some("invalid_input"), "{reply}");
+
+    // Unknown route / method mapping.
+    let (code, _) = client.request("GET", "/v1/nope", None).unwrap();
+    assert_eq!(code, 404);
+    let (code, _) = client.request("GET", "/v1/infer", None).unwrap();
+    assert_eq!(code, 405);
+
+    let metrics = front.stop();
+    assert_eq!(ilmpq::coordinator::Metrics::get(&metrics.requests_done), 0);
+}
+
+/// Wraps a real backend, delaying every batch — makes the depth-4 queue
+/// bound trip deterministically under a concurrent burst.
+struct SlowBackend {
+    inner: Arc<dyn InferenceBackend>,
+    delay: Duration,
+}
+
+impl InferenceBackend for SlowBackend {
+    fn name(&self) -> &str {
+        "slow"
+    }
+
+    fn supports_frozen(&self) -> bool {
+        self.inner.supports_frozen()
+    }
+
+    fn run_batch(&self, images: &[f32], batch: usize) -> anyhow::Result<BatchOutput> {
+        std::thread::sleep(self.delay);
+        self.inner.run_batch(images, batch)
+    }
+}
+
+#[test]
+fn queue_full_maps_to_429_under_burst() {
+    let depth = 4usize;
+    let (m, inner) = loadgen::synth_fixture("qgemm", "ovl", Some(1), 23).unwrap();
+    let be: Arc<dyn InferenceBackend> =
+        Arc::new(SlowBackend { inner, delay: Duration::from_millis(150) });
+    let (front, m) = start_front_with(
+        &m,
+        be,
+        ServeConfig {
+            workers: 1,
+            max_wait: Duration::from_millis(1),
+            queue_depth: depth,
+            ratio_name: "ovl".into(),
+            ..Default::default()
+        },
+        16,
+    );
+    let img = m.data.image_elems();
+    let addr = front.local_addr();
+
+    // 16 truly concurrent one-shot clients: the backend needs >=150ms per
+    // batch, so all 16 submissions land inside one batch window and at
+    // most `depth` can be in the system — the rest must see 429.
+    let handles: Vec<_> = (0..16u64)
+        .map(|t| {
+            std::thread::spawn(move || {
+                let target = HttpTarget::parse(&format!("http://{addr}")).unwrap();
+                let mut client = HttpClient::connect(&target, Duration::from_secs(30));
+                let mut rng = Rng::new(1000 + t);
+                let image = {
+                    let mut v = vec![0f32; img];
+                    rng.fill_normal(&mut v, 1.0);
+                    v
+                };
+                client.request("POST", "/v1/infer", Some(&infer_body(&image))).unwrap()
+            })
+        })
+        .collect();
+    let (mut done, mut shed) = (0usize, 0usize);
+    for h in handles {
+        let (code, body) = h.join().unwrap();
+        match code {
+            200 => done += 1,
+            429 => {
+                let j = Json::parse(&body).unwrap();
+                assert_eq!(j.get("kind").and_then(Json::as_str), Some("queue_full"));
+                shed += 1;
+            }
+            other => panic!("expected 200 or 429, got {other}: {body}"),
+        }
+    }
+    assert_eq!(done + shed, 16);
+    assert!(done >= 1, "the first depth-worth must complete");
+    assert!(shed >= 1, "a 16-way burst at depth {depth} must shed");
+    front.stop();
+}
+
+/// A backend whose every batch errors — over the wire this must surface as
+/// a 500 with the `backend_failed` kind.
+struct FailingBackend;
+
+impl InferenceBackend for FailingBackend {
+    fn name(&self) -> &str {
+        "failing"
+    }
+
+    fn supports_frozen(&self) -> bool {
+        true
+    }
+
+    fn run_batch(&self, _images: &[f32], _batch: usize) -> anyhow::Result<BatchOutput> {
+        anyhow::bail!("injected backend failure")
+    }
+}
+
+#[test]
+fn backend_failure_maps_to_500() {
+    let (m, _unused) = loadgen::synth_fixture("qgemm", "flk", Some(1), 29).unwrap();
+    let (front, m) = start_front_with(
+        &m,
+        Arc::new(FailingBackend),
+        ServeConfig {
+            workers: 1,
+            max_wait: Duration::from_millis(1),
+            ratio_name: "flk".into(),
+            ..Default::default()
+        },
+        2,
+    );
+    let img = m.data.image_elems();
+    let mut rng = Rng::new(3);
+    let mut client = client_for(&front);
+    let (code, body) = client
+        .request("POST", "/v1/infer", Some(&infer_body(&normal_image(img, &mut rng))))
+        .unwrap();
+    assert_eq!(code, 500, "{body}");
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.get("kind").and_then(Json::as_str), Some("backend_failed"));
+    assert!(
+        j.get("error").and_then(Json::as_str).unwrap().contains("injected"),
+        "{body}"
+    );
+    front.stop();
+}
+
+#[test]
+fn draining_server_maps_to_503_while_http_stays_up() {
+    let (front, m) = start_front(
+        "drn",
+        ServeConfig {
+            workers: 1,
+            max_wait: Duration::from_millis(1),
+            ratio_name: "drn".into(),
+            ..Default::default()
+        },
+        2,
+    );
+    let img = m.data.image_elems();
+    let mut rng = Rng::new(7);
+    let mut client = client_for(&front);
+
+    // Sanity: serving before the drain.
+    let (code, _) = client
+        .request("POST", "/v1/infer", Some(&infer_body(&normal_image(img, &mut rng))))
+        .unwrap();
+    assert_eq!(code, 200);
+
+    // Graceful-drain front half: the admission pipeline refuses new work
+    // while the HTTP layer keeps answering (the 503 is the answer).
+    front.server().begin_shutdown();
+    let (code, body) = client
+        .request("POST", "/v1/infer", Some(&infer_body(&normal_image(img, &mut rng))))
+        .unwrap();
+    assert_eq!(code, 503, "{body}");
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.get("kind").and_then(Json::as_str), Some("shutting_down"));
+
+    // healthz still answers during the drain.
+    let (code, _) = client.request("GET", "/v1/healthz", None).unwrap();
+    assert_eq!(code, 200);
+    front.stop();
+}
+
+#[test]
+fn malformed_http_never_wedges_a_handler() {
+    let (m, be) = loadgen::synth_fixture("qgemm", "mal", Some(2), 11).unwrap();
+    let server = Server::start(
+        &m,
+        be,
+        ServeConfig {
+            workers: 1,
+            max_wait: Duration::from_millis(1),
+            ratio_name: "mal".into(),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let front = HttpServer::start(
+        server,
+        &m,
+        HttpConfig {
+            addr: "127.0.0.1:0".into(),
+            // One handler on purpose: if garbage wedged it, the follow-up
+            // request could never be served.
+            workers: 1,
+            // Short receive budget so the stalled-request 408 fires well
+            // inside the client-side read timeouts below.
+            request_timeout: Duration::from_millis(500),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let addr = front.local_addr();
+    let img = m.data.image_elems();
+
+    // 1. Complete-but-garbage request line: answered 400, connection closed.
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"GARBAGE REQUEST\r\n\r\n").unwrap();
+        let mut reply = String::new();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        s.read_to_string(&mut reply).unwrap();
+        assert!(
+            reply.starts_with("HTTP/1.1 400"),
+            "garbage must be answered 400: {reply:?}"
+        );
+    }
+
+    // 2. Partial request that goes quiet: the handler must time it out
+    //    (408) instead of waiting forever.
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"POST /v1/infer HTTP/1.1\r\ncontent-le").unwrap();
+        // No more bytes: the per-request receive budget expires and the
+        // handler answers instead of holding the connection.
+        let mut reply = String::new();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        s.read_to_string(&mut reply).unwrap();
+        assert!(
+            reply.starts_with("HTTP/1.1 408"),
+            "stalled request must be timed out: {reply:?}"
+        );
+    }
+
+    // 3. Declared body larger than the limit: bounced with 413 before any
+    //    buffering.
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"POST /v1/infer HTTP/1.1\r\ncontent-length: 999999999\r\n\r\n")
+            .unwrap();
+        let mut reply = String::new();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        s.read_to_string(&mut reply).unwrap();
+        assert!(
+            reply.starts_with("HTTP/1.1 413"),
+            "oversized body must be refused: {reply:?}"
+        );
+    }
+
+    // 4. The handler survived all of it: a well-formed request succeeds.
+    let mut rng = Rng::new(9);
+    let mut client = client_for(&front);
+    let (code, body) = client
+        .request("POST", "/v1/infer", Some(&infer_body(&normal_image(img, &mut rng))))
+        .unwrap();
+    assert_eq!(code, 200, "handler wedged by malformed traffic: {body}");
+    front.stop();
+}
+
+#[test]
+fn remote_loadgen_reproduces_outcome_classes_over_the_wire() {
+    let (front, _m) = start_front(
+        "rlg",
+        ServeConfig {
+            workers: 1,
+            max_wait: Duration::from_millis(1),
+            ratio_name: "rlg".into(),
+            ..Default::default()
+        },
+        4,
+    );
+    let url = format!("http://{}", front.local_addr());
+    let spec = loadgen::LoadSpec {
+        requests: 24,
+        rate: 0.0, // unpaced
+        malformed_frac: 0.5,
+        seed: 11,
+    };
+    let (r, server_metrics) = loadgen::run_remote(&url, &spec, 3).unwrap();
+    assert_eq!(r.lost, 0, "typed pipeline over the wire must answer every request");
+    assert_eq!(r.slow, 0, "tiny run must drain inside the deadline");
+    assert_eq!(r.done + r.invalid + r.shed + r.failed + r.shutdown, r.requests);
+    assert!(r.done > 0, "{r:?}");
+    assert!(r.invalid > 0, "malformed_frac must produce 400s: {r:?}");
+    assert!(r.goodput_rps > 0.0);
+    // Server-reported timings rode along in every 200 body, and the
+    // client-side round-trip was recorded alongside them.
+    assert_eq!(r.e2e.n, r.done, "every reply must carry e2e_s: {r:?}");
+    assert_eq!(r.client_rtt.n, r.done);
+    assert!(r.e2e.p50 > 0.0);
+    // The client round-trip spans a superset of the server's e2e interval.
+    assert!(
+        r.client_rtt.p50 >= r.e2e.p50 * 0.99,
+        "rtt {} vs e2e {}",
+        r.client_rtt.p50,
+        r.e2e.p50
+    );
+    // The server-side snapshot rode along and agrees on the done count.
+    assert_eq!(
+        server_metrics.get("requests_done").and_then(Json::as_usize),
+        Some(r.done),
+        "{server_metrics:?}"
+    );
+    front.stop();
+}
