@@ -28,7 +28,9 @@ fn main() -> anyhow::Result<()> {
     );
 
     // ---- 2. quantization config ------------------------------------------
-    let masks = m.default_masks.get("ilmpq2").expect("ilmpq2 masks").clone();
+    // Named plans resolve through the first-class plan API (the legacy
+    // `default_masks` table re-expressed as `QuantPlan`s).
+    let masks = m.plan("ilmpq2")?.masks;
     let params = m.load_init_params()?;
 
     // ---- 3. one quantized inference ----------------------------------------

@@ -22,6 +22,7 @@ fn main() -> anyhow::Result<()> {
             ("net", "workload: resnet18|vgg11|cnn-small|tinyresnet"),
             ("fixed8", "Fixed-8 percentage (default 5)"),
             ("step", "sweep granularity in % (default 1)"),
+            ("out", "save each device's winning assignment as <out>-<device>.json"),
         ],
     );
     let net_name = args.str_or("net", "resnet18");
@@ -51,6 +52,14 @@ fn main() -> anyhow::Result<()> {
             print!("{:.0}%→{:.0}  ", p.ratio.pot4, p.throughput_gops);
         }
         println!("\n");
+        if let Some(out) = args.get("out") {
+            // The winner as a first-class, loadable quantization plan.
+            let path =
+                format!("{}-{}.json", out.trim_end_matches(".json"), device.name);
+            let plan = r.winning_plan(&net);
+            plan.save(std::path::Path::new(&path))?;
+            println!("  wrote winning plan to {path}");
+        }
     }
     Ok(())
 }

@@ -29,6 +29,7 @@ use ilmpq::backend::{self, InferenceBackend};
 use ilmpq::coordinator::{HttpConfig, HttpServer, ServeConfig, Server};
 use ilmpq::experiments::table1;
 use ilmpq::model::resnet18;
+use ilmpq::quant::QuantSource;
 use ilmpq::runtime::Manifest;
 use ilmpq::util::{Args, Rng};
 
@@ -39,7 +40,8 @@ fn main() -> anyhow::Result<()> {
         &[
             ("rate", "arrival rate req/s (default 2000)"),
             ("requests", "total requests (default 1024)"),
-            ("ratio", "quantization config (default ilmpq2)"),
+            ("ratio", "named quantization plan (default ilmpq2)"),
+            ("plan", "serve a saved plan file (see `ilmpq plan derive`)"),
             ("device", "FPGA-sim device (default xc7z045)"),
             ("workers", "worker threads (default 2)"),
             ("max-wait-ms", "batcher deadline (default 5)"),
@@ -52,20 +54,26 @@ fn main() -> anyhow::Result<()> {
     let backend_name = args.str_or("backend", "pjrt").to_string();
     backend::spec(&backend_name)?;
     let manifest = Manifest::load(&Manifest::default_dir())?;
-    let ratio = args.str_or("ratio", "ilmpq2").to_string();
+    // One resolution path for the quantization config — the same
+    // `from_cli` mapping the `ilmpq` binary uses.
+    let source = QuantSource::from_cli(args.get("plan"), args.get("ratio"), None, "ilmpq2")?;
     let frozen = !args.flag("no-frozen");
-    let be = backend::create_serving(&backend_name, &manifest, &ratio, frozen, None)?;
+    let (be, plan) =
+        backend::create_serving(&backend_name, &manifest, &source, frozen, None)?;
     let cfg = ServeConfig {
         workers: args.usize_or("workers", 2),
         max_wait: Duration::from_millis(args.u64_or("max-wait-ms", 5)),
         queue_depth: args.usize_or("queue-depth", 1024),
-        ratio_name: ratio.clone(),
+        plan,
         device: args.str_or("device", "xc7z045").to_string(),
         frozen,
     };
     let device_name = cfg.device.clone();
     println!("backend: {}", be.name());
     let server = Server::start(&manifest, be, cfg)?;
+    if let Some(p) = &server.plan {
+        println!("plan {:?}: {}", p.name, p.provenance.describe());
+    }
     println!("sim-FPGA model for this config: {}", server.sim.row());
 
     if let Some(addr) = args.get("listen") {

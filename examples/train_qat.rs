@@ -45,12 +45,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     let name = args.str_or("ratio", "ilmpq2");
-    let masks = rt
-        .manifest
-        .default_masks
-        .get(name)
-        .ok_or_else(|| anyhow::anyhow!("unknown ratio {name}"))?
-        .clone();
+    let masks = rt.manifest.plan(name)?.masks;
     println!(
         "QAT {} with {} ({} steps, batch {})",
         rt.manifest.model_name, name, steps, rt.manifest.train_batch

@@ -26,7 +26,9 @@ fn main() -> anyhow::Result<()> {
     );
     let rt = Arc::new(Runtime::load_default()?);
     let m = &rt.manifest;
-    let masks = m.default_masks.get("ilmpq2").expect("ilmpq2").clone();
+    // Resolved through the first-class plan API (one resolution path).
+    let plan = m.plan("ilmpq2")?;
+    let masks = plan.masks.clone();
     let params = m.load_init_params()?;
 
     // ---- raw engine cost per batch size (fake-quant vs frozen path) --------
@@ -66,7 +68,7 @@ fn main() -> anyhow::Result<()> {
         let cfg = ServeConfig {
             workers: args.usize_or("workers", 2),
             max_wait: Duration::from_millis(5),
-            ratio_name: "ilmpq2".into(),
+            plan: Some(plan.clone()),
             device: "xc7z045".into(),
             ..Default::default()
         };

@@ -75,13 +75,13 @@ fn main() -> anyhow::Result<()> {
     for &rate in &rates {
         // Fresh server (and metrics) per point; the pack is cheap at this
         // model size and isolation keeps the percentiles per-rate.
-        let (m, be) =
+        let (m, be, plan) =
             loadgen::synth_fixture(&backend_name, "bench", threads, seed)?;
         let cfg = ServeConfig {
             workers,
             max_wait: Duration::from_millis(2),
             queue_depth,
-            ratio_name: "bench".into(),
+            plan: Some(plan),
             device: "xc7z045".into(),
             ..Default::default()
         };
@@ -128,13 +128,13 @@ fn main() -> anyhow::Result<()> {
              {conns} client connections, {http_workers} handler threads) =="
         );
         for &rate in &rates {
-            let (m, be) =
+            let (m, be, plan) =
                 loadgen::synth_fixture(&backend_name, "bench", threads, seed)?;
             let cfg = ServeConfig {
                 workers,
                 max_wait: Duration::from_millis(2),
                 queue_depth,
-                ratio_name: "bench".into(),
+                plan: Some(plan),
                 device: "xc7z045".into(),
                 ..Default::default()
             };

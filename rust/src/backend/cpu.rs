@@ -100,6 +100,10 @@ impl InferenceBackend for QgemmBackend {
         self.state.model().map(|_| ())
     }
 
+    fn active_masks(&self) -> Option<&MaskSet> {
+        self.state.masks.as_ref()
+    }
+
     fn run_batch(&self, images: &[f32], batch: usize) -> Result<BatchOutput> {
         self.state.run(images, batch)
     }

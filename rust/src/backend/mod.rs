@@ -49,6 +49,8 @@ use std::time::Duration;
 
 use anyhow::Result;
 
+use crate::quant::MaskSet;
+
 /// Logits + argmax + timing for one executed batch.
 #[derive(Debug, Clone)]
 pub struct BatchOutput {
@@ -84,6 +86,16 @@ pub trait InferenceBackend: Send + Sync {
     /// also work without it (paying the cost lazily on first use).
     fn prepare(&self) -> Result<()> {
         Ok(())
+    }
+
+    /// The mask set this backend retains and executes, when it keeps one
+    /// (the packed `qgemm` path and fake-quant PJRT do; frozen PJRT bakes
+    /// the masks into the weight image and the float reference freezes up
+    /// front, so they have nothing left to report). Lets the serving layer
+    /// cross-check the *advertised* quantization plan against what
+    /// actually executes.
+    fn active_masks(&self) -> Option<&MaskSet> {
+        None
     }
 
     /// Execute `batch` images (`batch * image_elems` floats, flattened

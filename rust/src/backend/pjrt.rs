@@ -34,6 +34,11 @@ pub struct PjrtBackend {
     params: Vec<HostTensor>,
     /// Per-layer (is8, is_pot) tensors — empty on the frozen path.
     mask_tensors: Vec<HostTensor>,
+    /// The retained mask set on the fake-quant path (`frozen = false`),
+    /// where masks are live runtime inputs — reported via `active_masks`
+    /// so the serving layer can cross-check the advertised plan. The
+    /// frozen path bakes masks into the weight image and keeps nothing.
+    masks: Option<MaskSet>,
     /// `"infer_frozen_b"` or `"infer_b"`; `run_batch` appends the size.
     prefix: &'static str,
 }
@@ -47,24 +52,31 @@ impl PjrtBackend {
         masks: &MaskSet,
         frozen: bool,
     ) -> PjrtBackend {
-        let (params, mask_tensors, prefix) = if frozen {
+        let (params, mask_tensors, retained, prefix) = if frozen {
             (
                 freeze::freeze_for_manifest(&rt.manifest, &params, masks),
                 Vec::new(),
+                None,
                 "infer_frozen_b",
             )
         } else {
             let mask_tensors = rt.manifest.mask_tensors(masks);
-            (params, mask_tensors, "infer_b")
+            (params, mask_tensors, Some(masks.clone()), "infer_b")
         };
-        PjrtBackend { rt, params, mask_tensors, prefix }
+        PjrtBackend { rt, params, mask_tensors, masks: retained, prefix }
     }
 
     /// Serve already-prepared params through the frozen artifacts as-is —
     /// the PTQ/eval path, where the caller freezes (or deliberately does
     /// not, for the unquantized reference row).
     pub fn frozen_as_given(rt: Arc<Runtime>, params: Vec<HostTensor>) -> PjrtBackend {
-        PjrtBackend { rt, params, mask_tensors: Vec::new(), prefix: "infer_frozen_b" }
+        PjrtBackend {
+            rt,
+            params,
+            mask_tensors: Vec::new(),
+            masks: None,
+            prefix: "infer_frozen_b",
+        }
     }
 }
 
@@ -75,6 +87,10 @@ impl InferenceBackend for PjrtBackend {
 
     fn supports_frozen(&self) -> bool {
         true
+    }
+
+    fn active_masks(&self) -> Option<&MaskSet> {
+        self.masks.as_ref()
     }
 
     /// Pre-compile every infer artifact this backend can serve, so no

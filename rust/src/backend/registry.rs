@@ -12,7 +12,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::quant::MaskSet;
+use crate::quant::{QuantPlan, QuantSource};
 use crate::runtime::{HostTensor, Manifest, Runtime};
 
 use super::{FloatRefBackend, InferenceBackend, PjrtBackend, QgemmBackend};
@@ -24,9 +24,10 @@ pub struct BackendInit {
     /// Trained/init params in AOT positional order, **raw** — freezing is
     /// backend policy, applied inside the builders where it belongs.
     pub params: Vec<HostTensor>,
-    /// Quantization config. Required by `qgemm` and by fake-quant `pjrt`;
-    /// `None` runs unquantized weights where the backend allows it.
-    pub masks: Option<MaskSet>,
+    /// Quantization plan (per-row masks + provenance). Required by `qgemm`
+    /// and by fake-quant `pjrt`; `None` runs unquantized weights where the
+    /// backend allows it.
+    pub plan: Option<QuantPlan>,
     /// Serve the pre-quantized weight image where the backend has one.
     pub frozen: bool,
     /// Engine-bearing runtime; required by the PJRT-class backends only.
@@ -36,12 +37,12 @@ pub struct BackendInit {
 }
 
 impl BackendInit {
-    /// Minimal init: manifest + params, frozen, no masks/runtime.
+    /// Minimal init: manifest + params, frozen, no plan/runtime.
     pub fn new(manifest: Manifest, params: Vec<HostTensor>) -> BackendInit {
         BackendInit {
             manifest,
             params,
-            masks: None,
+            plan: None,
             frozen: true,
             runtime: None,
             threads: None,
@@ -84,13 +85,15 @@ fn build_pjrt(init: &BackendInit) -> Result<Box<dyn InferenceBackend>> {
     let rt = init.runtime.clone().ok_or_else(|| {
         anyhow!("backend \"pjrt\" needs a loaded Runtime (artifacts + PJRT engine)")
     })?;
-    let be = match (&init.masks, init.frozen) {
-        (Some(masks), frozen) => PjrtBackend::new(rt, init.params.clone(), masks, frozen),
-        // No masks + frozen: run the params as given through the frozen
+    let be = match (&init.plan, init.frozen) {
+        (Some(plan), frozen) => {
+            PjrtBackend::new(rt, init.params.clone(), &plan.masks, frozen)
+        }
+        // No plan + frozen: run the params as given through the frozen
         // artifacts (the PTQ unquantized-reference row).
         (None, true) => PjrtBackend::frozen_as_given(rt, init.params.clone()),
         (None, false) => {
-            bail!("backend \"pjrt\" fake-quant serving needs a mask set")
+            bail!("backend \"pjrt\" fake-quant serving needs a quantization plan (mask set)")
         }
     };
     Ok(Box::new(be))
@@ -104,10 +107,11 @@ fn build_qgemm(init: &BackendInit) -> Result<Box<dyn InferenceBackend>> {
              (no fake-quant path); drop --no-frozen or use the pjrt backend"
         );
     }
-    let masks = init.masks.clone().ok_or_else(|| {
-        anyhow!("backend \"qgemm\" needs a mask set (quantization config)")
+    let plan = init.plan.as_ref().ok_or_else(|| {
+        anyhow!("backend \"qgemm\" needs a quantization plan (mask set)")
     })?;
-    let mut be = QgemmBackend::new(init.manifest.clone(), init.params.clone(), masks);
+    let mut be =
+        QgemmBackend::new(init.manifest.clone(), init.params.clone(), plan.masks.clone());
     if let Some(t) = init.threads {
         be = be.with_threads(t);
     }
@@ -115,12 +119,14 @@ fn build_qgemm(init: &BackendInit) -> Result<Box<dyn InferenceBackend>> {
 }
 
 fn build_float(init: &BackendInit) -> Result<Box<dyn InferenceBackend>> {
-    // With masks + frozen, freeze up front so the reference sees the same
+    // With a plan + frozen, freeze up front so the reference sees the same
     // weight image as the deployment backends; otherwise run params as-is.
-    let params = match (&init.masks, init.frozen) {
-        (Some(masks), true) => {
-            crate::quant::freeze::freeze_for_manifest(&init.manifest, &init.params, masks)
-        }
+    let params = match (&init.plan, init.frozen) {
+        (Some(plan), true) => crate::quant::freeze::freeze_for_manifest(
+            &init.manifest,
+            &init.params,
+            &plan.masks,
+        ),
         _ => init.params.clone(),
     };
     let mut be = FloatRefBackend::new(init.manifest.clone(), params);
@@ -190,45 +196,46 @@ pub fn create(name: &str, init: &BackendInit) -> Result<Box<dyn InferenceBackend
 }
 
 /// Serving convenience shared by the CLI and the examples — the whole
-/// recipe from an already-loaded manifest: look up the `ratio` mask set and
-/// the init params, attach a PJRT runtime only when the backend needs one
-/// (and this build has it — compiled-out backends fall through to
-/// `create`'s curated error), and construct. `threads` caps the CPU
-/// backends' worker pool (`None` = all cores; PJRT ignores it).
+/// recipe from an already-loaded manifest: resolve the [`QuantSource`] to a
+/// validated plan (one resolution path — plan file, named ratio, fresh
+/// derivation, or unquantized), load the init params, attach a PJRT runtime
+/// only when the backend needs one (and this build has it — compiled-out
+/// backends fall through to `create`'s curated error), and construct.
+/// `threads` caps the CPU backends' worker pool (`None` = all cores; PJRT
+/// ignores it). Returns the backend together with the resolved plan so the
+/// serving layer can advertise it (`GET /v1/plan`).
 pub fn create_serving(
     name: &str,
     manifest: &Manifest,
-    ratio: &str,
+    source: &QuantSource,
     frozen: bool,
     threads: Option<usize>,
-) -> Result<Arc<dyn InferenceBackend>> {
+) -> Result<(Arc<dyn InferenceBackend>, Option<QuantPlan>)> {
     let s = spec(name)?;
-    let masks = manifest
-        .default_masks
-        .get(ratio)
-        .ok_or_else(|| anyhow!("unknown ratio {ratio}"))?
-        .clone();
     let params = manifest.load_init_params()?;
+    // Params-aware resolution: `Derived` reuses the tensors just loaded
+    // instead of reading the whole weight file a second time.
+    let plan = source.resolve_with_params(manifest, &params)?;
     let runtime = if s.needs_runtime && s.available {
         Some(Arc::new(Runtime::from_manifest(manifest.clone())?))
     } else {
         None
     };
     let init = BackendInit {
-        masks: Some(masks),
+        plan: plan.clone(),
         frozen,
         runtime,
         threads,
         ..BackendInit::new(manifest.clone(), params)
     };
-    Ok(Arc::from(create(name, &init)?))
+    Ok((Arc::from(create(name, &init)?), plan))
 }
 
 #[cfg(test)]
 mod tests {
     use super::super::synth;
     use super::*;
-    use crate::quant::Ratio;
+    use crate::quant::{Provenance, Ratio};
     use crate::util::Rng;
 
     fn init() -> BackendInit {
@@ -236,7 +243,11 @@ mod tests {
         let m = synth::tiny_manifest(8, 8, 3, &[4, 8], 5);
         let params = synth::random_params(&m, &mut rng);
         let masks = synth::random_masks(&m, Ratio::new(65.0, 30.0, 5.0), &mut rng);
-        BackendInit { masks: Some(masks), ..BackendInit::new(m, params) }
+        let plan = QuantPlan::from_mask_set(
+            masks,
+            Provenance::Synthetic { seed: 5, ratio: "65:30:5".into() },
+        );
+        BackendInit { plan: Some(plan), ..BackendInit::new(m, params) }
     }
 
     #[test]
@@ -249,11 +260,11 @@ mod tests {
     }
 
     #[test]
-    fn qgemm_without_masks_is_a_clear_error() {
+    fn qgemm_without_a_plan_is_a_clear_error() {
         let mut i = init();
-        i.masks = None;
+        i.plan = None;
         let err = create("qgemm", &i).unwrap_err();
-        assert!(format!("{err:#}").contains("mask set"), "{err:#}");
+        assert!(format!("{err:#}").contains("quantization plan"), "{err:#}");
     }
 
     #[test]

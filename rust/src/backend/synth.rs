@@ -86,6 +86,14 @@ pub fn tiny_manifest(
     }
 }
 
+/// The serving fixture's canonical geometry — shared by
+/// `loadgen`/`serve --synthetic` and `ilmpq plan derive --synthetic`, so a
+/// plan derived artifact-free validates against the manifest the synthetic
+/// server actually runs.
+pub fn serving_manifest() -> Manifest {
+    tiny_manifest(16, 16, 3, &[8, 16], 10)
+}
+
 /// Random normal(0, 0.3) params for every manifest tensor, in order.
 pub fn random_params(m: &Manifest, rng: &mut Rng) -> Vec<HostTensor> {
     m.params

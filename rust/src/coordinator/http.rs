@@ -28,10 +28,15 @@
 //!   reject bad geometry, so the two ingresses (in-process and network)
 //!   can never drift.
 //! * `GET /v1/healthz` → `200` with the model geometry
-//!   (`image_elems`/`classes`), which is how the remote load generator
-//!   learns what to send.
+//!   (`image_elems`/`classes`) plus the active plan name, which is how the
+//!   remote load generator learns what to send.
 //! * `GET /v1/metrics` → `200` with [`Metrics::to_json`] (counters,
 //!   occupancy, shed rate, latency summaries).
+//! * `GET /v1/plan` → `200` with the active quantization plan's summary
+//!   (name, provenance, per-layer and total scheme fractions — see
+//!   [`crate::quant::QuantPlan::summary_json`]), so monitoring can see
+//!   exactly which precision configuration is serving; `404` when the
+//!   server runs unquantized.
 //!
 //! Protocol scope (documented, not accidental): HTTP/1.1 with
 //! `Content-Length` bodies and keep-alive, `Expect: 100-continue`
@@ -574,12 +579,26 @@ fn route(server: &Server, info: &ModelInfo, cfg: &HttpConfig, req: &HttpRequest)
                 ("model", Json::Str(info.model.clone())),
                 ("image_elems", Json::Num(info.image_elems as f64)),
                 ("classes", Json::Num(info.classes as f64)),
+                (
+                    "plan",
+                    match &server.plan {
+                        Some(p) => Json::Str(p.name.clone()),
+                        None => Json::Null,
+                    },
+                ),
             ])
             .to_string_compact(),
         ),
         ("GET", "/v1/metrics") => (200, server.metrics.to_json().to_string_compact()),
+        ("GET", "/v1/plan") => match &server.plan {
+            Some(p) => (200, p.summary_json().to_string_compact()),
+            None => (
+                404,
+                err_body("no quantization plan active (unquantized serving)", "no_plan"),
+            ),
+        },
         ("POST", "/v1/infer") => infer(server, cfg, &req.body),
-        (_, "/v1/healthz" | "/v1/metrics" | "/v1/infer") => (
+        (_, "/v1/healthz" | "/v1/metrics" | "/v1/infer" | "/v1/plan") => (
             405,
             err_body(
                 &format!("method {} not allowed on {}", req.method, req.path),

@@ -38,14 +38,14 @@ use std::sync::mpsc::{sync_channel, RecvTimeoutError, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use super::http::{HttpClient, HttpTarget};
 use super::metrics::Metrics;
 use super::server::{ServeError, Server};
 use crate::backend::{self, synth, BackendInit, InferenceBackend};
-use crate::quant::Ratio;
-use crate::runtime::Manifest;
+use crate::quant::{ratio_by_name, MaskSet, Provenance, QuantPlan, QuantSource, Ratio};
+use crate::runtime::{HostTensor, Manifest};
 use crate::util::stats::Summary;
 use crate::util::{Json, Rng};
 
@@ -492,7 +492,10 @@ pub fn run_remote(url: &str, spec: &LoadSpec, conns: usize) -> Result<(LoadRepor
 /// The shared serving-stack construction recipe behind `ilmpq serve` and
 /// `ilmpq loadgen`: the real artifact manifest + `create_serving` backend
 /// when artifacts exist, else (or when `force_synth`) the synthetic
-/// TinyResNet fixture, with the fallback logged under `log_prefix`.
+/// TinyResNet fixture, with the fallback logged under `log_prefix`. The
+/// quantization config comes from one [`QuantSource`] on both paths —
+/// plan file, named ratio, fresh derivation, or unquantized — and the
+/// resolved plan rides back for `ServeConfig::plan` / `GET /v1/plan`.
 ///
 /// The fallback triggers only when the manifest file is *absent* (no
 /// `make artifacts` on this machine — the toolchain-only case). A manifest
@@ -501,15 +504,15 @@ pub fn run_remote(url: &str, spec: &LoadSpec, conns: usize) -> Result<(LoadRepor
 /// `/v1/healthz` would be far worse than refusing to start.
 pub fn fixture_or_artifacts(
     backend_name: &str,
-    ratio: &str,
+    source: &QuantSource,
     frozen: bool,
     threads: Option<usize>,
     seed: u64,
     force_synth: bool,
     log_prefix: &str,
-) -> Result<(Manifest, Arc<dyn InferenceBackend>)> {
+) -> Result<(Manifest, Arc<dyn InferenceBackend>, Option<QuantPlan>)> {
     if force_synth {
-        return synth_fixture_frozen(backend_name, ratio, threads, seed, frozen);
+        return synth_fixture_source(backend_name, source, threads, seed, frozen);
     }
     let dir = Manifest::default_dir();
     if !dir.join("manifest.json").exists() {
@@ -517,51 +520,129 @@ pub fn fixture_or_artifacts(
             "[{log_prefix}] no artifact manifest in {dir:?}; \
              using the synthetic TinyResNet fixture"
         );
-        return synth_fixture_frozen(backend_name, ratio, threads, seed, frozen);
+        return synth_fixture_source(backend_name, source, threads, seed, frozen);
     }
     let manifest = Manifest::load(&dir)?;
-    let be = backend::create_serving(backend_name, &manifest, ratio, frozen, threads)?;
-    Ok((manifest, be))
+    let (be, plan) =
+        backend::create_serving(backend_name, &manifest, source, frozen, threads)?;
+    Ok((manifest, be, plan))
 }
 
-/// Artifact-free serving fixture: the synthetic TinyResNet manifest with a
-/// mixed mask set registered under `ratio_name`, plus a registry-built
-/// backend over it. This is what lets `ilmpq loadgen` and the serving bench
-/// run on a machine with nothing but a Rust toolchain.
+/// The synthetic serving plan: deterministic §II-C-shaped masks for the
+/// synthetic TinyResNet at `ratio`, drawn on the same RNG stream as the
+/// fixture's params — so `ilmpq plan derive --synthetic --seed S` produces
+/// exactly the masks that `--synthetic` serving generates at seed S.
+/// Returns the matching manifest and params alongside the plan.
+pub fn synth_plan(
+    name: &str,
+    ratio: Ratio,
+    seed: u64,
+) -> (Manifest, Vec<HostTensor>, QuantPlan) {
+    let mut rng = Rng::new(seed);
+    let m = synth::serving_manifest();
+    let params = synth::random_params(&m, &mut rng);
+    let plan = synth_plan_masks(&m, name, ratio, seed, &mut rng);
+    (m, params, plan)
+}
+
+/// The mask-drawing tail of [`synth_plan`]: must be called with an `rng`
+/// that has already drawn the fixture params, so the params-before-masks
+/// stream order (the invariant behind "`plan derive --synthetic`
+/// reproduces `serve --synthetic`'s masks") lives in exactly one place.
+fn synth_plan_masks(
+    m: &Manifest,
+    name: &str,
+    ratio: Ratio,
+    seed: u64,
+    rng: &mut Rng,
+) -> QuantPlan {
+    let masks = synth::random_masks(m, ratio, rng);
+    QuantPlan::from_mask_set(
+        MaskSet { name: name.to_string(), layers: masks.layers },
+        Provenance::Synthetic { seed, ratio: ratio.label() },
+    )
+    .with_model(&m.model_name)
+}
+
+/// Artifact-free serving fixture at the default 65:30:5 mix, plan
+/// registered under `plan_name`. This is what lets the serving bench and
+/// the smoke tests run on a machine with nothing but a Rust toolchain.
 pub fn synth_fixture(
     backend_name: &str,
-    ratio_name: &str,
+    plan_name: &str,
     threads: Option<usize>,
     seed: u64,
-) -> Result<(Manifest, Arc<dyn InferenceBackend>)> {
-    synth_fixture_frozen(backend_name, ratio_name, threads, seed, true)
+) -> Result<(Manifest, Arc<dyn InferenceBackend>, QuantPlan)> {
+    let (m, be, plan) = synth_fixture_source(
+        backend_name,
+        &QuantSource::NamedRatio(plan_name.to_string()),
+        threads,
+        seed,
+        true,
+    )?;
+    Ok((m, be, plan.expect("a named source always resolves to a plan")))
 }
 
-/// As [`synth_fixture`], with an explicit frozen-weights policy. The flag
-/// reaches the registry builder unchanged, so incoherent combinations
-/// (e.g. `qgemm` with `frozen = false`) fail here exactly as they do on
-/// the artifacts path — `--synthetic` must not make `--no-frozen` silently
-/// mean something else.
-pub fn synth_fixture_frozen(
+/// The synthetic twin of [`backend::create_serving`]: build the fixture
+/// manifest + params, resolve `source` against it (a named ratio *creates*
+/// the deterministic synthetic plan under that name; a plan file loads and
+/// validates against the fixture geometry), and construct the backend.
+/// `frozen` reaches the registry builder unchanged, so incoherent
+/// combinations (e.g. `qgemm` with `frozen = false`) fail here exactly as
+/// on the artifacts path — `--synthetic` must not make `--no-frozen`
+/// silently mean something else.
+pub fn synth_fixture_source(
     backend_name: &str,
-    ratio_name: &str,
+    source: &QuantSource,
     threads: Option<usize>,
     seed: u64,
     frozen: bool,
-) -> Result<(Manifest, Arc<dyn InferenceBackend>)> {
+) -> Result<(Manifest, Arc<dyn InferenceBackend>, Option<QuantPlan>)> {
+    let default_ratio = Ratio::new(65.0, 30.0, 5.0);
+    // One draw site for the fixture's RNG stream (params first, masks
+    // second) — every source variant shares it, so the PlanFile path's
+    // params cannot desynchronize from the derive path's.
     let mut rng = Rng::new(seed);
-    let mut m = synth::tiny_manifest(16, 16, 3, &[8, 16], 10);
+    let mut m = synth::serving_manifest();
     let params = synth::random_params(&m, &mut rng);
-    let masks = synth::random_masks(&m, Ratio::new(65.0, 30.0, 5.0), &mut rng);
-    m.default_masks.insert(ratio_name.to_string(), masks.clone());
+    let plan = match source {
+        QuantSource::NamedRatio(name) => {
+            // A Table-I name gets its actual mix (so `--synthetic --ratio
+            // ilmpq1` really serves 60:35:5); ad-hoc fixture names fall
+            // back to the paper's 65:30:5 default.
+            let ratio = ratio_by_name(name).unwrap_or(default_ratio);
+            Some(synth_plan_masks(&m, name, ratio, seed, &mut rng))
+        }
+        QuantSource::Derived { ratio } => Some(synth_plan_masks(
+            &m,
+            &crate::quant::plan::derived_plan_name(*ratio),
+            *ratio,
+            seed,
+            &mut rng,
+        )),
+        QuantSource::PlanFile(path) => {
+            let plan = QuantPlan::load(path)?;
+            plan.validate(&m).with_context(|| {
+                format!("plan {path:?} does not fit the synthetic fixture")
+            })?;
+            Some(plan)
+        }
+        QuantSource::Unquantized => None,
+    };
+    // Register the plan's masks in the manifest table too, so named
+    // re-resolution against the fixture manifest stays possible (and the
+    // legacy table can never disagree with the plan being served).
+    if let Some(p) = &plan {
+        m.default_masks.insert(p.name.clone(), p.masks.clone());
+    }
     let init = BackendInit {
-        masks: Some(masks),
+        plan: plan.clone(),
         threads,
         frozen,
         ..BackendInit::new(m.clone(), params)
     };
     let be: Arc<dyn InferenceBackend> = Arc::from(backend::create(backend_name, &init)?);
-    Ok((m, be))
+    Ok((m, be, plan))
 }
 
 #[cfg(test)]
@@ -570,19 +651,56 @@ mod tests {
     use crate::coordinator::ServeConfig;
 
     #[test]
-    fn synth_fixture_registers_ratio_and_builds_backend() {
-        let (m, be) = synth_fixture("qgemm", "lg", Some(1), 3).unwrap();
+    fn synth_fixture_registers_plan_and_builds_backend() {
+        let (m, be, plan) = synth_fixture("qgemm", "lg", Some(1), 3).unwrap();
         assert!(m.default_masks.contains_key("lg"));
+        assert_eq!(plan.name, "lg");
         assert_eq!(be.name(), "qgemm");
+        plan.validate(&m).unwrap();
+    }
+
+    #[test]
+    fn synthetic_named_table1_ratio_gets_its_actual_mix() {
+        // `--synthetic --ratio ilmpq1` must serve 60:35:5, not silently
+        // the 65:30:5 default under the wrong name.
+        let (_m, _be, plan) = synth_fixture("qgemm", "ilmpq1", Some(1), 9).unwrap();
+        match &plan.provenance {
+            Provenance::Synthetic { ratio, .. } => assert_eq!(ratio, "60:35:5"),
+            other => panic!("expected synthetic provenance, got {other:?}"),
+        }
+        let (p, _f4, _f8) = plan.total_fractions();
+        assert!((p - 0.60).abs() < 0.1, "pot fraction {p} should track 60%");
+    }
+
+    #[test]
+    fn derived_source_builds_a_synthetic_plan_at_the_ratio() {
+        let (m, be, plan) = synth_fixture_source(
+            "qgemm",
+            &QuantSource::Derived { ratio: Ratio::new(50.0, 45.0, 5.0) },
+            Some(1),
+            13,
+            true,
+        )
+        .unwrap();
+        let plan = plan.expect("derived source yields a plan");
+        assert_eq!(be.name(), "qgemm");
+        assert_eq!(plan.name, "derived-50:45:5");
+        plan.validate(&m).unwrap();
+        // The fixture's assignment policy honors the requested mix (rounded
+        // per layer) and records it as synthetic provenance.
+        let (p, _f4, f8) = plan.total_fractions();
+        assert!((p - 0.5).abs() < 0.15, "pot fraction {p}");
+        assert!(f8 > 0.0, "fixed8 rescue rows present");
+        assert!(matches!(plan.provenance, Provenance::Synthetic { seed: 13, .. }));
     }
 
     #[test]
     fn loadgen_drains_and_classifies_every_reply() {
-        let (m, be) = synth_fixture("qgemm", "lg", Some(2), 7).unwrap();
+        let (m, be, plan) = synth_fixture("qgemm", "lg", Some(2), 7).unwrap();
         let cfg = ServeConfig {
             workers: 1,
             max_wait: Duration::from_millis(1),
-            ratio_name: "lg".into(),
+            plan: Some(plan),
             ..Default::default()
         };
         let server = Server::start(&m, be, cfg).unwrap();

@@ -9,7 +9,7 @@
 
 use crate::fpga::{simulate, DeviceModel, Mode, NetConfig};
 use crate::model::Network;
-use crate::quant::Ratio;
+use crate::quant::{MaskSet, Provenance, QuantPlan, Ratio};
 
 /// One sweep point.
 #[derive(Debug, Clone)]
@@ -25,6 +25,52 @@ pub struct SearchResult {
     pub device: String,
     pub best: SweepPoint,
     pub sweep: Vec<SweepPoint>,
+}
+
+impl SearchResult {
+    /// The winning assignment as a loadable [`QuantPlan`] over `net`'s
+    /// layer geometry — exactly the masks the simulator scored for the
+    /// optimum, with the sweep point recorded as provenance. This is how
+    /// a `ratio-search` result survives the process: save it, `ilmpq plan
+    /// show` it, or serve it against a matching manifest.
+    pub fn winning_plan(&self, net: &Network) -> QuantPlan {
+        let label = self.best.ratio.label();
+        let cfg = NetConfig::from_ratio(net, self.best.ratio, false, &label);
+        // A degenerate sweep ([`best_point`]'s all-non-finite fallback)
+        // must not poison the artifact: JSON has no NaN token, so a
+        // non-finite sweep number would serialize as `null` and make the
+        // saved plan unloadable. Record 0.0 — "no measured throughput" —
+        // and keep the file valid.
+        let fin = |v: f64| if v.is_finite() { v } else { 0.0 };
+        QuantPlan::from_mask_set(
+            MaskSet {
+                name: format!("ratio-search-{}-{}", self.device, label),
+                layers: cfg.masks,
+            },
+            Provenance::RatioSearch {
+                device: self.device.clone(),
+                ratio: label,
+                throughput_gops: fin(self.best.throughput_gops),
+                latency_ms: fin(self.best.latency_s * 1e3),
+            },
+        )
+        .with_model(&net.name)
+    }
+}
+
+/// The throughput-optimal sweep point. Non-finite throughputs (a degenerate
+/// simulation) are excluded from the comparison — `f64::total_cmp` would
+/// otherwise rank NaN *above* every real number and crown a poisoned point,
+/// and the historic `partial_cmp().unwrap()` panicked outright. If every
+/// point is non-finite the first one is returned so the caller still gets
+/// the sweep back (its numbers make the problem visible).
+fn best_point(sweep: &[SweepPoint]) -> Option<SweepPoint> {
+    sweep
+        .iter()
+        .filter(|p| p.throughput_gops.is_finite())
+        .max_by(|a, b| a.throughput_gops.total_cmp(&b.throughput_gops))
+        .or_else(|| sweep.first())
+        .cloned()
 }
 
 /// Sweep PoT percentage `0..=max_pot` (step `step`) with Fixed-8 fixed at
@@ -50,11 +96,7 @@ pub fn search(
         });
         pot += step;
     }
-    let best = sweep
-        .iter()
-        .cloned()
-        .max_by(|a, b| a.throughput_gops.partial_cmp(&b.throughput_gops).unwrap())
-        .expect("non-empty sweep");
+    let best = best_point(&sweep).expect("non-empty sweep");
     SearchResult { device: device.name.to_string(), best, sweep }
 }
 
@@ -114,5 +156,89 @@ mod tests {
         for p in &r.sweep {
             assert!(p.throughput_gops <= r.best.throughput_gops + 1e-9);
         }
+    }
+
+    fn point(pot: f64, gops: f64) -> SweepPoint {
+        SweepPoint {
+            ratio: Ratio::new(pot, 95.0 - pot, 5.0),
+            throughput_gops: gops,
+            latency_s: 1.0 / gops.max(1e-9),
+        }
+    }
+
+    #[test]
+    fn nan_sweep_point_neither_panics_nor_wins() {
+        // The PR-4 `percentile` bug class: max_by(partial_cmp().unwrap())
+        // panicked on a NaN sample. A degenerate simulated throughput must
+        // neither kill the sweep nor be crowned the optimum.
+        let sweep = vec![
+            point(0.0, 50.0),
+            point(5.0, f64::NAN),
+            point(10.0, 80.0),
+            point(15.0, f64::INFINITY),
+            point(20.0, 60.0),
+        ];
+        let best = best_point(&sweep).expect("non-empty sweep");
+        assert_eq!(best.ratio.pot4, 10.0, "finite maximum must win, got {best:?}");
+        assert!(best.throughput_gops.is_finite());
+        // All-NaN degenerates to the first point rather than panicking.
+        let poisoned = vec![point(0.0, f64::NAN), point(5.0, f64::NAN)];
+        assert_eq!(best_point(&poisoned).unwrap().ratio.pot4, 0.0);
+        assert!(best_point(&[]).is_none());
+    }
+
+    #[test]
+    fn degenerate_winning_plan_still_serializes_loadably() {
+        // A NaN best (all-non-finite fallback) must yield a plan whose
+        // provenance round-trips — non-finite numbers would serialize as
+        // JSON null and make the saved artifact unloadable.
+        let net = resnet18();
+        let best = SweepPoint {
+            ratio: Ratio::new(10.0, 85.0, 5.0),
+            throughput_gops: f64::NAN,
+            latency_s: f64::NAN,
+        };
+        let r = SearchResult {
+            device: "xc7z045".into(),
+            best: best.clone(),
+            sweep: vec![best],
+        };
+        let plan = r.winning_plan(&net);
+        let text = plan.to_json().to_string_compact();
+        let back = QuantPlan::from_json(&crate::util::Json::parse(&text).unwrap())
+            .expect("degenerate plan must stay loadable");
+        assert_eq!(back, plan);
+        match back.provenance {
+            crate::quant::Provenance::RatioSearch { throughput_gops, latency_ms, .. } => {
+                assert_eq!(throughput_gops, 0.0);
+                assert_eq!(latency_ms, 0.0);
+            }
+            other => panic!("expected RatioSearch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn winning_plan_carries_sweep_provenance_and_geometry() {
+        use crate::quant::Provenance;
+        let net = resnet18();
+        let r = search(&net, &DeviceModel::xc7z045(), 5.0, 5.0, 95.0);
+        let plan = r.winning_plan(&net);
+        assert_eq!(plan.masks.layers.len(), net.layers.len());
+        assert_eq!(plan.model, net.name);
+        match &plan.provenance {
+            Provenance::RatioSearch { device, throughput_gops, .. } => {
+                assert_eq!(device, "xc7z045");
+                assert_eq!(*throughput_gops, r.best.throughput_gops);
+            }
+            other => panic!("expected RatioSearch provenance, got {other:?}"),
+        }
+        // The plan's row mix reflects the winning ratio (rounded per layer).
+        let (p, _, f8) = plan.total_fractions();
+        assert!((p * 100.0 - r.best.ratio.pot4).abs() < 5.0, "pot {p}");
+        assert!((f8 * 100.0 - 5.0).abs() < 3.0, "f8 {f8}");
+        // And it survives serialization.
+        let text = plan.to_json().to_string_compact();
+        let back = QuantPlan::from_json(&crate::util::Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, plan);
     }
 }

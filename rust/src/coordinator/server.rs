@@ -48,14 +48,14 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use super::batcher::{Assembled, BatchPolicy, Batcher};
 use super::metrics::Metrics;
 use crate::backend::{self, BackendInit, InferenceBackend};
 use crate::fpga::{simulate, DeviceModel, Mode, NetConfig, SimReport};
 use crate::model::zoo;
-use crate::quant::MaskSet;
+use crate::quant::{assign, MaskSet, Provenance, QuantPlan, Scheme};
 use crate::runtime::{HostTensor, Manifest, Runtime};
 
 /// One inference request: a flattened image (already admission-validated).
@@ -133,9 +133,12 @@ pub struct ServeConfig {
     /// can't grow the router's memory without bound. Values below 1 are
     /// clamped to 1. Default: 1024.
     pub queue_depth: usize,
-    /// Ratio name for the quantization masks (manifest `default_masks`),
-    /// used by the FPGA-sim timing overlay.
-    pub ratio_name: String,
+    /// The active quantization plan: validated against the manifest at
+    /// start, drives the FPGA-sim timing overlay, and is advertised on
+    /// `GET /v1/plan`. `None` serves unquantized weights — the overlay then
+    /// falls back to uniform Fixed-8 timing (the nearest hardware config;
+    /// the simulator has no float mode).
+    pub plan: Option<QuantPlan>,
     /// Device for the FPGA-sim timing overlay.
     pub device: String,
     /// Serve pre-quantized ("frozen") weights where the backend has a
@@ -153,7 +156,7 @@ impl Default for ServeConfig {
             workers: 2,
             max_wait: Duration::from_millis(5),
             queue_depth: 1024,
-            ratio_name: "ilmpq2".into(),
+            plan: None,
             device: "xc7z045".into(),
             frozen: true,
         }
@@ -219,8 +222,11 @@ pub struct Server {
     queue_depth: usize,
     router: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
-    /// The FPGA-sim report for the configured (model, ratio, device).
+    /// The FPGA-sim report for the configured (model, plan, device).
     pub sim: SimReport,
+    /// The quantization plan this server runs (`None` = unquantized) —
+    /// what `GET /v1/plan` advertises.
+    pub plan: Option<Arc<QuantPlan>>,
 }
 
 impl Server {
@@ -248,11 +254,43 @@ impl Server {
             &manifest.widths,
             manifest.classes,
         );
-        let mask_set = manifest
-            .default_masks
-            .get(&cfg.ratio_name)
-            .ok_or_else(|| anyhow::anyhow!("unknown ratio {}", cfg.ratio_name))?;
-        let sim_cfg = NetConfig::from_masks(&cfg.ratio_name, mask_set.layers.clone());
+        // The plan is the serving contract: validate it against the
+        // manifest before anything packs or simulates with it, so a stale
+        // or mismatched plan file fails at startup, not mid-traffic.
+        let plan = cfg.plan.clone().map(Arc::new);
+        if let Some(p) = &plan {
+            p.validate(manifest).context("serving plan rejected")?;
+        }
+        // Executed-vs-advertised cross-check: a backend that retains its
+        // mask set must agree with the plan this server advertises on
+        // `GET /v1/plan` — the config carrying one assignment while the
+        // backend executes another is exactly the silent misreport the
+        // plan API exists to prevent.
+        match (&plan, backend.active_masks()) {
+            (Some(p), Some(masks)) => anyhow::ensure!(
+                p.masks.layers == masks.layers,
+                "ServeConfig.plan {:?} does not match the mask set the backend executes",
+                p.name
+            ),
+            (None, Some(_)) => anyhow::bail!(
+                "the backend executes a quantization mask set but ServeConfig.plan \
+                 is unset; pass the plan the backend was built with so /v1/plan \
+                 cannot misreport"
+            ),
+            _ => {}
+        }
+        let sim_cfg = match &plan {
+            Some(p) => NetConfig::from_masks(&p.name, p.masks.layers.clone()),
+            // Unquantized serving: the simulator has no float mode, so
+            // overlay the nearest hardware config (uniform Fixed-8).
+            None => NetConfig::from_masks(
+                "unquantized (Fixed-8 overlay)",
+                net.layers
+                    .iter()
+                    .map(|l| assign::assign_uniform_layer(&l.name, l.rows(), Scheme::Fixed8))
+                    .collect(),
+            ),
+        };
         let sim = simulate(&net, &sim_cfg, &device, Mode::IntraLayer);
         let sim_per_image = sim.latency_s;
 
@@ -378,21 +416,39 @@ impl Server {
             router: Some(router),
             workers,
             sim,
+            plan,
         })
     }
 
     /// Historic PJRT entry point: build the `"pjrt"` registry backend from
     /// a loaded runtime (honoring `cfg.frozen`) and serve it. `params` are
     /// the (trained) model parameters in AOT order; `masks` the
-    /// quantization config.
+    /// quantization config, wrapped into a [`QuantPlan`] when `cfg.plan` is
+    /// unset. When the caller *did* set `cfg.plan`, that plan is what the
+    /// backend executes — the advertised plan and the executed masks are
+    /// one value by construction, never two that can drift — so it is
+    /// validated here, before the (expensive, possibly panicky) backend
+    /// build can see its masks.
     pub fn start_pjrt(
         rt: Arc<Runtime>,
         params: Vec<HostTensor>,
         masks: &MaskSet,
-        cfg: ServeConfig,
+        mut cfg: ServeConfig,
     ) -> Result<Server> {
+        let plan = match cfg.plan.clone() {
+            Some(p) => p,
+            None => {
+                let p = QuantPlan::from_mask_set(
+                    masks.clone(),
+                    Provenance::NamedRatio { ratio: masks.name.clone() },
+                );
+                cfg.plan = Some(p.clone());
+                p
+            }
+        };
+        plan.validate(&rt.manifest).context("serving plan rejected")?;
         let init = BackendInit {
-            masks: Some(masks.clone()),
+            plan: Some(plan),
             frozen: cfg.frozen,
             runtime: Some(rt.clone()),
             ..BackendInit::new(rt.manifest.clone(), params)

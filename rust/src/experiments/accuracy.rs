@@ -10,7 +10,7 @@ use crate::backend::{InferenceBackend, QgemmBackend};
 use crate::baselines::table1::{accuracy_configs, manifest_ratio_name, AccuracyConfig};
 use crate::coordinator::trainer::Trainer;
 use crate::experiments::ptq;
-use crate::quant::{assign, gemm_rows, LayerMasks, MaskSet, Scheme};
+use crate::quant::{assign, gemm_rows, LayerMasks, MaskSet, Provenance, QuantPlan, Scheme};
 use crate::runtime::Runtime;
 
 /// One finished accuracy run.
@@ -26,23 +26,20 @@ pub struct AccuracyRow {
     pub qgemm_acc: Option<f64>,
 }
 
-/// Build the masks for one accuracy config.
+/// Build the quantization plan for one accuracy config.
 ///
-/// Plain intra-layer configs come straight from the manifest default masks
-/// (computed by `assign.py` — Hessian + variance at init). First/last-8-bit
-/// baselines are assembled here: stem and fc uniform Fixed-8, middle layers
-/// assigned in Rust with the same policy (using the manifest's eigenvalues),
-/// exercising the Rust↔Python assignment parity on the real artifacts.
-pub fn masks_for(rt: &Runtime, cfg: &AccuracyConfig) -> Result<MaskSet> {
+/// Plain intra-layer configs resolve through [`crate::runtime::Manifest::plan`]
+/// (the masks computed by `assign.py` — Hessian + variance at init).
+/// First/last-8-bit baselines are assembled here: stem and fc uniform
+/// Fixed-8, middle layers assigned in Rust with the same policy (using the
+/// manifest's eigenvalues), exercising the Rust↔Python assignment parity on
+/// the real artifacts.
+pub fn plan_for(rt: &Runtime, cfg: &AccuracyConfig) -> Result<QuantPlan> {
     let m = &rt.manifest;
     if !cfg.first_last_8bit {
         let name = manifest_ratio_name(&cfg.ratio)
             .ok_or_else(|| anyhow::anyhow!("no manifest masks for {}", cfg.label))?;
-        return Ok(m
-            .default_masks
-            .get(name)
-            .ok_or_else(|| anyhow::anyhow!("manifest missing ratio {name}"))?
-            .clone());
+        return m.plan(name);
     }
     let params = rt.manifest.load_init_params()?;
     let qnames: Vec<&String> = m.quantized_layers.iter().map(|(n, _, _)| n).collect();
@@ -67,7 +64,11 @@ pub fn masks_for(rt: &Runtime, cfg: &AccuracyConfig) -> Result<MaskSet> {
             assign::assign_schemes(&w_rows, &is8, cfg.ratio.pot_share_of_4bit());
         layers.push(LayerMasks { layer: name.clone(), is8, is_pot });
     }
-    Ok(MaskSet { name: cfg.label.clone(), layers })
+    Ok(QuantPlan::from_mask_set(
+        MaskSet { name: cfg.label.clone(), layers },
+        Provenance::Sensitivity { ratio: cfg.ratio.label() },
+    )
+    .with_model(&m.model_name))
 }
 
 /// Train + evaluate one config. With `qgemm_check`, the trained weights are
@@ -82,7 +83,8 @@ pub fn run_one(
     qgemm_check: bool,
     mut log: impl FnMut(&str),
 ) -> Result<AccuracyRow> {
-    let masks = masks_for(rt, cfg)?;
+    let plan = plan_for(rt, cfg)?;
+    let masks = plan.masks;
     let mut tr = Trainer::new(rt, &masks, seed)?;
     tr.train(steps, (steps / 5).max(1), |s| {
         log(&format!(

@@ -26,7 +26,7 @@ use anyhow::Result;
 use crate::backend::{self, BackendInit, InferenceBackend, PjrtBackend};
 use crate::baselines::table1::accuracy_configs;
 use crate::coordinator::trainer::Trainer;
-use crate::experiments::accuracy::masks_for;
+use crate::experiments::accuracy::plan_for;
 use crate::quant::{assign, freeze, LayerMasks, MaskSet, Scheme};
 use crate::runtime::{HostTensor, Manifest, Runtime};
 
@@ -143,7 +143,7 @@ pub fn run_all_with(
     let ref_be = backend::create(
         ref_name,
         &BackendInit {
-            masks: None,
+            plan: None,
             runtime: Some(rt.clone()),
             ..BackendInit::new(rt.manifest.clone(), params.clone())
         },
@@ -154,13 +154,13 @@ pub fn run_all_with(
     ));
     let mut rows = Vec::new();
     for cfg in accuracy_configs() {
-        let masks = masks_for(rt.as_ref(), &cfg)?;
+        let plan = plan_for(rt.as_ref(), &cfg)?;
         // One backend per config, packed/frozen once and reused for the
         // whole evaluation (raw params: freezing is backend policy).
         let be = backend::create(
             backend_name,
             &BackendInit {
-                masks: Some(masks),
+                plan: Some(plan),
                 runtime: Some(rt.clone()),
                 ..BackendInit::new(rt.manifest.clone(), params.clone())
             },

@@ -3,21 +3,23 @@
 //! ```text
 //! ilmpq table1   [--device xc7z020|xc7z045|all]     Table I hardware columns
 //! ilmpq speedup                                     §III headline speedups
-//! ilmpq ratio-search [--device D] [--fixed8 5]      offline ratio sweep (§II-B)
-//! ilmpq assign --show [--ratio ilmpq2]              Figure 1 row map
+//! ilmpq ratio-search [--device D] [--out p.json]    offline ratio sweep (§II-B)
+//! ilmpq plan derive|show|validate                   quantization-plan artifacts
+//! ilmpq assign --show [--ratio R|--plan F]          Figure 1 row map
 //! ilmpq accuracy [--steps N] [--config LABEL]       Table I accuracy rows (QAT)
-//! ilmpq train   [--steps N] [--ratio ilmpq2]        single QAT run + loss curve
-//! ilmpq serve   [--listen ADDR] [--backend B]       serving (HTTP front end or demo loop)
+//! ilmpq train   [--steps N] [--ratio R|--plan F]    single QAT run + loss curve
+//! ilmpq serve   [--listen ADDR] [--plan F]          serving (HTTP front end or demo loop)
 //! ilmpq loadgen [--rate R] [--url U] [--backend B]  offered-load driver (in-process or remote)
 //! ilmpq backends                                    list execution backends
 //! ilmpq info                                        artifacts + manifest summary
 //! ```
 
+use std::path::Path;
 use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::Result;
-use ilmpq::backend::{self, InferenceBackend};
+use ilmpq::backend::{self, synth, InferenceBackend};
 use ilmpq::baselines::table1::accuracy_configs;
 use ilmpq::coordinator::{
     loadgen, ratio_search, trainer::Trainer, HttpConfig, HttpServer, ServeConfig, Server,
@@ -25,7 +27,8 @@ use ilmpq::coordinator::{
 use ilmpq::experiments::{accuracy, figure1, ptq, table1};
 use ilmpq::fpga::DeviceModel;
 use ilmpq::model::resnet18;
-use ilmpq::runtime::Runtime;
+use ilmpq::quant::{plan, QuantPlan, QuantSource};
+use ilmpq::runtime::{Manifest, Runtime};
 use ilmpq::util::Args;
 
 fn main() {
@@ -47,6 +50,14 @@ fn devices(arg: &str) -> Vec<DeviceModel> {
         name => vec![DeviceModel::by_name(name)
             .unwrap_or_else(|| panic!("unknown device {name:?} (xc7z020|xc7z045|all)"))],
     }
+}
+
+/// CLI flags → [`QuantSource`] via the shared [`QuantSource::from_cli`]
+/// mapping (`--plan FILE` | `--ratio NAME` | `--derive RATIO`, mutually
+/// exclusive). Every arm that used to re-plumb `str_or("ratio", ...)` →
+/// `default_masks.get(name)` goes through this + `QuantSource::resolve`.
+fn quant_source(a: &Args, default_ratio: &str) -> Result<QuantSource> {
+    QuantSource::from_cli(a.get("plan"), a.get("ratio"), a.get("derive"), default_ratio)
 }
 
 fn run(cmd: &str) -> Result<()> {
@@ -83,10 +94,22 @@ fn run(cmd: &str) -> Result<()> {
                     ("device", "xc7z020|xc7z045|all"),
                     ("fixed8", "Fixed-8 percentage (default 5)"),
                     ("step", "sweep step in % (default 1)"),
+                    (
+                        "out",
+                        "write the winning assignment as a loadable plan file \
+                         (needs a single --device)",
+                    ),
                 ],
             );
             let net = resnet18();
-            for d in devices(a.str_or("device", "all")) {
+            let ds = devices(a.str_or("device", "all"));
+            if a.get("out").is_some() && ds.len() > 1 {
+                anyhow::bail!(
+                    "--out writes one device's winning plan; pass --device \
+                     xc7z020 or xc7z045 with it"
+                );
+            }
+            for d in ds {
                 let r = ratio_search::search(
                     &net,
                     &d,
@@ -110,23 +133,35 @@ fn run(cmd: &str) -> Result<()> {
                         p.latency_s * 1e3
                     );
                 }
+                if let Some(out) = a.get("out") {
+                    // The winner no longer evaporates: save it as a plan
+                    // (`ilmpq plan show --plan FILE` renders it later).
+                    let plan = r.winning_plan(&net);
+                    plan.save(Path::new(out))?;
+                    println!("wrote winning plan to {out}\n{}", plan.report());
+                }
             }
             Ok(())
         }
+        "plan" => plan_cmd(),
         "assign" => {
             let a = Args::parse_env(
                 "ilmpq assign",
                 2,
-                &[("show!", "render the row map"), ("ratio", "manifest ratio name")],
+                &[
+                    ("show!", "render the row map"),
+                    ("ratio", "named plan from the manifest (default ilmpq2)"),
+                    ("plan", "plan file (see `ilmpq plan derive`)"),
+                    ("derive", "derive fresh at this ratio (name or P:F4:F8)"),
+                ],
             );
-            let rt = Runtime::load_default()?;
-            let name = a.str_or("ratio", "ilmpq2");
-            let masks = rt
-                .manifest
-                .default_masks
-                .get(name)
-                .ok_or_else(|| anyhow::anyhow!("unknown ratio {name}"))?;
-            println!("{}", figure1::render(masks));
+            let source = quant_source(&a, "ilmpq2")?;
+            // Only the manifest is needed (no PJRT engine): assign renders
+            // a plan, it doesn't execute anything.
+            let manifest = Manifest::load(&Manifest::default_dir())?;
+            let plan = source.resolve_required(&manifest)?;
+            println!("plan {:?}: {}", plan.name, plan.provenance.describe());
+            println!("{}", figure1::render(&plan.masks));
             Ok(())
         }
         "accuracy" => {
@@ -200,19 +235,17 @@ fn run(cmd: &str) -> Result<()> {
                 2,
                 &[
                     ("steps", "QAT steps (default 400)"),
-                    ("ratio", "manifest ratio name (default ilmpq2)"),
+                    ("ratio", "named plan from the manifest (default ilmpq2)"),
+                    ("plan", "plan file (see `ilmpq plan derive`)"),
+                    ("derive", "derive fresh at this ratio (name or P:F4:F8)"),
                     ("seed", "data order seed"),
                 ],
             );
+            let source = quant_source(&a, "ilmpq2")?;
             let rt = Runtime::load_default()?;
-            let name = a.str_or("ratio", "ilmpq2");
-            let masks = rt
-                .manifest
-                .default_masks
-                .get(name)
-                .ok_or_else(|| anyhow::anyhow!("unknown ratio {name}"))?
-                .clone();
-            let mut tr = Trainer::new(&rt, &masks, a.u64_or("seed", 2021))?;
+            let plan = source.resolve_required(&rt.manifest)?;
+            println!("plan {:?}: {}", plan.name, plan.provenance.describe());
+            let mut tr = Trainer::new(&rt, &plan.masks, a.u64_or("seed", 2021))?;
             tr.train(a.usize_or("steps", 400), 20, |s| {
                 println!(
                     "step {:>4}  loss {:.4}  acc {:.3}  lr {:.4}",
@@ -230,7 +263,9 @@ fn run(cmd: &str) -> Result<()> {
                 &[
                     ("requests", "total requests (default 512; demo loop only)"),
                     ("rate", "arrival rate req/s (default 2000; demo loop only)"),
-                    ("ratio", "manifest ratio name"),
+                    ("ratio", "named plan from the manifest (default ilmpq2)"),
+                    ("plan", "serve a saved plan file (see `ilmpq plan derive`)"),
+                    ("derive", "derive fresh at this ratio (name or P:F4:F8)"),
                     ("device", "FPGA-sim overlay device"),
                     ("workers", "worker threads"),
                     ("queue-depth", "admission queue bound (default 1024)"),
@@ -251,7 +286,7 @@ fn run(cmd: &str) -> Result<()> {
             );
             let backend_name = a.str_or("backend", "pjrt").to_string();
             backend::spec(&backend_name)?;
-            let name = a.str_or("ratio", "ilmpq2").to_string();
+            let source = quant_source(&a, "ilmpq2")?;
             let frozen = !a.flag("no-frozen");
             // The manifest (batching geometry, masks, params) loads without
             // the PJRT engine — only runtime-needing backends start one, so
@@ -259,9 +294,9 @@ fn run(cmd: &str) -> Result<()> {
             // Falls back to the synthetic TinyResNet fixture when no
             // artifacts exist, so a toolchain-only machine can still stand
             // up the whole serving stack.
-            let (manifest, be) = loadgen::fixture_or_artifacts(
+            let (manifest, be, active_plan) = loadgen::fixture_or_artifacts(
                 &backend_name,
-                &name,
+                &source,
                 frozen,
                 None,
                 7,
@@ -271,13 +306,16 @@ fn run(cmd: &str) -> Result<()> {
             let cfg = ServeConfig {
                 workers: a.usize_or("workers", 2),
                 queue_depth: a.usize_or("queue-depth", 1024),
-                ratio_name: name,
+                plan: active_plan,
                 device: a.str_or("device", "xc7z045").to_string(),
                 frozen,
                 ..Default::default()
             };
             println!("backend: {}", be.name());
             let server = Server::start(&manifest, be, cfg)?;
+            if let Some(p) = &server.plan {
+                println!("plan {:?}: {}", p.name, p.provenance.describe());
+            }
             println!("serving: sim FPGA {}", server.sim.row());
             if let Some(addr) = a.get("listen") {
                 // Network mode: put the HTTP front door on the pipeline and
@@ -322,7 +360,9 @@ fn run(cmd: &str) -> Result<()> {
                     ("queue-depth", "admission queue bound (default 1024)"),
                     ("max-wait-ms", "batcher deadline (default 5)"),
                     ("backend", "execution backend (default qgemm; see `ilmpq backends`)"),
-                    ("ratio", "manifest ratio name (default ilmpq2)"),
+                    ("ratio", "named plan from the manifest (default ilmpq2)"),
+                    ("plan", "drive a saved plan file (see `ilmpq plan derive`)"),
+                    ("derive", "derive fresh at this ratio (name or P:F4:F8)"),
                     ("device", "FPGA-sim overlay device (default xc7z045)"),
                     ("threads", "backend CPU threads (0 or absent: all cores)"),
                     ("seed", "workload seed (default 42)"),
@@ -365,7 +405,7 @@ fn run(cmd: &str) -> Result<()> {
             }
             let backend_name = a.str_or("backend", "qgemm").to_string();
             backend::spec(&backend_name)?;
-            let ratio = a.str_or("ratio", "ilmpq2").to_string();
+            let source = quant_source(&a, "ilmpq2")?;
             let seed = a.u64_or("seed", 42);
             let threads = match a.usize_or("threads", 0) {
                 0 => None, // all cores — the documented default
@@ -373,9 +413,9 @@ fn run(cmd: &str) -> Result<()> {
             };
             // Real artifacts when present, else the synthetic fixture — so
             // the pipeline runs end-to-end on a toolchain-only machine.
-            let (manifest, be) = loadgen::fixture_or_artifacts(
+            let (manifest, be, active_plan) = loadgen::fixture_or_artifacts(
                 &backend_name,
-                &ratio,
+                &source,
                 true,
                 threads,
                 seed,
@@ -386,7 +426,7 @@ fn run(cmd: &str) -> Result<()> {
                 workers: a.usize_or("workers", 2),
                 max_wait: Duration::from_millis(a.u64_or("max-wait-ms", 5)),
                 queue_depth: a.usize_or("queue-depth", 1024),
-                ratio_name: ratio,
+                plan: active_plan,
                 device: a.str_or("device", "xc7z045").to_string(),
                 ..Default::default()
             };
@@ -455,21 +495,165 @@ fn run(cmd: &str) -> Result<()> {
     }
 }
 
+/// `ilmpq plan <derive|show|validate>` — the quantization-plan toolbox.
+fn plan_cmd() -> Result<()> {
+    let sub = std::env::args().nth(2).unwrap_or_else(|| "help".to_string());
+    match sub.as_str() {
+        "derive" => {
+            let a = Args::parse_env(
+                "ilmpq plan derive",
+                3,
+                &[
+                    (
+                        "ratio",
+                        "Table-I ratio name (e.g. ilmpq2) or P:F4:F8 split \
+                         (default 65:30:5)",
+                    ),
+                    ("name", "plan name (default derived from the ratio)"),
+                    (
+                        "synthetic!",
+                        "derive on the artifact-free synthetic TinyResNet fixture",
+                    ),
+                    (
+                        "seed",
+                        "synthetic fixture seed (default 7, matching `serve --synthetic`)",
+                    ),
+                    ("out", "output path (default plan.json)"),
+                ],
+            );
+            let ratio = plan::parse_ratio_arg(a.str_or("ratio", "65:30:5"))?;
+            let out = a.str_or("out", "plan.json").to_string();
+            // One default spelling on both paths (`derived_plan_name`), so
+            // `plan derive` and `serve --derive` artifacts carry the same
+            // name however they were produced.
+            let default_name = plan::derived_plan_name(ratio);
+            let name = a.str_or("name", &default_name).to_string();
+            let p = if a.flag("synthetic") {
+                let seed = a.u64_or("seed", 7);
+                let (_m, _params, p) = loadgen::synth_plan(&name, ratio, seed);
+                p
+            } else {
+                let m = Manifest::load(&Manifest::default_dir())?;
+                let params = m.load_init_params()?;
+                plan::derive_from_manifest(&m, &params, ratio, &name)?
+            };
+            p.save(Path::new(&out))?;
+            println!("wrote {out}");
+            print!("{}", p.report());
+            Ok(())
+        }
+        "show" => {
+            let a = Args::parse_env(
+                "ilmpq plan show",
+                3,
+                &[
+                    ("plan", "plan file to render"),
+                    ("ratio", "named plan from the manifest"),
+                    ("figure!", "also render the full Figure-1 row map"),
+                ],
+            );
+            let p = match (a.get("plan"), a.get("ratio")) {
+                (Some(path), None) => QuantPlan::load(Path::new(path))?,
+                (None, Some(name)) => {
+                    Manifest::load(&Manifest::default_dir())?.plan(name)?
+                }
+                (None, None) => {
+                    let m = Manifest::load(&Manifest::default_dir())?;
+                    println!(
+                        "named plans in the manifest: {}\n(`--ratio NAME` renders \
+                         one; `--plan FILE` renders a saved plan)",
+                        m.plan_names().join(", ")
+                    );
+                    return Ok(());
+                }
+                (Some(_), Some(_)) => {
+                    anyhow::bail!("pass --plan FILE or --ratio NAME, not both")
+                }
+            };
+            print!("{}", p.report());
+            if a.flag("figure") {
+                println!("{}", figure1::render(&p.masks));
+            }
+            Ok(())
+        }
+        "validate" => {
+            let a = Args::parse_env(
+                "ilmpq plan validate",
+                3,
+                &[
+                    ("plan", "plan file to validate (required)"),
+                    (
+                        "synthetic!",
+                        "validate against the synthetic TinyResNet fixture instead \
+                         of the artifacts manifest",
+                    ),
+                ],
+            );
+            let path = a
+                .get("plan")
+                .ok_or_else(|| anyhow::anyhow!("--plan FILE is required"))?;
+            let p = QuantPlan::load(Path::new(path))?;
+            let m = if a.flag("synthetic") {
+                synth::serving_manifest()
+            } else {
+                Manifest::load(&Manifest::default_dir())?
+            };
+            p.validate(&m)?;
+            println!(
+                "{path}: valid for model {} ({} quantized layers)",
+                m.model_name,
+                m.quantized_layers.len()
+            );
+            print!("{}", p.report());
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            println!("{PLAN_HELP}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown plan subcommand {other:?}\n{PLAN_HELP}");
+            std::process::exit(2);
+        }
+    }
+}
+
+const PLAN_HELP: &str = "\
+ilmpq plan — quantization-plan artifacts (serializable precision assignments)
+
+subcommands:
+  derive    compute a plan (§II-C policy: Hessian rescue rows + variance-
+            sorted PoT) from the artifacts manifest, or artifact-free with
+            --synthetic; writes JSON (--out, default plan.json)
+  show      render a plan file (--plan FILE) or a named manifest plan
+            (--ratio NAME); bare `show` lists the named plans
+  validate  check a plan file against the manifest (--synthetic for the
+            fixture): layer names, row counts, 0/1 masks, scheme exclusivity
+a saved plan is served with `ilmpq serve --plan FILE` and inspected live at
+GET /v1/plan; `ratio-search --out` saves its winner in the same format.
+run `ilmpq plan <sub> --help` for options.";
+
 const HELP: &str = "\
 ilmpq — Intra-Layer Multi-Precision Quantization framework (paper reproduction)
 
 commands:
   table1        Table I hardware columns (FPGA sim, both devices)
   speedup       headline speedups vs the 8-bit fixed baseline
-  ratio-search  offline PoT:Fixed4:Fixed8 sweep (paper §II-B)
-  assign        Figure 1: per-row scheme/precision map (--show --ratio NAME)
+  ratio-search  offline PoT:Fixed4:Fixed8 sweep (paper §II-B); `--out
+                p.json` saves the winner as a loadable quantization plan
+  plan          quantization-plan artifacts: derive | show | validate
+                (named, versioned, serializable precision assignments;
+                `plan derive --synthetic` works artifact-free)
+  assign        Figure 1: per-row scheme/precision map (--ratio NAME or
+                --plan FILE)
   accuracy      Table I accuracy rows via QAT on the AOT model
   ptq           deterministic PTQ probe (train once, quantize each config)
-  train         one QAT run with the loss curve
+  train         one QAT run with the loss curve (--ratio NAME | --plan FILE)
   serve         inference serving: `--listen ADDR` puts the HTTP/1.1 front
                 end on the admission pipeline (POST /v1/infer, GET
-                /v1/healthz, GET /v1/metrics); without it, the in-process
-                demo loop runs (dynamic batching, --backend NAME)
+                /v1/healthz, GET /v1/metrics, GET /v1/plan); without it,
+                the in-process demo loop runs (dynamic batching, --backend
+                NAME); `--plan p.json` serves a saved quantization plan
   loadgen       open-loop offered-load driver for the admission pipeline
                 (--rate, --queue-depth, --malformed; runs artifact-free);
                 `--url http://host:port` drives a remote `serve --listen`

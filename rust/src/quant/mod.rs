@@ -11,12 +11,14 @@ pub mod fixed;
 pub mod freeze;
 pub mod gemmview;
 pub mod packing;
+pub mod plan;
 pub mod pot;
 pub mod qgemm;
 
 pub use assign::{assign_bits, assign_schemes, LayerMasks, MaskSet};
 pub use gemmview::{from_gemm_rows, gemm_rows};
 pub use packing::PackedMatrix;
+pub use plan::{Provenance, QuantPlan, QuantSource};
 pub use qgemm::QuantizedActs;
 
 /// One weight row's quantization configuration (paper Figure 1: each filter

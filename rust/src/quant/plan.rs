@@ -1,0 +1,885 @@
+//! First-class quantization plans: the intra-layer precision assignment as
+//! a named, versioned, serializable artifact.
+//!
+//! The per-row scheme assignment (paper §II-B/II-C: which rows of each
+//! layer run PoT-4 / Fixed-4 / Fixed-8) *is* the ILMPQ contribution, and
+//! MSP/FINN-R-style flows treat exactly this configuration as an explicit
+//! artifact that travels from design-space exploration into deployment.
+//! [`QuantPlan`] is that artifact for this stack: per-layer row masks plus
+//! *provenance* (where the assignment came from), serialized as
+//! dependency-free JSON via [`crate::util::Json`], validated against a
+//! [`Manifest`] before anything executes it, and summarizable for
+//! reporting (`ilmpq plan show`, `GET /v1/plan`).
+//!
+//! [`QuantSource`] is the single resolution path from "what the user asked
+//! for" (a plan file, a named Table-I ratio, a fresh derivation, or
+//! nothing) to a resolved plan — every consumer (`backend::create_serving`,
+//! the `serve`/`loadgen`/`assign`/`train` CLI arms, the benches) goes
+//! through [`QuantSource::resolve`] instead of re-plumbing the historic
+//! `manifest.default_masks.get(name)` lookup.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::assign::{self, LayerMasks, MaskSet};
+use super::gemmview::gemm_rows;
+use super::Ratio;
+use crate::runtime::{HostTensor, Manifest};
+use crate::util::Json;
+
+/// Serialization format version; bumped on incompatible schema changes so a
+/// stale plan file fails with a clear message instead of misparsing.
+pub const PLAN_VERSION: u64 = 1;
+
+/// Where a plan's assignment came from — carried through serialization so a
+/// deployed configuration stays auditable (`GET /v1/plan` reports it).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Provenance {
+    /// A named Table-I ratio resolved from the manifest's default
+    /// assignment table (computed by `assign.py` at artifact build).
+    NamedRatio { ratio: String },
+    /// The winner of an offline `ratio-search` throughput sweep (§II-B).
+    RatioSearch {
+        device: String,
+        ratio: String,
+        throughput_gops: f64,
+        latency_ms: f64,
+    },
+    /// Freshly derived by the §II-C policy: Hessian-eigenvalue rescue rows
+    /// plus variance-sorted PoT, at the given ratio.
+    Sensitivity { ratio: String },
+    /// A uniform single-scheme baseline (Table-I prior-work rows).
+    Uniform { scheme: String },
+    /// The artifact-free synthetic fixture (random weights/eigs at a
+    /// ratio, deterministic in `seed`). The seed is stored as a JSON
+    /// number, so it must fit in 2^53 to round-trip exactly.
+    Synthetic { seed: u64, ratio: String },
+}
+
+impl Provenance {
+    /// The machine-readable `kind` tag used in serialized form.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Provenance::NamedRatio { .. } => "named_ratio",
+            Provenance::RatioSearch { .. } => "ratio_search",
+            Provenance::Sensitivity { .. } => "sensitivity",
+            Provenance::Uniform { .. } => "uniform",
+            Provenance::Synthetic { .. } => "synthetic",
+        }
+    }
+
+    /// One-line human description for reports and logs.
+    pub fn describe(&self) -> String {
+        match self {
+            Provenance::NamedRatio { ratio } => format!("named ratio {ratio:?}"),
+            Provenance::RatioSearch { device, ratio, throughput_gops, latency_ms } => {
+                format!(
+                    "ratio-search winner on {device} ({ratio} -> \
+                     {throughput_gops:.1} GOP/s, {latency_ms:.1} ms)"
+                )
+            }
+            Provenance::Sensitivity { ratio } => {
+                format!("sensitivity-derived (§II-C policy at {ratio})")
+            }
+            Provenance::Uniform { scheme } => format!("uniform {scheme} baseline"),
+            Provenance::Synthetic { seed, ratio } => {
+                format!("synthetic fixture (seed {seed}, ratio {ratio})")
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![("kind", Json::Str(self.kind().to_string()))];
+        match self {
+            Provenance::NamedRatio { ratio } => {
+                fields.push(("ratio", Json::Str(ratio.clone())));
+            }
+            Provenance::RatioSearch { device, ratio, throughput_gops, latency_ms } => {
+                fields.push(("device", Json::Str(device.clone())));
+                fields.push(("ratio", Json::Str(ratio.clone())));
+                fields.push(("throughput_gops", Json::Num(*throughput_gops)));
+                fields.push(("latency_ms", Json::Num(*latency_ms)));
+            }
+            Provenance::Sensitivity { ratio } => {
+                fields.push(("ratio", Json::Str(ratio.clone())));
+            }
+            Provenance::Uniform { scheme } => {
+                fields.push(("scheme", Json::Str(scheme.clone())));
+            }
+            Provenance::Synthetic { seed, ratio } => {
+                fields.push(("seed", Json::Num(*seed as f64)));
+                fields.push(("ratio", Json::Str(ratio.clone())));
+            }
+        }
+        Json::obj(fields)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Provenance> {
+        let kind = j
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("provenance lacks a \"kind\" string"))?;
+        let s = |key: &str| -> Result<String> {
+            j.get(key)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("provenance {kind:?} lacks string field {key:?}"))
+        };
+        let n = |key: &str| -> Result<f64> {
+            j.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("provenance {kind:?} lacks numeric field {key:?}"))
+        };
+        Ok(match kind {
+            "named_ratio" => Provenance::NamedRatio { ratio: s("ratio")? },
+            "ratio_search" => Provenance::RatioSearch {
+                device: s("device")?,
+                ratio: s("ratio")?,
+                throughput_gops: n("throughput_gops")?,
+                latency_ms: n("latency_ms")?,
+            },
+            "sensitivity" => Provenance::Sensitivity { ratio: s("ratio")? },
+            "uniform" => Provenance::Uniform { scheme: s("scheme")? },
+            "synthetic" => {
+                // Same strictness as the version field: a fractional or
+                // negative seed in a hand-edited file must not silently
+                // truncate into a seed that doesn't reproduce the masks.
+                let seed = n("seed")?;
+                if seed.fract() != 0.0 || seed < 0.0 {
+                    bail!("synthetic seed must be a non-negative integer, got {seed}");
+                }
+                Provenance::Synthetic { seed: seed as u64, ratio: s("ratio")? }
+            }
+            other => bail!(
+                "unknown provenance kind {other:?} (known: named_ratio, \
+                 ratio_search, sensitivity, uniform, synthetic)"
+            ),
+        })
+    }
+}
+
+/// A named, versioned precision-assignment artifact: per-layer row masks
+/// plus provenance. Save/load round-trips are bit-identical on the masks
+/// (mask values are exactly 0.0/1.0, which JSON represents exactly).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantPlan {
+    pub name: String,
+    /// Format version ([`PLAN_VERSION`] at creation).
+    pub version: u64,
+    /// The model the plan was derived for (empty = unstated). When set,
+    /// [`QuantPlan::validate`] refuses a manifest for a different model.
+    pub model: String,
+    pub provenance: Provenance,
+    /// The assignment itself (`masks.name` mirrors the plan name).
+    pub masks: MaskSet,
+}
+
+impl QuantPlan {
+    /// Wrap an existing mask set; the plan takes the mask set's name.
+    pub fn from_mask_set(masks: MaskSet, provenance: Provenance) -> QuantPlan {
+        QuantPlan {
+            name: masks.name.clone(),
+            version: PLAN_VERSION,
+            model: String::new(),
+            provenance,
+            masks,
+        }
+    }
+
+    /// Builder-style model stamp (see [`QuantPlan::model`]).
+    pub fn with_model(mut self, model: &str) -> QuantPlan {
+        self.model = model.to_string();
+        self
+    }
+
+    // ---- serialization ----------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("quant_plan", Json::Num(self.version as f64)),
+            ("name", Json::Str(self.name.clone())),
+            ("model", Json::Str(self.model.clone())),
+            ("provenance", self.provenance.to_json()),
+            (
+                "layers",
+                Json::Arr(
+                    self.masks
+                        .layers
+                        .iter()
+                        .map(|l| {
+                            Json::obj(vec![
+                                ("layer", Json::Str(l.layer.clone())),
+                                ("is8", mask_json(&l.is8)),
+                                ("is_pot", mask_json(&l.is_pot)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Strict parse: every structural problem is a typed error naming the
+    /// offending field, never a panic (plan files are user input).
+    pub fn from_json(j: &Json) -> Result<QuantPlan> {
+        let v = j
+            .get("quant_plan")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("not a quantization plan (no \"quant_plan\" version field)"))?;
+        if v.fract() != 0.0 || v < 0.0 {
+            bail!("plan version must be a non-negative integer, got {v}");
+        }
+        let version = v as u64;
+        if version != PLAN_VERSION {
+            bail!("plan format version {version} unsupported (this build reads version {PLAN_VERSION})");
+        }
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("plan lacks a \"name\" string"))?
+            .to_string();
+        let model = j
+            .get("model")
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .to_string();
+        let provenance = Provenance::from_json(
+            j.get("provenance")
+                .ok_or_else(|| anyhow!("plan lacks a \"provenance\" object"))?,
+        )?;
+        let layers_json = j
+            .get("layers")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("plan lacks a \"layers\" array"))?;
+        let mut layers = Vec::with_capacity(layers_json.len());
+        for (i, lj) in layers_json.iter().enumerate() {
+            let lname = lj
+                .get("layer")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("layers[{i}] lacks a \"layer\" name"))?
+                .to_string();
+            let is8 = mask_from_json(lj.get("is8"), &lname, "is8")?;
+            let is_pot = mask_from_json(lj.get("is_pot"), &lname, "is_pot")?;
+            if is8.len() != is_pot.len() {
+                bail!(
+                    "layer {lname:?}: is8 has {} rows but is_pot has {}",
+                    is8.len(),
+                    is_pot.len()
+                );
+            }
+            layers.push(LayerMasks { layer: lname, is8, is_pot });
+        }
+        Ok(QuantPlan {
+            name: name.clone(),
+            version,
+            model,
+            provenance,
+            masks: MaskSet { name, layers },
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_compact())
+            .with_context(|| format!("write plan {path:?}"))
+    }
+
+    pub fn load(path: &Path) -> Result<QuantPlan> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read plan {path:?}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+        QuantPlan::from_json(&j).with_context(|| format!("parse plan {path:?}"))
+    }
+
+    // ---- validation -------------------------------------------------------
+
+    /// Check the plan fits `manifest`: same model (when the plan states
+    /// one), exactly the manifest's quantized layers **in manifest order**
+    /// (the FPGA-sim overlay consumes layers positionally, so a reordered
+    /// plan would silently mistime every layer even though the name-keyed
+    /// pack/freeze paths would execute it correctly), matching row counts,
+    /// 0/1 mask values, and scheme exclusivity (no row both Fixed-8 and
+    /// PoT). Everything that executes a plan calls this first, so a stale
+    /// or hand-edited file fails loudly before it can corrupt a pack.
+    pub fn validate(&self, manifest: &Manifest) -> Result<()> {
+        let ctx = |msg: String| anyhow!("plan {:?}: {msg}", self.name);
+        if !self.model.is_empty() && self.model != manifest.model_name {
+            return Err(ctx(format!(
+                "built for model {:?} but the manifest is {:?}",
+                self.model, manifest.model_name
+            )));
+        }
+        if self.masks.layers.len() != manifest.quantized_layers.len() {
+            return Err(ctx(format!(
+                "has {} layers but the manifest has {} quantized layers",
+                self.masks.layers.len(),
+                manifest.quantized_layers.len()
+            )));
+        }
+        for ((lname, rows, _), lm) in
+            manifest.quantized_layers.iter().zip(&self.masks.layers)
+        {
+            if &lm.layer != lname {
+                return Err(ctx(format!(
+                    "layer mismatch at the manifest's {lname:?} position: plan \
+                     has {:?} (layers must cover the manifest's quantized \
+                     layers in manifest order)",
+                    lm.layer
+                )));
+            }
+            // `rows()` measures is8 and the per-row zip below truncates to
+            // the shorter vector, so a ragged pair must be caught here —
+            // otherwise `scheme_of` indexes out of bounds mid-traffic.
+            if lm.is8.len() != lm.is_pot.len() {
+                return Err(ctx(format!(
+                    "layer {lname:?}: is8 has {} rows but is_pot has {}",
+                    lm.is8.len(),
+                    lm.is_pot.len()
+                )));
+            }
+            if lm.rows() != *rows {
+                return Err(ctx(format!(
+                    "layer {lname:?} has {} rows, manifest expects {rows}",
+                    lm.rows()
+                )));
+            }
+            for (i, (&a, &b)) in lm.is8.iter().zip(&lm.is_pot).enumerate() {
+                if (a != 0.0 && a != 1.0) || (b != 0.0 && b != 1.0) {
+                    return Err(ctx(format!(
+                        "layer {lname:?} row {i}: mask values must be 0 or 1 \
+                         (got is8={a}, is_pot={b})"
+                    )));
+                }
+                if a > 0.5 && b > 0.5 {
+                    return Err(ctx(format!(
+                        "layer {lname:?} row {i}: marked both Fixed-8 and PoT \
+                         (schemes are exclusive per row)"
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // ---- summaries --------------------------------------------------------
+
+    /// `(pot4, fixed4, fixed8)` op fractions per layer, in plan order.
+    pub fn layer_fractions(&self) -> Vec<(String, (f64, f64, f64))> {
+        self.masks
+            .layers
+            .iter()
+            .map(|l| (l.layer.clone(), l.op_fractions()))
+            .collect()
+    }
+
+    /// Aggregate `(pot4, fixed4, fixed8)` fractions over all rows.
+    pub fn total_fractions(&self) -> (f64, f64, f64) {
+        self.masks.total_fractions()
+    }
+
+    /// The monitoring view (`GET /v1/plan`, `plan show --json` consumers):
+    /// name, provenance, and per-layer + total scheme fractions.
+    pub fn summary_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("version", Json::Num(self.version as f64)),
+            ("model", Json::Str(self.model.clone())),
+            ("provenance", self.provenance.to_json()),
+            ("total", fractions_json(self.total_fractions())),
+            (
+                "layers",
+                Json::Arr(
+                    self.masks
+                        .layers
+                        .iter()
+                        .map(|l| {
+                            let (p, f4, f8) = l.op_fractions();
+                            Json::obj(vec![
+                                ("layer", Json::Str(l.layer.clone())),
+                                ("rows", Json::Num(l.rows() as f64)),
+                                ("pot4", Json::Num(p)),
+                                ("fixed4", Json::Num(f4)),
+                                ("fixed8", Json::Num(f8)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Human-readable multi-line report for the CLI.
+    pub fn report(&self) -> String {
+        let (p, f4, f8) = self.total_fractions();
+        let mut s = format!(
+            "plan {:?} (v{}{})\n  provenance: {}\n  total row mix: \
+             {:.1}% PoT-4 / {:.1}% Fixed-4 / {:.1}% Fixed-8\n",
+            self.name,
+            self.version,
+            if self.model.is_empty() {
+                String::new()
+            } else {
+                format!(", model {}", self.model)
+            },
+            self.provenance.describe(),
+            p * 100.0,
+            f4 * 100.0,
+            f8 * 100.0
+        );
+        for l in &self.masks.layers {
+            let (lp, lf4, lf8) = l.op_fractions();
+            s.push_str(&format!(
+                "  {:<12} {:>4} rows  {:>5.1}% PoT  {:>5.1}% F4  {:>5.1}% F8\n",
+                l.layer,
+                l.rows(),
+                lp * 100.0,
+                lf4 * 100.0,
+                lf8 * 100.0
+            ));
+        }
+        s
+    }
+}
+
+/// `{"pot4": p, "fixed4": f4, "fixed8": f8}`.
+fn fractions_json((p, f4, f8): (f64, f64, f64)) -> Json {
+    Json::obj(vec![
+        ("pot4", Json::Num(p)),
+        ("fixed4", Json::Num(f4)),
+        ("fixed8", Json::Num(f8)),
+    ])
+}
+
+fn mask_json(mask: &[f32]) -> Json {
+    Json::Arr(mask.iter().map(|&v| Json::Num(v as f64)).collect())
+}
+
+fn mask_from_json(j: Option<&Json>, layer: &str, field: &str) -> Result<Vec<f32>> {
+    let arr = j
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("layer {layer:?} lacks a numeric {field:?} array"))?;
+    arr.iter()
+        .enumerate()
+        .map(|(i, v)| {
+            let x = v
+                .as_f64()
+                .ok_or_else(|| anyhow!("layer {layer:?} {field}[{i}] is not a number"))?;
+            if x != 0.0 && x != 1.0 {
+                bail!("layer {layer:?} {field}[{i}] must be 0 or 1, got {x}");
+            }
+            Ok(x as f32)
+        })
+        .collect()
+}
+
+/// The canonical name of a freshly-derived plan at `ratio` — the one
+/// spelling shared by `QuantSource::Derived` resolution (artifacts and
+/// synthetic paths) and `ilmpq plan derive`'s default, so a derived plan
+/// carries the same name however it was produced.
+pub fn derived_plan_name(ratio: Ratio) -> String {
+    format!("derived-{}", ratio.label())
+}
+
+/// Parse a ratio argument as either a Table-I name (`ilmpq2`) or an
+/// explicit `P:F4:F8` split — the shared `--ratio` semantics of
+/// `ilmpq plan derive` and `ratio-search`.
+pub fn parse_ratio_arg(s: &str) -> Result<Ratio> {
+    if let Some(r) = super::ratio_by_name(s) {
+        return Ok(r);
+    }
+    Ratio::parse(s).map_err(|e| {
+        let names: Vec<&str> = super::named_ratios().iter().map(|(n, _)| *n).collect();
+        anyhow!("{e}; named ratios: {}", names.join(", "))
+    })
+}
+
+/// Derive a plan from a manifest via the §II-C policy: the manifest's
+/// Hessian eigenvalues pick the Fixed-8 rescue rows, weight-row variance
+/// sorts the PoT share. `params` must be in AOT order (normally
+/// [`Manifest::load_init_params`], or trained weights).
+pub fn derive_from_manifest(
+    m: &Manifest,
+    params: &[HostTensor],
+    ratio: Ratio,
+    name: &str,
+) -> Result<QuantPlan> {
+    let mut layers = Vec::with_capacity(m.quantized_layers.len());
+    for (lname, rows, _) in &m.quantized_layers {
+        let idx = m
+            .params
+            .iter()
+            .position(|(n, _)| n == lname)
+            .ok_or_else(|| anyhow!("no parameter tensor for quantized layer {lname:?}"))?;
+        let w_rows = gemm_rows(&params[idx]);
+        let eigs = m.eigs.get(lname).ok_or_else(|| {
+            anyhow!(
+                "manifest has no Hessian eigenvalues for layer {lname:?} — \
+                 cannot derive a plan (re-run `make artifacts`, or use \
+                 --synthetic for the artifact-free fixture)"
+            )
+        })?;
+        anyhow::ensure!(
+            w_rows.len() == *rows && eigs.len() == *rows,
+            "layer {lname:?}: {} weight rows / {} eigenvalues vs manifest {rows}",
+            w_rows.len(),
+            eigs.len()
+        );
+        layers.push(assign::assign_layer(lname, &w_rows, eigs, ratio));
+    }
+    Ok(QuantPlan {
+        name: name.to_string(),
+        version: PLAN_VERSION,
+        model: m.model_name.clone(),
+        provenance: Provenance::Sensitivity { ratio: ratio.label() },
+        masks: MaskSet { name: name.to_string(), layers },
+    })
+}
+
+/// What the user asked to quantize with — the single resolution path that
+/// replaces the historic triplicated
+/// `str_or("ratio", ...) -> default_masks.get(name)` lookup.
+#[derive(Debug, Clone, PartialEq)]
+pub enum QuantSource {
+    /// Load (and validate against the manifest) a serialized plan file.
+    PlanFile(PathBuf),
+    /// A named plan from the manifest's default assignment table.
+    NamedRatio(String),
+    /// Derive fresh via the §II-C policy at this ratio (needs the
+    /// manifest's eigenvalues + init params).
+    Derived { ratio: Ratio },
+    /// No quantization config (the unquantized reference path).
+    Unquantized,
+}
+
+impl QuantSource {
+    /// The one mapping from CLI flags to a source, shared by every binary
+    /// (`ilmpq` and the examples): `--plan FILE` | `--ratio NAME` |
+    /// `--derive RATIO` (name or `P:F4:F8`), mutually exclusive, with a
+    /// named default when none is given.
+    pub fn from_cli(
+        plan: Option<&str>,
+        ratio: Option<&str>,
+        derive: Option<&str>,
+        default_ratio: &str,
+    ) -> Result<QuantSource> {
+        match (plan, ratio, derive) {
+            (Some(p), None, None) => Ok(QuantSource::PlanFile(PathBuf::from(p))),
+            (None, Some(r), None) => Ok(QuantSource::NamedRatio(r.to_string())),
+            (None, None, Some(d)) => {
+                Ok(QuantSource::Derived { ratio: parse_ratio_arg(d)? })
+            }
+            (None, None, None) => {
+                Ok(QuantSource::NamedRatio(default_ratio.to_string()))
+            }
+            _ => bail!(
+                "--plan, --ratio, and --derive are mutually exclusive; pass at most one"
+            ),
+        }
+    }
+
+    /// One-line description for logs.
+    pub fn describe(&self) -> String {
+        match self {
+            QuantSource::PlanFile(p) => format!("plan file {p:?}"),
+            QuantSource::NamedRatio(n) => format!("named ratio {n:?}"),
+            QuantSource::Derived { ratio } => format!("derive at {}", ratio.label()),
+            QuantSource::Unquantized => "unquantized".to_string(),
+        }
+    }
+
+    /// Resolve to a validated plan. `Unquantized` yields `None`; every
+    /// other variant yields `Some` or a curated error (unknown names list
+    /// the available plans, like `backend::registry` does for backends).
+    pub fn resolve(&self, m: &Manifest) -> Result<Option<QuantPlan>> {
+        match self {
+            QuantSource::Unquantized => Ok(None),
+            QuantSource::NamedRatio(name) => Ok(Some(m.plan(name)?)),
+            QuantSource::PlanFile(path) => {
+                let plan = QuantPlan::load(path)?;
+                plan.validate(m)?;
+                Ok(Some(plan))
+            }
+            QuantSource::Derived { ratio } => {
+                let params = m
+                    .load_init_params()
+                    .context("deriving a plan needs the manifest's init params")?;
+                self.resolve_with_params(m, &params)
+            }
+        }
+    }
+
+    /// As [`QuantSource::resolve`], but with already-loaded params — so a
+    /// caller that needs the params anyway (backend construction) doesn't
+    /// pay a second full weight load from disk for the `Derived` case.
+    pub fn resolve_with_params(
+        &self,
+        m: &Manifest,
+        params: &[HostTensor],
+    ) -> Result<Option<QuantPlan>> {
+        match self {
+            QuantSource::Derived { ratio } => Ok(Some(derive_from_manifest(
+                m,
+                params,
+                *ratio,
+                &derived_plan_name(*ratio),
+            )?)),
+            other => other.resolve(m),
+        }
+    }
+
+    /// [`QuantSource::resolve`] for contexts that cannot run unquantized.
+    pub fn resolve_required(&self, m: &Manifest) -> Result<QuantPlan> {
+        self.resolve(m)?.ok_or_else(|| {
+            anyhow!("this path needs a quantization plan; pass --ratio NAME or --plan FILE")
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::synth;
+    use crate::quant::Scheme;
+    use crate::util::Rng;
+
+    fn fixture() -> (Manifest, QuantPlan) {
+        let mut rng = Rng::new(3);
+        let m = synth::tiny_manifest(8, 8, 3, &[4, 8], 5);
+        let masks = synth::random_masks(&m, Ratio::new(65.0, 30.0, 5.0), &mut rng);
+        let plan = QuantPlan::from_mask_set(
+            MaskSet { name: "t".into(), layers: masks.layers },
+            Provenance::Synthetic { seed: 3, ratio: "65:30:5".into() },
+        )
+        .with_model(&m.model_name);
+        (m, plan)
+    }
+
+    #[test]
+    fn json_roundtrip_is_identity() {
+        let (_, plan) = fixture();
+        let text = plan.to_json().to_string_compact();
+        let back = QuantPlan::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, plan, "plan JSON round-trip must be bit-identical");
+    }
+
+    #[test]
+    fn provenance_kinds_roundtrip() {
+        for p in [
+            Provenance::NamedRatio { ratio: "ilmpq2".into() },
+            Provenance::RatioSearch {
+                device: "xc7z045".into(),
+                ratio: "65:30:5".into(),
+                throughput_gops: 421.1,
+                latency_ms: 8.6,
+            },
+            Provenance::Sensitivity { ratio: "60:35:5".into() },
+            Provenance::Uniform { scheme: "Fixed-8".into() },
+            Provenance::Synthetic { seed: 42, ratio: "65:30:5".into() },
+        ] {
+            let back = Provenance::from_json(&p.to_json()).unwrap();
+            assert_eq!(back, p);
+            assert!(!p.describe().is_empty());
+        }
+        assert!(Provenance::from_json(&Json::obj(vec![(
+            "kind",
+            Json::Str("martian".into())
+        )]))
+        .is_err());
+    }
+
+    #[test]
+    fn from_json_rejects_structural_garbage() {
+        for (text, what) in [
+            (r#"{"name": "x"}"#, "missing version"),
+            (r#"{"quant_plan": 99, "name": "x"}"#, "future version"),
+            (r#"{"quant_plan": 1.5, "name": "x"}"#, "fractional version"),
+            (r#"{"quant_plan": -1, "name": "x"}"#, "negative version"),
+            (
+                r#"{"quant_plan": 1, "name": "x", "provenance": {"kind": "uniform", "scheme": "s"}, "layers": [{"layer": "l", "is8": [0.5], "is_pot": [0]}]}"#,
+                "non-binary mask value",
+            ),
+            (
+                r#"{"quant_plan": 1, "name": "x", "provenance": {"kind": "uniform", "scheme": "s"}, "layers": [{"layer": "l", "is8": [0, 1], "is_pot": [0]}]}"#,
+                "mask length mismatch",
+            ),
+        ] {
+            let j = Json::parse(text).unwrap();
+            assert!(QuantPlan::from_json(&j).is_err(), "{what} must be rejected");
+        }
+    }
+
+    #[test]
+    fn validate_accepts_the_matching_manifest() {
+        let (m, plan) = fixture();
+        plan.validate(&m).unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_wrong_layer_names_rows_overlap_and_model() {
+        let (m, good) = fixture();
+
+        let mut p = good.clone();
+        p.masks.layers[0].layer = "not-a-layer".into();
+        let err = p.validate(&m).unwrap_err();
+        assert!(format!("{err:#}").contains("layer mismatch"), "{err:#}");
+
+        // Same layers, wrong order: the sim overlay is positional, so a
+        // reordered plan must be rejected, not silently mistimed.
+        let mut p = good.clone();
+        p.masks.layers.swap(0, 1);
+        let err = p.validate(&m).unwrap_err();
+        assert!(format!("{err:#}").contains("manifest order"), "{err:#}");
+
+        let mut p = good.clone();
+        p.masks.layers[0].is8.push(0.0);
+        p.masks.layers[0].is_pot.push(0.0);
+        let err = p.validate(&m).unwrap_err();
+        assert!(format!("{err:#}").contains("rows"), "{err:#}");
+
+        // Ragged is8/is_pot: rows() only measures is8 and the value loop
+        // zips (truncating), so the length check must catch this.
+        let mut p = good.clone();
+        p.masks.layers[0].is_pot.pop();
+        let err = p.validate(&m).unwrap_err();
+        assert!(format!("{err:#}").contains("is_pot"), "{err:#}");
+
+        let mut p = good.clone();
+        p.masks.layers[0].is8[0] = 1.0;
+        p.masks.layers[0].is_pot[0] = 1.0;
+        let err = p.validate(&m).unwrap_err();
+        assert!(format!("{err:#}").contains("exclusive"), "{err:#}");
+
+        let mut p = good.clone();
+        p.masks.layers.pop();
+        let err = p.validate(&m).unwrap_err();
+        assert!(format!("{err:#}").contains("layers"), "{err:#}");
+
+        let p = good.with_model("resnet-152");
+        let err = p.validate(&m).unwrap_err();
+        assert!(format!("{err:#}").contains("model"), "{err:#}");
+    }
+
+    #[test]
+    fn file_roundtrip_preserves_masks_bit_exactly() {
+        let (m, plan) = fixture();
+        let dir = std::env::temp_dir().join("ilmpq_plan_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("p.json");
+        plan.save(&path).unwrap();
+        let back = QuantPlan::load(&path).unwrap();
+        assert_eq!(back, plan);
+        back.validate(&m).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn source_resolution_named_file_derived_unquantized() {
+        let (mut m, plan) = fixture();
+        // Named: registered plans resolve; unknown names list what exists.
+        m.default_masks.insert("reg".into(), plan.masks.clone());
+        let named = QuantSource::NamedRatio("reg".into())
+            .resolve(&m)
+            .unwrap()
+            .unwrap();
+        assert_eq!(named.masks.layers, plan.masks.layers);
+        let err = QuantSource::NamedRatio("nope".into()).resolve(&m).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("reg") && msg.contains("nope"), "{msg}");
+
+        // File: load + validate.
+        let dir = std::env::temp_dir().join("ilmpq_plan_src");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("p.json");
+        plan.save(&path).unwrap();
+        let from_file = QuantSource::PlanFile(path.clone())
+            .resolve(&m)
+            .unwrap()
+            .unwrap();
+        assert_eq!(from_file.masks, plan.masks);
+        std::fs::remove_dir_all(&dir).ok();
+
+        // Unquantized: no plan, and resolve_required refuses.
+        assert!(QuantSource::Unquantized.resolve(&m).unwrap().is_none());
+        assert!(QuantSource::Unquantized.resolve_required(&m).is_err());
+    }
+
+    #[test]
+    fn summary_fractions_sum_to_one() {
+        let (_, plan) = fixture();
+        let (p, f4, f8) = plan.total_fractions();
+        assert!((p + f4 + f8 - 1.0).abs() < 1e-12);
+        let j = plan.summary_json();
+        assert_eq!(j.get("name").and_then(Json::as_str), Some("t"));
+        let total = j.get("total").unwrap();
+        let jp = total.get("pot4").and_then(Json::as_f64).unwrap();
+        assert!((jp - p).abs() < 1e-12);
+        assert_eq!(
+            j.get("layers").and_then(Json::as_arr).unwrap().len(),
+            plan.masks.layers.len()
+        );
+        assert!(plan.report().contains("total row mix"));
+    }
+
+    #[test]
+    fn uniform_plan_fractions_are_pure() {
+        let m = synth::tiny_manifest(8, 8, 3, &[4], 5);
+        let plan = QuantPlan::from_mask_set(
+            synth::uniform_masks(&m, Scheme::Pot4),
+            Provenance::Uniform { scheme: Scheme::Pot4.label().into() },
+        );
+        assert_eq!(plan.total_fractions().0, 1.0);
+        plan.validate(&m).unwrap();
+    }
+
+    #[test]
+    fn from_cli_maps_flags_to_sources_exclusively() {
+        assert_eq!(
+            QuantSource::from_cli(Some("p.json"), None, None, "ilmpq2").unwrap(),
+            QuantSource::PlanFile("p.json".into())
+        );
+        assert_eq!(
+            QuantSource::from_cli(None, Some("pot4"), None, "ilmpq2").unwrap(),
+            QuantSource::NamedRatio("pot4".into())
+        );
+        assert_eq!(
+            QuantSource::from_cli(None, None, Some("60:35:5"), "ilmpq2").unwrap(),
+            QuantSource::Derived { ratio: Ratio::new(60.0, 35.0, 5.0) }
+        );
+        assert_eq!(
+            QuantSource::from_cli(None, None, Some("ilmpq1"), "ilmpq2").unwrap(),
+            QuantSource::Derived { ratio: Ratio::new(60.0, 35.0, 5.0) }
+        );
+        assert_eq!(
+            QuantSource::from_cli(None, None, None, "ilmpq2").unwrap(),
+            QuantSource::NamedRatio("ilmpq2".into())
+        );
+        for (p, r, d) in [
+            (Some("f"), Some("r"), None),
+            (Some("f"), None, Some("60:35:5")),
+            (None, Some("r"), Some("60:35:5")),
+        ] {
+            let err = QuantSource::from_cli(p, r, d, "ilmpq2").unwrap_err();
+            assert!(format!("{err:#}").contains("exclusive"), "{err:#}");
+        }
+    }
+
+    #[test]
+    fn ratio_arg_parses_names_and_splits() {
+        assert_eq!(parse_ratio_arg("ilmpq2").unwrap().label(), "65:30:5");
+        assert_eq!(parse_ratio_arg("60:35:5").unwrap().label(), "60:35:5");
+        let err = parse_ratio_arg("bogus").unwrap_err();
+        assert!(format!("{err:#}").contains("ilmpq2"), "{err:#}");
+    }
+
+    #[test]
+    fn derive_from_manifest_needs_eigs() {
+        // The synthetic manifest carries no eigs: derive must say so
+        // instead of panicking or silently assigning.
+        let mut rng = Rng::new(5);
+        let m = synth::tiny_manifest(8, 8, 3, &[4], 5);
+        let params = synth::random_params(&m, &mut rng);
+        let err =
+            derive_from_manifest(&m, &params, Ratio::new(65.0, 30.0, 5.0), "d").unwrap_err();
+        assert!(format!("{err:#}").contains("eigenvalues"), "{err:#}");
+    }
+}

@@ -12,7 +12,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 use super::tensor::{read_f32_file, read_i32_file, HostTensor};
-use crate::quant::{LayerMasks, MaskSet};
+use crate::quant::{LayerMasks, MaskSet, Provenance, QuantPlan};
 use crate::util::Json;
 
 /// One named array in an artifact signature.
@@ -220,6 +220,30 @@ impl Manifest {
         self.artifacts
             .get(name)
             .with_context(|| format!("artifact {name:?} not in manifest"))
+    }
+
+    /// Names of the plans this manifest can resolve (the `default_masks`
+    /// table computed by `assign.py`), for listings and error messages.
+    pub fn plan_names(&self) -> Vec<&str> {
+        self.default_masks.keys().map(String::as_str).collect()
+    }
+
+    /// A named default assignment as a first-class [`QuantPlan`] — the one
+    /// place `default_masks` is resolved by name, so the legacy table and
+    /// the plan API cannot drift. Unknown names get the curated error
+    /// listing what exists (same UX contract as `backend::registry`).
+    pub fn plan(&self, name: &str) -> Result<QuantPlan> {
+        let masks = self.default_masks.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown quantization plan {name:?}; available plans: {}",
+                self.plan_names().join(", ")
+            )
+        })?;
+        Ok(QuantPlan::from_mask_set(
+            masks.clone(),
+            Provenance::NamedRatio { ratio: name.to_string() },
+        )
+        .with_model(&self.model_name))
     }
 
     /// Load the initial parameters (He init written by aot.py) as tensors in

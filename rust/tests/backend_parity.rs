@@ -8,7 +8,7 @@
 //! (no PJRT, no `make artifacts`).
 
 use ilmpq::backend::{self, synth, BackendInit, InferenceBackend};
-use ilmpq::quant::{Ratio, Scheme};
+use ilmpq::quant::{Provenance, QuantPlan, Ratio, Scheme};
 use ilmpq::util::Rng;
 
 const H: usize = 8;
@@ -31,7 +31,10 @@ fn fixed8_qgemm_tracks_float_through_registry() {
     // float backend, and argmax must agree wherever the float margin is
     // clear.
     let (mut init, mut rng) = fixture(5);
-    init.masks = Some(synth::uniform_masks(&init.manifest, Scheme::Fixed8));
+    init.plan = Some(QuantPlan::from_mask_set(
+        synth::uniform_masks(&init.manifest, Scheme::Fixed8),
+        Provenance::Uniform { scheme: Scheme::Fixed8.label().into() },
+    ));
     let qgemm = backend::create("qgemm", &init).unwrap();
     // Float reference on the same raw params (frozen=false: the Fixed-8
     // freeze would *itself* be the quantization noise under test).
@@ -72,8 +75,10 @@ fn fixed8_qgemm_tracks_float_through_registry() {
 #[test]
 fn qgemm_prepare_caches_and_stays_bit_exact() {
     let (mut init, mut rng) = fixture(9);
-    init.masks =
-        Some(synth::random_masks(&init.manifest, Ratio::new(65.0, 30.0, 5.0), &mut rng));
+    init.plan = Some(QuantPlan::from_mask_set(
+        synth::random_masks(&init.manifest, Ratio::new(65.0, 30.0, 5.0), &mut rng),
+        Provenance::Synthetic { seed: 9, ratio: "65:30:5".into() },
+    ));
     init.threads = Some(3);
     let be = backend::create("qgemm", &init).unwrap();
     be.prepare().unwrap();
@@ -99,8 +104,10 @@ fn qgemm_prepare_caches_and_stays_bit_exact() {
 #[test]
 fn per_batch_timing_is_reported() {
     let (mut init, mut rng) = fixture(13);
-    init.masks =
-        Some(synth::random_masks(&init.manifest, Ratio::new(65.0, 30.0, 5.0), &mut rng));
+    init.plan = Some(QuantPlan::from_mask_set(
+        synth::random_masks(&init.manifest, Ratio::new(65.0, 30.0, 5.0), &mut rng),
+        Provenance::Synthetic { seed: 13, ratio: "65:30:5".into() },
+    ));
     let be = backend::create("qgemm", &init).unwrap();
     let x: Vec<f32> = (0..4 * H * W * C).map(|_| rng.normal()).collect();
     let out = be.run_batch(&x, 4).unwrap();
@@ -129,8 +136,10 @@ fn pjrt_selection_fails_cleanly_without_engine() {
     // Whatever the build mode, asking for pjrt with no loaded runtime must
     // be a clear registry-level error, not a panic or a silent default.
     let (mut init, mut rng) = fixture(3);
-    init.masks =
-        Some(synth::random_masks(&init.manifest, Ratio::new(65.0, 30.0, 5.0), &mut rng));
+    init.plan = Some(QuantPlan::from_mask_set(
+        synth::random_masks(&init.manifest, Ratio::new(65.0, 30.0, 5.0), &mut rng),
+        Provenance::Synthetic { seed: 3, ratio: "65:30:5".into() },
+    ));
     let err = backend::create("pjrt", &init).unwrap_err();
     assert!(format!("{err:#}").contains("pjrt"), "{err:#}");
 }

@@ -222,8 +222,8 @@ fn serving_end_to_end() {
         ServeConfig {
             workers: 2,
             max_wait: Duration::from_millis(2),
-            ratio_name: "ilmpq2".into(),
             device: "xc7z045".into(),
+            // plan: None — start_pjrt derives it from the masks argument.
             ..Default::default()
         },
     )

@@ -104,16 +104,30 @@ fn mask_tensor_row_mismatch_panics_with_layer_name() {
 }
 
 #[test]
-fn server_rejects_unknown_ratio() {
+fn unknown_plan_name_lists_available_plans() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let err = rt.manifest.plan("bogus").unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("bogus") && msg.contains("ilmpq2"), "{msg}");
+}
+
+#[test]
+fn server_rejects_mismatched_plan() {
     use ilmpq::coordinator::{ServeConfig, Server};
     use std::sync::Arc;
     let Some(rt) = runtime_or_skip() else { return };
     let rt = Arc::new(rt);
     let params = rt.manifest.load_init_params().unwrap();
     let masks = rt.manifest.default_masks.get("ilmpq2").unwrap().clone();
-    let cfg = ServeConfig { ratio_name: "bogus".into(), ..Default::default() };
+    // A corrupt plan (extra row in one layer) must fail validation at
+    // startup instead of driving the sim overlay / pack with bad geometry.
+    let mut plan = rt.manifest.plan("ilmpq2").unwrap();
+    plan.masks.layers[0].is8.push(0.0);
+    plan.masks.layers[0].is_pot.push(0.0);
+    let cfg = ServeConfig { plan: Some(plan), ..Default::default() };
     let err = Server::start_pjrt(rt, params, &masks, cfg).err().expect("must fail");
-    assert!(format!("{err:#}").contains("unknown ratio"));
+    let msg = format!("{err:#}");
+    assert!(msg.contains("plan") && msg.contains("rows"), "{msg}");
 }
 
 #[test]

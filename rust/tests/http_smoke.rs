@@ -31,11 +31,12 @@ use ilmpq::util::{Json, Rng};
 /// Synthetic manifest + qgemm backend + running server + HTTP front end on
 /// an ephemeral loopback port.
 fn start_front(
-    ratio: &str,
-    serve_cfg: ServeConfig,
+    plan_name: &str,
+    mut serve_cfg: ServeConfig,
     http_workers: usize,
 ) -> (HttpServer, Manifest) {
-    let (m, be) = loadgen::synth_fixture("qgemm", ratio, Some(2), 11).unwrap();
+    let (m, be, plan) = loadgen::synth_fixture("qgemm", plan_name, Some(2), 11).unwrap();
+    serve_cfg.plan = Some(plan);
     start_front_with(&m, be, serve_cfg, http_workers)
 }
 
@@ -85,7 +86,6 @@ fn concurrent_clients_get_logits_over_the_wire() {
         ServeConfig {
             workers: 2,
             max_wait: Duration::from_millis(2),
-            ratio_name: "web".into(),
             ..Default::default()
         },
         8,
@@ -156,14 +156,14 @@ fn concurrent_clients_get_logits_over_the_wire() {
 
 #[test]
 fn wire_logits_match_direct_backend_execution() {
-    let (m, be) = loadgen::synth_fixture("qgemm", "par", Some(2), 17).unwrap();
+    let (m, be, plan) = loadgen::synth_fixture("qgemm", "par", Some(2), 17).unwrap();
     let (front, m) = start_front_with(
         &m,
         be.clone(),
         ServeConfig {
             workers: 1,
             max_wait: Duration::from_millis(1),
-            ratio_name: "par".into(),
+            plan: Some(plan),
             ..Default::default()
         },
         2,
@@ -203,7 +203,6 @@ fn malformed_bodies_and_wrong_geometry_map_to_400() {
         ServeConfig {
             workers: 1,
             max_wait: Duration::from_millis(1),
-            ratio_name: "bad".into(),
             ..Default::default()
         },
         2,
@@ -266,7 +265,7 @@ impl InferenceBackend for SlowBackend {
 #[test]
 fn queue_full_maps_to_429_under_burst() {
     let depth = 4usize;
-    let (m, inner) = loadgen::synth_fixture("qgemm", "ovl", Some(1), 23).unwrap();
+    let (m, inner, plan) = loadgen::synth_fixture("qgemm", "ovl", Some(1), 23).unwrap();
     let be: Arc<dyn InferenceBackend> =
         Arc::new(SlowBackend { inner, delay: Duration::from_millis(150) });
     let (front, m) = start_front_with(
@@ -276,7 +275,7 @@ fn queue_full_maps_to_429_under_burst() {
             workers: 1,
             max_wait: Duration::from_millis(1),
             queue_depth: depth,
-            ratio_name: "ovl".into(),
+            plan: Some(plan),
             ..Default::default()
         },
         16,
@@ -341,14 +340,14 @@ impl InferenceBackend for FailingBackend {
 
 #[test]
 fn backend_failure_maps_to_500() {
-    let (m, _unused) = loadgen::synth_fixture("qgemm", "flk", Some(1), 29).unwrap();
+    let (m, _unused, plan) = loadgen::synth_fixture("qgemm", "flk", Some(1), 29).unwrap();
     let (front, m) = start_front_with(
         &m,
         Arc::new(FailingBackend),
         ServeConfig {
             workers: 1,
             max_wait: Duration::from_millis(1),
-            ratio_name: "flk".into(),
+            plan: Some(plan),
             ..Default::default()
         },
         2,
@@ -376,7 +375,6 @@ fn draining_server_maps_to_503_while_http_stays_up() {
         ServeConfig {
             workers: 1,
             max_wait: Duration::from_millis(1),
-            ratio_name: "drn".into(),
             ..Default::default()
         },
         2,
@@ -409,14 +407,14 @@ fn draining_server_maps_to_503_while_http_stays_up() {
 
 #[test]
 fn malformed_http_never_wedges_a_handler() {
-    let (m, be) = loadgen::synth_fixture("qgemm", "mal", Some(2), 11).unwrap();
+    let (m, be, plan) = loadgen::synth_fixture("qgemm", "mal", Some(2), 11).unwrap();
     let server = Server::start(
         &m,
         be,
         ServeConfig {
             workers: 1,
             max_wait: Duration::from_millis(1),
-            ratio_name: "mal".into(),
+            plan: Some(plan),
             ..Default::default()
         },
     )
@@ -494,13 +492,63 @@ fn malformed_http_never_wedges_a_handler() {
 }
 
 #[test]
+fn plan_endpoint_reports_the_active_plan() {
+    let (m, be, plan) = loadgen::synth_fixture("qgemm", "pln", Some(1), 31).unwrap();
+    let (front, _m) = start_front_with(
+        &m,
+        be,
+        ServeConfig {
+            workers: 1,
+            max_wait: Duration::from_millis(1),
+            plan: Some(plan.clone()),
+            ..Default::default()
+        },
+        2,
+    );
+    let mut client = client_for(&front);
+
+    // GET /v1/plan advertises name, provenance, and scheme fractions —
+    // exactly the precision configuration this server executes.
+    let (code, body) = client.request("GET", "/v1/plan", None).unwrap();
+    assert_eq!(code, 200, "{body}");
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.get("name").and_then(Json::as_str), Some("pln"));
+    assert_eq!(
+        j.get("provenance").and_then(|p| p.get("kind")).and_then(Json::as_str),
+        Some("synthetic"),
+        "{body}"
+    );
+    let (p, f4, f8) = plan.total_fractions();
+    let total = j.get("total").expect("total fractions object");
+    for (key, want) in [("pot4", p), ("fixed4", f4), ("fixed8", f8)] {
+        let got = total.get(key).and_then(Json::as_f64).unwrap();
+        assert!(
+            (got - want).abs() < 1e-9,
+            "{key}: wire {got} vs in-memory {want}"
+        );
+    }
+    assert_eq!(
+        j.get("layers").and_then(Json::as_arr).map(<[Json]>::len),
+        Some(plan.masks.layers.len())
+    );
+
+    // healthz names the active plan; method misuse maps like the others.
+    let (code, hbody) = client.request("GET", "/v1/healthz", None).unwrap();
+    assert_eq!(code, 200);
+    let h = Json::parse(&hbody).unwrap();
+    assert_eq!(h.get("plan").and_then(Json::as_str), Some("pln"), "{hbody}");
+    let (code, _) = client.request("POST", "/v1/plan", Some("{}")).unwrap();
+    assert_eq!(code, 405);
+    front.stop();
+}
+
+#[test]
 fn remote_loadgen_reproduces_outcome_classes_over_the_wire() {
     let (front, _m) = start_front(
         "rlg",
         ServeConfig {
             workers: 1,
             max_wait: Duration::from_millis(1),
-            ratio_name: "rlg".into(),
             ..Default::default()
         },
         4,

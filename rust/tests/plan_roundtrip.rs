@@ -1,0 +1,174 @@
+//! Quantization-plan acceptance tests — artifact-free, PJRT-free, so the
+//! `--no-default-features` CI leg pins the whole plan lifecycle on every
+//! push:
+//!
+//! * round-trip identity: derive → save → load yields a bit-identical
+//!   `MaskSet` (the `ilmpq plan derive --out p.json` → `ilmpq serve --plan
+//!   p.json` contract, exercised here through the same library calls);
+//! * `QuantSource::PlanFile` serving is bit-identical to the in-memory
+//!   derivation — same masks, same logits, end to end through the
+//!   admission pipeline;
+//! * `validate` rejects wrong layer names, wrong row counts, and
+//!   overlapping `is8`/`is_pot` masks;
+//! * `NamedRatio` resolution agrees with the manifest's legacy
+//!   `default_masks` table on the synthetic fixture.
+
+use std::time::Duration;
+
+use ilmpq::coordinator::{loadgen, ServeConfig, Server};
+use ilmpq::quant::{QuantPlan, QuantSource, Ratio};
+use ilmpq::util::Rng;
+
+fn tmp_plan_path(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("ilmpq_plan_it_{tag}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join("plan.json")
+}
+
+#[test]
+fn derive_save_load_is_a_mask_identity() {
+    let (m, _params, derived) = loadgen::synth_plan("rt", Ratio::new(65.0, 30.0, 5.0), 7);
+    derived.validate(&m).unwrap();
+    let path = tmp_plan_path("identity");
+    derived.save(&path).unwrap();
+    let loaded = QuantPlan::load(&path).unwrap();
+    // Full structural equality — name, version, model, provenance, and the
+    // mask set bit for bit (values are exactly 0.0/1.0, so JSON is exact).
+    assert_eq!(loaded, derived);
+    for (a, b) in loaded.masks.layers.iter().zip(&derived.masks.layers) {
+        assert!(a.is8.iter().zip(&b.is8).all(|(x, y)| x.to_bits() == y.to_bits()));
+        assert!(a.is_pot.iter().zip(&b.is_pot).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn serving_a_plan_file_matches_the_in_memory_derivation() {
+    // The acceptance path: `plan derive --synthetic --out p.json` then
+    // `serve --plan p.json` must execute bit-identical masks to the
+    // in-memory derivation at the same seed.
+    let seed = 7u64;
+    let ratio = Ratio::new(65.0, 30.0, 5.0);
+    let (_m, _params, derived) = loadgen::synth_plan("acc", ratio, seed);
+    let path = tmp_plan_path("serve");
+    derived.save(&path).unwrap();
+
+    // In-memory path: the named synthetic source generates the same plan.
+    let (m_mem, be_mem, plan_mem) = loadgen::synth_fixture_source(
+        "qgemm",
+        &QuantSource::NamedRatio("acc".into()),
+        Some(2),
+        seed,
+        true,
+    )
+    .unwrap();
+    let plan_mem = plan_mem.unwrap();
+    assert_eq!(plan_mem.masks, derived.masks, "synth_plan must be the NamedRatio recipe");
+
+    // File path: what `ilmpq serve --plan p.json --synthetic` constructs.
+    let (m_file, be_file, plan_file) = loadgen::synth_fixture_source(
+        "qgemm",
+        &QuantSource::PlanFile(path.clone()),
+        Some(2),
+        seed,
+        true,
+    )
+    .unwrap();
+    let plan_file = plan_file.unwrap();
+    assert_eq!(plan_file.masks, derived.masks, "plan file masks must round-trip");
+
+    // Same packed execution: identical logits through the whole admission
+    // pipeline for the same workload.
+    let img = m_mem.data.image_elems();
+    assert_eq!(img, m_file.data.image_elems());
+    let mut rng = Rng::new(99);
+    let mut image = vec![0f32; img];
+    rng.fill_normal(&mut image, 1.0);
+    let direct_mem = be_mem.run_batch(&image, 1).unwrap();
+    let direct_file = be_file.run_batch(&image, 1).unwrap();
+    assert_eq!(direct_mem.preds, direct_file.preds);
+    assert!(direct_mem
+        .logits
+        .iter()
+        .zip(&direct_file.logits)
+        .all(|(a, b)| a.to_bits() == b.to_bits()));
+
+    let server = Server::start(
+        &m_file,
+        be_file,
+        ServeConfig {
+            workers: 1,
+            max_wait: Duration::from_millis(1),
+            plan: Some(plan_file.clone()),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(server.plan.as_ref().unwrap().masks, derived.masks);
+    let reply = server
+        .submit(image)
+        .recv_timeout(Duration::from_secs(30))
+        .expect("reply")
+        .expect("plan-served request must succeed");
+    assert_eq!(reply.pred, direct_mem.preds[0]);
+    assert!(reply
+        .logits
+        .iter()
+        .zip(&direct_mem.logits)
+        .all(|(a, b)| a.to_bits() == b.to_bits()));
+    server.stop();
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn named_ratio_resolution_matches_the_legacy_table() {
+    // `QuantSource::NamedRatio` on a manifest must agree with reading
+    // `default_masks` directly — the drift the plan API exists to prevent.
+    let (m, _be, plan) = loadgen::synth_fixture("qgemm", "named", Some(1), 5).unwrap();
+    let resolved = QuantSource::NamedRatio("named".into())
+        .resolve(&m)
+        .unwrap()
+        .expect("named source resolves to a plan");
+    assert_eq!(resolved.masks, *m.default_masks.get("named").unwrap());
+    assert_eq!(resolved.masks, plan.masks);
+
+    let err = QuantSource::NamedRatio("absent".into()).resolve(&m).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("absent") && msg.contains("named"),
+        "unknown plan error must list what exists: {msg}"
+    );
+}
+
+#[test]
+fn validate_rejects_mismatches_and_overlap() {
+    let (m, _params, good) = loadgen::synth_plan("val", Ratio::new(65.0, 30.0, 5.0), 3);
+
+    let mut p = good.clone();
+    p.masks.layers[1].layer = "wrong/name".into();
+    assert!(p.validate(&m).is_err(), "wrong layer name must be rejected");
+
+    let mut p = good.clone();
+    p.masks.layers[0].is8.truncate(1);
+    p.masks.layers[0].is_pot.truncate(1);
+    assert!(p.validate(&m).is_err(), "wrong row count must be rejected");
+
+    let mut p = good.clone();
+    p.masks.layers[0].is8[0] = 1.0;
+    p.masks.layers[0].is_pot[0] = 1.0;
+    let err = p.validate(&m).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("exclusive"),
+        "overlapping is8+is_pot must be rejected: {err:#}"
+    );
+
+    // A tampered plan file fails on load (non-binary value) or validate
+    // (overlap) — either way before execution.
+    let path = tmp_plan_path("tamper");
+    good.save(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::write(&path, text.replacen("\"is8\":[", "\"is8\":[0.25,", 1)).unwrap();
+    let result = QuantPlan::load(&path);
+    assert!(result.is_err(), "tampered mask values must fail to load");
+    std::fs::remove_file(&path).ok();
+}

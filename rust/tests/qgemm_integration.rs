@@ -35,7 +35,7 @@ fn backends_agree_on_trained_reference() {
     let params = ptq::train_reference(&rt, 150, 2021, |_| {}).unwrap();
     let m = rt.manifest.clone();
     let names: Vec<String> = m.params.iter().map(|(n, _)| n.clone()).collect();
-    let masks = m.default_masks.get("ilmpq2").unwrap().clone();
+    let masks = m.plan("ilmpq2").unwrap().masks;
     let frozen = freeze::freeze_params(&params, &names, &masks);
 
     // Float Rust backend vs PJRT: identical math modulo f32 association —
@@ -76,7 +76,7 @@ fn qgemm_eval_is_deterministic() {
     let Some(rt) = runtime_or_skip() else { return };
     let m = rt.manifest.clone();
     let params = m.load_init_params().unwrap();
-    let masks = m.default_masks.get("ilmpq1").unwrap().clone();
+    let masks = m.plan("ilmpq1").unwrap().masks;
     let names: Vec<String> = m.params.iter().map(|(n, _)| n.clone()).collect();
     let frozen = freeze::freeze_params(&params, &names, &masks);
     // Same backend instance twice (cached pack), and a fresh instance: all

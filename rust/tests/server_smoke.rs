@@ -23,7 +23,7 @@ use std::time::Duration;
 
 use ilmpq::backend::{self, synth, BackendInit, BatchOutput, InferenceBackend};
 use ilmpq::coordinator::{Metrics, ServeConfig, ServeError, Server};
-use ilmpq::quant::Ratio;
+use ilmpq::quant::{MaskSet, Provenance, QuantPlan, Ratio};
 use ilmpq::util::Rng;
 
 const H: usize = 8;
@@ -31,22 +31,27 @@ const W: usize = 8;
 const C: usize = 3;
 const CLASSES: usize = 5;
 
-/// Synthetic manifest + a qgemm backend over it, with the mask set also
-/// registered under `default_masks` so the FPGA-sim overlay resolves.
-fn fixture(ratio_name: &str) -> (ilmpq::runtime::Manifest, Arc<dyn InferenceBackend>, Rng) {
+/// Synthetic manifest + a qgemm backend over it, plus the quantization
+/// plan (for `ServeConfig::plan`, which drives the FPGA-sim overlay).
+fn fixture(
+    plan_name: &str,
+) -> (ilmpq::runtime::Manifest, Arc<dyn InferenceBackend>, QuantPlan, Rng) {
     let mut rng = Rng::new(11);
-    let mut m = synth::tiny_manifest(H, W, C, &[4, 8], CLASSES);
+    let m = synth::tiny_manifest(H, W, C, &[4, 8], CLASSES);
     let params = synth::random_params(&m, &mut rng);
     let masks = synth::random_masks(&m, Ratio::new(65.0, 30.0, 5.0), &mut rng);
-    m.default_masks.insert(ratio_name.to_string(), masks.clone());
+    let plan = QuantPlan::from_mask_set(
+        MaskSet { name: plan_name.to_string(), layers: masks.layers },
+        Provenance::Synthetic { seed: 11, ratio: "65:30:5".into() },
+    );
     let init = BackendInit {
-        masks: Some(masks),
+        plan: Some(plan.clone()),
         threads: Some(2),
         ..BackendInit::new(m.clone(), params)
     };
     let be: Arc<dyn InferenceBackend> =
         Arc::from(backend::create("qgemm", &init).unwrap());
-    (m, be, rng)
+    (m, be, plan, rng)
 }
 
 fn normal_image(img: usize, rng: &mut Rng) -> Vec<f32> {
@@ -57,11 +62,11 @@ fn normal_image(img: usize, rng: &mut Rng) -> Vec<f32> {
 
 #[test]
 fn serving_end_to_end_on_qgemm_without_artifacts() {
-    let (m, be, mut rng) = fixture("smoke");
+    let (m, be, plan, mut rng) = fixture("smoke");
     let cfg = ServeConfig {
         workers: 2,
         max_wait: Duration::from_millis(2),
-        ratio_name: "smoke".into(),
+        plan: Some(plan),
         device: "xc7z045".into(),
         ..Default::default()
     };
@@ -98,11 +103,11 @@ fn serving_end_to_end_on_qgemm_without_artifacts() {
 
 #[test]
 fn malformed_request_rejected_alone_neighbors_bit_correct() {
-    let (m, be, mut rng) = fixture("adm");
+    let (m, be, plan, mut rng) = fixture("adm");
     let cfg = ServeConfig {
         workers: 2,
         max_wait: Duration::from_millis(2),
-        ratio_name: "adm".into(),
+        plan: Some(plan),
         ..Default::default()
     };
     let server = Server::start(&m, be.clone(), cfg).unwrap();
@@ -167,13 +172,13 @@ fn malformed_request_rejected_alone_neighbors_bit_correct() {
 
 #[test]
 fn overload_sheds_with_queue_full_while_accepted_complete() {
-    let (m, be, mut rng) = fixture("ovl");
+    let (m, be, plan, mut rng) = fixture("ovl");
     let depth = 4usize;
     let cfg = ServeConfig {
         workers: 1,
         max_wait: Duration::from_millis(1),
         queue_depth: depth,
-        ratio_name: "ovl".into(),
+        plan: Some(plan),
         ..Default::default()
     };
     let server = Server::start(&m, be, cfg).unwrap();
@@ -207,13 +212,13 @@ fn overload_sheds_with_queue_full_while_accepted_complete() {
 
 #[test]
 fn stop_answers_every_in_flight_request() {
-    let (m, be, mut rng) = fixture("stp");
+    let (m, be, plan, mut rng) = fixture("stp");
     let cfg = ServeConfig {
         workers: 2,
         // Long deadline: stop() hits while requests still sit in the
         // batcher, exercising the flush + ShuttingDown drain.
         max_wait: Duration::from_millis(50),
-        ratio_name: "stp".into(),
+        plan: Some(plan),
         ..Default::default()
     };
     let server = Server::start(&m, be, cfg).unwrap();
@@ -299,12 +304,12 @@ impl InferenceBackend for DegenerateBackend {
 
 #[test]
 fn failed_batches_answer_every_caller_with_typed_error() {
-    let (m, _be, mut rng) = fixture("fail");
+    let (m, _be, plan, mut rng) = fixture("fail");
     let be: Arc<dyn InferenceBackend> = Arc::new(FailingBackend);
     let cfg = ServeConfig {
         workers: 2,
         max_wait: Duration::from_millis(1),
-        ratio_name: "fail".into(),
+        plan: Some(plan),
         ..Default::default()
     };
     let server = Server::start(&m, be, cfg).unwrap();
@@ -335,15 +340,15 @@ fn failed_batches_answer_every_caller_with_typed_error() {
 /// Shared harness for the containment backends: every caller must get a
 /// typed `BackendFailed` whose reason contains `expect_msg`, with no leaked
 /// admission slots (a fresh round after the failures still gets answers).
-fn assert_contained(be: Arc<dyn InferenceBackend>, ratio: &str, expect_msg: &str) {
-    let (m, _unused, mut rng) = fixture(ratio);
+fn assert_contained(be: Arc<dyn InferenceBackend>, plan_name: &str, expect_msg: &str) {
+    let (m, _unused, plan, mut rng) = fixture(plan_name);
     let cfg = ServeConfig {
         workers: 2,
         max_wait: Duration::from_millis(1),
         // Tight bound: a single leaked batch of slots would wedge round 2
         // into permanent QueueFull.
         queue_depth: 4,
-        ratio_name: ratio.into(),
+        plan: Some(plan),
         ..Default::default()
     };
     let server = Server::start(&m, be, cfg).unwrap();
@@ -386,12 +391,12 @@ fn degenerate_backend_output_is_rejected_not_served() {
 
 #[test]
 fn idle_router_parks_and_batch_deadline_still_fires() {
-    let (m, be, mut rng) = fixture("idle");
+    let (m, be, plan, mut rng) = fixture("idle");
     let max_wait = Duration::from_millis(40);
     let cfg = ServeConfig {
         workers: 1,
         max_wait,
-        ratio_name: "idle".into(),
+        plan: Some(plan),
         ..Default::default()
     };
     let server = Server::start(&m, be, cfg).unwrap();
@@ -437,22 +442,29 @@ fn idle_router_parks_and_batch_deadline_still_fires() {
 }
 
 #[test]
-fn server_validates_ratio_and_device_for_any_backend() {
-    let (m, be, _) = fixture("smoke");
+fn server_validates_plan_and_device_for_any_backend() {
+    let (m, be, plan, _) = fixture("smoke");
+
+    // A plan that doesn't fit the manifest (corrupted row count) must be
+    // rejected at startup, before it can drive the sim overlay or a pack.
+    let mut corrupt = plan.clone();
+    corrupt.masks.layers[0].is8.push(0.0);
+    corrupt.masks.layers[0].is_pot.push(0.0);
     let err = Server::start(
         &m,
         be.clone(),
-        ServeConfig { ratio_name: "bogus".into(), ..Default::default() },
+        ServeConfig { plan: Some(corrupt), ..Default::default() },
     )
     .err()
-    .expect("unknown ratio must fail");
-    assert!(format!("{err:#}").contains("unknown ratio"));
+    .expect("mismatched plan must fail");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("plan") && msg.contains("rows"), "{msg}");
 
     let err = Server::start(
         &m,
         be,
         ServeConfig {
-            ratio_name: "smoke".into(),
+            plan: Some(plan),
             device: "xc7z999".into(),
             ..Default::default()
         },
