@@ -78,8 +78,8 @@ fn main() -> anyhow::Result<()> {
         let spec = loadgen::LoadSpec {
             requests: n,
             rate,
-            malformed_frac: 0.0,
             seed: 1234,
+            ..Default::default()
         };
         let (report, _metrics) = loadgen::run(server, &rt.manifest, &spec);
         println!(

@@ -86,12 +86,7 @@ fn main() -> anyhow::Result<()> {
             ..Default::default()
         };
         let server = Server::start(&m, be, cfg)?;
-        let spec = loadgen::LoadSpec {
-            requests,
-            rate,
-            malformed_frac: 0.0,
-            seed,
-        };
+        let spec = loadgen::LoadSpec { requests, rate, seed, ..Default::default() };
         let (report, _metrics) = loadgen::run(server, &m, &spec);
         assert_eq!(
             report.lost, 0,
@@ -149,7 +144,7 @@ fn main() -> anyhow::Result<()> {
                 },
             )?;
             let url = format!("http://{}", front.local_addr());
-            let spec = loadgen::LoadSpec { requests, rate, malformed_frac: 0.0, seed };
+            let spec = loadgen::LoadSpec { requests, rate, seed, ..Default::default() };
             let (report, _server_metrics) = loadgen::run_remote(&url, &spec, conns)?;
             front.stop();
             println!(

@@ -1,0 +1,436 @@
+//! Deterministic fault injection: a wrapper backend that makes every
+//! execution-side failure mode reachable on demand.
+//!
+//! The serving loop's resilience machinery (watchdog deadline, singleton
+//! retry/quarantine, circuit breaker, fallback chain — see
+//! `coordinator::server`) is only testable if the failures it guards
+//! against can be produced *deterministically* and *artifact-free*.
+//! [`FaultyBackend`] wraps any [`InferenceBackend`] and, driven by a seeded
+//! [`FaultSpec`] schedule, injects:
+//!
+//! * **panics** — the contained-panic path (`catch_unwind` in the worker);
+//! * **errors** — ordinary `run_batch` failures (`ServeError::BackendFailed`);
+//! * **stalls** — a sleep long enough to trip `ServeConfig::execute_deadline`
+//!   (`ServeError::Timeout`; the watchdog abandons the call);
+//! * **garbage outputs** — NaN logits or a truncated logits buffer, which
+//!   the server's output validation must reject instead of serving;
+//! * **failure bursts** — N consecutive failed batches every M batches, the
+//!   shape that opens (and, once past, re-closes) the circuit breaker;
+//! * **poison requests** — an image whose first element is [`POISON_MAGIC`]
+//!   fails *every batch containing it*, deterministically. Only the
+//!   singleton-retry re-split can isolate it, which is exactly what the
+//!   quarantine tests assert.
+//!
+//! All randomness comes from one seeded [`crate::util::Rng`] advanced in a
+//! fixed draw order per batch, so a given spec produces the same fault
+//! schedule on every run. Specs round-trip through JSON (`util::Json`, no
+//! serde) so the CLI can load them from a file: `ilmpq serve --fault
+//! spec.json`, or `--fault chaos` for the built-in mixed schedule.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::quant::MaskSet;
+use crate::util::{Json, Rng};
+
+use super::{BatchOutput, InferenceBackend};
+
+/// Sentinel first-element value marking a poison request. Finite (so it
+/// passes admission's finiteness scan) and exactly representable in f32,
+/// f64, and a JSON number, so it survives the HTTP wire format bit-exactly.
+pub const POISON_MAGIC: f32 = 1.0e12;
+
+/// A seeded, deterministic fault schedule. All probabilities are per-batch
+/// and drawn in a fixed order from one RNG, so the schedule is a pure
+/// function of `(seed, batch index)`. The default spec injects nothing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    /// RNG seed for the per-batch fault draws.
+    pub seed: u64,
+    /// Probability a batch execution panics (contained by the worker).
+    pub panic_prob: f64,
+    /// Probability a batch returns an injected `Err`.
+    pub error_prob: f64,
+    /// Probability a batch stalls `stall_ms` before executing — long enough
+    /// to trip the execution deadline when one is configured.
+    pub stall_prob: f64,
+    /// Stall duration in milliseconds.
+    pub stall_ms: u64,
+    /// Fixed latency in milliseconds added to *every* batch.
+    pub latency_ms: u64,
+    /// Probability a batch's output is corrupted after the inner run:
+    /// alternating between NaN-poisoned logits and a truncated buffer.
+    pub garbage_prob: f64,
+    /// Every `burst_period` batches, fail the first `burst_len` of them
+    /// (by batch index; `0` disables). `burst_period == u64::MAX` with a
+    /// nonzero `burst_len` yields one leading burst — the deterministic way
+    /// to open the breaker and then let it recover.
+    pub burst_period: u64,
+    /// Consecutive batches failed per burst window.
+    pub burst_len: u64,
+    /// Detect poison requests: fail any batch containing an image whose
+    /// first element equals [`POISON_MAGIC`]. Deterministic (no RNG draw),
+    /// so batch-level retries keep failing until the re-split isolates the
+    /// poison member.
+    pub poison: bool,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            seed: 0,
+            panic_prob: 0.0,
+            error_prob: 0.0,
+            stall_prob: 0.0,
+            stall_ms: 1_000,
+            latency_ms: 0,
+            garbage_prob: 0.0,
+            burst_period: 0,
+            burst_len: 0,
+            poison: true,
+        }
+    }
+}
+
+impl FaultSpec {
+    /// The built-in mixed schedule (`--fault chaos`): ≥10% each of panics,
+    /// deadline-tripping stalls, garbage outputs, and plain errors, plus a
+    /// leading failure burst that opens the circuit breaker before the
+    /// healthy tail lets it re-close.
+    pub fn chaos(seed: u64) -> FaultSpec {
+        FaultSpec {
+            seed,
+            panic_prob: 0.10,
+            error_prob: 0.10,
+            stall_prob: 0.10,
+            stall_ms: 1_000,
+            latency_ms: 0,
+            garbage_prob: 0.10,
+            burst_period: u64::MAX,
+            burst_len: 5,
+            poison: true,
+        }
+    }
+
+    /// Parse a spec from its JSON object form. Missing keys take the
+    /// [`FaultSpec::default`] value; unknown keys are an error so a typo in
+    /// a CI spec file fails loudly instead of silently injecting nothing.
+    pub fn from_json(j: &Json) -> Result<FaultSpec> {
+        let Some(obj) = j.as_obj() else {
+            bail!("fault spec must be a JSON object");
+        };
+        let mut spec = FaultSpec::default();
+        for (key, val) in obj {
+            let num = |what: &str| -> Result<f64> {
+                val.as_f64()
+                    .with_context(|| format!("fault spec key {key:?}: expected a {what}"))
+            };
+            match key.as_str() {
+                "seed" => spec.seed = num("number")? as u64,
+                "panic_prob" => spec.panic_prob = num("probability")?,
+                "error_prob" => spec.error_prob = num("probability")?,
+                "stall_prob" => spec.stall_prob = num("probability")?,
+                "stall_ms" => spec.stall_ms = num("millisecond count")? as u64,
+                "latency_ms" => spec.latency_ms = num("millisecond count")? as u64,
+                "garbage_prob" => spec.garbage_prob = num("probability")?,
+                "burst_period" => spec.burst_period = num("batch count")? as u64,
+                "burst_len" => spec.burst_len = num("batch count")? as u64,
+                "poison" => match val {
+                    Json::Bool(b) => spec.poison = *b,
+                    _ => bail!("fault spec key \"poison\": expected a bool"),
+                },
+                _ => bail!(
+                    "fault spec: unknown key {key:?} (known: seed, panic_prob, \
+                     error_prob, stall_prob, stall_ms, latency_ms, garbage_prob, \
+                     burst_period, burst_len, poison)"
+                ),
+            }
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seed", Json::Num(self.seed as f64)),
+            ("panic_prob", Json::Num(self.panic_prob)),
+            ("error_prob", Json::Num(self.error_prob)),
+            ("stall_prob", Json::Num(self.stall_prob)),
+            ("stall_ms", Json::Num(self.stall_ms as f64)),
+            ("latency_ms", Json::Num(self.latency_ms as f64)),
+            ("garbage_prob", Json::Num(self.garbage_prob)),
+            ("burst_period", Json::Num(self.burst_period as f64)),
+            ("burst_len", Json::Num(self.burst_len as f64)),
+            ("poison", Json::Bool(self.poison)),
+        ])
+    }
+
+    /// Load a spec from a JSON file, or the named built-in (`"chaos"`).
+    pub fn load(path: &std::path::Path) -> Result<FaultSpec> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read fault spec {}", path.display()))?;
+        let j = Json::parse(&text)
+            .with_context(|| format!("parse fault spec {}", path.display()))?;
+        Self::from_json(&j)
+            .with_context(|| format!("fault spec {} rejected", path.display()))
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        for (name, p) in [
+            ("panic_prob", self.panic_prob),
+            ("error_prob", self.error_prob),
+            ("stall_prob", self.stall_prob),
+            ("garbage_prob", self.garbage_prob),
+        ] {
+            if !(0.0..=1.0).contains(&p) {
+                bail!("fault spec: {name} = {p} is not a probability in [0, 1]");
+            }
+        }
+        if self.burst_period > 0 && self.burst_len > self.burst_period {
+            bail!(
+                "fault spec: burst_len {} exceeds burst_period {} (every batch \
+                 would fail; use error_prob = 1 for that)",
+                self.burst_len,
+                self.burst_period
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Per-batch fault decisions, drawn under the state lock in a fixed order.
+struct FaultDraw {
+    index: u64,
+    stall: bool,
+    panic: bool,
+    error: bool,
+    garbage: bool,
+}
+
+struct FaultState {
+    rng: Rng,
+    batch_index: u64,
+}
+
+/// An [`InferenceBackend`] wrapper that injects the [`FaultSpec`] schedule
+/// around (and into) an inner backend. Delegates `name` (prefixed
+/// `"faulty:"`), `supports_frozen`, `prepare`, and — load-bearing for the
+/// server's plan cross-check — `active_masks`.
+pub struct FaultyBackend {
+    inner: Arc<dyn InferenceBackend>,
+    spec: FaultSpec,
+    name: String,
+    state: Mutex<FaultState>,
+}
+
+impl FaultyBackend {
+    pub fn new(inner: Arc<dyn InferenceBackend>, spec: FaultSpec) -> FaultyBackend {
+        let name = format!("faulty:{}", inner.name());
+        let state = Mutex::new(FaultState { rng: Rng::new(spec.seed), batch_index: 0 });
+        FaultyBackend { inner, spec, name, state }
+    }
+
+    pub fn spec(&self) -> &FaultSpec {
+        &self.spec
+    }
+
+    /// Advance the schedule one batch. Draw order is fixed (stall, panic,
+    /// error, garbage) so the schedule for batch N never depends on which
+    /// faults earlier batches actually exercised.
+    fn draw(&self) -> FaultDraw {
+        let mut st = self.state.lock().unwrap();
+        let index = st.batch_index;
+        st.batch_index += 1;
+        FaultDraw {
+            index,
+            stall: st.rng.bool(self.spec.stall_prob),
+            panic: st.rng.bool(self.spec.panic_prob),
+            error: st.rng.bool(self.spec.error_prob),
+            garbage: st.rng.bool(self.spec.garbage_prob),
+        }
+    }
+
+    fn in_burst(&self, index: u64) -> bool {
+        self.spec.burst_period > 0
+            && self.spec.burst_len > 0
+            && index % self.spec.burst_period < self.spec.burst_len
+    }
+}
+
+impl InferenceBackend for FaultyBackend {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn supports_frozen(&self) -> bool {
+        self.inner.supports_frozen()
+    }
+
+    fn prepare(&self) -> Result<()> {
+        self.inner.prepare()
+    }
+
+    fn active_masks(&self) -> Option<&MaskSet> {
+        self.inner.active_masks()
+    }
+
+    fn run_batch(&self, images: &[f32], batch: usize) -> Result<BatchOutput> {
+        // Poison detection first: deterministic, independent of the RNG
+        // schedule, so co-batched neighbors of a poison request fail every
+        // batch-level attempt until a singleton re-split isolates it.
+        if self.spec.poison && batch > 0 && images.len() % batch == 0 {
+            let stride = images.len() / batch;
+            if stride > 0 {
+                for i in 0..batch {
+                    if images[i * stride] == POISON_MAGIC {
+                        bail!(
+                            "injected fault: poison request at batch slot {i} \
+                             (image[0] == {POISON_MAGIC:e})"
+                        );
+                    }
+                }
+            }
+        }
+        let draw = self.draw();
+        if self.spec.latency_ms > 0 {
+            std::thread::sleep(Duration::from_millis(self.spec.latency_ms));
+        }
+        if self.in_burst(draw.index) {
+            bail!("injected fault: failure burst (batch {})", draw.index);
+        }
+        if draw.stall {
+            // The stall itself is the fault: after sleeping, execution
+            // proceeds normally. With a watchdog deadline shorter than
+            // `stall_ms` the call has already been abandoned and this
+            // (correct, late) result is dropped with the channel.
+            std::thread::sleep(Duration::from_millis(self.spec.stall_ms));
+        }
+        if draw.panic {
+            panic!("injected fault: panic (batch {})", draw.index);
+        }
+        if draw.error {
+            bail!("injected fault: backend error (batch {})", draw.index);
+        }
+        let mut out = self.inner.run_batch(images, batch)?;
+        if draw.garbage {
+            // Corrupt *after* the inner run: the inner backend's argmax
+            // must never see the NaN (it panics on NaN by contract), and
+            // the corruption must reach the server's output validation.
+            if draw.index % 2 == 0 {
+                for v in out.logits.iter_mut() {
+                    *v = f32::NAN;
+                }
+            } else {
+                out.logits.pop();
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::synth;
+    use super::*;
+    use crate::quant::{Provenance, QuantPlan, Ratio};
+
+    fn inner() -> (Arc<dyn InferenceBackend>, usize) {
+        let mut rng = Rng::new(5);
+        let m = synth::tiny_manifest(8, 8, 3, &[4, 8], 5);
+        let img = m.data.image_elems();
+        let params = synth::random_params(&m, &mut rng);
+        let masks = synth::random_masks(&m, Ratio::new(65.0, 30.0, 5.0), &mut rng);
+        let plan = QuantPlan::from_mask_set(
+            masks,
+            Provenance::Synthetic { seed: 5, ratio: "65:30:5".into() },
+        );
+        let init = super::super::BackendInit {
+            plan: Some(plan),
+            ..super::super::BackendInit::new(m, params)
+        };
+        (Arc::from(super::super::create("qgemm", &init).unwrap()), img)
+    }
+
+    #[test]
+    fn default_spec_is_a_transparent_wrapper() {
+        let (be, img) = inner();
+        let reference = be.run_batch(&vec![0.25; 2 * img], 2).unwrap();
+        let faulty = FaultyBackend::new(be, FaultSpec::default());
+        assert_eq!(faulty.name(), "faulty:qgemm");
+        assert!(faulty.active_masks().is_some(), "must delegate active_masks");
+        let out = faulty.run_batch(&vec![0.25; 2 * img], 2).unwrap();
+        assert_eq!(out.logits, reference.logits);
+        assert_eq!(out.preds, reference.preds);
+    }
+
+    #[test]
+    fn schedule_is_deterministic_per_seed() {
+        let spec = FaultSpec { error_prob: 0.5, seed: 9, ..Default::default() };
+        let (be, img) = inner();
+        let x = vec![0.25; img];
+        let run = |be: Arc<dyn InferenceBackend>| -> Vec<bool> {
+            let f = FaultyBackend::new(be, spec.clone());
+            (0..32).map(|_| f.run_batch(&x, 1).is_ok()).collect()
+        };
+        let a = run(be.clone());
+        let b = run(be);
+        assert_eq!(a, b, "same seed must produce the same fault schedule");
+        assert!(a.iter().any(|ok| *ok) && a.iter().any(|ok| !ok), "{a:?}");
+    }
+
+    #[test]
+    fn poison_fails_every_batch_containing_it_and_only_those() {
+        let (be, img) = inner();
+        let f = FaultyBackend::new(be, FaultSpec::default());
+        let mut x = vec![0.25; 4 * img];
+        x[2 * img] = POISON_MAGIC; // slot 2 is the poison request
+        let err = f.run_batch(&x, 4).unwrap_err();
+        assert!(format!("{err:#}").contains("poison"), "{err:#}");
+        // The same poison image alone still fails; clean singletons pass.
+        let err = f.run_batch(&x[2 * img..3 * img], 1).unwrap_err();
+        assert!(format!("{err:#}").contains("poison"), "{err:#}");
+        assert!(f.run_batch(&x[..img], 1).is_ok());
+    }
+
+    #[test]
+    fn garbage_corrupts_after_the_inner_run() {
+        let (be, img) = inner();
+        let f = FaultyBackend::new(be, FaultSpec { garbage_prob: 1.0, ..Default::default() });
+        let x = vec![0.25; img];
+        // Batch index 0: NaN logits; index 1: truncated buffer. Both are
+        // Ok(...) from the wrapper — rejecting them is the *server's* job.
+        let out = f.run_batch(&x, 1).unwrap();
+        assert!(out.logits.iter().all(|v| v.is_nan()), "{:?}", out.logits);
+        let out = f.run_batch(&x, 1).unwrap();
+        assert!(!out.logits.is_empty() && out.logits.len() < out.classes, "{:?}", out.logits);
+    }
+
+    #[test]
+    fn burst_fails_the_leading_batches_then_recovers() {
+        let (be, img) = inner();
+        let spec = FaultSpec { burst_period: u64::MAX, burst_len: 3, ..Default::default() };
+        let f = FaultyBackend::new(be, spec);
+        let x = vec![0.25; img];
+        let outcomes: Vec<bool> = (0..6).map(|_| f.run_batch(&x, 1).is_ok()).collect();
+        assert_eq!(outcomes, vec![false, false, false, true, true, true]);
+    }
+
+    #[test]
+    fn json_round_trip_and_validation() {
+        let spec = FaultSpec::chaos(17);
+        let back = FaultSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(spec, back);
+        // Missing keys default; unknown keys and bad probabilities error.
+        let partial = Json::parse(r#"{"error_prob": 0.25, "seed": 3}"#).unwrap();
+        let spec = FaultSpec::from_json(&partial).unwrap();
+        assert_eq!(spec.error_prob, 0.25);
+        assert_eq!(spec.seed, 3);
+        assert_eq!(spec.panic_prob, 0.0);
+        let bad = Json::parse(r#"{"eror_prob": 0.25}"#).unwrap();
+        assert!(FaultSpec::from_json(&bad).is_err(), "typo must be rejected");
+        let bad = Json::parse(r#"{"panic_prob": 1.5}"#).unwrap();
+        assert!(FaultSpec::from_json(&bad).is_err(), "prob > 1 must be rejected");
+    }
+}

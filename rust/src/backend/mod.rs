@@ -21,7 +21,11 @@
 //!   `quant::qgemm`. Pure CPU; builds and runs under
 //!   `--no-default-features`;
 //! * [`FloatRefBackend`] — the f32 GEMM-view reference with the PJRT path's
-//!   numerics, for cross-checks and the PTQ float-reference row.
+//!   numerics, for cross-checks and the PTQ float-reference row;
+//! * [`FaultyBackend`] — seeded, deterministic fault injection wrapped
+//!   around any inner backend (`faulty:<name>` registry keys, or
+//!   `--fault spec.json` from the CLI), so every execution failure mode the
+//!   serving loop guards against is reachable artifact-free.
 //!
 //! Backends are resolved by name through [`registry()`] — the single source
 //! of truth for `--backend` parsing (`create(name, &init)` errors list the
@@ -35,11 +39,13 @@
 //! time with a clear message instead of at compile time.
 
 pub mod cpu;
+pub mod fault;
 pub mod pjrt;
 pub mod registry;
 pub mod synth;
 
 pub use cpu::{FloatRefBackend, QgemmBackend};
+pub use fault::{FaultSpec, FaultyBackend, POISON_MAGIC};
 pub use pjrt::PjrtBackend;
 pub use registry::{
     available_names, create, create_serving, registry, spec, BackendInit, BackendSpec,

@@ -15,7 +15,9 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::quant::{QuantPlan, QuantSource};
 use crate::runtime::{HostTensor, Manifest, Runtime};
 
-use super::{FloatRefBackend, InferenceBackend, PjrtBackend, QgemmBackend};
+use super::{
+    FaultSpec, FaultyBackend, FloatRefBackend, InferenceBackend, PjrtBackend, QgemmBackend,
+};
 
 /// Everything a backend constructor may need. Callers fill what they have;
 /// each builder validates what it actually requires.
@@ -34,10 +36,14 @@ pub struct BackendInit {
     pub runtime: Option<Arc<Runtime>>,
     /// Worker threads for the CPU backends (`None` = all cores).
     pub threads: Option<usize>,
+    /// Fault-injection schedule: when set, [`create`] wraps the constructed
+    /// backend in a [`FaultyBackend`] driving that schedule. A `faulty:`
+    /// name prefix without a spec here wraps with [`FaultSpec::chaos`].
+    pub fault: Option<FaultSpec>,
 }
 
 impl BackendInit {
-    /// Minimal init: manifest + params, frozen, no plan/runtime.
+    /// Minimal init: manifest + params, frozen, no plan/runtime, no faults.
     pub fn new(manifest: Manifest, params: Vec<HostTensor>) -> BackendInit {
         BackendInit {
             manifest,
@@ -46,6 +52,7 @@ impl BackendInit {
             frozen: true,
             runtime: None,
             threads: None,
+            fault: None,
         }
     }
 }
@@ -181,18 +188,41 @@ pub fn available_names() -> Vec<&'static str> {
     registry().iter().filter(|s| s.available).map(|s| s.name).collect()
 }
 
-/// Look up a backend by name; unknown names error with the full list.
+/// Look up a backend by name; unknown names error with the full list. A
+/// `faulty:` prefix resolves to the wrapped backend's spec (the wrapper has
+/// no construction requirements of its own).
 pub fn spec(name: &str) -> Result<&'static BackendSpec> {
-    registry().iter().find(|s| s.name == name).ok_or_else(|| {
-        anyhow!("unknown backend {name:?}; registered backends: {}", names_line())
+    let inner = name.strip_prefix("faulty:").unwrap_or(name);
+    registry().iter().find(|s| s.name == inner).ok_or_else(|| {
+        anyhow!(
+            "unknown backend {name:?}; registered backends: {} \
+             (any of them wrappable as faulty:<name>)",
+            names_line()
+        )
     })
 }
 
-/// Resolve + construct a backend by name.
+/// Resolve + construct a backend by name. Two routes into fault injection
+/// compose here: `init.fault` wraps *any* name with that schedule, and a
+/// `faulty:` name prefix forces a wrapper even without a spec (defaulting
+/// to [`FaultSpec::chaos`] seeded from the spec's default seed).
 pub fn create(name: &str, init: &BackendInit) -> Result<Box<dyn InferenceBackend>> {
-    spec(name)?
+    let forced = name.starts_with("faulty:");
+    let be = spec(name)?
         .build(init)
-        .with_context(|| format!("initialize backend {name:?}"))
+        .with_context(|| format!("initialize backend {name:?}"))?;
+    let fault = match (&init.fault, forced) {
+        (Some(spec), _) => Some(spec.clone()),
+        (None, true) => Some(FaultSpec::chaos(0)),
+        (None, false) => None,
+    };
+    Ok(match fault {
+        Some(spec) => {
+            spec.validate().context("fault spec rejected")?;
+            Box::new(FaultyBackend::new(Arc::from(be), spec))
+        }
+        None => be,
+    })
 }
 
 /// Serving convenience shared by the CLI and the examples — the whole
@@ -293,6 +323,25 @@ mod tests {
         assert!(spec("qgemm").unwrap().masks_required);
         assert!(!spec("float").unwrap().masks_required);
         assert!(!spec("pjrt").unwrap().masks_required);
+    }
+
+    #[test]
+    fn faulty_prefix_wraps_any_backend() {
+        let i = init();
+        let be = create("faulty:qgemm", &i).unwrap();
+        assert_eq!(be.name(), "faulty:qgemm");
+        assert!(spec("faulty:float").is_ok());
+        assert!(create("faulty:tpu", &i).is_err());
+        // An explicit schedule on init wraps a plain name too.
+        let i = BackendInit {
+            fault: Some(FaultSpec { error_prob: 1.0, ..FaultSpec::default() }),
+            ..init()
+        };
+        let be = create("qgemm", &i).unwrap();
+        assert_eq!(be.name(), "faulty:qgemm");
+        be.prepare().unwrap();
+        let x = vec![0.25f32; 8 * 8 * 3];
+        assert!(be.run_batch(&x, 1).is_err());
     }
 
     #[test]

@@ -572,23 +572,36 @@ fn err_body(msg: &str, kind: &str) -> String {
 
 fn route(server: &Server, info: &ModelInfo, cfg: &HttpConfig, req: &HttpRequest) -> (u16, String) {
     match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/v1/healthz") => (
-            200,
-            Json::obj(vec![
-                ("status", Json::Str("ok".into())),
-                ("model", Json::Str(info.model.clone())),
-                ("image_elems", Json::Num(info.image_elems as f64)),
-                ("classes", Json::Num(info.classes as f64)),
-                (
-                    "plan",
-                    match &server.plan {
-                        Some(p) => Json::Str(p.name.clone()),
-                        None => Json::Null,
-                    },
-                ),
-            ])
-            .to_string_compact(),
-        ),
+        ("GET", "/v1/healthz") => {
+            // Liveness-vs-readiness split: this endpoint always answers
+            // (liveness — the front end is up), but the status code tracks
+            // *readiness* — 503 while the circuit breaker is open/half-open
+            // or the server is draining, so load balancers stop routing
+            // here while the body still explains why.
+            let ready = server.is_ready();
+            (
+                if ready { 200 } else { 503 },
+                Json::obj(vec![
+                    ("status", Json::Str(if ready { "ok" } else { "unavailable" }.into())),
+                    ("live", Json::Bool(true)),
+                    ("ready", Json::Bool(ready)),
+                    ("breaker", Json::Str(server.breaker_state().into())),
+                    ("degraded", Json::Bool(server.is_degraded())),
+                    ("draining", Json::Bool(server.is_shutting_down())),
+                    ("model", Json::Str(info.model.clone())),
+                    ("image_elems", Json::Num(info.image_elems as f64)),
+                    ("classes", Json::Num(info.classes as f64)),
+                    (
+                        "plan",
+                        match &server.plan {
+                            Some(p) => Json::Str(p.name.clone()),
+                            None => Json::Null,
+                        },
+                    ),
+                ])
+                .to_string_compact(),
+            )
+        }
         ("GET", "/v1/metrics") => (200, server.metrics.to_json().to_string_compact()),
         ("GET", "/v1/plan") => match &server.plan {
             Some(p) => (200, p.summary_json().to_string_compact()),
@@ -675,6 +688,8 @@ fn serve_error_response(e: &ServeError) -> (u16, String) {
         ServeError::QueueFull { .. } => (429, "queue_full"),
         ServeError::BackendFailed(_) => (500, "backend_failed"),
         ServeError::ShuttingDown => (503, "shutting_down"),
+        ServeError::Timeout { .. } => (504, "execute_timeout"),
+        ServeError::Unavailable => (503, "unavailable"),
     };
     (status, err_body(&e.to_string(), kind))
 }
@@ -1054,9 +1069,19 @@ mod tests {
         assert_eq!(serve_error_response(&ServeError::QueueFull { depth: 4 }).0, 429);
         assert_eq!(serve_error_response(&ServeError::BackendFailed("x".into())).0, 500);
         assert_eq!(serve_error_response(&ServeError::ShuttingDown).0, 503);
+        assert_eq!(serve_error_response(&ServeError::Timeout { deadline_ms: 50 }).0, 504);
+        assert_eq!(serve_error_response(&ServeError::Unavailable).0, 503);
         let (_, body) = serve_error_response(&ServeError::QueueFull { depth: 4 });
         let j = Json::parse(&body).unwrap();
         assert_eq!(j.get("kind").and_then(|v| v.as_str()), Some("queue_full"));
+        // The two 503s and the two 504s are told apart by `kind` — loadgen's
+        // wire classifier depends on this.
+        let (_, body) = serve_error_response(&ServeError::Unavailable);
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.get("kind").and_then(|v| v.as_str()), Some("unavailable"));
+        let (_, body) = serve_error_response(&ServeError::Timeout { deadline_ms: 50 });
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.get("kind").and_then(|v| v.as_str()), Some("execute_timeout"));
     }
 
     #[test]

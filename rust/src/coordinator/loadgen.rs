@@ -18,11 +18,20 @@
 //! end-to-end on a toolchain-only machine: no `make artifacts`, no PJRT,
 //! `--no-default-features` is enough.
 //!
+//! Beyond the steady Poisson shape, [`Scenario`] selects adversarial
+//! workloads for the resilience machinery: `burst` offers a square-wave
+//! overload (the admission bound and breaker see alternating saturation
+//! and silence), `chaos` blends valid, malformed, and poison
+//! (fault-triggering) requests — pair it with `ilmpq serve --fault` to
+//! drive the full supervised-execution state machine. Both emit the same
+//! [`LoadReport`], so resilience runs chart on the same axes as clean ones.
+//!
 //! [`run_remote`] is the same workload spoken over real sockets against an
 //! `ilmpq serve --listen` front end (`ilmpq loadgen --url`): the HTTP
 //! statuses fold back into the same [`LoadReport`] outcome classes
-//! (200→done, 400→invalid, 429→shed, 500→failed, 503→shutdown,
-//! 504/timeout→slow, transport failure→lost), and `e2e`/`queue_wait` carry
+//! (200→done, 400→invalid, 429→shed, 500→failed, 503→shutdown or
+//! unavailable by body kind, 504→timeout or slow by body kind, transport
+//! failure→lost), and `e2e`/`queue_wait` carry
 //! the *server-reported* per-request timings from each reply body, so
 //! those columns stay directly comparable with in-process runs. Caveat:
 //! arrivals are open-loop (Poisson-paced into a bounded client-side
@@ -49,6 +58,46 @@ use crate::runtime::{HostTensor, Manifest};
 use crate::util::stats::Summary;
 use crate::util::{Json, Rng};
 
+/// Arrival/content shape of a load-generation run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Scenario {
+    /// Steady Poisson arrivals at the configured rate (the default).
+    #[default]
+    Steady,
+    /// Square-wave overload: 500ms periods, all arrivals compressed into
+    /// the first half at double the instantaneous rate, silence in the
+    /// second — same mean offered load, but the admission bound and
+    /// breaker see alternating saturation and recovery.
+    Burst,
+    /// Steady arrivals, adversarial content: the valid/malformed/poison
+    /// blend for resilience runs (pair with `ilmpq serve --fault`). The
+    /// CLI defaults `malformed_frac`/`poison_frac` up when this scenario
+    /// is chosen without explicit fractions.
+    Chaos,
+}
+
+impl Scenario {
+    /// Parse a `--scenario` argument.
+    pub fn parse(s: &str) -> Result<Scenario> {
+        match s {
+            "steady" => Ok(Scenario::Steady),
+            "burst" => Ok(Scenario::Burst),
+            "chaos" => Ok(Scenario::Chaos),
+            other => anyhow::bail!(
+                "unknown scenario {other:?} (expected steady, burst, or chaos)"
+            ),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scenario::Steady => "steady",
+            Scenario::Burst => "burst",
+            Scenario::Chaos => "chaos",
+        }
+    }
+}
+
 /// Workload knobs for one load-generation run.
 #[derive(Debug, Clone)]
 pub struct LoadSpec {
@@ -60,13 +109,28 @@ pub struct LoadSpec {
     /// Fraction of requests submitted with a deliberately malformed length,
     /// to exercise admission rejection (0.0 for a clean run).
     pub malformed_frac: f64,
+    /// Fraction of well-formed requests carrying the
+    /// [`backend::POISON_MAGIC`] sentinel a [`backend::FaultyBackend`]
+    /// deterministically fails on — exercises singleton-retry quarantine
+    /// (0.0 for a clean run; inert against a non-faulty backend, the
+    /// sentinel is an ordinary finite float).
+    pub poison_frac: f64,
+    /// Arrival/content shape.
+    pub scenario: Scenario,
     /// RNG seed for arrivals + images.
     pub seed: u64,
 }
 
 impl Default for LoadSpec {
     fn default() -> Self {
-        LoadSpec { requests: 512, rate: 2000.0, malformed_frac: 0.0, seed: 42 }
+        LoadSpec {
+            requests: 512,
+            rate: 2000.0,
+            malformed_frac: 0.0,
+            poison_frac: 0.0,
+            scenario: Scenario::Steady,
+            seed: 42,
+        }
     }
 }
 
@@ -92,6 +156,11 @@ pub struct LoadReport {
     pub failed: usize,
     /// `ShuttingDown` replies.
     pub shutdown: usize,
+    /// `Timeout` replies: the execution watchdog abandoned the batch.
+    pub timeout: usize,
+    /// `Unavailable` replies: shed at admission while the circuit breaker
+    /// was open.
+    pub unavailable: usize,
     /// Replies not collected within the run-wide 60s drain deadline (they
     /// may still arrive later): a saturated or very slow backend, not a
     /// protocol regression.
@@ -131,7 +200,43 @@ fn gen_image(rng: &mut Rng, spec: &LoadSpec, img: usize) -> Vec<f32> {
     let len = if malformed { img + 1 } else { img };
     let mut image = vec![0f32; len];
     rng.fill_normal(&mut image, 1.0);
+    // Poison only well-formed images (a malformed one bounces at admission
+    // before any backend could see the sentinel). The sentinel is a plain
+    // finite float, so it sails through admission and only a FaultyBackend
+    // with poison detection treats it specially.
+    if !malformed && spec.poison_frac > 0.0 && rng.bool(spec.poison_frac) {
+        image[0] = backend::POISON_MAGIC;
+    }
     image
+}
+
+/// Inter-arrival sleep before the *next* request, or `None` when pacing is
+/// disabled. Exactly one RNG draw per call on every path, so the image
+/// stream stays deterministic per seed regardless of wall-clock phase.
+fn inter_arrival(rng: &mut Rng, spec: &LoadSpec, t0: Instant) -> Option<Duration> {
+    if !(spec.rate.is_finite() && spec.rate > 0.0) {
+        return None;
+    }
+    match spec.scenario {
+        Scenario::Steady | Scenario::Chaos => {
+            Some(Duration::from_secs_f64(rng.exp(spec.rate)))
+        }
+        Scenario::Burst => {
+            // Square wave: the whole offered load arrives in the first half
+            // of each 500ms period (at 2x the nominal instantaneous rate),
+            // the second half is silent.
+            const PERIOD_S: f64 = 0.5;
+            let gap = rng.exp(spec.rate * 2.0);
+            let into = t0.elapsed().as_secs_f64() % PERIOD_S;
+            if into < PERIOD_S / 2.0 {
+                Some(Duration::from_secs_f64(gap))
+            } else {
+                // Off-phase: wait out the rest of the period, then resume
+                // the on-phase arrival process.
+                Some(Duration::from_secs_f64(PERIOD_S - into + gap))
+            }
+        }
+    }
 }
 
 /// Drive `server` with `spec` and stop it when the run drains. `manifest`
@@ -145,18 +250,18 @@ pub fn run(
 ) -> (LoadReport, Arc<Metrics>) {
     let img = manifest.data.image_elems();
     let mut rng = Rng::new(spec.seed);
-    let pace = spec.rate.is_finite() && spec.rate > 0.0;
     let t0 = Instant::now();
     let mut pending = Vec::with_capacity(spec.requests);
     for _ in 0..spec.requests {
         pending.push(server.submit(gen_image(&mut rng, spec, img)));
-        if pace {
-            std::thread::sleep(Duration::from_secs_f64(rng.exp(spec.rate)));
+        if let Some(gap) = inter_arrival(&mut rng, spec, t0) {
+            std::thread::sleep(gap);
         }
     }
     let submit_s = t0.elapsed().as_secs_f64();
     let (mut done, mut invalid, mut shed, mut failed, mut shutdown) =
         (0usize, 0usize, 0usize, 0usize, 0usize);
+    let (mut timeout, mut unavailable) = (0usize, 0usize);
     let (mut slow, mut lost) = (0usize, 0usize);
     // One run-wide drain deadline (not per-request): a wedged server costs
     // ~60s total instead of 60s x requests, and the slow/lost counts still
@@ -170,6 +275,8 @@ pub fn run(
             Ok(Err(ServeError::QueueFull { .. })) => shed += 1,
             Ok(Err(ServeError::BackendFailed(_))) => failed += 1,
             Ok(Err(ServeError::ShuttingDown)) => shutdown += 1,
+            Ok(Err(ServeError::Timeout { .. })) => timeout += 1,
+            Ok(Err(ServeError::Unavailable)) => unavailable += 1,
             // Slow is a capacity symptom; only a *closed* channel is the
             // dropped-reply regression the pipeline promises never happens.
             Err(RecvTimeoutError::Timeout) => slow += 1,
@@ -187,6 +294,8 @@ pub fn run(
         shed,
         failed,
         shutdown,
+        timeout,
+        unavailable,
         slow,
         lost,
         wall_s,
@@ -210,7 +319,8 @@ impl LoadReport {
         };
         format!(
             "offered {:.0} req/s (achieved {:.0}), {} requests in {:.2}s\n\
-             outcomes: done={} invalid={} shed={} failed={} shutdown={} slow={} lost={}\n\
+             outcomes: done={} invalid={} shed={} failed={} shutdown={} \
+             timeout={} unavailable={} slow={} lost={}\n\
              goodput {:.0} req/s, occupancy {:.1}%, shed rate {:.1}%\n\
              e2e:        {}\nqueue_wait: {}{}",
             self.offered_rate,
@@ -222,6 +332,8 @@ impl LoadReport {
             self.shed,
             self.failed,
             self.shutdown,
+            self.timeout,
+            self.unavailable,
             self.slow,
             self.lost,
             self.goodput_rps,
@@ -244,6 +356,8 @@ impl LoadReport {
             ("shed", Json::Num(self.shed as f64)),
             ("failed", Json::Num(self.failed as f64)),
             ("shutdown", Json::Num(self.shutdown as f64)),
+            ("timeout", Json::Num(self.timeout as f64)),
+            ("unavailable", Json::Num(self.unavailable as f64)),
             ("slow", Json::Num(self.slow as f64)),
             ("lost", Json::Num(self.lost as f64)),
             ("wall_s", Json::Num(self.wall_s)),
@@ -271,6 +385,8 @@ struct WireTally {
     shed: usize,
     failed: usize,
     shutdown: usize,
+    timeout: usize,
+    unavailable: usize,
     slow: usize,
     lost: usize,
     /// Server-reported `e2e_s` per reply (comparable with in-process runs).
@@ -280,6 +396,16 @@ struct WireTally {
     /// Client-observed dispatch→response round-trip (includes client-side
     /// connection queueing).
     rtt: Vec<f64>,
+}
+
+/// The `kind` discriminator from a typed-error reply body (the wire form
+/// of [`ServeError`]'s variant name).
+fn body_kind(body: &str) -> Option<String> {
+    Json::parse(body)
+        .ok()?
+        .get("kind")
+        .and_then(Json::as_str)
+        .map(str::to_string)
 }
 
 fn classify_wire(tally: &mut WireTally, job: &WireJob, result: std::io::Result<(u16, String)>) {
@@ -301,9 +427,25 @@ fn classify_wire(tally: &mut WireTally, job: &WireJob, result: std::io::Result<(
         }
         Ok((400, _)) => tally.invalid += 1,
         Ok((429, _)) => tally.shed += 1,
-        Ok((503, _)) => tally.shutdown += 1,
-        // 504 is the front end's reply-timeout: the wire twin of `slow`.
-        Ok((504, _)) => tally.slow += 1,
+        // Two distinct 503s, told apart by the body's error kind: the
+        // breaker shedding (`unavailable`) vs. the drain path
+        // (`shutting_down`). Same for 504: the server-side execution
+        // watchdog (`execute_timeout`) vs. the front end's reply-timeout,
+        // which is the wire twin of `slow`.
+        Ok((503, body)) => {
+            if body_kind(&body).as_deref() == Some("unavailable") {
+                tally.unavailable += 1;
+            } else {
+                tally.shutdown += 1;
+            }
+        }
+        Ok((504, body)) => {
+            if body_kind(&body).as_deref() == Some("execute_timeout") {
+                tally.timeout += 1;
+            } else {
+                tally.slow += 1;
+            }
+        }
         // 500 (BackendFailed / reply_lost) and anything unexpected.
         Ok((_, _)) => tally.failed += 1,
         Err(e)
@@ -399,7 +541,6 @@ pub fn run_remote(url: &str, spec: &LoadSpec, conns: usize) -> Result<(LoadRepor
     // Open-loop submission: Poisson arrivals, images from the same
     // generator (and RNG stream) as the in-process `run`.
     let mut rng = Rng::new(spec.seed);
-    let pace = spec.rate.is_finite() && spec.rate > 0.0;
     for _ in 0..spec.requests {
         let image = gen_image(&mut rng, spec, img);
         let body = Json::obj(vec![(
@@ -426,8 +567,8 @@ pub fn run_remote(url: &str, spec: &LoadSpec, conns: usize) -> Result<(LoadRepor
                 }
             }
         }
-        if pace {
-            std::thread::sleep(Duration::from_secs_f64(rng.exp(spec.rate)));
+        if let Some(gap) = inter_arrival(&mut rng, spec, t0) {
+            std::thread::sleep(gap);
         }
     }
     let submit_s = t0.elapsed().as_secs_f64();
@@ -442,6 +583,8 @@ pub fn run_remote(url: &str, spec: &LoadSpec, conns: usize) -> Result<(LoadRepor
             t.shed += wt.shed;
             t.failed += wt.failed;
             t.shutdown += wt.shutdown;
+            t.timeout += wt.timeout;
+            t.unavailable += wt.unavailable;
             t.slow += wt.slow;
             t.lost += wt.lost;
             t.e2e.extend(wt.e2e);
@@ -454,8 +597,15 @@ pub fn run_remote(url: &str, spec: &LoadSpec, conns: usize) -> Result<(LoadRepor
     // surfaces as `lost` (the regression class) instead of silently
     // shrinking the totals under the sum-to-requests invariant the tests
     // and CI assert on.
-    let accounted =
-        t.done + t.invalid + t.shed + t.failed + t.shutdown + t.slow + t.lost;
+    let accounted = t.done
+        + t.invalid
+        + t.shed
+        + t.failed
+        + t.shutdown
+        + t.timeout
+        + t.unavailable
+        + t.slow
+        + t.lost;
     t.lost += spec.requests.saturating_sub(accounted);
     let wall_s = t0.elapsed().as_secs_f64();
 
@@ -476,6 +626,8 @@ pub fn run_remote(url: &str, spec: &LoadSpec, conns: usize) -> Result<(LoadRepor
         shed: t.shed,
         failed: t.failed,
         shutdown: t.shutdown,
+        timeout: t.timeout,
+        unavailable: t.unavailable,
         slow: t.slow,
         lost: t.lost,
         wall_s,
@@ -709,12 +861,13 @@ mod tests {
             rate: 0.0, // unpaced
             malformed_frac: 0.5,
             seed: 11,
+            ..Default::default()
         };
         let (r, metrics) = run(server, &m, &spec);
         assert_eq!(r.lost, 0, "typed pipeline must answer every request");
         assert_eq!(r.slow, 0, "tiny run must drain inside the deadline");
         assert_eq!(
-            r.done + r.invalid + r.shed + r.failed + r.shutdown,
+            r.done + r.invalid + r.shed + r.failed + r.shutdown + r.timeout + r.unavailable,
             r.requests
         );
         assert_eq!(Metrics::get(&metrics.requests_done), r.done as u64);
@@ -734,6 +887,8 @@ mod tests {
             shed: 1,
             failed: 0,
             shutdown: 0,
+            timeout: 0,
+            unavailable: 0,
             slow: 0,
             lost: 0,
             wall_s: 0.5,
@@ -746,6 +901,7 @@ mod tests {
         };
         let text = r.render();
         assert!(text.contains("done=8") && text.contains("shed rate"));
+        assert!(text.contains("timeout=0") && text.contains("unavailable=0"));
         // Empty client_rtt (in-process run) stays out of the render...
         assert!(!text.contains("client_rtt"));
         let j = r.to_json();
@@ -753,5 +909,55 @@ mod tests {
         // ...but is always present (as zeros) in the JSON schema.
         assert!(j.get("client_rtt").is_some());
         assert_eq!(j.get("done").and_then(|v| v.as_f64()), Some(8.0));
+        assert_eq!(j.get("timeout").and_then(|v| v.as_f64()), Some(0.0));
+        assert_eq!(j.get("unavailable").and_then(|v| v.as_f64()), Some(0.0));
+    }
+
+    #[test]
+    fn scenario_parses_and_rejects_unknown() {
+        assert_eq!(Scenario::parse("steady").unwrap(), Scenario::Steady);
+        assert_eq!(Scenario::parse("burst").unwrap(), Scenario::Burst);
+        assert_eq!(Scenario::parse("chaos").unwrap(), Scenario::Chaos);
+        assert_eq!(Scenario::parse("chaos").unwrap().name(), "chaos");
+        assert!(Scenario::parse("storm").is_err());
+    }
+
+    #[test]
+    fn poison_frac_plants_the_sentinel_in_well_formed_images_only() {
+        let spec = LoadSpec { poison_frac: 1.0, ..Default::default() };
+        let mut rng = Rng::new(5);
+        let image = gen_image(&mut rng, &spec, 16);
+        assert_eq!(image.len(), 16, "poisoned images stay well-formed");
+        assert_eq!(image[0], backend::POISON_MAGIC);
+        assert!(image[0].is_finite(), "the sentinel must pass admission");
+        // Malformed wins over poison: a wrong-length image never carries
+        // the sentinel (it bounces at admission before any backend).
+        let spec = LoadSpec { poison_frac: 1.0, malformed_frac: 1.0, ..Default::default() };
+        let image = gen_image(&mut rng, &spec, 16);
+        assert_eq!(image.len(), 17);
+        assert_ne!(image[0], backend::POISON_MAGIC);
+    }
+
+    #[test]
+    fn burst_pacing_draws_one_rng_value_per_request() {
+        // The burst clock must not desynchronize the image stream: for the
+        // same seed, steady and burst specs generate identical images.
+        let steady = LoadSpec { scenario: Scenario::Steady, ..Default::default() };
+        let burst = LoadSpec { scenario: Scenario::Burst, ..Default::default() };
+        let t0 = Instant::now();
+        let (mut r1, mut r2) = (Rng::new(9), Rng::new(9));
+        for _ in 0..8 {
+            let a = gen_image(&mut r1, &steady, 12);
+            let _ = inter_arrival(&mut r1, &steady, t0);
+            let b = gen_image(&mut r2, &burst, 12);
+            let _ = inter_arrival(&mut r2, &burst, t0);
+            assert_eq!(a, b);
+        }
+        // An off-phase burst gap waits at least to the next period edge.
+        let spec = LoadSpec { rate: 1000.0, scenario: Scenario::Burst, ..Default::default() };
+        let mut rng = Rng::new(1);
+        let shifted = t0 - Duration::from_millis(300); // 300ms into a period
+        let gap = inter_arrival(&mut rng, &spec, shifted).unwrap();
+        assert!(gap >= Duration::from_millis(150), "off-phase gap {gap:?}");
     }
 }

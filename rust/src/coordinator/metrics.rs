@@ -5,10 +5,14 @@
 //! ring) — with the request volumes here that is cheaper and more exact
 //! than HDR buckets.
 //!
-//! Counters mirror the admission pipeline's outcomes one-to-one: every
-//! submission lands in exactly one of `done`, `invalid`, `shed`, `failed`,
-//! or `shutdown` (the typed [`crate::coordinator::ServeError`] variants),
-//! so `in == done + invalid + shed + failed + shutdown` once a run drains.
+//! Counters mirror the admission + execution pipeline's outcomes
+//! one-to-one: every submission lands in exactly one of `done`, `invalid`,
+//! `shed`, `failed`, `shutdown`, `timeout`, `unavailable`, or `quarantined`
+//! (the typed [`crate::coordinator::ServeError`] variants), so
+//! `in == done + invalid + shed + failed + shutdown + timeout + unavailable
+//! + quarantined` once a run drains. `recovered` is informational — a
+//! subset of `done` (requests answered by a singleton retry after their
+//! batch failed), never part of the sum.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -19,9 +23,16 @@ use crate::util::Json;
 const MAX_SAMPLES: usize = 65_536;
 
 /// One named latency track (e.g. queue wait, execute, end-to-end).
+///
+/// Bounded window: once `MAX_SAMPLES` samples accumulate, the oldest half
+/// is dropped, so a long-running server's percentiles describe *recent*
+/// behaviour, not all-time. The drops are counted (`samples_dropped`) and
+/// surfaced in [`LatencyTrack::to_json`] so a snapshot can't silently pose
+/// as an all-time summary.
 #[derive(Default)]
 pub struct LatencyTrack {
     samples: Mutex<Vec<f64>>,
+    dropped: AtomicU64,
 }
 
 impl LatencyTrack {
@@ -30,6 +41,7 @@ impl LatencyTrack {
         if s.len() >= MAX_SAMPLES {
             // Drop oldest half — keeps recent behaviour without unbounded RAM.
             let keep = s.split_off(MAX_SAMPLES / 2);
+            self.dropped.fetch_add((MAX_SAMPLES / 2) as u64, Ordering::Relaxed);
             *s = keep;
         }
         s.push(seconds);
@@ -45,6 +57,30 @@ impl LatencyTrack {
     pub fn count(&self) -> usize {
         self.samples.lock().unwrap().len()
     }
+
+    /// Samples discarded by the bounded window since startup. Zero until a
+    /// track has seen more than `MAX_SAMPLES` recordings.
+    pub fn samples_dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Summary JSON plus the window semantics: `window` is the sample bound
+    /// and `samples_dropped` how many older samples fell out of it, so
+    /// consumers can tell a true all-time summary (`samples_dropped == 0`)
+    /// from a recent-window one.
+    pub fn to_json(&self) -> Json {
+        match self.summary().to_json() {
+            Json::Obj(mut fields) => {
+                fields.insert("window".into(), Json::Num(MAX_SAMPLES as f64));
+                fields.insert(
+                    "samples_dropped".into(),
+                    Json::Num(self.samples_dropped() as f64),
+                );
+                Json::Obj(fields)
+            }
+            other => other,
+        }
+    }
 }
 
 /// All serving-side metrics.
@@ -58,15 +94,43 @@ pub struct Metrics {
     pub requests_invalid: AtomicU64,
     /// Shed at admission: the queue bound was hit (reject-newest).
     pub requests_shed: AtomicU64,
-    /// Answered with `BackendFailed`: their batch errored on the backend.
+    /// Answered with `BackendFailed`: their batch errored on the backend
+    /// (and, when retries are enabled, so did their isolated re-runs — but
+    /// those land in `requests_quarantined` instead).
     pub requests_failed: AtomicU64,
     /// Answered with `ShuttingDown` at/after the stop cutoff.
     pub requests_shutdown: AtomicU64,
+    /// Answered with `Timeout`: the execution watchdog abandoned their
+    /// batch (and any singleton retries also ran out of deadline).
+    pub requests_timeout: AtomicU64,
+    /// Shed at admission with `Unavailable`: the circuit breaker was open
+    /// and no fallback backend was configured.
+    pub requests_unavailable: AtomicU64,
+    /// Quarantined: the request's batch failed, and its isolated singleton
+    /// retries failed too — the poison-request outcome class.
+    pub requests_quarantined: AtomicU64,
+    /// Subset of `requests_done`: answered by a singleton retry after the
+    /// original batch failed (batch-mates of a poison/transient fault).
+    pub requests_recovered: AtomicU64,
     pub batches: AtomicU64,
     /// Batches whose backend execution errored (every member answered).
     pub batches_failed: AtomicU64,
+    /// Batches abandoned by the execution watchdog (every member answered).
+    pub batches_timeout: AtomicU64,
+    /// Singleton retry executions after a failed batch.
+    pub batch_retries: AtomicU64,
+    /// Batches executed on the fallback backend (degraded mode).
+    pub fallback_batches: AtomicU64,
     pub batched_requests: AtomicU64,
     pub padded_slots: AtomicU64,
+    /// Circuit-breaker state gauge: 0 = closed, 1 = open, 2 = half-open.
+    pub breaker_state: AtomicU64,
+    /// Closed → open transitions (including failed half-open probes).
+    pub breaker_opened: AtomicU64,
+    /// Open → half-open probe admissions.
+    pub breaker_half_open: AtomicU64,
+    /// Half-open → closed recoveries (successful probes).
+    pub breaker_closed: AtomicU64,
     /// Router loop iterations — the idle-wakeup regression signal. A parked
     /// router (blocking on the submit channel, bounded by the batch
     /// deadline) registers ~0 while idle; the historic busy-poll loop
@@ -115,11 +179,23 @@ impl Metrics {
         Self::get(&self.requests_shed) as f64 / total
     }
 
+    /// Human-readable name of the breaker-state gauge.
+    pub fn breaker_state_name(&self) -> &'static str {
+        match Self::get(&self.breaker_state) {
+            1 => "open",
+            2 => "half-open",
+            _ => "closed",
+        }
+    }
+
     pub fn report(&self) -> String {
         format!(
-            "requests: in={} done={} invalid={} shed={} failed={} shutdown={}\n\
-             batches: {} ({} failed, occupancy {:.1}%, shed rate {:.1}%, \
+            "requests: in={} done={} invalid={} shed={} failed={} shutdown={} \
+             timeout={} unavailable={} quarantined={} (recovered={})\n\
+             batches: {} ({} failed, {} timed out, {} retries, {} on fallback, \
+             occupancy {:.1}%, shed rate {:.1}%, \
              {} router wakeups)\n\
+             breaker: {} (opened={} half_open={} closed={})\n\
              queue_wait: {}\nexecute:    {}\nfailed:     {}\n\
              e2e:        {}\nsim_fpga:   {}",
             Self::get(&self.requests_in),
@@ -128,11 +204,22 @@ impl Metrics {
             Self::get(&self.requests_shed),
             Self::get(&self.requests_failed),
             Self::get(&self.requests_shutdown),
+            Self::get(&self.requests_timeout),
+            Self::get(&self.requests_unavailable),
+            Self::get(&self.requests_quarantined),
+            Self::get(&self.requests_recovered),
             Self::get(&self.batches),
             Self::get(&self.batches_failed),
+            Self::get(&self.batches_timeout),
+            Self::get(&self.batch_retries),
+            Self::get(&self.fallback_batches),
             self.batch_occupancy() * 100.0,
             self.shed_rate() * 100.0,
             Self::get(&self.router_wakeups),
+            self.breaker_state_name(),
+            Self::get(&self.breaker_opened),
+            Self::get(&self.breaker_half_open),
+            Self::get(&self.breaker_closed),
             self.queue_wait.summary(),
             self.execute.summary(),
             self.failed.summary(),
@@ -144,7 +231,8 @@ impl Metrics {
     /// Machine-readable snapshot: every counter, the derived rates, and the
     /// latency summaries. This is the body of the HTTP `GET /v1/metrics`
     /// endpoint, so the remote load generator folds the same numbers into
-    /// its report as the in-process one.
+    /// its report as the in-process one. Latency tracks carry their window
+    /// semantics (`window`, `samples_dropped`) alongside the summary.
     pub fn to_json(&self) -> Json {
         let num = |c: &AtomicU64| Json::Num(Self::get(c) as f64);
         Json::obj(vec![
@@ -154,18 +242,29 @@ impl Metrics {
             ("requests_shed", num(&self.requests_shed)),
             ("requests_failed", num(&self.requests_failed)),
             ("requests_shutdown", num(&self.requests_shutdown)),
+            ("requests_timeout", num(&self.requests_timeout)),
+            ("requests_unavailable", num(&self.requests_unavailable)),
+            ("requests_quarantined", num(&self.requests_quarantined)),
+            ("requests_recovered", num(&self.requests_recovered)),
             ("batches", num(&self.batches)),
             ("batches_failed", num(&self.batches_failed)),
+            ("batches_timeout", num(&self.batches_timeout)),
+            ("batch_retries", num(&self.batch_retries)),
+            ("fallback_batches", num(&self.fallback_batches)),
             ("batched_requests", num(&self.batched_requests)),
             ("padded_slots", num(&self.padded_slots)),
+            ("breaker_state", Json::Str(self.breaker_state_name().into())),
+            ("breaker_opened", num(&self.breaker_opened)),
+            ("breaker_half_open", num(&self.breaker_half_open)),
+            ("breaker_closed", num(&self.breaker_closed)),
             ("router_wakeups", num(&self.router_wakeups)),
             ("occupancy", Json::Num(self.batch_occupancy())),
             ("shed_rate", Json::Num(self.shed_rate())),
-            ("queue_wait", self.queue_wait.summary().to_json()),
-            ("execute", self.execute.summary().to_json()),
-            ("failed", self.failed.summary().to_json()),
-            ("e2e", self.e2e.summary().to_json()),
-            ("sim_fpga", self.sim_fpga.summary().to_json()),
+            ("queue_wait", self.queue_wait.to_json()),
+            ("execute", self.execute.to_json()),
+            ("failed", self.failed.to_json()),
+            ("e2e", self.e2e.to_json()),
+            ("sim_fpga", self.sim_fpga.to_json()),
         ])
     }
 }
@@ -208,15 +307,26 @@ mod tests {
         assert_eq!(s.n, 100);
         assert!((s.p50 - 0.0505).abs() < 1e-3);
         assert_eq!(t.count(), 100);
+        assert_eq!(t.samples_dropped(), 0);
     }
 
     #[test]
-    fn latency_track_bounds_memory() {
+    fn latency_track_bounds_memory_and_counts_drops() {
         let t = LatencyTrack::default();
         for i in 0..(MAX_SAMPLES + 10) {
             t.record(i as f64);
         }
         assert!(t.count() <= MAX_SAMPLES / 2 + 11);
+        // One halving fired: exactly half the window was discarded, and the
+        // snapshot says so instead of posing as an all-time summary.
+        assert_eq!(t.samples_dropped(), (MAX_SAMPLES / 2) as u64);
+        let j = t.to_json();
+        assert_eq!(
+            j.get("samples_dropped").and_then(|v| v.as_f64()),
+            Some((MAX_SAMPLES / 2) as f64)
+        );
+        assert_eq!(j.get("window").and_then(|v| v.as_f64()), Some(MAX_SAMPLES as f64));
+        assert!(j.get("n").is_some(), "summary fields must survive the merge");
     }
 
     #[test]
@@ -228,6 +338,8 @@ mod tests {
         assert!(r.contains("invalid=") && r.contains("shed rate"));
         assert!(r.contains("failed:"), "failed track must be visible: {r}");
         assert!(r.contains("router wakeups"), "wakeup signal must be visible: {r}");
+        assert!(r.contains("quarantined="), "new outcome classes visible: {r}");
+        assert!(r.contains("breaker: closed"), "breaker state visible: {r}");
     }
 
     #[test]
@@ -248,9 +360,21 @@ mod tests {
             j.get("e2e").and_then(|e| e.get("n")).and_then(|v| v.as_f64()),
             Some(1.0)
         );
+        assert_eq!(j.get("breaker_state").and_then(|v| v.as_str()), Some("closed"));
+        assert_eq!(j.get("requests_quarantined").and_then(|v| v.as_f64()), Some(0.0));
         // Empty tracks must serialize to parseable JSON (no inf tokens).
         let text = j.to_string_compact();
         assert!(!text.contains("inf"), "non-JSON token in {text}");
         Json::parse(&text).expect("metrics snapshot must be valid JSON");
+    }
+
+    #[test]
+    fn breaker_gauge_names_states() {
+        let m = Metrics::default();
+        assert_eq!(m.breaker_state_name(), "closed");
+        m.breaker_state.store(1, Ordering::Relaxed);
+        assert_eq!(m.breaker_state_name(), "open");
+        m.breaker_state.store(2, Ordering::Relaxed);
+        assert_eq!(m.breaker_state_name(), "half-open");
     }
 }

@@ -6,7 +6,10 @@
 //! * `batcher`/`server` — inference serving with dynamic batching over any
 //!   [`crate::backend::InferenceBackend`] (PJRT artifacts, native qgemm, or
 //!   the f32 reference), behind a validating, bounded, typed-error
-//!   admission pipeline, with the FPGA-sim timing overlay;
+//!   admission pipeline, with the FPGA-sim timing overlay and supervised
+//!   execution (watchdog deadlines, poison-quarantining retry, a
+//!   consecutive-failure circuit breaker, and degraded-mode fallback — see
+//!   ROADMAP "Architecture: execution resilience");
 //! * `http` — the pure-std HTTP/1.1 front end over that pipeline
 //!   (`ilmpq serve --listen`), plus the matching client;
 //! * `loadgen` — the open-loop Poisson load driver behind `ilmpq loadgen`

@@ -1,5 +1,5 @@
 //! The serving loop: a validating admission pipeline + dynamic batcher + a
-//! backend-generic worker pool.
+//! backend-generic worker pool with supervised, self-healing execution.
 //!
 //! Architecture (threads + channels; the sandbox has no tokio, and the
 //! workload — CPU-bound batch executions — wants a small fixed pool anyway):
@@ -7,7 +7,8 @@
 //! ```text
 //!   clients ──submit──▶ [admission] ──▶ router/batcher ──Batch──▶ worker 0..N-1
 //!             validate + bounded queue   (Batcher<Request>)        │  InferenceBackend
-//!   clients ◀──reply channel per request: Result<Response, ServeError>──┘
+//!             + breaker shed                                       │  (watchdog, retry,
+//!   clients ◀──reply channel per request: Result<Response, ServeError>──┘  fallback)
 //! ```
 //!
 //! **Admission pipeline.** `submit` is the front door and enforces the batch
@@ -25,11 +26,37 @@
 //!   many requests are admitted but unanswered, new submissions are shed
 //!   newest-first with [`ServeError::QueueFull`] instead of growing the
 //!   router's memory without bound;
-//! * every admitted request is *always* answered: success is
-//!   `Ok(Response)`, a failed batch answers each member with
-//!   [`ServeError::BackendFailed`] (one corrupt dispatch degrades
-//!   per-request, never per-batch-silently), and stop answers stragglers
-//!   with [`ServeError::ShuttingDown`] — no dropped reply channels.
+//! * circuit-breaker shed — while the breaker is open (and no fallback
+//!   backend is configured), submissions are answered
+//!   [`ServeError::Unavailable`] immediately instead of queueing doomed
+//!   work;
+//! * every admitted request is *always* answered exactly once — no dropped
+//!   reply channels.
+//!
+//! **Supervised execution.** A dispatched batch runs under the failure
+//! state machine (see ROADMAP "Architecture: execution resilience"):
+//!
+//! 1. *Watchdog deadline* ([`ServeConfig::execute_deadline`]): the backend
+//!    call runs on a helper thread and is abandoned when it exceeds the
+//!    deadline; members are answered [`ServeError::Timeout`] (or retried)
+//!    and their `queue_depth` slots recover — a wedged backend cannot hold
+//!    requests hostage.
+//! 2. *Output validation*: shape, class range, and logits finiteness — a
+//!    backend handing back NaN or truncated logits is a failed batch, never
+//!    an `Ok` served to clients.
+//! 3. *Bounded retry with quarantine* ([`ServeConfig::retries`]): a failed
+//!    batch is re-split into singletons so one poison request cannot fail
+//!    its batch-mates; members that succeed in isolation are answered `Ok`
+//!    (counted `requests_recovered`), members that keep failing are
+//!    *quarantined* (their own metrics class).
+//! 4. *Circuit breaker* ([`ServeConfig::breaker_threshold`]): consecutive
+//!    primary-backend failures open it (closed → open → half-open probe →
+//!    closed), shedding at admission while open and surfacing live-vs-ready
+//!    on `GET /v1/healthz`.
+//! 5. *Fallback chain* ([`Server::start_with_fallback`]): while the breaker
+//!    is not closed, batches execute on the fallback backend (e.g. qgemm →
+//!    float) — degraded, visible in `/v1/healthz` and `Metrics`, but
+//!    serving.
 //!
 //! Workers execute through the unified [`InferenceBackend`] trait, so the
 //! same dynamic-batching loop serves the PJRT engine, the native
@@ -44,15 +71,15 @@
 use std::fmt;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use super::batcher::{Assembled, BatchPolicy, Batcher};
+use super::batcher::{Assembled, BatchPolicy, Batcher, Pending};
 use super::metrics::Metrics;
-use crate::backend::{self, BackendInit, InferenceBackend};
+use crate::backend::{self, BackendInit, BatchOutput, InferenceBackend};
 use crate::fpga::{simulate, DeviceModel, Mode, NetConfig, SimReport};
 use crate::model::zoo;
 use crate::quant::{assign, MaskSet, Provenance, QuantPlan, Scheme};
@@ -94,10 +121,19 @@ pub enum ServeError {
     /// shed (reject-newest) without being enqueued.
     QueueFull { depth: usize },
     /// The backend failed executing the batch this request was assembled
-    /// into; every member of that batch receives this error.
+    /// into (and any isolated retries failed too).
     BackendFailed(String),
     /// The server stopped before this request could be dispatched.
     ShuttingDown,
+    /// The execution watchdog abandoned this request's batch: the backend
+    /// call exceeded [`ServeConfig::execute_deadline`] (and any isolated
+    /// retries did too). The stalled call is left to finish on its helper
+    /// thread; its late result is discarded.
+    Timeout { deadline_ms: u64 },
+    /// Shed at admission: the circuit breaker is open (the backend is
+    /// failing consecutively) and no fallback backend is configured, so
+    /// queueing the request would only feed it doomed work.
+    Unavailable,
 }
 
 impl fmt::Display for ServeError {
@@ -113,6 +149,16 @@ impl fmt::Display for ServeError {
             ServeError::ShuttingDown => {
                 write!(f, "server shutting down before the request was dispatched")
             }
+            ServeError::Timeout { deadline_ms } => write!(
+                f,
+                "batch execution exceeded the {deadline_ms}ms deadline and was \
+                 abandoned by the watchdog"
+            ),
+            ServeError::Unavailable => write!(
+                f,
+                "service unavailable: circuit breaker open (backend failing); \
+                 request shed at admission"
+            ),
         }
     }
 }
@@ -148,6 +194,24 @@ pub struct ServeConfig {
     /// [`Server::start`] never reads it (the backend already owns its
     /// weight policy).
     pub frozen: bool,
+    /// Per-batch execution watchdog: a backend call exceeding this is
+    /// abandoned (the helper thread keeps running; its late result is
+    /// dropped), its members answered [`ServeError::Timeout`] or retried,
+    /// and their queue slots recovered. `None` (the default) runs the
+    /// backend call inline with no deadline.
+    pub execute_deadline: Option<Duration>,
+    /// Isolated retry attempts for each member of a failed batch (the batch
+    /// is re-split into singletons so one poison request cannot fail its
+    /// batch-mates). `0` (the default) disables retry: a failed batch
+    /// answers every member with the typed error, as before.
+    pub retries: usize,
+    /// Base backoff slept before each retry attempt; doubles per attempt.
+    pub retry_backoff: Duration,
+    /// Consecutive primary-backend batch failures that open the circuit
+    /// breaker. `0` (the default) disables the breaker.
+    pub breaker_threshold: usize,
+    /// How long an open breaker sheds before admitting a half-open probe.
+    pub breaker_cooldown: Duration,
 }
 
 impl Default for ServeConfig {
@@ -159,6 +223,161 @@ impl Default for ServeConfig {
             plan: None,
             device: "xc7z045".into(),
             frozen: true,
+            execute_deadline: None,
+            retries: 0,
+            retry_backoff: Duration::from_millis(20),
+            breaker_threshold: 0,
+            breaker_cooldown: Duration::from_secs(1),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Circuit breaker
+
+/// Consecutive-failure circuit breaker over the *primary* backend.
+///
+/// Closed → (threshold consecutive failures) → Open → (cooldown elapses,
+/// one probe batch runs on the primary) → Half-open → Closed on probe
+/// success / back to Open on probe failure. Fallback-backend outcomes never
+/// drive the state — the breaker describes the primary's health only.
+/// State transitions mirror into the shared [`Metrics`] gauges/counters so
+/// `/v1/metrics` shows them.
+struct Breaker {
+    threshold: usize,
+    cooldown: Duration,
+    metrics: Arc<Metrics>,
+    inner: Mutex<BreakerInner>,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum BreakerState {
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+struct BreakerInner {
+    state: BreakerState,
+    consecutive: usize,
+    opened_at: Option<Instant>,
+    /// A half-open probe batch is in flight; further batches keep routing
+    /// to the fallback (or shedding) until it reports back.
+    probing: bool,
+}
+
+/// Where a batch executes, as decided by [`Breaker::route`].
+struct ExecRoute {
+    /// Prefer the fallback backend (breaker not closed).
+    use_fallback: bool,
+    /// This execution is the half-open probe; its outcome closes or
+    /// re-opens the breaker.
+    probe: bool,
+}
+
+impl Breaker {
+    fn new(threshold: usize, cooldown: Duration, metrics: Arc<Metrics>) -> Breaker {
+        Breaker {
+            threshold,
+            cooldown,
+            metrics,
+            inner: Mutex::new(BreakerInner {
+                state: BreakerState::Closed,
+                consecutive: 0,
+                opened_at: None,
+                probing: false,
+            }),
+        }
+    }
+
+    fn enabled(&self) -> bool {
+        self.threshold > 0
+    }
+
+    fn state(&self) -> BreakerState {
+        if !self.enabled() {
+            return BreakerState::Closed;
+        }
+        self.inner.lock().unwrap().state
+    }
+
+    fn state_name(&self) -> &'static str {
+        match self.state() {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half-open",
+        }
+    }
+
+    /// Admission-time check: shed new work only while open *and* still in
+    /// cooldown — once the cooldown elapses, submissions are admitted so
+    /// the half-open probe has traffic to probe with.
+    fn shedding(&self) -> bool {
+        if !self.enabled() {
+            return false;
+        }
+        let inner = self.inner.lock().unwrap();
+        inner.state == BreakerState::Open
+            && inner.opened_at.is_some_and(|t| t.elapsed() < self.cooldown)
+    }
+
+    /// Worker-side routing decision for one execution attempt.
+    fn route(&self) -> ExecRoute {
+        if !self.enabled() {
+            return ExecRoute { use_fallback: false, probe: false };
+        }
+        let mut inner = self.inner.lock().unwrap();
+        match inner.state {
+            BreakerState::Closed => ExecRoute { use_fallback: false, probe: false },
+            BreakerState::Open
+                if !inner.probing
+                    && inner.opened_at.is_some_and(|t| t.elapsed() >= self.cooldown) =>
+            {
+                inner.state = BreakerState::HalfOpen;
+                inner.probing = true;
+                self.metrics.breaker_state.store(2, Ordering::Relaxed);
+                Metrics::inc(&self.metrics.breaker_half_open);
+                ExecRoute { use_fallback: false, probe: true }
+            }
+            BreakerState::Open | BreakerState::HalfOpen => {
+                ExecRoute { use_fallback: true, probe: false }
+            }
+        }
+    }
+
+    /// Feed one execution outcome back. Only primary-backend outcomes move
+    /// the state; `route.probe` marks the half-open probe.
+    fn on_result(&self, route: &ExecRoute, on_fallback: bool, success: bool) {
+        if !self.enabled() || on_fallback {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        if success {
+            if route.probe {
+                inner.state = BreakerState::Closed;
+                inner.probing = false;
+                inner.consecutive = 0;
+                inner.opened_at = None;
+                self.metrics.breaker_state.store(0, Ordering::Relaxed);
+                Metrics::inc(&self.metrics.breaker_closed);
+            } else if inner.state == BreakerState::Closed {
+                inner.consecutive = 0;
+            }
+        } else if route.probe {
+            // Failed probe: back to open with a fresh cooldown.
+            inner.state = BreakerState::Open;
+            inner.probing = false;
+            inner.opened_at = Some(Instant::now());
+            self.metrics.breaker_state.store(1, Ordering::Relaxed);
+            Metrics::inc(&self.metrics.breaker_opened);
+        } else {
+            inner.consecutive += 1;
+            if inner.state == BreakerState::Closed && inner.consecutive >= self.threshold {
+                inner.state = BreakerState::Open;
+                inner.opened_at = Some(Instant::now());
+                self.metrics.breaker_state.store(1, Ordering::Relaxed);
+                Metrics::inc(&self.metrics.breaker_opened);
+            }
         }
     }
 }
@@ -220,6 +439,8 @@ pub struct Server {
     in_system: Arc<AtomicU64>,
     img_elems: usize,
     queue_depth: usize,
+    breaker: Arc<Breaker>,
+    has_fallback: bool,
     router: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
     /// The FPGA-sim report for the configured (model, plan, device).
@@ -236,6 +457,21 @@ impl Server {
     pub fn start(
         manifest: &Manifest,
         backend: Arc<dyn InferenceBackend>,
+        cfg: ServeConfig,
+    ) -> Result<Server> {
+        Self::start_with_fallback(manifest, backend, None, cfg)
+    }
+
+    /// [`Server::start`] with an optional degraded-mode fallback backend:
+    /// while the circuit breaker is not closed, batches execute on
+    /// `fallback` instead of the failing primary (e.g. qgemm → float). The
+    /// fallback must serve the same manifest geometry; it is warmed up at
+    /// start like the primary. Without a breaker
+    /// ([`ServeConfig::breaker_threshold`] = 0) the fallback is never used.
+    pub fn start_with_fallback(
+        manifest: &Manifest,
+        backend: Arc<dyn InferenceBackend>,
+        fallback: Option<Arc<dyn InferenceBackend>>,
         cfg: ServeConfig,
     ) -> Result<Server> {
         let policy = BatchPolicy::new(manifest.infer_batches.clone(), cfg.max_wait);
@@ -295,40 +531,49 @@ impl Server {
         let sim_per_image = sim.latency_s;
 
         // Warm up before accepting traffic: compile/pack everything so no
-        // request pays a one-time cost.
+        // request pays a one-time cost — the fallback too, so engaging it
+        // under an already-failing primary never adds a pack stall.
         backend.prepare()?;
+        if let Some(fb) = &fallback {
+            fb.prepare().context("prepare fallback backend")?;
+        }
 
         let img_elems = manifest.data.image_elems();
         let classes = manifest.classes;
         let (submit_tx, submit_rx) = channel::<RouterMsg>();
         let (work_tx, work_rx) = channel::<WorkerMsg>();
-        let work_rx = Arc::new(std::sync::Mutex::new(work_rx));
+        let work_rx = Arc::new(Mutex::new(work_rx));
+
+        let breaker =
+            Arc::new(Breaker::new(cfg.breaker_threshold, cfg.breaker_cooldown, metrics.clone()));
+        let has_fallback = fallback.is_some();
+        let ctx = Arc::new(ExecCtx {
+            backend: backend.clone(),
+            fallback,
+            img_elems,
+            classes,
+            metrics: metrics.clone(),
+            in_system: in_system.clone(),
+            breaker: breaker.clone(),
+            deadline: cfg.execute_deadline,
+            retries: cfg.retries,
+            retry_backoff: cfg.retry_backoff,
+            sim_per_image,
+        });
 
         // Worker pool.
         let n_workers = cfg.workers.max(1);
         let mut workers = Vec::new();
         for _ in 0..n_workers {
-            let backend = backend.clone();
-            let metrics = metrics.clone();
+            let ctx = ctx.clone();
             let work_rx = work_rx.clone();
-            let in_system = in_system.clone();
             workers.push(std::thread::spawn(move || loop {
                 let msg = {
                     let rx = work_rx.lock().unwrap();
                     rx.recv()
                 };
                 match msg {
-                    Ok(WorkerMsg::Batch(batch)) => {
-                        run_batch(
-                            backend.as_ref(),
-                            img_elems,
-                            classes,
-                            &metrics,
-                            &in_system,
-                            batch,
-                            sim_per_image,
-                        );
-                    }
+                    Ok(WorkerMsg::Batch(batch)) => run_batch(&ctx, batch),
                     Ok(WorkerMsg::Shutdown) | Err(_) => return,
                 }
             }));
@@ -413,6 +658,8 @@ impl Server {
             in_system,
             img_elems,
             queue_depth,
+            breaker,
+            has_fallback,
             router: Some(router),
             workers,
             sim,
@@ -481,6 +728,16 @@ impl Server {
             let _ = tx.send(Err(ServeError::ShuttingDown));
             return rx;
         }
+        // Breaker shed: while the breaker is open (and still cooling down)
+        // with no fallback to serve on, queueing the request would only
+        // hand it to a failing backend — answer Unavailable immediately.
+        // With a fallback configured, admission proceeds and the workers
+        // route to the fallback instead.
+        if !self.has_fallback && self.breaker.shedding() {
+            Metrics::inc(&self.metrics.requests_unavailable);
+            let _ = tx.send(Err(ServeError::Unavailable));
+            return rx;
+        }
         // Bounded admission: shed newest-first once `queue_depth` requests
         // are in the system (queued or executing, not yet answered). This
         // runs before the O(image_elems) finiteness scan so an overloaded
@@ -512,6 +769,31 @@ impl Server {
         // receiver → ShuttingDown via the same guard).
         let _ = self.submit_tx.send(RouterMsg::Req(queued));
         rx
+    }
+
+    /// Liveness-vs-readiness split for health endpoints: the server is
+    /// *ready* when the breaker is closed and it is not draining. A
+    /// not-ready server still answers `/v1/healthz` (liveness) — with a 503
+    /// so load balancers stop routing to it.
+    pub fn is_ready(&self) -> bool {
+        !self.shutdown.load(Ordering::SeqCst) && self.breaker.state() == BreakerState::Closed
+    }
+
+    /// True after [`Server::begin_shutdown`]: draining, new work refused.
+    pub fn is_shutting_down(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Circuit-breaker state: `"closed"`, `"open"`, or `"half-open"` (a
+    /// disabled breaker reads closed).
+    pub fn breaker_state(&self) -> &'static str {
+        self.breaker.state_name()
+    }
+
+    /// Degraded mode: the breaker is not closed and batches are routing to
+    /// the fallback backend.
+    pub fn is_degraded(&self) -> bool {
+        self.has_fallback && self.breaker.state() != BreakerState::Closed
     }
 
     /// Front half of graceful stop: raise the shutdown flag and wake the
@@ -551,32 +833,77 @@ fn dispatch(metrics: &Metrics, work_tx: &Sender<WorkerMsg>, batch: Assembled<Req
     let _ = work_tx.send(WorkerMsg::Batch(batch));
 }
 
-fn run_batch(
-    backend: &dyn InferenceBackend,
+// ---------------------------------------------------------------------------
+// Supervised execution (worker side)
+
+/// Everything a worker needs to execute, supervise, and answer batches.
+struct ExecCtx {
+    backend: Arc<dyn InferenceBackend>,
+    fallback: Option<Arc<dyn InferenceBackend>>,
     img_elems: usize,
     classes: usize,
-    metrics: &Metrics,
-    in_system: &AtomicU64,
-    batch: Assembled<Request>,
+    metrics: Arc<Metrics>,
+    in_system: Arc<AtomicU64>,
+    breaker: Arc<Breaker>,
+    deadline: Option<Duration>,
+    retries: usize,
+    retry_backoff: Duration,
     sim_per_image: f64,
-) {
-    let exec_size = batch.exec_size;
-    let mut x = Vec::with_capacity(exec_size * img_elems);
-    for p in &batch.items {
-        // Admission validated every image's geometry, so this concatenation
-        // cannot shift a neighbour's offset.
-        debug_assert_eq!(p.payload.image.len(), img_elems);
-        x.extend_from_slice(&p.payload.image);
+}
+
+impl ExecCtx {
+    /// Resolve a routing decision to an actual backend. A fallback route
+    /// without a configured fallback executes on the primary — the requests
+    /// were already admitted, so answering via the ordinary failure path is
+    /// still better than dropping them.
+    fn select_backend(&self, route: &ExecRoute) -> (&Arc<dyn InferenceBackend>, bool) {
+        match (&self.fallback, route.use_fallback) {
+            (Some(fb), true) => (fb, true),
+            _ => (&self.backend, false),
+        }
     }
-    x.resize(exec_size * img_elems, 0.0); // padded slots
-    let t_exec = Instant::now();
-    // Contain backend panics and malformed outputs: under the admission
-    // bound, a batch that died without answering would leak its
-    // `queue_depth` slots forever (and drop reply channels) — so both
-    // become the ordinary failed-batch path below, which answers and
-    // decrements for every member.
-    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        backend.run_batch(&x, exec_size)
+}
+
+/// Why a supervised execution attempt produced no usable output.
+#[derive(Debug, Clone)]
+enum ExecFailure {
+    /// The watchdog abandoned the call at the configured deadline.
+    Timeout(Duration),
+    /// The backend errored, panicked, or returned malformed output.
+    Failed(String),
+}
+
+impl ExecFailure {
+    fn to_serve_error(&self) -> ServeError {
+        match self {
+            ExecFailure::Timeout(d) => {
+                ServeError::Timeout { deadline_ms: d.as_millis() as u64 }
+            }
+            ExecFailure::Failed(msg) => ServeError::BackendFailed(msg.clone()),
+        }
+    }
+
+    fn describe(&self) -> String {
+        match self {
+            ExecFailure::Timeout(d) => {
+                format!("execution exceeded the {}ms watchdog deadline", d.as_millis())
+            }
+            ExecFailure::Failed(msg) => msg.clone(),
+        }
+    }
+}
+
+/// Run the backend with panics contained: under the admission bound, a
+/// batch that died without answering would leak its `queue_depth` slots
+/// forever (and drop reply channels) — so a panic becomes an ordinary
+/// failed execution, which answers and decrements for every member.
+fn run_contained(
+    backend: &dyn InferenceBackend,
+    x: &[f32],
+    exec_size: usize,
+) -> Result<BatchOutput> {
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        backend.run_batch(x, exec_size)
     }))
     .unwrap_or_else(|payload| {
         let msg = payload
@@ -586,76 +913,239 @@ fn run_batch(
             .unwrap_or_else(|| "non-string panic payload".into());
         Err(anyhow::anyhow!("backend panicked executing the batch: {msg}"))
     })
-    .and_then(|out| {
-        // Validate against the *manifest's* class count, not the backend's
-        // self-reported one — a degenerate output (e.g. classes == 0 with
-        // empty logits) must fail here, not reach clients as Ok.
-        anyhow::ensure!(
-            out.classes == classes
-                && out.preds.len() == exec_size
-                && out.logits.len() == exec_size * classes
-                && out.preds.iter().all(|&p| p < classes),
-            "backend returned malformed output: {} logits / {} preds / {} classes \
-             for batch {exec_size} x {classes} classes",
-            out.logits.len(),
-            out.preds.len(),
-            out.classes
-        );
-        Ok(out)
-    });
+}
 
-    match result {
-        Ok(out) => {
-            // The backend's own measurement excludes the input-copy work
-            // above, so `execute` tracks pure backend cost.
-            metrics.execute.record(out.elapsed.as_secs_f64());
-            // Simulated FPGA time: the sequential per-image model, summed
-            // over the batch's occupied slots for the batch-level metric.
-            let sim_batch =
-                Duration::from_secs_f64(sim_per_image * batch.items.len() as f64);
-            metrics.sim_fpga.record(sim_batch.as_secs_f64());
-            let sim_request = Duration::from_secs_f64(sim_per_image);
-            let classes = out.classes;
-            let done = Instant::now();
-            for (i, p) in batch.items.iter().enumerate() {
-                let row = &out.logits[i * classes..(i + 1) * classes];
-                // Measured from *submit* time, not router-push time: the
-                // historic `p.enqueued` anchor silently excluded time spent
-                // in the submit channel, so a congested ingress reported
-                // rosy queue waits (and queue_wait ≤ e2e only held by
-                // luck). Both anchors now share `submitted`, so the
-                // invariant holds by construction.
-                let queue_wait = t_exec.duration_since(p.payload.submitted);
-                let e2e = done.duration_since(p.payload.submitted);
-                metrics.queue_wait.record(queue_wait.as_secs_f64());
-                metrics.e2e.record(e2e.as_secs_f64());
-                Metrics::inc(&metrics.requests_done);
-                in_system.fetch_sub(1, Ordering::SeqCst);
-                let _ = p.payload.reply.send(Ok(Response {
-                    logits: row.to_vec(),
-                    pred: out.preds[i],
-                    queue_wait,
-                    e2e,
-                    sim_fpga: sim_request,
-                }));
+/// Validate a backend's output against the *manifest's* geometry, not the
+/// backend's self-reported one — a degenerate output (wrong shape, class
+/// index out of range, NaN/Inf logits) must become a failed execution here,
+/// never an `Ok` served to clients.
+fn validate_output(out: BatchOutput, exec_size: usize, classes: usize) -> Result<BatchOutput> {
+    anyhow::ensure!(
+        out.classes == classes
+            && out.preds.len() == exec_size
+            && out.logits.len() == exec_size * classes
+            && out.preds.iter().all(|&p| p < classes),
+        "backend returned malformed output: {} logits / {} preds / {} classes \
+         for batch {exec_size} x {classes} classes",
+        out.logits.len(),
+        out.preds.len(),
+        out.classes
+    );
+    anyhow::ensure!(
+        out.logits.iter().all(|v| v.is_finite()),
+        "backend returned non-finite logits for batch {exec_size} x {classes} classes"
+    );
+    Ok(out)
+}
+
+/// One supervised execution attempt: contained, validated, and — when a
+/// deadline is configured — abandoned by the watchdog if it stalls.
+fn execute_once(
+    backend: &Arc<dyn InferenceBackend>,
+    x: &[f32],
+    exec_size: usize,
+    classes: usize,
+    deadline: Option<Duration>,
+) -> std::result::Result<BatchOutput, ExecFailure> {
+    let raw: Result<BatchOutput> = match deadline {
+        None => run_contained(backend.as_ref(), x, exec_size),
+        Some(limit) => {
+            // The backend call runs on a detached helper thread; on expiry
+            // the helper is *abandoned* — it keeps running, but its
+            // eventual result is dropped with the channel, so the worker
+            // can answer the members and release their slots now. The
+            // input is cloned because the abandoned helper may still read
+            // it after this frame returns.
+            let (tx, rx) = channel();
+            let be = backend.clone();
+            let input = x.to_vec();
+            let spawned = std::thread::Builder::new()
+                .name("ilmpq-exec".into())
+                .spawn(move || {
+                    let _ = tx.send(run_contained(be.as_ref(), &input, exec_size));
+                });
+            match spawned {
+                Err(e) => Err(anyhow::anyhow!("spawn execution helper thread: {e}")),
+                Ok(_detached) => match rx.recv_timeout(limit) {
+                    Ok(result) => result,
+                    Err(RecvTimeoutError::Timeout) => {
+                        return Err(ExecFailure::Timeout(limit));
+                    }
+                    Err(RecvTimeoutError::Disconnected) => Err(anyhow::anyhow!(
+                        "execution helper thread died without reporting a result"
+                    )),
+                },
             }
         }
-        Err(err) => {
+    };
+    raw.and_then(|out| validate_output(out, exec_size, classes))
+        .map_err(|e| ExecFailure::Failed(format!("{e:#}")))
+}
+
+/// Answer a set of members with a successful output: record latencies,
+/// count them `done` (plus `recovered` for singleton-retry successes),
+/// release their slots, reply.
+fn answer_ok(
+    ctx: &ExecCtx,
+    items: &[Pending<Request>],
+    out: &BatchOutput,
+    t_exec: Instant,
+    recovered: bool,
+) {
+    // The backend's own measurement excludes the input-copy work, so
+    // `execute` tracks pure backend cost.
+    ctx.metrics.execute.record(out.elapsed.as_secs_f64());
+    // Simulated FPGA time: the sequential per-image model, summed over the
+    // batch's occupied slots for the batch-level metric.
+    let sim_batch = Duration::from_secs_f64(ctx.sim_per_image * items.len() as f64);
+    ctx.metrics.sim_fpga.record(sim_batch.as_secs_f64());
+    let sim_request = Duration::from_secs_f64(ctx.sim_per_image);
+    let classes = out.classes;
+    let done = Instant::now();
+    for (i, p) in items.iter().enumerate() {
+        let row = &out.logits[i * classes..(i + 1) * classes];
+        // Measured from *submit* time, not router-push time: the historic
+        // `p.enqueued` anchor silently excluded time spent in the submit
+        // channel, so a congested ingress reported rosy queue waits (and
+        // queue_wait ≤ e2e only held by luck). Both anchors share
+        // `submitted`, so the invariant holds by construction.
+        let queue_wait = t_exec.duration_since(p.payload.submitted);
+        let e2e = done.duration_since(p.payload.submitted);
+        ctx.metrics.queue_wait.record(queue_wait.as_secs_f64());
+        ctx.metrics.e2e.record(e2e.as_secs_f64());
+        Metrics::inc(&ctx.metrics.requests_done);
+        if recovered {
+            Metrics::inc(&ctx.metrics.requests_recovered);
+        }
+        ctx.in_system.fetch_sub(1, Ordering::SeqCst);
+        let _ = p.payload.reply.send(Ok(Response {
+            logits: row.to_vec(),
+            pred: out.preds[i],
+            queue_wait,
+            e2e,
+            sim_fpga: sim_request,
+        }));
+    }
+}
+
+/// Answer a set of members with the typed error for `fail`, counting each
+/// in `class` (exactly one outcome class per request — the metrics sum
+/// invariant) and releasing their slots.
+fn answer_failed(
+    ctx: &ExecCtx,
+    items: &[Pending<Request>],
+    fail: &ExecFailure,
+    class: &AtomicU64,
+) {
+    let err = fail.to_serve_error();
+    for p in items {
+        // Degrade per-request, not per-batch-silently: every member of the
+        // failed batch gets the typed error on its channel.
+        Metrics::inc(class);
+        ctx.in_system.fetch_sub(1, Ordering::SeqCst);
+        let _ = p.payload.reply.send(Err(err.clone()));
+    }
+}
+
+/// The outcome class a *final* (unretried) failure counts toward.
+fn failure_class<'m>(metrics: &'m Metrics, fail: &ExecFailure) -> &'m AtomicU64 {
+    match fail {
+        ExecFailure::Timeout(_) => &metrics.requests_timeout,
+        ExecFailure::Failed(_) => &metrics.requests_failed,
+    }
+}
+
+/// Bounded retry with poison quarantine: re-split a failed batch into
+/// singleton executions so one poison request cannot fail its batch-mates.
+/// Each member gets up to `ctx.retries` isolated attempts with doubling
+/// backoff; a member that succeeds is answered `Ok` (and counted
+/// `recovered`), a member that keeps failing is *quarantined* — answered
+/// with the typed error but counted in its own metrics class, since its
+/// isolated failure is evidence the request itself is the poison.
+fn retry_singletons(ctx: &ExecCtx, items: Vec<Pending<Request>>, first: ExecFailure) {
+    for p in items {
+        let mut last = first.clone();
+        let mut answered = false;
+        for attempt in 0..ctx.retries {
+            let backoff = ctx
+                .retry_backoff
+                .saturating_mul(1u32 << (attempt.min(16) as u32));
+            if !backoff.is_zero() {
+                std::thread::sleep(backoff);
+            }
+            Metrics::inc(&ctx.metrics.batch_retries);
+            let route = ctx.breaker.route();
+            let (be, on_fallback) = ctx.select_backend(&route);
+            if on_fallback {
+                Metrics::inc(&ctx.metrics.fallback_batches);
+            }
+            let t_exec = Instant::now();
+            let result = execute_once(be, &p.payload.image, 1, ctx.classes, ctx.deadline);
+            ctx.breaker.on_result(&route, on_fallback, result.is_ok());
+            match result {
+                Ok(out) => {
+                    answer_ok(ctx, std::slice::from_ref(&p), &out, t_exec, true);
+                    answered = true;
+                    break;
+                }
+                Err(f) => last = f,
+            }
+        }
+        if !answered {
+            eprintln!(
+                "[server] request quarantined after {} isolated retries: {}",
+                ctx.retries,
+                last.describe()
+            );
+            answer_failed(
+                ctx,
+                std::slice::from_ref(&p),
+                &last,
+                &ctx.metrics.requests_quarantined,
+            );
+        }
+    }
+}
+
+/// Execute one assembled batch under the full supervision state machine:
+/// breaker routing → watchdog-bounded execution → output validation →
+/// (on failure) singleton retry with quarantine. Every member is answered
+/// exactly once and releases exactly one `in_system` slot on every path.
+fn run_batch(ctx: &ExecCtx, batch: Assembled<Request>) {
+    let exec_size = batch.exec_size;
+    let mut x = Vec::with_capacity(exec_size * ctx.img_elems);
+    for p in &batch.items {
+        // Admission validated every image's geometry, so this concatenation
+        // cannot shift a neighbour's offset.
+        debug_assert_eq!(p.payload.image.len(), ctx.img_elems);
+        x.extend_from_slice(&p.payload.image);
+    }
+    x.resize(exec_size * ctx.img_elems, 0.0); // padded slots
+
+    let route = ctx.breaker.route();
+    let (be, on_fallback) = ctx.select_backend(&route);
+    if on_fallback {
+        Metrics::inc(&ctx.metrics.fallback_batches);
+    }
+    let t_exec = Instant::now();
+    let result = execute_once(be, &x, exec_size, ctx.classes, ctx.deadline);
+    ctx.breaker.on_result(&route, on_fallback, result.is_ok());
+
+    match result {
+        Ok(out) => answer_ok(ctx, &batch.items, &out, t_exec, false),
+        Err(fail) => {
             // Host-observed elapsed goes to the dedicated failure track so
             // the `execute` percentiles only ever describe successful runs.
-            metrics.failed.record(t_exec.elapsed().as_secs_f64());
-            Metrics::inc(&metrics.batches_failed);
-            let reason = format!("{err:#}");
-            eprintln!("[server] batch failed: {reason}");
-            for p in &batch.items {
-                // Degrade per-request, not per-batch-silently: every member
-                // of the failed batch gets the typed error on its channel.
-                Metrics::inc(&metrics.requests_failed);
-                in_system.fetch_sub(1, Ordering::SeqCst);
-                let _ = p
-                    .payload
-                    .reply
-                    .send(Err(ServeError::BackendFailed(reason.clone())));
+            ctx.metrics.failed.record(t_exec.elapsed().as_secs_f64());
+            match &fail {
+                ExecFailure::Timeout(_) => Metrics::inc(&ctx.metrics.batches_timeout),
+                ExecFailure::Failed(_) => Metrics::inc(&ctx.metrics.batches_failed),
+            }
+            eprintln!("[server] batch failed: {}", fail.describe());
+            if ctx.retries == 0 {
+                answer_failed(ctx, &batch.items, &fail, failure_class(&ctx.metrics, &fail));
+            } else {
+                retry_singletons(ctx, batch.items, fail);
             }
         }
     }

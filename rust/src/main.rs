@@ -52,6 +52,64 @@ fn devices(arg: &str) -> Vec<DeviceModel> {
     }
 }
 
+/// `--fault FILE|chaos [--seed S]` → an optional [`backend::FaultyBackend`]
+/// wrap. `chaos` is the built-in mixed schedule seeded with the workload
+/// seed; anything else is a fault-spec JSON path.
+fn wrap_fault(
+    a: &Args,
+    seed: u64,
+    be: Arc<dyn InferenceBackend>,
+) -> Result<Arc<dyn InferenceBackend>> {
+    Ok(match a.get("fault") {
+        None => be,
+        Some("chaos") => {
+            Arc::new(backend::FaultyBackend::new(be, backend::FaultSpec::chaos(seed)))
+        }
+        Some(path) => {
+            let spec = backend::FaultSpec::load(Path::new(path))?;
+            Arc::new(backend::FaultyBackend::new(be, spec))
+        }
+    })
+}
+
+/// The shared resilience flags (`serve` and in-process `loadgen`) →
+/// [`ServeConfig`] supervision fields. All default off, preserving the
+/// historic fail-the-batch behaviour.
+fn apply_resilience(a: &Args, cfg: &mut ServeConfig) {
+    cfg.execute_deadline = match a.u64_or("execute-deadline-ms", 0) {
+        0 => None,
+        ms => Some(Duration::from_millis(ms)),
+    };
+    cfg.retries = a.usize_or("retries", 0);
+    cfg.retry_backoff = Duration::from_millis(a.u64_or("retry-backoff-ms", 20));
+    cfg.breaker_threshold = a.usize_or("breaker-threshold", 0);
+    cfg.breaker_cooldown = Duration::from_millis(a.u64_or("breaker-cooldown-ms", 1000));
+}
+
+/// The help rows for those shared resilience flags.
+const RESILIENCE_FLAGS: [(&str, &str); 7] = [
+    ("fault", "wrap the backend in fault injection: a spec JSON path, or `chaos`"),
+    ("execute-deadline-ms", "per-batch watchdog deadline (default 0 = off)"),
+    ("retries", "isolated singleton retries for failed batches (default 0)"),
+    ("retry-backoff-ms", "base retry backoff, doubling per attempt (default 20)"),
+    ("breaker-threshold", "consecutive failures opening the breaker (default 0 = off)"),
+    ("breaker-cooldown-ms", "open-breaker shed window before a probe (default 1000)"),
+    ("fallback", "degraded-mode backend while the breaker is open (e.g. float)"),
+];
+
+/// `--scenario`/`--malformed`/`--poison` → the workload content knobs.
+/// The chaos scenario defaults the adversarial fractions up when they are
+/// not given explicitly.
+fn workload_content(
+    a: &Args,
+) -> Result<(loadgen::Scenario, f64, f64)> {
+    let scenario = loadgen::Scenario::parse(a.str_or("scenario", "steady"))?;
+    let chaos = scenario == loadgen::Scenario::Chaos;
+    let malformed = a.f64_or("malformed", if chaos { 0.1 } else { 0.0 });
+    let poison = a.f64_or("poison", if chaos { 0.05 } else { 0.0 });
+    Ok((scenario, malformed, poison))
+}
+
 /// CLI flags → [`QuantSource`] via the shared [`QuantSource::from_cli`]
 /// mapping (`--plan FILE` | `--ratio NAME` | `--derive RATIO`, mutually
 /// exclusive). Every arm that used to re-plumb `str_or("ratio", ...)` →
@@ -257,37 +315,37 @@ fn run(cmd: &str) -> Result<()> {
             Ok(())
         }
         "serve" => {
-            let a = Args::parse_env(
-                "ilmpq serve",
-                2,
-                &[
-                    ("requests", "total requests (default 512; demo loop only)"),
-                    ("rate", "arrival rate req/s (default 2000; demo loop only)"),
-                    ("ratio", "named plan from the manifest (default ilmpq2)"),
-                    ("plan", "serve a saved plan file (see `ilmpq plan derive`)"),
-                    ("derive", "derive fresh at this ratio (name or P:F4:F8)"),
-                    ("device", "FPGA-sim overlay device"),
-                    ("workers", "worker threads"),
-                    ("queue-depth", "admission queue bound (default 1024)"),
-                    ("backend", "execution backend (see `ilmpq backends`)"),
-                    ("no-frozen!", "serve raw weights + per-request fake-quant"),
-                    (
-                        "listen",
-                        "serve over HTTP/1.1 on this address until killed \
-                         (e.g. 127.0.0.1:8080) instead of the demo loop",
-                    ),
-                    (
-                        "http-workers",
-                        "HTTP connection handler threads (default 16); size at or \
-                         above the expected concurrent keep-alive connections",
-                    ),
-                    ("synthetic!", "force the artifact-free synthetic TinyResNet"),
-                ],
-            );
+            let mut flags = vec![
+                ("requests", "total requests (default 512; demo loop only)"),
+                ("rate", "arrival rate req/s (default 2000; demo loop only)"),
+                ("ratio", "named plan from the manifest (default ilmpq2)"),
+                ("plan", "serve a saved plan file (see `ilmpq plan derive`)"),
+                ("derive", "derive fresh at this ratio (name or P:F4:F8)"),
+                ("device", "FPGA-sim overlay device"),
+                ("workers", "worker threads"),
+                ("queue-depth", "admission queue bound (default 1024)"),
+                ("backend", "execution backend (see `ilmpq backends`)"),
+                ("no-frozen!", "serve raw weights + per-request fake-quant"),
+                (
+                    "listen",
+                    "serve over HTTP/1.1 on this address until killed \
+                     (e.g. 127.0.0.1:8080) instead of the demo loop",
+                ),
+                (
+                    "http-workers",
+                    "HTTP connection handler threads (default 16); size at or \
+                     above the expected concurrent keep-alive connections",
+                ),
+                ("synthetic!", "force the artifact-free synthetic TinyResNet"),
+                ("seed", "fixture + fault-schedule seed (default 7)"),
+            ];
+            flags.extend(RESILIENCE_FLAGS);
+            let a = Args::parse_env("ilmpq serve", 2, &flags);
             let backend_name = a.str_or("backend", "pjrt").to_string();
             backend::spec(&backend_name)?;
             let source = quant_source(&a, "ilmpq2")?;
             let frozen = !a.flag("no-frozen");
+            let seed = a.u64_or("seed", 7);
             // The manifest (batching geometry, masks, params) loads without
             // the PJRT engine — only runtime-needing backends start one, so
             // `--backend qgemm` serves on `--no-default-features` builds.
@@ -299,11 +357,35 @@ fn run(cmd: &str) -> Result<()> {
                 &source,
                 frozen,
                 None,
-                7,
+                seed,
                 a.flag("synthetic"),
                 "serve",
             )?;
-            let cfg = ServeConfig {
+            // Fault injection wraps *after* construction so `--fault` works
+            // uniformly over every backend and plan source.
+            let be = wrap_fault(&a, seed, be)?;
+            // The degraded-mode fallback serves the same manifest/plan on a
+            // different execution path (e.g. --backend qgemm --fallback
+            // float); built through the same recipe so its geometry always
+            // matches. Never fault-wrapped — it is the healthy path.
+            let fallback = match a.get("fallback") {
+                None => None,
+                Some(fb_name) => {
+                    backend::spec(fb_name)?;
+                    let (_m, fb, _plan) = loadgen::fixture_or_artifacts(
+                        fb_name,
+                        &source,
+                        frozen,
+                        None,
+                        seed,
+                        a.flag("synthetic"),
+                        "serve-fallback",
+                    )?;
+                    println!("fallback backend: {}", fb.name());
+                    Some(fb)
+                }
+            };
+            let mut cfg = ServeConfig {
                 workers: a.usize_or("workers", 2),
                 queue_depth: a.usize_or("queue-depth", 1024),
                 plan: active_plan,
@@ -311,8 +393,9 @@ fn run(cmd: &str) -> Result<()> {
                 frozen,
                 ..Default::default()
             };
+            apply_resilience(&a, &mut cfg);
             println!("backend: {}", be.name());
-            let server = Server::start(&manifest, be, cfg)?;
+            let server = Server::start_with_fallback(&manifest, be, fallback, cfg)?;
             if let Some(p) = &server.plan {
                 println!("plan {:?}: {}", p.name, p.provenance.describe());
             }
@@ -342,49 +425,61 @@ fn run(cmd: &str) -> Result<()> {
             let spec = loadgen::LoadSpec {
                 requests: a.usize_or("requests", 512),
                 rate: a.f64_or("rate", 2000.0),
-                malformed_frac: 0.0,
-                seed: 7,
+                seed,
+                ..Default::default()
             };
             let (report, metrics) = loadgen::run(server, &manifest, &spec);
             println!("{}\n{}", report.render(), metrics.report());
             Ok(())
         }
         "loadgen" => {
-            let a = Args::parse_env(
-                "ilmpq loadgen",
-                2,
-                &[
-                    ("requests", "total requests (default 512)"),
-                    ("rate", "offered load req/s (default 2000; 0 = unpaced)"),
-                    ("workers", "worker threads (default 2)"),
-                    ("queue-depth", "admission queue bound (default 1024)"),
-                    ("max-wait-ms", "batcher deadline (default 5)"),
-                    ("backend", "execution backend (default qgemm; see `ilmpq backends`)"),
-                    ("ratio", "named plan from the manifest (default ilmpq2)"),
-                    ("plan", "drive a saved plan file (see `ilmpq plan derive`)"),
-                    ("derive", "derive fresh at this ratio (name or P:F4:F8)"),
-                    ("device", "FPGA-sim overlay device (default xc7z045)"),
-                    ("threads", "backend CPU threads (0 or absent: all cores)"),
-                    ("seed", "workload seed (default 42)"),
-                    ("malformed", "fraction of malformed-length requests (default 0)"),
-                    ("synthetic!", "force the artifact-free synthetic TinyResNet"),
-                    ("out", "also write the report as JSON to this path"),
-                    (
-                        "url",
-                        "drive a remote `ilmpq serve --listen` at this base URL \
-                         (e.g. http://127.0.0.1:8080) over real sockets; the \
-                         server-side options (backend/workers/...) are ignored",
-                    ),
-                    ("conns", "client connections for --url (default 8)"),
-                ],
-            );
+            let mut flags = vec![
+                ("requests", "total requests (default 512)"),
+                ("rate", "offered load req/s (default 2000; 0 = unpaced)"),
+                ("workers", "worker threads (default 2)"),
+                ("queue-depth", "admission queue bound (default 1024)"),
+                ("max-wait-ms", "batcher deadline (default 5)"),
+                ("backend", "execution backend (default qgemm; see `ilmpq backends`)"),
+                ("ratio", "named plan from the manifest (default ilmpq2)"),
+                ("plan", "drive a saved plan file (see `ilmpq plan derive`)"),
+                ("derive", "derive fresh at this ratio (name or P:F4:F8)"),
+                ("device", "FPGA-sim overlay device (default xc7z045)"),
+                ("threads", "backend CPU threads (0 or absent: all cores)"),
+                ("seed", "workload seed (default 42)"),
+                ("malformed", "fraction of malformed-length requests (default 0)"),
+                (
+                    "scenario",
+                    "workload shape: steady | burst (square-wave overload) | \
+                     chaos (valid/malformed/poison blend; defaults \
+                     --malformed 0.1 --poison 0.05)",
+                ),
+                (
+                    "poison",
+                    "fraction of requests carrying the poison sentinel a \
+                     --fault backend fails on (default 0)",
+                ),
+                ("synthetic!", "force the artifact-free synthetic TinyResNet"),
+                ("out", "also write the report as JSON to this path"),
+                (
+                    "url",
+                    "drive a remote `ilmpq serve --listen` at this base URL \
+                     (e.g. http://127.0.0.1:8080) over real sockets; the \
+                     server-side options (backend/workers/...) are ignored",
+                ),
+                ("conns", "client connections for --url (default 8)"),
+            ];
+            flags.extend(RESILIENCE_FLAGS);
+            let a = Args::parse_env("ilmpq loadgen", 2, &flags);
+            let (scenario, malformed_frac, poison_frac) = workload_content(&a)?;
             if let Some(url) = a.get("url") {
-                // Remote mode: the same open-loop Poisson workload over
-                // HTTP, statuses folded into the same outcome classes.
+                // Remote mode: the same open-loop workload over HTTP,
+                // statuses folded into the same outcome classes.
                 let spec = loadgen::LoadSpec {
                     requests: a.usize_or("requests", 512),
                     rate: a.f64_or("rate", 2000.0),
-                    malformed_frac: a.f64_or("malformed", 0.0),
+                    malformed_frac,
+                    poison_frac,
+                    scenario,
                     seed: a.u64_or("seed", 42),
                 };
                 let (report, server_metrics) =
@@ -422,7 +517,24 @@ fn run(cmd: &str) -> Result<()> {
                 a.flag("synthetic"),
                 "loadgen",
             )?;
-            let cfg = ServeConfig {
+            let be = wrap_fault(&a, seed, be)?;
+            let fallback = match a.get("fallback") {
+                None => None,
+                Some(fb_name) => {
+                    backend::spec(fb_name)?;
+                    let (_m, fb, _plan) = loadgen::fixture_or_artifacts(
+                        fb_name,
+                        &source,
+                        true,
+                        threads,
+                        seed,
+                        a.flag("synthetic"),
+                        "loadgen-fallback",
+                    )?;
+                    Some(fb)
+                }
+            };
+            let mut cfg = ServeConfig {
                 workers: a.usize_or("workers", 2),
                 max_wait: Duration::from_millis(a.u64_or("max-wait-ms", 5)),
                 queue_depth: a.usize_or("queue-depth", 1024),
@@ -430,14 +542,17 @@ fn run(cmd: &str) -> Result<()> {
                 device: a.str_or("device", "xc7z045").to_string(),
                 ..Default::default()
             };
+            apply_resilience(&a, &mut cfg);
             let spec = loadgen::LoadSpec {
                 requests: a.usize_or("requests", 512),
                 rate: a.f64_or("rate", 2000.0),
-                malformed_frac: a.f64_or("malformed", 0.0),
+                malformed_frac,
+                poison_frac,
+                scenario,
                 seed,
             };
             println!("backend: {} (model {})", be.name(), manifest.model_name);
-            let server = Server::start(&manifest, be, cfg)?;
+            let server = Server::start_with_fallback(&manifest, be, fallback, cfg)?;
             println!("sim-FPGA: {}", server.sim.row());
             let (report, metrics) = loadgen::run(server, &manifest, &spec);
             println!("{}\n{}", report.render(), metrics.report());
@@ -457,6 +572,10 @@ fn run(cmd: &str) -> Result<()> {
                     s.description
                 );
             }
+            println!(
+                "\nany of them wraps as faulty:<name> (seeded fault injection; \
+                 configure with --fault SPEC.json|chaos)"
+            );
             Ok(())
         }
         "info" => {
@@ -653,9 +772,13 @@ commands:
                 end on the admission pipeline (POST /v1/infer, GET
                 /v1/healthz, GET /v1/metrics, GET /v1/plan); without it,
                 the in-process demo loop runs (dynamic batching, --backend
-                NAME); `--plan p.json` serves a saved quantization plan
+                NAME); `--plan p.json` serves a saved quantization plan;
+                self-healing execution via --execute-deadline-ms,
+                --retries, --breaker-threshold, --fallback NAME, and
+                --fault SPEC.json|chaos for fault injection
   loadgen       open-loop offered-load driver for the admission pipeline
-                (--rate, --queue-depth, --malformed; runs artifact-free);
+                (--rate, --queue-depth, --malformed, --poison,
+                --scenario steady|burst|chaos; runs artifact-free);
                 `--url http://host:port` drives a remote `serve --listen`
                 over real sockets with the same outcome classes
   backends      list the registered execution backends

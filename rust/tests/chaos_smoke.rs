@@ -1,0 +1,395 @@
+//! Chaos smoke: the self-healing serving loop under a seeded mixed fault
+//! schedule, artifact-free on the synthetic qgemm fixture (runs in the
+//! `--no-default-features` CI leg).
+//!
+//! Pinned here (the acceptance contract for supervised execution):
+//!
+//! * **answer-exactly-once under chaos** — with panics, stalls past the
+//!   watchdog deadline, garbage logits, injected errors, and a leading
+//!   failure burst all firing, every offered request gets exactly one typed
+//!   reply: outcome classes sum to `requests`, `lost == 0`;
+//! * **no slot leaks** — a follow-up round at the same `queue_depth` still
+//!   admits after a chaos round (abandoned watchdog executions and panics
+//!   released their slots);
+//! * **poison quarantine** — re-splitting a failed batch into singletons
+//!   isolates exactly the poison request; its batch-mates are answered with
+//!   logits bit-identical to a clean backend's;
+//! * **breaker transitions** — closed → open (shedding `Unavailable`) →
+//!   half-open probe → closed, visible in `Metrics::to_json()` and in
+//!   `/v1/healthz` ready-vs-live (503 while not ready, back to 200);
+//! * **degraded serving** — with a fallback backend, an open breaker keeps
+//!   serving instead of shedding.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use ilmpq::backend::{FaultSpec, FaultyBackend, InferenceBackend, POISON_MAGIC};
+use ilmpq::coordinator::{
+    loadgen, HttpClient, HttpConfig, HttpServer, HttpTarget, Metrics, ServeConfig,
+    ServeError, Server,
+};
+use ilmpq::runtime::Manifest;
+use ilmpq::util::{Json, Rng};
+
+/// Fixture bundle: manifest, fault-wrapped backend, healthy inner backend
+/// (for bit-equal reference computations), and a plan-carrying config.
+type Fixture = (Manifest, Arc<dyn InferenceBackend>, Arc<dyn InferenceBackend>, ServeConfig);
+
+/// Synthetic fixture wrapped in fault injection; also returns the healthy
+/// inner backend for reference computations.
+fn chaos_fixture(plan_name: &str, spec: FaultSpec, seed: u64) -> Fixture {
+    let (m, inner, plan) = loadgen::synth_fixture("qgemm", plan_name, Some(1), seed).unwrap();
+    let faulty: Arc<dyn InferenceBackend> =
+        Arc::new(FaultyBackend::new(inner.clone(), spec));
+    let cfg = ServeConfig { plan: Some(plan), ..Default::default() };
+    (m, faulty, inner, cfg)
+}
+
+fn normal_image(img: usize, rng: &mut Rng) -> Vec<f32> {
+    let mut image = vec![0f32; img];
+    rng.fill_normal(&mut image, 1.0);
+    image
+}
+
+#[test]
+fn chaos_run_answers_every_request_exactly_once() {
+    // The full mixed schedule: 10% each of panic / stall-past-deadline /
+    // error / garbage, plus a leading 5-batch failure burst — against the
+    // whole supervision stack (watchdog + retry + breaker + no fallback).
+    let (m, faulty, _inner, cfg) = chaos_fixture("chs", FaultSpec::chaos(101), 47);
+    let server = Server::start(
+        &m,
+        faulty,
+        ServeConfig {
+            workers: 2,
+            max_wait: Duration::from_millis(1),
+            execute_deadline: Some(Duration::from_millis(100)),
+            retries: 1,
+            retry_backoff: Duration::from_millis(2),
+            breaker_threshold: 3,
+            breaker_cooldown: Duration::from_millis(50),
+            ..cfg
+        },
+    )
+    .unwrap();
+    let spec = loadgen::LoadSpec {
+        requests: 160,
+        rate: 0.0, // unpaced: maximal batch-assembly pressure
+        malformed_frac: 0.1,
+        poison_frac: 0.05,
+        scenario: loadgen::Scenario::Chaos,
+        seed: 103,
+    };
+    let (r, metrics) = loadgen::run(server, &m, &spec);
+    assert_eq!(r.lost, 0, "no reply channel may be dropped under chaos: {r:?}");
+    assert_eq!(r.slow, 0, "chaos run must drain inside the deadline: {r:?}");
+    assert_eq!(
+        r.done + r.invalid + r.shed + r.failed + r.shutdown + r.timeout + r.unavailable,
+        r.requests,
+        "outcome classes must sum to requests: {r:?}"
+    );
+    assert!(r.done > 0, "chaos must not starve every request: {r:?}");
+    assert!(r.invalid > 0, "malformed fraction must surface: {r:?}");
+    // The server-side ledger agrees: everything admitted was answered.
+    let answered = Metrics::get(&metrics.requests_done)
+        + Metrics::get(&metrics.requests_invalid)
+        + Metrics::get(&metrics.requests_shed)
+        + Metrics::get(&metrics.requests_failed)
+        + Metrics::get(&metrics.requests_shutdown)
+        + Metrics::get(&metrics.requests_timeout)
+        + Metrics::get(&metrics.requests_unavailable)
+        + Metrics::get(&metrics.requests_quarantined);
+    assert_eq!(answered, Metrics::get(&metrics.requests_in), "metrics sum invariant");
+}
+
+#[test]
+fn chaos_round_leaks_no_queue_slots() {
+    // Two sequential rounds at a tiny queue_depth: if any fault path leaked
+    // its admission slot (abandoned stall, contained panic, quarantine),
+    // round two would shed QueueFull at an empty server.
+    let spec = FaultSpec {
+        seed: 11,
+        panic_prob: 0.3,
+        error_prob: 0.3,
+        stall_prob: 0.2,
+        stall_ms: 1_000,
+        garbage_prob: 0.2,
+        ..FaultSpec::default()
+    };
+    let (m, faulty, _inner, cfg) = chaos_fixture("chl", spec, 53);
+    let depth = 8;
+    let server = Server::start(
+        &m,
+        faulty,
+        ServeConfig {
+            workers: 1,
+            max_wait: Duration::from_millis(1),
+            queue_depth: depth,
+            execute_deadline: Some(Duration::from_millis(50)),
+            retries: 1,
+            retry_backoff: Duration::from_millis(1),
+            ..cfg
+        },
+    )
+    .unwrap();
+    let img = m.data.image_elems();
+    let mut rng = Rng::new(13);
+    for round in 0..2 {
+        // Collect-before-next-round: in_system must be back to 0, so a
+        // full depth's worth of requests is admissible again.
+        let pending: Vec<_> = (0..depth)
+            .map(|_| server.submit(normal_image(img, &mut rng)))
+            .collect();
+        for (i, rx) in pending.into_iter().enumerate() {
+            let reply = rx
+                .recv_timeout(Duration::from_secs(30))
+                .unwrap_or_else(|e| panic!("round {round} request {i} unanswered: {e}"));
+            assert!(
+                !matches!(reply, Err(ServeError::QueueFull { .. })),
+                "round {round} request {i} shed at an un-leaked depth {depth}"
+            );
+        }
+    }
+    server.stop();
+}
+
+#[test]
+fn quarantine_isolates_the_poison_request_with_bit_correct_neighbors() {
+    // Default FaultSpec: no random faults, poison detection on — the only
+    // failures come from the poison sentinel.
+    let (m, faulty, inner, cfg) = chaos_fixture("chq", FaultSpec::default(), 59);
+    let server = Server::start(
+        &m,
+        faulty,
+        ServeConfig {
+            workers: 1,
+            // Generous batching window so all four requests assemble into
+            // one exec_size-4 batch even on a hiccuping CI runner (a full
+            // batch assembles immediately, so this costs no latency).
+            max_wait: Duration::from_secs(1),
+            retries: 1,
+            retry_backoff: Duration::from_millis(1),
+            ..cfg
+        },
+    )
+    .unwrap();
+    let img = m.data.image_elems();
+    let mut rng = Rng::new(17);
+    let mut images: Vec<Vec<f32>> = (0..4).map(|_| normal_image(img, &mut rng)).collect();
+    images[2][0] = POISON_MAGIC;
+    let pending: Vec<_> =
+        images.iter().map(|im| server.submit(im.clone())).collect();
+    for (i, rx) in pending.into_iter().enumerate() {
+        let reply = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        if i == 2 {
+            // Exactly the poison request fails, and it fails *after*
+            // isolation (quarantined), not as collateral batch damage.
+            let err = reply.expect_err("poison request must not be served");
+            assert!(
+                matches!(&err, ServeError::BackendFailed(msg) if msg.contains("poison")),
+                "{err:?}"
+            );
+        } else {
+            // Batch-mates recover via singleton retry with logits
+            // bit-identical to a clean singleton run on the inner backend.
+            let resp = reply.unwrap_or_else(|e| panic!("neighbor {i} lost to poison: {e:?}"));
+            let reference = inner.run_batch(&images[i], 1).unwrap();
+            assert_eq!(resp.logits, reference.logits, "neighbor {i} logits drifted");
+            assert_eq!(resp.pred, reference.preds[0]);
+        }
+    }
+    let metrics = server.stop();
+    assert_eq!(Metrics::get(&metrics.requests_quarantined), 1);
+    assert_eq!(Metrics::get(&metrics.requests_recovered), 3);
+    assert_eq!(Metrics::get(&metrics.requests_done), 3);
+}
+
+#[test]
+fn breaker_opens_sheds_probes_and_recloses() {
+    // A leading 3-batch burst opens the breaker (threshold 3); the healthy
+    // tail lets the half-open probe succeed and re-close it.
+    let spec = FaultSpec {
+        seed: 19,
+        burst_period: u64::MAX,
+        burst_len: 3,
+        ..FaultSpec::default()
+    };
+    let (m, faulty, _inner, cfg) = chaos_fixture("chb", spec, 61);
+    let server = Server::start(
+        &m,
+        faulty,
+        ServeConfig {
+            workers: 1,
+            max_wait: Duration::from_millis(1),
+            breaker_threshold: 3,
+            // Wide enough that the shed assertion below cannot race the
+            // cooldown expiring on a slow CI runner.
+            breaker_cooldown: Duration::from_secs(2),
+            ..cfg
+        },
+    )
+    .unwrap();
+    let img = m.data.image_elems();
+    let mut rng = Rng::new(23);
+    assert!(server.is_ready());
+    assert_eq!(server.breaker_state(), "closed");
+    // Three consecutive burst failures → open.
+    for _ in 0..3 {
+        let reply = server
+            .submit(normal_image(img, &mut rng))
+            .recv_timeout(Duration::from_secs(30))
+            .unwrap();
+        assert!(matches!(reply, Err(ServeError::BackendFailed(_))), "{reply:?}");
+    }
+    assert_eq!(server.breaker_state(), "open");
+    assert!(!server.is_ready(), "open breaker must report not-ready");
+    // While cooling down, admission sheds immediately with Unavailable.
+    let reply = server
+        .submit(normal_image(img, &mut rng))
+        .recv_timeout(Duration::from_secs(5))
+        .unwrap();
+    assert!(matches!(reply, Err(ServeError::Unavailable)), "{reply:?}");
+    // After the cooldown, the next batch is the half-open probe; the burst
+    // is over, so it succeeds and the breaker re-closes.
+    std::thread::sleep(Duration::from_millis(2_200));
+    let reply = server
+        .submit(normal_image(img, &mut rng))
+        .recv_timeout(Duration::from_secs(30))
+        .unwrap();
+    assert!(reply.is_ok(), "probe traffic must be served: {reply:?}");
+    assert_eq!(server.breaker_state(), "closed");
+    assert!(server.is_ready());
+    let metrics = server.stop();
+    // The transition ledger made it into the serialized metrics.
+    let j = metrics.to_json();
+    assert_eq!(j.get("breaker_state").and_then(Json::as_str), Some("closed"));
+    assert!(j.get("breaker_opened").and_then(Json::as_f64).unwrap() >= 1.0, "{j:?}");
+    assert!(j.get("breaker_half_open").and_then(Json::as_f64).unwrap() >= 1.0, "{j:?}");
+    assert!(j.get("breaker_closed").and_then(Json::as_f64).unwrap() >= 1.0, "{j:?}");
+    assert!(
+        j.get("requests_unavailable").and_then(Json::as_f64).unwrap() >= 1.0,
+        "{j:?}"
+    );
+}
+
+#[test]
+fn open_breaker_serves_degraded_on_the_fallback_backend() {
+    // Primary fails every batch; the float fallback (same fixture seed →
+    // same weights) keeps serving while the breaker is open.
+    let spec = FaultSpec { seed: 29, error_prob: 1.0, ..FaultSpec::default() };
+    let (m, faulty, _inner, cfg) = chaos_fixture("chf", spec, 67);
+    let (_m2, fallback, _plan2) = loadgen::synth_fixture("float", "chf", Some(1), 67).unwrap();
+    let server = Server::start_with_fallback(
+        &m,
+        faulty,
+        Some(fallback),
+        ServeConfig {
+            workers: 1,
+            max_wait: Duration::from_millis(1),
+            breaker_threshold: 2,
+            // Long cooldown: once open, the rest of the test runs degraded
+            // (no probe can fire).
+            breaker_cooldown: Duration::from_secs(30),
+            ..cfg
+        },
+    )
+    .unwrap();
+    assert!(!server.is_degraded(), "healthy start");
+    let img = m.data.image_elems();
+    let mut rng = Rng::new(31);
+    let mut done = 0usize;
+    for _ in 0..8 {
+        if server
+            .submit(normal_image(img, &mut rng))
+            .recv_timeout(Duration::from_secs(30))
+            .unwrap()
+            .is_ok()
+        {
+            done += 1;
+        }
+    }
+    // The first `threshold` batches fail on the primary; everything after
+    // the breaker opens is served by the fallback.
+    assert!(done >= 5, "degraded mode must keep serving: {done}/8");
+    assert!(server.is_degraded(), "open breaker + fallback = degraded");
+    assert_eq!(server.breaker_state(), "open");
+    let metrics = server.stop();
+    assert!(Metrics::get(&metrics.fallback_batches) >= 5);
+    assert_eq!(Metrics::get(&metrics.requests_unavailable), 0, "fallback never sheds");
+}
+
+#[test]
+fn healthz_tracks_breaker_readiness_over_http() {
+    // Same open→probe→closed arc as above, observed through the HTTP front
+    // end: /v1/healthz answers 503 + ready=false while the breaker is not
+    // closed (liveness intact), then recovers to 200 + ready=true.
+    let spec = FaultSpec {
+        seed: 37,
+        burst_period: u64::MAX,
+        burst_len: 2,
+        ..FaultSpec::default()
+    };
+    let (m, faulty, _inner, cfg) = chaos_fixture("chz", spec, 71);
+    let server = Server::start(
+        &m,
+        faulty,
+        ServeConfig {
+            workers: 1,
+            max_wait: Duration::from_millis(1),
+            breaker_threshold: 2,
+            // Wide enough that the 503-while-open assertions below cannot
+            // race the cooldown expiring on a slow CI runner.
+            breaker_cooldown: Duration::from_secs(2),
+            ..cfg
+        },
+    )
+    .unwrap();
+    let front = HttpServer::start(
+        server,
+        &m,
+        HttpConfig { addr: "127.0.0.1:0".into(), workers: 2, ..Default::default() },
+    )
+    .unwrap();
+    let target = HttpTarget::parse(&format!("http://{}", front.local_addr())).unwrap();
+    let mut client = HttpClient::connect(&target, Duration::from_secs(30));
+    let img = m.data.image_elems();
+    let mut rng = Rng::new(41);
+    let body = |image: &[f32]| {
+        Json::obj(vec![(
+            "image",
+            Json::Arr(image.iter().map(|&v| Json::Num(v as f64)).collect()),
+        )])
+        .to_string_compact()
+    };
+
+    // Healthy: ready.
+    let (code, hbody) = client.request("GET", "/v1/healthz", None).unwrap();
+    assert_eq!(code, 200, "{hbody}");
+
+    // Two burst failures open the breaker.
+    for _ in 0..2 {
+        let (code, b) = client
+            .request("POST", "/v1/infer", Some(&body(&normal_image(img, &mut rng))))
+            .unwrap();
+        assert_eq!(code, 500, "{b}");
+    }
+    let (code, hbody) = client.request("GET", "/v1/healthz", None).unwrap();
+    assert_eq!(code, 503, "open breaker must 503 healthz: {hbody}");
+    let h = Json::parse(&hbody).unwrap();
+    assert_eq!(h.get("live"), Some(&Json::Bool(true)), "{hbody}");
+    assert_eq!(h.get("ready"), Some(&Json::Bool(false)), "{hbody}");
+    assert_eq!(h.get("breaker").and_then(Json::as_str), Some("open"), "{hbody}");
+
+    // Cooldown elapses; the probe succeeds and readiness returns.
+    std::thread::sleep(Duration::from_millis(2_200));
+    let (code, b) = client
+        .request("POST", "/v1/infer", Some(&body(&normal_image(img, &mut rng))))
+        .unwrap();
+    assert_eq!(code, 200, "probe must serve: {b}");
+    let (code, hbody) = client.request("GET", "/v1/healthz", None).unwrap();
+    assert_eq!(code, 200, "recovered breaker must 200 healthz: {hbody}");
+    let h = Json::parse(&hbody).unwrap();
+    assert_eq!(h.get("ready"), Some(&Json::Bool(true)), "{hbody}");
+    assert_eq!(h.get("breaker").and_then(Json::as_str), Some("closed"), "{hbody}");
+    front.stop();
+}

@@ -3,8 +3,20 @@
 //! error, never a PJRT abort or silent garbage. The runtime-backed tests
 //! require `make artifacts` + the `pjrt` feature and skip with a note when
 //! either is missing; the pure manifest/binary-format tests always run.
+//!
+//! The second half drives every [`FaultyBackend`] fault mode — injected
+//! errors, bursts, panics, garbage logits, stalls — through the *serving
+//! pipeline* on the synthetic fixture, so the supervised-execution
+//! guarantees (typed errors, watchdog abandonment, slot recovery) are
+//! exercised artifact-free under `--no-default-features`.
 
+use std::sync::Arc;
+use std::time::Duration;
+
+use ilmpq::backend::{FaultSpec, FaultyBackend};
+use ilmpq::coordinator::{loadgen, ServeConfig, ServeError, Server};
 use ilmpq::runtime::{HostTensor, Manifest, Runtime};
+use ilmpq::util::Rng;
 
 mod common;
 
@@ -128,6 +140,164 @@ fn server_rejects_mismatched_plan() {
     let err = Server::start_pjrt(rt, params, &masks, cfg).err().expect("must fail");
     let msg = format!("{err:#}");
     assert!(msg.contains("plan") && msg.contains("rows"), "{msg}");
+}
+
+// ---------------------------------------------------------------------------
+// FaultyBackend → serving pipeline, artifact-free
+
+/// A serving stack over the synthetic fixture with `spec` faults injected
+/// between the serving loop and a healthy qgemm backend.
+fn faulty_server(plan_name: &str, spec: FaultSpec, cfg: ServeConfig) -> (Server, usize) {
+    let (m, inner, plan) = loadgen::synth_fixture("qgemm", plan_name, Some(1), 41).unwrap();
+    let be = Arc::new(FaultyBackend::new(inner, spec));
+    let cfg = ServeConfig { plan: Some(plan), ..cfg };
+    let img = m.data.image_elems();
+    (Server::start(&m, be, cfg).unwrap(), img)
+}
+
+fn one_request(server: &Server, img: usize, rng: &mut Rng) -> Result<(), ServeError> {
+    let mut image = vec![0f32; img];
+    rng.fill_normal(&mut image, 1.0);
+    server
+        .submit(image)
+        .recv_timeout(Duration::from_secs(30))
+        .expect("every admitted request must be answered")
+        .map(|_| ())
+}
+
+#[test]
+fn injected_backend_error_becomes_a_typed_reply() {
+    let spec = FaultSpec { seed: 1, error_prob: 1.0, ..FaultSpec::default() };
+    let (server, img) = faulty_server("fie", spec, ServeConfig {
+        workers: 1,
+        max_wait: Duration::from_millis(1),
+        ..Default::default()
+    });
+    let mut rng = Rng::new(2);
+    match one_request(&server, img, &mut rng) {
+        Err(ServeError::BackendFailed(msg)) => {
+            assert!(msg.contains("injected fault"), "{msg}")
+        }
+        other => panic!("expected BackendFailed, got {other:?}"),
+    }
+    server.stop();
+}
+
+#[test]
+fn failure_burst_fails_leading_batches_then_recovers() {
+    // Burst of 2 at the head of an effectively-infinite period: the first
+    // two batches fail, everything after runs clean.
+    let spec = FaultSpec {
+        seed: 3,
+        burst_period: u64::MAX,
+        burst_len: 2,
+        ..FaultSpec::default()
+    };
+    let (server, img) = faulty_server("fib", spec, ServeConfig {
+        workers: 1,
+        max_wait: Duration::from_millis(1),
+        ..Default::default()
+    });
+    let mut rng = Rng::new(4);
+    let outcomes: Vec<bool> =
+        (0..5).map(|_| one_request(&server, img, &mut rng).is_ok()).collect();
+    assert_eq!(outcomes, vec![false, false, true, true, true]);
+    server.stop();
+}
+
+#[test]
+fn injected_panic_is_contained_as_a_failed_batch() {
+    let spec = FaultSpec { seed: 5, panic_prob: 1.0, ..FaultSpec::default() };
+    let (server, img) = faulty_server("fip", spec, ServeConfig {
+        workers: 1,
+        max_wait: Duration::from_millis(1),
+        ..Default::default()
+    });
+    let mut rng = Rng::new(6);
+    match one_request(&server, img, &mut rng) {
+        Err(ServeError::BackendFailed(msg)) => {
+            assert!(msg.contains("panicked"), "{msg}")
+        }
+        other => panic!("expected contained panic, got {other:?}"),
+    }
+    // The worker that contained the panic still serves (slot recovered,
+    // thread alive): a second request gets a real answer too.
+    assert!(one_request(&server, img, &mut rng).is_err());
+    server.stop();
+}
+
+#[test]
+fn garbage_logits_are_rejected_not_served() {
+    // garbage_prob 1.0 corrupts every batch after the inner run (NaN fill
+    // on even batch indices, truncation on odd): output validation must
+    // turn both into BackendFailed — never Ok logits with NaN inside.
+    let spec = FaultSpec { seed: 7, garbage_prob: 1.0, ..FaultSpec::default() };
+    let (server, img) = faulty_server("fig", spec, ServeConfig {
+        workers: 1,
+        max_wait: Duration::from_millis(1),
+        ..Default::default()
+    });
+    let mut rng = Rng::new(8);
+    for _ in 0..2 {
+        match one_request(&server, img, &mut rng) {
+            Err(ServeError::BackendFailed(msg)) => assert!(
+                msg.contains("non-finite") || msg.contains("malformed"),
+                "{msg}"
+            ),
+            other => panic!("garbage must not be served: {other:?}"),
+        }
+    }
+    server.stop();
+}
+
+#[test]
+fn stall_trips_the_watchdog_and_slots_recover() {
+    // Every batch stalls 2s; the 50ms watchdog must abandon it, answer
+    // Timeout, and release the queue slot — at queue_depth 1, a follow-up
+    // request still being *admitted* (Timeout, not QueueFull) proves the
+    // slot accounting recovered from the abandoned execution.
+    let spec =
+        FaultSpec { seed: 9, stall_prob: 1.0, stall_ms: 2_000, ..FaultSpec::default() };
+    let (server, img) = faulty_server("fis", spec, ServeConfig {
+        workers: 1,
+        max_wait: Duration::from_millis(1),
+        queue_depth: 1,
+        execute_deadline: Some(Duration::from_millis(50)),
+        ..Default::default()
+    });
+    let mut rng = Rng::new(10);
+    for round in 0..2 {
+        match one_request(&server, img, &mut rng) {
+            Err(ServeError::Timeout { deadline_ms }) => assert_eq!(deadline_ms, 50),
+            other => panic!("round {round}: expected Timeout, got {other:?}"),
+        }
+    }
+    let metrics = server.stop();
+    assert_eq!(ilmpq::coordinator::Metrics::get(&metrics.requests_timeout), 2);
+    assert_eq!(ilmpq::coordinator::Metrics::get(&metrics.batches_timeout), 2);
+}
+
+#[test]
+fn fault_spec_loads_from_json_file() {
+    let dir = std::env::temp_dir().join("ilmpq_fault_spec");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("spec.json");
+    std::fs::write(&path, FaultSpec::chaos(17).to_json().to_string_compact()).unwrap();
+    let loaded = FaultSpec::load(&path).unwrap();
+    assert_eq!(loaded, FaultSpec::chaos(17));
+    // A spec that fails validation is rejected at load time.
+    let bad = FaultSpec { panic_prob: 2.0, ..FaultSpec::default() };
+    std::fs::write(&path, bad.to_json().to_string_compact()).unwrap();
+    assert!(FaultSpec::load(&path).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn faulty_registry_key_builds_the_wrapped_fixture() {
+    // `--backend faulty:qgemm` flows through the same fixture recipe as any
+    // other registry name (chaos schedule by default).
+    let (_m, be, _plan) = loadgen::synth_fixture("faulty:qgemm", "frk", Some(1), 43).unwrap();
+    assert_eq!(be.name(), "faulty:qgemm");
 }
 
 #[test]

@@ -399,9 +399,14 @@ fn draining_server_maps_to_503_while_http_stays_up() {
     let j = Json::parse(&body).unwrap();
     assert_eq!(j.get("kind").and_then(Json::as_str), Some("shutting_down"));
 
-    // healthz still answers during the drain.
-    let (code, _) = client.request("GET", "/v1/healthz", None).unwrap();
-    assert_eq!(code, 200);
+    // healthz still answers during the drain (liveness), but reports
+    // not-ready with a 503 so load balancers stop routing here.
+    let (code, hbody) = client.request("GET", "/v1/healthz", None).unwrap();
+    assert_eq!(code, 503, "{hbody}");
+    let h = Json::parse(&hbody).unwrap();
+    assert_eq!(h.get("live"), Some(&Json::Bool(true)), "{hbody}");
+    assert_eq!(h.get("ready"), Some(&Json::Bool(false)), "{hbody}");
+    assert_eq!(h.get("draining"), Some(&Json::Bool(true)), "{hbody}");
     front.stop();
 }
 
@@ -559,11 +564,15 @@ fn remote_loadgen_reproduces_outcome_classes_over_the_wire() {
         rate: 0.0, // unpaced
         malformed_frac: 0.5,
         seed: 11,
+        ..Default::default()
     };
     let (r, server_metrics) = loadgen::run_remote(&url, &spec, 3).unwrap();
     assert_eq!(r.lost, 0, "typed pipeline over the wire must answer every request");
     assert_eq!(r.slow, 0, "tiny run must drain inside the deadline");
-    assert_eq!(r.done + r.invalid + r.shed + r.failed + r.shutdown, r.requests);
+    assert_eq!(
+        r.done + r.invalid + r.shed + r.failed + r.shutdown + r.timeout + r.unavailable,
+        r.requests
+    );
     assert!(r.done > 0, "{r:?}");
     assert!(r.invalid > 0, "malformed_frac must produce 400s: {r:?}");
     assert!(r.goodput_rps > 0.0);
