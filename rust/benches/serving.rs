@@ -22,9 +22,12 @@
 //!     [-- --rates 500,2000,8000 --requests 512 --queue-depth 256 --skip-wire]
 //! ```
 
+use std::sync::Arc;
 use std::time::Duration;
 
-use ilmpq::coordinator::{loadgen, HttpConfig, HttpServer, ServeConfig, Server};
+use ilmpq::coordinator::{
+    loadgen, HttpConfig, HttpServer, ServeConfig, Server, ServerPool,
+};
 use ilmpq::util::{Args, Json};
 
 fn main() -> anyhow::Result<()> {
@@ -167,6 +170,52 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // Multi-model point: the built-in two-model synthetic pool behind one
+    // listener, the multi scenario skewing 80/20 toward the default model —
+    // what one process serving several (network, plan) pairs costs on the
+    // wire, next to the single-model sweep above.
+    let mut multi_point = Json::Null;
+    if !a.flag("skip-wire") {
+        let rate = rates.first().copied().unwrap_or(500.0);
+        println!(
+            "\n== multi-model pool over the same front end (two synthetic \
+             models, 80/20 default-model skew, rate {rate:.0} req/s) =="
+        );
+        let pool = ServerPool::synthetic_pair(seed)?;
+        let front = HttpServer::start_pool(
+            Arc::new(pool),
+            HttpConfig {
+                addr: "127.0.0.1:0".into(),
+                workers: http_workers,
+                ..Default::default()
+            },
+        )?;
+        let url = format!("http://{}", front.local_addr());
+        let spec = loadgen::LoadSpec {
+            requests,
+            rate,
+            seed,
+            scenario: loadgen::Scenario::Multi,
+            ..Default::default()
+        };
+        let (report, _metrics) = loadgen::run_remote(&url, &spec, conns)?;
+        front.stop();
+        assert_eq!(report.lost, 0, "pool front end must answer every request");
+        for m in &report.models {
+            println!(
+                "model {:>8}: offered {:>4} done {:>4} failed {:>3}, \
+                 e2e p50 {:>8.3} ms p99 {:>8.3} ms",
+                m.model,
+                m.offered,
+                m.done,
+                m.failed,
+                m.e2e.p50 * 1e3,
+                m.e2e.p99 * 1e3,
+            );
+        }
+        multi_point = report.to_json();
+    }
+
     let doc = Json::obj(vec![
         ("bench", Json::Str("serving".into())),
         ("status", Json::Str("measured".into())),
@@ -204,6 +253,21 @@ fn main() -> anyhow::Result<()> {
                     ),
                 ),
                 ("points", Json::Arr(wire_points)),
+            ]),
+        ),
+        (
+            "multi_model",
+            Json::obj(vec![
+                (
+                    "workload",
+                    Json::Str(
+                        "two-model synthetic pool (tiny TinyResNet + narrow \
+                         VGG stack), 80/20 default-model skew over per-model \
+                         HTTP routes"
+                            .into(),
+                    ),
+                ),
+                ("point", multi_point),
             ]),
         ),
     ]);

@@ -43,7 +43,44 @@ pub fn tiny_manifest(
     }
     params.push(("fc/w".into(), vec![classes, prev]));
     params.push(("fc/b".into(), vec![classes]));
+    finish_manifest("tiny-synth", height, width, channels, widths, classes, params)
+}
 
+/// Hand-build a manifest for the narrow VGG-style plain stack
+/// ([`crate::model::zoo::vggnarrow`]): params `s{i}/conv/w` (3x3, HWIO),
+/// then `fc/w`/`fc/b` — no stem, no residual projections. The second
+/// geometry constructible end-to-end without artifacts.
+pub fn vgg_manifest(
+    height: usize,
+    width: usize,
+    channels: usize,
+    widths: &[usize],
+    classes: usize,
+) -> Manifest {
+    assert!(!widths.is_empty(), "need at least one stage width");
+    let mut params: Vec<(String, Vec<usize>)> = Vec::new();
+    let mut prev = channels;
+    for (si, &wch) in widths.iter().enumerate() {
+        params.push((format!("s{si}/conv/w"), vec![3, 3, prev, wch]));
+        prev = wch;
+    }
+    params.push(("fc/w".into(), vec![classes, prev]));
+    params.push(("fc/b".into(), vec![classes]));
+    finish_manifest("vggnarrow-synth", height, width, channels, widths, classes, params)
+}
+
+/// Shared manifest tail: derive `quantized_layers` from the `/w` params
+/// (2-D → (rows, fan-in); 4-D HWIO → (out_ch, kh*kw*in_ch)) and fill the
+/// empty artifact/data tables.
+fn finish_manifest(
+    model_name: &str,
+    height: usize,
+    width: usize,
+    channels: usize,
+    widths: &[usize],
+    classes: usize,
+    params: Vec<(String, Vec<usize>)>,
+) -> Manifest {
     let quantized_layers: Vec<(String, usize, usize)> = params
         .iter()
         .filter(|(n, _)| n.ends_with("/w"))
@@ -59,7 +96,7 @@ pub fn tiny_manifest(
 
     Manifest {
         dir: PathBuf::from("/nonexistent"),
-        model_name: "tiny-synth".into(),
+        model_name: model_name.into(),
         widths: widths.to_vec(),
         classes,
         height,
@@ -92,6 +129,25 @@ pub fn tiny_manifest(
 /// server actually runs.
 pub fn serving_manifest() -> Manifest {
     tiny_manifest(16, 16, 3, &[8, 16], 10)
+}
+
+/// The vggnarrow serving fixture at the same input geometry as
+/// [`serving_manifest`] (16x16x3 → 768 image elems, 10 classes), so a
+/// multi-model pool can mix both behind one load generator.
+pub fn vgg_serving_manifest() -> Manifest {
+    vgg_manifest(16, 16, 3, &[8, 16], 10)
+}
+
+/// Synthetic serving manifest by zoo geometry name — the pool-config
+/// `"synthetic"` knob resolves through this.
+pub fn serving_manifest_for(geometry: &str) -> anyhow::Result<Manifest> {
+    match geometry {
+        "tinyresnet" => Ok(serving_manifest()),
+        "vggnarrow" => Ok(vgg_serving_manifest()),
+        other => anyhow::bail!(
+            "unknown synthetic geometry {other:?} (expected tinyresnet or vggnarrow)"
+        ),
+    }
 }
 
 /// Random normal(0, 0.3) params for every manifest tensor, in order.
@@ -149,6 +205,26 @@ mod tests {
         for ((_, rows, _), l) in m.quantized_layers.iter().zip(&net.layers) {
             assert_eq!(*rows, l.rows(), "{}", l.name);
         }
+    }
+
+    #[test]
+    fn vgg_quantized_layers_match_zoo_network_order() {
+        let m = vgg_manifest(16, 16, 3, &[8, 16], 10);
+        let net = zoo::vggnarrow(16, 16, 3, &[8, 16], 10);
+        let manifest_names: Vec<&str> =
+            m.quantized_layers.iter().map(|(n, _, _)| n.as_str()).collect();
+        let net_names: Vec<&str> = net.layers.iter().map(|l| l.name.as_str()).collect();
+        assert_eq!(manifest_names, net_names);
+        for ((_, rows, _), l) in m.quantized_layers.iter().zip(&net.layers) {
+            assert_eq!(*rows, l.rows(), "{}", l.name);
+        }
+        assert_eq!(m.model_name, "vggnarrow-synth");
+        // Same wire geometry as the tiny fixture: one loadgen image size
+        // drives both pool models.
+        let tiny = serving_manifest();
+        assert_eq!(m.data.image_elems(), tiny.data.image_elems());
+        assert_eq!(serving_manifest_for("vggnarrow").unwrap().model_name, "vggnarrow-synth");
+        assert!(serving_manifest_for("resnet18").is_err());
     }
 
     #[test]

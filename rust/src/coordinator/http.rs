@@ -16,6 +16,10 @@
 //!                                       admission pipeline (server.rs)
 //! ```
 //!
+//! The front end serves a [`ServerPool`] — one or many named models. The
+//! single-model `start` wraps its `Server` as a one-entry pool, so both
+//! modes share one routing table.
+//!
 //! Routes:
 //!
 //! * `POST /v1/infer` with body `{"image": [f32, ...]}` → `200` with
@@ -37,6 +41,20 @@
 //!   [`crate::quant::QuantPlan::summary_json`]), so monitoring can see
 //!   exactly which precision configuration is serving; `404` when the
 //!   server runs unquantized.
+//! * `GET /v1/models` → the pool registry listing (per-model plan name,
+//!   provenance, breaker/readiness state, queue depth).
+//! * `POST /v1/models/{name}/infer`, `GET /v1/models/{name}/
+//!   {healthz,metrics,plan}` — the per-model forms of the routes above. An
+//!   unknown `{name}` answers `404` with kind `unknown_model` *and the list
+//!   of served models* (the registry UX contract).
+//! * `POST /v1/models/{name}/plan` — **live plan hot-swap**: the body is a
+//!   [`QuantPlan`] JSON document; it is validated against the model's
+//!   manifest (`400` kind `invalid_plan` on any mismatch, old plan keeps
+//!   serving), re-packed off the serving path, and traffic is swung
+//!   atomically with zero lost replies ([`PoolEntry::swap_plan`]).
+//!
+//! The bare `/v1/*` routes always map onto the pool's *default* model, so
+//! single-model clients work unchanged against a pool.
 //!
 //! Protocol scope (documented, not accidental): HTTP/1.1 with
 //! `Content-Length` bodies and keep-alive, `Expect: 100-continue`
@@ -59,7 +77,9 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use super::metrics::Metrics;
+use super::pool::{PoolEntry, ServerPool};
 use super::server::{ServeError, Server};
+use crate::quant::QuantPlan;
 use crate::runtime::Manifest;
 use crate::util::Json;
 
@@ -117,19 +137,16 @@ impl Default for HttpConfig {
     }
 }
 
-/// Model geometry advertised on `/v1/healthz` (and used to size the
-/// expected request) — captured from the manifest at start.
-struct ModelInfo {
-    model: String,
-    image_elems: usize,
-    classes: usize,
-}
-
-/// Handle to a running HTTP front end. Owns the [`Server`] behind it:
+/// Handle to a running HTTP front end. Owns the [`ServerPool`] behind it:
 /// [`HttpServer::stop`] tears down the network side first (no new
-/// submissions), then gracefully stops the admission pipeline.
+/// submissions), then gracefully stops every admission pipeline.
 pub struct HttpServer {
-    server: Option<Arc<Server>>,
+    pool: Option<Arc<ServerPool>>,
+    /// Single-model mode only: the same `Arc<Server>` the pool's lone entry
+    /// wraps, kept so [`HttpServer::server`] can hand out `&Server` for
+    /// direct pipeline access. Dropped before the pool unwinds in teardown
+    /// so the entry can unwrap and join it.
+    single: Option<Arc<Server>>,
     local_addr: SocketAddr,
     shutdown: Arc<AtomicBool>,
     accept: Option<JoinHandle<()>>,
@@ -137,31 +154,40 @@ pub struct HttpServer {
 }
 
 impl HttpServer {
-    /// Bind `cfg.addr` and start the accept + handler threads over a
-    /// running `server`. `manifest` supplies the geometry advertised on
-    /// `/v1/healthz`.
+    /// Bind `cfg.addr` and start the accept + handler threads over one
+    /// running `server` (wrapped as a single-entry pool). `manifest`
+    /// supplies the geometry advertised on `/v1/healthz`.
     pub fn start(server: Server, manifest: &Manifest, cfg: HttpConfig) -> Result<HttpServer> {
+        let server = Arc::new(server);
+        let pool = Arc::new(ServerPool::single(server.clone(), manifest));
+        Self::start_inner(pool, Some(server), cfg)
+    }
+
+    /// Bind `cfg.addr` and start the accept + handler threads over a
+    /// multi-model pool (`ilmpq serve --pool`).
+    pub fn start_pool(pool: Arc<ServerPool>, cfg: HttpConfig) -> Result<HttpServer> {
+        Self::start_inner(pool, None, cfg)
+    }
+
+    fn start_inner(
+        pool: Arc<ServerPool>,
+        single: Option<Arc<Server>>,
+        cfg: HttpConfig,
+    ) -> Result<HttpServer> {
         let listener = TcpListener::bind(&cfg.addr)
             .map_err(|e| anyhow::anyhow!("bind {}: {e}", cfg.addr))?;
         let local_addr = listener.local_addr()?;
-        let server = Arc::new(server);
         let shutdown = Arc::new(AtomicBool::new(false));
-        let info = Arc::new(ModelInfo {
-            model: manifest.model_name.clone(),
-            image_elems: manifest.data.image_elems(),
-            classes: manifest.classes,
-        });
         let cfg = Arc::new(cfg);
 
         let (conn_tx, conn_rx) = channel::<TcpStream>();
         let conn_rx = Arc::new(Mutex::new(conn_rx));
         let mut handlers = Vec::new();
         for _ in 0..cfg.workers.max(1) {
-            let server = server.clone();
+            let pool = pool.clone();
             let shutdown = shutdown.clone();
             let conn_rx = conn_rx.clone();
             let cfg = cfg.clone();
-            let info = info.clone();
             handlers.push(std::thread::spawn(move || loop {
                 // Shared-receiver pool, same shape as the batch workers in
                 // server.rs: holding the mutex across recv is the handoff.
@@ -170,7 +196,7 @@ impl HttpServer {
                     rx.recv()
                 };
                 match stream {
-                    Ok(s) => handle_connection(&server, &info, &cfg, &shutdown, s),
+                    Ok(s) => handle_connection(&pool, &cfg, &shutdown, s),
                     Err(_) => return, // accept thread gone: no more work
                 }
             }));
@@ -204,7 +230,8 @@ impl HttpServer {
         };
 
         Ok(HttpServer {
-            server: Some(server),
+            pool: Some(pool),
+            single,
             local_addr,
             shutdown,
             accept: Some(accept),
@@ -217,11 +244,19 @@ impl HttpServer {
         self.local_addr
     }
 
-    /// The admission pipeline behind this front end (e.g. to
+    /// The admission pipeline behind a *single-model* front end (e.g. to
     /// [`Server::begin_shutdown`] it and watch 503s flow while the HTTP
-    /// side stays up).
+    /// side stays up). Panics in pool mode, where no one `Server` is "the"
+    /// pipeline — go through [`HttpServer::pool`] instead.
     pub fn server(&self) -> &Server {
-        self.server.as_ref().expect("server present until stop()")
+        self.single
+            .as_ref()
+            .expect("single-model front end (pool mode has no default &Server)")
+    }
+
+    /// The model pool behind this front end.
+    pub fn pool(&self) -> &Arc<ServerPool> {
+        self.pool.as_ref().expect("pool present until stop()")
     }
 
     /// Block until the front end exits — the `ilmpq serve --listen`
@@ -241,9 +276,11 @@ impl HttpServer {
     }
 
     /// The shared teardown behind [`HttpServer::stop`] and `Drop`.
-    /// Idempotent: returns `None` when already torn down.
+    /// Idempotent: returns `None` when already torn down. Returns the
+    /// *default* model's metrics (the single-model contract; pool mode
+    /// keeps it for the headline model).
     fn teardown(&mut self) -> Option<Arc<Metrics>> {
-        let server = self.server.take()?;
+        let pool = self.pool.take()?;
         self.shutdown.store(true, Ordering::SeqCst);
         // The accept thread is parked in accept(): unblock it with a
         // throwaway connection to ourselves (it sees the flag and exits;
@@ -271,15 +308,11 @@ impl HttpServer {
         for h in self.handlers.drain(..) {
             let _ = h.join();
         }
-        Some(match Arc::try_unwrap(server) {
-            Ok(server) => server.stop(),
-            // Unreachable — every clone lived in the threads joined above —
-            // but a teardown path must never panic: degrade to a drain.
-            Err(server) => {
-                server.begin_shutdown();
-                server.metrics.clone()
-            }
-        })
+        // Drop the single-model alias *before* the pool shuts down, so the
+        // lone entry holds the only `Arc<Server>` and can unwrap-and-join
+        // it (graceful stop) rather than degrade to a drain.
+        self.single = None;
+        Some(pool.shutdown())
     }
 }
 
@@ -494,8 +527,7 @@ fn find_subsequence(haystack: &[u8], needle: &[u8]) -> Option<usize> {
 }
 
 fn handle_connection(
-    server: &Server,
-    info: &ModelInfo,
+    pool: &ServerPool,
     cfg: &HttpConfig,
     shutdown: &AtomicBool,
     stream: TcpStream,
@@ -512,7 +544,7 @@ fn handle_connection(
         match conn.read_request(cfg.max_body, cfg.request_timeout) {
             ReadOutcome::Request(req) => {
                 let keep = req.keep_alive && !shutdown.load(Ordering::SeqCst);
-                let (status, body) = route(server, info, cfg, &req);
+                let (status, body) = route(pool, cfg, &req);
                 if write_response(&mut conn.stream, status, &body, keep).is_err() || !keep {
                     return;
                 }
@@ -570,48 +602,21 @@ fn err_body(msg: &str, kind: &str) -> String {
     .to_string_compact()
 }
 
-fn route(server: &Server, info: &ModelInfo, cfg: &HttpConfig, req: &HttpRequest) -> (u16, String) {
+fn route(pool: &ServerPool, cfg: &HttpConfig, req: &HttpRequest) -> (u16, String) {
+    // Per-model routes first; everything else falls through to the legacy
+    // bare `/v1/*` routes against the pool's default model.
+    if let Some(rest) = req.path.strip_prefix("/v1/models/") {
+        return route_model(pool, cfg, req, rest);
+    }
     match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/v1/healthz") => {
-            // Liveness-vs-readiness split: this endpoint always answers
-            // (liveness — the front end is up), but the status code tracks
-            // *readiness* — 503 while the circuit breaker is open/half-open
-            // or the server is draining, so load balancers stop routing
-            // here while the body still explains why.
-            let ready = server.is_ready();
-            (
-                if ready { 200 } else { 503 },
-                Json::obj(vec![
-                    ("status", Json::Str(if ready { "ok" } else { "unavailable" }.into())),
-                    ("live", Json::Bool(true)),
-                    ("ready", Json::Bool(ready)),
-                    ("breaker", Json::Str(server.breaker_state().into())),
-                    ("degraded", Json::Bool(server.is_degraded())),
-                    ("draining", Json::Bool(server.is_shutting_down())),
-                    ("model", Json::Str(info.model.clone())),
-                    ("image_elems", Json::Num(info.image_elems as f64)),
-                    ("classes", Json::Num(info.classes as f64)),
-                    (
-                        "plan",
-                        match &server.plan {
-                            Some(p) => Json::Str(p.name.clone()),
-                            None => Json::Null,
-                        },
-                    ),
-                ])
-                .to_string_compact(),
-            )
+        ("GET", "/v1/models") => (200, pool.describe().to_string_compact()),
+        ("GET", "/v1/healthz") => healthz(pool.default_entry()),
+        ("GET", "/v1/metrics") => {
+            (200, pool.default_entry().metrics_json().to_string_compact())
         }
-        ("GET", "/v1/metrics") => (200, server.metrics.to_json().to_string_compact()),
-        ("GET", "/v1/plan") => match &server.plan {
-            Some(p) => (200, p.summary_json().to_string_compact()),
-            None => (
-                404,
-                err_body("no quantization plan active (unquantized serving)", "no_plan"),
-            ),
-        },
-        ("POST", "/v1/infer") => infer(server, cfg, &req.body),
-        (_, "/v1/healthz" | "/v1/metrics" | "/v1/infer" | "/v1/plan") => (
+        ("GET", "/v1/plan") => plan_endpoint(pool.default_entry()),
+        ("POST", "/v1/infer") => entry_infer(pool.default_entry(), cfg, &req.body),
+        (_, "/v1/healthz" | "/v1/metrics" | "/v1/infer" | "/v1/plan" | "/v1/models") => (
             405,
             err_body(
                 &format!("method {} not allowed on {}", req.method, req.path),
@@ -622,7 +627,151 @@ fn route(server: &Server, info: &ModelInfo, cfg: &HttpConfig, req: &HttpRequest)
     }
 }
 
-fn infer(server: &Server, cfg: &HttpConfig, body: &[u8]) -> (u16, String) {
+/// Routes under `/v1/models/{name}[/endpoint]`. An unknown model name
+/// answers `404` with the list of served models — the registry's UX
+/// contract, pinned by `tests/pool_smoke.rs`.
+fn route_model(
+    pool: &ServerPool,
+    cfg: &HttpConfig,
+    req: &HttpRequest,
+    rest: &str,
+) -> (u16, String) {
+    let (name, endpoint) = match rest.split_once('/') {
+        Some((n, e)) => (n, Some(e)),
+        None => (rest, None),
+    };
+    let Some(entry) = pool.entry(name) else {
+        return (
+            404,
+            Json::obj(vec![
+                ("error", Json::Str(format!("unknown model {name:?}"))),
+                ("kind", Json::Str("unknown_model".into())),
+                (
+                    "models",
+                    Json::Arr(pool.names().into_iter().map(Json::Str).collect()),
+                ),
+            ])
+            .to_string_compact(),
+        );
+    };
+    match (req.method.as_str(), endpoint) {
+        ("POST", Some("infer")) => entry_infer(entry, cfg, &req.body),
+        ("POST", Some("plan")) => swap_plan_route(entry, &req.body),
+        ("GET", Some("healthz")) => healthz(entry),
+        ("GET", Some("metrics")) => (200, entry.metrics_json().to_string_compact()),
+        ("GET", Some("plan")) => plan_endpoint(entry),
+        ("GET", None) => (200, entry.describe().to_string_compact()),
+        (_, None | Some("infer" | "healthz" | "metrics" | "plan")) => (
+            405,
+            err_body(
+                &format!("method {} not allowed on {}", req.method, req.path),
+                "method_not_allowed",
+            ),
+        ),
+        (_, Some(e)) => (
+            404,
+            err_body(&format!("unknown model endpoint {e:?}"), "not_found"),
+        ),
+    }
+}
+
+fn healthz(entry: &PoolEntry) -> (u16, String) {
+    // Liveness-vs-readiness split: this endpoint always answers
+    // (liveness — the front end is up), but the status code tracks
+    // *readiness* — 503 while the circuit breaker is open/half-open
+    // or the server is draining, so load balancers stop routing
+    // here while the body still explains why. A cold entry reads
+    // ready: it lazily prepares on the first request.
+    let h = entry.health();
+    (
+        if h.ready { 200 } else { 503 },
+        Json::obj(vec![
+            ("status", Json::Str(if h.ready { "ok" } else { "unavailable" }.into())),
+            ("live", Json::Bool(true)),
+            ("ready", Json::Bool(h.ready)),
+            ("breaker", Json::Str(h.breaker.into())),
+            ("degraded", Json::Bool(h.degraded)),
+            ("draining", Json::Bool(h.draining)),
+            ("model", Json::Str(entry.manifest().model_name.clone())),
+            ("image_elems", Json::Num(entry.image_elems() as f64)),
+            ("classes", Json::Num(entry.classes() as f64)),
+            (
+                "plan",
+                match h.plan {
+                    Some(p) => Json::Str(p),
+                    None => Json::Null,
+                },
+            ),
+        ])
+        .to_string_compact(),
+    )
+}
+
+fn plan_endpoint(entry: &PoolEntry) -> (u16, String) {
+    match entry.plan_summary() {
+        Some(s) => (200, s.to_string_compact()),
+        None => (
+            404,
+            err_body("no quantization plan active (unquantized serving)", "no_plan"),
+        ),
+    }
+}
+
+/// `POST /v1/models/{name}/plan` — the live hot-swap endpoint. Any parse
+/// or validation failure answers `400` with the old plan untouched and
+/// still serving; only a validated plan reaches [`PoolEntry::swap_plan`].
+fn swap_plan_route(entry: &PoolEntry, body: &[u8]) -> (u16, String) {
+    let text = match std::str::from_utf8(body) {
+        Ok(t) => t,
+        Err(_) => return (400, err_body("body is not UTF-8", "invalid_plan")),
+    };
+    let json = match Json::parse(text) {
+        Ok(j) => j,
+        Err(e) => {
+            return (400, err_body(&format!("body is not JSON: {e}"), "invalid_plan"))
+        }
+    };
+    let plan = match QuantPlan::from_json(&json) {
+        Ok(p) => p,
+        Err(e) => {
+            return (
+                400,
+                err_body(&format!("body is not a QuantPlan: {e:#}"), "invalid_plan"),
+            )
+        }
+    };
+    if let Err(e) = plan.validate(entry.manifest()) {
+        return (
+            400,
+            err_body(
+                &format!("plan does not fit model {:?}: {e:#}", entry.name()),
+                "invalid_plan",
+            ),
+        );
+    }
+    let plan_name = plan.name.clone();
+    match entry.swap_plan(plan) {
+        Ok(()) => (
+            200,
+            Json::obj(vec![
+                ("swapped", Json::Bool(true)),
+                ("model", Json::Str(entry.name().to_string())),
+                ("plan", Json::Str(plan_name)),
+                ("swaps", Json::Num(entry.swaps() as f64)),
+            ])
+            .to_string_compact(),
+        ),
+        Err(e) => (
+            500,
+            err_body(
+                &format!("swap failed ({e:#}); the previous plan keeps serving"),
+                "swap_failed",
+            ),
+        ),
+    }
+}
+
+fn entry_infer(entry: &PoolEntry, cfg: &HttpConfig, body: &[u8]) -> (u16, String) {
     let text = match std::str::from_utf8(body) {
         Ok(t) => t,
         Err(_) => return (400, err_body("body is not UTF-8", "bad_request")),
@@ -651,7 +800,14 @@ fn infer(server: &Server, cfg: &HttpConfig, body: &[u8]) -> (u16, String) {
             }
         }
     }
-    let rx = server.submit(image);
+    let rx = match entry.submit(image) {
+        // Lazy prepare can fail (a backend that won't pack): that is the
+        // entry failing to start, not a request-level ServeError.
+        Ok(rx) => rx,
+        Err(e) => {
+            return (500, err_body(&format!("model failed to start: {e:#}"), "start_failed"))
+        }
+    };
     match rx.recv_timeout(cfg.reply_timeout) {
         Ok(Ok(resp)) => (
             200,

@@ -74,6 +74,12 @@ pub enum Scenario {
     /// CLI defaults `malformed_frac`/`poison_frac` up when this scenario
     /// is chosen without explicit fractions.
     Chaos,
+    /// Steady arrivals fanned across the models of a pool front end
+    /// (remote runs only): each request picks a model by weight — from
+    /// [`LoadSpec::model_weights`], or the default 80/20 skew toward the
+    /// pool's default model — and posts to its per-model route. Per-model
+    /// outcomes land in [`LoadReport::models`].
+    Multi,
 }
 
 impl Scenario {
@@ -83,8 +89,9 @@ impl Scenario {
             "steady" => Ok(Scenario::Steady),
             "burst" => Ok(Scenario::Burst),
             "chaos" => Ok(Scenario::Chaos),
+            "multi" => Ok(Scenario::Multi),
             other => anyhow::bail!(
-                "unknown scenario {other:?} (expected steady, burst, or chaos)"
+                "unknown scenario {other:?} (expected steady, burst, chaos, or multi)"
             ),
         }
     }
@@ -94,6 +101,7 @@ impl Scenario {
             Scenario::Steady => "steady",
             Scenario::Burst => "burst",
             Scenario::Chaos => "chaos",
+            Scenario::Multi => "multi",
         }
     }
 }
@@ -119,6 +127,10 @@ pub struct LoadSpec {
     pub scenario: Scenario,
     /// RNG seed for arrivals + images.
     pub seed: u64,
+    /// [`Scenario::Multi`] only: explicit `(model, weight)` traffic mix.
+    /// Empty means "discover the pool and skew 80/20 toward its default
+    /// model". Weights are relative (they need not sum to 1).
+    pub model_weights: Vec<(String, f64)>,
 }
 
 impl Default for LoadSpec {
@@ -130,8 +142,40 @@ impl Default for LoadSpec {
             poison_frac: 0.0,
             scenario: Scenario::Steady,
             seed: 42,
+            model_weights: Vec::new(),
         }
     }
+}
+
+/// Parse a `--models name:weight,name:weight` traffic-mix argument.
+pub fn parse_model_weights(s: &str) -> Result<Vec<(String, f64)>> {
+    let mut out: Vec<(String, f64)> = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (name, w) = part
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("model weight {part:?} is not name:weight"))?;
+        let name = name.trim();
+        anyhow::ensure!(!name.is_empty(), "model weight {part:?} has an empty name");
+        let w: f64 = w
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("model weight {part:?}: non-numeric weight"))?;
+        anyhow::ensure!(
+            w.is_finite() && w > 0.0,
+            "model weight {part:?} must be positive and finite"
+        );
+        anyhow::ensure!(
+            out.iter().all(|(n, _)| n != name),
+            "model {name:?} appears twice in the weights"
+        );
+        out.push((name.to_string(), w));
+    }
+    anyhow::ensure!(!out.is_empty(), "--models got no name:weight entries");
+    Ok(out)
 }
 
 /// Outcome of one run: client-observed reply counts + server-side
@@ -187,6 +231,35 @@ pub struct LoadReport {
     pub client_rtt: Summary,
     pub occupancy: f64,
     pub shed_rate: f64,
+    /// [`Scenario::Multi`] remote runs only (empty otherwise): per-model
+    /// outcome rows, in pool-listing order.
+    pub models: Vec<ModelOutcome>,
+}
+
+/// Per-model slice of a multi-model run: what the mixer offered this model
+/// and how it answered. `offered == done + failed` (failed folds in every
+/// non-200 outcome, client-side overflow, and deadline skips), so lost
+/// traffic can never hide between models.
+#[derive(Debug, Clone)]
+pub struct ModelOutcome {
+    pub model: String,
+    pub offered: usize,
+    pub done: usize,
+    pub failed: usize,
+    /// Server-reported e2e latency for this model's 200s.
+    pub e2e: Summary,
+}
+
+impl ModelOutcome {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("offered", Json::Num(self.offered as f64)),
+            ("done", Json::Num(self.done as f64)),
+            ("failed", Json::Num(self.failed as f64)),
+            ("e2e", self.e2e.to_json()),
+        ])
+    }
 }
 
 /// One workload image for the next request — the *single* generator shared
@@ -218,7 +291,7 @@ fn inter_arrival(rng: &mut Rng, spec: &LoadSpec, t0: Instant) -> Option<Duration
         return None;
     }
     match spec.scenario {
-        Scenario::Steady | Scenario::Chaos => {
+        Scenario::Steady | Scenario::Chaos | Scenario::Multi => {
             Some(Duration::from_secs_f64(rng.exp(spec.rate)))
         }
         Scenario::Burst => {
@@ -305,6 +378,7 @@ pub fn run(
         client_rtt: Summary::of(&[]),
         occupancy: metrics.batch_occupancy(),
         shed_rate: metrics.shed_rate(),
+        models: Vec::new(),
     };
     (report, metrics)
 }
@@ -317,12 +391,19 @@ impl LoadReport {
         } else {
             String::new()
         };
+        let mut per_model = String::new();
+        for m in &self.models {
+            per_model.push_str(&format!(
+                "\nmodel {}: offered={} done={} failed={}, e2e {}",
+                m.model, m.offered, m.done, m.failed, m.e2e
+            ));
+        }
         format!(
             "offered {:.0} req/s (achieved {:.0}), {} requests in {:.2}s\n\
              outcomes: done={} invalid={} shed={} failed={} shutdown={} \
              timeout={} unavailable={} slow={} lost={}\n\
              goodput {:.0} req/s, occupancy {:.1}%, shed rate {:.1}%\n\
-             e2e:        {}\nqueue_wait: {}{}",
+             e2e:        {}\nqueue_wait: {}{}{}",
             self.offered_rate,
             self.achieved_rate,
             self.requests,
@@ -342,6 +423,7 @@ impl LoadReport {
             self.e2e,
             self.queue_wait,
             rtt,
+            per_model,
         )
     }
 
@@ -367,6 +449,10 @@ impl LoadReport {
             ("e2e", self.e2e.to_json()),
             ("queue_wait", self.queue_wait.to_json()),
             ("client_rtt", self.client_rtt.to_json()),
+            (
+                "models",
+                Json::Arr(self.models.iter().map(ModelOutcome::to_json).collect()),
+            ),
         ])
     }
 }
@@ -375,6 +461,28 @@ impl LoadReport {
 struct WireJob {
     body: String,
     queued: Instant,
+    /// Route to POST to (`/v1/infer`, or a per-model pool route).
+    path: String,
+    /// Index into the run's model-target list (0 for single-model runs).
+    model: usize,
+}
+
+/// One model a remote run routes traffic to. Single-model runs have
+/// exactly one (the bare `/v1/infer` route at weight 1); `multi` runs
+/// discover the pool's registry.
+struct ModelTarget {
+    name: String,
+    path: String,
+    img: usize,
+    weight: f64,
+}
+
+/// Per-model slice of a [`WireTally`].
+#[derive(Default, Clone)]
+struct ModelAgg {
+    done: usize,
+    failed: usize,
+    e2e: Vec<f64>,
 }
 
 /// Per-connection tallies, merged into the final [`LoadReport`].
@@ -396,6 +504,8 @@ struct WireTally {
     /// Client-observed dispatch→response round-trip (includes client-side
     /// connection queueing).
     rtt: Vec<f64>,
+    /// Per-model outcome slices, indexed like the run's target list.
+    models: Vec<ModelAgg>,
 }
 
 /// The `kind` discriminator from a typed-error reply body (the wire form
@@ -409,6 +519,23 @@ fn body_kind(body: &str) -> Option<String> {
 }
 
 fn classify_wire(tally: &mut WireTally, job: &WireJob, result: std::io::Result<(u16, String)>) {
+    // Per-model ledger first: a 200 is this model's `done`, everything
+    // else (any other status, any transport failure) its `failed` — so
+    // each model's offered count reconciles exactly.
+    {
+        let agg = &mut tally.models[job.model];
+        match &result {
+            Ok((200, body)) => {
+                agg.done += 1;
+                if let Ok(j) = Json::parse(body) {
+                    if let Some(e) = j.get("e2e_s").and_then(Json::as_f64) {
+                        agg.e2e.push(e);
+                    }
+                }
+            }
+            _ => agg.failed += 1,
+        }
+    }
     match result {
         Ok((200, body)) => {
             tally.done += 1;
@@ -460,30 +587,110 @@ fn classify_wire(tally: &mut WireTally, job: &WireJob, result: std::io::Result<(
     }
 }
 
+/// `multi`-scenario target discovery: `GET /v1/models`, then weight the
+/// listed models from `spec.model_weights` (every named model must exist;
+/// unnamed models get no traffic) or, with no explicit weights, skew 80%
+/// onto the pool's default model and split the rest evenly.
+fn discover_models(target: &HttpTarget, url: &str, spec: &LoadSpec) -> Result<Vec<ModelTarget>> {
+    let (code, body) = {
+        let mut probe = HttpClient::connect(target, Duration::from_secs(10));
+        probe
+            .request("GET", "/v1/models", None)
+            .map_err(|e| anyhow::anyhow!("model discovery at {url} failed: {e}"))?
+    };
+    anyhow::ensure!(code == 200, "/v1/models at {url} returned {code}: {body}");
+    let j = Json::parse(&body)
+        .map_err(|e| anyhow::anyhow!("/v1/models at {url} returned non-JSON: {e}"))?;
+    let default = j.get("default").and_then(Json::as_str).unwrap_or("").to_string();
+    let listed = j
+        .get("models")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("/v1/models response lacks a models array: {body}"))?;
+    let mut targets = Vec::new();
+    for m in listed {
+        let name = m
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("model row lacks a name: {body}"))?
+            .to_string();
+        let img = m
+            .get("image_elems")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("model {name:?} row lacks image_elems"))?;
+        targets.push(ModelTarget {
+            path: format!("/v1/models/{name}/infer"),
+            name,
+            img,
+            weight: 0.0,
+        });
+    }
+    anyhow::ensure!(!targets.is_empty(), "the pool at {url} serves no models");
+    if spec.model_weights.is_empty() {
+        let di = targets.iter().position(|t| t.name == default).unwrap_or(0);
+        let rest = (targets.len() - 1) as f64;
+        for (i, t) in targets.iter_mut().enumerate() {
+            t.weight = if i == di {
+                if rest > 0.0 { 0.8 } else { 1.0 }
+            } else {
+                0.2 / rest
+            };
+        }
+    } else {
+        for (name, w) in &spec.model_weights {
+            let t = targets.iter_mut().find(|t| &t.name == name).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "--models names {name:?}, which the pool does not serve \
+                     (it serves: {})",
+                    targets.iter().map(|t| t.name.as_str()).collect::<Vec<_>>().join(", ")
+                )
+            })?;
+            t.weight = *w;
+        }
+        targets.retain(|t| t.weight > 0.0);
+    }
+    Ok(targets)
+}
+
 /// Drive a remote `ilmpq serve --listen` front end at `url` with the same
 /// open-loop Poisson workload as [`run`], over `conns` keep-alive client
 /// connections. Returns the client-side report plus the server's final
 /// `/v1/metrics` snapshot (`Json::Null` when unavailable) — occupancy and
 /// shed rate in the report come from that snapshot, so they are cumulative
 /// over the *server's* lifetime, not just this run.
+///
+/// Under [`Scenario::Multi`] the run discovers the pool's registry, fans
+/// requests across per-model routes by weight, and reports per-model
+/// outcome rows in [`LoadReport::models`].
 pub fn run_remote(url: &str, spec: &LoadSpec, conns: usize) -> Result<(LoadReport, Json)> {
     let target = HttpTarget::parse(url)?;
-    // Probe the front end: liveness + the model geometry to generate for.
-    // Scoped so the probe's keep-alive connection closes before the run —
-    // an idle connection pins one of the server's handler threads.
-    let (code, body) = {
-        let mut probe = HttpClient::connect(&target, Duration::from_secs(10));
-        probe
-            .request("GET", "/v1/healthz", None)
-            .map_err(|e| anyhow::anyhow!("healthz probe of {url} failed: {e}"))?
+    let targets: Vec<ModelTarget> = if spec.scenario == Scenario::Multi {
+        discover_models(&target, url, spec)?
+    } else {
+        // Probe the front end: liveness + the model geometry to generate
+        // for. Scoped so the probe's keep-alive connection closes before
+        // the run — an idle connection pins one of the server's handler
+        // threads.
+        let (code, body) = {
+            let mut probe = HttpClient::connect(&target, Duration::from_secs(10));
+            probe
+                .request("GET", "/v1/healthz", None)
+                .map_err(|e| anyhow::anyhow!("healthz probe of {url} failed: {e}"))?
+        };
+        anyhow::ensure!(code == 200, "healthz at {url} returned {code}: {body}");
+        let health = Json::parse(&body)
+            .map_err(|e| anyhow::anyhow!("healthz at {url} returned non-JSON: {e}"))?;
+        let img = health
+            .get("image_elems")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("healthz response lacks image_elems: {body}"))?;
+        vec![ModelTarget {
+            name: String::new(),
+            path: "/v1/infer".into(),
+            img,
+            weight: 1.0,
+        }]
     };
-    anyhow::ensure!(code == 200, "healthz at {url} returned {code}: {body}");
-    let health = Json::parse(&body)
-        .map_err(|e| anyhow::anyhow!("healthz at {url} returned non-JSON: {e}"))?;
-    let img = health
-        .get("image_elems")
-        .and_then(Json::as_usize)
-        .ok_or_else(|| anyhow::anyhow!("healthz response lacks image_elems: {body}"))?;
+    let n_models = targets.len();
 
     // Run-wide give-up deadline, the wire twin of `run`'s 60s drain: the
     // paced submission phase plus 60 seconds of collection.
@@ -514,7 +721,10 @@ pub fn run_remote(url: &str, spec: &LoadSpec, conns: usize) -> Result<(LoadRepor
             let backlog_bytes = backlog_bytes.clone();
             std::thread::spawn(move || {
                 let mut client = HttpClient::connect(&target, Duration::from_secs(30));
-                let mut tally = WireTally::default();
+                let mut tally = WireTally {
+                    models: vec![ModelAgg::default(); n_models],
+                    ..Default::default()
+                };
                 loop {
                     let job = {
                         let rx = rx.lock().unwrap();
@@ -528,9 +738,10 @@ pub fn run_remote(url: &str, spec: &LoadSpec, conns: usize) -> Result<(LoadRepor
                         // count the backlog the same way `run` counts
                         // uncollected replies.
                         tally.slow += 1;
+                        tally.models[job.model].failed += 1;
                         continue;
                     }
-                    let result = client.request("POST", "/v1/infer", Some(&job.body));
+                    let result = client.request("POST", &job.path, Some(&job.body));
                     classify_wire(&mut tally, &job, result);
                 }
                 tally
@@ -539,10 +750,33 @@ pub fn run_remote(url: &str, spec: &LoadSpec, conns: usize) -> Result<(LoadRepor
         .collect();
 
     // Open-loop submission: Poisson arrivals, images from the same
-    // generator (and RNG stream) as the in-process `run`.
+    // generator (and RNG stream) as the in-process `run`. The model mixer
+    // draws from its *own* RNG stream, so a multi run's image/arrival
+    // sequence stays identical to a single-model run at the same seed.
     let mut rng = Rng::new(spec.seed);
+    let mut pick_rng = Rng::new(spec.seed ^ 0x706f_6f6c);
+    let total_weight: f64 = targets.iter().map(|t| t.weight).sum();
+    let mut offered = vec![0usize; n_models];
+    let mut overflow_by_model = vec![0usize; n_models];
     for _ in 0..spec.requests {
-        let image = gen_image(&mut rng, spec, img);
+        let ti = if n_models == 1 {
+            0
+        } else {
+            // Cumulative-weight pick; the final index catches the
+            // floating-point remainder.
+            let mut x = pick_rng.f64() * total_weight;
+            let mut idx = n_models - 1;
+            for (i, t) in targets.iter().enumerate() {
+                if x < t.weight {
+                    idx = i;
+                    break;
+                }
+                x -= t.weight;
+            }
+            idx
+        };
+        offered[ti] += 1;
+        let image = gen_image(&mut rng, spec, targets[ti].img);
         let body = Json::obj(vec![(
             "image",
             Json::Arr(image.iter().map(|&v| Json::Num(v as f64)).collect()),
@@ -557,13 +791,21 @@ pub fn run_remote(url: &str, spec: &LoadSpec, conns: usize) -> Result<(LoadRepor
             > MAX_BACKLOG_BYTES
         {
             overflow += 1;
+            overflow_by_model[ti] += 1;
         } else {
             backlog_bytes.fetch_add(len, std::sync::atomic::Ordering::Relaxed);
-            match tx.try_send(WireJob { body, queued: Instant::now() }) {
+            let job = WireJob {
+                body,
+                queued: Instant::now(),
+                path: targets[ti].path.clone(),
+                model: ti,
+            };
+            match tx.try_send(job) {
                 Ok(()) => {}
                 Err(TrySendError::Full(_) | TrySendError::Disconnected(_)) => {
                     backlog_bytes.fetch_sub(len, std::sync::atomic::Ordering::Relaxed);
                     overflow += 1;
+                    overflow_by_model[ti] += 1;
                 }
             }
         }
@@ -575,7 +817,11 @@ pub fn run_remote(url: &str, spec: &LoadSpec, conns: usize) -> Result<(LoadRepor
     drop(tx); // workers drain the queue and exit
     // Client-side overflow folds into `slow` (requests offered but never
     // delivered inside the run's budget).
-    let mut t = WireTally { slow: overflow, ..Default::default() };
+    let mut t = WireTally {
+        slow: overflow,
+        models: vec![ModelAgg::default(); n_models],
+        ..Default::default()
+    };
     for w in workers {
         if let Ok(wt) = w.join() {
             t.done += wt.done;
@@ -590,6 +836,11 @@ pub fn run_remote(url: &str, spec: &LoadSpec, conns: usize) -> Result<(LoadRepor
             t.e2e.extend(wt.e2e);
             t.queue_wait.extend(wt.queue_wait);
             t.rtt.extend(wt.rtt);
+            for (dst, src) in t.models.iter_mut().zip(wt.models) {
+                dst.done += src.done;
+                dst.failed += src.failed;
+                dst.e2e.extend(src.e2e);
+            }
         }
     }
     // Airtight accounting: anything offered but not classified — a
@@ -637,6 +888,21 @@ pub fn run_remote(url: &str, spec: &LoadSpec, conns: usize) -> Result<(LoadRepor
         client_rtt: Summary::of(&t.rtt),
         occupancy: m_f64("occupancy"),
         shed_rate: m_f64("shed_rate"),
+        models: if spec.scenario == Scenario::Multi {
+            targets
+                .iter()
+                .enumerate()
+                .map(|(i, mt)| ModelOutcome {
+                    model: mt.name.clone(),
+                    offered: offered[i],
+                    done: t.models[i].done,
+                    failed: t.models[i].failed + overflow_by_model[i],
+                    e2e: Summary::of(&t.models[i].e2e),
+                })
+                .collect()
+        } else {
+            Vec::new()
+        },
     };
     Ok((report, metrics_json))
 }
@@ -898,6 +1164,7 @@ mod tests {
             client_rtt: Summary::of(&[]),
             occupancy: 0.75,
             shed_rate: 0.1,
+            models: vec![],
         };
         let text = r.render();
         assert!(text.contains("done=8") && text.contains("shed rate"));
@@ -918,8 +1185,81 @@ mod tests {
         assert_eq!(Scenario::parse("steady").unwrap(), Scenario::Steady);
         assert_eq!(Scenario::parse("burst").unwrap(), Scenario::Burst);
         assert_eq!(Scenario::parse("chaos").unwrap(), Scenario::Chaos);
+        assert_eq!(Scenario::parse("multi").unwrap(), Scenario::Multi);
         assert_eq!(Scenario::parse("chaos").unwrap().name(), "chaos");
+        assert_eq!(Scenario::parse("multi").unwrap().name(), "multi");
         assert!(Scenario::parse("storm").is_err());
+    }
+
+    #[test]
+    fn model_weights_parse_and_reject_garbage() {
+        let w = parse_model_weights("tiny:4, narrow:1").unwrap();
+        assert_eq!(w.len(), 2);
+        assert_eq!(w[0], ("tiny".to_string(), 4.0));
+        assert_eq!(w[1], ("narrow".to_string(), 1.0));
+        assert!(parse_model_weights("").is_err(), "empty spec");
+        assert!(parse_model_weights("tiny").is_err(), "no weight");
+        assert!(parse_model_weights("tiny:x").is_err(), "non-numeric");
+        assert!(parse_model_weights("tiny:0").is_err(), "zero weight");
+        assert!(parse_model_weights("tiny:-1").is_err(), "negative weight");
+        assert!(parse_model_weights(":1").is_err(), "empty name");
+        assert!(parse_model_weights("a:1,a:2").is_err(), "duplicate name");
+    }
+
+    #[test]
+    fn multi_report_carries_per_model_rows() {
+        let base = LoadReport {
+            offered_rate: 100.0,
+            achieved_rate: 92.0,
+            requests: 10,
+            done: 8,
+            invalid: 0,
+            shed: 0,
+            failed: 2,
+            shutdown: 0,
+            timeout: 0,
+            unavailable: 0,
+            slow: 0,
+            lost: 0,
+            wall_s: 0.5,
+            goodput_rps: 16.0,
+            e2e: Summary::of(&[0.001, 0.002]),
+            queue_wait: Summary::of(&[0.0005]),
+            client_rtt: Summary::of(&[0.003]),
+            occupancy: 0.75,
+            shed_rate: 0.0,
+            models: vec![
+                ModelOutcome {
+                    model: "tiny".into(),
+                    offered: 8,
+                    done: 7,
+                    failed: 1,
+                    e2e: Summary::of(&[0.001]),
+                },
+                ModelOutcome {
+                    model: "narrow".into(),
+                    offered: 2,
+                    done: 1,
+                    failed: 1,
+                    e2e: Summary::of(&[0.002]),
+                },
+            ],
+        };
+        let text = base.render();
+        assert!(text.contains("model tiny: offered=8 done=7 failed=1"));
+        assert!(text.contains("model narrow: offered=2"));
+        let j = base.to_json();
+        let rows = j.get("models").and_then(Json::as_arr).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("model").and_then(|v| v.as_str()), Some("tiny"));
+        assert_eq!(rows[0].get("offered").and_then(|v| v.as_f64()), Some(8.0));
+        // The per-model ledger reconciles: offered == done + failed.
+        for r in rows {
+            let offered = r.get("offered").and_then(|v| v.as_f64()).unwrap();
+            let done = r.get("done").and_then(|v| v.as_f64()).unwrap();
+            let failed = r.get("failed").and_then(|v| v.as_f64()).unwrap();
+            assert_eq!(offered, done + failed);
+        }
     }
 
     #[test]

@@ -10,16 +10,22 @@
 //!   execution (watchdog deadlines, poison-quarantining retry, a
 //!   consecutive-failure circuit breaker, and degraded-mode fallback — see
 //!   ROADMAP "Architecture: execution resilience");
+//! * `pool` — multi-model, multi-plan serving: a [`ServerPool`] of named
+//!   `(manifest, QuantPlan, backend)` entries, each behind its own admission
+//!   pipeline, with lazy prepare and live plan hot-swap;
 //! * `http` — the pure-std HTTP/1.1 front end over that pipeline
-//!   (`ilmpq serve --listen`), plus the matching client;
+//!   (`ilmpq serve --listen`, single-model or `--pool`), plus the matching
+//!   client;
 //! * `loadgen` — the open-loop Poisson load driver behind `ilmpq loadgen`
-//!   and `benches/serving.rs`, in-process or over the wire (`--url`);
+//!   and `benches/serving.rs`, in-process or over the wire (`--url`),
+//!   including the multi-model `--scenario multi` skew;
 //! * `metrics` — counters + latency percentiles.
 
 pub mod batcher;
 pub mod http;
 pub mod loadgen;
 pub mod metrics;
+pub mod pool;
 pub mod ratio_search;
 pub mod sensitivity;
 pub mod server;
@@ -28,5 +34,6 @@ pub mod trainer;
 pub use batcher::{BatchPolicy, Batcher};
 pub use http::{HttpClient, HttpConfig, HttpServer, HttpTarget};
 pub use metrics::Metrics;
+pub use pool::{PoolEntry, ServerPool};
 pub use server::{Request, Response, ServeConfig, ServeError, ServeResult, Server};
 pub use trainer::Trainer;

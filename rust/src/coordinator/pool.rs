@@ -1,0 +1,761 @@
+//! Multi-model, multi-plan serving: a [`ServerPool`] hosts N named
+//! `(manifest, QuantPlan, backend)` tuples in one process, each behind its
+//! own admission pipeline ([`Server`]) with its own queue depth, circuit
+//! breaker, and [`Metrics`]. This is the ILMPQ multi-tenant story made
+//! concrete: intra-layer multi-precision means one hardware configuration
+//! serves *any* (network, plan) pair, so one process can route many of them
+//! through one uniform execution path.
+//!
+//! Three properties carry the design:
+//!
+//! * **Lazy prepare.** An entry packs its backend and starts its `Server`
+//!   on the *first* request (double-checked under the entry's state lock),
+//!   so a pool of many models pays startup cost only for the ones traffic
+//!   actually reaches. `prepares()` counts builds, making prepare-once
+//!   observable.
+//! * **Live plan hot-swap with zero lost replies.** [`PoolEntry::swap_plan`]
+//!   validates the uploaded [`QuantPlan`] against the entry's manifest,
+//!   re-packs a whole new backend + `Server` off the serving path (on a
+//!   joined helper thread, so a panicking pack surfaces as an error while
+//!   the old stack keeps serving), then swings traffic under the state
+//!   write lock. The infer path submits while *holding the read lock*
+//!   without cloning the `Arc<Server>`, so after the swing (a) no new
+//!   request can reach the old server and (b) the swap holds the only
+//!   `Arc`. It then waits for the old server's [`Server::in_flight`] to
+//!   drain to zero before stopping it — `stop()` answers still-queued
+//!   requests `ShuttingDown`, which a zero-loss swap must never allow.
+//! * **Bit-reproducible swaps.** Every pool-built entry retains its
+//!   `(manifest, params)`; backend construction is deterministic in
+//!   `(manifest, params, plan)` and the packed forward pass is bit-stable
+//!   across thread counts, so post-swap logits equal a cold start on the
+//!   uploaded plan bit for bit (pinned by `tests/pool_smoke.rs`).
+//!
+//! Each swap installs a fresh `Server` and therefore a fresh `Metrics` —
+//! per-model counters describe the *current* plan's tenure. Zero-loss
+//! assertions live client-side (the loadgen ledger), which is the contract
+//! that matters over the wire.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::metrics::Metrics;
+use super::server::{ServeConfig, ServeResult, Server};
+use crate::backend::{self, synth, BackendInit, FaultSpec, InferenceBackend};
+use crate::quant::{plan::parse_ratio_arg, MaskSet, Provenance, QuantPlan};
+use crate::runtime::{HostTensor, Manifest};
+use crate::util::{Json, Rng};
+
+/// How long a swap waits for the replaced server to answer its in-flight
+/// requests before falling back to `begin_shutdown` (which would surface
+/// `ShuttingDown` to any stragglers — bounded badness over a hang).
+const SWAP_DRAIN_DEADLINE: Duration = Duration::from_secs(60);
+
+struct EntryState {
+    /// The serving stack for the entry's current plan. `None` = cold (not
+    /// yet prepared) or shut down.
+    server: Option<Arc<Server>>,
+}
+
+/// One named model in the pool: its manifest + retained init params (the
+/// hot-swap rebuild inputs), the backend recipe, and the per-model serving
+/// configuration (whose `plan` field is the entry's *initial* plan).
+pub struct PoolEntry {
+    name: String,
+    manifest: Manifest,
+    /// Init params retained for re-packing on hot-swap. Empty for entries
+    /// attached pre-built ([`ServerPool::single`]), which cannot swap.
+    params: Vec<HostTensor>,
+    /// Registry backend name; `None` marks a pre-built entry the pool
+    /// cannot rebuild (no swap support).
+    backend_name: Option<String>,
+    threads: Option<usize>,
+    fault: Option<FaultSpec>,
+    base_cfg: ServeConfig,
+    state: RwLock<EntryState>,
+    /// Serializes swaps so two concurrent uploads can't both re-pack and
+    /// race the swing. The state lock alone can't give that: the pack runs
+    /// *outside* it by design.
+    swap_gate: Mutex<()>,
+    prepares: AtomicU64,
+    swaps: AtomicU64,
+    /// Set by [`ServerPool::shutdown`]; checked inside the swing's critical
+    /// section so a swap racing teardown can't install a server into a dead
+    /// pool.
+    closed: AtomicBool,
+}
+
+/// Point-in-time health view for one entry (the `/v1/healthz` inputs). A
+/// cold entry reads ready: it will lazily prepare on the first request.
+pub struct EntryHealth {
+    pub ready: bool,
+    pub breaker: &'static str,
+    pub degraded: bool,
+    pub draining: bool,
+    pub plan: Option<String>,
+}
+
+impl PoolEntry {
+    /// Parse one `"models"` array element of a pool config. Knobs (all but
+    /// `name` optional): `backend` (registry name, default `qgemm`),
+    /// `synthetic` (zoo geometry, default `tinyresnet`), `ratio` (Table-I
+    /// name or `P:F4:F8` split) *or* `plan` (a QuantPlan JSON path), `seed`,
+    /// `workers`, `queue-depth`, `max-wait-ms`, `threads`, `device`, `fault`
+    /// (`"chaos"` or a FaultSpec path), `breaker-threshold`,
+    /// `breaker-cooldown-ms`, `execute-deadline-ms`, `retries`.
+    fn from_json(j: &Json) -> Result<PoolEntry> {
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("pool model entry needs a \"name\""))?
+            .to_string();
+        let backend_name =
+            j.get("backend").and_then(Json::as_str).unwrap_or("qgemm").to_string();
+        // Typo'd backend names must fail at config time, not on the first
+        // (lazy) request.
+        backend::spec(&backend_name)
+            .with_context(|| format!("pool model {name:?}"))?;
+        let geometry =
+            j.get("synthetic").and_then(Json::as_str).unwrap_or("tinyresnet");
+        let seed = j.get("seed").and_then(Json::as_f64).unwrap_or(7.0) as u64;
+        let get_u64 =
+            |k: &str, d: u64| j.get(k).and_then(Json::as_f64).map_or(d, |v| v as u64);
+        let threads = j.get("threads").and_then(Json::as_usize);
+        let fault = match j.get("fault").and_then(Json::as_str) {
+            None => None,
+            Some("chaos") => Some(FaultSpec::chaos(seed)),
+            Some(path) => Some(
+                FaultSpec::load(Path::new(path))
+                    .with_context(|| format!("pool model {name:?} fault schedule"))?,
+            ),
+        };
+
+        // Synthetic fixture, single RNG stream per entry: params first,
+        // masks second — the same draw order as the single-model fixture,
+        // and the order `synth_parts` reproduces for bit-identity checks.
+        let mut rng = Rng::new(seed);
+        let mut manifest = synth::serving_manifest_for(geometry)
+            .with_context(|| format!("pool model {name:?}"))?;
+        let params = synth::random_params(&manifest, &mut rng);
+        let plan = match (
+            j.get("plan").and_then(Json::as_str),
+            j.get("ratio").and_then(Json::as_str),
+        ) {
+            (Some(_), Some(_)) => {
+                anyhow::bail!("pool model {name:?}: give \"plan\" or \"ratio\", not both")
+            }
+            (Some(path), None) => {
+                let p = QuantPlan::load(Path::new(path))?;
+                p.validate(&manifest).with_context(|| {
+                    format!("plan {path:?} does not fit pool model {name:?}")
+                })?;
+                p
+            }
+            (None, ratio_arg) => {
+                let label = ratio_arg.unwrap_or("65:30:5");
+                let ratio = parse_ratio_arg(label)
+                    .with_context(|| format!("pool model {name:?}"))?;
+                let masks = synth::random_masks(&manifest, ratio, &mut rng);
+                QuantPlan::from_mask_set(
+                    MaskSet { name: label.to_string(), layers: masks.layers },
+                    Provenance::Synthetic { seed, ratio: ratio.label() },
+                )
+                .with_model(&manifest.model_name)
+            }
+        };
+        manifest.default_masks.insert(plan.name.clone(), plan.masks.clone());
+
+        let base_cfg = ServeConfig {
+            workers: j.get("workers").and_then(Json::as_usize).unwrap_or(2),
+            max_wait: Duration::from_millis(get_u64("max-wait-ms", 5)),
+            queue_depth: j.get("queue-depth").and_then(Json::as_usize).unwrap_or(1024),
+            plan: Some(plan),
+            device: j
+                .get("device")
+                .and_then(Json::as_str)
+                .unwrap_or("xc7z045")
+                .to_string(),
+            execute_deadline: match get_u64("execute-deadline-ms", 0) {
+                0 => None,
+                ms => Some(Duration::from_millis(ms)),
+            },
+            retries: j.get("retries").and_then(Json::as_usize).unwrap_or(0),
+            breaker_threshold: j
+                .get("breaker-threshold")
+                .and_then(Json::as_usize)
+                .unwrap_or(0),
+            breaker_cooldown: Duration::from_millis(get_u64("breaker-cooldown-ms", 1000)),
+            ..Default::default()
+        };
+
+        Ok(PoolEntry {
+            name,
+            manifest,
+            params,
+            backend_name: Some(backend_name),
+            threads,
+            fault,
+            base_cfg,
+            state: RwLock::new(EntryState { server: None }),
+            swap_gate: Mutex::new(()),
+            prepares: AtomicU64::new(0),
+            swaps: AtomicU64::new(0),
+            closed: AtomicBool::new(false),
+        })
+    }
+
+    /// Wrap an already-running server (the single-model HTTP front end).
+    /// Such an entry serves immediately but cannot hot-swap: the pool holds
+    /// no init params to re-pack from.
+    fn from_running(server: Arc<Server>, manifest: &Manifest) -> PoolEntry {
+        let base_cfg =
+            ServeConfig { plan: server.plan.as_deref().cloned(), ..Default::default() };
+        PoolEntry {
+            name: manifest.model_name.clone(),
+            manifest: manifest.clone(),
+            params: Vec::new(),
+            backend_name: None,
+            threads: None,
+            fault: None,
+            base_cfg,
+            state: RwLock::new(EntryState { server: Some(server) }),
+            swap_gate: Mutex::new(()),
+            prepares: AtomicU64::new(1),
+            swaps: AtomicU64::new(0),
+            closed: AtomicBool::new(false),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn image_elems(&self) -> usize {
+        self.manifest.data.image_elems()
+    }
+
+    pub fn classes(&self) -> usize {
+        self.manifest.classes
+    }
+
+    /// Backend builds this entry has performed (lazy starts + swaps).
+    pub fn prepares(&self) -> u64 {
+        self.prepares.load(Ordering::SeqCst)
+    }
+
+    /// Completed hot-swaps.
+    pub fn swaps(&self) -> u64 {
+        self.swaps.load(Ordering::SeqCst)
+    }
+
+    /// Build backend + `Server` for `plan` on a joined helper thread: a
+    /// panicking pack (poisoned weights, a buggy backend) must come back as
+    /// an error on this call, never unwind through a pool that is serving.
+    fn build_server(&self, plan: Option<QuantPlan>) -> Result<Server> {
+        let backend_name = self.backend_name.clone().ok_or_else(|| {
+            anyhow!(
+                "model {:?} was attached pre-built; the pool holds no init \
+                 params to re-pack it from",
+                self.name
+            )
+        })?;
+        let cfg = ServeConfig { plan, ..self.base_cfg.clone() };
+        let manifest = self.manifest.clone();
+        let params = self.params.clone();
+        let threads = self.threads;
+        let fault = self.fault.clone();
+        let label = self.name.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("ilmpq-pack-{label}"))
+            .spawn(move || -> Result<Server> {
+                let init = BackendInit {
+                    plan: cfg.plan.clone(),
+                    threads,
+                    frozen: cfg.frozen,
+                    fault,
+                    ..BackendInit::new(manifest.clone(), params)
+                };
+                let be: Arc<dyn InferenceBackend> =
+                    Arc::from(backend::create(&backend_name, &init)?);
+                Server::start(&manifest, be, cfg)
+            })
+            .context("spawn pack thread")?;
+        handle
+            .join()
+            .map_err(|_| anyhow!("packing model {:?} panicked", self.name))?
+            .with_context(|| format!("start pool model {:?}", self.name))
+    }
+
+    /// Lazy start: pack + start the entry's server if it is still cold.
+    /// Double-checked under the state lock, so concurrent first requests
+    /// build exactly once.
+    fn ensure_started(&self) -> Result<()> {
+        if self.state.read().unwrap().server.is_some() {
+            return Ok(());
+        }
+        let mut st = self.state.write().unwrap();
+        if st.server.is_some() {
+            return Ok(());
+        }
+        anyhow::ensure!(
+            !self.closed.load(Ordering::SeqCst),
+            "pool is shut down"
+        );
+        let server = self.build_server(self.base_cfg.plan.clone())?;
+        self.prepares.fetch_add(1, Ordering::SeqCst);
+        st.server = Some(Arc::new(server));
+        Ok(())
+    }
+
+    /// Submit one image to this entry (starting it lazily on first use).
+    ///
+    /// The submit happens while *holding the state read lock*, without
+    /// cloning the `Arc<Server>` — load-bearing for the swap: after the
+    /// swap's write lock swings the pointer, no submit can still be routing
+    /// into the old server, and the swap holds that server's only `Arc`.
+    pub fn submit(&self, image: Vec<f32>) -> Result<Receiver<ServeResult>> {
+        self.ensure_started()?;
+        let st = self.state.read().unwrap();
+        let server = st
+            .server
+            .as_ref()
+            .ok_or_else(|| anyhow!("model {:?} is shut down", self.name))?;
+        Ok(server.submit(image))
+    }
+
+    /// Live plan hot-swap. Validates, re-packs off the serving path,
+    /// atomically swings traffic, then drains and stops the old server —
+    /// zero lost replies (see the module docs for why each step is where
+    /// it is). On any error the old stack keeps serving untouched.
+    pub fn swap_plan(&self, plan: QuantPlan) -> Result<()> {
+        plan.validate(&self.manifest)
+            .with_context(|| format!("uploaded plan rejected for model {:?}", self.name))?;
+        let _gate = self.swap_gate.lock().unwrap();
+        anyhow::ensure!(!self.closed.load(Ordering::SeqCst), "pool is shut down");
+        // The expensive part — pack the new backend, warm it up — runs
+        // before any lock the serving path contends on.
+        let new_server = Arc::new(self.build_server(Some(plan))?);
+        self.prepares.fetch_add(1, Ordering::SeqCst);
+        let old = {
+            let mut st = self.state.write().unwrap();
+            if self.closed.load(Ordering::SeqCst) {
+                // Raced a pool shutdown between the gate check and here:
+                // don't install into a dead pool.
+                drop(st);
+                if let Ok(s) = Arc::try_unwrap(new_server) {
+                    s.stop();
+                }
+                anyhow::bail!("pool shut down during the swap");
+            }
+            std::mem::replace(&mut st.server, Some(new_server))
+        };
+        if let Some(old) = old {
+            // After the swing the old server's in-flight count only falls
+            // (the write lock waited out every in-progress submit). Drain
+            // it to zero before stop(): stop answers still-queued requests
+            // ShuttingDown, and a swap must lose nothing.
+            let deadline = Instant::now() + SWAP_DRAIN_DEADLINE;
+            while old.in_flight() > 0 && Instant::now() < deadline {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            match Arc::try_unwrap(old) {
+                Ok(s) => {
+                    s.stop();
+                }
+                // Unreachable by construction (submit never clones the
+                // Arc), but never hang a swap on it: drain-stop
+                // best-effort.
+                Err(s) => s.begin_shutdown(),
+            }
+        }
+        self.swaps.fetch_add(1, Ordering::SeqCst);
+        Ok(())
+    }
+
+    /// The plan currently advertised: the active server's plan, or the
+    /// configured initial plan while the entry is cold.
+    pub fn current_plan(&self) -> Option<Arc<QuantPlan>> {
+        let st = self.state.read().unwrap();
+        match &st.server {
+            Some(s) => s.plan.clone(),
+            None => self.base_cfg.plan.clone().map(Arc::new),
+        }
+    }
+
+    /// The `GET .../plan` body for this entry.
+    pub fn plan_summary(&self) -> Option<Json> {
+        self.current_plan().map(|p| p.summary_json())
+    }
+
+    /// The `GET .../metrics` body: the active server's counters, or a
+    /// zeroed set while cold (a cold model has served nothing — that *is*
+    /// its metrics).
+    pub fn metrics_json(&self) -> Json {
+        let st = self.state.read().unwrap();
+        match &st.server {
+            Some(s) => s.metrics.to_json(),
+            None => Metrics::default().to_json(),
+        }
+    }
+
+    /// Health view (see [`EntryHealth`]).
+    pub fn health(&self) -> EntryHealth {
+        let st = self.state.read().unwrap();
+        let plan = match &st.server {
+            Some(s) => s.plan.as_ref().map(|p| p.name.clone()),
+            None => self.base_cfg.plan.as_ref().map(|p| p.name.clone()),
+        };
+        match st.server.as_deref() {
+            Some(s) => EntryHealth {
+                ready: s.is_ready(),
+                breaker: s.breaker_state(),
+                degraded: s.is_degraded(),
+                draining: s.is_shutting_down(),
+                plan,
+            },
+            None => EntryHealth {
+                ready: !self.closed.load(Ordering::SeqCst),
+                breaker: "closed",
+                degraded: false,
+                draining: false,
+                plan,
+            },
+        }
+    }
+
+    /// One registry row of the `GET /v1/models` listing.
+    pub fn describe(&self) -> Json {
+        let st = self.state.read().unwrap();
+        let (state, breaker, degraded) = match st.server.as_deref() {
+            Some(s) => (
+                if s.is_shutting_down() {
+                    "draining"
+                } else if s.is_ready() {
+                    "ready"
+                } else {
+                    "unready"
+                },
+                s.breaker_state(),
+                s.is_degraded(),
+            ),
+            None => ("cold", "closed", false),
+        };
+        let plan = match &st.server {
+            Some(s) => s.plan.clone(),
+            None => self.base_cfg.plan.clone().map(Arc::new),
+        };
+        drop(st);
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("model", Json::Str(self.manifest.model_name.clone())),
+            (
+                "backend",
+                match &self.backend_name {
+                    Some(b) => Json::Str(b.clone()),
+                    None => Json::Null,
+                },
+            ),
+            ("image_elems", Json::Num(self.image_elems() as f64)),
+            ("classes", Json::Num(self.classes() as f64)),
+            ("state", Json::Str(state.into())),
+            ("breaker", Json::Str(breaker.into())),
+            ("degraded", Json::Bool(degraded)),
+            ("queue_depth", Json::Num(self.base_cfg.queue_depth as f64)),
+            (
+                "plan",
+                match &plan {
+                    Some(p) => Json::Str(p.name.clone()),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "provenance",
+                match &plan {
+                    Some(p) => Json::Str(p.provenance.kind().into()),
+                    None => Json::Null,
+                },
+            ),
+            ("swaps", Json::Num(self.swaps() as f64)),
+            ("prepares", Json::Num(self.prepares() as f64)),
+        ])
+    }
+
+    /// One human line for the serve CLI banner.
+    pub fn summary_line(&self) -> String {
+        let plan = self
+            .current_plan()
+            .map_or_else(|| "unquantized".to_string(), |p| p.name.clone());
+        format!(
+            "{}: model {} ({} elems, {} classes), backend {}, plan {}",
+            self.name,
+            self.manifest.model_name,
+            self.image_elems(),
+            self.classes(),
+            self.backend_name.as_deref().unwrap_or("(pre-built)"),
+            plan
+        )
+    }
+
+    /// Stop this entry's server (if running), returning its metrics.
+    fn close(&self) -> Option<Arc<Metrics>> {
+        self.closed.store(true, Ordering::SeqCst);
+        let server = self.state.write().unwrap().server.take();
+        server.map(|s| match Arc::try_unwrap(s) {
+            Ok(s) => s.stop(),
+            Err(s) => {
+                s.begin_shutdown();
+                s.metrics.clone()
+            }
+        })
+    }
+}
+
+/// A named registry of [`PoolEntry`]s behind one process. See module docs.
+pub struct ServerPool {
+    entries: Vec<Arc<PoolEntry>>,
+    default: String,
+}
+
+impl ServerPool {
+    /// Parse a pool config: `{"default": "name", "models": [ ... ]}` (see
+    /// [`PoolEntry::from_json`] for the per-model knobs). `default` falls
+    /// back to the first model.
+    pub fn from_json(j: &Json) -> Result<ServerPool> {
+        let models = j
+            .get("models")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("pool config needs a \"models\" array"))?;
+        anyhow::ensure!(!models.is_empty(), "pool config has no models");
+        let mut entries: Vec<Arc<PoolEntry>> = Vec::new();
+        for mj in models {
+            let e = PoolEntry::from_json(mj)?;
+            anyhow::ensure!(
+                entries.iter().all(|x| x.name != e.name),
+                "duplicate model name {:?} in pool config",
+                e.name
+            );
+            entries.push(Arc::new(e));
+        }
+        let default = match j.get("default").and_then(Json::as_str) {
+            Some(d) => {
+                anyhow::ensure!(
+                    entries.iter().any(|e| e.name == d),
+                    "default model {d:?} is not in the pool"
+                );
+                d.to_string()
+            }
+            None => entries[0].name.clone(),
+        };
+        Ok(ServerPool { entries, default })
+    }
+
+    /// Load a pool config from a JSON file (`ilmpq serve --pool pool.json`).
+    pub fn from_file(path: &Path) -> Result<ServerPool> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read pool config {path:?}"))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow!("pool config {path:?} is not JSON: {e}"))?;
+        Self::from_json(&j).with_context(|| format!("pool config {path:?}"))
+    }
+
+    /// The built-in two-model synthetic pool for toolchain-only machines:
+    /// `tiny` (TinyResNet geometry, the ilmpq2 Table-I ratio) and `narrow`
+    /// (the plain vggnarrow stack, a 65:30:5 split), both on the qgemm
+    /// backend — two genuinely different topologies behind one listener.
+    pub fn synthetic_pair(seed: u64) -> Result<ServerPool> {
+        let entry = |name: &str, geometry: &str, ratio: &str, seed: u64| {
+            Json::obj(vec![
+                ("name", Json::Str(name.into())),
+                ("backend", Json::Str("qgemm".into())),
+                ("synthetic", Json::Str(geometry.into())),
+                ("ratio", Json::Str(ratio.into())),
+                ("seed", Json::Num(seed as f64)),
+            ])
+        };
+        let cfg = Json::obj(vec![
+            ("default", Json::Str("tiny".into())),
+            (
+                "models",
+                Json::Arr(vec![
+                    entry("tiny", "tinyresnet", "ilmpq2", seed),
+                    entry("narrow", "vggnarrow", "65:30:5", seed ^ 0x9e37),
+                ]),
+            ),
+        ]);
+        Self::from_json(&cfg)
+    }
+
+    /// Wrap one already-running server as a single-entry pool (the legacy
+    /// single-model HTTP front end). The caller may keep its own clone of
+    /// the `Arc<Server>` for direct access, but must drop it before
+    /// [`ServerPool::shutdown`] so the entry can unwrap and join it.
+    pub fn single(server: Arc<Server>, manifest: &Manifest) -> ServerPool {
+        let entry = Arc::new(PoolEntry::from_running(server, manifest));
+        let default = entry.name.clone();
+        ServerPool { entries: vec![entry], default }
+    }
+
+    pub fn entries(&self) -> &[Arc<PoolEntry>] {
+        &self.entries
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&Arc<PoolEntry>> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    pub fn default_name(&self) -> &str {
+        &self.default
+    }
+
+    /// The entry legacy `/v1/*` routes map onto.
+    pub fn default_entry(&self) -> &Arc<PoolEntry> {
+        self.entry(&self.default).expect("default entry exists by construction")
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.entries.iter().map(|e| e.name.clone()).collect()
+    }
+
+    /// The `GET /v1/models` body.
+    pub fn describe(&self) -> Json {
+        Json::obj(vec![
+            ("default", Json::Str(self.default.clone())),
+            (
+                "models",
+                Json::Arr(self.entries.iter().map(|e| e.describe()).collect()),
+            ),
+        ])
+    }
+
+    /// Stop every entry's server; returns the default entry's metrics (the
+    /// single-model front end's historic teardown contract) — zeroed if the
+    /// default never started.
+    pub fn shutdown(&self) -> Arc<Metrics> {
+        let mut default_metrics: Option<Arc<Metrics>> = None;
+        for e in &self.entries {
+            let m = e.close();
+            if e.name == self.default {
+                default_metrics = m;
+            }
+        }
+        default_metrics.unwrap_or_default()
+    }
+}
+
+/// The synthetic fixture parts a pool-built entry at `(geometry, seed)` is
+/// constructed from — exposed so tests can rebuild a bit-identical
+/// reference backend (same params, any plan) and pin post-swap logits to a
+/// cold start.
+pub fn synth_parts(geometry: &str, seed: u64) -> Result<(Manifest, Vec<HostTensor>)> {
+    let mut rng = Rng::new(seed);
+    let m = synth::serving_manifest_for(geometry)?;
+    let params = synth::random_params(&m, &mut rng);
+    Ok((m, params))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_validation_rejects_bad_pools() {
+        let parse = |s: &str| ServerPool::from_json(&Json::parse(s).unwrap());
+        assert!(parse("{}").is_err(), "no models array");
+        assert!(parse(r#"{"models": []}"#).is_err(), "empty pool");
+        assert!(
+            parse(r#"{"models": [{"backend": "qgemm"}]}"#).is_err(),
+            "nameless model"
+        );
+        assert!(
+            parse(r#"{"models": [{"name": "a"}, {"name": "a"}]}"#).is_err(),
+            "duplicate names"
+        );
+        assert!(
+            parse(r#"{"models": [{"name": "a"}], "default": "b"}"#).is_err(),
+            "default not in pool"
+        );
+        assert!(
+            parse(r#"{"models": [{"name": "a", "backend": "no-such"}]}"#).is_err(),
+            "unknown backend"
+        );
+        assert!(
+            parse(r#"{"models": [{"name": "a", "synthetic": "resnet18"}]}"#).is_err(),
+            "unserveable geometry"
+        );
+        assert!(
+            parse(r#"{"models": [{"name": "a", "ratio": "x", "plan": "y"}]}"#).is_err(),
+            "plan and ratio together"
+        );
+    }
+
+    #[test]
+    fn pool_parses_and_defaults() {
+        let j = Json::parse(
+            r#"{"models": [
+                {"name": "a", "synthetic": "tinyresnet", "ratio": "30:60:10"},
+                {"name": "b", "synthetic": "vggnarrow", "queue-depth": 4}
+            ]}"#,
+        )
+        .unwrap();
+        let pool = ServerPool::from_json(&j).unwrap();
+        assert_eq!(pool.default_name(), "a");
+        assert_eq!(pool.names(), vec!["a".to_string(), "b".to_string()]);
+        let a = pool.entry("a").unwrap();
+        assert_eq!(a.manifest().model_name, "tiny-synth");
+        assert_eq!(a.current_plan().unwrap().name, "30:60:10");
+        let b = pool.entry("b").unwrap();
+        assert_eq!(b.manifest().model_name, "vggnarrow-synth");
+        // Default ratio when none is given.
+        assert_eq!(b.current_plan().unwrap().name, "65:30:5");
+        assert!(pool.entry("c").is_none());
+    }
+
+    #[test]
+    fn synthetic_pair_shape_and_describe() {
+        let pool = ServerPool::synthetic_pair(7).unwrap();
+        assert_eq!(pool.default_name(), "tiny");
+        assert_eq!(pool.names(), vec!["tiny".to_string(), "narrow".to_string()]);
+        let d = pool.describe();
+        assert_eq!(d.get("default").and_then(Json::as_str), Some("tiny"));
+        let models = d.get("models").and_then(Json::as_arr).unwrap();
+        assert_eq!(models.len(), 2);
+        for m in models {
+            // Cold until first traffic: lazy prepare.
+            assert_eq!(m.get("state").and_then(Json::as_str), Some("cold"));
+            assert_eq!(m.get("breaker").and_then(Json::as_str), Some("closed"));
+            assert_eq!(m.get("prepares").and_then(Json::as_usize), Some(0));
+            assert!(m.get("plan").and_then(Json::as_str).is_some());
+            assert_eq!(
+                m.get("provenance").and_then(Json::as_str),
+                Some("synthetic")
+            );
+        }
+        // Both geometries share the wire image size.
+        let tiny = pool.entry("tiny").unwrap();
+        let narrow = pool.entry("narrow").unwrap();
+        assert_eq!(tiny.image_elems(), narrow.image_elems());
+        assert_ne!(
+            tiny.manifest().model_name,
+            narrow.manifest().model_name
+        );
+    }
+
+    #[test]
+    fn synth_parts_reproduce_entry_params() {
+        // The bit-identity contract: `synth_parts` must draw exactly the
+        // params a pool entry at the same (geometry, seed) was built with.
+        let pool = ServerPool::synthetic_pair(21).unwrap();
+        let tiny = pool.entry("tiny").unwrap();
+        let (m, params) = synth_parts("tinyresnet", 21).unwrap();
+        assert_eq!(m.model_name, tiny.manifest().model_name);
+        assert_eq!(params, tiny.params);
+    }
+}

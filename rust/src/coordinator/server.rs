@@ -483,7 +483,8 @@ impl Server {
         // FPGA-sim overlay: per-image latency of this config on the device.
         let device = DeviceModel::by_name(&cfg.device)
             .ok_or_else(|| anyhow::anyhow!("unknown device {}", cfg.device))?;
-        let net = zoo::tinyresnet(
+        let net = zoo::serving_network(
+            &manifest.model_name,
             manifest.height,
             manifest.width,
             manifest.channels,
@@ -794,6 +795,14 @@ impl Server {
     /// the fallback backend.
     pub fn is_degraded(&self) -> bool {
         self.has_fallback && self.breaker.state() != BreakerState::Closed
+    }
+
+    /// Requests admitted but not yet answered. The pool's hot-swap drains a
+    /// replaced server by polling this to zero before stopping it —
+    /// [`Server::stop`] answers still-queued requests `ShuttingDown`, which
+    /// a zero-lost-replies swap must never let happen.
+    pub fn in_flight(&self) -> u64 {
+        self.in_system.load(Ordering::SeqCst)
     }
 
     /// Front half of graceful stop: raise the shutdown flag and wake the

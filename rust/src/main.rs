@@ -23,6 +23,7 @@ use ilmpq::backend::{self, synth, InferenceBackend};
 use ilmpq::baselines::table1::accuracy_configs;
 use ilmpq::coordinator::{
     loadgen, ratio_search, trainer::Trainer, HttpConfig, HttpServer, ServeConfig, Server,
+    ServerPool,
 };
 use ilmpq::experiments::{accuracy, figure1, ptq, table1};
 use ilmpq::fpga::DeviceModel;
@@ -338,6 +339,13 @@ fn run(cmd: &str) -> Result<()> {
                 ),
                 ("synthetic!", "force the artifact-free synthetic TinyResNet"),
                 ("seed", "fixture + fault-schedule seed (default 7)"),
+                (
+                    "pool",
+                    "serve a multi-model pool over HTTP (requires --listen): a \
+                     pool-config JSON path, or `synth` for the built-in \
+                     two-model synthetic pair; routes under /v1/models/{name}/* \
+                     with live plan hot-swap via POST /v1/models/{name}/plan",
+                ),
             ];
             flags.extend(RESILIENCE_FLAGS);
             let a = Args::parse_env("ilmpq serve", 2, &flags);
@@ -346,6 +354,44 @@ fn run(cmd: &str) -> Result<()> {
             let source = quant_source(&a, "ilmpq2")?;
             let frozen = !a.flag("no-frozen");
             let seed = a.u64_or("seed", 7);
+            if let Some(pool_arg) = a.get("pool") {
+                // Pool mode: N named (manifest, plan, backend) entries behind
+                // one HTTP listener, each with its own admission pipeline.
+                // Entries pack lazily on first traffic; plans hot-swap live.
+                let addr = a.get("listen").ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "--pool requires --listen ADDR (pool serving is HTTP-only)"
+                    )
+                })?;
+                let pool = if pool_arg == "synth" {
+                    ServerPool::synthetic_pair(seed)?
+                } else {
+                    ServerPool::from_file(Path::new(pool_arg))?
+                };
+                println!(
+                    "pool: {} models, default {:?} (entries pack lazily on \
+                     first request)",
+                    pool.entries().len(),
+                    pool.default_name()
+                );
+                for e in pool.entries() {
+                    println!("  {}", e.summary_line());
+                }
+                let http_cfg = HttpConfig {
+                    addr: addr.to_string(),
+                    workers: a.usize_or("http-workers", 16),
+                    ..Default::default()
+                };
+                let mut front = HttpServer::start_pool(Arc::new(pool), http_cfg)?;
+                println!(
+                    "listening on http://{} — GET /v1/models, POST \
+                     /v1/models/{{name}}/infer, POST /v1/models/{{name}}/plan \
+                     (live hot-swap); bare /v1/* routes hit the default model",
+                    front.local_addr()
+                );
+                front.wait();
+                return Ok(());
+            }
             // The manifest (batching geometry, masks, params) loads without
             // the PJRT engine — only runtime-needing backends start one, so
             // `--backend qgemm` serves on `--no-default-features` builds.
@@ -451,7 +497,14 @@ fn run(cmd: &str) -> Result<()> {
                     "scenario",
                     "workload shape: steady | burst (square-wave overload) | \
                      chaos (valid/malformed/poison blend; defaults \
-                     --malformed 0.1 --poison 0.05)",
+                     --malformed 0.1 --poison 0.05) | multi (fan across a \
+                     pool front end's models; requires --url)",
+                ),
+                (
+                    "models",
+                    "multi scenario: explicit name:weight,... traffic mix \
+                     (default: discover the pool and skew 80/20 toward its \
+                     default model)",
                 ),
                 (
                     "poison",
@@ -471,6 +524,13 @@ fn run(cmd: &str) -> Result<()> {
             flags.extend(RESILIENCE_FLAGS);
             let a = Args::parse_env("ilmpq loadgen", 2, &flags);
             let (scenario, malformed_frac, poison_frac) = workload_content(&a)?;
+            if scenario == loadgen::Scenario::Multi && a.get("url").is_none() {
+                anyhow::bail!(
+                    "--scenario multi drives a pool front end's per-model \
+                     routes; pass --url http://host:port (see `ilmpq serve \
+                     --pool`)"
+                );
+            }
             if let Some(url) = a.get("url") {
                 // Remote mode: the same open-loop workload over HTTP,
                 // statuses folded into the same outcome classes.
@@ -481,6 +541,10 @@ fn run(cmd: &str) -> Result<()> {
                     poison_frac,
                     scenario,
                     seed: a.u64_or("seed", 42),
+                    model_weights: match a.get("models") {
+                        Some(s) => loadgen::parse_model_weights(s)?,
+                        None => Vec::new(),
+                    },
                 };
                 let (report, server_metrics) =
                     loadgen::run_remote(url, &spec, a.usize_or("conns", 8))?;
@@ -550,6 +614,7 @@ fn run(cmd: &str) -> Result<()> {
                 poison_frac,
                 scenario,
                 seed,
+                model_weights: Vec::new(),
             };
             println!("backend: {} (model {})", be.name(), manifest.model_name);
             let server = Server::start_with_fallback(&manifest, be, fallback, cfg)?;
@@ -773,14 +838,18 @@ commands:
                 /v1/healthz, GET /v1/metrics, GET /v1/plan); without it,
                 the in-process demo loop runs (dynamic batching, --backend
                 NAME); `--plan p.json` serves a saved quantization plan;
+                `--pool cfg.json|synth` serves a multi-model pool (GET
+                /v1/models, per-model /v1/models/{name}/* routes, live
+                plan hot-swap via POST /v1/models/{name}/plan);
                 self-healing execution via --execute-deadline-ms,
                 --retries, --breaker-threshold, --fallback NAME, and
                 --fault SPEC.json|chaos for fault injection
   loadgen       open-loop offered-load driver for the admission pipeline
                 (--rate, --queue-depth, --malformed, --poison,
-                --scenario steady|burst|chaos; runs artifact-free);
+                --scenario steady|burst|chaos|multi; runs artifact-free);
                 `--url http://host:port` drives a remote `serve --listen`
-                over real sockets with the same outcome classes
+                over real sockets with the same outcome classes; multi
+                fans across a pool's models (--models name:weight,...)
   backends      list the registered execution backends
   info          manifest / artifacts summary
 run `ilmpq <cmd> --help` for options.";

@@ -65,6 +65,59 @@ pub fn vgg11() -> Network {
     Network { name: "vgg11".into(), layers }
 }
 
+/// A narrow VGG-style plain conv stack: `relu(conv)` chain with no
+/// residual connections, layer names `s{i}/conv/w` + `fc/w`. The stride
+/// rule mirrors TinyResNet's (stride 2 whenever the width changes), so the
+/// same `widths` list downsamples identically on both recipes. This is the
+/// second geometry the synthetic serving fixtures can build end-to-end
+/// (see `backend::synth::vgg_manifest`), giving the multi-model pool a
+/// genuinely different topology to serve next to TinyResNet.
+pub fn vggnarrow(
+    height: usize,
+    width: usize,
+    channels: usize,
+    widths: &[usize],
+    classes: usize,
+) -> Network {
+    let mut layers = Vec::new();
+    let mut prev_ch = channels;
+    let (mut h, mut w) = (height, width);
+    let mut prev_width: Option<usize> = None;
+    for (si, &wch) in widths.iter().enumerate() {
+        let stride = match prev_width {
+            Some(p) if p != wch => 2,
+            _ => 1,
+        };
+        layers.push(LayerDesc::conv(&format!("s{si}/conv/w"), 3, stride, prev_ch, wch, h, w));
+        h = h.div_ceil(stride);
+        w = w.div_ceil(stride);
+        prev_ch = wch;
+        prev_width = Some(wch);
+    }
+    layers.push(LayerDesc::fc("fc/w", prev_ch, classes));
+    Network { name: "vggnarrow".into(), layers }
+}
+
+/// The serving-overlay network for a manifest's model name: `vggnarrow*`
+/// manifests get the plain conv stack, everything else (the artifact
+/// manifests and `tiny-synth`) the TinyResNet recipe. This is what lets
+/// `Server::start` simulate whichever geometry a pool entry serves instead
+/// of hardcoding TinyResNet.
+pub fn serving_network(
+    model_name: &str,
+    height: usize,
+    width: usize,
+    channels: usize,
+    widths: &[usize],
+    classes: usize,
+) -> Network {
+    if model_name.starts_with("vggnarrow") {
+        vggnarrow(height, width, channels, widths, classes)
+    } else {
+        tinyresnet(height, width, channels, widths, classes)
+    }
+}
+
 /// Small 4-conv CNN (edge-vision style) — third example workload.
 pub fn cnn_small() -> Network {
     Network {
@@ -85,6 +138,7 @@ pub fn by_name(name: &str) -> Option<Network> {
         "resnet18" => Some(super::resnet18::resnet18()),
         "tinyresnet" => Some(tinyresnet_default()),
         "vgg11" => Some(vgg11()),
+        "vggnarrow" => Some(vggnarrow(16, 16, 3, &[8, 16], 10)),
         "cnn-small" => Some(cnn_small()),
         _ => None,
     }
@@ -129,9 +183,31 @@ mod tests {
 
     #[test]
     fn zoo_lookup() {
-        for n in ["resnet18", "tinyresnet", "vgg11", "cnn-small"] {
+        for n in ["resnet18", "tinyresnet", "vgg11", "vggnarrow", "cnn-small"] {
             assert!(by_name(n).is_some(), "{n}");
         }
         assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn vggnarrow_layer_list_and_strides() {
+        let net = vggnarrow(16, 16, 3, &[8, 16], 10);
+        let names: Vec<&str> = net.layers.iter().map(|l| l.name.as_str()).collect();
+        assert_eq!(names, vec!["s0/conv/w", "s1/conv/w", "fc/w"]);
+        // s0 keeps 16x16 (first conv is stride 1), s1 strides 16->8 on the
+        // width change — the same rule as TinyResNet's c1.
+        assert_eq!(net.layers[0].out_hw(), (16, 16));
+        assert_eq!(net.layers[1].out_hw(), (8, 8));
+        assert_eq!(net.layers[0].rows(), 8);
+        assert_eq!(net.layers[1].rows(), 16);
+        assert_eq!(net.layers[2].rows(), 10);
+    }
+
+    #[test]
+    fn serving_network_dispatches_on_model_name() {
+        let v = serving_network("vggnarrow-synth", 16, 16, 3, &[8, 16], 10);
+        assert_eq!(v.layers[0].name, "s0/conv/w");
+        let t = serving_network("tiny-synth", 16, 16, 3, &[8, 16], 10);
+        assert_eq!(t.layers[0].name, "stem/w");
     }
 }

@@ -9,10 +9,12 @@
 //! float mode (no masks) keeps f32 GEMM-view rows instead, giving a
 //! pure-Rust reference with the PJRT path's numerics for cross-checks.
 //!
-//! Topology is reconstructed from the manifest (the same recipe as
+//! Topology is reconstructed from the manifest's param names. A `stem/w`
+//! param rebuilds the TinyResNet recipe (the same one as
 //! `python/compile/model.py::apply`): stem conv → per-stage
-//! `relu(c1) → c2 (+ proj skip) → relu` residual blocks → global average
-//! pool → fc + bias. All convs are SAME-padded NHWC.
+//! `relu(c1) → c2 (+ proj skip) → relu` residual blocks; a plain
+//! `s{i}/conv/w` stack (zoo `vggnarrow`) rebuilds a relu-conv chain. Both
+//! end in global average pool → fc + bias. All convs are SAME-padded NHWC.
 
 use anyhow::{bail, Context, Result};
 
@@ -43,14 +45,34 @@ struct Stage {
     proj: Option<ConvLayer>,
 }
 
+/// The reconstructed conv topology. A manifest with a `stem/w` param
+/// rebuilds the TinyResNet residual recipe; one with a plain `s{i}/conv/w`
+/// stack (zoo `vggnarrow`) rebuilds a relu-conv chain. Both feed the shared
+/// GAP → fc head.
+enum Arch {
+    Residual { stem: ConvLayer, stages: Vec<Stage> },
+    Plain { convs: Vec<ConvLayer> },
+}
+
+impl Arch {
+    /// Channel count entering the GAP head.
+    fn last_ch(&self) -> usize {
+        match self {
+            Arch::Residual { stem, stages } => {
+                stages.last().map_or(stem.out_ch, |s| s.c2.out_ch)
+            }
+            Arch::Plain { convs } => convs.last().expect("build rejects empty stacks").out_ch,
+        }
+    }
+}
+
 /// The packed network, ready to run on host CPU.
 pub struct PackedModel {
     height: usize,
     width: usize,
     channels: usize,
     classes: usize,
-    stem: ConvLayer,
-    stages: Vec<Stage>,
+    arch: Arch,
     fc: LayerWeights,
     fc_bias: Vec<f32>,
     threads: usize,
@@ -114,21 +136,41 @@ impl PackedModel {
                 out_ch: shape[3],
             })
         };
-        let stem = conv("stem/w", 1)?;
-        let mut stages = Vec::with_capacity(m.widths.len());
-        let mut prev = m.widths[0];
-        for (si, &wch) in m.widths.iter().enumerate() {
-            let stride = if prev == wch { 1 } else { 2 };
-            let c1 = conv(&format!("s{si}/c1/w"), stride)?;
-            let c2 = conv(&format!("s{si}/c2/w"), 1)?;
-            let proj = if prev == wch {
-                None
-            } else {
-                Some(conv(&format!("s{si}/proj/w"), stride)?)
-            };
-            stages.push(Stage { c1, c2, proj });
-            prev = wch;
-        }
+        let has = |name: &str| m.params.iter().any(|(n, _)| n == name);
+        let arch = if has("stem/w") {
+            let stem = conv("stem/w", 1)?;
+            let mut stages = Vec::with_capacity(m.widths.len());
+            let mut prev = m.widths[0];
+            for (si, &wch) in m.widths.iter().enumerate() {
+                let stride = if prev == wch { 1 } else { 2 };
+                let c1 = conv(&format!("s{si}/c1/w"), stride)?;
+                let c2 = conv(&format!("s{si}/c2/w"), 1)?;
+                let proj = if prev == wch {
+                    None
+                } else {
+                    Some(conv(&format!("s{si}/proj/w"), stride)?)
+                };
+                stages.push(Stage { c1, c2, proj });
+                prev = wch;
+            }
+            Arch::Residual { stem, stages }
+        } else if has("s0/conv/w") {
+            // Plain stack: same stride rule as zoo::vggnarrow — first conv
+            // stride 1, stride 2 whenever the width changes.
+            let mut convs = Vec::with_capacity(m.widths.len());
+            let mut prev_width: Option<usize> = None;
+            for (si, &wch) in m.widths.iter().enumerate() {
+                let stride = match prev_width {
+                    Some(p) if p != wch => 2,
+                    _ => 1,
+                };
+                convs.push(conv(&format!("s{si}/conv/w"), stride)?);
+                prev_width = Some(wch);
+            }
+            Arch::Plain { convs }
+        } else {
+            bail!("manifest params have neither a TinyResNet stem/w nor a plain s0/conv/w stack");
+        };
         let (fc, fc_shape) = layer_weights(m, params, masks, "fc/w")?;
         if fc_shape.len() != 2 {
             bail!("fc/w: expected 2-D weight, got {fc_shape:?}");
@@ -142,8 +184,7 @@ impl PackedModel {
             width: m.width,
             channels: m.channels,
             classes: m.classes,
-            stem,
-            stages,
+            arch,
             fc,
             fc_bias,
             threads: qgemm::default_threads(),
@@ -163,26 +204,43 @@ impl PackedModel {
             batch * self.height * self.width * self.channels,
             "input shape mismatch"
         );
-        let (mut h, mut hw) = self.conv(x, batch, (self.height, self.width), &self.stem);
-        relu(&mut h);
-        for stage in &self.stages {
-            let (mut y, yhw) = self.conv(&h, batch, hw, &stage.c1);
-            relu(&mut y);
-            let (mut y2, y2hw) = self.conv(&y, batch, yhw, &stage.c2);
-            let skip = match &stage.proj {
-                Some(p) => self.conv(&h, batch, hw, p).0,
-                None => h,
-            };
-            debug_assert_eq!(y2.len(), skip.len(), "residual shape mismatch");
-            for (a, b) in y2.iter_mut().zip(&skip) {
-                *a += b;
+        let (h, hw) = match &self.arch {
+            Arch::Residual { stem, stages } => {
+                let (mut h, mut hw) = self.conv(x, batch, (self.height, self.width), stem);
+                relu(&mut h);
+                for stage in stages {
+                    let (mut y, yhw) = self.conv(&h, batch, hw, &stage.c1);
+                    relu(&mut y);
+                    let (mut y2, y2hw) = self.conv(&y, batch, yhw, &stage.c2);
+                    let skip = match &stage.proj {
+                        Some(p) => self.conv(&h, batch, hw, p).0,
+                        None => h,
+                    };
+                    debug_assert_eq!(y2.len(), skip.len(), "residual shape mismatch");
+                    for (a, b) in y2.iter_mut().zip(&skip) {
+                        *a += b;
+                    }
+                    relu(&mut y2);
+                    h = y2;
+                    hw = y2hw;
+                }
+                (h, hw)
             }
-            relu(&mut y2);
-            h = y2;
-            hw = y2hw;
-        }
+            Arch::Plain { convs } => {
+                let (first, rest) = convs.split_first().expect("build rejects empty stacks");
+                let (mut h, mut hw) = self.conv(x, batch, (self.height, self.width), first);
+                relu(&mut h);
+                for l in rest {
+                    let (mut y, yhw) = self.conv(&h, batch, hw, l);
+                    relu(&mut y);
+                    h = y;
+                    hw = yhw;
+                }
+                (h, hw)
+            }
+        };
         // Global average pool -> (batch, ch).
-        let ch = self.stages.last().map_or(self.stem.out_ch, |s| s.c2.out_ch);
+        let ch = self.arch.last_ch();
         let px = hw.0 * hw.1;
         let mut gap = vec![0f32; batch * ch];
         for bi in 0..batch {
@@ -305,6 +363,27 @@ mod tests {
         let a = m1.forward(&x, 2);
         let b = m4.forward(&x, 2);
         assert!(a.iter().zip(&b).all(|(x1, x2)| x1.to_bits() == x2.to_bits()));
+    }
+
+    #[test]
+    fn plain_stack_builds_and_forwards() {
+        // The vggnarrow geometry: no stem, no residuals — the Arch::Plain
+        // reconstruction path.
+        let m = synth::vgg_manifest(8, 8, 3, &[4, 8], 5);
+        let mut rng = Rng::new(11);
+        let params = random_params(&m, &mut rng);
+        let masks = mixed_masks(&m, &mut rng);
+        let model = PackedModel::build(&m, &params, Some(&masks)).unwrap();
+        let b = 2usize;
+        let x: Vec<f32> = (0..b * 8 * 8 * 3).map(|_| rng.normal()).collect();
+        let logits = model.forward(&x, b);
+        assert_eq!(logits.len(), b * 5);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        // Determinism across thread counts holds for the plain arch too —
+        // the pool's hot-swap bit-identity guarantee rests on this.
+        let m1 = PackedModel::build(&m, &params, Some(&masks)).unwrap().with_threads(1);
+        let l1 = m1.forward(&x, b);
+        assert!(logits.iter().zip(&l1).all(|(a, c)| a.to_bits() == c.to_bits()));
     }
 
     #[test]

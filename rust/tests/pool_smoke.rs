@@ -1,0 +1,318 @@
+//! End-to-end smoke tests for multi-model serving (`coordinator::pool` +
+//! the pool routes of `coordinator::http`), on the artifact-free synthetic
+//! fixtures — so the whole path runs in the `--no-default-features` CI leg.
+//!
+//! Pinned here (the acceptance contract for `ilmpq serve --pool`):
+//!
+//! * two models behind one listener have **isolated** pipelines: faulting
+//!   one model leaves the other's failed/shed counters at zero;
+//! * **live plan hot-swap** under sustained load loses zero replies, and
+//!   post-swap logits are bit-for-bit what a cold start on the uploaded
+//!   plan produces;
+//! * an invalid plan upload is a `400` and the old plan keeps serving;
+//! * entries prepare **lazily, exactly once**, even under concurrent first
+//!   requests;
+//! * an unknown model name is a `404` that lists the served models.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use ilmpq::backend::{self, synth, BackendInit, InferenceBackend};
+use ilmpq::coordinator::pool::{synth_parts, ServerPool};
+use ilmpq::coordinator::{HttpClient, HttpConfig, HttpServer, HttpTarget};
+use ilmpq::quant::{MaskSet, Provenance, QuantPlan, Ratio};
+use ilmpq::util::{Json, Rng};
+
+fn start_pool_front(pool: ServerPool) -> HttpServer {
+    HttpServer::start_pool(
+        Arc::new(pool),
+        HttpConfig { addr: "127.0.0.1:0".into(), workers: 8, ..Default::default() },
+    )
+    .unwrap()
+}
+
+fn client_for(front: &HttpServer) -> HttpClient {
+    let target = HttpTarget::parse(&format!("http://{}", front.local_addr())).unwrap();
+    HttpClient::connect(&target, Duration::from_secs(30))
+}
+
+fn infer_body(image: &[f32]) -> String {
+    Json::obj(vec![(
+        "image",
+        Json::Arr(image.iter().map(|&v| Json::Num(v as f64)).collect()),
+    )])
+    .to_string_compact()
+}
+
+fn normal_image(img: usize, rng: &mut Rng) -> Vec<f32> {
+    let mut image = vec![0f32; img];
+    rng.fill_normal(&mut image, 1.0);
+    image
+}
+
+fn wire_logits(body: &str) -> Vec<f32> {
+    Json::parse(body)
+        .unwrap()
+        .get("logits")
+        .and_then(Json::as_arr)
+        .unwrap_or_else(|| panic!("no logits in {body}"))
+        .iter()
+        .map(|v| v.as_f64().unwrap() as f32)
+        .collect()
+}
+
+/// A synthetic plan for the `tiny` entry of [`ServerPool::synthetic_pair`]
+/// at a ratio visibly different from its initial `ilmpq2` plan. Mask draws
+/// use their own RNG; bit-identity only needs the *params* stream, which
+/// `synth_parts` reproduces.
+fn swap_plan_for_tiny(pool_seed: u64) -> QuantPlan {
+    let (m, _params) = synth_parts("tinyresnet", pool_seed).unwrap();
+    let mut rng = Rng::new(4242);
+    let masks = synth::random_masks(&m, Ratio::new(30.0, 60.0, 10.0), &mut rng);
+    QuantPlan::from_mask_set(
+        MaskSet { name: "swap-30-60-10".into(), layers: masks.layers },
+        Provenance::Synthetic { seed: 4242, ratio: "30:60:10".into() },
+    )
+    .with_model(&m.model_name)
+}
+
+/// Faulting one model must not move another model's counters: each entry
+/// has its own queue, workers, breaker, and `Metrics`.
+#[test]
+fn faulted_model_leaves_the_other_isolated() {
+    let cfg = r#"{
+        "default": "good",
+        "models": [
+            {"name": "good", "synthetic": "tinyresnet", "ratio": "ilmpq2", "seed": 3},
+            {"name": "bad", "synthetic": "vggnarrow", "ratio": "65:30:5", "seed": 4,
+             "fault": "chaos", "execute-deadline-ms": 100}
+        ]
+    }"#;
+    let pool = ServerPool::from_json(&Json::parse(cfg).unwrap()).unwrap();
+    let front = start_pool_front(pool);
+    let mut client = client_for(&front);
+
+    let listing = {
+        let (code, body) = client.request("GET", "/v1/models", None).unwrap();
+        assert_eq!(code, 200, "{body}");
+        Json::parse(&body).unwrap()
+    };
+    assert_eq!(listing.get("default").and_then(Json::as_str), Some("good"));
+    let names: Vec<String> = listing
+        .get("models")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .map(|r| r.get("name").and_then(Json::as_str).unwrap().to_string())
+        .collect();
+    assert_eq!(names, vec!["good".to_string(), "bad".to_string()]);
+
+    let good_img = {
+        let (code, body) = client.request("GET", "/v1/models/good/healthz", None).unwrap();
+        assert_eq!(code, 200, "{body}");
+        Json::parse(&body).unwrap().get("image_elems").and_then(Json::as_usize).unwrap()
+    };
+    let bad_img = {
+        let (code, body) = client.request("GET", "/v1/models/bad/healthz", None).unwrap();
+        assert_eq!(code, 200, "{body}");
+        Json::parse(&body).unwrap().get("image_elems").and_then(Json::as_usize).unwrap()
+    };
+    assert_ne!(good_img, bad_img, "the two geometries must differ");
+
+    let mut rng = Rng::new(77);
+    const GOOD_REQS: usize = 30;
+    for i in 0..GOOD_REQS {
+        let image = normal_image(good_img, &mut rng);
+        let (code, body) =
+            client.request("POST", "/v1/models/good/infer", Some(&infer_body(&image))).unwrap();
+        assert_eq!(code, 200, "good request {i}: {body}");
+        // Chaos on `bad` between every good request; any status is fine —
+        // the schedule is probabilistic — it only must not bleed over.
+        let image = normal_image(bad_img, &mut rng);
+        let (code, _) =
+            client.request("POST", "/v1/models/bad/infer", Some(&infer_body(&image))).unwrap();
+        assert!(code == 200 || code >= 400, "bad model returned {code}");
+    }
+
+    let (code, body) = client.request("GET", "/v1/models/good/metrics", None).unwrap();
+    assert_eq!(code, 200, "{body}");
+    let m = Json::parse(&body).unwrap();
+    let get = |k: &str| m.get(k).and_then(Json::as_f64).unwrap();
+    assert_eq!(get("requests_done"), GOOD_REQS as f64, "{body}");
+    assert_eq!(get("requests_failed"), 0.0, "fault bled into the clean model: {body}");
+    assert_eq!(get("requests_shed"), 0.0, "fault bled into the clean model: {body}");
+
+    front.stop();
+}
+
+/// The headline: swap the `tiny` model's plan while a client hammers it.
+/// Every reply must arrive (no 500/503/504 — zero lost), the advertised
+/// plan must flip, and post-swap logits must be bit-identical to a cold
+/// start on the uploaded plan. An invalid upload afterwards is a 400 and
+/// the swapped plan keeps serving.
+#[test]
+fn hot_swap_under_load_loses_nothing_and_matches_cold_start() {
+    const SEED: u64 = 11;
+    let pool = ServerPool::synthetic_pair(SEED).unwrap();
+    let front = start_pool_front(pool);
+    let addr = front.local_addr();
+    let plan2 = swap_plan_for_tiny(SEED);
+
+    let img = {
+        let mut client = client_for(&front);
+        let (code, body) = client.request("GET", "/v1/models/tiny/healthz", None).unwrap();
+        assert_eq!(code, 200, "{body}");
+        Json::parse(&body).unwrap().get("image_elems").and_then(Json::as_usize).unwrap()
+    };
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let hammers: Vec<_> = (0..2u64)
+        .map(|t| {
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let target = HttpTarget::parse(&format!("http://{addr}")).unwrap();
+                let mut client = HttpClient::connect(&target, Duration::from_secs(30));
+                let mut rng = Rng::new(500 + t);
+                let mut codes: Vec<u16> = Vec::new();
+                while !stop.load(Ordering::SeqCst) {
+                    let image = normal_image(img, &mut rng);
+                    let (code, _) = client
+                        .request("POST", "/v1/models/tiny/infer", Some(&infer_body(&image)))
+                        .unwrap();
+                    codes.push(code);
+                }
+                codes
+            })
+        })
+        .collect();
+
+    // Let the hammers warm up (this also exercises the lazy first build),
+    // then swing the plan mid-stream.
+    std::thread::sleep(Duration::from_millis(150));
+    let mut client = client_for(&front);
+    let (code, body) = client
+        .request("POST", "/v1/models/tiny/plan", Some(&plan2.to_json().to_string_compact()))
+        .unwrap();
+    assert_eq!(code, 200, "swap rejected: {body}");
+    let j = Json::parse(&body).unwrap();
+    assert!(matches!(j.get("swapped"), Some(Json::Bool(true))), "{body}");
+    assert_eq!(j.get("plan").and_then(Json::as_str), Some("swap-30-60-10"), "{body}");
+
+    std::thread::sleep(Duration::from_millis(100));
+    stop.store(true, Ordering::SeqCst);
+    let mut total = 0usize;
+    for h in hammers {
+        let codes = h.join().unwrap();
+        assert!(!codes.is_empty(), "hammer never got a reply");
+        for (i, code) in codes.iter().enumerate() {
+            assert_eq!(*code, 200, "reply {i} of {} lost across the swap", codes.len());
+        }
+        total += codes.len();
+    }
+    assert!(total > 0);
+
+    // The advertised plan is the uploaded one...
+    let (code, body) = client.request("GET", "/v1/models/tiny/plan", None).unwrap();
+    assert_eq!(code, 200, "{body}");
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.get("name").and_then(Json::as_str), Some("swap-30-60-10"), "{body}");
+
+    // ...and serving on it is bit-identical to a cold start on it: same
+    // params (synth_parts reproduces the entry's draw), same plan, fresh
+    // backend.
+    let image = normal_image(img, &mut Rng::new(9));
+    let (code, body) =
+        client.request("POST", "/v1/models/tiny/infer", Some(&infer_body(&image))).unwrap();
+    assert_eq!(code, 200, "{body}");
+    let got = wire_logits(&body);
+    let (m, params) = synth_parts("tinyresnet", SEED).unwrap();
+    let init = BackendInit {
+        plan: Some(plan2.clone()),
+        threads: None,
+        frozen: true,
+        ..BackendInit::new(m, params)
+    };
+    let reference = backend::create("qgemm", &init).unwrap();
+    let expect = reference.run_batch(&image, 1).unwrap().logits;
+    assert_eq!(got.len(), expect.len());
+    for (i, (g, e)) in got.iter().zip(&expect).enumerate() {
+        assert!(g == e, "logit {i} drifted after the swap: {g} != {e}");
+    }
+
+    // Garbage upload: 400, and the swapped plan keeps serving.
+    let (code, body) =
+        client.request("POST", "/v1/models/tiny/plan", Some("{\"x\":1}")).unwrap();
+    assert_eq!(code, 400, "{body}");
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.get("kind").and_then(Json::as_str), Some("invalid_plan"), "{body}");
+    let (code, body) = client.request("GET", "/v1/models/tiny/plan", None).unwrap();
+    assert_eq!(code, 200, "{body}");
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.get("name").and_then(Json::as_str), Some("swap-30-60-10"), "{body}");
+    let (code, _) =
+        client.request("POST", "/v1/models/tiny/infer", Some(&infer_body(&image))).unwrap();
+    assert_eq!(code, 200, "model stopped serving after a rejected upload");
+
+    front.stop();
+}
+
+/// Concurrent first requests build the backend exactly once, and an
+/// untouched entry never builds at all.
+#[test]
+fn entries_prepare_lazily_and_exactly_once() {
+    let pool = ServerPool::synthetic_pair(21).unwrap();
+    let tiny = pool.entry("tiny").unwrap().clone();
+    let narrow = pool.entry("narrow").unwrap().clone();
+    assert_eq!(tiny.prepares(), 0, "cold entry must not have built");
+    assert_eq!(narrow.prepares(), 0);
+
+    let handles: Vec<_> = (0..8)
+        .map(|_| {
+            let e = tiny.clone();
+            std::thread::spawn(move || {
+                let rx = e.submit(vec![0.2f32; e.image_elems()]).unwrap();
+                rx.recv_timeout(Duration::from_secs(30)).unwrap()
+            })
+        })
+        .collect();
+    for h in handles {
+        let reply = h.join().unwrap();
+        assert!(reply.is_ok(), "{reply:?}");
+    }
+    assert_eq!(tiny.prepares(), 1, "concurrent first requests built more than once");
+    assert_eq!(narrow.prepares(), 0, "untouched entry built eagerly");
+
+    pool.shutdown();
+}
+
+/// Routing to a model the pool does not serve is a 404 that names the
+/// models it does.
+#[test]
+fn unknown_model_is_a_404_listing_the_pool() {
+    let pool = ServerPool::synthetic_pair(5).unwrap();
+    let front = start_pool_front(pool);
+    let mut client = client_for(&front);
+
+    for (method, path) in [
+        ("GET", "/v1/models/nope"),
+        ("POST", "/v1/models/nope/infer"),
+        ("GET", "/v1/models/nope/plan"),
+    ] {
+        let body_arg = if method == "POST" { Some("{\"image\": []}") } else { None };
+        let (code, body) = client.request(method, path, body_arg).unwrap();
+        assert_eq!(code, 404, "{method} {path}: {body}");
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.get("kind").and_then(Json::as_str), Some("unknown_model"), "{body}");
+        let models: Vec<&str> = j
+            .get("models")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .map(|v| v.as_str().unwrap())
+            .collect();
+        assert_eq!(models, vec!["tiny", "narrow"], "{body}");
+    }
+
+    front.stop();
+}
