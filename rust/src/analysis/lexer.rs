@@ -1,0 +1,375 @@
+//! A small hand-rolled Rust lexer — just enough structure for the `ilmpq
+//! analyze` rules (same no-dependency discipline as `util/json.rs`).
+//!
+//! The lexer produces a flat token stream (identifiers, punctuation,
+//! literals, lifetimes) with 1-based line numbers, skipping comments and
+//! the *contents* of string literals so that rule matching never triggers
+//! on prose. Line comments are additionally scanned for the suppression
+//! pragma `// analyze:allow(reason)` — it must start the comment, so prose
+//! that merely mentions it is not a suppression; a pragma whose reason is
+//! missing or empty is recorded separately so the analyzer can reject it (a
+//! suppression without a justification is itself a finding).
+//!
+//! This is not a full Rust lexer — shebangs, nested raw-identifier edge
+//! cases and exotic literal suffixes are out of scope — but it handles
+//! everything that appears in this crate: nested block comments, raw
+//! strings (`r"…"`, `r#"…"#`, `b"…"`, `br#"…"#`), char literals vs.
+//! lifetimes, and float/int/hex literals.
+
+use std::collections::BTreeMap;
+
+/// Token classification. Rules mostly care about `Ident` vs `Punct`;
+/// string literals keep their contents so R4 can match JSON keys.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Punct,
+    Str,
+    Num,
+    Char,
+    Lifetime,
+}
+
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: TokKind,
+    pub text: String,
+    /// 1-based line of the token's first character.
+    pub line: usize,
+}
+
+impl Token {
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+
+    pub fn is_punct(&self, s: &str) -> bool {
+        self.kind == TokKind::Punct && self.text == s
+    }
+}
+
+/// One lexed source file: the token stream plus pragma bookkeeping.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    /// `line -> reason` for each well-formed `// analyze:allow(reason)`.
+    pub pragmas: BTreeMap<usize, String>,
+    /// Lines carrying an `analyze:allow` with a missing or empty reason.
+    pub bad_pragmas: Vec<usize>,
+}
+
+impl Lexed {
+    /// A finding on `line` is suppressed by a pragma on the same line or
+    /// on the line directly above it.
+    pub fn suppressed(&self, line: usize) -> bool {
+        self.pragmas.contains_key(&line)
+            || (line > 1 && self.pragmas.contains_key(&(line - 1)))
+    }
+}
+
+const PRAGMA: &str = "analyze:allow";
+
+fn scan_pragma(comment: &str, line: usize, out: &mut Lexed) {
+    // The pragma must *start* the comment (after `//`/`///`/`//!` and
+    // whitespace) — prose that merely mentions `analyze:allow` mid-sentence
+    // (like this comment) is not a suppression attempt.
+    let head = comment.trim_start_matches('/').trim_start_matches('!').trim_start();
+    if !head.starts_with(PRAGMA) {
+        return;
+    }
+    let rest = &head[PRAGMA.len()..];
+    let reason = rest
+        .strip_prefix('(')
+        .and_then(|r| r.rfind(')').map(|end| r[..end].trim().to_string()));
+    match reason {
+        Some(r) if !r.is_empty() => {
+            out.pragmas.insert(line, r);
+        }
+        _ => out.bad_pragmas.push(line),
+    }
+}
+
+/// Lex one file. Never fails: unterminated constructs are consumed to EOF.
+pub fn lex(src: &str) -> Lexed {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1usize;
+
+    let push = |out: &mut Lexed, kind: TokKind, text: String, line: usize| {
+        out.tokens.push(Token { kind, text, line });
+    };
+
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment (also doc comments) — scan for the pragma.
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            let start = i;
+            while i < n && b[i] != '\n' {
+                i += 1;
+            }
+            let text: String = b[start..i].iter().collect();
+            scan_pragma(&text, line, &mut out);
+            continue;
+        }
+        // Block comment; Rust block comments nest.
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw / byte string literals: r"…", r#"…"#, b"…", br#"…"#.
+        if c == 'r' || c == 'b' {
+            let mut j = i + 1;
+            if c == 'b' && j < n && b[j] == 'r' {
+                j += 1;
+            }
+            let mut hashes = 0usize;
+            while j < n && b[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && b[j] == '"' {
+                // Only treat as a string when a quote actually follows the
+                // prefix (so `r#ident` raw identifiers fall through below).
+                let start_line = line;
+                j += 1;
+                let mut text = String::new();
+                'outer: while j < n {
+                    if b[j] == '\n' {
+                        line += 1;
+                    }
+                    if b[j] == '"' {
+                        // Need `hashes` trailing #s to close.
+                        let mut k = 0usize;
+                        while k < hashes && j + 1 + k < n && b[j + 1 + k] == '#' {
+                            k += 1;
+                        }
+                        if k == hashes {
+                            j += 1 + hashes;
+                            break 'outer;
+                        }
+                    }
+                    text.push(b[j]);
+                    j += 1;
+                }
+                push(&mut out, TokKind::Str, text, start_line);
+                i = j;
+                continue;
+            }
+            // Not a string: fall through to identifier handling.
+        }
+        // Plain string literal with escapes.
+        if c == '"' {
+            let start_line = line;
+            i += 1;
+            let mut text = String::new();
+            while i < n {
+                match b[i] {
+                    '\\' => {
+                        if i + 1 < n {
+                            if b[i + 1] == '\n' {
+                                line += 1;
+                            }
+                            text.push(b[i + 1]);
+                        }
+                        i += 2;
+                    }
+                    '"' => {
+                        i += 1;
+                        break;
+                    }
+                    ch => {
+                        if ch == '\n' {
+                            line += 1;
+                        }
+                        text.push(ch);
+                        i += 1;
+                    }
+                }
+            }
+            push(&mut out, TokKind::Str, text, start_line);
+            continue;
+        }
+        // Char literal vs. lifetime.
+        if c == '\'' {
+            if i + 1 < n && b[i + 1] == '\\' {
+                // Escaped char literal: consume to the closing quote.
+                let start_line = line;
+                i += 2;
+                while i < n && b[i] != '\'' {
+                    if b[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+                i += 1;
+                push(&mut out, TokKind::Char, String::new(), start_line);
+            } else if i + 2 < n && b[i + 2] == '\'' {
+                push(&mut out, TokKind::Char, b[i + 1].to_string(), line);
+                i += 3;
+            } else {
+                let start = i + 1;
+                i += 1;
+                while i < n && (b[i] == '_' || b[i].is_alphanumeric()) {
+                    i += 1;
+                }
+                let text: String = b[start..i].iter().collect();
+                push(&mut out, TokKind::Lifetime, text, line);
+            }
+            continue;
+        }
+        // Identifier / keyword.
+        if c == '_' || c.is_alphabetic() {
+            let start = i;
+            i += 1;
+            while i < n && (b[i] == '_' || b[i].is_alphanumeric()) {
+                i += 1;
+            }
+            let text: String = b[start..i].iter().collect();
+            push(&mut out, TokKind::Ident, text, line);
+            continue;
+        }
+        // Numeric literal. A `.` joins only when followed by a digit, so
+        // ranges like `0..len` stay three tokens and `len` stays an ident.
+        if c.is_ascii_digit() {
+            let start = i;
+            i += 1;
+            while i < n {
+                let ch = b[i];
+                if ch.is_ascii_alphanumeric() || ch == '_' {
+                    if (ch == 'e' || ch == 'E')
+                        && i + 2 < n
+                        && (b[i + 1] == '+' || b[i + 1] == '-')
+                        && b[i + 2].is_ascii_digit()
+                    {
+                        i += 2; // consume the exponent sign too
+                    }
+                    i += 1;
+                } else if ch == '.' && i + 1 < n && b[i + 1].is_ascii_digit() {
+                    i += 1;
+                } else {
+                    break;
+                }
+            }
+            let text: String = b[start..i].iter().collect();
+            push(&mut out, TokKind::Num, text, line);
+            continue;
+        }
+        // Anything else is single-character punctuation.
+        push(&mut out, TokKind::Punct, c.to_string(), line);
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(lx: &Lexed) -> Vec<&str> {
+        lx.tokens
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text.as_str())
+            .collect()
+    }
+
+    #[test]
+    fn comments_and_strings_are_not_tokens() {
+        let lx = lex("// unwrap()\n/* panic! /* nested */ */ let s = \"x.unwrap()\";");
+        assert_eq!(idents(&lx), vec!["let", "s"]);
+        // The string literal is kept (R4 matches JSON keys), contents intact.
+        assert!(lx.tokens.iter().any(|t| t.kind == TokKind::Str && t.text == "x.unwrap()"));
+    }
+
+    #[test]
+    fn raw_strings_and_lifetimes() {
+        let lx = lex("let q = r#\"{\"k\": 1}\"#; fn f<'a>(x: &'a str) -> char { 'x' }");
+        assert!(lx.tokens.iter().any(|t| t.kind == TokKind::Str && t.text.contains("\"k\"")));
+        assert!(lx.tokens.iter().any(|t| t.kind == TokKind::Lifetime && t.text == "a"));
+        assert!(lx.tokens.iter().any(|t| t.kind == TokKind::Char && t.text == "x"));
+    }
+
+    #[test]
+    fn line_numbers_track_newlines() {
+        let lx = lex("a\nb\n\n \"s1\nstill s1\" c");
+        let find = |name: &str| lx.tokens.iter().find(|t| t.text == name).map(|t| t.line);
+        assert_eq!(find("a"), Some(1));
+        assert_eq!(find("b"), Some(2));
+        assert_eq!(find("c"), Some(5));
+    }
+
+    #[test]
+    fn ranges_do_not_swallow_idents() {
+        let lx = lex("for i in 0..n_workers { x[1..] }");
+        assert!(idents(&lx).contains(&"n_workers"));
+        let nums: Vec<&str> = lx
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokKind::Num)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(nums, vec!["0", "1"]);
+    }
+
+    #[test]
+    fn float_and_hex_literals() {
+        let lx = lex("let x = 1.5e-3 + 0x1f + 10_000u64;");
+        let nums: Vec<&str> = lx
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokKind::Num)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(nums, vec!["1.5e-3", "0x1f", "10_000u64"]);
+    }
+
+    #[test]
+    fn pragma_with_reason_is_recorded() {
+        let lx = lex("// analyze:allow(worker pool invariant)\nx.unwrap();");
+        assert_eq!(lx.pragmas.get(&1).map(String::as_str), Some("worker pool invariant"));
+        assert!(lx.bad_pragmas.is_empty());
+        assert!(lx.suppressed(1));
+        assert!(lx.suppressed(2));
+        assert!(!lx.suppressed(3));
+    }
+
+    #[test]
+    fn pragma_without_reason_is_rejected() {
+        let lx = lex("// analyze:allow()\n// analyze:allow\n// analyze:allow(  )");
+        assert!(lx.pragmas.is_empty());
+        assert_eq!(lx.bad_pragmas, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn prose_mentioning_the_pragma_is_not_a_pragma() {
+        let lx = lex("//! suppress with a `// analyze:allow(reason)` comment\n// docs say analyze:allow needs a reason\n//! analyze:allow(starts the comment, so this one counts)");
+        assert_eq!(lx.pragmas.keys().copied().collect::<Vec<_>>(), vec![3]);
+        assert!(lx.bad_pragmas.is_empty());
+    }
+}

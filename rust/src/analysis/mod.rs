@@ -1,0 +1,163 @@
+//! `ilmpq analyze` — a project-specific static analyzer for the crate's own
+//! source, dependency-free by the same discipline as `util/json.rs`.
+//!
+//! The serving stack's invariants (answer-exactly-once replies, bounded
+//! admission, typed-error exhaustiveness, balanced `Metrics` ledgers) were
+//! previously enforced only dynamically, by chaos/pool smoke tests sampling
+//! a few schedules. This module enforces them *statically*: a hand-rolled
+//! lexer ([`lexer`]) feeds per-rule visitors ([`rules`]) that fail the build
+//! on violation. The runtime twin is [`crate::coordinator::Metrics::audit`],
+//! which checks the same ledger invariants on every drained server stop.
+//!
+//! Suppression: `// analyze:allow(reason)` on the flagged line or the line
+//! above. The reason is mandatory — an empty one is itself a finding (P0).
+
+pub mod lexer;
+pub mod rules;
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// One source file, with a `/`-separated path relative to the analyzed root.
+#[derive(Debug, Clone)]
+pub struct SourceFile {
+    pub path: String,
+    pub text: String,
+}
+
+/// The unit of analysis: a set of source files. Built either from a
+/// directory walk ([`Project::load`]) or from in-memory fixtures in tests.
+#[derive(Debug, Clone, Default)]
+pub struct Project {
+    pub files: Vec<SourceFile>,
+}
+
+/// One rule violation at a file:line.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub path: String,
+    pub line: usize,
+    pub message: String,
+}
+
+impl Project {
+    /// Recursively load every `.rs` file under `root`.
+    pub fn load(root: &Path) -> Result<Project> {
+        fn walk(root: &Path, dir: &Path, out: &mut Vec<SourceFile>) -> Result<()> {
+            let entries =
+                std::fs::read_dir(dir).with_context(|| format!("read_dir {}", dir.display()))?;
+            for entry in entries {
+                let p = entry?.path();
+                if p.is_dir() {
+                    walk(root, &p, out)?;
+                } else if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+                    let rel = p
+                        .strip_prefix(root)
+                        .unwrap_or(&p)
+                        .components()
+                        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+                        .collect::<Vec<_>>()
+                        .join("/");
+                    let text = std::fs::read_to_string(&p)
+                        .with_context(|| format!("read {}", p.display()))?;
+                    out.push(SourceFile { path: rel, text });
+                }
+            }
+            Ok(())
+        }
+        let mut files = Vec::new();
+        walk(root, root, &mut files)?;
+        anyhow::ensure!(!files.is_empty(), "no .rs files under {}", root.display());
+        files.sort_by(|a, b| a.path.cmp(&b.path));
+        Ok(Project { files })
+    }
+
+    /// Build a project from in-memory fixtures (tests).
+    pub fn from_memory(files: &[(&str, &str)]) -> Project {
+        Project {
+            files: files
+                .iter()
+                .map(|(p, t)| SourceFile { path: (*p).to_string(), text: (*t).to_string() })
+                .collect(),
+        }
+    }
+}
+
+/// Run every rule; findings come back sorted by (path, line, rule).
+pub fn analyze(project: &Project) -> Vec<Finding> {
+    rules::run_all(project)
+}
+
+/// Human-readable report: one `path:line [rule] message` per finding plus a
+/// summary line. Clean runs say so explicitly.
+pub fn render_text(project: &Project, findings: &[Finding]) -> String {
+    let mut out = String::new();
+    for f in findings {
+        out.push_str(&format!("{}:{} [{}] {}\n", f.path, f.line, f.rule, f.message));
+    }
+    out.push_str(&format!(
+        "ilmpq analyze: {} finding{} in {} file{}\n",
+        findings.len(),
+        if findings.len() == 1 { "" } else { "s" },
+        project.files.len(),
+        if project.files.len() == 1 { "" } else { "s" },
+    ));
+    out
+}
+
+/// Machine-readable report for the CI gate (`ilmpq analyze --json`).
+pub fn report_json(project: &Project, findings: &[Finding]) -> Json {
+    Json::obj(vec![
+        ("files", Json::Num(project.files.len() as f64)),
+        ("clean", Json::Bool(findings.is_empty())),
+        (
+            "rules",
+            Json::Arr(
+                rules::RULES
+                    .iter()
+                    .map(|(id, summary)| {
+                        Json::obj(vec![
+                            ("id", Json::Str((*id).to_string())),
+                            ("summary", Json::Str((*summary).to_string())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "findings",
+            Json::Arr(
+                findings
+                    .iter()
+                    .map(|f| {
+                        Json::obj(vec![
+                            ("rule", Json::Str(f.rule.to_string())),
+                            ("path", Json::Str(f.path.clone())),
+                            ("line", Json::Num(f.line as f64)),
+                            ("message", Json::Str(f.message.clone())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_shapes() {
+        let p = Project::from_memory(&[("coordinator/a.rs", "fn f() { x.unwrap(); }")]);
+        let findings = analyze(&p);
+        assert_eq!(findings.len(), 1);
+        let text = render_text(&p, &findings);
+        assert!(text.contains("coordinator/a.rs:1 [R1]"), "{text}");
+        let j = report_json(&p, &findings);
+        assert_eq!(j.get("clean"), Some(&Json::Bool(false)));
+        assert_eq!(j.get("findings").and_then(Json::as_arr).map(|a| a.len()), Some(1));
+    }
+}

@@ -1,0 +1,735 @@
+//! The `ilmpq analyze` rule set.
+//!
+//! Each rule encodes one documented serving-stack invariant (see ROADMAP
+//! "Architecture: static analysis & invariant audit"):
+//!
+//! | id | invariant |
+//! |----|-----------|
+//! | P0 | an `analyze:allow` pragma must carry a non-empty reason |
+//! | R1 | no `unwrap`/`expect`/`panic!` in serving-path non-test code |
+//! | R2 | no `let _ =` on a `send`/`reply` call (answer-exactly-once) |
+//! | R3 | every `ServeError` variant is mapped in `http.rs` and `loadgen.rs` |
+//! | R4 | every `Metrics` counter is emitted by `report()` and `to_json()` |
+//! | R5 | no held lock guard whose scope runs a blocking call |
+//!
+//! Rules work on the `lexer` token stream — no syn, no rustc. They are
+//! deliberately conservative pattern matchers: a miss is possible, a false
+//! positive is answered with `// analyze:allow(reason)` at the flagged line.
+
+use super::lexer::{Lexed, TokKind, Token};
+use super::{Finding, Project};
+
+/// Rule table used by the CLI/JSON report.
+pub const RULES: &[(&str, &str)] = &[
+    ("P0", "analyze:allow pragma requires a non-empty reason"),
+    ("R1", "no unwrap/expect/panic! in serving-path non-test code"),
+    ("R2", "no `let _ =` on a send/reply call (answer-exactly-once)"),
+    ("R3", "every ServeError variant mapped in http.rs and loadgen.rs"),
+    ("R4", "every Metrics counter emitted by report() and to_json()"),
+    ("R5", "no held lock guard whose scope runs a blocking call"),
+];
+
+/// One lexed file plus its test-code token ranges, shared by all rules.
+pub struct FileView<'a> {
+    pub path: &'a str,
+    pub lx: Lexed,
+    excluded: Vec<(usize, usize)>,
+}
+
+impl<'a> FileView<'a> {
+    pub fn new(path: &'a str, text: &str) -> FileView<'a> {
+        let lx = super::lexer::lex(text);
+        let excluded = test_ranges(&lx.tokens);
+        FileView { path, lx, excluded }
+    }
+
+    fn toks(&self) -> &[Token] {
+        &self.lx.tokens
+    }
+
+    /// True when token `idx` sits inside `#[cfg(test)]`/`#[test]` code.
+    fn in_test_code(&self, idx: usize) -> bool {
+        self.excluded.iter().any(|&(s, e)| idx >= s && idx <= e)
+    }
+
+    /// Last path component, e.g. `server.rs`.
+    fn file_name(&self) -> &str {
+        self.path.rsplit('/').next().unwrap_or(self.path)
+    }
+
+    fn push(&self, out: &mut Vec<Finding>, rule: &'static str, line: usize, msg: String) {
+        if !self.lx.suppressed(line) {
+            out.push(Finding { rule, path: self.path.to_string(), line, message: msg });
+        }
+    }
+}
+
+fn is_punct_at(toks: &[Token], idx: usize, s: &str) -> bool {
+    toks.get(idx).is_some_and(|t| t.is_punct(s))
+}
+
+fn is_ident_at(toks: &[Token], idx: usize, s: &str) -> bool {
+    toks.get(idx).is_some_and(|t| t.is_ident(s))
+}
+
+/// Index of the `}` matching the `{` at `open` (or the last token on
+/// unbalanced input).
+fn match_brace(toks: &[Token], open: usize) -> usize {
+    let mut d = 0i64;
+    for (j, t) in toks.iter().enumerate().skip(open) {
+        if t.is_punct("{") {
+            d += 1;
+        } else if t.is_punct("}") {
+            d -= 1;
+            if d == 0 {
+                return j;
+            }
+        }
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// Index of the `]` matching the `[` at `open`.
+fn match_bracket(toks: &[Token], open: usize) -> usize {
+    let mut d = 0i64;
+    for (j, t) in toks.iter().enumerate().skip(open) {
+        if t.is_punct("[") {
+            d += 1;
+        } else if t.is_punct("]") {
+            d -= 1;
+            if d == 0 {
+                return j;
+            }
+        }
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// Index of the `)` matching the `(` at `open`.
+fn match_paren(toks: &[Token], open: usize) -> usize {
+    let mut d = 0i64;
+    for (j, t) in toks.iter().enumerate().skip(open) {
+        if t.is_punct("(") {
+            d += 1;
+        } else if t.is_punct(")") {
+            d -= 1;
+            if d == 0 {
+                return j;
+            }
+        }
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// `#[test]` / `#[cfg(test)]` attribute contents (`#[cfg(not(test))]` is
+/// *not* a test marker).
+fn attr_is_test(toks: &[Token]) -> bool {
+    let first = toks.iter().find(|t| t.kind == TokKind::Ident);
+    match first.map(|t| t.text.as_str()) {
+        Some("test") => true,
+        Some("cfg") => {
+            toks.iter().any(|t| t.is_ident("test")) && !toks.iter().any(|t| t.is_ident("not"))
+        }
+        _ => false,
+    }
+}
+
+/// Token-index ranges covered by `#[cfg(test)] mod … { }` / `#[test] fn … { }`.
+fn test_ranges(toks: &[Token]) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if is_punct_at(toks, i, "#") && is_punct_at(toks, i + 1, "[") {
+            let close = match_bracket(toks, i + 1);
+            if attr_is_test(&toks[i + 2..close]) {
+                // Skip any further attributes on the same item.
+                let mut j = close + 1;
+                while is_punct_at(toks, j, "#") && is_punct_at(toks, j + 1, "[") {
+                    j = match_bracket(toks, j + 1) + 1;
+                }
+                // Find the item body; a `;` first means no body (skip).
+                let mut open = None;
+                let mut k = j;
+                while k < toks.len() && k < j + 64 {
+                    if is_punct_at(toks, k, ";") {
+                        break;
+                    }
+                    if is_punct_at(toks, k, "{") {
+                        open = Some(k);
+                        break;
+                    }
+                    k += 1;
+                }
+                if let Some(open) = open {
+                    let end = match_brace(toks, open);
+                    out.push((i, end));
+                    i = end + 1;
+                    continue;
+                }
+            }
+            i = close + 1;
+            continue;
+        }
+        i += 1;
+    }
+    out
+}
+
+// ---------------------------------------------------------------- P0
+
+pub fn p0_bad_pragmas(file: &FileView, out: &mut Vec<Finding>) {
+    for &line in &file.lx.bad_pragmas {
+        out.push(Finding {
+            rule: "P0",
+            path: file.path.to_string(),
+            line,
+            message: "analyze:allow pragma without a reason — a suppression must \
+                      justify itself: `// analyze:allow(why this is sound)`"
+                .to_string(),
+        });
+    }
+}
+
+// ---------------------------------------------------------------- R1
+
+fn r1_in_scope(path: &str) -> bool {
+    path.contains("coordinator/") || path.contains("backend/") || path.ends_with("quant/plan.rs")
+}
+
+/// No `unwrap()`/`expect()`/`panic!`-family macros in serving-path non-test
+/// code. A panic on the serving path tears down a worker and (before the
+/// supervision layers existed) the whole answer-exactly-once story.
+pub fn r1_no_unwrap(file: &FileView, out: &mut Vec<Finding>) {
+    if !r1_in_scope(file.path) {
+        return;
+    }
+    let toks = file.toks();
+    for (idx, t) in toks.iter().enumerate() {
+        if t.kind != TokKind::Ident || file.in_test_code(idx) {
+            continue;
+        }
+        match t.text.as_str() {
+            "unwrap" | "expect" => {
+                if idx > 0 && toks[idx - 1].is_punct(".") && is_punct_at(toks, idx + 1, "(") {
+                    file.push(
+                        out,
+                        "R1",
+                        t.line,
+                        format!(
+                            "`.{}()` in serving-path code: return a typed error \
+                             (ServeError / anyhow) or justify with \
+                             `// analyze:allow(reason)`",
+                            t.text
+                        ),
+                    );
+                }
+            }
+            "panic" | "todo" | "unimplemented" => {
+                if is_punct_at(toks, idx + 1, "!") {
+                    file.push(
+                        out,
+                        "R1",
+                        t.line,
+                        format!(
+                            "`{}!` in serving-path code: the serving path must \
+                             degrade, not die — return a typed error or justify \
+                             with `// analyze:allow(reason)`",
+                            t.text
+                        ),
+                    );
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+// ---------------------------------------------------------------- R2
+
+fn r2_in_scope(name: &str) -> bool {
+    matches!(name, "server.rs" | "pool.rs" | "http.rs")
+}
+
+/// No `let _ = …send(…)` / `let _ = …reply(…)`: silently discarding a send
+/// result can drop a reply channel and break answer-exactly-once. Either
+/// handle the `Err` (count it, answer the members) or annotate why the
+/// receiver being gone is fine.
+pub fn r2_no_dropped_reply(file: &FileView, out: &mut Vec<Finding>) {
+    if !r2_in_scope(file.file_name()) {
+        return;
+    }
+    let toks = file.toks();
+    for (idx, t) in toks.iter().enumerate() {
+        if t.kind != TokKind::Ident || file.in_test_code(idx) {
+            continue;
+        }
+        if !(t.text == "send" || t.text == "reply") {
+            continue;
+        }
+        if !(idx > 0 && toks[idx - 1].is_punct(".") && is_punct_at(toks, idx + 1, "(")) {
+            continue;
+        }
+        // Walk back to the start of the statement…
+        let mut j = idx;
+        while j > 0 {
+            let p = &toks[j - 1];
+            if p.is_punct(";") || p.is_punct("{") || p.is_punct("}") {
+                break;
+            }
+            j -= 1;
+        }
+        // …and check whether it opens with `let _ =`.
+        if is_ident_at(toks, j, "let")
+            && is_ident_at(toks, j + 1, "_")
+            && is_punct_at(toks, j + 2, "=")
+        {
+            file.push(
+                out,
+                "R2",
+                t.line,
+                format!(
+                    "`let _ =` discards the result of `.{}()` — a dropped reply \
+                     breaks answer-exactly-once; handle the Err (count it, answer \
+                     the members) or justify with `// analyze:allow(reason)`",
+                    t.text
+                ),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------- R3
+
+/// Variants of `enum <name> { … }` with their declaration lines.
+fn enum_variants(toks: &[Token], name: &str) -> Option<Vec<(String, usize)>> {
+    let mut i = 0usize;
+    let open = loop {
+        if i + 1 >= toks.len() {
+            return None;
+        }
+        if is_ident_at(toks, i, "enum") && is_ident_at(toks, i + 1, name) {
+            let mut k = i + 2;
+            while k < toks.len() && !toks[k].is_punct("{") {
+                k += 1;
+            }
+            break k;
+        }
+        i += 1;
+    };
+    let close = match_brace(toks, open);
+    let mut vars = Vec::new();
+    let mut depth = 0i64;
+    let mut expect_variant = true;
+    let mut j = open + 1;
+    while j < close {
+        let t = &toks[j];
+        if depth == 0 && t.is_punct("#") && is_punct_at(toks, j + 1, "[") {
+            j = match_bracket(toks, j + 1) + 1;
+            continue;
+        }
+        match t.text.as_str() {
+            "{" | "(" | "[" if t.kind == TokKind::Punct => depth += 1,
+            "}" | ")" | "]" if t.kind == TokKind::Punct => depth -= 1,
+            "," if t.kind == TokKind::Punct && depth == 0 => expect_variant = true,
+            _ => {
+                if depth == 0 && expect_variant && t.kind == TokKind::Ident {
+                    vars.push((t.text.clone(), t.line));
+                    expect_variant = false;
+                }
+            }
+        }
+        j += 1;
+    }
+    Some(vars)
+}
+
+/// Does the file mention `ServeError::<variant>` anywhere?
+fn mentions_variant(toks: &[Token], enum_name: &str, variant: &str) -> bool {
+    toks.iter().enumerate().any(|(i, t)| {
+        t.is_ident(enum_name)
+            && is_punct_at(toks, i + 1, ":")
+            && is_punct_at(toks, i + 2, ":")
+            && is_ident_at(toks, i + 3, variant)
+    })
+}
+
+/// Every `ServeError` variant must appear in the HTTP status mapping and in
+/// loadgen's outcome-class fold — adding a variant without wiring both is a
+/// build failure, not a silent `_ =>` bucket.
+pub fn r3_error_mapping(files: &[FileView], out: &mut Vec<Finding>) {
+    let Some(server) = files.iter().find(|f| f.file_name() == "server.rs") else { return };
+    let Some(variants) = enum_variants(server.toks(), "ServeError") else { return };
+    for consumer in ["http.rs", "loadgen.rs"] {
+        let Some(target) = files.iter().find(|f| f.file_name() == consumer) else { continue };
+        for (variant, line) in &variants {
+            if !mentions_variant(target.toks(), "ServeError", variant) {
+                server.push(
+                    out,
+                    "R3",
+                    *line,
+                    format!(
+                        "ServeError::{variant} is never matched in {consumer} — \
+                         wire the new variant into its status mapping / outcome \
+                         fold (R3: error-mapping exhaustiveness)"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- R4
+
+/// Fields of `struct <name> { … }` whose type mentions one of `counter_tys`.
+fn struct_counter_fields(toks: &[Token], name: &str, counter_tys: &[&str]) -> Vec<(String, usize)> {
+    let mut i = 0usize;
+    let open = loop {
+        if i + 1 >= toks.len() {
+            return Vec::new();
+        }
+        if is_ident_at(toks, i, "struct") && is_ident_at(toks, i + 1, name) {
+            let mut k = i + 2;
+            while k < toks.len() && !toks[k].is_punct("{") {
+                k += 1;
+            }
+            break k;
+        }
+        i += 1;
+    };
+    let close = match_brace(toks, open);
+    let mut fields = Vec::new();
+    // Split the body into `,`-separated segments at depth 0.
+    let mut depth = 0i64;
+    let mut seg: Vec<usize> = Vec::new();
+    let mut j = open + 1;
+    let mut flush = |seg: &mut Vec<usize>, fields: &mut Vec<(String, usize)>| {
+        // Segment shape: [attrs] [pub] <name> : <type tokens…>
+        let colon = seg.iter().position(|&k| toks[k].is_punct(":"));
+        if let Some(c) = colon {
+            let name_idx = seg[..c]
+                .iter()
+                .rev()
+                .find(|&&k| toks[k].kind == TokKind::Ident && toks[k].text != "pub")
+                .copied();
+            let has_counter_ty = seg[c..]
+                .iter()
+                .any(|&k| counter_tys.iter().any(|ty| toks[k].is_ident(ty)));
+            if let (Some(ni), true) = (name_idx, has_counter_ty) {
+                fields.push((toks[ni].text.clone(), toks[ni].line));
+            }
+        }
+        seg.clear();
+    };
+    while j < close {
+        let t = &toks[j];
+        if depth == 0 && t.is_punct("#") && is_punct_at(toks, j + 1, "[") {
+            j = match_bracket(toks, j + 1) + 1;
+            continue;
+        }
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "{" | "(" | "[" => depth += 1,
+                "}" | ")" | "]" => depth -= 1,
+                "," if depth == 0 => {
+                    flush(&mut seg, &mut fields);
+                    j += 1;
+                    continue;
+                }
+                _ => {}
+            }
+        }
+        seg.push(j);
+        j += 1;
+    }
+    flush(&mut seg, &mut fields);
+    fields
+}
+
+/// Body token range of `fn <name>` inside `impl <ty> { … }`.
+fn impl_fn_body(toks: &[Token], ty: &str, fn_name: &str) -> Option<(usize, usize)> {
+    let mut i = 0usize;
+    while i + 2 < toks.len() {
+        if is_ident_at(toks, i, "impl")
+            && is_ident_at(toks, i + 1, ty)
+            && is_punct_at(toks, i + 2, "{")
+        {
+            let close = match_brace(toks, i + 2);
+            let mut j = i + 3;
+            while j < close {
+                if is_ident_at(toks, j, "fn") && is_ident_at(toks, j + 1, fn_name) {
+                    let mut k = j + 2;
+                    while k < close && !toks[k].is_punct("{") {
+                        k += 1;
+                    }
+                    return Some((k, match_brace(toks, k)));
+                }
+                j += 1;
+            }
+            return None;
+        }
+        i += 1;
+    }
+    None
+}
+
+/// A counter is "emitted" by a body when the body mentions the field ident,
+/// a `<field>_name` helper, or a string literal equal to the field (JSON key).
+fn body_emits(toks: &[Token], body: (usize, usize), field: &str) -> bool {
+    let helper = format!("{field}_name");
+    toks[body.0..=body.1].iter().any(|t| {
+        (t.kind == TokKind::Ident && (t.text == field || t.text == helper))
+            || (t.kind == TokKind::Str && t.text == field)
+    })
+}
+
+/// Every `Metrics` counter (AtomicU64 / LatencyTrack field) must be emitted
+/// by both `report()` and `to_json()` — counters that exist but never
+/// surface are how ledgers silently drift.
+pub fn r4_counter_completeness(files: &[FileView], out: &mut Vec<Finding>) {
+    let Some(metrics) = files.iter().find(|f| f.file_name() == "metrics.rs") else { return };
+    let toks = metrics.toks();
+    let fields = struct_counter_fields(toks, "Metrics", &["AtomicU64", "LatencyTrack"]);
+    if fields.is_empty() {
+        return;
+    }
+    for (emitter, label) in [("report", "report()"), ("to_json", "to_json()")] {
+        let Some(body) = impl_fn_body(toks, "Metrics", emitter) else {
+            metrics.push(
+                out,
+                "R4",
+                1,
+                format!("Metrics has counters but no `{label}` emitter (R4)"),
+            );
+            continue;
+        };
+        for (field, line) in &fields {
+            if !body_emits(toks, body, field) {
+                metrics.push(
+                    out,
+                    "R4",
+                    *line,
+                    format!(
+                        "Metrics::{field} is never emitted by {label} — every \
+                         counter must surface in both the human report and the \
+                         JSON export (R4: counter completeness)"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- R5
+
+fn r5_in_scope(name: &str) -> bool {
+    matches!(name, "server.rs" | "pool.rs")
+}
+
+const LOCK_CALLS: &[&str] = &["lock", "plock", "write", "pwrite"];
+const CHAIN_OK: &[&str] = &["unwrap", "expect", "unwrap_or_else"];
+const BLOCKING: &[&str] =
+    &["run_batch", "recv", "recv_timeout", "join", "sleep", "build_server", "prepare"];
+
+/// Flag `let guard = …lock()…;` bindings whose remaining scope performs a
+/// blocking call (backend execution, channel recv, thread join/sleep,
+/// server build) while the guard is held. Intentional cases — the shared
+/// worker receiver, the swap gate — carry `analyze:allow` pragmas.
+pub fn r5_lock_scope(file: &FileView, out: &mut Vec<Finding>) {
+    if !r5_in_scope(file.file_name()) {
+        return;
+    }
+    let toks = file.toks();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !is_ident_at(toks, i, "let") || file.in_test_code(i) {
+            i += 1;
+            continue;
+        }
+        // Binding name (skip `mut`; skip `_` which drops immediately and
+        // destructuring patterns which we don't model).
+        let mut k = i + 1;
+        if is_ident_at(toks, k, "mut") {
+            k += 1;
+        }
+        let Some(bind) = toks.get(k) else { break };
+        if bind.kind != TokKind::Ident || bind.text == "_" {
+            i += 1;
+            continue;
+        }
+        let name = bind.text.clone();
+        // Optional `: Type` annotation, then `=`.
+        let mut e = k + 1;
+        while e < toks.len() && !toks[e].is_punct("=") && !toks[e].is_punct(";") {
+            e += 1;
+        }
+        if !is_punct_at(toks, e, "=") {
+            i += 1;
+            continue;
+        }
+        // Scan the RHS at depth 0 up to the statement's `;`.
+        let mut depth = 0i64;
+        let mut j = e + 1;
+        let mut lock_end: Option<usize> = None; // index after `)` of the lock call
+        let stmt_end = loop {
+            let Some(t) = toks.get(j) else { break toks.len() - 1 };
+            if t.kind == TokKind::Punct {
+                match t.text.as_str() {
+                    "{" | "(" | "[" => depth += 1,
+                    "}" | ")" | "]" => depth -= 1,
+                    ";" if depth == 0 => break j,
+                    _ => {}
+                }
+            }
+            if depth == 0
+                && t.kind == TokKind::Ident
+                && LOCK_CALLS.contains(&t.text.as_str())
+                && j > 0
+                && toks[j - 1].is_punct(".")
+                && is_punct_at(toks, j + 1, "(")
+            {
+                let close = match_paren(toks, j + 1);
+                // Allow a trailing `.unwrap()` / `.unwrap_or_else(…)` chain.
+                let mut m = close + 1;
+                while is_punct_at(toks, m, ".")
+                    && toks.get(m + 1).is_some_and(|t| {
+                        t.kind == TokKind::Ident && CHAIN_OK.contains(&t.text.as_str())
+                    })
+                    && is_punct_at(toks, m + 2, "(")
+                {
+                    m = match_paren(toks, m + 2) + 1;
+                }
+                lock_end = Some(m);
+                depth += 1; // we are about to re-walk from inside the parens
+                j += 2; // step past `(`
+                continue;
+            }
+            j += 1;
+        };
+        // A guard binding = the lock/chain runs right up to the `;`.
+        let is_guard = lock_end == Some(stmt_end);
+        if is_guard {
+            // Scan the guard's scope: from after `;` to the end of the
+            // enclosing block, stopping early at an explicit `drop(name)`.
+            let mut d = 0i64;
+            let mut s = stmt_end + 1;
+            while s < toks.len() {
+                let t = &toks[s];
+                if t.kind == TokKind::Punct {
+                    match t.text.as_str() {
+                        "{" => d += 1,
+                        "}" => {
+                            d -= 1;
+                            if d < 0 {
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+                if t.is_ident("drop")
+                    && is_punct_at(toks, s + 1, "(")
+                    && is_ident_at(toks, s + 2, &name)
+                    && is_punct_at(toks, s + 3, ")")
+                {
+                    break;
+                }
+                if t.kind == TokKind::Ident
+                    && BLOCKING.contains(&t.text.as_str())
+                    && is_punct_at(toks, s + 1, "(")
+                {
+                    file.push(
+                        out,
+                        "R5",
+                        toks[i].line,
+                        format!(
+                            "lock guard `{name}` is held across a blocking \
+                             `{}()` call — shrink the guard's scope (drop it or \
+                             bind inside a block) or justify with \
+                             `// analyze:allow(reason)`",
+                            t.text
+                        ),
+                    );
+                    break; // one finding per guard
+                }
+                s += 1;
+            }
+        }
+        // Advance one token, not to `stmt_end`: a block-valued RHS can
+        // contain nested `let` guard bindings that must be analyzed too.
+        i += 1;
+    }
+}
+
+/// Run every rule over the project.
+pub fn run_all(project: &Project) -> Vec<Finding> {
+    let files: Vec<FileView> =
+        project.files.iter().map(|f| FileView::new(&f.path, &f.text)).collect();
+    let mut out = Vec::new();
+    for f in &files {
+        p0_bad_pragmas(f, &mut out);
+        r1_no_unwrap(f, &mut out);
+        r2_no_dropped_reply(f, &mut out);
+        r5_lock_scope(f, &mut out);
+    }
+    r3_error_mapping(&files, &mut out);
+    r4_counter_completeness(&files, &mut out);
+    out.sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn project(files: &[(&str, &str)]) -> Project {
+        Project {
+            files: files
+                .iter()
+                .map(|(p, t)| super::super::SourceFile {
+                    path: (*p).to_string(),
+                    text: (*t).to_string(),
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn test_ranges_cover_cfg_test_mod() {
+        let src = "fn live() { x.unwrap(); }\n#[cfg(test)]\nmod tests {\n  fn t() { y.unwrap(); }\n}\n";
+        let findings = run_all(&project(&[("coordinator/a.rs", src)]));
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert_eq!(findings[0].line, 1);
+    }
+
+    #[test]
+    fn r1_ignores_out_of_scope_paths() {
+        let findings = run_all(&project(&[("util/a.rs", "fn f() { x.unwrap(); }")]));
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn r1_does_not_match_unwrap_or_else() {
+        let src = "fn f() { m.lock().unwrap_or_else(|e| e.into_inner()); }";
+        let findings = run_all(&project(&[("coordinator/a.rs", src)]));
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn r5_sees_nested_guard_bindings() {
+        // The guard binding lives inside an outer `let`'s block-valued RHS;
+        // the scanner must not skip over it.
+        let src = "fn f() { let msg = { let rx = ch.plock(); rx.recv() }; msg; }";
+        let findings = run_all(&project(&[("coordinator/server.rs", src)]));
+        assert!(findings.iter().any(|f| f.rule == "R5"), "{findings:?}");
+    }
+
+    #[test]
+    fn enum_variant_parse_handles_payloads() {
+        let lx = super::super::lexer::lex(
+            "pub enum E { A, B(String), C { x: u32, y: Vec<u8> }, D }",
+        );
+        let vars: Vec<String> =
+            enum_variants(&lx.tokens, "E").unwrap().into_iter().map(|(v, _)| v).collect();
+        assert_eq!(vars, vec!["A", "B", "C", "D"]);
+    }
+}

@@ -49,6 +49,7 @@ impl PackedState {
             }
             let _ = self.model.set(m);
         }
+        // analyze:allow(OnceLock invariant: the branch above just set the model on this path)
         Ok(self.model.get().expect("set above"))
     }
 

@@ -33,6 +33,7 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use crate::quant::MaskSet;
+use crate::util::sync::LockExt;
 use crate::util::{Json, Rng};
 
 use super::{BatchOutput, InferenceBackend};
@@ -240,7 +241,7 @@ impl FaultyBackend {
     /// error, garbage) so the schedule for batch N never depends on which
     /// faults earlier batches actually exercised.
     fn draw(&self) -> FaultDraw {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.plock();
         let index = st.batch_index;
         st.batch_index += 1;
         FaultDraw {
@@ -308,6 +309,7 @@ impl InferenceBackend for FaultyBackend {
             std::thread::sleep(Duration::from_millis(self.spec.stall_ms));
         }
         if draw.panic {
+            // analyze:allow(the injected panic IS this backend's product; the supervision layers contain it)
             panic!("injected fault: panic (batch {})", draw.index);
         }
         if draw.error {

@@ -110,13 +110,14 @@ pub trait InferenceBackend: Send + Sync {
     fn run_batch(&self, images: &[f32], batch: usize) -> Result<BatchOutput>;
 }
 
-/// Argmax with the shared tie rule (last maximal index).
+/// Argmax with the shared tie rule (last maximal index). Uses the IEEE total
+/// order, so a NaN logit ranks above every finite score instead of
+/// panicking; an empty row maps to class 0.
 pub fn argmax(row: &[f32]) -> usize {
     row.iter()
         .enumerate()
-        .max_by(|a, c| a.1.partial_cmp(c.1).unwrap())
-        .map(|(k, _)| k)
-        .unwrap()
+        .max_by(|a, c| a.1.total_cmp(c.1))
+        .map_or(0, |(k, _)| k)
 }
 
 /// O(1) half of admission validation: the image must hold exactly

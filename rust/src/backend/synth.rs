@@ -88,6 +88,7 @@ fn finish_manifest(
             let (rows, fan) = if s.len() == 2 {
                 (s[0], s[1])
             } else {
+                // analyze:allow(non-matmul weights are rank-4 conv [kh,kw,cin,cout]; the slice is never empty)
                 (*s.last().unwrap(), s[..3].iter().product())
             };
             (n.clone(), rows, fan)

@@ -35,6 +35,7 @@ impl BatchPolicy {
     }
 
     pub fn max_batch(&self) -> usize {
+        // analyze:allow(BatchPolicy::new asserts sizes is non-empty)
         *self.sizes.last().unwrap()
     }
 

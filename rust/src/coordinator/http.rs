@@ -81,6 +81,7 @@ use super::pool::{PoolEntry, ServerPool};
 use super::server::{ServeError, Server};
 use crate::quant::QuantPlan;
 use crate::runtime::Manifest;
+use crate::util::sync::LockExt;
 use crate::util::Json;
 
 /// Read-poll granularity: handlers block at most this long per `read()`
@@ -189,10 +190,9 @@ impl HttpServer {
             let conn_rx = conn_rx.clone();
             let cfg = cfg.clone();
             handlers.push(std::thread::spawn(move || loop {
-                // Shared-receiver pool, same shape as the batch workers in
-                // server.rs: holding the mutex across recv is the handoff.
                 let stream = {
-                    let rx = conn_rx.lock().unwrap();
+                    // analyze:allow(shared-receiver pool, same shape as the batch workers in server.rs: holding the mutex across recv IS the connection handoff)
+                    let rx = conn_rx.plock();
                     rx.recv()
                 };
                 match stream {
@@ -251,11 +251,13 @@ impl HttpServer {
     pub fn server(&self) -> &Server {
         self.single
             .as_ref()
+            // analyze:allow(documented contract: this accessor panics in pool mode by design — see doc comment)
             .expect("single-model front end (pool mode has no default &Server)")
     }
 
     /// The model pool behind this front end.
     pub fn pool(&self) -> &Arc<ServerPool> {
+        // analyze:allow(construction invariant: pool is Some until stop()/Drop consumes the front end)
         self.pool.as_ref().expect("pool present until stop()")
     }
 
@@ -272,6 +274,7 @@ impl HttpServer {
     /// stop the admission pipeline (which answers everything in flight).
     /// Bounded by roughly [`READ_POLL`] + the longest in-flight request.
     pub fn stop(mut self) -> Arc<Metrics> {
+        // analyze:allow(stop consumes self, so this is the first teardown and always yields metrics)
         self.teardown().expect("first teardown returns the metrics")
     }
 
@@ -999,6 +1002,7 @@ impl HttpClient {
             stream.set_write_timeout(Some(self.timeout))?;
             self.conn = Some(ClientConn { stream, buf: Vec::new() });
         }
+        // analyze:allow(the branch above just installed the connection)
         Ok(self.conn.as_mut().expect("just ensured"))
     }
 

@@ -55,6 +55,7 @@ use super::server::{ServeError, Server};
 use crate::backend::{self, synth, BackendInit, InferenceBackend};
 use crate::quant::{ratio_by_name, MaskSet, Provenance, QuantPlan, QuantSource, Ratio};
 use crate::runtime::{HostTensor, Manifest};
+use crate::util::sync::LockExt;
 use crate::util::stats::Summary;
 use crate::util::{Json, Rng};
 
@@ -727,7 +728,7 @@ pub fn run_remote(url: &str, spec: &LoadSpec, conns: usize) -> Result<(LoadRepor
                 };
                 loop {
                     let job = {
-                        let rx = rx.lock().unwrap();
+                        let rx = rx.plock();
                         rx.recv()
                     };
                     let Ok(job) = job else { break };
@@ -998,7 +999,8 @@ pub fn synth_fixture(
         seed,
         true,
     )?;
-    Ok((m, be, plan.expect("a named source always resolves to a plan")))
+    let plan = plan.context("a named source always resolves to a plan")?;
+    Ok((m, be, plan))
 }
 
 /// The synthetic twin of [`backend::create_serving`]: build the fixture

@@ -18,6 +18,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::util::stats::Summary;
+use crate::util::sync::LockExt;
 use crate::util::Json;
 
 const MAX_SAMPLES: usize = 65_536;
@@ -37,7 +38,7 @@ pub struct LatencyTrack {
 
 impl LatencyTrack {
     pub fn record(&self, seconds: f64) {
-        let mut s = self.samples.lock().unwrap();
+        let mut s = self.samples.plock();
         if s.len() >= MAX_SAMPLES {
             // Drop oldest half — keeps recent behaviour without unbounded RAM.
             let keep = s.split_off(MAX_SAMPLES / 2);
@@ -50,12 +51,12 @@ impl LatencyTrack {
     pub fn summary(&self) -> Summary {
         // Snapshot under the lock (one memcpy), summarize outside it: the
         // sort in `Summary::of` must not block the request-path `record`.
-        let snap = self.samples.lock().unwrap().clone();
+        let snap = self.samples.plock().clone();
         Summary::of(&snap)
     }
 
     pub fn count(&self) -> usize {
-        self.samples.lock().unwrap().len()
+        self.samples.plock().len()
     }
 
     /// Samples discarded by the bounded window since startup. Zero until a
@@ -112,6 +113,11 @@ pub struct Metrics {
     /// Subset of `requests_done`: answered by a singleton retry after the
     /// original batch failed (batch-mates of a poison/transient fault).
     pub requests_recovered: AtomicU64,
+    /// Replies whose receiver was already gone when the server answered
+    /// (client stopped waiting — loadgen drain deadline, HTTP reply
+    /// timeout). Informational: the request is still counted in its outcome
+    /// class; this makes the dropped delivery observable instead of silent.
+    pub replies_unclaimed: AtomicU64,
     pub batches: AtomicU64,
     /// Batches whose backend execution errored (every member answered).
     pub batches_failed: AtomicU64,
@@ -191,9 +197,10 @@ impl Metrics {
     pub fn report(&self) -> String {
         format!(
             "requests: in={} done={} invalid={} shed={} failed={} shutdown={} \
-             timeout={} unavailable={} quarantined={} (recovered={})\n\
+             timeout={} unavailable={} quarantined={} \
+             (recovered={} replies_unclaimed={})\n\
              batches: {} ({} failed, {} timed out, {} retries, {} on fallback, \
-             occupancy {:.1}%, shed rate {:.1}%, \
+             slots {}+{} pad = occupancy {:.1}%, shed rate {:.1}%, \
              {} router wakeups)\n\
              breaker: {} (opened={} half_open={} closed={})\n\
              queue_wait: {}\nexecute:    {}\nfailed:     {}\n\
@@ -208,11 +215,14 @@ impl Metrics {
             Self::get(&self.requests_unavailable),
             Self::get(&self.requests_quarantined),
             Self::get(&self.requests_recovered),
+            Self::get(&self.replies_unclaimed),
             Self::get(&self.batches),
             Self::get(&self.batches_failed),
             Self::get(&self.batches_timeout),
             Self::get(&self.batch_retries),
             Self::get(&self.fallback_batches),
+            Self::get(&self.batched_requests),
+            Self::get(&self.padded_slots),
             self.batch_occupancy() * 100.0,
             self.shed_rate() * 100.0,
             Self::get(&self.router_wakeups),
@@ -246,6 +256,7 @@ impl Metrics {
             ("requests_unavailable", num(&self.requests_unavailable)),
             ("requests_quarantined", num(&self.requests_quarantined)),
             ("requests_recovered", num(&self.requests_recovered)),
+            ("replies_unclaimed", num(&self.replies_unclaimed)),
             ("batches", num(&self.batches)),
             ("batches_failed", num(&self.batches_failed)),
             ("batches_timeout", num(&self.batches_timeout)),
@@ -266,6 +277,81 @@ impl Metrics {
             ("e2e", self.e2e.to_json()),
             ("sim_fpga", self.sim_fpga.to_json()),
         ])
+    }
+
+    /// Ledger invariant audit — the runtime twin of the `ilmpq analyze`
+    /// static rules. Valid at any *drained* boundary (a stopped server, a
+    /// shut-down pool): every admitted request must have landed in exactly
+    /// one outcome class, and derived/transition counters must balance.
+    ///
+    /// Checks:
+    /// - outcome classes sum to `requests_in` (answer-exactly-once ledger);
+    /// - `requests_recovered ⊆ requests_done`;
+    /// - per-batch failure classes don't exceed `batches`;
+    /// - breaker transitions balance: probes need a prior open
+    ///   (`half_open ≤ opened`) and recoveries a prior probe
+    ///   (`closed ≤ half_open`).
+    ///
+    /// [`super::Server::stop`] runs this under `debug_assertions` on every
+    /// drained stop, so each `cargo test` run audits every server it
+    /// stops; tests also call it explicitly so release-mode CI checks too.
+    pub fn audit(&self) -> Result<(), String> {
+        let g = Self::get;
+        let outcomes = [
+            ("requests_done", g(&self.requests_done)),
+            ("requests_invalid", g(&self.requests_invalid)),
+            ("requests_shed", g(&self.requests_shed)),
+            ("requests_failed", g(&self.requests_failed)),
+            ("requests_shutdown", g(&self.requests_shutdown)),
+            ("requests_timeout", g(&self.requests_timeout)),
+            ("requests_unavailable", g(&self.requests_unavailable)),
+            ("requests_quarantined", g(&self.requests_quarantined)),
+        ];
+        let answered: u64 = outcomes.iter().map(|(_, v)| v).sum();
+        let admitted = g(&self.requests_in);
+        if answered != admitted {
+            let detail: Vec<String> =
+                outcomes.iter().map(|(k, v)| format!("{k}={v}")).collect();
+            return Err(format!(
+                "outcome classes sum to {answered} but requests_in={admitted} \
+                 ({}) — a request was dropped or double-answered",
+                detail.join(" ")
+            ));
+        }
+        if g(&self.requests_recovered) > g(&self.requests_done) {
+            return Err(format!(
+                "requests_recovered={} exceeds requests_done={} — recovered is \
+                 a subset of done by definition",
+                g(&self.requests_recovered),
+                g(&self.requests_done)
+            ));
+        }
+        if g(&self.batches_failed) + g(&self.batches_timeout) > g(&self.batches) {
+            return Err(format!(
+                "batches_failed={} + batches_timeout={} exceeds batches={} — \
+                 each batch fails in at most one way",
+                g(&self.batches_failed),
+                g(&self.batches_timeout),
+                g(&self.batches)
+            ));
+        }
+        if g(&self.breaker_half_open) > g(&self.breaker_opened) {
+            return Err(format!(
+                "breaker_half_open={} exceeds breaker_opened={} — every probe \
+                 admission needs a prior open transition",
+                g(&self.breaker_half_open),
+                g(&self.breaker_opened)
+            ));
+        }
+        if g(&self.breaker_closed) > g(&self.breaker_half_open) {
+            return Err(format!(
+                "breaker_closed={} exceeds breaker_half_open={} — every \
+                 recovery needs a prior half-open probe",
+                g(&self.breaker_closed),
+                g(&self.breaker_half_open)
+            ));
+        }
+        Ok(())
     }
 }
 
@@ -366,6 +452,65 @@ mod tests {
         let text = j.to_string_compact();
         assert!(!text.contains("inf"), "non-JSON token in {text}");
         Json::parse(&text).expect("metrics snapshot must be valid JSON");
+    }
+
+    #[test]
+    fn audit_passes_on_balanced_ledger() {
+        let m = Metrics::default();
+        assert!(m.audit().is_ok(), "an untouched ledger balances");
+        Metrics::add(&m.requests_in, 5);
+        Metrics::add(&m.requests_done, 3);
+        Metrics::inc(&m.requests_shed);
+        Metrics::inc(&m.requests_timeout);
+        Metrics::inc(&m.requests_recovered);
+        Metrics::inc(&m.batches);
+        Metrics::inc(&m.batches_failed);
+        Metrics::inc(&m.breaker_opened);
+        Metrics::inc(&m.breaker_half_open);
+        Metrics::inc(&m.breaker_closed);
+        assert!(m.audit().is_ok(), "{:?}", m.audit());
+    }
+
+    #[test]
+    fn audit_catches_imbalanced_outcomes() {
+        let m = Metrics::default();
+        Metrics::add(&m.requests_in, 3);
+        Metrics::add(&m.requests_done, 2);
+        // One admitted request never answered: the ledger must not balance.
+        let err = m.audit().unwrap_err();
+        assert!(err.contains("requests_in=3"), "{err}");
+        assert!(err.contains("dropped or double-answered"), "{err}");
+    }
+
+    #[test]
+    fn audit_catches_recovered_exceeding_done() {
+        let m = Metrics::default();
+        Metrics::inc(&m.requests_in);
+        Metrics::inc(&m.requests_done);
+        Metrics::add(&m.requests_recovered, 2);
+        assert!(m.audit().unwrap_err().contains("requests_recovered"));
+    }
+
+    #[test]
+    fn audit_catches_unbalanced_breaker_transitions() {
+        let m = Metrics::default();
+        Metrics::inc(&m.breaker_half_open);
+        assert!(m.audit().unwrap_err().contains("breaker_half_open"));
+        let m = Metrics::default();
+        Metrics::inc(&m.breaker_opened);
+        Metrics::inc(&m.breaker_half_open);
+        Metrics::add(&m.breaker_closed, 2);
+        assert!(m.audit().unwrap_err().contains("breaker_closed"));
+    }
+
+    #[test]
+    fn report_names_raw_slot_counts() {
+        let m = Metrics::default();
+        Metrics::add(&m.batched_requests, 6);
+        Metrics::add(&m.padded_slots, 2);
+        let r = m.report();
+        assert!(r.contains("slots 6+2 pad"), "raw slot counts visible: {r}");
+        assert!(r.contains("replies_unclaimed=0"), "{r}");
     }
 
     #[test]

@@ -48,6 +48,7 @@ use super::server::{ServeConfig, ServeResult, Server};
 use crate::backend::{self, synth, BackendInit, FaultSpec, InferenceBackend};
 use crate::quant::{plan::parse_ratio_arg, MaskSet, Provenance, QuantPlan};
 use crate::runtime::{HostTensor, Manifest};
+use crate::util::sync::{LockExt, RwLockExt};
 use crate::util::{Json, Rng};
 
 /// How long a swap waits for the replaced server to answer its in-flight
@@ -298,10 +299,11 @@ impl PoolEntry {
     /// Double-checked under the state lock, so concurrent first requests
     /// build exactly once.
     fn ensure_started(&self) -> Result<()> {
-        if self.state.read().unwrap().server.is_some() {
+        if self.state.pread().server.is_some() {
             return Ok(());
         }
-        let mut st = self.state.write().unwrap();
+        // analyze:allow(lazy init holds the write lock across the pack on purpose: concurrent first requests must wait for the one build, not error)
+        let mut st = self.state.pwrite();
         if st.server.is_some() {
             return Ok(());
         }
@@ -323,7 +325,7 @@ impl PoolEntry {
     /// into the old server, and the swap holds that server's only `Arc`.
     pub fn submit(&self, image: Vec<f32>) -> Result<Receiver<ServeResult>> {
         self.ensure_started()?;
-        let st = self.state.read().unwrap();
+        let st = self.state.pread();
         let server = st
             .server
             .as_ref()
@@ -338,14 +340,15 @@ impl PoolEntry {
     pub fn swap_plan(&self, plan: QuantPlan) -> Result<()> {
         plan.validate(&self.manifest)
             .with_context(|| format!("uploaded plan rejected for model {:?}", self.name))?;
-        let _gate = self.swap_gate.lock().unwrap();
+        // analyze:allow(the swap gate must span the off-path pack so two uploads cannot both re-pack and race the swing)
+        let _gate = self.swap_gate.plock();
         anyhow::ensure!(!self.closed.load(Ordering::SeqCst), "pool is shut down");
         // The expensive part — pack the new backend, warm it up — runs
         // before any lock the serving path contends on.
         let new_server = Arc::new(self.build_server(Some(plan))?);
         self.prepares.fetch_add(1, Ordering::SeqCst);
         let old = {
-            let mut st = self.state.write().unwrap();
+            let mut st = self.state.pwrite();
             if self.closed.load(Ordering::SeqCst) {
                 // Raced a pool shutdown between the gate check and here:
                 // don't install into a dead pool.
@@ -383,7 +386,7 @@ impl PoolEntry {
     /// The plan currently advertised: the active server's plan, or the
     /// configured initial plan while the entry is cold.
     pub fn current_plan(&self) -> Option<Arc<QuantPlan>> {
-        let st = self.state.read().unwrap();
+        let st = self.state.pread();
         match &st.server {
             Some(s) => s.plan.clone(),
             None => self.base_cfg.plan.clone().map(Arc::new),
@@ -399,7 +402,7 @@ impl PoolEntry {
     /// zeroed set while cold (a cold model has served nothing — that *is*
     /// its metrics).
     pub fn metrics_json(&self) -> Json {
-        let st = self.state.read().unwrap();
+        let st = self.state.pread();
         match &st.server {
             Some(s) => s.metrics.to_json(),
             None => Metrics::default().to_json(),
@@ -408,7 +411,7 @@ impl PoolEntry {
 
     /// Health view (see [`EntryHealth`]).
     pub fn health(&self) -> EntryHealth {
-        let st = self.state.read().unwrap();
+        let st = self.state.pread();
         let plan = match &st.server {
             Some(s) => s.plan.as_ref().map(|p| p.name.clone()),
             None => self.base_cfg.plan.as_ref().map(|p| p.name.clone()),
@@ -433,7 +436,7 @@ impl PoolEntry {
 
     /// One registry row of the `GET /v1/models` listing.
     pub fn describe(&self) -> Json {
-        let st = self.state.read().unwrap();
+        let st = self.state.pread();
         let (state, breaker, degraded) = match st.server.as_deref() {
             Some(s) => (
                 if s.is_shutting_down() {
@@ -507,7 +510,7 @@ impl PoolEntry {
     /// Stop this entry's server (if running), returning its metrics.
     fn close(&self) -> Option<Arc<Metrics>> {
         self.closed.store(true, Ordering::SeqCst);
-        let server = self.state.write().unwrap().server.take();
+        let server = self.state.pwrite().server.take();
         server.map(|s| match Arc::try_unwrap(s) {
             Ok(s) => s.stop(),
             Err(s) => {
@@ -617,6 +620,7 @@ impl ServerPool {
 
     /// The entry legacy `/v1/*` routes map onto.
     pub fn default_entry(&self) -> &Arc<PoolEntry> {
+        // analyze:allow(from_json/single/synthetic_pair all verify the default names an existing entry)
         self.entry(&self.default).expect("default entry exists by construction")
     }
 

@@ -83,6 +83,7 @@ pub fn search(
     max_pot: f64,
 ) -> SearchResult {
     assert!(step > 0.0);
+    assert!(max_pot >= 0.0, "max_pot must be non-negative so the sweep has a point");
     let mut sweep = Vec::new();
     let mut pot = 0.0;
     while pot <= max_pot + 1e-9 {
@@ -96,6 +97,7 @@ pub fn search(
         });
         pot += step;
     }
+    // analyze:allow(the pot=0 iteration always runs, and best_point falls back to sweep.first())
     let best = best_point(&sweep).expect("non-empty sweep");
     SearchResult { device: device.name.to_string(), best, sweep }
 }

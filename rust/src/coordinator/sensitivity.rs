@@ -125,7 +125,7 @@ pub fn top_k_overlap(a: &[f64], b: &[f64], k: usize) -> f64 {
     }
     let top = |v: &[f64]| -> Vec<usize> {
         let mut idx: Vec<usize> = (0..v.len()).collect();
-        idx.sort_by(|&p, &q| v[q].partial_cmp(&v[p]).unwrap().then(p.cmp(&q)));
+        idx.sort_by(|&p, &q| v[q].total_cmp(&v[p]).then(p.cmp(&q)));
         idx.truncate(k);
         idx
     };

@@ -80,6 +80,7 @@ use anyhow::{Context, Result};
 use super::batcher::{Assembled, BatchPolicy, Batcher, Pending};
 use super::metrics::Metrics;
 use crate::backend::{self, BackendInit, BatchOutput, InferenceBackend};
+use crate::util::sync::LockExt;
 use crate::fpga::{simulate, DeviceModel, Mode, NetConfig, SimReport};
 use crate::model::zoo;
 use crate::quant::{assign, MaskSet, Provenance, QuantPlan, Scheme};
@@ -298,7 +299,7 @@ impl Breaker {
         if !self.enabled() {
             return BreakerState::Closed;
         }
-        self.inner.lock().unwrap().state
+        self.inner.plock().state
     }
 
     fn state_name(&self) -> &'static str {
@@ -316,7 +317,7 @@ impl Breaker {
         if !self.enabled() {
             return false;
         }
-        let inner = self.inner.lock().unwrap();
+        let inner = self.inner.plock();
         inner.state == BreakerState::Open
             && inner.opened_at.is_some_and(|t| t.elapsed() < self.cooldown)
     }
@@ -326,7 +327,7 @@ impl Breaker {
         if !self.enabled() {
             return ExecRoute { use_fallback: false, probe: false };
         }
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.plock();
         match inner.state {
             BreakerState::Closed => ExecRoute { use_fallback: false, probe: false },
             BreakerState::Open
@@ -351,7 +352,7 @@ impl Breaker {
         if !self.enabled() || on_fallback {
             return;
         }
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.plock();
         if success {
             if route.probe {
                 inner.state = BreakerState::Closed;
@@ -416,6 +417,7 @@ struct QueuedRequest {
 impl QueuedRequest {
     /// Disarm and hand out the request (the popped-by-router path).
     fn take(mut self) -> Request {
+        // analyze:allow(armed-guard invariant: the router calls take exactly once per pop)
         self.req.take().expect("take called once")
     }
 }
@@ -425,8 +427,20 @@ impl Drop for QueuedRequest {
         if let Some(req) = self.req.take() {
             Metrics::inc(&self.metrics.requests_shutdown);
             self.in_system.fetch_sub(1, Ordering::SeqCst);
-            let _ = req.reply.send(Err(ServeError::ShuttingDown));
+            deliver(&self.metrics, &req.reply, Err(ServeError::ShuttingDown));
         }
+    }
+}
+
+/// Deliver one reply. The send's only failure mode is a receiver that is
+/// already gone — a client that stopped waiting (loadgen's drain deadline,
+/// an HTTP handler's reply timeout). The request is counted in its outcome
+/// class either way; the dead receiver is made observable in
+/// `Metrics::replies_unclaimed` instead of being silently discarded
+/// (`ilmpq analyze` rule R2: no dropped reply results).
+fn deliver(metrics: &Metrics, reply: &Sender<ServeResult>, result: ServeResult) {
+    if reply.send(result).is_err() {
+        Metrics::inc(&metrics.replies_unclaimed);
     }
 }
 
@@ -570,7 +584,8 @@ impl Server {
             let work_rx = work_rx.clone();
             workers.push(std::thread::spawn(move || loop {
                 let msg = {
-                    let rx = work_rx.lock().unwrap();
+                    // analyze:allow(shared-receiver pool: holding the mutex across recv IS the work handoff)
+                    let rx = work_rx.plock();
                     rx.recv()
                 };
                 match msg {
@@ -591,6 +606,7 @@ impl Server {
         let router = {
             let metrics = metrics.clone();
             let shutdown = shutdown.clone();
+            let in_system = in_system.clone();
             std::thread::spawn(move || {
                 let mut batcher: Batcher<Request> = Batcher::new(policy);
                 loop {
@@ -613,7 +629,7 @@ impl Server {
                     }
                     let now = Instant::now();
                     if let Some(batch) = batcher.try_assemble(now) {
-                        dispatch(&metrics, &work_tx, batch);
+                        dispatch(&metrics, &in_system, &work_tx, batch);
                         continue;
                     }
                     // Park. With requests pending the wait is capped by the
@@ -644,9 +660,10 @@ impl Server {
                 // the moment `submit_rx` drops with this thread; no drain
                 // loop can miss them.
                 while let Some(b) = batcher.flush() {
-                    dispatch(&metrics, &work_tx, b);
+                    dispatch(&metrics, &in_system, &work_tx, b);
                 }
                 for _ in 0..n_workers {
+                    // analyze:allow(Shutdown carries no reply channel; a dead worker pool needs no nudge)
                     let _ = work_tx.send(WorkerMsg::Shutdown);
                 }
             })
@@ -721,12 +738,12 @@ impl Server {
         // load, before it can touch batch assembly.
         if let Err(reason) = backend::validate_image_len(&image, self.img_elems) {
             Metrics::inc(&self.metrics.requests_invalid);
-            let _ = tx.send(Err(ServeError::InvalidInput(reason)));
+            deliver(&self.metrics, &tx, Err(ServeError::InvalidInput(reason)));
             return rx;
         }
         if self.shutdown.load(Ordering::SeqCst) {
             Metrics::inc(&self.metrics.requests_shutdown);
-            let _ = tx.send(Err(ServeError::ShuttingDown));
+            deliver(&self.metrics, &tx, Err(ServeError::ShuttingDown));
             return rx;
         }
         // Breaker shed: while the breaker is open (and still cooling down)
@@ -736,7 +753,7 @@ impl Server {
         // route to the fallback instead.
         if !self.has_fallback && self.breaker.shedding() {
             Metrics::inc(&self.metrics.requests_unavailable);
-            let _ = tx.send(Err(ServeError::Unavailable));
+            deliver(&self.metrics, &tx, Err(ServeError::Unavailable));
             return rx;
         }
         // Bounded admission: shed newest-first once `queue_depth` requests
@@ -747,7 +764,7 @@ impl Server {
         if prev >= self.queue_depth as u64 {
             self.in_system.fetch_sub(1, Ordering::SeqCst);
             Metrics::inc(&self.metrics.requests_shed);
-            let _ = tx.send(Err(ServeError::QueueFull { depth: self.queue_depth }));
+            deliver(&self.metrics, &tx, Err(ServeError::QueueFull { depth: self.queue_depth }));
             return rx;
         }
         // Full value scan only for requests that are actually admitted
@@ -755,7 +772,7 @@ impl Server {
         if let Err(reason) = backend::validate_image_finite(&image) {
             self.in_system.fetch_sub(1, Ordering::SeqCst);
             Metrics::inc(&self.metrics.requests_invalid);
-            let _ = tx.send(Err(ServeError::InvalidInput(reason)));
+            deliver(&self.metrics, &tx, Err(ServeError::InvalidInput(reason)));
             return rx;
         }
         let queued = QueuedRequest {
@@ -768,6 +785,7 @@ impl Server {
         // router exited (the SendError drops the guard → ShuttingDown), or
         // it sits buffered past the router's exit (dropped with the
         // receiver → ShuttingDown via the same guard).
+        // analyze:allow(a SendError drops the armed QueuedRequest guard, which answers ShuttingDown)
         let _ = self.submit_tx.send(RouterMsg::Req(queued));
         rx
     }
@@ -815,12 +833,19 @@ impl Server {
         self.shutdown.store(true, Ordering::SeqCst);
         // A parked router (blocking recv on an empty batcher) only sees the
         // flag when a message arrives: nudge it.
+        // analyze:allow(Wake carries no reply channel; an already-exited router needs no nudge)
         let _ = self.submit_tx.send(RouterMsg::Wake);
     }
 
     /// Graceful stop: flush queues, join threads. In-flight requests are
     /// answered (executed where already batched, `ShuttingDown` otherwise);
     /// no reply channel is left to dangle.
+    ///
+    /// A joined stop is a *drained* boundary, so the [`Metrics::audit`]
+    /// ledger invariants are exact here and debug builds verify them on
+    /// every server the tests stop (the runtime twin of the `ilmpq analyze`
+    /// static rules). Release builds skip the assert but the audit stays
+    /// callable on the returned metrics.
     pub fn stop(mut self) -> Arc<Metrics> {
         self.begin_shutdown();
         if let Some(r) = self.router.take() {
@@ -829,17 +854,42 @@ impl Server {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+        let audit = self.metrics.audit();
+        debug_assert!(audit.is_ok(), "metrics ledger audit failed at stop(): {audit:?}");
+        debug_assert_eq!(
+            self.in_flight(),
+            0,
+            "admission slots leaked across a drained stop()"
+        );
         self.metrics.clone()
     }
 }
 
 /// Hand one assembled batch to the worker pool, recording assembly metrics
 /// (shared by the deadline path and the shutdown/disconnect flush).
-fn dispatch(metrics: &Metrics, work_tx: &Sender<WorkerMsg>, batch: Assembled<Request>) {
+fn dispatch(
+    metrics: &Metrics,
+    in_system: &AtomicU64,
+    work_tx: &Sender<WorkerMsg>,
+    batch: Assembled<Request>,
+) {
     Metrics::inc(&metrics.batches);
     Metrics::add(&metrics.batched_requests, batch.items.len() as u64);
     Metrics::add(&metrics.padded_slots, batch.padded_slots() as u64);
-    let _ = work_tx.send(WorkerMsg::Batch(batch));
+    if let Err(rejected) = work_tx.send(WorkerMsg::Batch(batch)) {
+        // The worker pool is gone (every worker exited or died by panic
+        // before this batch arrived). Dropping the batch here would drop
+        // every member's reply channel — instead recover it from the
+        // SendError and answer each member ShuttingDown, releasing their
+        // admission slots, so answer-exactly-once holds on this path too.
+        if let WorkerMsg::Batch(batch) = rejected.0 {
+            for p in &batch.items {
+                Metrics::inc(&metrics.requests_shutdown);
+                in_system.fetch_sub(1, Ordering::SeqCst);
+                deliver(metrics, &p.payload.reply, Err(ServeError::ShuttingDown));
+            }
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -971,6 +1021,7 @@ fn execute_once(
             let spawned = std::thread::Builder::new()
                 .name("ilmpq-exec".into())
                 .spawn(move || {
+                    // analyze:allow(the watchdog may have abandoned this helper; a dead receiver is that signal)
                     let _ = tx.send(run_contained(be.as_ref(), &input, exec_size));
                 });
             match spawned {
@@ -1027,13 +1078,17 @@ fn answer_ok(
             Metrics::inc(&ctx.metrics.requests_recovered);
         }
         ctx.in_system.fetch_sub(1, Ordering::SeqCst);
-        let _ = p.payload.reply.send(Ok(Response {
-            logits: row.to_vec(),
-            pred: out.preds[i],
-            queue_wait,
-            e2e,
-            sim_fpga: sim_request,
-        }));
+        deliver(
+            &ctx.metrics,
+            &p.payload.reply,
+            Ok(Response {
+                logits: row.to_vec(),
+                pred: out.preds[i],
+                queue_wait,
+                e2e,
+                sim_fpga: sim_request,
+            }),
+        );
     }
 }
 
@@ -1052,7 +1107,7 @@ fn answer_failed(
         // failed batch gets the typed error on its channel.
         Metrics::inc(class);
         ctx.in_system.fetch_sub(1, Ordering::SeqCst);
-        let _ = p.payload.reply.send(Err(err.clone()));
+        deliver(&ctx.metrics, &p.payload.reply, Err(err.clone()));
     }
 }
 

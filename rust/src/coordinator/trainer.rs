@@ -6,7 +6,7 @@
 //! the lowered XLA executable (which itself embeds the Pallas fake-quant
 //! kernels); Python is not involved.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::quant::MaskSet;
 use crate::runtime::{HostTensor, Runtime};
@@ -134,8 +134,8 @@ impl<'rt> Trainer<'rt> {
         if out.len() != self.params.len() + 2 {
             bail!("train_step returned {} outputs", out.len());
         }
-        let acc = out.pop().unwrap().item();
-        let loss = out.pop().unwrap().item();
+        let acc = out.pop().context("train_step output vector ended early")?.item();
+        let loss = out.pop().context("train_step output vector ended early")?.item();
         self.params = out;
         self.log.push(StepLog { step: step_no, loss, acc, lr });
         Ok((loss, acc))
@@ -150,9 +150,10 @@ impl<'rt> Trainer<'rt> {
     ) -> Result<()> {
         for _ in 0..steps {
             self.step()?;
-            let last = *self.log.last().unwrap();
-            if last.step % log_every == 0 {
-                sink(&last);
+            if let Some(last) = self.log.last().copied() {
+                if last.step % log_every == 0 {
+                    sink(&last);
+                }
             }
         }
         Ok(())

@@ -17,6 +17,12 @@
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
 //! paper-vs-measured record.
 
+// The only `unsafe` in the crate is the PJRT FFI surface (runtime/engine,
+// runtime/tensor), all of it behind `feature = "pjrt"` — every other build
+// proves the absence of unsafe at compile time.
+#![cfg_attr(not(feature = "pjrt"), forbid(unsafe_code))]
+
+pub mod analysis;
 pub mod backend;
 pub mod baselines;
 pub mod coordinator;

@@ -11,6 +11,7 @@
 //! ilmpq serve   [--listen ADDR] [--plan F]          serving (HTTP front end or demo loop)
 //! ilmpq loadgen [--rate R] [--url U] [--backend B]  offered-load driver (in-process or remote)
 //! ilmpq backends                                    list execution backends
+//! ilmpq analyze [--json] [DIR]                      project-specific static analysis (CI gate)
 //! ilmpq info                                        artifacts + manifest summary
 //! ```
 
@@ -19,6 +20,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::Result;
+use ilmpq::analysis;
 use ilmpq::backend::{self, synth, InferenceBackend};
 use ilmpq::baselines::table1::accuracy_configs;
 use ilmpq::coordinator::{
@@ -627,6 +629,44 @@ fn run(cmd: &str) -> Result<()> {
             }
             Ok(())
         }
+        "analyze" => {
+            if std::env::args().skip(2).any(|t| t == "--help" || t == "-h") {
+                println!("{ANALYZE_HELP}");
+                return Ok(());
+            }
+            let a = Args::parse_env(
+                "ilmpq analyze",
+                2,
+                &[("json!", "emit the machine-readable report (CI gate)")],
+            );
+            // Default to the crate's own source, resolved relative to the
+            // working directory (`src` when run from rust/, `rust/src` from
+            // the repo root).
+            let dir = a
+                .positional()
+                .first()
+                .map(String::as_str)
+                .map(Path::new)
+                .map(Path::to_path_buf)
+                .unwrap_or_else(|| {
+                    let local = Path::new("src");
+                    if local.is_dir() { local.to_path_buf() } else { "rust/src".into() }
+                });
+            let project = analysis::Project::load(&dir)?;
+            let findings = analysis::analyze(&project);
+            if a.flag("json") {
+                println!(
+                    "{}",
+                    analysis::report_json(&project, &findings).to_string_compact()
+                );
+            } else {
+                print!("{}", analysis::render_text(&project, &findings));
+            }
+            if !findings.is_empty() {
+                std::process::exit(1);
+            }
+            Ok(())
+        }
         "backends" => {
             println!("registered execution backends (--backend NAME):");
             for s in backend::registry() {
@@ -802,6 +842,30 @@ fn plan_cmd() -> Result<()> {
     }
 }
 
+const ANALYZE_HELP: &str = "\
+ilmpq analyze [--json] [DIR] — project-specific static analysis (the CI gate)
+
+Lexes the crate's own source (no syn, no rustc) and enforces the serving
+stack's documented invariants:
+
+  P0  an `// analyze:allow(reason)` pragma must carry a non-empty reason
+  R1  no unwrap()/expect()/panic! in serving-path non-test code
+      (coordinator/, backend/, quant/plan.rs)
+  R2  no `let _ =` on a send/reply call in server.rs/pool.rs/http.rs
+      (answer-exactly-once)
+  R3  every ServeError variant is mapped in http.rs and loadgen.rs
+  R4  every Metrics counter is emitted by both report() and to_json()
+  R5  no lock guard held across a blocking call in server.rs/pool.rs
+
+DIR defaults to the crate source (src, or rust/src from the repo root).
+Findings print as `path:line [rule] message` and exit nonzero; --json emits
+the machine report. A justified false positive is suppressed by starting a
+comment on the flagged line (or the line above) with
+`// analyze:allow(reason)` — the reason is mandatory and P0-checked.
+The runtime twin is Metrics::audit(), which checks the ledger invariants
+(outcome classes sum to admissions, slots drain to zero, breaker
+transitions balance) at every drained server stop.";
+
 const PLAN_HELP: &str = "\
 ilmpq plan — quantization-plan artifacts (serializable precision assignments)
 
@@ -851,5 +915,10 @@ commands:
                 over real sockets with the same outcome classes; multi
                 fans across a pool's models (--models name:weight,...)
   backends      list the registered execution backends
+  analyze       project-specific static analysis over the crate's own source
+                (serving-path panic freedom, answer-exactly-once reply
+                handling, error-mapping and metrics-counter exhaustiveness,
+                lock-scope hygiene); nonzero exit on findings — the CI gate
+                (--json for the machine report, DIR to point elsewhere)
   info          manifest / artifacts summary
 run `ilmpq <cmd> --help` for options.";

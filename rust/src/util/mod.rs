@@ -9,6 +9,7 @@ pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 
 pub use cli::Args;
 pub use json::Json;

@@ -1,0 +1,84 @@
+//! Poison-tolerant lock acquisition.
+//!
+//! The serving stack contains worker threads that may die by panic (the
+//! fault-injection backend's whole product is injected panics). A panicking
+//! thread poisons any `std` lock it holds, and every later `.lock().unwrap()`
+//! on another thread then panics too — one contained fault cascades into a
+//! dead server. The supervision layers (watchdog, quarantine, breaker) are
+//! built on the opposite assumption: a dead worker is survivable.
+//!
+//! `plock`/`pread`/`pwrite` acquire the guard whether or not the lock is
+//! poisoned. This is sound for our state because every critical section
+//! leaves the protected data consistent at each await-free step boundary
+//! (counters, swap-gated `Option<Server>` slots, breaker state machines);
+//! there is no multi-step invariant that a mid-section panic can tear.
+//!
+//! These also keep the serving path clean under the `ilmpq analyze` R1 rule
+//! (no `unwrap`/`expect` in `coordinator/`/`backend/`): lock acquisition is
+//! the one place where `unwrap` was both pervasive and wrong.
+
+use std::sync::{Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// Poison-tolerant `Mutex` acquisition.
+pub trait LockExt<T> {
+    /// Lock, recovering the guard from a poisoned mutex instead of panicking.
+    fn plock(&self) -> MutexGuard<'_, T>;
+}
+
+impl<T> LockExt<T> for Mutex<T> {
+    fn plock(&self) -> MutexGuard<'_, T> {
+        self.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// Poison-tolerant `RwLock` acquisition.
+pub trait RwLockExt<T> {
+    /// Read-lock, recovering the guard from a poisoned lock.
+    fn pread(&self) -> RwLockReadGuard<'_, T>;
+    /// Write-lock, recovering the guard from a poisoned lock.
+    fn pwrite(&self) -> RwLockWriteGuard<'_, T>;
+}
+
+impl<T> RwLockExt<T> for RwLock<T> {
+    fn pread(&self) -> RwLockReadGuard<'_, T> {
+        self.read().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn pwrite(&self) -> RwLockWriteGuard<'_, T> {
+        self.write().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn plock_survives_poison() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.plock();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        assert_eq!(*m.plock(), 7);
+    }
+
+    #[test]
+    fn pread_pwrite_survive_poison() {
+        let l = Arc::new(RwLock::new(3u32));
+        let l2 = Arc::clone(&l);
+        let _ = std::thread::spawn(move || {
+            let _g = l2.pwrite();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(l.is_poisoned());
+        assert_eq!(*l.pread(), 3);
+        *l.pwrite() = 4;
+        assert_eq!(*l.pread(), 4);
+    }
+}

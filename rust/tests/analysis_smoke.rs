@@ -1,0 +1,193 @@
+//! `ilmpq analyze` smoke tests: every rule fires on a bad fixture and is
+//! silent on its good twin, the pragma machinery suppresses with a reason
+//! and fails without one, and — the point of the exercise — the real crate
+//! source comes back clean. The runtime twin (`Metrics::audit`) gets the
+//! same treatment: a deliberately imbalanced ledger must be rejected.
+
+use std::path::Path;
+
+use ilmpq::analysis::{analyze, render_text, report_json, Project};
+use ilmpq::coordinator::Metrics;
+use ilmpq::util::Json;
+
+fn findings_for(files: &[(&str, &str)]) -> Vec<String> {
+    let p = Project::from_memory(files);
+    analyze(&p).into_iter().map(|f| format!("{}:{} {}", f.path, f.line, f.rule)).collect()
+}
+
+fn rules_for(files: &[(&str, &str)]) -> Vec<&'static str> {
+    let p = Project::from_memory(files);
+    analyze(&p).into_iter().map(|f| f.rule).collect()
+}
+
+// ---------------------------------------------------------------- R1
+
+#[test]
+fn r1_fires_on_serving_path_unwrap_and_panic() {
+    let bad = "fn f() { x.unwrap(); }\nfn g() { y.expect(\"set\"); }\nfn h() { panic!(\"no\"); }";
+    assert_eq!(
+        findings_for(&[("coordinator/server.rs", bad)]),
+        vec![
+            "coordinator/server.rs:1 R1",
+            "coordinator/server.rs:2 R1",
+            "coordinator/server.rs:3 R1"
+        ]
+    );
+}
+
+#[test]
+fn r1_silent_on_good_twin() {
+    let good = "fn f() -> Result<()> { let v = x.ok_or(ServeError::ShuttingDown)?; Ok(v) }";
+    assert!(rules_for(&[("coordinator/server.rs", good)]).is_empty());
+    // Same text out of scope: also silent.
+    assert!(rules_for(&[("util/misc.rs", "fn f() { x.unwrap(); }")]).is_empty());
+}
+
+#[test]
+fn r1_ignores_test_code() {
+    let src = "#[cfg(test)]\nmod tests {\n  #[test]\n  fn t() { x.unwrap(); panic!(\"boom\"); }\n}";
+    assert!(rules_for(&[("backend/cpu.rs", src)]).is_empty());
+}
+
+// ---------------------------------------------------------------- R2
+
+#[test]
+fn r2_fires_on_dropped_send_result() {
+    let bad = "fn f(tx: &Sender<u8>) { let _ = tx.send(1); }";
+    assert_eq!(rules_for(&[("coordinator/server.rs", bad)]), vec!["R2"]);
+}
+
+#[test]
+fn r2_silent_on_handled_send_and_out_of_scope() {
+    let good = "fn f(tx: &Sender<u8>) { if tx.send(1).is_err() { count(); } }";
+    assert!(rules_for(&[("coordinator/server.rs", good)]).is_empty());
+    let bad = "fn f(tx: &Sender<u8>) { let _ = tx.send(1); }";
+    assert!(rules_for(&[("coordinator/loadgen.rs", bad)]).is_empty());
+}
+
+// ---------------------------------------------------------------- R3
+
+const SERVER_WITH_ENUM: &str =
+    "pub enum ServeError { QueueFull, InvalidInput(String), ShuttingDown }";
+
+#[test]
+fn r3_fires_on_unmapped_variant() {
+    let http = "fn status(e: &ServeError) -> u16 { match e { ServeError::QueueFull => 429, ServeError::InvalidInput(_) => 400, _ => 500 } }";
+    let loadgen = "fn fold(e: &ServeError) { match e { ServeError::QueueFull => shed(), ServeError::InvalidInput(_) => invalid(), ServeError::ShuttingDown => drain() } }";
+    let rules = rules_for(&[
+        ("coordinator/server.rs", SERVER_WITH_ENUM),
+        ("coordinator/http.rs", http),
+        ("coordinator/loadgen.rs", loadgen),
+    ]);
+    // ShuttingDown is missing from http.rs only.
+    assert_eq!(rules, vec!["R3"]);
+}
+
+#[test]
+fn r3_silent_when_every_variant_is_mapped() {
+    let both = "fn m(e: &ServeError) { match e { ServeError::QueueFull => a(), ServeError::InvalidInput(_) => b(), ServeError::ShuttingDown => c() } }";
+    let rules = rules_for(&[
+        ("coordinator/server.rs", SERVER_WITH_ENUM),
+        ("coordinator/http.rs", both),
+        ("coordinator/loadgen.rs", both),
+    ]);
+    assert!(rules.is_empty(), "{rules:?}");
+}
+
+// ---------------------------------------------------------------- R4
+
+#[test]
+fn r4_fires_on_counter_missing_from_an_emitter() {
+    let bad = "pub struct Metrics { pub requests_in: AtomicU64, pub requests_done: AtomicU64 }\n\
+               impl Metrics {\n\
+                 pub fn report(&self) -> String { format!(\"in={}\", Self::get(&self.requests_in)) }\n\
+                 pub fn to_json(&self) -> Json { Json::obj(vec![(\"requests_in\", num(&self.requests_in)), (\"requests_done\", num(&self.requests_done))]) }\n\
+               }";
+    // requests_done surfaces in to_json but not report().
+    assert_eq!(rules_for(&[("coordinator/metrics.rs", bad)]), vec!["R4"]);
+}
+
+#[test]
+fn r4_accepts_string_key_and_name_helper_emission() {
+    let good = "pub struct Metrics { pub breaker_state: AtomicU64 }\n\
+                impl Metrics {\n\
+                  pub fn report(&self) -> String { self.breaker_state_name().to_string() }\n\
+                  pub fn to_json(&self) -> Json { Json::obj(vec![(\"breaker_state\", Json::Null)]) }\n\
+                }";
+    let rules = rules_for(&[("coordinator/metrics.rs", good)]);
+    assert!(rules.is_empty(), "{rules:?}");
+}
+
+// ---------------------------------------------------------------- R5
+
+#[test]
+fn r5_fires_on_guard_held_across_blocking_call() {
+    let bad = "fn f(&self) { let st = self.state.lock().unwrap(); self.backend.run_batch(&st.x, 4); }";
+    assert_eq!(rules_for(&[("coordinator/pool.rs", bad)]), vec!["R1", "R5"]);
+}
+
+#[test]
+fn r5_silent_when_guard_is_dropped_first() {
+    let good = "fn f(&self) { let st = self.state.plock(); let x = st.x.clone(); drop(st); self.backend.run_batch(&x, 4); }";
+    let rules = rules_for(&[("coordinator/pool.rs", good)]);
+    assert!(rules.is_empty(), "{rules:?}");
+}
+
+// ---------------------------------------------------------------- pragmas
+
+#[test]
+fn pragma_with_reason_suppresses() {
+    let src = "fn f() {\n  // analyze:allow(the invariant holds by construction)\n  x.unwrap();\n}";
+    assert!(rules_for(&[("coordinator/server.rs", src)]).is_empty());
+}
+
+#[test]
+fn pragma_without_reason_is_a_finding_and_does_not_suppress() {
+    let src = "fn f() {\n  // analyze:allow()\n  x.unwrap();\n}";
+    let rules = rules_for(&[("coordinator/server.rs", src)]);
+    assert_eq!(rules, vec!["P0", "R1"], "a reasonless pragma must not buy suppression");
+}
+
+// ---------------------------------------------------------------- reports
+
+#[test]
+fn json_report_carries_findings() {
+    let p = Project::from_memory(&[("coordinator/server.rs", "fn f() { x.unwrap(); }")]);
+    let findings = analyze(&p);
+    let j = report_json(&p, &findings);
+    assert_eq!(j.get("clean"), Some(&Json::Bool(false)));
+    let rows = j.get("findings").and_then(Json::as_arr).unwrap();
+    assert_eq!(rows.len(), 1);
+    assert_eq!(rows[0].get("rule").and_then(Json::as_str), Some("R1"));
+    assert_eq!(rows[0].get("line").and_then(Json::as_usize), Some(1));
+}
+
+// ---------------------------------------------------------------- the real tree
+
+#[test]
+fn shipped_source_tree_is_clean() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let project = Project::load(&src).expect("crate source loads");
+    assert!(project.files.len() > 20, "walk found only {} files", project.files.len());
+    let findings = analyze(&project);
+    assert!(findings.is_empty(), "\n{}", render_text(&project, &findings));
+}
+
+// ---------------------------------------------------------------- runtime twin
+
+#[test]
+fn metrics_audit_catches_imbalanced_ledger() {
+    let m = Metrics::default();
+    for _ in 0..5 {
+        Metrics::inc(&m.requests_in);
+    }
+    for _ in 0..3 {
+        Metrics::inc(&m.requests_done);
+    }
+    // Two admissions never reached an outcome class: dropped on the floor.
+    let err = m.audit().expect_err("imbalanced ledger must be rejected");
+    assert!(err.contains("requests_in=5"), "{err}");
+    Metrics::inc(&m.requests_shed);
+    Metrics::inc(&m.requests_failed);
+    assert_eq!(m.audit(), Ok(()));
+}

@@ -199,6 +199,7 @@ fn quarantine_isolates_the_poison_request_with_bit_correct_neighbors() {
         }
     }
     let metrics = server.stop();
+    assert_eq!(metrics.audit(), Ok(()), "metrics ledger must balance at stop");
     assert_eq!(Metrics::get(&metrics.requests_quarantined), 1);
     assert_eq!(Metrics::get(&metrics.requests_recovered), 3);
     assert_eq!(Metrics::get(&metrics.requests_done), 3);
@@ -260,6 +261,7 @@ fn breaker_opens_sheds_probes_and_recloses() {
     assert_eq!(server.breaker_state(), "closed");
     assert!(server.is_ready());
     let metrics = server.stop();
+    assert_eq!(metrics.audit(), Ok(()), "metrics ledger must balance at stop");
     // The transition ledger made it into the serialized metrics.
     let j = metrics.to_json();
     assert_eq!(j.get("breaker_state").and_then(Json::as_str), Some("closed"));
@@ -314,6 +316,7 @@ fn open_breaker_serves_degraded_on_the_fallback_backend() {
     assert!(server.is_degraded(), "open breaker + fallback = degraded");
     assert_eq!(server.breaker_state(), "open");
     let metrics = server.stop();
+    assert_eq!(metrics.audit(), Ok(()), "metrics ledger must balance at stop");
     assert!(Metrics::get(&metrics.fallback_batches) >= 5);
     assert_eq!(Metrics::get(&metrics.requests_unavailable), 0, "fallback never sheds");
 }

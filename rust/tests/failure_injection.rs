@@ -273,6 +273,7 @@ fn stall_trips_the_watchdog_and_slots_recover() {
         }
     }
     let metrics = server.stop();
+    assert_eq!(metrics.audit(), Ok(()), "metrics ledger must balance at stop");
     assert_eq!(ilmpq::coordinator::Metrics::get(&metrics.requests_timeout), 2);
     assert_eq!(ilmpq::coordinator::Metrics::get(&metrics.batches_timeout), 2);
 }

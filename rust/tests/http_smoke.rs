@@ -148,6 +148,7 @@ fn concurrent_clients_get_logits_over_the_wire() {
     assert!(!body.contains("inf"), "non-JSON token leaked into {body}");
 
     let final_metrics = front.stop();
+    assert_eq!(final_metrics.audit(), Ok(()), "metrics ledger must balance at stop");
     assert_eq!(
         ilmpq::coordinator::Metrics::get(&final_metrics.requests_done),
         32
@@ -237,6 +238,7 @@ fn malformed_bodies_and_wrong_geometry_map_to_400() {
     assert_eq!(code, 405);
 
     let metrics = front.stop();
+    assert_eq!(metrics.audit(), Ok(()), "metrics ledger must balance at stop");
     assert_eq!(ilmpq::coordinator::Metrics::get(&metrics.requests_done), 0);
 }
 

@@ -283,7 +283,8 @@ fn entries_prepare_lazily_and_exactly_once() {
     assert_eq!(tiny.prepares(), 1, "concurrent first requests built more than once");
     assert_eq!(narrow.prepares(), 0, "untouched entry built eagerly");
 
-    pool.shutdown();
+    let metrics = pool.shutdown();
+    assert_eq!(metrics.audit(), Ok(()), "default entry ledger must balance at shutdown");
 }
 
 /// Routing to a model the pool does not serve is a 404 that names the

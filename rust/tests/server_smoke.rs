@@ -92,6 +92,7 @@ fn serving_end_to_end_on_qgemm_without_artifacts() {
         assert!(resp.queue_wait > Duration::ZERO, "submit-to-execute cannot be instant");
     }
     let metrics = server.stop();
+    assert_eq!(metrics.audit(), Ok(()), "metrics ledger must balance at stop");
     assert_eq!(Metrics::get(&metrics.requests_done), n as u64);
     assert_eq!(Metrics::get(&metrics.requests_invalid), 0);
     assert_eq!(Metrics::get(&metrics.requests_shed), 0);
@@ -165,6 +166,7 @@ fn malformed_request_rejected_alone_neighbors_bit_correct() {
         );
     }
     let metrics = server.stop();
+    assert_eq!(metrics.audit(), Ok(()), "metrics ledger must balance at stop");
     assert_eq!(Metrics::get(&metrics.requests_done), n as u64);
     assert_eq!(Metrics::get(&metrics.requests_invalid), 3);
     assert_eq!(Metrics::get(&metrics.batches_failed), 0);
@@ -205,6 +207,7 @@ fn overload_sheds_with_queue_full_while_accepted_complete() {
     assert!(done >= depth as u64, "the first depth-worth must complete, got {done}");
     assert!(shed > 0, "an unpaced burst of {n} must shed at depth {depth}");
     let metrics = server.stop();
+    assert_eq!(metrics.audit(), Ok(()), "metrics ledger must balance at stop");
     assert_eq!(Metrics::get(&metrics.requests_done), done);
     assert_eq!(Metrics::get(&metrics.requests_shed), shed);
     assert!(metrics.shed_rate() > 0.0);
@@ -226,6 +229,7 @@ fn stop_answers_every_in_flight_request() {
     let n = 32;
     let rxs: Vec<_> = (0..n).map(|_| server.submit(normal_image(img, &mut rng))).collect();
     let metrics = server.stop();
+    assert_eq!(metrics.audit(), Ok(()), "metrics ledger must balance at stop");
     let (mut ok, mut shutdown) = (0u64, 0u64);
     for rx in rxs {
         match rx
@@ -328,6 +332,7 @@ fn failed_batches_answer_every_caller_with_typed_error() {
         }
     }
     let metrics = server.stop();
+    assert_eq!(metrics.audit(), Ok(()), "metrics ledger must balance at stop");
     assert_eq!(Metrics::get(&metrics.requests_failed), n as u64);
     assert!(Metrics::get(&metrics.batches_failed) >= 1);
     // Failures must not pollute the execute percentiles: they land in the
@@ -375,6 +380,7 @@ fn assert_contained(be: Arc<dyn InferenceBackend>, plan_name: &str, expect_msg: 
         assert!(failed > 0, "round {round} produced no typed failures");
     }
     let metrics = server.stop();
+    assert_eq!(metrics.audit(), Ok(()), "metrics ledger must balance at stop");
     assert_eq!(Metrics::get(&metrics.requests_done), 0);
     assert!(Metrics::get(&metrics.batches_failed) >= 2);
 }
@@ -435,6 +441,7 @@ fn idle_router_parks_and_batch_deadline_still_fires() {
     );
     assert!(resp.queue_wait <= resp.e2e);
     let metrics = server.stop();
+    assert_eq!(metrics.audit(), Ok(()), "metrics ledger must balance at stop");
     // Submit + deadline + stop account for a handful of iterations.
     let total = Metrics::get(&metrics.router_wakeups);
     assert!(total <= 20, "router wakeups stayed bounded: {total}");
