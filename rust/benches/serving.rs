@@ -11,9 +11,11 @@
 //!
 //! A second sweep re-runs the same workload **over the wire**: the HTTP/1.1
 //! front end (`coordinator::http`) on a loopback socket, driven by the
-//! remote load generator (`loadgen::run_remote`) — so the JSON records both
-//! the in-process pipeline cost and the full network-path cost (parse +
-//! socket round-trip) side by side.
+//! remote load generator (`loadgen::run_remote`) — once per wire encoding
+//! (`json` and `raw` little-endian f32 bodies), so the JSON records the
+//! in-process pipeline cost, the full network-path cost, and the
+//! serialization delta between the encodings side by side (each wire point
+//! carries an `encoding` tag).
 //!
 //! Writes machine-readable results to `BENCH_serving.json` at the repo root.
 //!
@@ -26,7 +28,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use ilmpq::coordinator::{
-    loadgen, HttpConfig, HttpServer, ServeConfig, Server, ServerPool,
+    loadgen, Encoding, HttpConfig, HttpServer, ServeConfig, Server, ServerPool,
 };
 use ilmpq::util::{Args, Json};
 
@@ -123,50 +125,62 @@ fn main() -> anyhow::Result<()> {
     if !a.flag("skip-wire") {
         println!(
             "\n== same workload over the HTTP/1.1 front end (loopback, \
-             {conns} client connections, {http_workers} handler threads) =="
+             {conns} client connections, {http_workers} handler threads, \
+             json + raw encodings) =="
         );
-        for &rate in &rates {
-            let (m, be, plan) =
-                loadgen::synth_fixture(&backend_name, "bench", threads, seed)?;
-            let cfg = ServeConfig {
-                workers,
-                max_wait: Duration::from_millis(2),
-                queue_depth,
-                plan: Some(plan),
-                device: "xc7z045".into(),
-                ..Default::default()
-            };
-            let server = Server::start(&m, be, cfg)?;
-            let front = HttpServer::start(
-                server,
-                &m,
-                HttpConfig {
-                    addr: "127.0.0.1:0".into(),
-                    workers: http_workers,
+        // Both wire encodings, same workload: the delta between a json and
+        // a raw point at the same rate is the serialization cost (client
+        // encode + server parse) alone — everything else is identical.
+        for &encoding in &[Encoding::Json, Encoding::Raw] {
+            for &rate in &rates {
+                let (m, be, plan) =
+                    loadgen::synth_fixture(&backend_name, "bench", threads, seed)?;
+                let cfg = ServeConfig {
+                    workers,
+                    max_wait: Duration::from_millis(2),
+                    queue_depth,
+                    plan: Some(plan),
+                    device: "xc7z045".into(),
                     ..Default::default()
-                },
-            )?;
-            let url = format!("http://{}", front.local_addr());
-            let spec = loadgen::LoadSpec { requests, rate, seed, ..Default::default() };
-            let (report, _server_metrics) = loadgen::run_remote(&url, &spec, conns)?;
-            front.stop();
-            println!(
-                "wire rate {:>7.0} req/s (achieved {:>6.0}): done {:>4}/{} \
-                 shed {:>4}, slow {:>3}, lost {:>3}, server e2e p50 {:>8.3} ms \
-                 p99 {:>8.3} ms, client rtt p99 {:>8.3} ms, goodput {:>6.0} req/s",
-                rate,
-                report.achieved_rate,
-                report.done,
-                report.requests,
-                report.shed,
-                report.slow,
-                report.lost,
-                report.e2e.p50 * 1e3,
-                report.e2e.p99 * 1e3,
-                report.client_rtt.p99 * 1e3,
-                report.goodput_rps,
-            );
-            wire_points.push(report.to_json());
+                };
+                let server = Server::start(&m, be, cfg)?;
+                let front = HttpServer::start(
+                    server,
+                    &m,
+                    HttpConfig {
+                        addr: "127.0.0.1:0".into(),
+                        workers: http_workers,
+                        ..Default::default()
+                    },
+                )?;
+                let url = format!("http://{}", front.local_addr());
+                let spec =
+                    loadgen::LoadSpec { requests, rate, seed, encoding, ..Default::default() };
+                let (report, _server_metrics) = loadgen::run_remote(&url, &spec, conns)?;
+                front.stop();
+                println!(
+                    "wire [{:>4}] rate {:>7.0} req/s (achieved {:>6.0}): done {:>4}/{} \
+                     shed {:>4}, slow {:>3}, lost {:>3}, server e2e p50 {:>8.3} ms \
+                     p99 {:>8.3} ms, client rtt p99 {:>8.3} ms, goodput {:>6.0} req/s",
+                    encoding.name(),
+                    rate,
+                    report.achieved_rate,
+                    report.done,
+                    report.requests,
+                    report.shed,
+                    report.slow,
+                    report.lost,
+                    report.e2e.p50 * 1e3,
+                    report.e2e.p99 * 1e3,
+                    report.client_rtt.p99 * 1e3,
+                    report.goodput_rps,
+                );
+                let mut point = report.to_json();
+                if let Json::Obj(map) = &mut point {
+                    map.insert("encoding".into(), Json::Str(encoding.name().into()));
+                }
+                wire_points.push(point);
+            }
         }
     }
 
@@ -248,7 +262,9 @@ fn main() -> anyhow::Result<()> {
                          bounded by `conns` synchronous connections, so rates \
                          beyond conns/round-trip arrive late (visible in \
                          client_rtt) instead of shedding like the in-process \
-                         sweep."
+                         sweep. Each point's `encoding` tag names its wire \
+                         encoding (json | raw); compare same-rate points to \
+                         isolate serialization cost."
                             .into(),
                     ),
                 ),

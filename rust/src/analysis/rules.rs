@@ -11,6 +11,7 @@
 //! | R3 | every `ServeError` variant is mapped in `http.rs` and `loadgen.rs` |
 //! | R4 | every `Metrics` counter is emitted by `report()` and `to_json()` |
 //! | R5 | no held lock guard whose scope runs a blocking call |
+//! | R6 | every wire `Encoding` variant is handled in `http.rs` and `loadgen.rs` |
 //!
 //! Rules work on the `lexer` token stream — no syn, no rustc. They are
 //! deliberately conservative pattern matchers: a miss is possible, a false
@@ -27,6 +28,7 @@ pub const RULES: &[(&str, &str)] = &[
     ("R3", "every ServeError variant mapped in http.rs and loadgen.rs"),
     ("R4", "every Metrics counter emitted by report() and to_json()"),
     ("R5", "no held lock guard whose scope runs a blocking call"),
+    ("R6", "every wire Encoding variant handled in http.rs and loadgen.rs"),
 ];
 
 /// One lexed file plus its test-code token ranges, shared by all rules.
@@ -378,6 +380,35 @@ pub fn r3_error_mapping(files: &[FileView], out: &mut Vec<Finding>) {
     }
 }
 
+/// Every wire `Encoding` variant (declared in `http.rs`) must appear in
+/// both halves of the wire contract: the server's decode + content-type
+/// mapping (`http.rs`) and the client's encode path (`loadgen.rs`). Same
+/// cross-file shape as R3 — adding an encoding without wiring both sides
+/// would silently serve 415s to the new clients or generate bodies the
+/// server cannot decode.
+pub fn r6_encoding_mapping(files: &[FileView], out: &mut Vec<Finding>) {
+    let Some(http) = files.iter().find(|f| f.file_name() == "http.rs") else { return };
+    let Some(variants) = enum_variants(http.toks(), "Encoding") else { return };
+    for consumer in ["http.rs", "loadgen.rs"] {
+        let Some(target) = files.iter().find(|f| f.file_name() == consumer) else { continue };
+        for (variant, line) in &variants {
+            if !mentions_variant(target.toks(), "Encoding", variant) {
+                http.push(
+                    out,
+                    "R6",
+                    *line,
+                    format!(
+                        "Encoding::{variant} is never matched in {consumer} — \
+                         wire the new encoding into its decode/content-type \
+                         mapping and client encode path (R6: wire-encoding \
+                         exhaustiveness)"
+                    ),
+                );
+            }
+        }
+    }
+}
+
 // ---------------------------------------------------------------- R4
 
 /// Fields of `struct <name> { … }` whose type mentions one of `counter_tys`.
@@ -673,6 +704,7 @@ pub fn run_all(project: &Project) -> Vec<Finding> {
     }
     r3_error_mapping(&files, &mut out);
     r4_counter_completeness(&files, &mut out);
+    r6_encoding_mapping(&files, &mut out);
     out.sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
     out
 }
@@ -721,6 +753,26 @@ mod tests {
         let src = "fn f() { let msg = { let rx = ch.plock(); rx.recv() }; msg; }";
         let findings = run_all(&project(&[("coordinator/server.rs", src)]));
         assert!(findings.iter().any(|f| f.rule == "R5"), "{findings:?}");
+    }
+
+    #[test]
+    fn r6_fires_per_consumer_and_quiets_when_wired() {
+        let decl = "pub enum Encoding { Json, Raw }\nfn d() { match e { Encoding::Json => 1, Encoding::Raw => 2 }; }";
+        // loadgen only encodes Json: Raw must be flagged there (and only there).
+        let half = "fn enc() { let _x = Encoding::Json; }";
+        let findings = run_all(&project(&[
+            ("coordinator/http.rs", decl),
+            ("coordinator/loadgen.rs", half),
+        ]));
+        let r6: Vec<_> = findings.iter().filter(|f| f.rule == "R6").collect();
+        assert_eq!(r6.len(), 1, "{findings:?}");
+        assert!(r6[0].message.contains("Encoding::Raw") && r6[0].message.contains("loadgen.rs"));
+        let full = "fn enc() { match e { Encoding::Json => 1, Encoding::Raw => 2 }; }";
+        let findings = run_all(&project(&[
+            ("coordinator/http.rs", decl),
+            ("coordinator/loadgen.rs", full),
+        ]));
+        assert!(findings.iter().all(|f| f.rule != "R6"), "{findings:?}");
     }
 
     #[test]

@@ -51,11 +51,66 @@ pub use registry::{
     available_names, create, create_serving, registry, spec, BackendInit, BackendSpec,
 };
 
+use std::ops::Deref;
 use std::time::Duration;
 
 use anyhow::Result;
 
 use crate::quant::MaskSet;
+
+/// One owned, flattened-NHWC image buffer: the request payload's single
+/// representation from ingress decode to batch assembly.
+///
+/// The serving path used to copy the image at every hop (HTTP body → parsed
+/// vector → `Request.image` → batch concat). `ImageBuf` pins the contract
+/// instead: the f32 data is written exactly once at decode time (JSON lazy
+/// scan or raw little-endian bytes) and once more into the batch buffer —
+/// every hop in between moves or borrows. `Deref<Target = [f32]>` keeps the
+/// validators ([`validate_image_len`], [`validate_image_finite`]) and batch
+/// assembly reading it in place.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ImageBuf(Vec<f32>);
+
+impl ImageBuf {
+    /// Decode a little-endian f32 raw-tensor body (`application/x-raw-f32`)
+    /// into an owned buffer. This is the wire format's *only* decode step:
+    /// byte length must be a multiple of 4; element count and finiteness are
+    /// admission's job ([`validate_image_len`] / [`validate_image_finite`]),
+    /// so non-finite bit patterns decode fine here and are rejected there.
+    pub fn from_raw_le_bytes(bytes: &[u8]) -> std::result::Result<ImageBuf, String> {
+        if bytes.len() % 4 != 0 {
+            return Err(format!(
+                "raw f32 tensor body is {} bytes, not a multiple of 4",
+                bytes.len()
+            ));
+        }
+        let mut out = Vec::with_capacity(bytes.len() / 4);
+        for c in bytes.chunks_exact(4) {
+            out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        Ok(ImageBuf(out))
+    }
+
+    /// Consume the buffer, yielding the underlying vector (no copy).
+    pub fn into_vec(self) -> Vec<f32> {
+        self.0
+    }
+}
+
+impl From<Vec<f32>> for ImageBuf {
+    /// Wrap an already-decoded vector (in-process callers, tests) — a move,
+    /// not a copy.
+    fn from(v: Vec<f32>) -> ImageBuf {
+        ImageBuf(v)
+    }
+}
+
+impl Deref for ImageBuf {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        &self.0
+    }
+}
 
 /// Logits + argmax + timing for one executed batch.
 #[derive(Debug, Clone)]
@@ -206,6 +261,31 @@ mod tests {
     #[test]
     fn batch_output_rejects_bad_shape() {
         assert!(batch_output(vec![0.0; 3], 2, 2, Duration::ZERO).is_err());
+    }
+
+    #[test]
+    fn image_buf_roundtrips_le_bytes_bit_exactly() {
+        let src = vec![0.0f32, -1.5, f32::MIN_POSITIVE, 3.0e7];
+        let mut bytes = Vec::new();
+        for v in &src {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let buf = ImageBuf::from_raw_le_bytes(&bytes).unwrap();
+        assert_eq!(&*buf, &src[..]);
+        // Non-finite bit patterns decode (rejection is admission's job)…
+        let nan = ImageBuf::from_raw_le_bytes(&f32::NAN.to_le_bytes()).unwrap();
+        assert!(nan[0].is_nan());
+        // …but a torn length is a decode error.
+        let err = ImageBuf::from_raw_le_bytes(&bytes[..7]).unwrap_err();
+        assert!(err.contains("multiple of 4"), "{err}");
+    }
+
+    #[test]
+    fn image_buf_wraps_and_unwraps_without_surprises() {
+        let buf = ImageBuf::from(vec![1.0f32, 2.0]);
+        assert_eq!(buf.len(), 2);
+        assert!(validate_image(&buf, 2).is_ok());
+        assert_eq!(buf.into_vec(), vec![1.0, 2.0]);
     }
 
     #[test]

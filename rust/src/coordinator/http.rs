@@ -22,15 +22,26 @@
 //!
 //! Routes:
 //!
-//! * `POST /v1/infer` with body `{"image": [f32, ...]}` → `200` with
-//!   `{"pred", "logits", "queue_wait_s", "e2e_s", "sim_fpga_s"}`. The typed
+//! * `POST /v1/infer` → `200` with
+//!   `{"pred", "logits", "queue_wait_s", "e2e_s", "sim_fpga_s"}`. The body
+//!   encoding is negotiated via `Content-Type` (see [`Encoding`]):
+//!   `application/json` (or no header) carries `{"image": [f32, ...]}`,
+//!   decoded by the lazy field scanner
+//!   ([`crate::util::json::extract_f32_field`]) without building the full
+//!   value tree; `application/x-raw-f32` carries the image as little-endian
+//!   f32 bytes in the manifest's flattened NHWC order (shape comes from the
+//!   served model — a body whose byte length disagrees with
+//!   `image_elems * 4` is `400` kind `bad_tensor_size`). Any other
+//!   content type is `415` listing the supported encodings. Either way the
+//!   image is decoded once into one owned buffer ([`crate::backend::ImageBuf`])
+//!   that flows to batch assembly uncopied. The typed
 //!   [`ServeError`] maps onto HTTP semantics:
 //!   `InvalidInput → 400`, `QueueFull → 429`, `BackendFailed → 500`,
 //!   `ShuttingDown → 503` (plus `504` when the reply outruns
 //!   [`HttpConfig::reply_timeout`]). Admission still owns all request
-//!   validation — the HTTP layer only decodes JSON and lets `submit`
-//!   reject bad geometry, so the two ingresses (in-process and network)
-//!   can never drift.
+//!   validation — the HTTP layer only decodes the wire encoding and lets
+//!   `submit` reject bad geometry, so the two ingresses (in-process and
+//!   network) can never drift.
 //! * `GET /v1/healthz` → `200` with the model geometry
 //!   (`image_elems`/`classes`) plus the active plan name, which is how the
 //!   remote load generator learns what to send.
@@ -79,8 +90,10 @@ use anyhow::Result;
 use super::metrics::Metrics;
 use super::pool::{PoolEntry, ServerPool};
 use super::server::{ServeError, Server};
+use crate::backend::ImageBuf;
 use crate::quant::QuantPlan;
 use crate::runtime::Manifest;
+use crate::util::json::extract_f32_field;
 use crate::util::sync::LockExt;
 use crate::util::Json;
 
@@ -93,6 +106,78 @@ const READ_POLL: Duration = Duration::from_millis(250);
 /// Cap on the request-line + header block; beyond this the request is
 /// answered `431` and the connection closed.
 const MAX_HEAD: usize = 16 * 1024;
+
+/// Wire encoding of an infer request body, negotiated via `Content-Type`.
+/// Adding a variant? `ilmpq analyze` rule R6 requires it handled in both
+/// this file (decode + content-type mapping) and `loadgen.rs` (client
+/// encode), so the two ends of the wire cannot drift.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Encoding {
+    /// `application/json`: `{"image": [f32, ...]}` — self-describing and
+    /// curl-able; decoded by the lazy field scanner, never a full tree.
+    #[default]
+    Json,
+    /// `application/x-raw-f32`: the image as little-endian f32 bytes in the
+    /// manifest's flattened NHWC order. No framing beyond `Content-Length`;
+    /// the shape comes from the served model's manifest.
+    Raw,
+}
+
+/// The raw-tensor media type — one string, shared by server, client,
+/// tests, and CI.
+pub const RAW_CONTENT_TYPE: &str = "application/x-raw-f32";
+
+impl Encoding {
+    /// The `Content-Type` this encoding sends and answers to.
+    pub fn content_type(&self) -> &'static str {
+        match self {
+            Encoding::Json => "application/json",
+            Encoding::Raw => RAW_CONTENT_TYPE,
+        }
+    }
+
+    /// CLI spelling (`--encoding json|raw`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Encoding::Json => "json",
+            Encoding::Raw => "raw",
+        }
+    }
+
+    /// Parse the CLI spelling.
+    pub fn parse(s: &str) -> Result<Encoding> {
+        match s {
+            "json" => Ok(Encoding::Json),
+            "raw" => Ok(Encoding::Raw),
+            other => anyhow::bail!("unknown encoding {other:?} (expected \"json\" or \"raw\")"),
+        }
+    }
+
+    /// Resolve a request's `Content-Type` header to an encoding. No header
+    /// means JSON (the historic default). Parameters (`; charset=...`) are
+    /// ignored; the media type is matched case-insensitively. An unknown
+    /// media type (e.g. the `application/x-www-form-urlencoded` a bare
+    /// `curl -d` sends) is the 415 path, with the supported list spelled
+    /// out — the registry-style curated-error UX.
+    fn from_content_type(header: Option<&str>) -> std::result::Result<Encoding, String> {
+        let Some(raw) = header else { return Ok(Encoding::Json) };
+        let media = match raw.split(';').next() {
+            Some(m) => m.trim().to_ascii_lowercase(),
+            None => String::new(),
+        };
+        match media.as_str() {
+            "" | "application/json" | "text/json" => Ok(Encoding::Json),
+            m if m == RAW_CONTENT_TYPE => Ok(Encoding::Raw),
+            other => Err(format!(
+                "unsupported content-type {other:?} on infer; supported encodings: \
+                 {} (a JSON object with an \"image\" array) and {} (the image as \
+                 little-endian f32 bytes, shape from the model manifest)",
+                Encoding::Json.content_type(),
+                Encoding::Raw.content_type()
+            )),
+        }
+    }
+}
 
 /// HTTP front-end configuration.
 #[derive(Debug, Clone)]
@@ -121,7 +206,13 @@ pub struct HttpConfig {
     /// tolerated within it.
     pub request_timeout: Duration,
     /// Largest accepted request body; beyond it the request is answered
-    /// `413` and the connection closed.
+    /// `413` and the connection closed. `0` (the default) derives the
+    /// limit from the served models' geometry at start: the largest
+    /// `image_elems()` across the pool, costed at the JSON expansion rate
+    /// (which dwarfs the raw-f32 rate), plus envelope slack — so a
+    /// real-geometry model (ResNet-18 is a ~150k-element image) can never
+    /// be silently 413'd by a flat cap tuned on the synthetic fixture,
+    /// while tiny fixtures don't accept multi-megabyte garbage.
     pub max_body: usize,
 }
 
@@ -133,9 +224,20 @@ impl Default for HttpConfig {
             reply_timeout: Duration::from_secs(60),
             idle_timeout: Duration::from_secs(15),
             request_timeout: Duration::from_secs(10),
-            max_body: 4 * 1024 * 1024,
+            max_body: 0,
         }
     }
+}
+
+/// The derived `max_body` for a pool (the `max_body: 0` sentinel): the
+/// largest image across the served models, costed per element at the JSON
+/// rate — a shortest-roundtrip f32-as-f64 decimal runs to ~25 characters,
+/// call it 32 with the comma — plus envelope slack, floored so header-ish
+/// bodies (plan uploads, small fixtures) never get squeezed. Raw bodies
+/// (4 bytes/element) fit inside the same bound by construction.
+fn derived_max_body(pool: &ServerPool) -> usize {
+    let elems = pool.entries().iter().map(|e| e.image_elems()).max().unwrap_or(0);
+    (elems * 32 + 4096).max(64 * 1024)
 }
 
 /// Handle to a running HTTP front end. Owns the [`ServerPool`] behind it:
@@ -173,12 +275,15 @@ impl HttpServer {
     fn start_inner(
         pool: Arc<ServerPool>,
         single: Option<Arc<Server>>,
-        cfg: HttpConfig,
+        mut cfg: HttpConfig,
     ) -> Result<HttpServer> {
         let listener = TcpListener::bind(&cfg.addr)
             .map_err(|e| anyhow::anyhow!("bind {}: {e}", cfg.addr))?;
         let local_addr = listener.local_addr()?;
         let shutdown = Arc::new(AtomicBool::new(false));
+        if cfg.max_body == 0 {
+            cfg.max_body = derived_max_body(&pool);
+        }
         let cfg = Arc::new(cfg);
 
         let (conn_tx, conn_rx) = channel::<TcpStream>();
@@ -337,6 +442,9 @@ struct HttpRequest {
     method: String,
     path: String,
     keep_alive: bool,
+    /// The `Content-Type` header verbatim, when present — the infer route
+    /// negotiates its body [`Encoding`] from it.
+    content_type: Option<String>,
     body: Vec<u8>,
 }
 
@@ -448,6 +556,7 @@ impl Conn {
         };
         let http_11 = request_line.ends_with("HTTP/1.1");
         let mut content_length = 0usize;
+        let mut content_type: Option<String> = None;
         let mut keep_alive = http_11;
         let mut expect_continue = false;
         for line in lines {
@@ -465,6 +574,7 @@ impl Conn {
                         )
                     }
                 },
+                "content-type" => content_type = Some(value.to_string()),
                 "connection" => {
                     let v = value.to_ascii_lowercase();
                     if v.split(',').any(|t| t.trim() == "close") {
@@ -521,7 +631,7 @@ impl Conn {
         }
         let body = self.buf[body_start..body_start + content_length].to_vec();
         self.buf.drain(..body_start + content_length);
-        ReadOutcome::Request(HttpRequest { method, path, keep_alive, body })
+        ReadOutcome::Request(HttpRequest { method, path, keep_alive, content_type, body })
     }
 }
 
@@ -591,6 +701,7 @@ fn protocol_kind(status: u16) -> &'static str {
     match status {
         408 => "request_timeout",
         413 => "payload_too_large",
+        415 => "unsupported_media_type",
         431 => "header_too_large",
         501 => "not_implemented",
         _ => "bad_request",
@@ -618,7 +729,7 @@ fn route(pool: &ServerPool, cfg: &HttpConfig, req: &HttpRequest) -> (u16, String
             (200, pool.default_entry().metrics_json().to_string_compact())
         }
         ("GET", "/v1/plan") => plan_endpoint(pool.default_entry()),
-        ("POST", "/v1/infer") => entry_infer(pool.default_entry(), cfg, &req.body),
+        ("POST", "/v1/infer") => entry_infer(pool.default_entry(), cfg, req),
         (_, "/v1/healthz" | "/v1/metrics" | "/v1/infer" | "/v1/plan" | "/v1/models") => (
             405,
             err_body(
@@ -658,7 +769,7 @@ fn route_model(
         );
     };
     match (req.method.as_str(), endpoint) {
-        ("POST", Some("infer")) => entry_infer(entry, cfg, &req.body),
+        ("POST", Some("infer")) => entry_infer(entry, cfg, req),
         ("POST", Some("plan")) => swap_plan_route(entry, &req.body),
         ("GET", Some("healthz")) => healthz(entry),
         ("GET", Some("metrics")) => (200, entry.metrics_json().to_string_compact()),
@@ -774,35 +885,71 @@ fn swap_plan_route(entry: &PoolEntry, body: &[u8]) -> (u16, String) {
     }
 }
 
-fn entry_infer(entry: &PoolEntry, cfg: &HttpConfig, body: &[u8]) -> (u16, String) {
-    let text = match std::str::from_utf8(body) {
-        Ok(t) => t,
-        Err(_) => return (400, err_body("body is not UTF-8", "bad_request")),
-    };
-    let json = match Json::parse(text) {
-        Ok(j) => j,
-        Err(e) => return (400, err_body(&format!("body is not JSON: {e}"), "bad_request")),
-    };
-    let Some(arr) = json.get("image").and_then(Json::as_arr) else {
-        return (
-            400,
-            err_body(
-                "body must be a JSON object with an \"image\" array of numbers",
-                "bad_request",
-            ),
-        );
-    };
-    let mut image = Vec::with_capacity(arr.len());
-    for (i, v) in arr.iter().enumerate() {
-        match v.as_f64() {
-            // f64 -> f32 may overflow to ±inf for huge JSON numbers; the
-            // admission finiteness scan rejects those as InvalidInput.
-            Some(x) => image.push(x as f32),
-            None => {
-                return (400, err_body(&format!("image[{i}] is not a number"), "bad_request"))
+/// Decode the request body into the one owned [`ImageBuf`] per the
+/// negotiated encoding — the single write of the image's f32 data on the
+/// ingress side. Errors come back as a ready-to-send `(status, body)`.
+fn decode_image(
+    entry: &PoolEntry,
+    encoding: Encoding,
+    body: &[u8],
+) -> std::result::Result<ImageBuf, (u16, String)> {
+    match encoding {
+        Encoding::Json => {
+            let text = std::str::from_utf8(body)
+                .map_err(|_| (400, err_body("body is not UTF-8", "bad_request")))?;
+            // Lazy scan: materializes only the "image" array (f64 -> f32
+            // may overflow to ±inf for huge JSON numbers; the admission
+            // finiteness scan rejects those as InvalidInput).
+            match extract_f32_field(text, "image") {
+                Ok(Some(v)) => Ok(ImageBuf::from(v)),
+                Ok(None) => Err((
+                    400,
+                    err_body(
+                        "body must be a JSON object with an \"image\" array of numbers",
+                        "bad_request",
+                    ),
+                )),
+                Err(e) => {
+                    Err((400, err_body(&format!("body is not JSON: {e}"), "bad_request")))
+                }
             }
         }
+        Encoding::Raw => {
+            // The one wire-geometry check the HTTP layer owns: a raw body
+            // has no self-describing shape, so a byte count that disagrees
+            // with the model's geometry is a framing error (kind
+            // `bad_tensor_size`), distinct from admission's InvalidInput.
+            let expected = entry.image_elems() * 4;
+            if body.len() != expected {
+                return Err((
+                    400,
+                    err_body(
+                        &format!(
+                            "raw tensor body is {} bytes; model {:?} expects {expected} \
+                             ({} little-endian f32 elements)",
+                            body.len(),
+                            entry.name(),
+                            entry.image_elems()
+                        ),
+                        "bad_tensor_size",
+                    ),
+                ));
+            }
+            ImageBuf::from_raw_le_bytes(body)
+                .map_err(|e| (400, err_body(&e, "bad_tensor_size")))
+        }
     }
+}
+
+fn entry_infer(entry: &PoolEntry, cfg: &HttpConfig, req: &HttpRequest) -> (u16, String) {
+    let encoding = match Encoding::from_content_type(req.content_type.as_deref()) {
+        Ok(e) => e,
+        Err(msg) => return (415, err_body(&msg, "unsupported_media_type")),
+    };
+    let image = match decode_image(entry, encoding, &req.body) {
+        Ok(img) => img,
+        Err(resp) => return resp,
+    };
     let rx = match entry.submit(image) {
         // Lazy prepare can fail (a backend that won't pack): that is the
         // entry failing to start, not a request-level ServeError.
@@ -861,6 +1008,7 @@ fn reason(status: u16) -> &'static str {
         405 => "Method Not Allowed",
         408 => "Request Timeout",
         413 => "Payload Too Large",
+        415 => "Unsupported Media Type",
         429 => "Too Many Requests",
         431 => "Request Header Fields Too Large",
         500 => "Internal Server Error",
@@ -946,15 +1094,32 @@ impl HttpClient {
         HttpClient { target: target.clone(), timeout, conn: None }
     }
 
-    /// Issue one request; returns `(status, body)`.
+    /// Issue one JSON request; returns `(status, body)`.
     pub fn request(
         &mut self,
         method: &str,
         path: &str,
         body: Option<&str>,
     ) -> io::Result<(u16, String)> {
+        self.request_bytes(
+            method,
+            path,
+            body.unwrap_or("").as_bytes(),
+            Encoding::Json.content_type(),
+        )
+    }
+
+    /// Issue one request with an arbitrary payload and content type — the
+    /// raw-f32 wire encoding's entry point (responses are always JSON).
+    pub fn request_bytes(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: &[u8],
+        content_type: &str,
+    ) -> io::Result<(u16, String)> {
         let reused = self.conn.is_some();
-        match self.request_once(method, path, body) {
+        match self.request_once(method, path, body, content_type) {
             Ok(r) => Ok(r),
             Err((e, response_started)) => {
                 // Retry exactly the stale-keep-alive race: a *reused*
@@ -975,7 +1140,7 @@ impl HttpClient {
                             | io::ErrorKind::WriteZero
                     );
                 if stale {
-                    self.request_once(method, path, body).map_err(|(e, _)| e)
+                    self.request_once(method, path, body, content_type).map_err(|(e, _)| e)
                 } else {
                     Err(e)
                 }
@@ -1013,7 +1178,8 @@ impl HttpClient {
         &mut self,
         method: &str,
         path: &str,
-        body: Option<&str>,
+        payload: &[u8],
+        content_type: &str,
     ) -> Result<(u16, String), (io::Error, bool)> {
         let full_path = format!("{}{}", self.target.base_path, path);
         let authority = self.target.authority.clone();
@@ -1022,10 +1188,9 @@ impl HttpClient {
             Ok(c) => c,
             Err(e) => return Err((e, false)),
         };
-        let payload = body.unwrap_or("");
         let head = format!(
             "{method} {full_path} HTTP/1.1\r\nhost: {authority}\r\n\
-             content-type: application/json\r\ncontent-length: {}\r\n\
+             content-type: {content_type}\r\ncontent-length: {}\r\n\
              connection: keep-alive\r\n\r\n",
             payload.len()
         );
@@ -1057,13 +1222,13 @@ const MAX_CLIENT_BODY: usize = 16 * 1024 * 1024;
 fn send_and_read(
     conn: &mut ClientConn,
     head: &str,
-    payload: &str,
+    payload: &[u8],
     timeout: Duration,
 ) -> io::Result<(u16, String, bool)> {
     let wrote = conn
         .stream
         .write_all(head.as_bytes())
-        .and_then(|()| conn.stream.write_all(payload.as_bytes()))
+        .and_then(|()| conn.stream.write_all(payload))
         .and_then(|()| conn.stream.flush());
     match wrote {
         Ok(()) => read_client_response(conn, Instant::now() + timeout),
@@ -1248,5 +1413,47 @@ mod tests {
     fn find_subsequence_locates_terminator() {
         assert_eq!(find_subsequence(b"ab\r\n\r\ncd", b"\r\n\r\n"), Some(2));
         assert_eq!(find_subsequence(b"abcd", b"\r\n\r\n"), None);
+    }
+
+    #[test]
+    fn content_type_negotiation_maps_every_encoding() {
+        // No header and JSON spellings (parameters, case) resolve to Json.
+        assert_eq!(Encoding::from_content_type(None), Ok(Encoding::Json));
+        assert_eq!(
+            Encoding::from_content_type(Some("application/json")),
+            Ok(Encoding::Json)
+        );
+        assert_eq!(
+            Encoding::from_content_type(Some("Application/JSON; charset=utf-8")),
+            Ok(Encoding::Json)
+        );
+        assert_eq!(
+            Encoding::from_content_type(Some(RAW_CONTENT_TYPE)),
+            Ok(Encoding::Raw)
+        );
+        assert_eq!(
+            Encoding::from_content_type(Some("APPLICATION/X-RAW-F32")),
+            Ok(Encoding::Raw)
+        );
+        // Unknown types name both supported encodings — the 415 body's UX.
+        let err = Encoding::from_content_type(Some("application/x-www-form-urlencoded"))
+            .unwrap_err();
+        assert!(err.contains("application/json") && err.contains(RAW_CONTENT_TYPE), "{err}");
+    }
+
+    #[test]
+    fn encoding_cli_spellings_roundtrip() {
+        for e in [Encoding::Json, Encoding::Raw] {
+            assert_eq!(Encoding::parse(e.name()).unwrap(), e);
+        }
+        assert!(Encoding::parse("protobuf").is_err());
+    }
+
+    #[test]
+    fn derived_max_body_scales_with_geometry() {
+        // ResNet-18 geometry (~150k elements) must clear the historic flat
+        // 4 MiB cap at the JSON expansion rate; a tiny fixture floors out.
+        assert!(150_528 * 32 + 4096 > 4 * 1024 * 1024);
+        assert_eq!(0usize * 32 + 4096, 4096); // floor applies below 64 KiB
     }
 }

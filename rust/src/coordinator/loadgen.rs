@@ -49,7 +49,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use super::http::{HttpClient, HttpTarget};
+use super::http::{Encoding, HttpClient, HttpTarget};
 use super::metrics::Metrics;
 use super::server::{ServeError, Server};
 use crate::backend::{self, synth, BackendInit, InferenceBackend};
@@ -132,6 +132,13 @@ pub struct LoadSpec {
     /// Empty means "discover the pool and skew 80/20 toward its default
     /// model". Weights are relative (they need not sum to 1).
     pub model_weights: Vec<(String, f64)>,
+    /// Remote runs only: how request bodies go on the wire — `json` (the
+    /// default; an `{"image": [...]}` object) or `raw` (the image as
+    /// little-endian f32 bytes under `application/x-raw-f32`). Both fold
+    /// into the same [`LoadReport`] outcome classes, so the encodings
+    /// chart on the same axes. In-process runs ignore this (there is no
+    /// wire).
+    pub encoding: Encoding,
 }
 
 impl Default for LoadSpec {
@@ -144,6 +151,7 @@ impl Default for LoadSpec {
             scenario: Scenario::Steady,
             seed: 42,
             model_weights: Vec::new(),
+            encoding: Encoding::Json,
         }
     }
 }
@@ -460,12 +468,40 @@ impl LoadReport {
 
 /// One generated request on its way to a client-connection worker.
 struct WireJob {
-    body: String,
+    /// Serialized request body in the run's [`LoadSpec::encoding`]: UTF-8
+    /// JSON bytes, or the image's little-endian f32 bytes.
+    body: Vec<u8>,
     queued: Instant,
     /// Route to POST to (`/v1/infer`, or a per-model pool route).
     path: String,
     /// Index into the run's model-target list (0 for single-model runs).
     model: usize,
+}
+
+/// Serialize one generated image in the run's wire encoding — the client
+/// half of the `Encoding` contract (`ilmpq analyze` rule R6 requires every
+/// variant handled here and in `http.rs`). `Json` is the classic
+/// `{"image": [...]}` object; `Raw` is the image verbatim as little-endian
+/// f32 bytes, bit-exact with what `ImageBuf::from_raw_le_bytes` decodes
+/// server-side. Outcome folding needs no per-encoding arm: `classify_wire`
+/// is status-based, and a malformed raw image (wrong length ⇒ wrong byte
+/// count) draws the same 400 as its JSON twin.
+fn encode_image(encoding: Encoding, image: &[f32]) -> Vec<u8> {
+    match encoding {
+        Encoding::Json => Json::obj(vec![(
+            "image",
+            Json::Arr(image.iter().map(|&v| Json::Num(v as f64)).collect()),
+        )])
+        .to_string_compact()
+        .into_bytes(),
+        Encoding::Raw => {
+            let mut body = Vec::with_capacity(image.len() * 4);
+            for v in image {
+                body.extend_from_slice(&v.to_le_bytes());
+            }
+            body
+        }
+    }
 }
 
 /// One model a remote run routes traffic to. Single-model runs have
@@ -715,6 +751,7 @@ pub fn run_remote(url: &str, spec: &LoadSpec, conns: usize) -> Result<(LoadRepor
     let rx = Arc::new(Mutex::new(rx));
     let backlog_bytes = Arc::new(std::sync::atomic::AtomicUsize::new(0));
     let mut overflow = 0usize;
+    let encoding = spec.encoding;
     let workers: Vec<_> = (0..conns.max(1))
         .map(|_| {
             let rx = rx.clone();
@@ -742,7 +779,12 @@ pub fn run_remote(url: &str, spec: &LoadSpec, conns: usize) -> Result<(LoadRepor
                         tally.models[job.model].failed += 1;
                         continue;
                     }
-                    let result = client.request("POST", &job.path, Some(&job.body));
+                    let result = client.request_bytes(
+                        "POST",
+                        &job.path,
+                        &job.body,
+                        encoding.content_type(),
+                    );
                     classify_wire(&mut tally, &job, result);
                 }
                 tally
@@ -778,11 +820,7 @@ pub fn run_remote(url: &str, spec: &LoadSpec, conns: usize) -> Result<(LoadRepor
         };
         offered[ti] += 1;
         let image = gen_image(&mut rng, spec, targets[ti].img);
-        let body = Json::obj(vec![(
-            "image",
-            Json::Arr(image.iter().map(|&v| Json::Num(v as f64)).collect()),
-        )])
-        .to_string_compact();
+        let body = encode_image(spec.encoding, &image);
         // Non-blocking so the arrival process stays open-loop: a full
         // queue (by bytes or count) means delivery (bounded by `conns`)
         // fell this far behind the offered rate; drop the job client-side
@@ -1262,6 +1300,28 @@ mod tests {
             let failed = r.get("failed").and_then(|v| v.as_f64()).unwrap();
             assert_eq!(offered, done + failed);
         }
+    }
+
+    #[test]
+    fn encode_image_covers_both_wire_encodings() {
+        let image = [1.5f32, -0.25, f32::MIN_POSITIVE, 3.0e7];
+        // JSON: the classic object, parseable back to the same values
+        // (shortest-decimal f32→f64 round-trips are bit-exact).
+        let json = encode_image(Encoding::Json, &image);
+        let j = Json::parse(std::str::from_utf8(&json).unwrap()).unwrap();
+        let arr = j.get("image").and_then(Json::as_arr).unwrap();
+        assert_eq!(arr.len(), image.len());
+        for (v, x) in arr.iter().zip(image) {
+            assert_eq!(v.as_f64().map(|f| f as f32), Some(x));
+        }
+        // Raw: 4 bytes per element, decoding back bit-exactly.
+        let raw = encode_image(Encoding::Raw, &image);
+        assert_eq!(raw.len(), image.len() * 4);
+        let back: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        assert_eq!(back, image);
     }
 
     #[test]

@@ -32,7 +32,7 @@ pub mod server;
 pub mod trainer;
 
 pub use batcher::{BatchPolicy, Batcher};
-pub use http::{HttpClient, HttpConfig, HttpServer, HttpTarget};
+pub use http::{Encoding, HttpClient, HttpConfig, HttpServer, HttpTarget, RAW_CONTENT_TYPE};
 pub use metrics::Metrics;
 pub use pool::{PoolEntry, ServerPool};
 pub use server::{Request, Response, ServeConfig, ServeError, ServeResult, Server};

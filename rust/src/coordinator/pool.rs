@@ -45,7 +45,7 @@ use anyhow::{anyhow, Context, Result};
 
 use super::metrics::Metrics;
 use super::server::{ServeConfig, ServeResult, Server};
-use crate::backend::{self, synth, BackendInit, FaultSpec, InferenceBackend};
+use crate::backend::{self, synth, BackendInit, FaultSpec, ImageBuf, InferenceBackend};
 use crate::quant::{plan::parse_ratio_arg, MaskSet, Provenance, QuantPlan};
 use crate::runtime::{HostTensor, Manifest};
 use crate::util::sync::{LockExt, RwLockExt};
@@ -318,12 +318,14 @@ impl PoolEntry {
     }
 
     /// Submit one image to this entry (starting it lazily on first use).
+    /// Like [`Server::submit`], takes the image as an owned [`ImageBuf`]
+    /// (a `Vec<f32>` converts for free) and moves it down the pipeline.
     ///
     /// The submit happens while *holding the state read lock*, without
     /// cloning the `Arc<Server>` — load-bearing for the swap: after the
     /// swap's write lock swings the pointer, no submit can still be routing
     /// into the old server, and the swap holds that server's only `Arc`.
-    pub fn submit(&self, image: Vec<f32>) -> Result<Receiver<ServeResult>> {
+    pub fn submit(&self, image: impl Into<ImageBuf>) -> Result<Receiver<ServeResult>> {
         self.ensure_started()?;
         let st = self.state.pread();
         let server = st

@@ -79,7 +79,7 @@ use anyhow::{Context, Result};
 
 use super::batcher::{Assembled, BatchPolicy, Batcher, Pending};
 use super::metrics::Metrics;
-use crate::backend::{self, BackendInit, BatchOutput, InferenceBackend};
+use crate::backend::{self, BackendInit, BatchOutput, ImageBuf, InferenceBackend};
 use crate::util::sync::LockExt;
 use crate::fpga::{simulate, DeviceModel, Mode, NetConfig, SimReport};
 use crate::model::zoo;
@@ -87,8 +87,13 @@ use crate::quant::{assign, MaskSet, Provenance, QuantPlan, Scheme};
 use crate::runtime::{HostTensor, Manifest, Runtime};
 
 /// One inference request: a flattened image (already admission-validated).
+///
+/// The image is the single owned buffer from ingress decode onward — it
+/// *moves* through admission, the router, and the batcher untouched, and is
+/// read in place by batch assembly and the singleton-retry path. See
+/// ROADMAP "Architecture: wire encodings & ingestion".
 pub struct Request {
-    pub image: Vec<f32>,
+    pub image: ImageBuf,
     pub reply: Sender<ServeResult>,
     pub submitted: Instant,
 }
@@ -728,7 +733,12 @@ impl Server {
     /// validation or hits the queue bound receives its typed error on the
     /// returned channel without ever entering batch assembly; every
     /// admitted request is answered exactly once.
-    pub fn submit(&self, image: Vec<f32>) -> Receiver<ServeResult> {
+    ///
+    /// Takes the image by value as an owned [`ImageBuf`] (a `Vec<f32>`
+    /// converts for free): admission validates it in place and the same
+    /// buffer rides the pipeline to batch assembly — no copy at this hop.
+    pub fn submit(&self, image: impl Into<ImageBuf>) -> Receiver<ServeResult> {
+        let image: ImageBuf = image.into();
         let (tx, rx) = channel();
         let submitted = Instant::now();
         Metrics::inc(&self.metrics.requests_in);
@@ -1014,7 +1024,9 @@ fn execute_once(
             // eventual result is dropped with the channel, so the worker
             // can answer the members and release their slots now. The
             // input is cloned because the abandoned helper may still read
-            // it after this frame returns.
+            // it after this frame returns — the documented deadline-path
+            // exception to the one-owned-buffer "at most two writes"
+            // invariant (no deadline configured ⇒ no clone).
             let (tx, rx) = channel();
             let be = backend.clone();
             let input = x.to_vec();
@@ -1180,7 +1192,9 @@ fn run_batch(ctx: &ExecCtx, batch: Assembled<Request>) {
     let mut x = Vec::with_capacity(exec_size * ctx.img_elems);
     for p in &batch.items {
         // Admission validated every image's geometry, so this concatenation
-        // cannot shift a neighbour's offset.
+        // cannot shift a neighbour's offset. This is each image's second
+        // and final write (the first was its decode into the ImageBuf) —
+        // the one-owned-buffer invariant the counting-backend test pins.
         debug_assert_eq!(p.payload.image.len(), ctx.img_elems);
         x.extend_from_slice(&p.payload.image);
     }

@@ -24,8 +24,8 @@ use ilmpq::analysis;
 use ilmpq::backend::{self, synth, InferenceBackend};
 use ilmpq::baselines::table1::accuracy_configs;
 use ilmpq::coordinator::{
-    loadgen, ratio_search, trainer::Trainer, HttpConfig, HttpServer, ServeConfig, Server,
-    ServerPool,
+    loadgen, ratio_search, trainer::Trainer, Encoding, HttpConfig, HttpServer, ServeConfig,
+    Server, ServerPool,
 };
 use ilmpq::experiments::{accuracy, figure1, ptq, table1};
 use ilmpq::fpga::DeviceModel;
@@ -461,8 +461,8 @@ fn run(cmd: &str) -> Result<()> {
                 };
                 let mut front = HttpServer::start(server, &manifest, http_cfg)?;
                 println!(
-                    "listening on http://{} — POST /v1/infer, GET /v1/healthz, \
-                     GET /v1/metrics",
+                    "listening on http://{} — POST /v1/infer (application/json \
+                     or application/x-raw-f32), GET /v1/healthz, GET /v1/metrics",
                     front.local_addr()
                 );
                 front.wait();
@@ -522,10 +522,17 @@ fn run(cmd: &str) -> Result<()> {
                      server-side options (backend/workers/...) are ignored",
                 ),
                 ("conns", "client connections for --url (default 8)"),
+                (
+                    "encoding",
+                    "wire encoding for --url: json (an {\"image\": [...]} \
+                     object, the default) or raw (the image as little-endian \
+                     f32 bytes, Content-Type application/x-raw-f32)",
+                ),
             ];
             flags.extend(RESILIENCE_FLAGS);
             let a = Args::parse_env("ilmpq loadgen", 2, &flags);
             let (scenario, malformed_frac, poison_frac) = workload_content(&a)?;
+            let encoding = Encoding::parse(a.str_or("encoding", "json"))?;
             if scenario == loadgen::Scenario::Multi && a.get("url").is_none() {
                 anyhow::bail!(
                     "--scenario multi drives a pool front end's per-model \
@@ -547,6 +554,7 @@ fn run(cmd: &str) -> Result<()> {
                         Some(s) => loadgen::parse_model_weights(s)?,
                         None => Vec::new(),
                     },
+                    encoding,
                 };
                 let (report, server_metrics) =
                     loadgen::run_remote(url, &spec, a.usize_or("conns", 8))?;
@@ -617,6 +625,8 @@ fn run(cmd: &str) -> Result<()> {
                 scenario,
                 seed,
                 model_weights: Vec::new(),
+                // In-process runs have no wire; the field is inert here.
+                encoding,
             };
             println!("backend: {} (model {})", be.name(), manifest.model_name);
             let server = Server::start_with_fallback(&manifest, be, fallback, cfg)?;
@@ -856,6 +866,7 @@ stack's documented invariants:
   R3  every ServeError variant is mapped in http.rs and loadgen.rs
   R4  every Metrics counter is emitted by both report() and to_json()
   R5  no lock guard held across a blocking call in server.rs/pool.rs
+  R6  every wire Encoding variant is handled in http.rs and loadgen.rs
 
 DIR defaults to the crate source (src, or rust/src from the repo root).
 Findings print as `path:line [rule] message` and exit nonzero; --json emits
@@ -898,8 +909,9 @@ commands:
   ptq           deterministic PTQ probe (train once, quantize each config)
   train         one QAT run with the loss curve (--ratio NAME | --plan FILE)
   serve         inference serving: `--listen ADDR` puts the HTTP/1.1 front
-                end on the admission pipeline (POST /v1/infer, GET
-                /v1/healthz, GET /v1/metrics, GET /v1/plan); without it,
+                end on the admission pipeline (POST /v1/infer — JSON or raw
+                little-endian f32 bodies by Content-Type — GET /v1/healthz,
+                GET /v1/metrics, GET /v1/plan); without it,
                 the in-process demo loop runs (dynamic batching, --backend
                 NAME); `--plan p.json` serves a saved quantization plan;
                 `--pool cfg.json|synth` serves a multi-model pool (GET
@@ -912,8 +924,9 @@ commands:
                 (--rate, --queue-depth, --malformed, --poison,
                 --scenario steady|burst|chaos|multi; runs artifact-free);
                 `--url http://host:port` drives a remote `serve --listen`
-                over real sockets with the same outcome classes; multi
-                fans across a pool's models (--models name:weight,...)
+                over real sockets with the same outcome classes, in either
+                wire encoding (--encoding json|raw); multi fans across a
+                pool's models (--models name:weight,...)
   backends      list the registered execution backends
   analyze       project-specific static analysis over the crate's own source
                 (serving-path panic freedom, answer-exactly-once reply

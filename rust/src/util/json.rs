@@ -394,6 +394,171 @@ impl<'a> Parser<'a> {
     }
 }
 
+    /// Validate a value's grammar and advance past it without building it.
+    /// The lazy-scan contract: skipped values still get the *full* grammar
+    /// check (a malformed sibling fails the scan), they just never allocate
+    /// a tree.
+    fn skip_value(&mut self) -> Result<(), JsonError> {
+        match self.peek() {
+            Some(b'{') => {
+                self.eat(b'{')?;
+                self.ws();
+                if self.peek() == Some(b'}') {
+                    self.i += 1;
+                    return Ok(());
+                }
+                loop {
+                    self.ws();
+                    self.string()?;
+                    self.ws();
+                    self.eat(b':')?;
+                    self.ws();
+                    self.skip_value()?;
+                    self.ws();
+                    match self.peek() {
+                        Some(b',') => self.i += 1,
+                        Some(b'}') => {
+                            self.i += 1;
+                            return Ok(());
+                        }
+                        _ => return Err(self.err("expected , or }")),
+                    }
+                }
+            }
+            Some(b'[') => {
+                self.eat(b'[')?;
+                self.ws();
+                if self.peek() == Some(b']') {
+                    self.i += 1;
+                    return Ok(());
+                }
+                loop {
+                    self.ws();
+                    self.skip_value()?;
+                    self.ws();
+                    match self.peek() {
+                        Some(b',') => self.i += 1,
+                        Some(b']') => {
+                            self.i += 1;
+                            return Ok(());
+                        }
+                        _ => return Err(self.err("expected , or ]")),
+                    }
+                }
+            }
+            Some(b'"') => self.string().map(|_| ()),
+            Some(b't') => self.lit("true", Json::Null).map(|_| ()),
+            Some(b'f') => self.lit("false", Json::Null).map(|_| ()),
+            Some(b'n') => self.lit("null", Json::Null).map(|_| ()),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number().map(|_| ()),
+            _ => Err(self.err("expected value")),
+        }
+    }
+
+    /// Parse a `[num, num, ...]` array straight into `Vec<f32>` — no
+    /// `Json::Arr` of boxed `Json::Num`s in between. `key` only labels the
+    /// error message.
+    fn f32_array(&mut self, key: &str) -> Result<Vec<f32>, JsonError> {
+        self.eat(b'[')?;
+        let mut out = Vec::new();
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(out);
+        }
+        loop {
+            self.ws();
+            match self.peek() {
+                Some(c) if c == b'-' || c.is_ascii_digit() => {
+                    if let Json::Num(n) = self.number()? {
+                        out.push(n as f32);
+                    }
+                }
+                _ => {
+                    return Err(JsonError {
+                        offset: self.i,
+                        msg: format!("{key}[{}] is not a number", out.len()),
+                    })
+                }
+            }
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                _ => return Err(self.err("expected , or ]")),
+            }
+        }
+    }
+}
+
+/// Lazily extract one numeric-array field from a top-level JSON object,
+/// decoded straight to `Vec<f32>`, without building the document tree.
+///
+/// This is the serving front door's JSON ingestion path: at ResNet-18
+/// geometry an infer body is a ~150k-element array, and a full-tree parse
+/// allocates a boxed `Json::Num` per element only to throw the tree away.
+/// The scanner walks the same grammar but materializes *only* `key`'s
+/// array.
+///
+/// Contract (matched by property tests against [`Json::parse`]):
+/// * The whole document is still grammar-checked — skipped siblings and
+///   trailing garbage fail the scan exactly as they fail a full parse.
+/// * `Ok(None)` when the document is valid JSON but is not an object, has
+///   no `key` member, or `key`'s value is not an array — the caller's
+///   "missing field" case.
+/// * On duplicate keys the last occurrence wins, matching `Json::parse`'s
+///   map-insert semantics.
+/// * A non-numeric array element is an error naming the index, not `None`.
+pub fn extract_f32_field(s: &str, key: &str) -> Result<Option<Vec<f32>>, JsonError> {
+    let mut p = Parser { b: s.as_bytes(), i: 0 };
+    p.ws();
+    let mut found = None;
+    if p.peek() == Some(b'{') {
+        p.eat(b'{')?;
+        p.ws();
+        if p.peek() == Some(b'}') {
+            p.i += 1;
+        } else {
+            loop {
+                p.ws();
+                let k = p.string()?;
+                p.ws();
+                p.eat(b':')?;
+                p.ws();
+                if k == key && p.peek() == Some(b'[') {
+                    found = Some(p.f32_array(key)?);
+                } else {
+                    p.skip_value()?;
+                    if k == key {
+                        found = None;
+                    }
+                }
+                p.ws();
+                match p.peek() {
+                    Some(b',') => p.i += 1,
+                    Some(b'}') => {
+                        p.i += 1;
+                        break;
+                    }
+                    _ => return Err(p.err("expected , or }")),
+                }
+            }
+        }
+    } else {
+        // Not an object: still insist the body is valid JSON so garbage
+        // reports a parse error rather than a missing field.
+        p.skip_value()?;
+    }
+    p.ws();
+    if p.i != p.b.len() {
+        return Err(p.err("trailing garbage"));
+    }
+    Ok(found)
+}
+
 fn utf8_len(b: u8) -> usize {
     match b {
         0x00..=0x7F => 1,
@@ -567,6 +732,113 @@ mod tests {
         let j = Json::obj(vec![("b", Json::Num(1.0)), ("a", Json::Bool(true))]);
         assert_eq!(j.get("a"), Some(&Json::Bool(true)));
         assert_eq!(j.get("b").and_then(|v| v.as_f64()), Some(1.0));
+    }
+
+    // ---- lazy field scanner ----------------------------------------------
+
+    #[test]
+    fn scanner_extracts_field_and_skips_siblings() {
+        let doc = r#"{"meta": {"a": [1, "x"], "b": "br]ack{et"}, "image": [1, -2.5, 3e2], "z": null}"#;
+        let got = extract_f32_field(doc, "image").unwrap();
+        assert_eq!(got, Some(vec![1.0, -2.5, 300.0]));
+        assert_eq!(extract_f32_field(r#"{"image": []}"#, "image").unwrap(), Some(vec![]));
+    }
+
+    #[test]
+    fn scanner_reports_missing_field_as_none() {
+        // Valid JSON without the field — in every spelling — is None, the
+        // caller's "missing field" case, not an error.
+        assert_eq!(extract_f32_field(r#"{"other": [1]}"#, "image").unwrap(), None);
+        assert_eq!(extract_f32_field(r#"{"image": 5}"#, "image").unwrap(), None);
+        assert_eq!(extract_f32_field(r#"{"image": "x"}"#, "image").unwrap(), None);
+        assert_eq!(extract_f32_field("[1, 2]", "image").unwrap(), None);
+        assert_eq!(extract_f32_field("null", "image").unwrap(), None);
+        assert_eq!(extract_f32_field("{}", "image").unwrap(), None);
+    }
+
+    #[test]
+    fn scanner_errors_name_the_bad_element() {
+        let err = extract_f32_field(r#"{"image": [1, "x", 3]}"#, "image").unwrap_err();
+        assert!(err.msg.contains("image[1]"), "{err}");
+        let err = extract_f32_field(r#"{"image": [1, null]}"#, "image").unwrap_err();
+        assert!(err.msg.contains("image[1]"), "{err}");
+    }
+
+    #[test]
+    fn scanner_still_grammar_checks_the_whole_document() {
+        // Malformed siblings and trailing garbage fail the scan even though
+        // their values are never materialized.
+        assert!(extract_f32_field(r#"{"image": [1], "bad": nul}"#, "image").is_err());
+        assert!(extract_f32_field(r#"{"image": [1]} extra"#, "image").is_err());
+        assert!(extract_f32_field(r#"{"image": [1],}"#, "image").is_err());
+        assert!(extract_f32_field(r#"{"image""#, "image").is_err());
+    }
+
+    #[test]
+    fn scanner_duplicate_key_matches_full_parse_last_wins() {
+        let doc = r#"{"image": [1], "image": [2, 3]}"#;
+        assert_eq!(extract_f32_field(doc, "image").unwrap(), Some(vec![2.0, 3.0]));
+        let doc = r#"{"image": [1], "image": false}"#;
+        assert_eq!(extract_f32_field(doc, "image").unwrap(), None);
+    }
+
+    #[test]
+    fn prop_scanner_agrees_with_full_parse() {
+        // Scanner twin of the roundtrip property: embed a random numeric
+        // array among random siblings; the lazy scan must read back exactly
+        // what a full-tree parse reads.
+        crate::util::prop::forall(
+            113,
+            256,
+            |r| {
+                let n = r.below(30);
+                let vals: Vec<f32> =
+                    (0..n).map(|_| ((r.f64() - 0.5) * 1e4) as f32).collect();
+                let mut m = BTreeMap::new();
+                m.insert(
+                    "image".to_string(),
+                    Json::Arr(vals.iter().map(|&v| Json::Num(v as f64)).collect()),
+                );
+                m.insert("sib".to_string(), random_json(r, 2));
+                (Json::Obj(m).to_string_compact(), vals)
+            },
+            |(text, vals)| {
+                let got = extract_f32_field(text, "image")
+                    .map_err(|e| format!("scan failed: {e} on {text:?}"))?;
+                let full: Vec<f32> = Json::parse(text)
+                    .map_err(|e| e.to_string())?
+                    .at("image")
+                    .num_vec()
+                    .into_iter()
+                    .map(|v| v as f32)
+                    .collect();
+                crate::util::prop::ensure(
+                    got.as_deref() == Some(&vals[..]) && full == vals[..],
+                    || format!("scan {got:?} / full {full:?} != {vals:?}"),
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn prop_scanner_never_panics_on_garbage() {
+        crate::util::prop::forall(
+            114,
+            512,
+            |r| {
+                let len = r.below(40);
+                (0..len)
+                    .map(|_| {
+                        let c = r.below(96) as u8 + 32;
+                        c as char
+                    })
+                    .collect::<String>()
+            },
+            |s| {
+                let _ = extract_f32_field(s, "image"); // must not panic
+                Ok(())
+            },
+        );
     }
 
     #[test]

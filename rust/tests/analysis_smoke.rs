@@ -94,6 +94,34 @@ fn r3_silent_when_every_variant_is_mapped() {
     assert!(rules.is_empty(), "{rules:?}");
 }
 
+// ---------------------------------------------------------------- R6
+
+const HTTP_WITH_ENCODING: &str = "pub enum Encoding { Json, Raw }\n\
+    fn decode(e: Encoding) { match e { Encoding::Json => a(), Encoding::Raw => b() } }";
+
+#[test]
+fn r6_fires_on_encoding_missing_from_the_client_side() {
+    // http.rs declares and decodes both variants; loadgen only ever
+    // encodes Json — the Raw half of the wire contract is unwired.
+    let loadgen = "fn enc() { let b = Encoding::Json; use_it(b); }";
+    let rules = rules_for(&[
+        ("coordinator/http.rs", HTTP_WITH_ENCODING),
+        ("coordinator/loadgen.rs", loadgen),
+    ]);
+    assert_eq!(rules, vec!["R6"]);
+}
+
+#[test]
+fn r6_silent_when_both_sides_handle_every_encoding() {
+    let loadgen =
+        "fn enc(e: Encoding) { match e { Encoding::Json => a(), Encoding::Raw => b() } }";
+    let rules = rules_for(&[
+        ("coordinator/http.rs", HTTP_WITH_ENCODING),
+        ("coordinator/loadgen.rs", loadgen),
+    ]);
+    assert!(rules.is_empty(), "{rules:?}");
+}
+
 // ---------------------------------------------------------------- R4
 
 #[test]

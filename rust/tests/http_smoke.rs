@@ -14,7 +14,11 @@
 //!   **never wedges a handler** — the next request on a fresh connection
 //!   still succeeds;
 //! * the remote load generator (`loadgen::run_remote`, `ilmpq loadgen
-//!   --url`) reproduces the in-process outcome classes over the wire.
+//!   --url`) reproduces the in-process outcome classes over the wire;
+//! * the raw little-endian f32 encoding (`application/x-raw-f32`) is
+//!   bit-identical with JSON end-to-end, malformed raw bodies bounce with
+//!   `bad_tensor_size` without touching their batch neighbours, and an
+//!   unknown Content-Type maps to 415.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -24,6 +28,7 @@ use std::time::Duration;
 use ilmpq::backend::{BatchOutput, InferenceBackend};
 use ilmpq::coordinator::{
     loadgen, HttpClient, HttpConfig, HttpServer, HttpTarget, ServeConfig, Server,
+    RAW_CONTENT_TYPE,
 };
 use ilmpq::runtime::Manifest;
 use ilmpq::util::{Json, Rng};
@@ -77,6 +82,34 @@ fn normal_image(img: usize, rng: &mut Rng) -> Vec<f32> {
     let mut image = vec![0f32; img];
     rng.fill_normal(&mut image, 1.0);
     image
+}
+
+/// The raw wire encoding: the image verbatim as little-endian f32 bytes.
+fn raw_body(image: &[f32]) -> Vec<u8> {
+    let mut b = Vec::with_capacity(image.len() * 4);
+    for v in image {
+        b.extend_from_slice(&v.to_le_bytes());
+    }
+    b
+}
+
+fn logits_of(body: &str) -> Vec<f32> {
+    Json::parse(body)
+        .unwrap()
+        .get("logits")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as f32)
+        .collect()
+}
+
+fn kind_of(body: &str) -> Option<String> {
+    Json::parse(body)
+        .ok()?
+        .get("kind")
+        .and_then(Json::as_str)
+        .map(str::to_string)
 }
 
 #[test]
@@ -195,6 +228,124 @@ fn wire_logits_match_direct_backend_execution() {
         "wire logits diverged from direct execution"
     );
     front.stop();
+}
+
+#[test]
+fn raw_and_json_encodings_are_bit_identical_over_the_wire() {
+    let (m, be, plan) = loadgen::synth_fixture("qgemm", "raw", Some(2), 37).unwrap();
+    let (front, m) = start_front_with(
+        &m,
+        be.clone(),
+        ServeConfig {
+            workers: 1,
+            max_wait: Duration::from_millis(1),
+            plan: Some(plan),
+            ..Default::default()
+        },
+        2,
+    );
+    let img = m.data.image_elems();
+    let mut rng = Rng::new(21);
+    let image = normal_image(img, &mut rng);
+    let reference = be.run_batch(&image, 1).unwrap();
+
+    let mut client = client_for(&front);
+    // Raw round-trip: little-endian f32 bytes in, logits out — matching
+    // direct backend execution exactly (the body *is* the ImageBuf, no
+    // textual round-trip anywhere on the ingest path).
+    let (code, body) = client
+        .request_bytes("POST", "/v1/infer", &raw_body(&image), RAW_CONTENT_TYPE)
+        .unwrap();
+    assert_eq!(code, 200, "{body}");
+    let raw_logits = logits_of(&body);
+    assert_eq!(raw_logits, reference.logits, "raw wire diverged from direct execution");
+    assert_eq!(
+        Json::parse(&body).unwrap().get("pred").and_then(Json::as_usize),
+        Some(reference.preds[0])
+    );
+
+    // The same image as JSON: the f32 -> shortest-decimal -> f32 text trip
+    // is lossless, so both encodings must produce bit-identical logits.
+    let (code, body) = client.request("POST", "/v1/infer", Some(&infer_body(&image))).unwrap();
+    assert_eq!(code, 200, "{body}");
+    assert_eq!(
+        logits_of(&body),
+        raw_logits,
+        "JSON and raw encodings must agree bit-for-bit"
+    );
+    front.stop();
+}
+
+#[test]
+fn malformed_raw_bodies_bounce_alone_with_bit_correct_neighbours() {
+    let (m, be, plan) = loadgen::synth_fixture("qgemm", "rwb", Some(2), 41).unwrap();
+    let (front, m) = start_front_with(
+        &m,
+        be.clone(),
+        ServeConfig {
+            workers: 1,
+            max_wait: Duration::from_millis(1),
+            plan: Some(plan),
+            ..Default::default()
+        },
+        2,
+    );
+    let img = m.data.image_elems();
+    let mut rng = Rng::new(43);
+    let good = normal_image(img, &mut rng);
+    let reference = be.run_batch(&good, 1).unwrap();
+    let mut client = client_for(&front);
+
+    // Each malformed shape draws its 400 at the right layer, and a
+    // well-formed request straight after still computes bit-correct logits
+    // — a rejected body must never leak into anyone's batch.
+    let truncated = raw_body(&good[..img / 2]);
+    let mut ragged = raw_body(&good);
+    ragged.pop(); // no longer a whole number of f32s (and short one byte)
+    let mut oversized = raw_body(&good);
+    oversized.extend_from_slice(&1.0f32.to_le_bytes());
+    let mut poisoned = good.clone();
+    poisoned[3] = f32::NAN;
+    let cases: Vec<(Vec<u8>, &str, &str)> = vec![
+        (truncated, "bad_tensor_size", "short body"),
+        (ragged, "bad_tensor_size", "non-multiple-of-4 body"),
+        (oversized, "bad_tensor_size", "wrong-length body"),
+        // Right size, non-finite payload: decodes fine, then bounces off
+        // *admission* — same class as its JSON twin.
+        (raw_body(&poisoned), "invalid_input", "non-finite bytes"),
+    ];
+    for (bad, want_kind, what) in cases {
+        let (code, reply) = client
+            .request_bytes("POST", "/v1/infer", &bad, RAW_CONTENT_TYPE)
+            .unwrap();
+        assert_eq!(code, 400, "{what}: {reply}");
+        assert_eq!(kind_of(&reply).as_deref(), Some(want_kind), "{what}: {reply}");
+        let (code, reply) = client
+            .request_bytes("POST", "/v1/infer", &raw_body(&good), RAW_CONTENT_TYPE)
+            .unwrap();
+        assert_eq!(code, 200, "neighbour after {what}: {reply}");
+        assert_eq!(
+            logits_of(&reply),
+            reference.logits,
+            "neighbour logits perturbed after {what}"
+        );
+    }
+
+    // Unknown Content-Type: 415 naming both supported encodings.
+    let (code, reply) = client
+        .request_bytes("POST", "/v1/infer", &raw_body(&good), "application/x-protobuf")
+        .unwrap();
+    assert_eq!(code, 415, "{reply}");
+    assert_eq!(kind_of(&reply).as_deref(), Some("unsupported_media_type"), "{reply}");
+    let err = Json::parse(&reply).unwrap();
+    let msg = err.get("error").and_then(Json::as_str).unwrap().to_string();
+    assert!(
+        msg.contains("application/json") && msg.contains(RAW_CONTENT_TYPE),
+        "415 body must list the supported encodings: {reply}"
+    );
+
+    let metrics = front.stop();
+    assert_eq!(metrics.audit(), Ok(()), "metrics ledger must balance at stop");
 }
 
 #[test]

@@ -12,7 +12,10 @@
 //! * an invalid plan upload is a `400` and the old plan keeps serving;
 //! * entries prepare **lazily, exactly once**, even under concurrent first
 //!   requests;
-//! * an unknown model name is a `404` that lists the served models.
+//! * an unknown model name is a `404` that lists the served models;
+//! * per-model routes speak both wire encodings (JSON and raw
+//!   little-endian f32), bit-identically, sizing raw bodies against the
+//!   entry's own geometry.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -20,7 +23,7 @@ use std::time::Duration;
 
 use ilmpq::backend::{self, synth, BackendInit, InferenceBackend};
 use ilmpq::coordinator::pool::{synth_parts, ServerPool};
-use ilmpq::coordinator::{HttpClient, HttpConfig, HttpServer, HttpTarget};
+use ilmpq::coordinator::{HttpClient, HttpConfig, HttpServer, HttpTarget, RAW_CONTENT_TYPE};
 use ilmpq::quant::{MaskSet, Provenance, QuantPlan, Ratio};
 use ilmpq::util::{Json, Rng};
 
@@ -49,6 +52,15 @@ fn normal_image(img: usize, rng: &mut Rng) -> Vec<f32> {
     let mut image = vec![0f32; img];
     rng.fill_normal(&mut image, 1.0);
     image
+}
+
+/// The raw wire encoding: the image verbatim as little-endian f32 bytes.
+fn raw_body(image: &[f32]) -> Vec<u8> {
+    let mut b = Vec::with_capacity(image.len() * 4);
+    for v in image {
+        b.extend_from_slice(&v.to_le_bytes());
+    }
+    b
 }
 
 fn wire_logits(body: &str) -> Vec<f32> {
@@ -285,6 +297,61 @@ fn entries_prepare_lazily_and_exactly_once() {
 
     let metrics = pool.shutdown();
     assert_eq!(metrics.audit(), Ok(()), "default entry ledger must balance at shutdown");
+}
+
+/// Per-model routes speak both wire encodings: a raw little-endian f32
+/// body posted to `/v1/models/{name}/infer` produces logits bit-identical
+/// to the JSON route, and the expected raw size is the *entry's* geometry
+/// — a body sized for the other model bounces with `bad_tensor_size`.
+#[test]
+fn per_model_routes_accept_raw_bodies_bit_identical_with_json() {
+    let pool = ServerPool::synthetic_pair(31).unwrap();
+    let front = start_pool_front(pool);
+    let mut client = client_for(&front);
+    let mut rng = Rng::new(63);
+
+    let mut geometries = Vec::new();
+    for model in ["tiny", "narrow"] {
+        let img = {
+            let (code, body) =
+                client.request("GET", &format!("/v1/models/{model}/healthz"), None).unwrap();
+            assert_eq!(code, 200, "{body}");
+            Json::parse(&body).unwrap().get("image_elems").and_then(Json::as_usize).unwrap()
+        };
+        geometries.push(img);
+        let image = normal_image(img, &mut rng);
+        let path = format!("/v1/models/{model}/infer");
+        let (code, body) = client
+            .request_bytes("POST", &path, &raw_body(&image), RAW_CONTENT_TYPE)
+            .unwrap();
+        assert_eq!(code, 200, "{model} raw: {body}");
+        let raw_logits = wire_logits(&body);
+        let (code, body) = client.request("POST", &path, Some(&infer_body(&image))).unwrap();
+        assert_eq!(code, 200, "{model} json: {body}");
+        assert_eq!(
+            wire_logits(&body),
+            raw_logits,
+            "{model}: JSON and raw routes must agree bit-for-bit"
+        );
+    }
+
+    // A raw body sized for `tiny` posted to `narrow` (different geometry)
+    // must bounce against *narrow's* expected size.
+    let (tiny_img, narrow_img) = (geometries[0], geometries[1]);
+    assert_ne!(tiny_img, narrow_img, "the pair's geometries must differ");
+    let wrong = raw_body(&vec![0.5f32; tiny_img]);
+    let (code, body) = client
+        .request_bytes("POST", "/v1/models/narrow/infer", &wrong, RAW_CONTENT_TYPE)
+        .unwrap();
+    assert_eq!(code, 400, "{body}");
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.get("kind").and_then(Json::as_str), Some("bad_tensor_size"), "{body}");
+    assert!(
+        j.get("error").and_then(Json::as_str).unwrap().contains(&narrow_img.to_string()),
+        "the 400 must name the route's own expected element count: {body}"
+    );
+
+    front.stop();
 }
 
 /// Routing to a model the pool does not serve is a 404 that names the

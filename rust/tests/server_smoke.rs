@@ -16,9 +16,12 @@
 //!   `ShuttingDown`) instead of dropping reply channels;
 //! * a failing backend answers every member of the failed batch with
 //!   `BackendFailed`, and the failure never pollutes the `execute`
-//!   latency percentiles.
+//!   latency percentiles;
+//! * the one-owned-buffer invariant: each accepted image crosses the
+//!   backend in exactly one batch row, bit-exact with what was submitted
+//!   (see ROADMAP "Architecture: wire encodings & ingestion").
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use ilmpq::backend::{self, synth, BackendInit, BatchOutput, InferenceBackend};
@@ -170,6 +173,79 @@ fn malformed_request_rejected_alone_neighbors_bit_correct() {
     assert_eq!(Metrics::get(&metrics.requests_done), n as u64);
     assert_eq!(Metrics::get(&metrics.requests_invalid), 3);
     assert_eq!(Metrics::get(&metrics.batches_failed), 0);
+}
+
+/// Wraps a real backend and records every batch row it is handed — the
+/// probe for the one-owned-buffer invariant: each image is written into
+/// the batch buffer exactly once (its decode into the `ImageBuf` plus one
+/// placement), so each must surface as exactly one bit-exact row.
+struct CountingBackend {
+    inner: Arc<dyn InferenceBackend>,
+    seen: Mutex<Vec<Vec<f32>>>,
+}
+
+impl InferenceBackend for CountingBackend {
+    fn name(&self) -> &str {
+        "counting"
+    }
+
+    fn supports_frozen(&self) -> bool {
+        self.inner.supports_frozen()
+    }
+
+    fn run_batch(&self, images: &[f32], batch: usize) -> anyhow::Result<BatchOutput> {
+        let img = images.len() / batch.max(1);
+        let mut seen = self.seen.lock().unwrap();
+        for row in images.chunks_exact(img) {
+            seen.push(row.to_vec());
+        }
+        drop(seen);
+        self.inner.run_batch(images, batch)
+    }
+}
+
+#[test]
+fn batch_buffer_carries_each_image_in_exactly_one_row() {
+    let (m, inner, plan, mut rng) = fixture("cnt");
+    let counting = Arc::new(CountingBackend { inner, seen: Mutex::new(Vec::new()) });
+    let be: Arc<dyn InferenceBackend> = counting.clone();
+    let cfg = ServeConfig {
+        workers: 2,
+        max_wait: Duration::from_millis(2),
+        plan: Some(plan),
+        ..Default::default()
+    };
+    let server = Server::start(&m, be, cfg).unwrap();
+    let img = m.data.image_elems();
+    let n = 24usize;
+    let images: Vec<Vec<f32>> = (0..n)
+        .map(|i| {
+            let mut v = normal_image(img, &mut rng);
+            // Distinct sentinel per image, so rows are attributable.
+            v[0] = i as f32 + 0.5;
+            v
+        })
+        .collect();
+    let rxs: Vec<_> = images.iter().map(|x| server.submit(x.clone())).collect();
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(30))
+            .expect("reply")
+            .expect("well-formed request must succeed");
+    }
+    let metrics = server.stop();
+    assert_eq!(metrics.audit(), Ok(()), "metrics ledger must balance at stop");
+    let seen = counting.seen.lock().unwrap();
+    // Every accepted image crossed the backend exactly once in total —
+    // no image duplicated into two batches, none dropped, none re-run.
+    assert_eq!(seen.len(), n, "backend must see exactly one row per image");
+    for (i, image) in images.iter().enumerate() {
+        let hits: Vec<_> = seen.iter().filter(|row| row[0] == image[0]).collect();
+        assert_eq!(hits.len(), 1, "image {i} must occupy exactly one batch row");
+        assert!(
+            hits[0].iter().zip(image).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "image {i}: batch row not bit-exact with the submitted buffer"
+        );
+    }
 }
 
 #[test]
