@@ -12,6 +12,7 @@
 //! | R4 | every `Metrics` counter is emitted by `report()` and `to_json()` |
 //! | R5 | no held lock guard whose scope runs a blocking call |
 //! | R6 | every wire `Encoding` variant is handled in `http.rs` and `loadgen.rs` |
+//! | R7 | every `ArtifactError` variant is mapped in `main.rs` and `http.rs` |
 //!
 //! Rules work on the `lexer` token stream — no syn, no rustc. They are
 //! deliberately conservative pattern matchers: a miss is possible, a false
@@ -29,6 +30,7 @@ pub const RULES: &[(&str, &str)] = &[
     ("R4", "every Metrics counter emitted by report() and to_json()"),
     ("R5", "no held lock guard whose scope runs a blocking call"),
     ("R6", "every wire Encoding variant handled in http.rs and loadgen.rs"),
+    ("R7", "every ArtifactError variant mapped in main.rs and http.rs"),
 ];
 
 /// One lexed file plus its test-code token ranges, shared by all rules.
@@ -409,6 +411,34 @@ pub fn r6_encoding_mapping(files: &[FileView], out: &mut Vec<Finding>) {
     }
 }
 
+/// Every `ArtifactError` variant (declared in `artifact/store.rs`) must
+/// appear in both consumers of the typed artifact failures: the CLI error
+/// rendering (`main.rs`, actionable hints) and the HTTP status mapping
+/// (`http.rs`, the live `/verify` route). Same cross-file shape as R3 —
+/// adding a variant without wiring both would surface a new failure mode
+/// as an unhinted blob of text or an unmapped 500.
+pub fn r7_artifact_error_mapping(files: &[FileView], out: &mut Vec<Finding>) {
+    let Some(store) = files.iter().find(|f| f.file_name() == "store.rs") else { return };
+    let Some(variants) = enum_variants(store.toks(), "ArtifactError") else { return };
+    for consumer in ["main.rs", "http.rs"] {
+        let Some(target) = files.iter().find(|f| f.file_name() == consumer) else { continue };
+        for (variant, line) in &variants {
+            if !mentions_variant(target.toks(), "ArtifactError", variant) {
+                store.push(
+                    out,
+                    "R7",
+                    *line,
+                    format!(
+                        "ArtifactError::{variant} is never matched in {consumer} — \
+                         wire the new variant into its error rendering / status \
+                         mapping (R7: artifact-error exhaustiveness)"
+                    ),
+                );
+            }
+        }
+    }
+}
+
 // ---------------------------------------------------------------- R4
 
 /// Fields of `struct <name> { … }` whose type mentions one of `counter_tys`.
@@ -705,6 +735,7 @@ pub fn run_all(project: &Project) -> Vec<Finding> {
     r3_error_mapping(&files, &mut out);
     r4_counter_completeness(&files, &mut out);
     r6_encoding_mapping(&files, &mut out);
+    r7_artifact_error_mapping(&files, &mut out);
     out.sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
     out
 }

@@ -1,0 +1,297 @@
+//! Hand-rolled SHA-256 and the `Digest` identity type.
+//!
+//! The artifact store addresses every blob by the SHA-256 of its bytes, so
+//! the hash is the trust root of the whole subsystem. It is implemented
+//! from the FIPS 180-4 specification with no dependencies and pinned
+//! against the NIST test vectors (empty, "abc", the 448-bit two-block
+//! message, and one million 'a's) in the unit tests below — if the
+//! compression function is wrong in any bit, the pins catch it.
+
+use std::fmt;
+
+use super::store::ArtifactError;
+
+/// A SHA-256 digest: the identity of a stored blob.
+///
+/// Formats as 64 lowercase hex characters; parses strictly (exactly 64
+/// hex digits, case-insensitive input, canonical lowercase output).
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Digest([u8; 32]);
+
+impl Digest {
+    /// Hash `bytes` in one shot.
+    pub fn of(bytes: &[u8]) -> Digest {
+        let mut h = Sha256::new();
+        h.update(bytes);
+        h.finalize()
+    }
+
+    /// The canonical lowercase-hex rendering.
+    pub fn to_hex(&self) -> String {
+        let mut s = String::with_capacity(64);
+        for b in &self.0 {
+            s.push(HEX[(b >> 4) as usize] as char);
+            s.push(HEX[(b & 0xf) as usize] as char);
+        }
+        s
+    }
+
+    /// Strict parse of a 64-hex-char digest string.
+    pub fn parse(s: &str) -> Result<Digest, ArtifactError> {
+        let bytes = s.as_bytes();
+        if bytes.len() != 64 {
+            return Err(ArtifactError::BadDigest {
+                input: s.to_string(),
+                reason: format!("expected 64 hex chars, got {}", bytes.len()),
+            });
+        }
+        let mut out = [0u8; 32];
+        for (i, pair) in bytes.chunks(2).enumerate() {
+            let hi = hex_val(pair[0]);
+            let lo = hex_val(pair[1]);
+            match (hi, lo) {
+                (Some(h), Some(l)) => out[i] = (h << 4) | l,
+                _ => {
+                    return Err(ArtifactError::BadDigest {
+                        input: s.to_string(),
+                        reason: format!("non-hex character at offset {}", i * 2),
+                    })
+                }
+            }
+        }
+        Ok(Digest(out))
+    }
+
+    /// The raw 32 digest bytes.
+    pub fn as_bytes(&self) -> &[u8; 32] {
+        &self.0
+    }
+}
+
+impl fmt::Display for Digest {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.to_hex())
+    }
+}
+
+impl fmt::Debug for Digest {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Digest({})", self.to_hex())
+    }
+}
+
+const HEX: &[u8; 16] = b"0123456789abcdef";
+
+fn hex_val(c: u8) -> Option<u8> {
+    match c {
+        b'0'..=b'9' => Some(c - b'0'),
+        b'a'..=b'f' => Some(c - b'a' + 10),
+        b'A'..=b'F' => Some(c - b'A' + 10),
+        _ => None,
+    }
+}
+
+/// Incremental SHA-256 hasher (FIPS 180-4).
+pub struct Sha256 {
+    state: [u32; 8],
+    buf: [u8; 64],
+    buf_len: usize,
+    total_len: u64,
+}
+
+/// First 32 bits of the fractional parts of the cube roots of the first
+/// 64 primes — the round constants of FIPS 180-4 §4.2.2.
+const K: [u32; 64] = [
+    0x428a2f98, 0x71374491, 0xb5c0fbcf, 0xe9b5dba5, 0x3956c25b, 0x59f111f1, 0x923f82a4, 0xab1c5ed5,
+    0xd807aa98, 0x12835b01, 0x243185be, 0x550c7dc3, 0x72be5d74, 0x80deb1fe, 0x9bdc06a7, 0xc19bf174,
+    0xe49b69c1, 0xefbe4786, 0x0fc19dc6, 0x240ca1cc, 0x2de92c6f, 0x4a7484aa, 0x5cb0a9dc, 0x76f988da,
+    0x983e5152, 0xa831c66d, 0xb00327c8, 0xbf597fc7, 0xc6e00bf3, 0xd5a79147, 0x06ca6351, 0x14292967,
+    0x27b70a85, 0x2e1b2138, 0x4d2c6dfc, 0x53380d13, 0x650a7354, 0x766a0abb, 0x81c2c92e, 0x92722c85,
+    0xa2bfe8a1, 0xa81a664b, 0xc24b8b70, 0xc76c51a3, 0xd192e819, 0xd6990624, 0xf40e3585, 0x106aa070,
+    0x19a4c116, 0x1e376c08, 0x2748774c, 0x34b0bcb5, 0x391c0cb3, 0x4ed8aa4a, 0x5b9cca4f, 0x682e6ff3,
+    0x748f82ee, 0x78a5636f, 0x84c87814, 0x8cc70208, 0x90befffa, 0xa4506ceb, 0xbef9a3f7, 0xc67178f2,
+];
+
+/// Initial hash state: fractional parts of the square roots of the first
+/// eight primes (FIPS 180-4 §5.3.3).
+const H0: [u32; 8] = [
+    0x6a09e667, 0xbb67ae85, 0x3c6ef372, 0xa54ff53a, 0x510e527f, 0x9b05688c, 0x1f83d9ab, 0x5be0cd19,
+];
+
+impl Sha256 {
+    pub fn new() -> Sha256 {
+        Sha256 { state: H0, buf: [0u8; 64], buf_len: 0, total_len: 0 }
+    }
+
+    pub fn update(&mut self, mut data: &[u8]) {
+        self.total_len = self.total_len.wrapping_add(data.len() as u64);
+        if self.buf_len > 0 {
+            let need = 64 - self.buf_len;
+            let take = need.min(data.len());
+            self.buf[self.buf_len..self.buf_len + take].copy_from_slice(&data[..take]);
+            self.buf_len += take;
+            data = &data[take..];
+            if self.buf_len == 64 {
+                let block = self.buf;
+                self.compress(&block);
+                self.buf_len = 0;
+            }
+        }
+        while data.len() >= 64 {
+            let mut block = [0u8; 64];
+            block.copy_from_slice(&data[..64]);
+            self.compress(&block);
+            data = &data[64..];
+        }
+        if !data.is_empty() {
+            self.buf[..data.len()].copy_from_slice(data);
+            self.buf_len = data.len();
+        }
+    }
+
+    pub fn finalize(mut self) -> Digest {
+        let bit_len = self.total_len.wrapping_mul(8);
+        // Padding: 0x80, zeros, then the 64-bit big-endian bit length.
+        self.pad_byte(0x80);
+        while self.buf_len != 56 {
+            self.pad_byte(0x00);
+        }
+        let len_bytes = bit_len.to_be_bytes();
+        self.buf[56..64].copy_from_slice(&len_bytes);
+        let block = self.buf;
+        self.compress(&block);
+        let mut out = [0u8; 32];
+        for (i, word) in self.state.iter().enumerate() {
+            out[i * 4..i * 4 + 4].copy_from_slice(&word.to_be_bytes());
+        }
+        Digest(out)
+    }
+
+    fn pad_byte(&mut self, b: u8) {
+        self.buf[self.buf_len] = b;
+        self.buf_len += 1;
+        if self.buf_len == 64 {
+            let block = self.buf;
+            self.compress(&block);
+            self.buf_len = 0;
+        }
+    }
+
+    fn compress(&mut self, block: &[u8; 64]) {
+        let mut w = [0u32; 64];
+        for (i, chunk) in block.chunks(4).enumerate() {
+            w[i] = u32::from_be_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+        for i in 16..64 {
+            let s0 = w[i - 15].rotate_right(7) ^ w[i - 15].rotate_right(18) ^ (w[i - 15] >> 3);
+            let s1 = w[i - 2].rotate_right(17) ^ w[i - 2].rotate_right(19) ^ (w[i - 2] >> 10);
+            w[i] = w[i - 16].wrapping_add(s0).wrapping_add(w[i - 7]).wrapping_add(s1);
+        }
+        let [mut a, mut b, mut c, mut d, mut e, mut f, mut g, mut h] = self.state;
+        for i in 0..64 {
+            let big_s1 = e.rotate_right(6) ^ e.rotate_right(11) ^ e.rotate_right(25);
+            let ch = (e & f) ^ (!e & g);
+            let t1 = h.wrapping_add(big_s1).wrapping_add(ch).wrapping_add(K[i]).wrapping_add(w[i]);
+            let big_s0 = a.rotate_right(2) ^ a.rotate_right(13) ^ a.rotate_right(22);
+            let maj = (a & b) ^ (a & c) ^ (b & c);
+            let t2 = big_s0.wrapping_add(maj);
+            h = g;
+            g = f;
+            f = e;
+            e = d.wrapping_add(t1);
+            d = c;
+            c = b;
+            b = a;
+            a = t1.wrapping_add(t2);
+        }
+        self.state[0] = self.state[0].wrapping_add(a);
+        self.state[1] = self.state[1].wrapping_add(b);
+        self.state[2] = self.state[2].wrapping_add(c);
+        self.state[3] = self.state[3].wrapping_add(d);
+        self.state[4] = self.state[4].wrapping_add(e);
+        self.state[5] = self.state[5].wrapping_add(f);
+        self.state[6] = self.state[6].wrapping_add(g);
+        self.state[7] = self.state[7].wrapping_add(h);
+    }
+}
+
+impl Default for Sha256 {
+    fn default() -> Self {
+        Sha256::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nist_vector_empty() {
+        assert_eq!(
+            Digest::of(b"").to_hex(),
+            "e3b0c44298fc1c149afbf4c8996fb92427ae41e4649b934ca495991b7852b855"
+        );
+    }
+
+    #[test]
+    fn nist_vector_abc() {
+        assert_eq!(
+            Digest::of(b"abc").to_hex(),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+    }
+
+    #[test]
+    fn nist_vector_448_bit_two_block_message() {
+        assert_eq!(
+            Digest::of(b"abcdbcdecdefdefgefghfghighijhijkijkljklmklmnlmnomnopnopq").to_hex(),
+            "248d6a61d20638b8e5c026930c3e6039a33ce45964ff2167f6ecedd419db06c1"
+        );
+    }
+
+    #[test]
+    fn nist_vector_one_million_a() {
+        let data = vec![b'a'; 1_000_000];
+        assert_eq!(
+            Digest::of(&data).to_hex(),
+            "cdc76e5c9914fb9281a1c7e284d73e67f1809a48a497200e046d39ccc7112cd0"
+        );
+    }
+
+    #[test]
+    fn incremental_matches_oneshot_across_odd_chunk_sizes() {
+        let data: Vec<u8> = (0..1000u32).flat_map(|i| i.to_le_bytes()).collect();
+        let oneshot = Digest::of(&data);
+        for chunk in [1usize, 3, 63, 64, 65, 127, 997] {
+            let mut h = Sha256::new();
+            for piece in data.chunks(chunk) {
+                h.update(piece);
+            }
+            assert_eq!(h.finalize(), oneshot, "chunk size {chunk}");
+        }
+    }
+
+    #[test]
+    fn hex_roundtrip_and_strict_parse() {
+        let d = Digest::of(b"round-trip");
+        let parsed = Digest::parse(&d.to_hex()).expect("canonical hex parses");
+        assert_eq!(parsed, d);
+        // Uppercase input is accepted, renders back to lowercase.
+        let upper = d.to_hex().to_uppercase();
+        assert_eq!(Digest::parse(&upper).expect("uppercase hex parses"), d);
+
+        let short = Digest::parse("abc123");
+        assert!(short.is_err(), "short strings must be rejected");
+        let bad = Digest::parse(&"zz".repeat(32));
+        assert!(bad.is_err(), "non-hex characters must be rejected");
+        let err = format!("{}", bad.expect_err("non-hex rejected"));
+        assert!(err.contains("non-hex"), "{err}");
+    }
+
+    #[test]
+    fn display_is_hex() {
+        let d = Digest::of(b"abc");
+        assert_eq!(format!("{d}"), d.to_hex());
+        assert!(format!("{d:?}").contains(&d.to_hex()));
+    }
+}

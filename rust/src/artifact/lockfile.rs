@@ -1,0 +1,336 @@
+//! The `Bundle` lockfile: a named serving unit pinned by digest.
+//!
+//! `ilmpq.lock.json` names every model a pool should serve and pins the
+//! exact bytes behind it — manifest descriptor, params blob, and
+//! QuantPlan JSON — by SHA-256. Parsing is strict in the `FaultSpec`
+//! style: unknown keys are an error at both the bundle and the model
+//! level, so a typo in a deployment lockfile fails loudly instead of
+//! silently serving something else.
+//!
+//! Schema (version 1):
+//!
+//! ```json
+//! {
+//!   "ilmpq_bundle": 1,
+//!   "default": "tiny",
+//!   "models": [
+//!     {
+//!       "name": "tiny", "backend": "cpu", "geometry": "tinyresnet",
+//!       "model": "tinyresnet-8", "manifest": "<64 hex>",
+//!       "params": "<64 hex>", "plan": "<64 hex>"
+//!     }
+//!   ]
+//! }
+//! ```
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Json;
+
+use super::digest::Digest;
+
+/// Lockfile schema version this build reads and writes.
+pub const BUNDLE_VERSION: u64 = 1;
+
+/// One model pinned by a bundle: identity plus the three blob digests.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BundleModel {
+    /// Pool entry name (route key under `/v1/models/{name}`).
+    pub name: String,
+    /// Backend registry key the entry is built on.
+    pub backend: String,
+    /// Synthetic geometry the manifest descriptor must resolve to.
+    pub geometry: String,
+    /// Manifest `model_name`, cross-checked at load.
+    pub model: String,
+    /// Digest of the manifest descriptor JSON blob.
+    pub manifest: Digest,
+    /// Digest of the flat little-endian f32 params blob.
+    pub params: Digest,
+    /// Digest of the QuantPlan JSON blob.
+    pub plan: Digest,
+}
+
+impl BundleModel {
+    fn from_json(j: &Json) -> Result<BundleModel> {
+        let Some(obj) = j.as_obj() else {
+            bail!("bundle model must be a JSON object");
+        };
+        let mut name = None;
+        let mut backend = None;
+        let mut geometry = None;
+        let mut model = None;
+        let mut manifest = None;
+        let mut params = None;
+        let mut plan = None;
+        for (key, val) in obj {
+            let text = || {
+                val.as_str()
+                    .map(str::to_string)
+                    .with_context(|| format!("bundle model key {key:?}: expected a string"))
+            };
+            match key.as_str() {
+                "name" => name = Some(text()?),
+                "backend" => backend = Some(text()?),
+                "geometry" => geometry = Some(text()?),
+                "model" => model = Some(text()?),
+                "manifest" => manifest = Some(parse_digest(&text()?, "manifest")?),
+                "params" => params = Some(parse_digest(&text()?, "params")?),
+                "plan" => plan = Some(parse_digest(&text()?, "plan")?),
+                _ => bail!(
+                    "bundle model: unknown key {key:?} (known: name, backend, \
+                     geometry, model, manifest, params, plan)"
+                ),
+            }
+        }
+        let require = |field: &str| format!("bundle model: missing key {field:?}");
+        Ok(BundleModel {
+            name: name.with_context(|| require("name"))?,
+            backend: backend.with_context(|| require("backend"))?,
+            geometry: geometry.with_context(|| require("geometry"))?,
+            model: model.with_context(|| require("model"))?,
+            manifest: manifest.with_context(|| require("manifest"))?,
+            params: params.with_context(|| require("params"))?,
+            plan: plan.with_context(|| require("plan"))?,
+        })
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("backend", Json::Str(self.backend.clone())),
+            ("geometry", Json::Str(self.geometry.clone())),
+            ("model", Json::Str(self.model.clone())),
+            ("manifest", Json::Str(self.manifest.to_hex())),
+            ("params", Json::Str(self.params.to_hex())),
+            ("plan", Json::Str(self.plan.to_hex())),
+        ])
+    }
+}
+
+fn parse_digest(s: &str, field: &str) -> Result<Digest> {
+    Digest::parse(s).with_context(|| format!("bundle model key {field:?}"))
+}
+
+/// A versioned lockfile naming a serving unit.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Bundle {
+    pub version: u64,
+    /// Name of the model `/v1/infer` routes to.
+    pub default: String,
+    pub models: Vec<BundleModel>,
+}
+
+impl Bundle {
+    /// Strict parse: exact key set, version check, nonempty unique model
+    /// names, and a `default` that names one of them.
+    pub fn from_json(j: &Json) -> Result<Bundle> {
+        let Some(obj) = j.as_obj() else {
+            bail!("bundle lockfile must be a JSON object");
+        };
+        let mut version = None;
+        let mut default = None;
+        let mut models: Option<Vec<BundleModel>> = None;
+        for (key, val) in obj {
+            match key.as_str() {
+                "ilmpq_bundle" => {
+                    version = Some(
+                        val.as_f64()
+                            .filter(|v| *v >= 0.0 && v.fract() == 0.0)
+                            .context("bundle: \"ilmpq_bundle\" must be a version integer")?
+                            as u64,
+                    )
+                }
+                "default" => {
+                    default = Some(
+                        val.as_str()
+                            .context("bundle: \"default\" must be a string")?
+                            .to_string(),
+                    )
+                }
+                "models" => {
+                    let rows = val.as_arr().context("bundle: \"models\" must be an array")?;
+                    let mut parsed = Vec::with_capacity(rows.len());
+                    for (i, row) in rows.iter().enumerate() {
+                        parsed.push(
+                            BundleModel::from_json(row)
+                                .with_context(|| format!("bundle models[{i}]"))?,
+                        );
+                    }
+                    models = Some(parsed);
+                }
+                _ => bail!(
+                    "bundle: unknown key {key:?} (known: ilmpq_bundle, default, models)"
+                ),
+            }
+        }
+        let version = version.context("bundle: missing key \"ilmpq_bundle\"")?;
+        if version != BUNDLE_VERSION {
+            bail!("bundle: version {version} is not supported (this build reads {BUNDLE_VERSION})");
+        }
+        let default = default.context("bundle: missing key \"default\"")?;
+        let models = models.context("bundle: missing key \"models\"")?;
+        if models.is_empty() {
+            bail!("bundle: \"models\" must name at least one model");
+        }
+        for (i, m) in models.iter().enumerate() {
+            if models[..i].iter().any(|prev| prev.name == m.name) {
+                bail!("bundle: duplicate model name {:?}", m.name);
+            }
+        }
+        if !models.iter().any(|m| m.name == default) {
+            let names: Vec<&str> = models.iter().map(|m| m.name.as_str()).collect();
+            bail!("bundle: default {default:?} names no model (models: {names:?})");
+        }
+        Ok(Bundle { version, default, models })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("ilmpq_bundle", Json::Num(self.version as f64)),
+            ("default", Json::Str(self.default.clone())),
+            ("models", Json::Arr(self.models.iter().map(BundleModel::to_json).collect())),
+        ])
+    }
+
+    /// Look up a model by name.
+    pub fn model(&self, name: &str) -> Option<&BundleModel> {
+        self.models.iter().find(|m| m.name == name)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let text = self.to_json().to_string_compact();
+        std::fs::write(path, text.as_bytes())
+            .with_context(|| format!("writing bundle lockfile {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<Bundle> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading bundle lockfile {}", path.display()))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{e}"))
+            .with_context(|| format!("parsing bundle lockfile {}", path.display()))?;
+        Bundle::from_json(&j).with_context(|| format!("bundle lockfile {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture() -> Bundle {
+        Bundle {
+            version: BUNDLE_VERSION,
+            default: "tiny".to_string(),
+            models: vec![
+                BundleModel {
+                    name: "tiny".to_string(),
+                    backend: "cpu".to_string(),
+                    geometry: "tinyresnet".to_string(),
+                    model: "tinyresnet-8".to_string(),
+                    manifest: Digest::of(b"manifest-a"),
+                    params: Digest::of(b"params-a"),
+                    plan: Digest::of(b"plan-a"),
+                },
+                BundleModel {
+                    name: "narrow".to_string(),
+                    backend: "cpu".to_string(),
+                    geometry: "vggnarrow".to_string(),
+                    model: "vggnarrow-7".to_string(),
+                    manifest: Digest::of(b"manifest-b"),
+                    params: Digest::of(b"params-b"),
+                    plan: Digest::of(b"plan-b"),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_everything() {
+        let b = fixture();
+        let back = Bundle::from_json(&b.to_json()).expect("roundtrip");
+        assert_eq!(back, b);
+        assert!(back.model("narrow").is_some());
+        assert!(back.model("absent").is_none());
+    }
+
+    #[test]
+    fn unknown_keys_are_rejected_at_both_levels() {
+        let mut top = b_json();
+        if let Json::Obj(map) = &mut top {
+            map.insert("extra".to_string(), Json::Bool(true));
+        }
+        let err = Bundle::from_json(&top).expect_err("unknown top-level key");
+        assert!(format!("{err:#}").contains("unknown key"), "{err:#}");
+
+        let mut nested = b_json();
+        if let Some(Json::Arr(rows)) = nested_models_mut(&mut nested) {
+            if let Some(Json::Obj(m)) = rows.first_mut() {
+                m.insert("sneaky".to_string(), Json::Num(1.0));
+            }
+        }
+        let err = Bundle::from_json(&nested).expect_err("unknown model key");
+        assert!(format!("{err:#}").contains("unknown key"), "{err:#}");
+    }
+
+    fn b_json() -> Json {
+        fixture().to_json()
+    }
+
+    fn nested_models_mut(j: &mut Json) -> Option<&mut Json> {
+        match j {
+            Json::Obj(map) => map.get_mut("models"),
+            _ => None,
+        }
+    }
+
+    #[test]
+    fn truncated_digest_is_rejected() {
+        let mut j = b_json();
+        if let Some(Json::Arr(rows)) = nested_models_mut(&mut j) {
+            if let Some(Json::Obj(m)) = rows.first_mut() {
+                m.insert("plan".to_string(), Json::Str("abc123".to_string()));
+            }
+        }
+        let err = Bundle::from_json(&j).expect_err("truncated digest");
+        assert!(format!("{err:#}").contains("64 hex"), "{err:#}");
+    }
+
+    #[test]
+    fn duplicate_names_missing_default_and_wrong_version() {
+        let mut dup = fixture();
+        dup.models[1].name = "tiny".to_string();
+        let err = Bundle::from_json(&dup.to_json()).expect_err("duplicate names");
+        assert!(format!("{err:#}").contains("duplicate"), "{err:#}");
+
+        let mut nodef = fixture();
+        nodef.default = "ghost".to_string();
+        let err = Bundle::from_json(&nodef.to_json()).expect_err("default names no model");
+        assert!(format!("{err:#}").contains("names no model"), "{err:#}");
+
+        let mut vers = fixture();
+        vers.version = 99;
+        let err = Bundle::from_json(&vers.to_json()).expect_err("unsupported version");
+        assert!(format!("{err:#}").contains("not supported"), "{err:#}");
+
+        let mut empty = fixture();
+        empty.models.clear();
+        // An empty models list also orphans `default`; the emptiness
+        // check fires first.
+        let err = Bundle::from_json(&empty.to_json()).expect_err("empty models");
+        assert!(format!("{err:#}").contains("at least one"), "{err:#}");
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let path = std::env::temp_dir()
+            .join(format!("ilmpq-lock-test-{}.json", std::process::id()));
+        let b = fixture();
+        b.save(&path).expect("save");
+        let back = Bundle::load(&path).expect("load");
+        assert_eq!(back, b);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,26 @@
+//! Content-addressed artifact store: checksummed weights and plans with
+//! a lockfile pinning what a serving fleet executes.
+//!
+//! Three layers, dependency-free in the same discipline as `util::json`:
+//!
+//! - [`digest`] — hand-rolled SHA-256 pinned against NIST vectors,
+//!   exposed as [`Digest`] with strict hex parse/format.
+//! - [`store`] — a local CAS directory ([`Store`]): blobs addressed by
+//!   digest with two-char fan-out, temp-then-rename writes so torn
+//!   writes are never addressable, and full re-hash on every read.
+//! - [`lockfile`] — the [`Bundle`] lockfile (`ilmpq.lock.json`) naming a
+//!   serving unit: model → {manifest, params, plan} digests plus the
+//!   backend and geometry needed to boot it.
+//!
+//! The serving stack consumes this through `ilmpq bundle pack|verify|show`
+//! and `ilmpq serve --bundle`, which boots a `ServerPool` that resolves
+//! every byte it executes from the store by digest — a mismatch is a
+//! startup error, never a silent fallback.
+
+pub mod digest;
+pub mod lockfile;
+pub mod store;
+
+pub use digest::{Digest, Sha256};
+pub use lockfile::{Bundle, BundleModel, BUNDLE_VERSION};
+pub use store::{ArtifactError, Store};

@@ -1,0 +1,263 @@
+//! Local content-addressed blob store.
+//!
+//! Layout: `<root>/<first two hex chars>/<remaining 62>` — one file per
+//! blob, named by the SHA-256 of its bytes. Writes go to a temp file in
+//! the same fan-out directory and are renamed into place, so a torn
+//! write can never be addressable (the temp name is not a digest path).
+//! Every `get` re-hashes the full file and returns a typed
+//! `ArtifactError::DigestMismatch` naming expected vs actual on any
+//! corruption — there is no fast path that trusts the filename.
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::digest::Digest;
+
+/// Typed failure surface of the artifact store. Every variant must be
+/// mapped in the CLI error rendering (`main.rs`) and the HTTP status
+/// mapping (`coordinator/http.rs`) — enforced by analyzer rule R7.
+#[derive(Debug)]
+pub enum ArtifactError {
+    /// Stored bytes hash to something other than their address.
+    DigestMismatch { blob: String, expected: Digest, actual: Digest },
+    /// A referenced blob is absent from the store.
+    MissingBlob { blob: String, digest: Digest },
+    /// A digest string failed to parse.
+    BadDigest { input: String, reason: String },
+    /// Filesystem failure while touching a blob.
+    Io { blob: String, op: &'static str, source: std::io::Error },
+}
+
+impl fmt::Display for ArtifactError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ArtifactError::DigestMismatch { blob, expected, actual } => write!(
+                f,
+                "digest mismatch for blob {blob}: expected {expected}, actual {actual}"
+            ),
+            ArtifactError::MissingBlob { blob, digest } => {
+                write!(f, "missing blob {blob}: {digest} is not in the store")
+            }
+            ArtifactError::BadDigest { input, reason } => {
+                write!(f, "bad digest {input:?}: {reason}")
+            }
+            ArtifactError::Io { blob, op, source } => {
+                write!(f, "artifact io failure ({op} {blob}): {source}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ArtifactError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ArtifactError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+/// Monotonic counter so concurrent writers in one process never share a
+/// temp file name.
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// A content-addressed store rooted at a local directory.
+#[derive(Debug, Clone)]
+pub struct Store {
+    root: PathBuf,
+}
+
+impl Store {
+    /// Open (creating if needed) a store rooted at `root`.
+    pub fn open(root: &Path) -> Result<Store, ArtifactError> {
+        std::fs::create_dir_all(root).map_err(|e| ArtifactError::Io {
+            blob: root.display().to_string(),
+            op: "create store root",
+            source: e,
+        })?;
+        Ok(Store { root: root.to_path_buf() })
+    }
+
+    /// Default store root: `$ILMPQ_STORE`, else `$HOME/.ilmpq/store`,
+    /// else `./.ilmpq-store`.
+    pub fn default_root() -> PathBuf {
+        if let Ok(dir) = std::env::var("ILMPQ_STORE") {
+            if !dir.is_empty() {
+                return PathBuf::from(dir);
+            }
+        }
+        if let Ok(home) = std::env::var("HOME") {
+            if !home.is_empty() {
+                return PathBuf::from(home).join(".ilmpq").join("store");
+            }
+        }
+        PathBuf::from(".ilmpq-store")
+    }
+
+    /// The directory this store lives in.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Filesystem path a digest resolves to (two-char fan-out).
+    pub fn path_of(&self, d: &Digest) -> PathBuf {
+        let hex = d.to_hex();
+        self.root.join(&hex[..2]).join(&hex[2..])
+    }
+
+    /// Store `bytes`, returning their digest. Idempotent: an existing
+    /// blob is trusted by address here (reads re-verify). The write is
+    /// temp-then-rename so a crash mid-write leaves only an
+    /// unaddressable `*.tmp.*` file behind.
+    pub fn put(&self, bytes: &[u8]) -> Result<Digest, ArtifactError> {
+        let digest = Digest::of(bytes);
+        let path = self.path_of(&digest);
+        if path.is_file() {
+            return Ok(digest);
+        }
+        let dir = path.parent().unwrap_or(&self.root);
+        std::fs::create_dir_all(dir).map_err(|e| ArtifactError::Io {
+            blob: digest.to_hex(),
+            op: "create fan-out dir",
+            source: e,
+        })?;
+        let seq = TMP_SEQ.fetch_add(1, Ordering::Relaxed);
+        let tmp = dir.join(format!("{}.tmp.{}.{}", digest.to_hex(), std::process::id(), seq));
+        std::fs::write(&tmp, bytes).map_err(|e| ArtifactError::Io {
+            blob: digest.to_hex(),
+            op: "write temp blob",
+            source: e,
+        })?;
+        std::fs::rename(&tmp, &path).map_err(|e| {
+            // Best-effort cleanup; the original error is what matters.
+            let _ = std::fs::remove_file(&tmp);
+            ArtifactError::Io { blob: digest.to_hex(), op: "rename blob into place", source: e }
+        })?;
+        Ok(digest)
+    }
+
+    /// Whether a blob with this digest is present (no content check).
+    pub fn has(&self, d: &Digest) -> bool {
+        self.path_of(d).is_file()
+    }
+
+    /// Fetch a blob by digest, verifying the full contents. `blob` is a
+    /// human-readable label (e.g. `"tiny/params"`) carried into errors.
+    pub fn get(&self, d: &Digest, blob: &str) -> Result<Vec<u8>, ArtifactError> {
+        let path = self.path_of(d);
+        let bytes = match std::fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Err(ArtifactError::MissingBlob { blob: blob.to_string(), digest: *d })
+            }
+            Err(e) => {
+                return Err(ArtifactError::Io {
+                    blob: blob.to_string(),
+                    op: "read blob",
+                    source: e,
+                })
+            }
+        };
+        let actual = Digest::of(&bytes);
+        if actual != *d {
+            return Err(ArtifactError::DigestMismatch {
+                blob: blob.to_string(),
+                expected: *d,
+                actual,
+            });
+        }
+        Ok(bytes)
+    }
+
+    /// Re-hash a blob without returning its bytes.
+    pub fn verify(&self, d: &Digest, blob: &str) -> Result<(), ArtifactError> {
+        self.get(d, blob).map(|_| ())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_store(tag: &str) -> Store {
+        let dir = std::env::temp_dir()
+            .join(format!("ilmpq-store-test-{}-{}", std::process::id(), tag));
+        let _ = std::fs::remove_dir_all(&dir);
+        Store::open(&dir).expect("store opens")
+    }
+
+    #[test]
+    fn put_get_roundtrip_and_idempotence() {
+        let s = temp_store("roundtrip");
+        let d1 = s.put(b"hello artifact").expect("put");
+        let d2 = s.put(b"hello artifact").expect("second put is idempotent");
+        assert_eq!(d1, d2);
+        assert!(s.has(&d1));
+        assert_eq!(s.get(&d1, "t/blob").expect("get"), b"hello artifact");
+        s.verify(&d1, "t/blob").expect("verify");
+    }
+
+    #[test]
+    fn corrupt_blob_is_rejected_on_get() {
+        let s = temp_store("corrupt");
+        let d = s.put(b"precious bytes").expect("put");
+        let path = s.path_of(&d);
+        let mut bytes = std::fs::read(&path).expect("read back");
+        bytes[0] ^= 0x01;
+        std::fs::write(&path, &bytes).expect("corrupt in place");
+        let err = s.get(&d, "t/params").expect_err("corruption must be detected");
+        match &err {
+            ArtifactError::DigestMismatch { blob, expected, actual } => {
+                assert_eq!(blob, "t/params");
+                assert_eq!(*expected, d);
+                assert_ne!(actual, expected);
+            }
+            other => panic!("expected DigestMismatch, got {other}"),
+        }
+        let msg = format!("{err}");
+        assert!(msg.contains("expected") && msg.contains("actual"), "{msg}");
+        assert!(s.verify(&d, "t/params").is_err());
+    }
+
+    #[test]
+    fn missing_blob_is_a_typed_error() {
+        let s = temp_store("missing");
+        let d = Digest::of(b"never stored");
+        assert!(!s.has(&d));
+        let err = s.get(&d, "t/plan").expect_err("absent blob");
+        match err {
+            ArtifactError::MissingBlob { blob, digest } => {
+                assert_eq!(blob, "t/plan");
+                assert_eq!(digest, d);
+            }
+            other => panic!("expected MissingBlob, got {other}"),
+        }
+    }
+
+    #[test]
+    fn torn_write_is_not_addressable() {
+        let s = temp_store("torn");
+        // Simulate a crash mid-put: a temp file exists in the fan-out
+        // directory but was never renamed to its digest path.
+        let bytes = b"half-written";
+        let d = Digest::of(bytes);
+        let hex = d.to_hex();
+        let dir = s.root().join(&hex[..2]);
+        std::fs::create_dir_all(&dir).expect("fan-out dir");
+        std::fs::write(dir.join(format!("{hex}.tmp.999.0")), &bytes[..6]).expect("torn temp");
+        assert!(!s.has(&d), "a temp file must never be addressable");
+        let err = s.get(&d, "t/manifest").expect_err("torn write invisible to get");
+        assert!(matches!(err, ArtifactError::MissingBlob { .. }), "{err}");
+        // A real put still lands cleanly next to the debris.
+        let d2 = s.put(bytes).expect("put after torn write");
+        assert_eq!(d2, d);
+        assert_eq!(s.get(&d, "t/manifest").expect("get"), bytes);
+    }
+
+    #[test]
+    fn bad_digest_parse_is_typed() {
+        let err = Digest::parse("not-a-digest").expect_err("reject");
+        assert!(matches!(err, ArtifactError::BadDigest { .. }), "{err}");
+    }
+}

@@ -43,8 +43,11 @@
 //!   `submit` reject bad geometry, so the two ingresses (in-process and
 //!   network) can never drift.
 //! * `GET /v1/healthz` → `200` with the model geometry
-//!   (`image_elems`/`classes`) plus the active plan name, which is how the
-//!   remote load generator learns what to send.
+//!   (`image_elems`/`classes`) plus the active plan name, its content
+//!   digest (`plan_digest`), and — for bundle-booted entries — the
+//!   lockfile blob digests under `bundle`, which is how the remote load
+//!   generator learns what to send and how a fleet operator asserts every
+//!   replica serves identical bytes.
 //! * `GET /v1/metrics` → `200` with [`Metrics::to_json`] (counters,
 //!   occupancy, shed rate, latency summaries).
 //! * `GET /v1/plan` → `200` with the active quantization plan's summary
@@ -53,7 +56,13 @@
 //!   exactly which precision configuration is serving; `404` when the
 //!   server runs unquantized.
 //! * `GET /v1/models` → the pool registry listing (per-model plan name,
-//!   provenance, breaker/readiness state, queue depth).
+//!   provenance, breaker/readiness state, queue depth, `plan_digest`, and
+//!   the bundle digests when serving from a store).
+//! * `GET /v1/models/{name}/verify` — re-hash the entry's store blobs on
+//!   demand (bundle-booted entries only; others answer `404` kind
+//!   `no_bundle`). A corrupt blob maps through the pinned
+//!   [`ArtifactError`] → status table (`digest_mismatch` → `500`,
+//!   `missing_blob` → `404`).
 //! * `POST /v1/models/{name}/infer`, `GET /v1/models/{name}/
 //!   {healthz,metrics,plan}` — the per-model forms of the routes above. An
 //!   unknown `{name}` answers `404` with kind `unknown_model` *and the list
@@ -90,6 +99,7 @@ use anyhow::Result;
 use super::metrics::Metrics;
 use super::pool::{PoolEntry, ServerPool};
 use super::server::{ServeError, Server};
+use crate::artifact::ArtifactError;
 use crate::backend::ImageBuf;
 use crate::quant::QuantPlan;
 use crate::runtime::Manifest;
@@ -774,8 +784,9 @@ fn route_model(
         ("GET", Some("healthz")) => healthz(entry),
         ("GET", Some("metrics")) => (200, entry.metrics_json().to_string_compact()),
         ("GET", Some("plan")) => plan_endpoint(entry),
+        ("GET", Some("verify")) => verify_route(entry),
         ("GET", None) => (200, entry.describe().to_string_compact()),
-        (_, None | Some("infer" | "healthz" | "metrics" | "plan")) => (
+        (_, None | Some("infer" | "healthz" | "metrics" | "plan" | "verify")) => (
             405,
             err_body(
                 &format!("method {} not allowed on {}", req.method, req.path),
@@ -816,9 +827,67 @@ fn healthz(entry: &PoolEntry) -> (u16, String) {
                     None => Json::Null,
                 },
             ),
+            (
+                "plan_digest",
+                match entry.plan_digest() {
+                    Some(d) => Json::Str(d.to_hex()),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "bundle",
+                match entry.bundle_digests() {
+                    Some((m, p, q)) => Json::obj(vec![
+                        ("manifest", Json::Str(m.to_hex())),
+                        ("params", Json::Str(p.to_hex())),
+                        ("plan", Json::Str(q.to_hex())),
+                    ]),
+                    None => Json::Null,
+                },
+            ),
         ])
         .to_string_compact(),
     )
+}
+
+/// `GET /v1/models/{name}/verify` — re-hash the entry's three store blobs
+/// on demand. Only meaningful for bundle-booted entries; a config-built
+/// entry has no store provenance to verify.
+fn verify_route(entry: &PoolEntry) -> (u16, String) {
+    match entry.verify_bundle() {
+        None => (
+            404,
+            err_body(
+                "model is not bundle-backed (boot it with serve --bundle to verify)",
+                "no_bundle",
+            ),
+        ),
+        Some(Err(e)) => artifact_error_response(&e),
+        Some(Ok(plan_matches)) => (
+            200,
+            Json::obj(vec![
+                ("verified", Json::Bool(true)),
+                ("model", Json::Str(entry.name().to_string())),
+                ("blobs", Json::Num(3.0)),
+                ("plan_matches_bundle", Json::Bool(plan_matches)),
+            ])
+            .to_string_compact(),
+        ),
+    }
+}
+
+/// The pinned [`ArtifactError`] → HTTP status mapping (analyzer rule R7's
+/// HTTP consumer): a blob whose bytes no longer hash to their address is a
+/// server-side integrity failure (`500`), an absent blob is `404`, and a
+/// malformed digest string is the caller's fault (`400`).
+fn artifact_error_response(e: &ArtifactError) -> (u16, String) {
+    let (status, kind) = match e {
+        ArtifactError::DigestMismatch { .. } => (500, "digest_mismatch"),
+        ArtifactError::MissingBlob { .. } => (404, "missing_blob"),
+        ArtifactError::BadDigest { .. } => (400, "bad_digest"),
+        ArtifactError::Io { .. } => (500, "artifact_io"),
+    };
+    (status, err_body(&e.to_string(), kind))
 }
 
 fn plan_endpoint(entry: &PoolEntry) -> (u16, String) {
@@ -864,6 +933,9 @@ fn swap_plan_route(entry: &PoolEntry, body: &[u8]) -> (u16, String) {
         );
     }
     let plan_name = plan.name.clone();
+    // Recorded before the move: the content digest of the uploaded plan is
+    // what the swap installs, and what healthz/describe will report.
+    let plan_digest = plan.content_digest();
     match entry.swap_plan(plan) {
         Ok(()) => (
             200,
@@ -871,6 +943,7 @@ fn swap_plan_route(entry: &PoolEntry, body: &[u8]) -> (u16, String) {
                 ("swapped", Json::Bool(true)),
                 ("model", Json::Str(entry.name().to_string())),
                 ("plan", Json::Str(plan_name)),
+                ("plan_digest", Json::Str(plan_digest.to_hex())),
                 ("swaps", Json::Num(entry.swaps() as f64)),
             ])
             .to_string_compact(),
@@ -1407,6 +1480,57 @@ mod tests {
         let (_, body) = serve_error_response(&ServeError::Timeout { deadline_ms: 50 });
         let j = Json::parse(&body).unwrap();
         assert_eq!(j.get("kind").and_then(|v| v.as_str()), Some("execute_timeout"));
+    }
+
+    #[test]
+    fn artifact_errors_map_to_pinned_statuses() {
+        use crate::artifact::Digest;
+        let a = Digest::of(b"a");
+        let b = Digest::of(b"b");
+        let cases: Vec<(ArtifactError, u16, &str)> = vec![
+            (
+                ArtifactError::DigestMismatch {
+                    blob: "tiny/params".into(),
+                    expected: a,
+                    actual: b,
+                },
+                500,
+                "digest_mismatch",
+            ),
+            (
+                ArtifactError::MissingBlob { blob: "tiny/plan".into(), digest: a },
+                404,
+                "missing_blob",
+            ),
+            (
+                ArtifactError::BadDigest { input: "zz".into(), reason: "short".into() },
+                400,
+                "bad_digest",
+            ),
+            (
+                ArtifactError::Io {
+                    blob: "tiny/manifest".into(),
+                    op: "read blob",
+                    source: std::io::Error::new(std::io::ErrorKind::Other, "disk"),
+                },
+                500,
+                "artifact_io",
+            ),
+        ];
+        for (e, status, kind) in cases {
+            let (got, body) = artifact_error_response(&e);
+            assert_eq!(got, status, "{e}");
+            let j = Json::parse(&body).unwrap();
+            assert_eq!(j.get("kind").and_then(|v| v.as_str()), Some(kind));
+        }
+        // The mismatch body names both digests — the operator-facing half
+        // of the integrity contract.
+        let (_, body) = artifact_error_response(&ArtifactError::DigestMismatch {
+            blob: "tiny/params".into(),
+            expected: a,
+            actual: b,
+        });
+        assert!(body.contains(&a.to_hex()) && body.contains(&b.to_hex()), "{body}");
     }
 
     #[test]

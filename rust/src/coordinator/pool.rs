@@ -34,6 +34,13 @@
 //! per-model counters describe the *current* plan's tenure. Zero-loss
 //! assertions live client-side (the loadgen ledger), which is the contract
 //! that matters over the wire.
+//!
+//! A pool can also boot from a **bundle** ([`ServerPool::from_bundle`]):
+//! every entry resolves its manifest descriptor, params blob, and plan
+//! JSON from a content-addressed [`Store`] by the digests a lockfile
+//! pins, so the pool serves exactly the bytes that were packed — any
+//! missing or mismatched blob is a startup error, never a fallback. The
+//! inverse direction is [`pack_pool`].
 
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -45,6 +52,7 @@ use anyhow::{anyhow, Context, Result};
 
 use super::metrics::Metrics;
 use super::server::{ServeConfig, ServeResult, Server};
+use crate::artifact::{ArtifactError, Bundle, BundleModel, Digest, Store, BUNDLE_VERSION};
 use crate::backend::{self, synth, BackendInit, FaultSpec, ImageBuf, InferenceBackend};
 use crate::quant::{plan::parse_ratio_arg, MaskSet, Provenance, QuantPlan};
 use crate::runtime::{HostTensor, Manifest};
@@ -74,6 +82,14 @@ pub struct PoolEntry {
     /// Registry backend name; `None` marks a pre-built entry the pool
     /// cannot rebuild (no swap support).
     backend_name: Option<String>,
+    /// Synthetic zoo geometry this entry was built from (empty for
+    /// pre-built entries) — what `pack_pool` writes into the manifest
+    /// descriptor blob.
+    geometry: String,
+    /// Set when the entry was booted from a bundle: the store plus the
+    /// lockfile digests, retained so `/v1/models` can report them and
+    /// `GET .../verify` can re-hash the blobs on demand.
+    bundle: Option<BundleRef>,
     threads: Option<usize>,
     fault: Option<FaultSpec>,
     base_cfg: ServeConfig,
@@ -88,6 +104,15 @@ pub struct PoolEntry {
     /// section so a swap racing teardown can't install a server into a dead
     /// pool.
     closed: AtomicBool,
+}
+
+/// The provenance record of a bundle-booted entry (see
+/// [`PoolEntry::bundle`]).
+struct BundleRef {
+    store: Store,
+    manifest: Digest,
+    params: Digest,
+    plan: Digest,
 }
 
 /// Point-in-time health view for one entry (the `/v1/healthz` inputs). A
@@ -136,13 +161,11 @@ impl PoolEntry {
         };
 
         // Synthetic fixture, single RNG stream per entry: params first,
-        // masks second — the same draw order as the single-model fixture,
-        // and the order `synth_parts` reproduces for bit-identity checks.
-        let mut rng = Rng::new(seed);
-        let mut manifest = synth::serving_manifest_for(geometry)
-            .with_context(|| format!("pool model {name:?}"))?;
-        let params = synth::random_params(&manifest, &mut rng);
-        let plan = match (
+        // masks second. Both arms build through the shared fixture
+        // functions (`synth_parts` / `synth_entry_fixture`) that
+        // bit-identity tests and `pack_pool` re-derive, so config boot and
+        // bundle pack can never drift.
+        let (mut manifest, params, plan) = match (
             j.get("plan").and_then(Json::as_str),
             j.get("ratio").and_then(Json::as_str),
         ) {
@@ -150,22 +173,18 @@ impl PoolEntry {
                 anyhow::bail!("pool model {name:?}: give \"plan\" or \"ratio\", not both")
             }
             (Some(path), None) => {
+                let (manifest, params) = synth_parts(geometry, seed)
+                    .with_context(|| format!("pool model {name:?}"))?;
                 let p = QuantPlan::load(Path::new(path))?;
                 p.validate(&manifest).with_context(|| {
                     format!("plan {path:?} does not fit pool model {name:?}")
                 })?;
-                p
+                (manifest, params, p)
             }
             (None, ratio_arg) => {
                 let label = ratio_arg.unwrap_or("65:30:5");
-                let ratio = parse_ratio_arg(label)
-                    .with_context(|| format!("pool model {name:?}"))?;
-                let masks = synth::random_masks(&manifest, ratio, &mut rng);
-                QuantPlan::from_mask_set(
-                    MaskSet { name: label.to_string(), layers: masks.layers },
-                    Provenance::Synthetic { seed, ratio: ratio.label() },
-                )
-                .with_model(&manifest.model_name)
+                synth_entry_fixture(geometry, seed, label)
+                    .with_context(|| format!("pool model {name:?}"))?
             }
         };
         manifest.default_masks.insert(plan.name.clone(), plan.masks.clone());
@@ -198,6 +217,8 @@ impl PoolEntry {
             manifest,
             params,
             backend_name: Some(backend_name),
+            geometry: geometry.to_string(),
+            bundle: None,
             threads,
             fault,
             base_cfg,
@@ -220,6 +241,8 @@ impl PoolEntry {
             manifest: manifest.clone(),
             params: Vec::new(),
             backend_name: None,
+            geometry: String::new(),
+            bundle: None,
             threads: None,
             fault: None,
             base_cfg,
@@ -490,6 +513,24 @@ impl PoolEntry {
             ),
             ("swaps", Json::Num(self.swaps() as f64)),
             ("prepares", Json::Num(self.prepares() as f64)),
+            (
+                "plan_digest",
+                match &plan {
+                    Some(p) => Json::Str(p.content_digest().to_hex()),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "bundle",
+                match &self.bundle {
+                    Some(b) => Json::obj(vec![
+                        ("manifest", Json::Str(b.manifest.to_hex())),
+                        ("params", Json::Str(b.params.to_hex())),
+                        ("plan", Json::Str(b.plan.to_hex())),
+                    ]),
+                    None => Json::Null,
+                },
+            ),
         ])
     }
 
@@ -520,6 +561,114 @@ impl PoolEntry {
                 s.metrics.clone()
             }
         })
+    }
+
+    // ---- bundle integration ----------------------------------------------
+
+    /// Boot one entry from a bundle model: resolve all three blobs from
+    /// the store by digest (each fully re-hashed on read), cross-check the
+    /// manifest descriptor against the lockfile row, and refuse anything
+    /// that does not match — a bad byte is a startup error, never a
+    /// silent fallback.
+    fn from_bundle_model(bm: &BundleModel, store: &Store) -> Result<PoolEntry> {
+        backend::spec(&bm.backend)
+            .with_context(|| format!("bundle model {:?}", bm.name))?;
+        let manifest_bytes = store.get(&bm.manifest, &format!("{}/manifest", bm.name))?;
+        let params_bytes = store.get(&bm.params, &format!("{}/params", bm.name))?;
+        let plan_bytes = store.get(&bm.plan, &format!("{}/plan", bm.name))?;
+
+        let (mut manifest, geometry) = manifest_from_descriptor(&manifest_bytes)
+            .with_context(|| format!("bundle model {:?} manifest blob", bm.name))?;
+        anyhow::ensure!(
+            geometry == bm.geometry,
+            "bundle model {:?}: lockfile says geometry {:?} but the manifest blob says {:?}",
+            bm.name,
+            bm.geometry,
+            geometry
+        );
+        anyhow::ensure!(
+            manifest.model_name == bm.model,
+            "bundle model {:?}: lockfile says model {:?} but the manifest blob resolves to {:?}",
+            bm.name,
+            bm.model,
+            manifest.model_name
+        );
+        let params = params_from_bytes(&manifest, &params_bytes)
+            .with_context(|| format!("bundle model {:?} params blob", bm.name))?;
+        let plan_text = String::from_utf8(plan_bytes)
+            .map_err(|_| anyhow!("bundle model {:?}: plan blob is not UTF-8", bm.name))?;
+        let plan_json = Json::parse(&plan_text)
+            .map_err(|e| anyhow!("bundle model {:?}: plan blob: {e}", bm.name))?;
+        let plan = QuantPlan::from_json(&plan_json)
+            .with_context(|| format!("bundle model {:?} plan blob", bm.name))?;
+        plan.validate(&manifest)
+            .with_context(|| format!("bundle model {:?}", bm.name))?;
+        manifest.default_masks.insert(plan.name.clone(), plan.masks.clone());
+
+        // Serving knobs are deliberately not part of a bundle (they don't
+        // change logits); a bundle-booted entry runs the same defaults a
+        // knobless pool-config entry gets.
+        let base_cfg = ServeConfig {
+            workers: 2,
+            max_wait: Duration::from_millis(5),
+            queue_depth: 1024,
+            plan: Some(plan),
+            device: "xc7z045".to_string(),
+            breaker_cooldown: Duration::from_millis(1000),
+            ..Default::default()
+        };
+        Ok(PoolEntry {
+            name: bm.name.clone(),
+            manifest,
+            params,
+            backend_name: Some(bm.backend.clone()),
+            geometry,
+            bundle: Some(BundleRef {
+                store: store.clone(),
+                manifest: bm.manifest,
+                params: bm.params,
+                plan: bm.plan,
+            }),
+            threads: None,
+            fault: None,
+            base_cfg,
+            state: RwLock::new(EntryState { server: None }),
+            swap_gate: Mutex::new(()),
+            prepares: AtomicU64::new(0),
+            swaps: AtomicU64::new(0),
+            closed: AtomicBool::new(false),
+        })
+    }
+
+    /// Content digest ([`QuantPlan::content_digest`]) of the plan this
+    /// entry currently advertises — swap-aware, identity-blind.
+    pub fn plan_digest(&self) -> Option<Digest> {
+        self.current_plan().map(|p| p.content_digest())
+    }
+
+    /// The lockfile blob digests `(manifest, params, plan)` this entry was
+    /// booted from; `None` for entries not booted from a bundle.
+    pub fn bundle_digests(&self) -> Option<(Digest, Digest, Digest)> {
+        self.bundle.as_ref().map(|b| (b.manifest, b.params, b.plan))
+    }
+
+    /// Re-hash the entry's three store blobs on demand (`GET .../verify`).
+    /// `None` for entries not booted from a bundle. On success, reports
+    /// whether the *currently executing* plan still byte-equals the
+    /// bundled one (false after a hot-swap).
+    pub fn verify_bundle(&self) -> Option<Result<bool, ArtifactError>> {
+        let b = self.bundle.as_ref()?;
+        for (digest, what) in
+            [(&b.manifest, "manifest"), (&b.params, "params"), (&b.plan, "plan")]
+        {
+            if let Err(e) = b.store.verify(digest, &format!("{}/{what}", self.name)) {
+                return Some(Err(e));
+            }
+        }
+        let plan_matches = self.current_plan().map_or(false, |p| {
+            Digest::of(p.to_json().to_string_compact().as_bytes()) == b.plan
+        });
+        Some(Ok(plan_matches))
     }
 }
 
@@ -598,6 +747,29 @@ impl ServerPool {
         Self::from_json(&cfg)
     }
 
+    /// Boot a pool from a bundle lockfile + store: every entry resolves
+    /// its bytes from the store by the digests the lockfile pins (see
+    /// [`PoolEntry::from_bundle_model`]), so the pool serves exactly what
+    /// was packed or refuses to start.
+    pub fn from_bundle(bundle: &Bundle, store: &Store) -> Result<ServerPool> {
+        let mut entries: Vec<Arc<PoolEntry>> = Vec::new();
+        for bm in &bundle.models {
+            let e = PoolEntry::from_bundle_model(bm, store)?;
+            anyhow::ensure!(
+                entries.iter().all(|x| x.name != e.name),
+                "duplicate model name {:?} in bundle",
+                e.name
+            );
+            entries.push(Arc::new(e));
+        }
+        anyhow::ensure!(
+            entries.iter().any(|e| e.name == bundle.default),
+            "bundle default {:?} is not among its models",
+            bundle.default
+        );
+        Ok(ServerPool { entries, default: bundle.default.clone() })
+    }
+
     /// Wrap one already-running server as a single-entry pool (the legacy
     /// single-model HTTP front end). The caller may keep its own clone of
     /// the `Arc<Server>` for direct access, but must drop it before
@@ -665,6 +837,170 @@ pub fn synth_parts(geometry: &str, seed: u64) -> Result<(Manifest, Vec<HostTenso
     let m = synth::serving_manifest_for(geometry)?;
     let params = synth::random_params(&m, &mut rng);
     Ok((m, params))
+}
+
+/// The full synthetic fixture a ratio-configured pool entry at
+/// `(geometry, seed, ratio label)` is built from — one RNG stream, params
+/// first, masks second. [`PoolEntry`] config parsing builds through this
+/// and bit-identity tests re-derive it, so the two can never drift.
+pub fn synth_entry_fixture(
+    geometry: &str,
+    seed: u64,
+    ratio_label: &str,
+) -> Result<(Manifest, Vec<HostTensor>, QuantPlan)> {
+    let mut rng = Rng::new(seed);
+    let manifest = synth::serving_manifest_for(geometry)?;
+    let params = synth::random_params(&manifest, &mut rng);
+    let ratio = parse_ratio_arg(ratio_label)?;
+    let masks = synth::random_masks(&manifest, ratio, &mut rng);
+    let plan = QuantPlan::from_mask_set(
+        MaskSet { name: ratio_label.to_string(), layers: masks.layers },
+        Provenance::Synthetic { seed, ratio: ratio.label() },
+    )
+    .with_model(&manifest.model_name);
+    Ok((manifest, params, plan))
+}
+
+// ---- artifact packing -----------------------------------------------------
+
+/// Schema version of the manifest descriptor blob a bundle stores.
+const MANIFEST_DESCRIPTOR_VERSION: u64 = 1;
+
+/// The manifest blob `pack_pool` stores. Synthetic serving manifests are
+/// fully reconstructible from their zoo geometry, so the blob is a small
+/// strict descriptor rather than a serialized tensor table — the digest
+/// still pins the identity (geometry + model name) the entry must resolve
+/// to at boot.
+pub fn manifest_descriptor_bytes(geometry: &str, model: &str) -> Vec<u8> {
+    Json::obj(vec![
+        ("ilmpq_manifest", Json::Num(MANIFEST_DESCRIPTOR_VERSION as f64)),
+        ("geometry", Json::Str(geometry.to_string())),
+        ("model", Json::Str(model.to_string())),
+    ])
+    .to_string_compact()
+    .into_bytes()
+}
+
+/// Parse and resolve a manifest descriptor blob. Strict in the lockfile
+/// style: unknown keys are an error, the version must match, and the
+/// geometry must resolve to a manifest whose model name equals the
+/// descriptor's. Returns the manifest plus the geometry it came from.
+pub fn manifest_from_descriptor(bytes: &[u8]) -> Result<(Manifest, String)> {
+    let text = std::str::from_utf8(bytes).context("manifest descriptor is not UTF-8")?;
+    let j = Json::parse(text).map_err(|e| anyhow!("manifest descriptor: {e}"))?;
+    let obj = j
+        .as_obj()
+        .ok_or_else(|| anyhow!("manifest descriptor must be a JSON object"))?;
+    let mut version = None;
+    let mut geometry = None;
+    let mut model = None;
+    for (key, val) in obj {
+        match key.as_str() {
+            "ilmpq_manifest" => version = val.as_f64(),
+            "geometry" => geometry = val.as_str().map(str::to_string),
+            "model" => model = val.as_str().map(str::to_string),
+            _ => anyhow::bail!(
+                "manifest descriptor: unknown key {key:?} (known: ilmpq_manifest, \
+                 geometry, model)"
+            ),
+        }
+    }
+    let version =
+        version.ok_or_else(|| anyhow!("manifest descriptor lacks \"ilmpq_manifest\""))?;
+    anyhow::ensure!(
+        version == MANIFEST_DESCRIPTOR_VERSION as f64,
+        "manifest descriptor version {version} unsupported (this build reads \
+         {MANIFEST_DESCRIPTOR_VERSION})"
+    );
+    let geometry = geometry.ok_or_else(|| anyhow!("manifest descriptor lacks \"geometry\""))?;
+    let model = model.ok_or_else(|| anyhow!("manifest descriptor lacks \"model\""))?;
+    let manifest = synth::serving_manifest_for(&geometry)?;
+    anyhow::ensure!(
+        manifest.model_name == model,
+        "manifest descriptor names model {model:?} but geometry {geometry:?} \
+         resolves to {:?}",
+        manifest.model_name
+    );
+    Ok((manifest, geometry))
+}
+
+/// Params blob encoding: flat little-endian f32 concatenation in manifest
+/// params order — the same layout as `params_init.bin`.
+pub fn params_to_bytes(params: &[HostTensor]) -> Vec<u8> {
+    let total: usize = params.iter().map(HostTensor::len).sum();
+    let mut out = Vec::with_capacity(total * 4);
+    for t in params {
+        for v in t.as_f32() {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    out
+}
+
+/// Split a flat params blob back into tensors by the manifest's shapes
+/// (mirrors `Manifest::load_init_params`).
+pub fn params_from_bytes(m: &Manifest, bytes: &[u8]) -> Result<Vec<HostTensor>> {
+    anyhow::ensure!(
+        bytes.len() % 4 == 0,
+        "params blob is {} bytes, not a multiple of 4",
+        bytes.len()
+    );
+    let flat: Vec<f32> = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    let mut out = Vec::with_capacity(m.params.len());
+    let mut off = 0usize;
+    for (name, shape) in &m.params {
+        let n: usize = shape.iter().product();
+        if off + n > flat.len() {
+            anyhow::bail!("params blob too short at {name}");
+        }
+        out.push(HostTensor::f32(shape.clone(), flat[off..off + n].to_vec()));
+        off += n;
+    }
+    if off != flat.len() {
+        anyhow::bail!("params blob has {} trailing floats", flat.len() - off);
+    }
+    Ok(out)
+}
+
+/// Walk a pool's entries into the store and emit the lockfile that pins
+/// them. Only pool-built entries can pack (a pre-built entry carries no
+/// params to serialize). The plan blob is each entry's *current* plan, so
+/// packing after a hot-swap pins the swapped-in assignment.
+pub fn pack_pool(pool: &ServerPool, store: &Store) -> Result<Bundle> {
+    let mut models = Vec::with_capacity(pool.entries.len());
+    for e in &pool.entries {
+        let backend = e.backend_name.clone().ok_or_else(|| {
+            anyhow!(
+                "model {:?} was attached pre-built; only pool-built entries can pack",
+                e.name
+            )
+        })?;
+        let plan = e
+            .current_plan()
+            .ok_or_else(|| anyhow!("model {:?} has no plan to pack", e.name))?;
+        let manifest = store
+            .put(&manifest_descriptor_bytes(&e.geometry, &e.manifest.model_name))
+            .with_context(|| format!("store manifest for model {:?}", e.name))?;
+        let params = store
+            .put(&params_to_bytes(&e.params))
+            .with_context(|| format!("store params for model {:?}", e.name))?;
+        let plan_digest = store
+            .put(plan.to_json().to_string_compact().as_bytes())
+            .with_context(|| format!("store plan for model {:?}", e.name))?;
+        models.push(BundleModel {
+            name: e.name.clone(),
+            backend,
+            geometry: e.geometry.clone(),
+            model: e.manifest.model_name.clone(),
+            manifest,
+            params,
+            plan: plan_digest,
+        });
+    }
+    Ok(Bundle { version: BUNDLE_VERSION, default: pool.default.clone(), models })
 }
 
 #[cfg(test)]
@@ -763,5 +1099,127 @@ mod tests {
         let (m, params) = synth_parts("tinyresnet", 21).unwrap();
         assert_eq!(m.model_name, tiny.manifest().model_name);
         assert_eq!(params, tiny.params);
+    }
+
+    #[test]
+    fn synth_entry_fixture_matches_pool_construction() {
+        let pool = ServerPool::synthetic_pair(21).unwrap();
+        let tiny = pool.entry("tiny").unwrap();
+        let (m, params, plan) = synth_entry_fixture("tinyresnet", 21, "ilmpq2").unwrap();
+        assert_eq!(m.model_name, tiny.manifest().model_name);
+        assert_eq!(params, tiny.params);
+        assert_eq!(plan, *tiny.current_plan().unwrap());
+    }
+
+    #[test]
+    fn params_codec_roundtrip_and_errors() {
+        let (m, params) = synth_parts("tinyresnet", 5).unwrap();
+        let bytes = params_to_bytes(&params);
+        let total: usize = params.iter().map(HostTensor::len).sum();
+        assert_eq!(bytes.len(), total * 4);
+        let back = params_from_bytes(&m, &bytes).unwrap();
+        assert_eq!(back, params, "params blob round-trip must be bit-identical");
+
+        let err = params_from_bytes(&m, &bytes[..bytes.len() - 4]).unwrap_err();
+        assert!(format!("{err:#}").contains("too short"), "{err:#}");
+        let mut long = bytes.clone();
+        long.extend_from_slice(&1.0f32.to_le_bytes());
+        let err = params_from_bytes(&m, &long).unwrap_err();
+        assert!(format!("{err:#}").contains("trailing"), "{err:#}");
+        let err = params_from_bytes(&m, &bytes[..bytes.len() - 1]).unwrap_err();
+        assert!(format!("{err:#}").contains("multiple of 4"), "{err:#}");
+    }
+
+    #[test]
+    fn manifest_descriptor_roundtrip_and_strictness() {
+        let bytes = manifest_descriptor_bytes("tinyresnet", "tiny-synth");
+        let (m, g) = manifest_from_descriptor(&bytes).unwrap();
+        assert_eq!(m.model_name, "tiny-synth");
+        assert_eq!(g, "tinyresnet");
+
+        let err = manifest_from_descriptor(
+            br#"{"ilmpq_manifest":1,"geometry":"tinyresnet","model":"tiny-synth","x":1}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("unknown key"), "{err:#}");
+        let err = manifest_from_descriptor(
+            br#"{"ilmpq_manifest":9,"geometry":"tinyresnet","model":"tiny-synth"}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("unsupported"), "{err:#}");
+        // A lying model name must not resolve.
+        let err = manifest_from_descriptor(
+            br#"{"ilmpq_manifest":1,"geometry":"tinyresnet","model":"resnet-152"}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("resolves to"), "{err:#}");
+    }
+
+    fn temp_store(tag: &str) -> Store {
+        let dir = std::env::temp_dir()
+            .join(format!("ilmpq-pool-bundle-{}-{}", std::process::id(), tag));
+        let _ = std::fs::remove_dir_all(&dir);
+        Store::open(&dir).unwrap()
+    }
+
+    #[test]
+    fn pack_then_boot_from_bundle_is_identity() {
+        let store = temp_store("identity");
+        let pool = ServerPool::synthetic_pair(33).unwrap();
+        let bundle = pack_pool(&pool, &store).unwrap();
+        assert_eq!(bundle.default, "tiny");
+        assert_eq!(bundle.models.len(), 2);
+
+        let booted = ServerPool::from_bundle(&bundle, &store).unwrap();
+        assert_eq!(booted.default_name(), "tiny");
+        for name in ["tiny", "narrow"] {
+            let a = pool.entry(name).unwrap();
+            let b = booted.entry(name).unwrap();
+            assert_eq!(a.manifest().model_name, b.manifest().model_name);
+            assert_eq!(a.params, b.params, "{name}: params must round-trip bit-exactly");
+            assert_eq!(*a.current_plan().unwrap(), *b.current_plan().unwrap());
+            assert_eq!(a.plan_digest(), b.plan_digest());
+            assert!(a.bundle_digests().is_none(), "config-built entries carry no bundle");
+            let (md, pd, qd) = b.bundle_digests().unwrap();
+            let row = bundle.model(name).unwrap();
+            assert_eq!((md, pd, qd), (row.manifest, row.params, row.plan));
+            // Fresh boot: blobs verify and the executing plan is the bundled one.
+            assert_eq!(b.verify_bundle().unwrap().unwrap(), true);
+            // The registry row advertises both digest views.
+            let d = b.describe();
+            assert_eq!(
+                d.get("plan_digest").and_then(Json::as_str),
+                Some(b.plan_digest().unwrap().to_hex().as_str())
+            );
+            let bj = d.get("bundle").unwrap();
+            assert_eq!(bj.get("params").and_then(Json::as_str), Some(pd.to_hex().as_str()));
+        }
+    }
+
+    #[test]
+    fn tampered_blob_fails_bundle_boot_and_verify() {
+        let store = temp_store("tamper");
+        let pool = ServerPool::synthetic_pair(44).unwrap();
+        let bundle = pack_pool(&pool, &store).unwrap();
+        let row = bundle.model("tiny").unwrap();
+
+        // Flip one byte in the stored params blob.
+        let path = store.path_of(&row.params);
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[0] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+
+        let err = ServerPool::from_bundle(&bundle, &store).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("mismatch") && msg.contains("tiny/params"), "{msg}");
+        match store.verify(&row.params, "tiny/params").unwrap_err() {
+            ArtifactError::DigestMismatch { blob, .. } => assert_eq!(blob, "tiny/params"),
+            other => panic!("expected DigestMismatch, got {other}"),
+        }
+
+        // A missing blob is just as loud.
+        std::fs::remove_file(&path).unwrap();
+        let err = ServerPool::from_bundle(&bundle, &store).unwrap_err();
+        assert!(format!("{err:#}").contains("missing blob"), "{err:#}");
     }
 }

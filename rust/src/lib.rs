@@ -23,6 +23,7 @@
 #![cfg_attr(not(feature = "pjrt"), forbid(unsafe_code))]
 
 pub mod analysis;
+pub mod artifact;
 pub mod backend;
 pub mod baselines;
 pub mod coordinator;

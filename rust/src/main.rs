@@ -9,23 +9,25 @@
 //! ilmpq accuracy [--steps N] [--config LABEL]       Table I accuracy rows (QAT)
 //! ilmpq train   [--steps N] [--ratio R|--plan F]    single QAT run + loss curve
 //! ilmpq serve   [--listen ADDR] [--plan F]          serving (HTTP front end or demo loop)
+//! ilmpq bundle pack|verify|show                     content-addressed artifact bundles
 //! ilmpq loadgen [--rate R] [--url U] [--backend B]  offered-load driver (in-process or remote)
 //! ilmpq backends                                    list execution backends
 //! ilmpq analyze [--json] [DIR]                      project-specific static analysis (CI gate)
 //! ilmpq info                                        artifacts + manifest summary
 //! ```
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::Result;
 use ilmpq::analysis;
+use ilmpq::artifact::{ArtifactError, Bundle, Store};
 use ilmpq::backend::{self, synth, InferenceBackend};
 use ilmpq::baselines::table1::accuracy_configs;
 use ilmpq::coordinator::{
-    loadgen, ratio_search, trainer::Trainer, Encoding, HttpConfig, HttpServer, ServeConfig,
-    Server, ServerPool,
+    loadgen, pool::pack_pool, ratio_search, trainer::Trainer, Encoding, HttpConfig,
+    HttpServer, ServeConfig, Server, ServerPool,
 };
 use ilmpq::experiments::{accuracy, figure1, ptq, table1};
 use ilmpq::fpga::DeviceModel;
@@ -40,11 +42,49 @@ fn main() {
     let code = match run(&cmd) {
         Ok(()) => 0,
         Err(e) => {
-            eprintln!("error: {e:#}");
+            eprintln!("error: {}", render_error(&e));
             1
         }
     };
     std::process::exit(code);
+}
+
+/// Render a top-level error, appending an actionable hint when an
+/// [`ArtifactError`] sits anywhere in the chain — a digest mismatch at
+/// startup should tell the operator what to run next, not only what broke.
+fn render_error(e: &anyhow::Error) -> String {
+    let hint = e
+        .chain()
+        .find_map(|c| c.downcast_ref::<ArtifactError>())
+        .map(|ae| match ae {
+            ArtifactError::DigestMismatch { .. } => {
+                "the stored bytes no longer match their address; run `ilmpq \
+                 bundle verify` to list every bad blob, then re-pack with \
+                 `ilmpq bundle pack`"
+            }
+            ArtifactError::MissingBlob { .. } => {
+                "the lockfile names a blob the store does not hold; re-run \
+                 `ilmpq bundle pack`, or point --store at the directory the \
+                 bundle was packed into"
+            }
+            ArtifactError::BadDigest { .. } => {
+                "digests are exactly 64 hex chars; the lockfile or --store \
+                 contents may be hand-edited or truncated"
+            }
+            ArtifactError::Io { .. } => {
+                "check permissions and free space on the store directory"
+            }
+        });
+    match hint {
+        Some(h) => format!("{e:#}\n  hint: {h}"),
+        None => format!("{e:#}"),
+    }
+}
+
+/// `--store DIR` → the CAS root, defaulting to [`Store::default_root`]
+/// ($ILMPQ_STORE, else ~/.ilmpq/store).
+fn store_dir(a: &Args) -> PathBuf {
+    a.get("store").map(PathBuf::from).unwrap_or_else(Store::default_root)
 }
 
 fn devices(arg: &str) -> Vec<DeviceModel> {
@@ -205,6 +245,7 @@ fn run(cmd: &str) -> Result<()> {
             Ok(())
         }
         "plan" => plan_cmd(),
+        "bundle" => bundle_cmd(),
         "assign" => {
             let a = Args::parse_env(
                 "ilmpq assign",
@@ -348,6 +389,19 @@ fn run(cmd: &str) -> Result<()> {
                      two-model synthetic pair; routes under /v1/models/{name}/* \
                      with live plan hot-swap via POST /v1/models/{name}/plan",
                 ),
+                (
+                    "bundle",
+                    "boot the pool from a lockfile (requires --listen): every \
+                     manifest/params/plan byte resolves from the \
+                     content-addressed store by digest, and a mismatch is a \
+                     startup error, never a silent fallback (see `ilmpq \
+                     bundle pack`)",
+                ),
+                (
+                    "store",
+                    "content-addressed store directory for --bundle (default \
+                     $ILMPQ_STORE, else ~/.ilmpq/store)",
+                ),
             ];
             flags.extend(RESILIENCE_FLAGS);
             let a = Args::parse_env("ilmpq serve", 2, &flags);
@@ -356,6 +410,48 @@ fn run(cmd: &str) -> Result<()> {
             let source = quant_source(&a, "ilmpq2")?;
             let frozen = !a.flag("no-frozen");
             let seed = a.u64_or("seed", 7);
+            if let Some(lock_path) = a.get("bundle") {
+                // Bundle mode: the pool is exactly what the lockfile pins.
+                // Every blob re-hashes on read, so a boot that reaches
+                // "listening" is a proof the fleet executes the packed bytes.
+                if a.get("pool").is_some() {
+                    anyhow::bail!("pass --bundle LOCKFILE or --pool CFG, not both");
+                }
+                let addr = a.get("listen").ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "--bundle requires --listen ADDR (bundle serving is \
+                         HTTP-only)"
+                    )
+                })?;
+                let bundle = Bundle::load(Path::new(lock_path))?;
+                let store = Store::open(&store_dir(&a))?;
+                let pool = ServerPool::from_bundle(&bundle, &store)?;
+                println!(
+                    "bundle {lock_path}: {} models verified from store {}",
+                    pool.entries().len(),
+                    store.root().display()
+                );
+                for m in &bundle.models {
+                    println!(
+                        "  {:<12} manifest {} params {} plan {}",
+                        m.name, m.manifest, m.params, m.plan
+                    );
+                }
+                let http_cfg = HttpConfig {
+                    addr: addr.to_string(),
+                    workers: a.usize_or("http-workers", 16),
+                    ..Default::default()
+                };
+                let mut front = HttpServer::start_pool(Arc::new(pool), http_cfg)?;
+                println!(
+                    "listening on http://{} — GET /v1/models reports the \
+                     executing digests; GET /v1/models/{{name}}/verify \
+                     re-checks the store live",
+                    front.local_addr()
+                );
+                front.wait();
+                return Ok(());
+            }
             if let Some(pool_arg) = a.get("pool") {
                 // Pool mode: N named (manifest, plan, backend) entries behind
                 // one HTTP listener, each with its own admission pipeline.
@@ -852,6 +948,146 @@ fn plan_cmd() -> Result<()> {
     }
 }
 
+/// `ilmpq bundle <pack|verify|show>` — the content-addressed artifact
+/// toolbox (see [`ilmpq::artifact`]).
+fn bundle_cmd() -> Result<()> {
+    let sub = std::env::args().nth(2).unwrap_or_else(|| "help".to_string());
+    match sub.as_str() {
+        "pack" => {
+            let a = Args::parse_env(
+                "ilmpq bundle pack",
+                3,
+                &[
+                    ("synthetic!", "pack the built-in two-model synthetic pair"),
+                    ("pool", "pack the models of a pool-config JSON path"),
+                    (
+                        "seed",
+                        "synthetic fixture seed (default 7, matching `serve \
+                         --synthetic`)",
+                    ),
+                    (
+                        "store",
+                        "content-addressed store directory (default \
+                         $ILMPQ_STORE, else ~/.ilmpq/store)",
+                    ),
+                    ("out", "lockfile path (default ilmpq.lock.json)"),
+                ],
+            );
+            let pool = match (a.flag("synthetic"), a.get("pool")) {
+                (true, Some(_)) => {
+                    anyhow::bail!("pass --synthetic or --pool CFG.json, not both")
+                }
+                (true, None) => ServerPool::synthetic_pair(a.u64_or("seed", 7))?,
+                (false, Some(path)) => ServerPool::from_file(Path::new(path))?,
+                (false, None) => anyhow::bail!(
+                    "pass --synthetic (the built-in pair) or --pool CFG.json \
+                     (which models to pack)"
+                ),
+            };
+            let store = Store::open(&store_dir(&a))?;
+            let bundle = pack_pool(&pool, &store)?;
+            let out = a.str_or("out", "ilmpq.lock.json").to_string();
+            bundle.save(Path::new(&out))?;
+            println!(
+                "packed {} models into {out} (store {})",
+                bundle.models.len(),
+                store.root().display()
+            );
+            for m in &bundle.models {
+                println!(
+                    "  {:<12} manifest {} params {} plan {}",
+                    m.name, m.manifest, m.params, m.plan
+                );
+            }
+            Ok(())
+        }
+        "verify" => {
+            let a = Args::parse_env(
+                "ilmpq bundle verify",
+                3,
+                &[
+                    ("bundle", "lockfile path (default ilmpq.lock.json)"),
+                    (
+                        "store",
+                        "content-addressed store directory (default \
+                         $ILMPQ_STORE, else ~/.ilmpq/store)",
+                    ),
+                ],
+            );
+            let lock = a.str_or("bundle", "ilmpq.lock.json").to_string();
+            let bundle = Bundle::load(Path::new(&lock))?;
+            let store = Store::open(&store_dir(&a))?;
+            let mut blobs = 0usize;
+            for m in &bundle.models {
+                for (what, d) in
+                    [("manifest", &m.manifest), ("params", &m.params), ("plan", &m.plan)]
+                {
+                    store.verify(d, &format!("{}/{what}", m.name))?;
+                    println!("ok {}/{what} {d}", m.name);
+                    blobs += 1;
+                }
+            }
+            println!(
+                "{lock}: {} models, {blobs} blobs re-hashed clean against {}",
+                bundle.models.len(),
+                store.root().display()
+            );
+            Ok(())
+        }
+        "show" => {
+            let a = Args::parse_env(
+                "ilmpq bundle show",
+                3,
+                &[("bundle", "lockfile path (default ilmpq.lock.json)")],
+            );
+            let lock = a.str_or("bundle", "ilmpq.lock.json").to_string();
+            let bundle = Bundle::load(Path::new(&lock))?;
+            println!(
+                "{lock}: bundle v{}, default model {:?}",
+                bundle.version, bundle.default
+            );
+            for m in &bundle.models {
+                println!(
+                    "  {} (backend {}, geometry {}, model {})",
+                    m.name, m.backend, m.geometry, m.model
+                );
+                println!("    manifest {}", m.manifest);
+                println!("    params   {}", m.params);
+                println!("    plan     {}", m.plan);
+            }
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            println!("{BUNDLE_HELP}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown bundle subcommand {other:?}\n{BUNDLE_HELP}");
+            std::process::exit(2);
+        }
+    }
+}
+
+const BUNDLE_HELP: &str = "\
+ilmpq bundle — content-addressed artifact bundles (checksummed serving units)
+
+subcommands:
+  pack      hash a pool's manifest/params/plan blobs into the store
+            (--synthetic for the built-in pair, --pool CFG.json for a
+            config) and write the lockfile naming their digests
+            (--out, default ilmpq.lock.json)
+  verify    re-hash every blob the lockfile names against the store; a
+            flipped byte anywhere fails loudly with the expected and
+            actual digests
+  show      render a lockfile: version, default model, per-model digests
+the store lives at --store DIR ($ILMPQ_STORE, else ~/.ilmpq/store); blobs
+are addressed by their SHA-256 and re-hashed on every read, so a torn or
+tampered write is never served. `ilmpq serve --bundle ilmpq.lock.json
+--listen ADDR` boots the pool from the store by digest — a mismatch is a
+startup error, never a silent fallback — and GET /v1/models reports the
+digests actually executing.
+run `ilmpq bundle <sub> --help` for options.";
+
 const ANALYZE_HELP: &str = "\
 ilmpq analyze [--json] [DIR] — project-specific static analysis (the CI gate)
 
@@ -867,6 +1103,8 @@ stack's documented invariants:
   R4  every Metrics counter is emitted by both report() and to_json()
   R5  no lock guard held across a blocking call in server.rs/pool.rs
   R6  every wire Encoding variant is handled in http.rs and loadgen.rs
+  R7  every ArtifactError variant is mapped in main.rs (CLI error
+      rendering) and http.rs (HTTP status mapping)
 
 DIR defaults to the crate source (src, or rust/src from the repo root).
 Findings print as `path:line [rule] message` and exit nonzero; --json emits
@@ -919,7 +1157,12 @@ commands:
                 plan hot-swap via POST /v1/models/{name}/plan);
                 self-healing execution via --execute-deadline-ms,
                 --retries, --breaker-threshold, --fallback NAME, and
-                --fault SPEC.json|chaos for fault injection
+                --fault SPEC.json|chaos for fault injection;
+                `--bundle ilmpq.lock.json` boots the pool from the
+                content-addressed store by digest (verified startup)
+  bundle        content-addressed artifact bundles: pack | verify | show
+                (checksummed weights/plans in a SHA-256 store plus the
+                ilmpq.lock.json lockfile `serve --bundle` boots from)
   loadgen       open-loop offered-load driver for the admission pipeline
                 (--rate, --queue-depth, --malformed, --poison,
                 --scenario steady|burst|chaos|multi; runs artifact-free);

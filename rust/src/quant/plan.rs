@@ -201,23 +201,41 @@ impl QuantPlan {
             ("name", Json::Str(self.name.clone())),
             ("model", Json::Str(self.model.clone())),
             ("provenance", self.provenance.to_json()),
-            (
-                "layers",
-                Json::Arr(
-                    self.masks
-                        .layers
-                        .iter()
-                        .map(|l| {
-                            Json::obj(vec![
-                                ("layer", Json::Str(l.layer.clone())),
-                                ("is8", mask_json(&l.is8)),
-                                ("is_pot", mask_json(&l.is_pot)),
-                            ])
-                        })
-                        .collect(),
-                ),
-            ),
+            ("layers", self.layers_json()),
         ])
+    }
+
+    /// The per-layer mask array in serialized form — the part of the plan
+    /// that actually changes logits.
+    fn layers_json(&self) -> Json {
+        Json::Arr(
+            self.masks
+                .layers
+                .iter()
+                .map(|l| {
+                    Json::obj(vec![
+                        ("layer", Json::Str(l.layer.clone())),
+                        ("is8", mask_json(&l.is8)),
+                        ("is_pot", mask_json(&l.is_pot)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    /// Content identity of the plan: the SHA-256 of its canonical compact
+    /// JSON with `name` and `provenance` excluded. Two plans that assign
+    /// the same masks to the same model compare equal no matter what they
+    /// are called or where they came from — this is the digest the pool
+    /// records on hot-swap and the serving endpoints report.
+    /// (`Json` is BTreeMap-backed, so `to_string_compact` is canonical.)
+    pub fn content_digest(&self) -> crate::artifact::Digest {
+        let canonical = Json::obj(vec![
+            ("quant_plan", Json::Num(self.version as f64)),
+            ("model", Json::Str(self.model.clone())),
+            ("layers", self.layers_json()),
+        ]);
+        crate::artifact::Digest::of(canonical.to_string_compact().as_bytes())
     }
 
     /// Strict parse: every structural problem is a typed error naming the
@@ -384,6 +402,7 @@ impl QuantPlan {
             ("name", Json::Str(self.name.clone())),
             ("version", Json::Num(self.version as f64)),
             ("model", Json::Str(self.model.clone())),
+            ("digest", Json::Str(self.content_digest().to_hex())),
             ("provenance", self.provenance.to_json()),
             ("total", fractions_json(self.total_fractions())),
             (
@@ -801,6 +820,40 @@ mod tests {
         // Unquantized: no plan, and resolve_required refuses.
         assert!(QuantSource::Unquantized.resolve(&m).unwrap().is_none());
         assert!(QuantSource::Unquantized.resolve_required(&m).is_err());
+    }
+
+    #[test]
+    fn content_digest_survives_save_load_and_ignores_identity() {
+        let (_, plan) = fixture();
+        let digest = plan.content_digest();
+
+        // derive→save→load preserves the digest bit-exactly.
+        let dir = std::env::temp_dir().join("ilmpq_plan_digest");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("p.json");
+        plan.save(&path).unwrap();
+        let back = QuantPlan::load(&path).unwrap();
+        assert_eq!(back.content_digest(), digest);
+        std::fs::remove_dir_all(&dir).ok();
+
+        // Renaming the plan or rewriting its provenance leaves the
+        // content identity unchanged.
+        let mut renamed = plan.clone();
+        renamed.name = "an-entirely-different-name".into();
+        renamed.provenance = Provenance::Uniform { scheme: "Fixed-8".into() };
+        assert_eq!(renamed.content_digest(), digest);
+
+        // Flipping one mask row changes it.
+        let mut flipped = plan.clone();
+        let row = &mut flipped.masks.layers[0];
+        let was_f8 = row.is8[0] > 0.5;
+        row.is8[0] = if was_f8 { 0.0 } else { 1.0 };
+        row.is_pot[0] = 0.0;
+        assert_ne!(flipped.content_digest(), digest);
+
+        // And the summary reports it.
+        let j = plan.summary_json();
+        assert_eq!(j.get("digest").and_then(Json::as_str), Some(digest.to_hex().as_str()));
     }
 
     #[test]

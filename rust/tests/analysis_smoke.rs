@@ -122,6 +122,38 @@ fn r6_silent_when_both_sides_handle_every_encoding() {
     assert!(rules.is_empty(), "{rules:?}");
 }
 
+// ---------------------------------------------------------------- R7
+
+const STORE_WITH_ENUM: &str = "pub enum ArtifactError { \
+     DigestMismatch { expected: Digest, actual: Digest }, \
+     MissingBlob { blob: String }, \
+     Io { source: E } }";
+
+#[test]
+fn r7_fires_on_artifact_error_missing_from_cli_rendering() {
+    // http.rs maps every variant; main.rs hides Io behind a wildcard —
+    // an artifact io failure would surface with no actionable hint.
+    let main = "fn hint(e: &ArtifactError) -> &str { match e { ArtifactError::DigestMismatch { .. } => a(), ArtifactError::MissingBlob { .. } => b(), _ => c() } }";
+    let http = "fn status(e: &ArtifactError) -> u16 { match e { ArtifactError::DigestMismatch { .. } => 500, ArtifactError::MissingBlob { .. } => 404, ArtifactError::Io { .. } => 500 } }";
+    let rules = rules_for(&[
+        ("artifact/store.rs", STORE_WITH_ENUM),
+        ("main.rs", main),
+        ("coordinator/http.rs", http),
+    ]);
+    assert_eq!(rules, vec!["R7"]);
+}
+
+#[test]
+fn r7_silent_when_both_consumers_map_every_variant() {
+    let both = "fn m(e: &ArtifactError) { match e { ArtifactError::DigestMismatch { .. } => a(), ArtifactError::MissingBlob { .. } => b(), ArtifactError::Io { .. } => c() } }";
+    let rules = rules_for(&[
+        ("artifact/store.rs", STORE_WITH_ENUM),
+        ("main.rs", both),
+        ("coordinator/http.rs", both),
+    ]);
+    assert!(rules.is_empty(), "{rules:?}");
+}
+
 // ---------------------------------------------------------------- R4
 
 #[test]

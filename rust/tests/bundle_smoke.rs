@@ -1,0 +1,243 @@
+//! End-to-end smoke tests for the content-addressed artifact path
+//! (`artifact::*` + `coordinator::pool::pack_pool`/`from_bundle` + the
+//! digest-reporting HTTP routes), on the artifact-free synthetic fixtures.
+//!
+//! Pinned here (the acceptance contract for `ilmpq bundle` + `serve
+//! --bundle`):
+//!
+//! * pack → wipe the source → boot from the store by digest → logits are
+//!   **bit-identical** to the pool the bundle was packed from;
+//! * the serving surface reports what executes: `/v1/models` and
+//!   `/v1/models/{name}/healthz` carry the lockfile's blob digests and the
+//!   plan content digest, and `/v1/models/{name}/verify` re-checks the
+//!   store live (404 `no_bundle` for entries not booted from a bundle);
+//! * one flipped byte in a stored blob fails the boot loudly with a
+//!   `DigestMismatch` naming the blob — never a silent fallback;
+//! * a tampered lockfile is rejected: unknown keys at parse time, a
+//!   flipped-but-well-formed digest as `MissingBlob` at verify time.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use ilmpq::artifact::{ArtifactError, Bundle, Digest, Store};
+use ilmpq::coordinator::pool::{pack_pool, ServerPool};
+use ilmpq::coordinator::{HttpClient, HttpConfig, HttpServer, HttpTarget};
+use ilmpq::util::{Json, Rng};
+
+fn start_pool_front(pool: ServerPool) -> HttpServer {
+    HttpServer::start_pool(
+        Arc::new(pool),
+        HttpConfig { addr: "127.0.0.1:0".into(), workers: 8, ..Default::default() },
+    )
+    .unwrap()
+}
+
+fn client_for(front: &HttpServer) -> HttpClient {
+    let target = HttpTarget::parse(&format!("http://{}", front.local_addr())).unwrap();
+    HttpClient::connect(&target, Duration::from_secs(30))
+}
+
+fn infer_body(image: &[f32]) -> String {
+    Json::obj(vec![(
+        "image",
+        Json::Arr(image.iter().map(|&v| Json::Num(v as f64)).collect()),
+    )])
+    .to_string_compact()
+}
+
+fn wire_logits(body: &str) -> Vec<f32> {
+    Json::parse(body)
+        .unwrap()
+        .get("logits")
+        .and_then(Json::as_arr)
+        .unwrap_or_else(|| panic!("no logits in {body}"))
+        .iter()
+        .map(|v| v.as_f64().unwrap() as f32)
+        .collect()
+}
+
+/// A fresh scratch directory per test (the store must start empty).
+fn temp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("ilmpq-bundle-smoke-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// The headline round trip: pack the synthetic pair, throw the packing
+/// pool away, boot a fresh pool purely from the store by digest, and the
+/// logits come back bit-for-bit. Along the way: every digest-reporting
+/// surface must agree with the lockfile.
+#[test]
+fn pack_then_serve_from_store_is_bit_identical() {
+    const SEED: u64 = 11;
+    let image: Vec<f32>;
+    let reference_logits;
+
+    // Reference: serve the pool the ordinary way (`serve --pool synth`).
+    {
+        let front = start_pool_front(ServerPool::synthetic_pair(SEED).unwrap());
+        let mut client = client_for(&front);
+        let (code, body) = client.request("GET", "/v1/models/tiny/healthz", None).unwrap();
+        assert_eq!(code, 200, "{body}");
+        let h = Json::parse(&body).unwrap();
+        let image_elems = h.get("image_elems").and_then(Json::as_usize).unwrap();
+        // Ordinary entries are not bundle-backed: no digests to verify.
+        assert_eq!(h.get("bundle"), Some(&Json::Null), "{body}");
+        let (code, body) = client.request("GET", "/v1/models/tiny/verify", None).unwrap();
+        assert_eq!(code, 404, "{body}");
+        assert_eq!(
+            Json::parse(&body).unwrap().get("kind").and_then(Json::as_str),
+            Some("no_bundle"),
+            "{body}"
+        );
+        image = {
+            let mut img = vec![0f32; image_elems];
+            Rng::new(9).fill_normal(&mut img, 1.0);
+            img
+        };
+        let (code, body) =
+            client.request("POST", "/v1/models/tiny/infer", Some(&infer_body(&image))).unwrap();
+        assert_eq!(code, 200, "{body}");
+        reference_logits = wire_logits(&body);
+        front.stop();
+    }
+
+    // Pack into a fresh store, round-trip the lockfile through disk, and
+    // drop the packing pool — the store + lockfile are now the only source.
+    let dir = temp_dir("roundtrip");
+    let store = Store::open(&dir.join("store")).unwrap();
+    let lock_path = dir.join("ilmpq.lock.json");
+    {
+        let packing = ServerPool::synthetic_pair(SEED).unwrap();
+        let bundle = pack_pool(&packing, &store).unwrap();
+        bundle.save(&lock_path).unwrap();
+    }
+    let bundle = Bundle::load(&lock_path).unwrap();
+    assert_eq!(bundle.default, "tiny");
+    assert_eq!(bundle.models.len(), 2);
+
+    // Boot purely from the store (`serve --bundle`): every byte re-hashed.
+    let front = start_pool_front(ServerPool::from_bundle(&bundle, &store).unwrap());
+    let mut client = client_for(&front);
+
+    let (code, body) =
+        client.request("POST", "/v1/models/tiny/infer", Some(&infer_body(&image))).unwrap();
+    assert_eq!(code, 200, "{body}");
+    assert_eq!(
+        wire_logits(&body),
+        reference_logits,
+        "bundle-booted logits drifted from the packing pool"
+    );
+
+    // `/v1/models` reports the executing digests, and they are exactly the
+    // lockfile's.
+    let (code, body) = client.request("GET", "/v1/models", None).unwrap();
+    assert_eq!(code, 200, "{body}");
+    let listing = Json::parse(&body).unwrap();
+    for row in listing.get("models").and_then(Json::as_arr).unwrap() {
+        let name = row.get("name").and_then(Json::as_str).unwrap();
+        let bm = bundle.model(name).unwrap_or_else(|| panic!("extra model {name}"));
+        let b = row.get("bundle").expect("bundle digests in the listing");
+        for (key, digest) in
+            [("manifest", &bm.manifest), ("params", &bm.params), ("plan", &bm.plan)]
+        {
+            assert_eq!(
+                b.get(key).and_then(Json::as_str),
+                Some(digest.to_hex().as_str()),
+                "{name}/{key} digest drifted from the lockfile: {body}"
+            );
+        }
+    }
+
+    // healthz carries both digest views: the lockfile blobs and the
+    // identity-blind plan content digest.
+    let (code, body) = client.request("GET", "/v1/models/tiny/healthz", None).unwrap();
+    assert_eq!(code, 200, "{body}");
+    let h = Json::parse(&body).unwrap();
+    let pd = h.get("plan_digest").and_then(Json::as_str).unwrap();
+    assert!(Digest::parse(pd).is_ok(), "plan_digest is not a digest: {body}");
+    let tiny = bundle.model("tiny").unwrap();
+    assert_eq!(
+        h.get("bundle").and_then(|b| b.get("params")).and_then(Json::as_str),
+        Some(tiny.params.to_hex().as_str()),
+        "{body}"
+    );
+
+    // The live verify route re-hashes all three blobs against the store.
+    let (code, body) = client.request("GET", "/v1/models/tiny/verify", None).unwrap();
+    assert_eq!(code, 200, "{body}");
+    let v = Json::parse(&body).unwrap();
+    assert_eq!(v.get("verified"), Some(&Json::Bool(true)), "{body}");
+    assert_eq!(v.get("blobs").and_then(Json::as_usize), Some(3), "{body}");
+    assert_eq!(v.get("plan_matches_bundle"), Some(&Json::Bool(true)), "{body}");
+
+    front.stop();
+}
+
+/// One flipped byte in a stored blob: the boot must die loudly with a
+/// `DigestMismatch` naming the blob, and `Store::verify` must report the
+/// expected and actual digests. Restore the byte and everything heals.
+#[test]
+fn flipped_blob_byte_fails_boot_and_verify_loudly() {
+    let dir = temp_dir("tamper");
+    let store = Store::open(&dir.join("store")).unwrap();
+    let bundle = pack_pool(&ServerPool::synthetic_pair(13).unwrap(), &store).unwrap();
+    let tiny = bundle.model("tiny").unwrap();
+
+    let path = store.path_of(&tiny.params);
+    let clean = std::fs::read(&path).unwrap();
+    let mut dirty = clean.clone();
+    dirty[0] ^= 0x01;
+    std::fs::write(&path, &dirty).unwrap();
+
+    let err = ServerPool::from_bundle(&bundle, &store)
+        .err()
+        .expect("boot from a tampered store must fail");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("mismatch"), "boot error does not name the mismatch: {msg}");
+    assert!(msg.contains("tiny/params"), "boot error does not name the blob: {msg}");
+
+    match store.verify(&tiny.params, "tiny/params") {
+        Err(ArtifactError::DigestMismatch { blob, expected, actual }) => {
+            assert_eq!(blob, "tiny/params");
+            assert_eq!(expected, tiny.params);
+            assert_ne!(actual, expected);
+        }
+        other => panic!("expected DigestMismatch, got {other:?}"),
+    }
+
+    std::fs::write(&path, &clean).unwrap();
+    store.verify(&tiny.params, "tiny/params").unwrap();
+    ServerPool::from_bundle(&bundle, &store).unwrap();
+}
+
+/// Lockfile tampering: unknown keys are rejected at parse time (strict
+/// schema, like FaultSpec), and a digest edited to another well-formed
+/// value fails as `MissingBlob` — the store simply does not hold it.
+#[test]
+fn tampered_lockfile_is_rejected() {
+    let dir = temp_dir("lockfile");
+    let store = Store::open(&dir.join("store")).unwrap();
+    let bundle = pack_pool(&ServerPool::synthetic_pair(17).unwrap(), &store).unwrap();
+
+    // Unknown top-level key.
+    let Json::Obj(mut map) = bundle.to_json() else { panic!("lockfile is an object") };
+    map.insert("mirror_url".to_string(), Json::Str("http://x".into()));
+    let err = Bundle::from_json(&Json::Obj(map)).unwrap_err();
+    assert!(format!("{err:#}").contains("unknown"), "{err:#}");
+
+    // A flipped-but-well-formed digest: nothing in the store has that
+    // address, so the failure mode is a missing blob, named.
+    let mut edited = bundle.clone();
+    edited.models[0].params = Digest::of(b"not the params");
+    let name = edited.models[0].name.clone();
+    let err = ServerPool::from_bundle(&edited, &store)
+        .err()
+        .expect("an edited digest must not boot");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("missing blob"), "{msg}");
+    assert!(msg.contains(&format!("{name}/params")), "{msg}");
+}
